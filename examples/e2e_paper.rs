@@ -1,0 +1,141 @@
+//! END-TO-END driver: the full three-layer system on the paper's real
+//! workload (EXPERIMENTS.md records a run of this binary).
+//!
+//! Composition proof, all layers:
+//!   L1/L2  `make artifacts` lowered the Pallas PCIe-timing kernel and the
+//!          JAX LLM volume model to HLO text;
+//!   RT     this binary compiles them on the PJRT CPU client and builds
+//!          the serialization tables + traffic mix from them (no Python);
+//!   L3     the Rust DES sweeps the paper's Figure-5/6 grid (32-node RLFT,
+//!          C1-C5 x {128,256,512} GB/s x load axis) through the
+//!          coordinator's worker pool and regenerates the figures.
+//!
+//! Run: `cargo run --release --example e2e_paper [-- --full]`
+//! `--full` uses the paper's 20-point load axis (slow on one core).
+
+use std::sync::Arc;
+
+use sauron::analytic::{CollParams, PcieParams};
+use sauron::coordinator::{self, results, SweepSpec};
+use sauron::net::world::NativeProvider;
+use sauron::net::world::SerProvider;
+use sauron::report::figures::{self, FigureKind};
+use sauron::runtime::Runtime;
+use sauron::traffic::llm::LlmConfig;
+
+fn main() -> anyhow::Result<()> {
+    let full = std::env::args().any(|a| a == "--full");
+
+    // --- Runtime: load + compile every artifact (hard requirement here:
+    // this example exists to prove the AOT path composes).
+    let rt = match Runtime::load(&Runtime::default_dir()) {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("WARNING: artifacts unavailable ({e:#}); e2e falls back to the native mirror.");
+            eprintln!("Run `make artifacts` for the full three-layer path.");
+            None
+        }
+    };
+    let provider: &dyn SerProvider = match &rt {
+        Some(rt) => rt,
+        None => &NativeProvider,
+    };
+
+    // --- L2 sanity: derive the traffic mix of a real 13B training job and
+    // show where it lands in the paper's pattern family.
+    if let Some(rt) = &rt {
+        let llm = LlmConfig::example_13b();
+        let t = rt.llm_traffic(
+            &llm,
+            &PcieParams::generic_accel_link(512.0),
+            &CollParams { n_devices: 8.0, alpha_ns: 500.0, beta_ns_per_b: 1.0 / 64.0 },
+            &CollParams { n_devices: 8.0, alpha_ns: 2000.0, beta_ns_per_b: 1.0 / 50.0 },
+        )?;
+        println!(
+            "[L2/HLO] 13B-class job: {:.1}B params, inter fraction {:.1}% (nearest {})",
+            t.total_params / 1e9,
+            t.frac_inter * 100.0,
+            t.nearest_paper_pattern().name()
+        );
+    }
+
+    // --- L3: the paper's Figure 5+6 grid.
+    let mut spec = SweepSpec::paper(32);
+    if !full {
+        spec.loads = vec![0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9, 1.0];
+    }
+    println!(
+        "[L3] sweeping {} points: C1-C5 x {:?} GB/s x {} loads on 32-node RLFT (256 accels)",
+        spec.points(),
+        spec.intra_gbs,
+        spec.loads.len()
+    );
+    let snapshot = Arc::new(coordinator::snapshot_provider(&spec, provider));
+    let t0 = std::time::Instant::now();
+    let reports = coordinator::run_sweep(
+        &spec,
+        snapshot.clone(),
+        Some(Box::new(|done, total, r| {
+            if done % 25 == 0 || done == total {
+                eprintln!("  [{done}/{total}] latest: {} load {:.2} bw {:.0}", r.pattern, r.load, r.aggregated_intra_gbs);
+            }
+        })),
+    )?;
+    let wall = t0.elapsed().as_secs_f64();
+    anyhow::ensure!(snapshot.miss_count() == 0, "hot path must be fully artifact-table-driven");
+
+    let out = std::path::Path::new("results");
+    results::write_csv(&out.join("e2e_fig5_fig6_32n.csv"), &reports)?;
+    results::write_json(&out.join("e2e_fig5_fig6_32n.json"), &reports)?;
+
+    for kind in [
+        FigureKind::IntraThroughput,
+        FigureKind::IntraLatency,
+        FigureKind::InterThroughput,
+        FigureKind::Fct,
+    ] {
+        println!("{}", figures::render_figure(&reports, kind));
+    }
+
+    // --- Headline result check (paper §4.2.3): saturation load of C1 vs
+    // C5 per intra bandwidth; more intra bandwidth must hurt C1's
+    // saturation point while helping C5's absolute throughput.
+    let sat_load = |pattern: &str, bw: f64| -> f64 {
+        let mut pts: Vec<(f64, f64)> = reports
+            .iter()
+            .filter(|r| r.pattern == pattern && r.aggregated_intra_gbs == bw)
+            .map(|r| (r.load, r.intra_tput_gbs))
+            .collect();
+        pts.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let peak = pts.iter().map(|p| p.1).fold(0.0, f64::max);
+        pts.iter().find(|p| p.1 >= 0.95 * peak).map(|p| p.0).unwrap_or(1.0)
+    };
+    println!("headline: load at which intra throughput peaks (saturation knee):");
+    for bw in [128.0, 256.0, 512.0] {
+        println!(
+            "  {:>3.0} GB/s intra: C1 knee ~{:.2} load, C5 knee ~{:.2} load",
+            bw,
+            sat_load("C1", bw),
+            sat_load("C5", bw)
+        );
+    }
+    let c1_peak_512 = reports
+        .iter()
+        .filter(|r| r.pattern == "C1" && r.aggregated_intra_gbs == 512.0)
+        .map(|r| r.intra_tput_gbs)
+        .fold(0.0, f64::max);
+    let c5_peak_512 = reports
+        .iter()
+        .filter(|r| r.pattern == "C5" && r.aggregated_intra_gbs == 512.0)
+        .map(|r| r.intra_tput_gbs)
+        .fold(0.0, f64::max);
+    println!(
+        "  @512 GB/s: C1 peak intra {:.0} GB/s vs C5 {:.0} GB/s -> interference costs {:.0}%",
+        c1_peak_512,
+        c5_peak_512,
+        (1.0 - c1_peak_512 / c5_peak_512) * 100.0
+    );
+    anyhow::ensure!(c1_peak_512 < c5_peak_512, "paper's headline must hold");
+    println!("e2e sweep done in {wall:.1}s; CSV/JSON in results/");
+    Ok(())
+}

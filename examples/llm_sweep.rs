@@ -1,0 +1,75 @@
+//! From a *concrete LLM training job* to the paper's interference result.
+//!
+//! 1. Describe a GPT-13B-class transformer and its (tp=8, pp=4, dp=8)
+//!    layout; run the L2 communication-volume model (AOT HLO through PJRT
+//!    when available) to derive message sizes, per-step volumes and the
+//!    intra/inter split.
+//! 2. Map that split onto the simulator's traffic model and sweep offered
+//!    load on the 32-node RLFT, next to the nearest paper pattern.
+//!
+//! Run: `cargo run --release --example llm_sweep`
+
+use std::sync::Arc;
+
+use sauron::analytic::{CollParams, PcieParams};
+use sauron::config::Pattern;
+use sauron::coordinator::{self, SweepSpec};
+use sauron::net::world::{NativeProvider, SerProvider};
+use sauron::report::figures::{self, FigureKind};
+use sauron::runtime::Runtime;
+use sauron::traffic::llm::{llm_traffic_native, LlmConfig};
+
+fn main() -> anyhow::Result<()> {
+    let llm = LlmConfig::example_13b();
+    let pcie = PcieParams::generic_accel_link(512.0);
+    let intra = CollParams { n_devices: llm.tp as f64, alpha_ns: 500.0, beta_ns_per_b: 1.0 / 64.0 };
+    let inter = CollParams { n_devices: llm.dp as f64, alpha_ns: 2000.0, beta_ns_per_b: 1.0 / 50.0 };
+
+    let rt = Runtime::load(&Runtime::default_dir()).ok();
+    let summary = match &rt {
+        Some(rt) => {
+            eprintln!("L2 model via HLO/PJRT");
+            rt.llm_traffic(&llm, &pcie, &intra, &inter)?
+        }
+        None => {
+            eprintln!("L2 model via native mirror (run `make artifacts` for the HLO path)");
+            llm_traffic_native(&llm, &pcie, &intra, &inter)
+        }
+    };
+
+    println!("LLM: {} layers, hidden {}, tp={} pp={} dp={}", llm.num_layers, llm.hidden, llm.tp, llm.pp, llm.dp);
+    println!("  parameters:          {:.1} B", summary.total_params / 1e9);
+    println!("  TP allreduce:        {:.1} MiB x {} per step (est {:.0} us each)",
+        summary.tp_msg_size_b / (1 << 20) as f64, summary.n_tp_collectives, summary.tp_allreduce_ns / 1e3);
+    println!("  PP p2p:              {:.1} MiB x {} per step", summary.pp_msg_size_b / (1 << 20) as f64, summary.n_pp_transfers);
+    println!("  DP allreduce shard:  {:.1} MiB (est {:.1} ms)", summary.dp_msg_size_b / (1 << 20) as f64, summary.dp_allreduce_ns / 1e6);
+    println!("  intra bytes/step:    {:.2} GB", summary.intra_bytes_per_step / 1e9);
+    println!("  inter bytes/step:    {:.2} GB", summary.inter_bytes_per_step / 1e9);
+    println!("  inter fraction:      {:.1}%  -> nearest paper pattern {}",
+        summary.frac_inter * 100.0, summary.nearest_paper_pattern().name());
+
+    // Sweep the derived mix vs the nearest paper pattern.
+    let spec = SweepSpec {
+        nodes: 32,
+        intra_gbs: vec![512.0],
+        patterns: vec![summary.pattern(), summary.nearest_paper_pattern()],
+        loads: vec![0.2, 0.4, 0.6, 0.8, 1.0],
+        paper_windows: false,
+        workers: coordinator::default_workers(),
+        seed: 0x11A,
+    };
+    let provider: &dyn SerProvider = match &rt {
+        Some(rt) => rt,
+        None => &NativeProvider,
+    };
+    let snapshot = Arc::new(coordinator::snapshot_provider(&spec, provider));
+    let reports = coordinator::run_sweep(&spec, snapshot, None)?;
+
+    for kind in [FigureKind::IntraThroughput, FigureKind::InterThroughput, FigureKind::Fct] {
+        println!("{}", figures::render_figure(&reports, kind));
+    }
+    println!("(the Custom mix should track its nearest paper pattern {})",
+        summary.nearest_paper_pattern().name());
+    let _ = Pattern::C1; // silence unused import on some cfgs
+    Ok(())
+}

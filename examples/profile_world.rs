@@ -1,0 +1,17 @@
+//! Profiling target: run the hot world loop for a while (perf record).
+use sauron::config::{presets, Pattern};
+use sauron::net::world::{BenchMode, NativeProvider, Sim};
+
+fn main() {
+    let n: u32 = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(10);
+    let mut total = 0u64;
+    for i in 0..n {
+        let mut cfg = presets::scaleout(32, 256.0, Pattern::C1, 0.6);
+        cfg.seed ^= i as u64;
+        cfg.warmup_us = 10.0;
+        cfg.measure_us = 10.0;
+        let r = Sim::new(cfg, &NativeProvider, BenchMode::None).unwrap().run();
+        total += r.events;
+    }
+    println!("{total} events");
+}

@@ -1,0 +1,46 @@
+//! Quickstart: one simulation of the paper's scale-out scenario.
+//!
+//! Builds the 32-node RLFT preset (256 accelerators, 8 per node) with a
+//! 256 GB/s intra-node network, offers C1 traffic (TP-heavy LLM training,
+//! 20% inter-node) at 60% load, and prints the headline metrics.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use sauron::config::{presets, Pattern};
+use sauron::net::world::{BenchMode, NativeProvider, Sim};
+
+fn main() -> anyhow::Result<()> {
+    let cfg = presets::scaleout(32, 256.0, Pattern::C1, 0.6);
+    println!(
+        "topology: {} nodes x {} accels, intra {} GB/s aggregated, inter {} Gbps",
+        cfg.inter.nodes,
+        cfg.node.accels_per_node,
+        cfg.aggregated_intra_gbs(),
+        cfg.inter.link_gbps
+    );
+
+    let report = Sim::new(cfg, &NativeProvider, BenchMode::None)?.run();
+
+    println!("pattern {} @ {:.0}% load:", report.pattern, report.load * 100.0);
+    println!(
+        "  intra-node: {:.1} GB/s delivered (latency mean {:.2} us, p99 {:.2} us)",
+        report.intra_tput_gbs,
+        report.intra_lat.mean_ns / 1e3,
+        report.intra_lat.p99_ns / 1e3
+    );
+    println!(
+        "  inter-node: {:.1} GB/s delivered (FCT mean {:.2} us, p99 {:.2} us)",
+        report.inter_tput_gbs,
+        report.fct.mean_ns / 1e3,
+        report.fct.p99_ns / 1e3
+    );
+    println!(
+        "  offered {:.1} GB/s, drops {:.2}%, {} messages, {} events in {:.0} ms",
+        report.offered_gbs,
+        report.drop_frac * 100.0,
+        report.delivered_msgs,
+        report.events,
+        report.wall_ms
+    );
+    Ok(())
+}

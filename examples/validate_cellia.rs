@@ -1,0 +1,51 @@
+//! Reproduce the paper's validation experiment (§4.1, Tables 1-2, Fig 4):
+//! simulated InfiniBand perftest (`ib_write`) over the CELLIA end-node
+//! model vs the paper's published cluster measurements.
+//!
+//! Uses the AOT HLO artifacts through PJRT when available (the production
+//! path), falling back to the native analytic mirror.
+//!
+//! Run: `cargo run --release --example validate_cellia`
+
+use sauron::net::world::{NativeProvider, SerProvider};
+use sauron::report::tables;
+use sauron::runtime::Runtime;
+use sauron::traffic::ib_bench;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::load(&Runtime::default_dir());
+    let provider: &dyn SerProvider = match &rt {
+        Ok(rt) => {
+            eprintln!("provider: hlo/pjrt ({})", rt.dir.display());
+            rt
+        }
+        Err(e) => {
+            eprintln!("provider: native (artifacts unavailable: {e:#})");
+            &NativeProvider
+        }
+    };
+
+    // A representative subset of the 16-size sweep (full sweep:
+    // `sauron validate`).
+    let sizes = [128u64, 1024, 4096, 65536, 1 << 20, 4 << 20];
+    let mut bw = Vec::new();
+    let mut lat = Vec::new();
+    for &s in &sizes {
+        bw.push(ib_bench::bandwidth_test(provider, s)?);
+        lat.push(ib_bench::latency_test(provider, s)?);
+    }
+
+    println!("{}", tables::render_table1(&bw));
+    println!("{}", tables::render_table2(&lat));
+
+    let bw_err = tables::geomean_abs_rel_err(
+        &bw.iter().map(|p| (p.sim_gib_s, p.paper_gib_s)).collect::<Vec<_>>(),
+    );
+    let lat_err = tables::geomean_abs_rel_err(
+        &lat.iter().map(|p| (p.sim_us, p.paper_us)).collect::<Vec<_>>(),
+    );
+    println!("geomean |rel err|: bandwidth {:.1}%, latency {:.1}%", bw_err * 100.0, lat_err * 100.0);
+    anyhow::ensure!(bw_err < 0.15 && lat_err < 0.15, "validation drifted from the paper");
+    println!("validation OK");
+    Ok(())
+}

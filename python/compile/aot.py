@@ -1,0 +1,106 @@
+"""AOT lowering: jax/Pallas -> HLO text artifacts for the Rust runtime.
+
+Interchange format is **HLO text**, NOT serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids that the published
+``xla`` crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md and gen_hlo.py).
+
+Artifacts (written to ``--out-dir``, default ``../artifacts``):
+
+* ``pcie_latency.hlo.txt``     — f32[1024] sizes, f32[8] params -> f32[1024]
+* ``collective_cost.hlo.txt``  — f32[256] sizes, f32[3] params -> f32[3,256]
+* ``llm_traffic.hlo.txt``      — (f32[10], f32[8], f32[3], f32[3]) -> f32[16]
+* ``manifest.json``            — shapes + vector layouts, consumed by
+  ``rust/src/runtime/artifacts.rs`` to sanity-check at load time.
+
+Run via ``make artifacts`` (no-op when inputs are unchanged).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import ref
+
+PCIE_BATCH = 1024
+COLL_BATCH = 256
+
+MANIFEST_VERSION = 1
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_all() -> dict[str, str]:
+    f32 = jnp.float32
+    spec = jax.ShapeDtypeStruct
+
+    entries = {
+        "pcie_latency": jax.jit(model.pcie_latency_batch).lower(
+            spec((PCIE_BATCH,), f32), spec((ref.N_PCIE_PARAMS,), f32)
+        ),
+        "collective_cost": jax.jit(model.collective_cost_batch).lower(
+            spec((COLL_BATCH,), f32), spec((ref.N_COLL_PARAMS,), f32)
+        ),
+        "llm_traffic": jax.jit(model.llm_traffic).lower(
+            spec((model.N_LLM_PARAMS,), f32),
+            spec((ref.N_PCIE_PARAMS,), f32),
+            spec((ref.N_COLL_PARAMS,), f32),
+            spec((ref.N_COLL_PARAMS,), f32),
+        ),
+    }
+    return {name: to_hlo_text(lowered) for name, lowered in entries.items()}
+
+
+def manifest() -> dict:
+    return {
+        "version": MANIFEST_VERSION,
+        "pcie_latency": {
+            "batch": PCIE_BATCH,
+            "param_layout": list(ref.PCIE_PARAM_LAYOUT),
+        },
+        "collective_cost": {
+            "batch": COLL_BATCH,
+            "param_layout": list(ref.COLL_PARAM_LAYOUT),
+        },
+        "llm_traffic": {
+            "llm_param_layout": list(model.LLM_PARAM_LAYOUT),
+            "out_layout": list(model.TRAFFIC_OUT_LAYOUT),
+        },
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    for name, text in lower_all().items():
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {len(text):>8} chars -> {path}")
+
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest(), f, indent=2)
+    print(f"wrote manifest -> {mpath}")
+
+
+if __name__ == "__main__":
+    main()

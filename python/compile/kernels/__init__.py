@@ -1,0 +1,4 @@
+# L1: Pallas kernels for the paper's analytic compute hot-spots.
+from .pcie_latency import pcie_latency  # noqa: F401
+from .collective_cost import collective_cost  # noqa: F401
+from . import ref  # noqa: F401

@@ -1,0 +1,67 @@
+"""L1 Pallas kernel: α-β ring-collective cost model.
+
+For a batch of collective payload sizes and a (n_devices, α, β) parameter
+vector, compute the completion time of the three collective shapes the LLM
+traffic model needs (paper §2.4):
+
+* ring **AllReduce** (reduce-scatter + all-gather): ``2(n-1)`` steps, each
+  moving ``size/n`` bytes per device,
+* ring **AllGather**: ``n-1`` steps of ``size/n`` bytes,
+* **P2P** (pipeline-parallel stage boundary): one α + size·β transfer.
+
+Output layout is ``f32[3, N]`` — row 0 allreduce, row 1 allgather, row 2 p2p
+(see ``ref.collective_cost_ref``). Tiled like ``pcie_latency``: a 1-D grid
+of VMEM-resident BLOCK-lane tiles; the parameter vector is broadcast to all
+tiles so the AOT artifact stays reusable across ring sizes and link rates.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import N_COLL_PARAMS
+
+BLOCK = 1024
+
+
+def _kernel(sizes_ref, params_ref, out_ref):
+    n = params_ref[0]
+    alpha = params_ref[1]
+    beta = params_ref[2]
+    sizes = sizes_ref[...]
+
+    allreduce = 2.0 * (n - 1.0) * alpha + 2.0 * (n - 1.0) / n * sizes * beta
+    allgather = (n - 1.0) * alpha + (n - 1.0) / n * sizes * beta
+    p2p = alpha + sizes * beta
+
+    out_ref[0, :] = allreduce
+    out_ref[1, :] = allgather
+    out_ref[2, :] = p2p
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def collective_cost(sizes_b: jnp.ndarray, params: jnp.ndarray, *, block: int = BLOCK) -> jnp.ndarray:
+    """Ring-collective costs (ns). sizes_b f32[N], params f32[3] -> f32[3, N]."""
+    if sizes_b.ndim != 1:
+        raise ValueError(f"sizes_b must be rank-1, got {sizes_b.shape}")
+    if params.shape != (N_COLL_PARAMS,):
+        raise ValueError(f"params must be f32[{N_COLL_PARAMS}], got {params.shape}")
+    n = sizes_b.shape[0]
+    padded = (n + block - 1) // block * block
+    sizes = jnp.pad(sizes_b.astype(jnp.float32), (0, padded - n), constant_values=1.0)
+    out = pl.pallas_call(
+        _kernel,
+        grid=(padded // block,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((N_COLL_PARAMS,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((3, block), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((3, padded), jnp.float32),
+        interpret=True,
+    )(sizes, params.astype(jnp.float32))
+    return out[:, :n]

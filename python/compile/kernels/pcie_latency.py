@@ -1,0 +1,87 @@
+"""L1 Pallas kernel: batched PCIe transaction-timing model (paper §3.2).
+
+Given a batch of message sizes, compute the per-message intra-node
+serialization latency::
+
+    BytesPerNs = Width * DataRate * Encoding / 8
+    TLPTime    = (TLPOverhead + MaxPayloadSize) / BytesPerNs
+    DLLPTime   = (DLLPOverhead + DLLPSize) / BytesPerNs
+    NumberTLPs = ceil(MessageSize / MaxPayloadSize)
+    NumberACKs = ceil(NumberTLPs / AckFactor)
+    Latency    = NumberTLPs * TLPTime + NumberACKs * DLLPTime
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the model is element-wise
+over message descriptors, so we tile the batch into VMEM-resident blocks of
+``BLOCK`` lanes and run a 1-D grid over them — the VPU analogue of the
+paper's per-transaction host computation. The 8-float parameter vector is a
+*runtime* input broadcast to every tile (index_map pinned to block 0) so the
+compiled artifact is reusable for any PCIe generation / lane count / MPS
+without re-lowering.
+
+``interpret=True`` always: the artifact must run on the CPU PJRT client the
+Rust runtime uses (real-TPU lowering emits a Mosaic custom-call the CPU
+plugin cannot execute).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import N_PCIE_PARAMS
+
+# Tile width: one VPU-friendly (8, 128)-shaped f32 block worth of lanes.
+BLOCK = 1024
+
+
+def _kernel(sizes_ref, params_ref, out_ref):
+    """One grid step: latency for BLOCK message sizes, params in VMEM."""
+    width = params_ref[0]
+    datarate = params_ref[1]
+    encoding = params_ref[2]
+    tlp_overhead = params_ref[3]
+    mps = params_ref[4]
+    dllp_overhead = params_ref[5]
+    dllp_size = params_ref[6]
+    ack_factor = params_ref[7]
+
+    bytes_per_ns = width * datarate * encoding / 8.0
+    tlp_time = (tlp_overhead + mps) / bytes_per_ns
+    dllp_time = (dllp_overhead + dllp_size) / bytes_per_ns
+
+    sizes = sizes_ref[...]
+    n_tlps = jnp.ceil(sizes / mps)
+    n_acks = jnp.ceil(n_tlps / ack_factor)
+    out_ref[...] = n_tlps * tlp_time + n_acks * dllp_time
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def pcie_latency(msg_sizes_b: jnp.ndarray, params: jnp.ndarray, *, block: int = BLOCK) -> jnp.ndarray:
+    """Batched PCIe latency (ns). msg_sizes_b f32[N], params f32[8] -> f32[N].
+
+    N is padded up to a multiple of ``block`` internally; the pad lanes use a
+    size of 1 byte (a valid input) and are sliced off before returning.
+    """
+    if msg_sizes_b.ndim != 1:
+        raise ValueError(f"msg_sizes_b must be rank-1, got {msg_sizes_b.shape}")
+    if params.shape != (N_PCIE_PARAMS,):
+        raise ValueError(f"params must be f32[{N_PCIE_PARAMS}], got {params.shape}")
+    n = msg_sizes_b.shape[0]
+    padded = (n + block - 1) // block * block
+    sizes = jnp.pad(msg_sizes_b.astype(jnp.float32), (0, padded - n), constant_values=1.0)
+    out = pl.pallas_call(
+        _kernel,
+        grid=(padded // block,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            # Whole parameter vector visible to every tile.
+            pl.BlockSpec((N_PCIE_PARAMS,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((padded,), jnp.float32),
+        interpret=True,
+    )(sizes, params.astype(jnp.float32))
+    return out[:n]

@@ -1,0 +1,89 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These implement, verbatim, the analytic models the kernels must match:
+
+* :func:`pcie_latency_ref` — the paper's §3.2 PCIe transaction-timing
+  equations (BytesPerNs / TLPTime / DLLPTime / NumberTLPs / NumberACKs /
+  LatencyTime), vectorised over a batch of message sizes.
+* :func:`collective_cost_ref` — the α-β ring-collective cost model used by
+  the L2 LLM communication-volume model (AllReduce / AllGather / P2P).
+
+The pytest + hypothesis suite asserts `assert_allclose(kernel, ref)` over
+swept shapes and parameter ranges; the Rust `analytic` module mirrors the
+same equations and is cross-checked against the AOT-compiled HLO at test
+time, so all four implementations (Pallas, jnp, HLO-via-PJRT, Rust) agree.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Layout of the PCIe parameter vector (must match rust/src/runtime/artifacts.rs
+# and rust/src/analytic/mod.rs).
+PCIE_PARAM_LAYOUT = (
+    "width_lanes",      # 0: number of PCIe lanes (e.g. 16)
+    "datarate_gbps",    # 1: per-lane raw rate in Gbit/s (Gen3: 8.0)
+    "encoding",         # 2: line-code efficiency (Gen3: 128/130)
+    "tlp_overhead_b",   # 3: per-TLP framing+header+CRC bytes (e.g. 24)
+    "mps_b",            # 4: max payload size per TLP in bytes (e.g. 128)
+    "dllp_overhead_b",  # 5: per-DLLP framing overhead bytes (e.g. 2)
+    "dllp_size_b",      # 6: DLLP body bytes (e.g. 6)
+    "ack_factor",       # 7: TLPs acknowledged per DLLP ACK (e.g. 4)
+)
+N_PCIE_PARAMS = len(PCIE_PARAM_LAYOUT)
+
+# Layout of the collective parameter vector.
+COLL_PARAM_LAYOUT = (
+    "n_devices",  # 0: ring size
+    "alpha_ns",   # 1: per-step latency in ns
+    "beta_ns_b",  # 2: per-byte time in ns/byte (inverse bandwidth)
+)
+N_COLL_PARAMS = len(COLL_PARAM_LAYOUT)
+
+
+def pcie_latency_ref(msg_sizes_b: jnp.ndarray, params: jnp.ndarray) -> jnp.ndarray:
+    """Paper §3.2: per-message PCIe serialization latency in nanoseconds.
+
+    msg_sizes_b: f32[N] message sizes in bytes (>= 1).
+    params:      f32[8] laid out per PCIE_PARAM_LAYOUT.
+    returns:     f32[N] LatencyTime in ns.
+    """
+    width = params[0]
+    datarate = params[1]
+    encoding = params[2]
+    tlp_overhead = params[3]
+    mps = params[4]
+    dllp_overhead = params[5]
+    dllp_size = params[6]
+    ack_factor = params[7]
+
+    # Gbit/s per lane * lanes * efficiency -> bytes/ns (1 Gbit/s == 1 bit/ns).
+    bytes_per_ns = width * datarate * encoding / 8.0
+    tlp_time = (tlp_overhead + mps) / bytes_per_ns
+    dllp_time = (dllp_overhead + dllp_size) / bytes_per_ns
+    n_tlps = jnp.ceil(msg_sizes_b / mps)
+    n_acks = jnp.ceil(n_tlps / ack_factor)
+    return n_tlps * tlp_time + n_acks * dllp_time
+
+
+def collective_cost_ref(sizes_b: jnp.ndarray, params: jnp.ndarray) -> jnp.ndarray:
+    """α-β cost (ns) of ring collectives over `n` devices for each size.
+
+    sizes_b: f32[N] total collective payload in bytes.
+    params:  f32[3] laid out per COLL_PARAM_LAYOUT.
+    returns: f32[3, N] rows = (allreduce, allgather, p2p) completion time ns.
+    """
+    n = params[0]
+    alpha = params[1]
+    beta = params[2]
+
+    steps_ar = 2.0 * (n - 1.0)
+    bytes_ar = 2.0 * (n - 1.0) / n * sizes_b
+    allreduce = steps_ar * alpha + bytes_ar * beta
+
+    steps_ag = n - 1.0
+    bytes_ag = (n - 1.0) / n * sizes_b
+    allgather = steps_ag * alpha + bytes_ag * beta
+
+    p2p = alpha + sizes_b * beta
+    return jnp.stack([allreduce, allgather, p2p], axis=0)

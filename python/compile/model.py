@@ -1,0 +1,161 @@
+"""L2: Megatron-style LLM communication-volume model (paper §2.4 / §3.4).
+
+The paper's C1–C5 traffic patterns are fixed intra/inter splits motivated by
+how much Tensor / Pipeline / Data parallelism an LLM training job uses. This
+module makes that motivation executable: given a transformer configuration
+and a parallelism layout ``(tp, pp, dp)`` it derives, per training step,
+
+* the per-collective message sizes (TP AllReduce, PP P2P, DP AllReduce),
+* the collective counts,
+* total intra-node vs inter-node wire bytes (TP rings live inside a node;
+  PP stage boundaries and DP gradient rings cross nodes),
+* the resulting inter-node traffic fraction (the knob C1–C5 quantise), and
+* analytic time estimates via the L1 Pallas kernels
+  (:mod:`kernels.pcie_latency`, :mod:`kernels.collective_cost`).
+
+Everything is a flat jax function over f32 vectors so it AOT-lowers to one
+HLO module the Rust coordinator executes at sweep-setup time (never per
+packet, never Python at runtime).
+
+Transformer accounting (standard Megatron-LM estimates):
+
+* parameters ≈ ``12 L h² + V h`` (attention 4h², MLP 8h², embeddings),
+* TP AllReduces: 4 per layer per microbatch (2 fwd + 2 bwd), payload
+  ``b·s·h·bytes``,
+* PP P2P: 2 transfers (fwd activation + bwd grad) per microbatch per stage
+  boundary, payload ``b·s·h·bytes``,
+* DP AllReduce: once per step over the rank-local parameter shard
+  ``params·bytes / (tp·pp)``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels import collective_cost, pcie_latency
+
+# Input layout: LLM configuration vector (f32[10]).
+LLM_PARAM_LAYOUT = (
+    "num_layers",      # 0: transformer layers L
+    "hidden",          # 1: hidden size h
+    "seq_len",         # 2: sequence length s
+    "microbatch",      # 3: microbatch size b
+    "vocab",           # 4: vocabulary size V
+    "tp",              # 5: tensor-parallel degree
+    "pp",              # 6: pipeline-parallel degree
+    "dp",              # 7: data-parallel degree
+    "bytes_per_elem",  # 8: activation/grad element size (bf16: 2)
+    "num_microbatches",  # 9: microbatches per step m
+)
+N_LLM_PARAMS = len(LLM_PARAM_LAYOUT)
+
+# Output layout (f32[16]) — must match rust/src/runtime/artifacts.rs.
+TRAFFIC_OUT_LAYOUT = (
+    "tp_msg_size_b",        # 0
+    "pp_msg_size_b",        # 1
+    "dp_msg_size_b",        # 2
+    "n_tp_collectives",     # 3 per step
+    "n_pp_transfers",       # 4 per step
+    "n_dp_collectives",     # 5 per step
+    "intra_bytes_per_step", # 6 wire bytes inside nodes
+    "inter_bytes_per_step", # 7 wire bytes between nodes
+    "frac_inter",           # 8 inter / (intra + inter)
+    "tp_allreduce_ns",      # 9  (intra α-β)
+    "pp_p2p_ns",            # 10 (inter α-β)
+    "dp_allreduce_ns",      # 11 (inter α-β)
+    "pcie_tp_msg_ns",       # 12 PCIe serialization of one TP message
+    "pcie_pp_msg_ns",       # 13
+    "pcie_dp_msg_ns",       # 14
+    "total_params",         # 15 model parameter count
+)
+N_TRAFFIC_OUT = len(TRAFFIC_OUT_LAYOUT)
+
+
+def llm_traffic(
+    llm: jnp.ndarray,
+    pcie_params: jnp.ndarray,
+    coll_intra: jnp.ndarray,
+    coll_inter: jnp.ndarray,
+) -> jnp.ndarray:
+    """Communication volume + cost summary for one training step.
+
+    llm:         f32[10] per LLM_PARAM_LAYOUT.
+    pcie_params: f32[8]  per kernels.ref.PCIE_PARAM_LAYOUT.
+    coll_intra:  f32[3]  α-β parameters of the intra-node ring (n = tp).
+    coll_inter:  f32[3]  α-β parameters of inter-node collectives (n = dp).
+    returns:     f32[16] per TRAFFIC_OUT_LAYOUT.
+    """
+    L = llm[0]
+    h = llm[1]
+    s = llm[2]
+    b = llm[3]
+    V = llm[4]
+    tp = llm[5]
+    pp = llm[6]
+    dp = llm[7]
+    bytes_e = llm[8]
+    m = llm[9]
+
+    total_params = 12.0 * L * h * h + V * h
+
+    act_bytes = b * s * h * bytes_e
+    tp_msg = act_bytes                       # one TP AllReduce payload
+    pp_msg = act_bytes                       # one PP boundary transfer
+    dp_msg = total_params * bytes_e / (tp * pp)  # rank-local gradient shard
+
+    layers_per_stage = L / pp
+    n_tp = 4.0 * layers_per_stage * m        # per device group, per step
+    n_pp = 2.0 * m * jnp.maximum(pp - 1.0, 0.0)
+    n_dp = 1.0
+
+    # Wire bytes per step. TP rings are intra-node by construction (paper
+    # §2.4: "tensor parallelism is most effective ... within a single
+    # computing node"); PP boundaries and DP gradient rings cross nodes.
+    tp_wire = jnp.where(tp > 1.0, 2.0 * (tp - 1.0) / tp * tp_msg, 0.0) * n_tp * tp
+    pp_wire = pp_msg * n_pp
+    dp_wire = jnp.where(dp > 1.0, 2.0 * (dp - 1.0) / dp * dp_msg, 0.0) * n_dp * dp
+    intra_bytes = tp_wire
+    inter_bytes = pp_wire + dp_wire
+    frac_inter = inter_bytes / jnp.maximum(intra_bytes + inter_bytes, 1.0)
+
+    # Collective completion estimates from the L1 α-β kernel.
+    sizes = jnp.stack([tp_msg, pp_msg, dp_msg])
+    intra_costs = collective_cost(sizes, coll_intra)  # f32[3,3]
+    inter_costs = collective_cost(sizes, coll_inter)
+    tp_ar_ns = intra_costs[0, 0]   # allreduce row, tp size
+    pp_p2p_ns = inter_costs[2, 1]  # p2p row, pp size
+    dp_ar_ns = inter_costs[0, 2]   # allreduce row, dp size
+
+    # PCIe serialization of a single message of each class (L1 kernel).
+    pcie_ns = pcie_latency(sizes, pcie_params)
+
+    return jnp.stack(
+        [
+            tp_msg,
+            pp_msg,
+            dp_msg,
+            n_tp,
+            n_pp,
+            n_dp,
+            intra_bytes,
+            inter_bytes,
+            frac_inter,
+            tp_ar_ns,
+            pp_p2p_ns,
+            dp_ar_ns,
+            pcie_ns[0],
+            pcie_ns[1],
+            pcie_ns[2],
+            total_params,
+        ]
+    )
+
+
+def pcie_latency_batch(sizes: jnp.ndarray, params: jnp.ndarray) -> jnp.ndarray:
+    """AOT entry: the raw L1 kernel over a fixed-width batch (f32[N] -> f32[N])."""
+    return pcie_latency(sizes, params)
+
+
+def collective_cost_batch(sizes: jnp.ndarray, params: jnp.ndarray) -> jnp.ndarray:
+    """AOT entry: the raw α-β kernel over a fixed-width batch (f32[N] -> f32[3,N])."""
+    return collective_cost(sizes, params)

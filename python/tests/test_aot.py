@@ -1,0 +1,64 @@
+"""AOT path: lowering emits parseable, version-safe HLO text + manifest."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot, model
+from compile.kernels import ref
+
+
+@pytest.fixture(scope="module")
+def lowered():
+    return aot.lower_all()
+
+
+def test_all_artifacts_lowered(lowered):
+    assert set(lowered) == {"pcie_latency", "collective_cost", "llm_traffic"}
+
+
+def test_hlo_is_text_with_entry(lowered):
+    for name, text in lowered.items():
+        assert text.startswith("HloModule"), name
+        assert "ENTRY" in text, name
+        # The 0.5.1 text parser chokes on nothing here; cheap sanity only.
+        assert len(text) > 500, name
+
+
+def test_hlo_shapes_embedded(lowered):
+    # Entry signatures must match what rust/src/runtime expects.
+    assert f"f32[{aot.PCIE_BATCH}]" in lowered["pcie_latency"]
+    assert f"f32[3,{aot.COLL_BATCH}]" in lowered["collective_cost"]
+    assert "f32[16]" in lowered["llm_traffic"]
+
+
+def test_no_serialized_proto_interchange(lowered):
+    """Guard the gotcha: we must ship text, not bytes (xla_extension 0.5.1
+    rejects jax>=0.5 64-bit-id protos)."""
+    for text in lowered.values():
+        assert isinstance(text, str)
+
+
+def test_manifest_roundtrip(tmp_path):
+    m = aot.manifest()
+    assert m["version"] == aot.MANIFEST_VERSION
+    assert m["pcie_latency"]["param_layout"] == list(ref.PCIE_PARAM_LAYOUT)
+    assert m["llm_traffic"]["out_layout"] == list(model.TRAFFIC_OUT_LAYOUT)
+    p = tmp_path / "manifest.json"
+    p.write_text(json.dumps(m))
+    assert json.loads(p.read_text()) == m
+
+
+def test_main_writes_artifacts(tmp_path, monkeypatch, capsys):
+    monkeypatch.setattr("sys.argv", ["aot", "--out-dir", str(tmp_path)])
+    aot.main()
+    names = sorted(os.listdir(tmp_path))
+    assert names == [
+        "collective_cost.hlo.txt",
+        "llm_traffic.hlo.txt",
+        "manifest.json",
+        "pcie_latency.hlo.txt",
+    ]
+    for n in names:
+        assert (tmp_path / n).stat().st_size > 100

@@ -1,0 +1,122 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle, swept with hypothesis."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import collective_cost, pcie_latency, ref
+
+GEN3 = np.array([16.0, 8.0, 128.0 / 130.0, 24.0, 128.0, 2.0, 6.0, 4.0], np.float32)
+COLL = np.array([8.0, 500.0, 0.01], np.float32)
+
+
+def _sizes(n, lo=1.0, hi=4 * 1024 * 1024):
+    rng = np.random.default_rng(n)
+    return rng.uniform(lo, hi, size=n).astype(np.float32)
+
+
+# ---------------------------------------------------------------- pcie kernel
+
+@pytest.mark.parametrize("n", [1, 7, 128, 1023, 1024, 1025, 4096])
+def test_pcie_matches_ref_across_batch_sizes(n):
+    sizes = _sizes(n)
+    got = pcie_latency(jnp.asarray(sizes), jnp.asarray(GEN3))
+    want = ref.pcie_latency_ref(jnp.asarray(sizes), jnp.asarray(GEN3))
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+def test_pcie_single_tlp_floor():
+    """Messages <= MPS all cost exactly one TLP + one ACK (paper §4.1)."""
+    sizes = jnp.array([1.0, 64.0, 127.0, 128.0], jnp.float32)
+    out = np.asarray(pcie_latency(sizes, jnp.asarray(GEN3)))
+    assert np.all(out == out[0])
+
+
+def test_pcie_known_value_gen3_x16():
+    """Hand-computed 4 KiB Gen3 x16 value: 32 TLPs + 8 ACKs."""
+    bytes_per_ns = 16 * 8 * (128.0 / 130.0) / 8.0
+    want = 32 * (24 + 128) / bytes_per_ns + 8 * (2 + 6) / bytes_per_ns
+    got = float(pcie_latency(jnp.array([4096.0], jnp.float32), jnp.asarray(GEN3))[0])
+    assert got == pytest.approx(want, rel=1e-6)
+
+
+def test_pcie_monotone_in_size():
+    sizes = jnp.asarray(np.linspace(1, 1 << 22, 2048, dtype=np.float32))
+    out = np.asarray(pcie_latency(sizes, jnp.asarray(GEN3)))
+    assert np.all(np.diff(out) >= 0)
+
+
+def test_pcie_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        pcie_latency(jnp.zeros((2, 2), jnp.float32), jnp.asarray(GEN3))
+    with pytest.raises(ValueError):
+        pcie_latency(jnp.ones((4,), jnp.float32), jnp.zeros((3,), jnp.float32))
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n=st.integers(1, 3000),
+    width=st.sampled_from([1.0, 4.0, 8.0, 16.0]),
+    datarate=st.sampled_from([8.0, 16.0, 32.0, 64.0]),
+    mps=st.sampled_from([128.0, 256.0, 512.0]),
+    ack=st.sampled_from([1.0, 4.0, 8.0]),
+)
+def test_pcie_hypothesis_param_sweep(n, width, datarate, mps, ack):
+    params = jnp.array([width, datarate, 128.0 / 130.0, 24.0, mps, 2.0, 6.0, ack], jnp.float32)
+    sizes = jnp.asarray(_sizes(n))
+    got = pcie_latency(sizes, params)
+    want = ref.pcie_latency_ref(sizes, params)
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(block=st.sampled_from([8, 64, 256, 1024, 2048]), n=st.integers(1, 2500))
+def test_pcie_block_size_invariance(block, n):
+    """Tiling choice must not change the numbers."""
+    sizes = jnp.asarray(_sizes(n))
+    got = pcie_latency(sizes, jnp.asarray(GEN3), block=block)
+    want = pcie_latency(sizes, jnp.asarray(GEN3), block=1024)
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+# ---------------------------------------------------------- collective kernel
+
+@pytest.mark.parametrize("n", [1, 3, 255, 256, 257, 2048])
+def test_collective_matches_ref_across_batch_sizes(n):
+    sizes = _sizes(n)
+    got = collective_cost(jnp.asarray(sizes), jnp.asarray(COLL))
+    want = ref.collective_cost_ref(jnp.asarray(sizes), jnp.asarray(COLL))
+    assert got.shape == (3, n)
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+def test_collective_allreduce_is_two_allgathers():
+    """Ring AR = reduce-scatter + all-gather: exactly 2x the AG cost."""
+    sizes = jnp.asarray(_sizes(64))
+    out = np.asarray(collective_cost(sizes, jnp.asarray(COLL)))
+    np.testing.assert_allclose(out[0], 2.0 * out[1], rtol=1e-6)
+
+
+def test_collective_single_device_degenerates():
+    """n=1: rings cost nothing, p2p is alpha + size*beta."""
+    params = jnp.array([1.0, 500.0, 0.01], jnp.float32)
+    sizes = jnp.array([1000.0], jnp.float32)
+    out = np.asarray(collective_cost(sizes, params))
+    assert out[0, 0] == 0.0 and out[1, 0] == 0.0
+    assert out[2, 0] == pytest.approx(500.0 + 10.0)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n=st.integers(1, 1500),
+    devs=st.sampled_from([1.0, 2.0, 4.0, 8.0, 64.0]),
+    alpha=st.floats(0.0, 1e4),
+    beta=st.floats(0.0, 1.0),
+)
+def test_collective_hypothesis_param_sweep(n, devs, alpha, beta):
+    params = jnp.array([devs, alpha, beta], jnp.float32)
+    sizes = jnp.asarray(_sizes(n))
+    got = collective_cost(sizes, params)
+    want = ref.collective_cost_ref(sizes, params)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)

@@ -1,0 +1,104 @@
+"""L2 model invariants: the LLM communication-volume model."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+GEN3 = jnp.array([16.0, 8.0, 128.0 / 130.0, 24.0, 128.0, 2.0, 6.0, 4.0], jnp.float32)
+INTRA = jnp.array([8.0, 500.0, 0.002], jnp.float32)
+INTER = jnp.array([8.0, 2000.0, 0.02], jnp.float32)
+
+IDX = {name: i for i, name in enumerate(model.TRAFFIC_OUT_LAYOUT)}
+
+
+def run(L=32, h=4096, s=2048, b=1, V=50257, tp=8, pp=4, dp=8, bytes_e=2, m=8):
+    llm = jnp.array([L, h, s, b, V, tp, pp, dp, bytes_e, m], jnp.float32)
+    return np.asarray(model.llm_traffic(llm, GEN3, INTRA, INTER))
+
+
+def test_output_shape_and_layout():
+    out = run()
+    assert out.shape == (model.N_TRAFFIC_OUT,)
+    assert np.all(np.isfinite(out))
+    assert np.all(out >= 0)
+
+
+def test_frac_inter_definition():
+    out = run()
+    intra, inter = out[IDX["intra_bytes_per_step"]], out[IDX["inter_bytes_per_step"]]
+    assert out[IDX["frac_inter"]] == pytest.approx(inter / (intra + inter), rel=1e-5)
+
+
+def test_pure_tp_is_all_intra():
+    """tp>1, pp=1, dp=1: C5-like, zero inter traffic."""
+    out = run(tp=8, pp=1, dp=1)
+    assert out[IDX["inter_bytes_per_step"]] == 0.0
+    assert out[IDX["frac_inter"]] == 0.0
+
+
+def test_pure_pp_dp_is_all_inter():
+    """tp=1: nothing stays in the node."""
+    out = run(tp=1, pp=4, dp=8)
+    assert out[IDX["intra_bytes_per_step"]] == 0.0
+    assert out[IDX["frac_inter"]] == pytest.approx(1.0)
+
+
+def test_more_tp_raises_intra_share():
+    """Shifting parallelism from PP to TP moves traffic into the node —
+    the C4 -> C1 direction of the paper's pattern family."""
+    f_low_tp = run(tp=2, pp=16)[IDX["frac_inter"]]
+    f_high_tp = run(tp=16, pp=2)[IDX["frac_inter"]]
+    assert f_high_tp < f_low_tp
+
+
+def test_param_count_matches_megatron_estimate():
+    out = run(L=32, h=4096, V=50257)
+    want = 12 * 32 * 4096**2 + 50257 * 4096
+    assert out[IDX["total_params"]] == pytest.approx(want, rel=1e-6)
+
+
+def test_dp_shard_scales_inversely_with_tp_pp():
+    a = run(tp=2, pp=2)[IDX["dp_msg_size_b"]]
+    b = run(tp=4, pp=4)[IDX["dp_msg_size_b"]]
+    assert a == pytest.approx(4 * b, rel=1e-5)
+
+
+def test_costs_match_ref_kernels():
+    out = run()
+    sizes = jnp.array(
+        [out[IDX["tp_msg_size_b"]], out[IDX["pp_msg_size_b"]], out[IDX["dp_msg_size_b"]]],
+        jnp.float32,
+    )
+    want_pcie = np.asarray(ref.pcie_latency_ref(sizes, GEN3))
+    np.testing.assert_allclose(
+        [out[IDX["pcie_tp_msg_ns"]], out[IDX["pcie_pp_msg_ns"]], out[IDX["pcie_dp_msg_ns"]]],
+        want_pcie,
+        rtol=1e-5,
+    )
+    want_coll = np.asarray(ref.collective_cost_ref(sizes, INTER))
+    assert out[IDX["pp_p2p_ns"]] == pytest.approx(float(want_coll[2, 1]), rel=1e-5)
+    assert out[IDX["dp_allreduce_ns"]] == pytest.approx(float(want_coll[0, 2]), rel=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    L=st.integers(1, 128),
+    h=st.sampled_from([512, 1024, 4096, 8192]),
+    tp=st.sampled_from([1, 2, 4, 8]),
+    pp=st.sampled_from([1, 2, 4, 8]),
+    dp=st.sampled_from([1, 2, 4, 8]),
+    m=st.integers(1, 32),
+)
+def test_hypothesis_model_invariants(L, h, tp, pp, dp, m):
+    out = run(L=L, h=h, tp=tp, pp=pp, dp=dp, m=m)
+    assert np.all(np.isfinite(out))
+    f = out[IDX["frac_inter"]]
+    assert 0.0 <= f <= 1.0
+    # Volume accounting is self-consistent.
+    total = out[IDX["intra_bytes_per_step"]] + out[IDX["inter_bytes_per_step"]]
+    if total > 0:
+        assert f == pytest.approx(out[IDX["inter_bytes_per_step"]] / total, rel=1e-4)

@@ -1,0 +1,58 @@
+//! Shared helpers for the paper-artifact benches.
+//!
+//! Every bench regenerates one paper table/figure through the public API
+//! and times the regeneration with `sauron::benchkit`. Env knobs:
+//! `SAURON_BENCH_FULL=1` uses the paper's full load axis (slow on one
+//! core); `SAURON_BENCH_MS` overrides the per-bench measurement budget.
+
+#![allow(dead_code)]
+use std::sync::Arc;
+
+use sauron::config::Pattern;
+use sauron::coordinator::{self, SweepSpec};
+use sauron::net::world::{NativeProvider, SerProvider, SimReport};
+use sauron::runtime::Runtime;
+
+pub fn full() -> bool {
+    std::env::var("SAURON_BENCH_FULL").is_ok()
+}
+
+/// Provider for benches: HLO runtime when artifacts exist, else native.
+pub fn provider() -> Box<dyn SerProvider> {
+    match Runtime::load(&Runtime::default_dir()) {
+        Ok(rt) => {
+            eprintln!("# provider: hlo/pjrt");
+            Box::new(rt)
+        }
+        Err(_) => {
+            eprintln!("# provider: native (run `make artifacts` for the HLO path)");
+            Box::new(NativeProvider)
+        }
+    }
+}
+
+/// Figure sweep spec: trimmed by default, paper grid with
+/// SAURON_BENCH_FULL.
+pub fn fig_spec(nodes: usize) -> SweepSpec {
+    let mut spec = SweepSpec::paper(nodes);
+    if !full() {
+        spec.loads = vec![0.2, 0.5, 0.8, 1.0];
+        if nodes > 32 {
+            // 128-node points are ~4x the work; trim the grid further.
+            spec.patterns = vec![Pattern::C1, Pattern::C3, Pattern::C5];
+            spec.intra_gbs = vec![128.0, 512.0];
+        }
+    }
+    spec
+}
+
+/// Run a figure sweep once (used inside the timed closure).
+pub fn run_fig(spec: &SweepSpec, provider: &dyn SerProvider) -> Vec<SimReport> {
+    let snapshot = Arc::new(coordinator::snapshot_provider(spec, provider));
+    coordinator::run_sweep(spec, snapshot, None).expect("sweep")
+}
+
+/// Count simulated events across reports (throughput unit for benchkit).
+pub fn total_events(reports: &[SimReport]) -> f64 {
+    reports.iter().map(|r| r.events as f64).sum()
+}

@@ -1,0 +1,60 @@
+//! Paper Figure 4: simulated vs measured `ib_write` bandwidth + latency
+//! curves (the validation figure). Regenerates both series, writes the
+//! CSV, and times the full regeneration.
+//!
+//! Run: `cargo bench --bench fig4_validation`
+
+mod common;
+
+use sauron::benchkit::Bench;
+use sauron::report::tables;
+use sauron::traffic::ib_bench::{self, TEST_SIZES};
+
+fn main() {
+    let provider = common::provider();
+    let sizes: Vec<u64> = if common::full() {
+        TEST_SIZES.to_vec()
+    } else {
+        vec![128, 1024, 4096, 32768, 262144, 2 << 20]
+    };
+
+    let regen = || {
+        let bw: Vec<_> = sizes
+            .iter()
+            .map(|&s| ib_bench::bandwidth_test(provider.as_ref(), s).unwrap())
+            .collect();
+        let lat: Vec<_> = sizes
+            .iter()
+            .map(|&s| ib_bench::latency_test(provider.as_ref(), s).unwrap())
+            .collect();
+        (bw, lat)
+    };
+
+    let (bw, lat) = regen();
+    println!("Figure 4a (bandwidth, GiB/s) and 4b (latency, us): sim vs paper series");
+    println!("{:>10} {:>10} {:>10} {:>12} {:>12}", "size", "bw_paper", "bw_sim", "lat_paper", "lat_sim");
+    let mut csv = String::from("size_b,paper_bw_gib,sim_bw_gib,paper_lat_us,sim_lat_us\n");
+    for (b, l) in bw.iter().zip(&lat) {
+        println!(
+            "{:>10} {:>10.2} {:>10.2} {:>12.2} {:>12.2}",
+            b.size_b, b.paper_gib_s, b.sim_gib_s, l.paper_us, l.sim_us
+        );
+        csv.push_str(&format!(
+            "{},{},{},{},{}\n",
+            b.size_b, b.paper_gib_s, b.sim_gib_s, l.paper_us, l.sim_us
+        ));
+    }
+    std::fs::create_dir_all("results").ok();
+    std::fs::write("results/fig4_validation.csv", csv).unwrap();
+    let bw_err = tables::geomean_abs_rel_err(
+        &bw.iter().map(|p| (p.sim_gib_s, p.paper_gib_s)).collect::<Vec<_>>(),
+    );
+    let lat_err = tables::geomean_abs_rel_err(
+        &lat.iter().map(|p| (p.sim_us, p.paper_us)).collect::<Vec<_>>(),
+    );
+    println!("\ngeomean |rel err|: bw {:.1}%, lat {:.1}%\n", bw_err * 100.0, lat_err * 100.0);
+
+    let mut b = Bench::new();
+    b.bench("fig4/full_regeneration", regen);
+    b.append_csv(std::path::Path::new("results/bench_history.csv")).ok();
+}

@@ -1,0 +1,29 @@
+//! Paper Figure 5: intra-node throughput + latency vs traffic load on the
+//! 32-node RLFT (256 accelerators), C1-C5 x {128,256,512} GB/s.
+//!
+//! Run: `cargo bench --bench fig5_intra_32` (SAURON_BENCH_FULL=1 for the
+//! paper's 20-point load axis).
+
+mod common;
+
+use sauron::benchkit::Bench;
+use sauron::coordinator::results;
+use sauron::report::figures::{render_figure, FigureKind};
+
+fn main() {
+    let provider = common::provider();
+    let spec = common::fig_spec(32);
+    eprintln!("# fig5: {} sweep points", spec.points());
+
+    let reports = common::run_fig(&spec, provider.as_ref());
+    println!("{}", render_figure(&reports, FigureKind::IntraThroughput));
+    println!("{}", render_figure(&reports, FigureKind::IntraLatency));
+    results::write_csv(std::path::Path::new("results/fig5_intra_32.csv"), &reports).unwrap();
+
+    let events = common::total_events(&reports);
+    let mut b = Bench::new();
+    b.bench_units("fig5/sweep_32n", events, "events", || {
+        common::run_fig(&spec, provider.as_ref())
+    });
+    b.append_csv(std::path::Path::new("results/bench_history.csv")).ok();
+}

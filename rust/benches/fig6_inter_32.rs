@@ -1,0 +1,28 @@
+//! Paper Figure 6: inter-node throughput + flow completion time vs load
+//! on the 32-node RLFT (same sweep as Fig 5, inter-side metrics).
+//!
+//! Run: `cargo bench --bench fig6_inter_32`
+
+mod common;
+
+use sauron::benchkit::Bench;
+use sauron::coordinator::results;
+use sauron::report::figures::{render_figure, FigureKind};
+
+fn main() {
+    let provider = common::provider();
+    let spec = common::fig_spec(32);
+    eprintln!("# fig6: {} sweep points", spec.points());
+
+    let reports = common::run_fig(&spec, provider.as_ref());
+    println!("{}", render_figure(&reports, FigureKind::InterThroughput));
+    println!("{}", render_figure(&reports, FigureKind::Fct));
+    results::write_csv(std::path::Path::new("results/fig6_inter_32.csv"), &reports).unwrap();
+
+    let events = common::total_events(&reports);
+    let mut b = Bench::new();
+    b.bench_units("fig6/sweep_32n", events, "events", || {
+        common::run_fig(&spec, provider.as_ref())
+    });
+    b.append_csv(std::path::Path::new("results/bench_history.csv")).ok();
+}

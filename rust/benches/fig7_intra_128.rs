@@ -1,0 +1,28 @@
+//! Paper Figure 7: intra-node metrics vs load on the 128-node RLFT
+//! (1024 accelerators). Trends must match Fig 5 with ~4x throughput.
+//!
+//! Run: `cargo bench --bench fig7_intra_128`
+
+mod common;
+
+use sauron::benchkit::Bench;
+use sauron::coordinator::results;
+use sauron::report::figures::{render_figure, FigureKind};
+
+fn main() {
+    let provider = common::provider();
+    let spec = common::fig_spec(128);
+    eprintln!("# fig7: {} sweep points (128 nodes)", spec.points());
+
+    let reports = common::run_fig(&spec, provider.as_ref());
+    println!("{}", render_figure(&reports, FigureKind::IntraThroughput));
+    println!("{}", render_figure(&reports, FigureKind::IntraLatency));
+    results::write_csv(std::path::Path::new("results/fig7_intra_128.csv"), &reports).unwrap();
+
+    let events = common::total_events(&reports);
+    let mut b = Bench::new();
+    b.bench_units("fig7/sweep_128n", events, "events", || {
+        common::run_fig(&spec, provider.as_ref())
+    });
+    b.append_csv(std::path::Path::new("results/bench_history.csv")).ok();
+}

@@ -1,0 +1,27 @@
+//! Paper Figure 8: inter-node metrics vs load on the 128-node RLFT.
+//!
+//! Run: `cargo bench --bench fig8_inter_128`
+
+mod common;
+
+use sauron::benchkit::Bench;
+use sauron::coordinator::results;
+use sauron::report::figures::{render_figure, FigureKind};
+
+fn main() {
+    let provider = common::provider();
+    let spec = common::fig_spec(128);
+    eprintln!("# fig8: {} sweep points (128 nodes)", spec.points());
+
+    let reports = common::run_fig(&spec, provider.as_ref());
+    println!("{}", render_figure(&reports, FigureKind::InterThroughput));
+    println!("{}", render_figure(&reports, FigureKind::Fct));
+    results::write_csv(std::path::Path::new("results/fig8_inter_128.csv"), &reports).unwrap();
+
+    let events = common::total_events(&reports);
+    let mut b = Bench::new();
+    b.bench_units("fig8/sweep_128n", events, "events", || {
+        common::run_fig(&spec, provider.as_ref())
+    });
+    b.append_csv(std::path::Path::new("results/bench_history.csv")).ok();
+}

@@ -1,0 +1,84 @@
+//! Hot-path microbenchmarks (EXPERIMENTS.md §Perf): the DES core and the
+//! end-to-end simulation step, isolated from figure regeneration.
+//!
+//! Run: `cargo bench --bench perf_hotpath`
+
+mod common;
+
+use sauron::benchkit::Bench;
+use sauron::config::{presets, Pattern};
+use sauron::net::world::{BenchMode, NativeProvider, Sim};
+use sauron::sim::{Engine, EventQueue, Model};
+use sauron::units::Time;
+
+/// Pure event-loop cost: self-rescheduling no-op events.
+struct Spin {
+    left: u64,
+}
+impl Model for Spin {
+    type Event = ();
+    fn handle(&mut self, now: Time, _ev: (), q: &mut EventQueue<()>) {
+        if self.left > 0 {
+            self.left -= 1;
+            q.push(now + Time::from_ps(100), ());
+        }
+    }
+}
+
+fn main() {
+    let mut b = Bench::new();
+
+    // 1. Raw DES engine dispatch rate (single chain).
+    const N: u64 = 1_000_000;
+    b.bench_units("perf/engine_dispatch_chain", N as f64, "events", || {
+        let mut e = Engine::new(Spin { left: N });
+        e.schedule(Time::ZERO, ());
+        e.run()
+    });
+
+    // 2. Raw DES with a deep heap (64k concurrent chains).
+    const CHAINS: u64 = 65_536;
+    const PER: u64 = 4;
+    b.bench_units("perf/engine_dispatch_wide", (CHAINS * (PER + 1)) as f64, "events", || {
+        let mut e = Engine::new(Spin { left: CHAINS * PER });
+        for i in 0..CHAINS {
+            e.schedule(Time::from_ps(i), ());
+        }
+        e.run()
+    });
+
+    // 3. End-to-end world step at moderate load (the real hot path).
+    let mut cfg = presets::scaleout(32, 256.0, Pattern::C1, 0.6);
+    cfg.warmup_us = 10.0;
+    cfg.measure_us = 10.0;
+    let probe = Sim::new(cfg.clone(), &NativeProvider, BenchMode::None).unwrap().run();
+    b.bench_units("perf/world_32n_c1_60pct", probe.events as f64, "events", || {
+        Sim::new(cfg.clone(), &NativeProvider, BenchMode::None).unwrap().run()
+    });
+
+    // 4. Saturated world (backpressure-heavy path).
+    let mut cfg2 = presets::scaleout(32, 512.0, Pattern::C1, 1.0);
+    cfg2.warmup_us = 10.0;
+    cfg2.measure_us = 10.0;
+    let probe2 = Sim::new(cfg2.clone(), &NativeProvider, BenchMode::None).unwrap().run();
+    b.bench_units("perf/world_32n_c1_saturated", probe2.events as f64, "events", || {
+        Sim::new(cfg2.clone(), &NativeProvider, BenchMode::None).unwrap().run()
+    });
+
+    // 5. World construction cost (128 nodes — allocation path).
+    let cfg3 = presets::scaleout(128, 128.0, Pattern::C3, 0.0);
+    b.bench("perf/world_build_128n", || {
+        Sim::new(cfg3.clone(), &NativeProvider, BenchMode::None).unwrap()
+    });
+
+    // 6. PJRT artifact table build, when artifacts exist.
+    if let Ok(rt) = sauron::runtime::Runtime::load(&sauron::runtime::Runtime::default_dir()) {
+        let p = sauron::analytic::PcieParams::generic_accel_link(512.0);
+        let sizes: Vec<u32> = (1..=1024).map(|i| i * 977).collect();
+        b.bench_units("perf/pjrt_pcie_table_1024", 1024.0, "lat", || {
+            rt.pcie_latency_ns_exec(&p, &sizes).unwrap()
+        });
+    }
+
+    b.append_csv(std::path::Path::new("results/bench_history.csv")).ok();
+}

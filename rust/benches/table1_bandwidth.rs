@@ -1,0 +1,38 @@
+//! Paper Table 1: `ib_write` bandwidth vs message size on the CELLIA
+//! model. Prints the regenerated rows and times the regeneration.
+//!
+//! Run: `cargo bench --bench table1_bandwidth` (SAURON_BENCH_FULL=1 for
+//! all 16 sizes).
+
+mod common;
+
+use sauron::benchkit::Bench;
+use sauron::report::tables;
+use sauron::traffic::ib_bench::{self, TEST_SIZES};
+
+fn main() {
+    let provider = common::provider();
+    let sizes: Vec<u64> = if common::full() {
+        TEST_SIZES.to_vec()
+    } else {
+        vec![128, 4096, 65536, 1 << 20, 4 << 20]
+    };
+
+    // Regenerate the table once for display + correctness.
+    let points: Vec<_> =
+        sizes.iter().map(|&s| ib_bench::bandwidth_test(provider.as_ref(), s).unwrap()).collect();
+    println!("{}", tables::render_table1(&points));
+    let err = tables::geomean_abs_rel_err(
+        &points.iter().map(|p| (p.sim_gib_s, p.paper_gib_s)).collect::<Vec<_>>(),
+    );
+    println!("geomean |rel err| = {:.1}%\n", err * 100.0);
+
+    // Time each row's regeneration.
+    let mut b = Bench::new();
+    for &s in &sizes {
+        b.bench(&format!("table1/bw_test/{s}B"), || {
+            ib_bench::bandwidth_test(provider.as_ref(), s).unwrap()
+        });
+    }
+    b.append_csv(std::path::Path::new("results/bench_history.csv")).ok();
+}

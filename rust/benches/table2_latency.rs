@@ -1,0 +1,35 @@
+//! Paper Table 2: `ib_write` one-way latency vs message size on the
+//! CELLIA model.
+//!
+//! Run: `cargo bench --bench table2_latency`
+
+mod common;
+
+use sauron::benchkit::Bench;
+use sauron::report::tables;
+use sauron::traffic::ib_bench::{self, TEST_SIZES};
+
+fn main() {
+    let provider = common::provider();
+    let sizes: Vec<u64> = if common::full() {
+        TEST_SIZES.to_vec()
+    } else {
+        vec![128, 4096, 65536, 1 << 20, 4 << 20]
+    };
+
+    let points: Vec<_> =
+        sizes.iter().map(|&s| ib_bench::latency_test(provider.as_ref(), s).unwrap()).collect();
+    println!("{}", tables::render_table2(&points));
+    let err = tables::geomean_abs_rel_err(
+        &points.iter().map(|p| (p.sim_us, p.paper_us)).collect::<Vec<_>>(),
+    );
+    println!("geomean |rel err| = {:.1}%\n", err * 100.0);
+
+    let mut b = Bench::new();
+    for &s in &sizes {
+        b.bench(&format!("table2/lat_test/{s}B"), || {
+            ib_bench::latency_test(provider.as_ref(), s).unwrap()
+        });
+    }
+    b.append_csv(std::path::Path::new("results/bench_history.csv")).ok();
+}

@@ -1,0 +1,199 @@
+//! Native mirror of the L1 analytic models.
+//!
+//! Implements, in Rust, exactly the equations the Pallas kernels compute
+//! (paper §3.2 PCIe timing; α-β ring collectives). The test suite asserts
+//! this mirror agrees with the AOT-compiled HLO executed through PJRT, so
+//! the simulator's hot path can consume either source interchangeably (see
+//! [`crate::runtime::Backend`]). The HLO path is the default; this module
+//! is the documented fallback and the cross-check oracle.
+
+
+
+use crate::units::Time;
+
+/// PCIe link/transaction parameters (paper §3.2). Field order mirrors
+/// `python/compile/kernels/ref.PCIE_PARAM_LAYOUT` and the `f32[8]` artifact
+/// input vector.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PcieParams {
+    /// Number of lanes (x1/x4/x8/x16).
+    pub width_lanes: f64,
+    /// Raw per-lane rate in Gbit/s (Gen3: 8, Gen4: 16, Gen5: 32).
+    pub datarate_gbps: f64,
+    /// Line-code efficiency (Gen3+: 128/130).
+    pub encoding: f64,
+    /// Per-TLP framing + header + CRC bytes.
+    pub tlp_overhead_b: f64,
+    /// Max payload size per TLP (bytes).
+    pub mps_b: f64,
+    /// Per-DLLP framing bytes.
+    pub dllp_overhead_b: f64,
+    /// DLLP body bytes.
+    pub dllp_size_b: f64,
+    /// TLPs acknowledged per DLLP ACK.
+    pub ack_factor: f64,
+}
+
+impl PcieParams {
+    /// PCIe Gen3 x`lanes` with the CELLIA cluster's 128 B MPS.
+    pub fn gen3(lanes: u32) -> Self {
+        PcieParams {
+            width_lanes: lanes as f64,
+            datarate_gbps: 8.0,
+            encoding: 128.0 / 130.0,
+            tlp_overhead_b: 24.0,
+            mps_b: 128.0,
+            dllp_overhead_b: 2.0,
+            dllp_size_b: 6.0,
+            ack_factor: 4.0,
+        }
+    }
+
+    /// A generic high-bandwidth accelerator link of `gbps` modelled with
+    /// PCIe-style 128 B transaction framing (paper §4.2.1: the generic
+    /// intra-node model keeps the MPS/TLP structure but scales the rate).
+    pub fn generic_accel_link(gbps: f64) -> Self {
+        PcieParams {
+            width_lanes: 1.0,
+            datarate_gbps: gbps,
+            encoding: 1.0,
+            tlp_overhead_b: 24.0,
+            mps_b: 128.0,
+            dllp_overhead_b: 2.0,
+            dllp_size_b: 6.0,
+            ack_factor: 4.0,
+        }
+    }
+
+    /// Flatten to the `f32[8]` layout consumed by the HLO artifacts.
+    pub fn to_f32_vec(&self) -> Vec<f32> {
+        vec![
+            self.width_lanes as f32,
+            self.datarate_gbps as f32,
+            self.encoding as f32,
+            self.tlp_overhead_b as f32,
+            self.mps_b as f32,
+            self.dllp_overhead_b as f32,
+            self.dllp_size_b as f32,
+            self.ack_factor as f32,
+        ]
+    }
+
+    /// Payload bytes the link moves per nanosecond (before TLP overheads).
+    #[inline]
+    pub fn bytes_per_ns(&self) -> f64 {
+        self.width_lanes * self.datarate_gbps * self.encoding / 8.0
+    }
+
+    /// Effective goodput (payload bytes/ns) for a stream of `msg_b`-byte
+    /// messages, including TLP + ACK overheads.
+    pub fn goodput_bytes_per_ns(&self, msg_b: u64) -> f64 {
+        msg_b as f64 / self.latency_ns(msg_b)
+    }
+
+    /// Paper §3.2 LatencyTime for one message, in nanoseconds.
+    pub fn latency_ns(&self, msg_b: u64) -> f64 {
+        let bytes_per_ns = self.bytes_per_ns();
+        let tlp_time = (self.tlp_overhead_b + self.mps_b) / bytes_per_ns;
+        let dllp_time = (self.dllp_overhead_b + self.dllp_size_b) / bytes_per_ns;
+        let n_tlps = (msg_b as f64 / self.mps_b).ceil();
+        let n_acks = (n_tlps / self.ack_factor).ceil();
+        n_tlps * tlp_time + n_acks * dllp_time
+    }
+
+    /// LatencyTime as integer picoseconds (simulator units).
+    #[inline]
+    pub fn latency(&self, msg_b: u64) -> Time {
+        Time::from_ns(self.latency_ns(msg_b))
+    }
+}
+
+/// α-β parameters for ring-collective estimates. Mirrors
+/// `COLL_PARAM_LAYOUT` / the `f32[3]` artifact input.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CollParams {
+    pub n_devices: f64,
+    pub alpha_ns: f64,
+    pub beta_ns_per_b: f64,
+}
+
+impl CollParams {
+    pub fn to_f32_vec(&self) -> Vec<f32> {
+        vec![self.n_devices as f32, self.alpha_ns as f32, self.beta_ns_per_b as f32]
+    }
+
+    /// Ring AllReduce completion (ns): 2(n-1) steps of size/n bytes.
+    pub fn allreduce_ns(&self, size_b: f64) -> f64 {
+        let n = self.n_devices;
+        2.0 * (n - 1.0) * self.alpha_ns + 2.0 * (n - 1.0) / n * size_b * self.beta_ns_per_b
+    }
+
+    /// Ring AllGather completion (ns).
+    pub fn allgather_ns(&self, size_b: f64) -> f64 {
+        let n = self.n_devices;
+        (n - 1.0) * self.alpha_ns + (n - 1.0) / n * size_b * self.beta_ns_per_b
+    }
+
+    /// Point-to-point transfer (ns).
+    pub fn p2p_ns(&self, size_b: f64) -> f64 {
+        self.alpha_ns + size_b * self.beta_ns_per_b
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gen3_x16_rates() {
+        let p = PcieParams::gen3(16);
+        // 16 lanes * 8 Gbps * 128/130 / 8 = 15.75 B/ns.
+        assert!((p.bytes_per_ns() - 15.753846).abs() < 1e-5);
+    }
+
+    #[test]
+    fn latency_matches_hand_computation() {
+        let p = PcieParams::gen3(16);
+        // 4096 B -> 32 TLPs, 8 ACKs.
+        let bpn = p.bytes_per_ns();
+        let want = 32.0 * (24.0 + 128.0) / bpn + 8.0 * 8.0 / bpn;
+        assert!((p.latency_ns(4096) - want).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sub_mps_messages_cost_one_tlp() {
+        let p = PcieParams::gen3(16);
+        assert_eq!(p.latency_ns(1), p.latency_ns(128));
+        assert!(p.latency_ns(129) > p.latency_ns(128));
+    }
+
+    #[test]
+    fn latency_monotone_nondecreasing() {
+        let p = PcieParams::gen3(8);
+        let mut last = 0.0;
+        for sz in (1..=4 * 1024 * 1024u64).step_by(7919) {
+            let l = p.latency_ns(sz);
+            assert!(l >= last);
+            last = l;
+        }
+    }
+
+    #[test]
+    fn goodput_approaches_efficiency_bound() {
+        let p = PcieParams::gen3(16);
+        // For large messages, goodput -> bytes_per_ns * mps/(mps+ovh) (ACKs
+        // amortised): 15.75 * 128/152 ~ 13.27, minus ACK share.
+        let g = p.goodput_bytes_per_ns(4 * 1024 * 1024);
+        assert!(g > 12.5 && g < p.bytes_per_ns(), "goodput {g}");
+    }
+
+    #[test]
+    fn collective_identities() {
+        let c = CollParams { n_devices: 8.0, alpha_ns: 500.0, beta_ns_per_b: 0.01 };
+        let s = 1_000_000.0;
+        assert!((c.allreduce_ns(s) - 2.0 * c.allgather_ns(s)).abs() < 1e-6);
+        assert!((c.p2p_ns(0.0) - 500.0).abs() < 1e-12);
+        let one = CollParams { n_devices: 1.0, ..c };
+        assert_eq!(one.allreduce_ns(s), 0.0);
+    }
+}

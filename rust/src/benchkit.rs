@@ -1,0 +1,249 @@
+//! Minimal criterion-style benchmark harness (the build image ships no
+//! criterion).
+//!
+//! Bench binaries (`harness = false`) build a [`Bench`], register timed
+//! closures, and get per-benchmark wall-clock statistics (mean ± stddev,
+//! min, iterations) printed in a stable, grep-friendly format. Each
+//! benchmark is auto-calibrated to a target measurement time and warmed
+//! up first. Results can also be appended to a CSV for the EXPERIMENTS.md
+//! perf log.
+
+use std::io::Write;
+use std::time::{Duration, Instant};
+
+/// One benchmark's measurement.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: u64,
+    pub mean: Duration,
+    pub stddev: Duration,
+    pub min: Duration,
+    pub max: Duration,
+    /// Optional throughput annotation: (units_per_iter, unit label).
+    pub throughput: Option<(f64, &'static str)>,
+}
+
+impl Measurement {
+    pub fn per_second(&self) -> Option<f64> {
+        self.throughput.map(|(units, _)| units / self.mean.as_secs_f64())
+    }
+
+    pub fn render(&self) -> String {
+        let mut s = format!(
+            "bench {:<44} {:>12} ± {:>10}  (min {:>12}, {} iters)",
+            self.name,
+            fmt_dur(self.mean),
+            fmt_dur(self.stddev),
+            fmt_dur(self.min),
+            self.iters,
+        );
+        if let Some((units, label)) = self.throughput {
+            let rate = units / self.mean.as_secs_f64();
+            s.push_str(&format!("  [{} {label}/s]", fmt_rate(rate)));
+        }
+        s
+    }
+}
+
+fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos() as f64;
+    if ns >= 1e9 {
+        format!("{:.3} s", ns / 1e9)
+    } else if ns >= 1e6 {
+        format!("{:.3} ms", ns / 1e6)
+    } else if ns >= 1e3 {
+        format!("{:.3} us", ns / 1e3)
+    } else {
+        format!("{ns:.0} ns")
+    }
+}
+
+fn fmt_rate(r: f64) -> String {
+    if r >= 1e9 {
+        format!("{:.2}G", r / 1e9)
+    } else if r >= 1e6 {
+        format!("{:.2}M", r / 1e6)
+    } else if r >= 1e3 {
+        format!("{:.2}k", r / 1e3)
+    } else {
+        format!("{r:.2}")
+    }
+}
+
+/// Harness configuration + result sink.
+pub struct Bench {
+    /// Target total measurement time per benchmark.
+    pub measure_time: Duration,
+    /// Warm-up time per benchmark.
+    pub warmup_time: Duration,
+    /// Max sample iterations (cap for very slow benchmarks).
+    pub max_iters: u64,
+    pub results: Vec<Measurement>,
+}
+
+impl Bench {
+    pub fn new() -> Bench {
+        // Heavy end-to-end simulations: keep bench budgets modest; override
+        // with SAURON_BENCH_MS / SAURON_BENCH_FAST env vars.
+        let ms = std::env::var("SAURON_BENCH_MS").ok().and_then(|v| v.parse().ok()).unwrap_or(
+            if std::env::var("SAURON_BENCH_FAST").is_ok() { 200u64 } else { 1_000 },
+        );
+        Bench {
+            measure_time: Duration::from_millis(ms),
+            warmup_time: Duration::from_millis(ms / 4),
+            max_iters: 1_000_000,
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f`, auto-calibrating iteration count. The closure's return
+    /// value is black-boxed so the optimizer cannot delete the work.
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &Measurement {
+        self.bench_with_throughput(name, None, move || {
+            let v = f();
+            std::hint::black_box(&v);
+        })
+    }
+
+    /// Like [`bench`] but annotates units/iteration (e.g. simulated events).
+    pub fn bench_units<T>(
+        &mut self,
+        name: &str,
+        units_per_iter: f64,
+        label: &'static str,
+        mut f: impl FnMut() -> T,
+    ) -> &Measurement {
+        self.bench_with_throughput(name, Some((units_per_iter, label)), move || {
+            let v = f();
+            std::hint::black_box(&v);
+        })
+    }
+
+    fn bench_with_throughput(
+        &mut self,
+        name: &str,
+        throughput: Option<(f64, &'static str)>,
+        mut f: impl FnMut(),
+    ) -> &Measurement {
+        // Warm-up + calibration: run once to estimate.
+        let t0 = Instant::now();
+        f();
+        let first = t0.elapsed().max(Duration::from_nanos(50));
+        let mut warm_done = first;
+        while warm_done < self.warmup_time {
+            f();
+            warm_done += first;
+        }
+        // Sample loop: individual timings for stddev.
+        let mut samples: Vec<f64> = Vec::new();
+        let deadline = Instant::now() + self.measure_time;
+        let mut iters = 0u64;
+        while Instant::now() < deadline && iters < self.max_iters {
+            let s = Instant::now();
+            f();
+            samples.push(s.elapsed().as_secs_f64());
+            iters += 1;
+        }
+        let n = samples.len() as f64;
+        let mean = samples.iter().sum::<f64>() / n;
+        let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / n.max(1.0);
+        let m = Measurement {
+            name: name.to_string(),
+            iters,
+            mean: Duration::from_secs_f64(mean),
+            stddev: Duration::from_secs_f64(var.sqrt()),
+            min: Duration::from_secs_f64(samples.iter().copied().fold(f64::MAX, f64::min)),
+            max: Duration::from_secs_f64(samples.iter().copied().fold(0.0, f64::max)),
+            throughput,
+        };
+        println!("{}", m.render());
+        self.results.push(m);
+        self.results.last().unwrap()
+    }
+
+    /// Append results to a CSV (created with header if absent).
+    pub fn append_csv(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        let existed = path.exists();
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+        if !existed {
+            writeln!(f, "name,iters,mean_ns,stddev_ns,min_ns,rate_per_s")?;
+        }
+        for m in &self.results {
+            writeln!(
+                f,
+                "{},{},{},{},{},{}",
+                m.name,
+                m.iters,
+                m.mean.as_nanos(),
+                m.stddev.as_nanos(),
+                m.min.as_nanos(),
+                m.per_second().map(|r| format!("{r:.1}")).unwrap_or_default()
+            )?;
+        }
+        Ok(())
+    }
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fast_bench() -> Bench {
+        Bench {
+            measure_time: Duration::from_millis(20),
+            warmup_time: Duration::from_millis(2),
+            max_iters: 10_000,
+            results: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn measures_something_positive() {
+        let mut b = fast_bench();
+        let m = b.bench("spin", || (0..1000u64).sum::<u64>());
+        assert!(m.iters > 0);
+        assert!(m.mean.as_nanos() > 0);
+        assert!(m.min <= m.mean && m.mean <= m.max + m.stddev * 3);
+    }
+
+    #[test]
+    fn throughput_annotation() {
+        let mut b = fast_bench();
+        let m = b.bench_units("events", 1000.0, "ev", || (0..1000u64).sum::<u64>());
+        let rate = m.per_second().unwrap();
+        assert!(rate > 0.0);
+        assert!(m.render().contains("ev/s"));
+    }
+
+    #[test]
+    fn csv_appends() {
+        let dir = std::env::temp_dir().join("sauron_benchkit_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bench.csv");
+        std::fs::remove_file(&path).ok();
+        let mut b = fast_bench();
+        b.bench("a", || 1 + 1);
+        b.append_csv(&path).unwrap();
+        b.append_csv(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 3); // header + 2 appends
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert_eq!(fmt_dur(Duration::from_nanos(500)), "500 ns");
+        assert_eq!(fmt_dur(Duration::from_micros(1500)), "1.500 ms");
+        assert!(fmt_rate(2_500_000.0).contains('M'));
+    }
+}

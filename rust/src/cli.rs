@@ -1,0 +1,172 @@
+//! Tiny CLI argument parser (the build image has no clap).
+//!
+//! Supports the subset the `sauron` binary needs: a subcommand followed by
+//! `--flag`, `--key value` and `--key=value` options, with typed accessors,
+//! defaults, list parsing (`--intra 128,256,512`) and unknown-option
+//! detection.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: subcommand + options + positionals.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    opts: BTreeMap<String, Vec<String>>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+    consumed: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> anyhow::Result<Args> {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.opts.entry(k.to_string()).or_default().push(v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.opts.entry(name.to_string()).or_default().push(v);
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else if out.subcommand.is_none() && out.positional.is_empty() {
+                out.subcommand = Some(arg);
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> anyhow::Result<Args> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    fn mark(&self, key: &str) {
+        self.consumed.borrow_mut().push(key.to_string());
+    }
+
+    /// Boolean flag (`--quick`).
+    pub fn flag(&self, key: &str) -> bool {
+        self.mark(key);
+        self.flags.iter().any(|f| f == key)
+    }
+
+    /// Last occurrence of `--key value` as a raw string.
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.mark(key);
+        self.opts.get(key).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    pub fn opt_parse<T: std::str::FromStr>(&self, key: &str) -> anyhow::Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.opt(key) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<T>()
+                .map(Some)
+                .map_err(|e| anyhow::anyhow!("invalid --{key} '{s}': {e}")),
+        }
+    }
+
+    pub fn get_or<T: std::str::FromStr>(&self, key: &str, default: T) -> anyhow::Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        Ok(self.opt_parse(key)?.unwrap_or(default))
+    }
+
+    /// Comma-separated list (`--intra 128,256,512`); repeated options
+    /// concatenate.
+    pub fn list<T: std::str::FromStr>(&self, key: &str) -> anyhow::Result<Vec<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        self.mark(key);
+        let mut out = Vec::new();
+        if let Some(vals) = self.opts.get(key) {
+            for v in vals {
+                for part in v.split(',').filter(|p| !p.is_empty()) {
+                    out.push(
+                        part.parse::<T>()
+                            .map_err(|e| anyhow::anyhow!("invalid --{key} item '{part}': {e}"))?,
+                    );
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Error on options/flags that were never consumed (typo protection).
+    /// Call after all accessors.
+    pub fn reject_unknown(&self) -> anyhow::Result<()> {
+        let consumed = self.consumed.borrow();
+        for k in self.opts.keys().chain(self.flags.iter()) {
+            if !consumed.iter().any(|c| c == k) {
+                anyhow::bail!("unknown option --{k} (see `sauron help`)");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("sweep --nodes 128 --quick --out results");
+        assert_eq!(a.subcommand.as_deref(), Some("sweep"));
+        assert_eq!(a.get_or("nodes", 32usize).unwrap(), 128);
+        assert!(a.flag("quick"));
+        assert_eq!(a.opt("out"), Some("results"));
+    }
+
+    #[test]
+    fn equals_form_and_lists() {
+        let a = parse("sweep --intra=128,256 --intra 512");
+        assert_eq!(a.list::<f64>("intra").unwrap(), vec![128.0, 256.0, 512.0]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("validate");
+        assert_eq!(a.get_or("loads", 20usize).unwrap(), 20);
+        assert!(!a.flag("json"));
+        assert!(a.list::<u64>("sizes").unwrap().is_empty());
+    }
+
+    #[test]
+    fn bad_values_error() {
+        let a = parse("run --loads abc");
+        assert!(a.get_or("loads", 20usize).is_err());
+    }
+
+    #[test]
+    fn unknown_options_rejected() {
+        let a = parse("sweep --nodez 12");
+        let _ = a.get_or("nodes", 32usize).unwrap();
+        assert!(a.reject_unknown().is_err());
+        let b = parse("sweep --nodes 12");
+        let _ = b.get_or("nodes", 32usize).unwrap();
+        assert!(b.reject_unknown().is_ok());
+    }
+
+    #[test]
+    fn positionals_after_subcommand() {
+        let a = parse("run config.json --json");
+        assert_eq!(a.subcommand.as_deref(), Some("run"));
+        assert_eq!(a.positional, vec!["config.json"]);
+        assert!(a.flag("json"));
+    }
+}

@@ -1,0 +1,487 @@
+//! Simulation configuration: JSON-backed structs (via the in-tree
+//! `serial::json` substrate) and the paper's experiment presets.
+//!
+//! Every experiment in EXPERIMENTS.md is fully described by a [`SimConfig`];
+//! presets in [`presets`] build the paper's configurations (CELLIA
+//! validation node, 32/128-node RLFT scale-out with 128/256/512 GB/s
+//! intra-node networks, traffic patterns C1–C5).
+
+pub mod presets;
+
+use crate::serial::json::{FromJson, ToJson, Value};
+
+use crate::analytic::PcieParams;
+use crate::units::{Gbps, KIB};
+
+/// Traffic patterns from the paper (§3.4): the fraction of generated
+/// traffic addressed to remote nodes.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Pattern {
+    /// TP-heavy model parallelism: 20% inter-node.
+    C1,
+    /// MP leaning on PP: 15% inter.
+    C2,
+    /// MP leaning further on PP: 10% inter.
+    C3,
+    /// Pure PP model parallelism: 5% inter.
+    C4,
+    /// Data parallelism only, model fits one accelerator: 0% inter.
+    C5,
+    /// Arbitrary split (for ablations / LLM-model-derived mixes).
+    Custom { frac_inter: f64 },
+}
+
+impl Pattern {
+    /// Fraction of generated messages addressed to a different node.
+    pub fn frac_inter(self) -> f64 {
+        match self {
+            Pattern::C1 => 0.20,
+            Pattern::C2 => 0.15,
+            Pattern::C3 => 0.10,
+            Pattern::C4 => 0.05,
+            Pattern::C5 => 0.0,
+            Pattern::Custom { frac_inter } => frac_inter,
+        }
+    }
+
+    pub fn name(self) -> String {
+        match self {
+            Pattern::C1 => "C1".into(),
+            Pattern::C2 => "C2".into(),
+            Pattern::C3 => "C3".into(),
+            Pattern::C4 => "C4".into(),
+            Pattern::C5 => "C5".into(),
+            Pattern::Custom { frac_inter } => format!("Custom({frac_inter:.3})"),
+        }
+    }
+
+    pub const PAPER: [Pattern; 5] =
+        [Pattern::C1, Pattern::C2, Pattern::C3, Pattern::C4, Pattern::C5];
+}
+
+/// Message inter-arrival process at each generator.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Arrival {
+    /// Poisson process (exponential inter-arrivals) — default.
+    Poisson,
+    /// Deterministic (fixed-rate) arrivals.
+    Deterministic,
+}
+
+/// Per-end-node configuration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NodeConfig {
+    /// Accelerators (traffic endpoints) per node.
+    pub accels_per_node: usize,
+    /// PCIe-style transaction parameters of each accelerator link into the
+    /// intra-node switch (rate, MPS, TLP/DLLP overheads, AckFactor).
+    pub accel_link: PcieParams,
+    /// Intra-node packetisation unit: messages are segmented into
+    /// `mps_b`-payload transactions by `accel_link`; this is implied by
+    /// `accel_link.mps_b` and kept there.
+    ///
+    /// Model the paper's CELLIA root-complex path (`EP1→RC→CPU→RC→EP2`):
+    /// device-to-device intra traffic pays both intra hops twice.
+    pub rc_cpu_bounce: bool,
+    /// Egress queue capacity at each accelerator (bytes).
+    pub accel_queue_b: u64,
+    /// Intra switch output-port queue capacity (bytes).
+    pub switch_queue_b: u64,
+    /// NIC configuration.
+    pub nic: NicConfig,
+}
+
+/// NIC between the intra-node switch and the inter-node network.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NicConfig {
+    /// Inter-node link rate (both directions).
+    pub inter_gbps: f64,
+    /// Intra-side rate of the switch<->NIC links. Usually matches the
+    /// inter link (paper: "the bandwidth between this switch and the
+    /// end-node NIC" is configurable).
+    pub intra_side_gbps: f64,
+    /// Inter-node MTU (bytes, wire size incl. header).
+    pub mtu_b: u64,
+    /// Inter-node packet header (bytes). Payload per packet = mtu - header.
+    pub header_b: u64,
+    /// Egress buffer (intra->inter staging, bytes). The paper's critical
+    /// bottleneck lives here.
+    pub egress_buf_b: u64,
+    /// Ingress buffer (inter->intra staging, bytes).
+    pub ingress_buf_b: u64,
+    /// Fixed per-message processing overhead at the NIC (WQE handling,
+    /// doorbell, DMA setup) in ns — calibrated against Table 1 small-message
+    /// rates.
+    pub per_msg_ns: f64,
+}
+
+/// Inter-node network configuration (RLFT 2-level fat-tree).
+#[derive(Clone, Debug, PartialEq)]
+pub struct InterConfig {
+    /// Number of end nodes.
+    pub nodes: usize,
+    /// Leaf switches (each connects `nodes/leaves` nodes).
+    pub leaves: usize,
+    /// Spine switches (each leaf has one up-link per spine).
+    pub spines: usize,
+    /// Link rate everywhere in the inter network.
+    pub link_gbps: f64,
+    /// Per-hop first-flit latency (ns) — paper: 6 ns, VCT switching.
+    pub hop_latency_ns: f64,
+    /// Output-port buffer per inter switch port (bytes) — credit-based FC.
+    pub port_buf_b: u64,
+}
+
+impl InterConfig {
+    pub fn nodes_per_leaf(&self) -> usize {
+        self.nodes / self.leaves
+    }
+    pub fn total_switches(&self) -> usize {
+        self.leaves + self.spines
+    }
+}
+
+/// Traffic generation configuration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TrafficConfig {
+    pub pattern: Pattern,
+    /// Message size generated at accelerators (paper: 4 KiB).
+    pub msg_size_b: u64,
+    /// Offered load as a fraction of each accelerator link's capacity
+    /// (0.0–1.0).
+    pub load: f64,
+    pub arrival: Arrival,
+}
+
+/// Full simulation configuration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SimConfig {
+    pub seed: u64,
+    /// Warm-up window (metrics ignored), µs. Paper: 2500 µs.
+    pub warmup_us: f64,
+    /// Measurement window, µs. Paper: 500 µs.
+    pub measure_us: f64,
+    pub node: NodeConfig,
+    pub inter: InterConfig,
+    pub traffic: TrafficConfig,
+}
+
+impl SimConfig {
+    pub fn from_json_str(text: &str) -> anyhow::Result<SimConfig> {
+        SimConfig::from_json(&Value::parse(text)?)
+    }
+
+    pub fn to_json_string(&self) -> String {
+        self.to_json().pretty()
+    }
+
+    pub fn load(path: &std::path::Path) -> anyhow::Result<SimConfig> {
+        SimConfig::from_json_str(&std::fs::read_to_string(path)?)
+    }
+
+    /// Structural sanity checks; returns a description of the first problem.
+    pub fn validate(&self) -> Result<(), String> {
+        let n = &self.node;
+        if n.accels_per_node == 0 {
+            return Err("accels_per_node must be > 0".into());
+        }
+        if self.inter.nodes < 2 {
+            return Err("need at least 2 nodes".into());
+        }
+        if self.inter.leaves == 0 || self.inter.nodes % self.inter.leaves != 0 {
+            return Err(format!(
+                "nodes ({}) must divide evenly across leaves ({})",
+                self.inter.nodes, self.inter.leaves
+            ));
+        }
+        if self.inter.spines == 0 {
+            return Err("need at least 1 spine".into());
+        }
+        if n.nic.mtu_b <= n.nic.header_b {
+            return Err("MTU must exceed header".into());
+        }
+        if !(0.0..=1.0).contains(&self.traffic.load) {
+            return Err(format!("load {} outside [0,1]", self.traffic.load));
+        }
+        if !(0.0..=1.0).contains(&self.traffic.pattern.frac_inter()) {
+            return Err("frac_inter outside [0,1]".into());
+        }
+        if self.traffic.msg_size_b == 0 {
+            return Err("msg_size_b must be > 0".into());
+        }
+        if n.accel_link.mps_b <= 0.0 || n.accel_link.datarate_gbps <= 0.0 {
+            return Err("accel link parameters must be positive".into());
+        }
+        if self.measure_us <= 0.0 {
+            return Err("measure window must be positive".into());
+        }
+        Ok(())
+    }
+
+    /// Aggregated intra-node bandwidth across all accelerators of one node
+    /// (the paper's 128/256/512 GB/s knob), in GB/s.
+    pub fn aggregated_intra_gbs(&self) -> f64 {
+        self.node.accels_per_node as f64
+            * Gbps(self.node.accel_link.datarate_gbps * self.node.accel_link.width_lanes)
+                .gb_per_s()
+    }
+}
+
+/// Reasonable default buffer sizes used by presets.
+pub const DEFAULT_ACCEL_QUEUE: u64 = 256 * KIB;
+pub const DEFAULT_SWITCH_QUEUE: u64 = 256 * KIB;
+pub const DEFAULT_NIC_BUF: u64 = MIB_;
+pub const DEFAULT_PORT_BUF: u64 = 256 * KIB;
+const MIB_: u64 = 1024 * 1024;
+
+// ---------------------------------------------------------------------------
+// JSON serialization (hand-written; see serial::json).
+// ---------------------------------------------------------------------------
+
+impl ToJson for Pattern {
+    fn to_json(&self) -> Value {
+        match self {
+            Pattern::Custom { frac_inter } => {
+                Value::obj().with("custom_frac_inter", *frac_inter)
+            }
+            p => Value::Str(p.name()),
+        }
+    }
+}
+
+impl FromJson for Pattern {
+    fn from_json(v: &Value) -> anyhow::Result<Pattern> {
+        match v {
+            Value::Str(s) => match s.as_str() {
+                "C1" => Ok(Pattern::C1),
+                "C2" => Ok(Pattern::C2),
+                "C3" => Ok(Pattern::C3),
+                "C4" => Ok(Pattern::C4),
+                "C5" => Ok(Pattern::C5),
+                other => anyhow::bail!("unknown pattern '{other}'"),
+            },
+            Value::Obj(_) => Ok(Pattern::Custom { frac_inter: v.f64_of("custom_frac_inter")? }),
+            other => anyhow::bail!("bad pattern value {other:?}"),
+        }
+    }
+}
+
+impl ToJson for Arrival {
+    fn to_json(&self) -> Value {
+        Value::Str(
+            match self {
+                Arrival::Poisson => "poisson",
+                Arrival::Deterministic => "deterministic",
+            }
+            .into(),
+        )
+    }
+}
+
+impl FromJson for Arrival {
+    fn from_json(v: &Value) -> anyhow::Result<Arrival> {
+        match v.as_str()? {
+            "poisson" => Ok(Arrival::Poisson),
+            "deterministic" => Ok(Arrival::Deterministic),
+            other => anyhow::bail!("unknown arrival process '{other}'"),
+        }
+    }
+}
+
+impl ToJson for PcieParams {
+    fn to_json(&self) -> Value {
+        Value::obj()
+            .with("width_lanes", self.width_lanes)
+            .with("datarate_gbps", self.datarate_gbps)
+            .with("encoding", self.encoding)
+            .with("tlp_overhead_b", self.tlp_overhead_b)
+            .with("mps_b", self.mps_b)
+            .with("dllp_overhead_b", self.dllp_overhead_b)
+            .with("dllp_size_b", self.dllp_size_b)
+            .with("ack_factor", self.ack_factor)
+    }
+}
+
+impl FromJson for PcieParams {
+    fn from_json(v: &Value) -> anyhow::Result<PcieParams> {
+        Ok(PcieParams {
+            width_lanes: v.f64_of("width_lanes")?,
+            datarate_gbps: v.f64_of("datarate_gbps")?,
+            encoding: v.f64_of("encoding")?,
+            tlp_overhead_b: v.f64_of("tlp_overhead_b")?,
+            mps_b: v.f64_of("mps_b")?,
+            dllp_overhead_b: v.f64_of("dllp_overhead_b")?,
+            dllp_size_b: v.f64_of("dllp_size_b")?,
+            ack_factor: v.f64_of("ack_factor")?,
+        })
+    }
+}
+
+impl ToJson for NicConfig {
+    fn to_json(&self) -> Value {
+        Value::obj()
+            .with("inter_gbps", self.inter_gbps)
+            .with("intra_side_gbps", self.intra_side_gbps)
+            .with("mtu_b", self.mtu_b)
+            .with("header_b", self.header_b)
+            .with("egress_buf_b", self.egress_buf_b)
+            .with("ingress_buf_b", self.ingress_buf_b)
+            .with("per_msg_ns", self.per_msg_ns)
+    }
+}
+
+impl FromJson for NicConfig {
+    fn from_json(v: &Value) -> anyhow::Result<NicConfig> {
+        Ok(NicConfig {
+            inter_gbps: v.f64_of("inter_gbps")?,
+            intra_side_gbps: v.f64_of("intra_side_gbps")?,
+            mtu_b: v.u64_of("mtu_b")?,
+            header_b: v.u64_of("header_b")?,
+            egress_buf_b: v.u64_of("egress_buf_b")?,
+            ingress_buf_b: v.u64_of("ingress_buf_b")?,
+            per_msg_ns: v.f64_of("per_msg_ns")?,
+        })
+    }
+}
+
+impl ToJson for NodeConfig {
+    fn to_json(&self) -> Value {
+        Value::obj()
+            .with("accels_per_node", self.accels_per_node)
+            .with("accel_link", self.accel_link.to_json())
+            .with("rc_cpu_bounce", self.rc_cpu_bounce)
+            .with("accel_queue_b", self.accel_queue_b)
+            .with("switch_queue_b", self.switch_queue_b)
+            .with("nic", self.nic.to_json())
+    }
+}
+
+impl FromJson for NodeConfig {
+    fn from_json(v: &Value) -> anyhow::Result<NodeConfig> {
+        Ok(NodeConfig {
+            accels_per_node: v.usize_of("accels_per_node")?,
+            accel_link: PcieParams::from_json(v.req("accel_link")?)?,
+            rc_cpu_bounce: v.bool_of("rc_cpu_bounce")?,
+            accel_queue_b: v.u64_of("accel_queue_b")?,
+            switch_queue_b: v.u64_of("switch_queue_b")?,
+            nic: NicConfig::from_json(v.req("nic")?)?,
+        })
+    }
+}
+
+impl ToJson for InterConfig {
+    fn to_json(&self) -> Value {
+        Value::obj()
+            .with("nodes", self.nodes)
+            .with("leaves", self.leaves)
+            .with("spines", self.spines)
+            .with("link_gbps", self.link_gbps)
+            .with("hop_latency_ns", self.hop_latency_ns)
+            .with("port_buf_b", self.port_buf_b)
+    }
+}
+
+impl FromJson for InterConfig {
+    fn from_json(v: &Value) -> anyhow::Result<InterConfig> {
+        Ok(InterConfig {
+            nodes: v.usize_of("nodes")?,
+            leaves: v.usize_of("leaves")?,
+            spines: v.usize_of("spines")?,
+            link_gbps: v.f64_of("link_gbps")?,
+            hop_latency_ns: v.f64_of("hop_latency_ns")?,
+            port_buf_b: v.u64_of("port_buf_b")?,
+        })
+    }
+}
+
+impl ToJson for TrafficConfig {
+    fn to_json(&self) -> Value {
+        Value::obj()
+            .with("pattern", self.pattern.to_json())
+            .with("msg_size_b", self.msg_size_b)
+            .with("load", self.load)
+            .with("arrival", self.arrival.to_json())
+    }
+}
+
+impl FromJson for TrafficConfig {
+    fn from_json(v: &Value) -> anyhow::Result<TrafficConfig> {
+        Ok(TrafficConfig {
+            pattern: Pattern::from_json(v.req("pattern")?)?,
+            msg_size_b: v.u64_of("msg_size_b")?,
+            load: v.f64_of("load")?,
+            arrival: Arrival::from_json(v.req("arrival")?)?,
+        })
+    }
+}
+
+impl ToJson for SimConfig {
+    fn to_json(&self) -> Value {
+        Value::obj()
+            .with("seed", self.seed)
+            .with("warmup_us", self.warmup_us)
+            .with("measure_us", self.measure_us)
+            .with("node", self.node.to_json())
+            .with("inter", self.inter.to_json())
+            .with("traffic", self.traffic.to_json())
+    }
+}
+
+impl FromJson for SimConfig {
+    fn from_json(v: &Value) -> anyhow::Result<SimConfig> {
+        Ok(SimConfig {
+            seed: v.u64_of("seed")?,
+            warmup_us: v.f64_of("warmup_us")?,
+            measure_us: v.f64_of("measure_us")?,
+            node: NodeConfig::from_json(v.req("node")?)?,
+            inter: InterConfig::from_json(v.req("inter")?)?,
+            traffic: TrafficConfig::from_json(v.req("traffic")?)?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use presets::*;
+
+    #[test]
+    fn pattern_fracs_match_paper() {
+        let fracs: Vec<f64> = Pattern::PAPER.iter().map(|p| p.frac_inter()).collect();
+        assert_eq!(fracs, vec![0.20, 0.15, 0.10, 0.05, 0.0]);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let cfg = scaleout(32, 256.0, Pattern::C2, 0.5);
+        let text = cfg.to_json_string();
+        let back = SimConfig::from_json_str(&text).unwrap();
+        assert_eq!(cfg, back);
+        // custom pattern too
+        let cfg2 = scaleout(32, 128.0, Pattern::Custom { frac_inter: 0.37 }, 0.1);
+        let back2 = SimConfig::from_json_str(&cfg2.to_json_string()).unwrap();
+        assert_eq!(cfg2, back2);
+    }
+
+    #[test]
+    fn validation_catches_bad_configs() {
+        let mut cfg = scaleout(32, 128.0, Pattern::C1, 0.5);
+        assert!(cfg.validate().is_ok());
+        cfg.traffic.load = 1.5;
+        assert!(cfg.validate().is_err());
+        cfg.traffic.load = 0.5;
+        cfg.inter.leaves = 7; // 32 % 7 != 0
+        assert!(cfg.validate().is_err());
+        cfg.inter.leaves = 8;
+        cfg.node.nic.header_b = cfg.node.nic.mtu_b;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn aggregated_bandwidth_matches_paper_knob() {
+        for gbs in [128.0, 256.0, 512.0] {
+            let cfg = scaleout(32, gbs, Pattern::C5, 0.1);
+            assert!((cfg.aggregated_intra_gbs() - gbs).abs() < 1e-9);
+        }
+    }
+}

@@ -1,0 +1,167 @@
+//! Paper experiment presets.
+
+use super::*;
+use crate::units::MIB;
+
+/// CELLIA validation end-node (paper §3.1/§3.2): PCIe Gen3, MPS 128 B,
+/// InfiniBand EDR 100 Gbps HCA, 4 KiB MTU with 60 B headers.
+///
+/// The "accelerator" is the host CPU endpoint; its link into the root
+/// complex is modelled as a fast raw link (on-package), while the
+/// RC→HCA x16 Gen3 segment carries the §3.2 TLP/DLLP timing. Two nodes
+/// hang off one leaf switch (back-to-back through the EDR switch).
+pub fn cellia() -> SimConfig {
+    SimConfig {
+        seed: 0xCE111A,
+        warmup_us: 20.0,
+        measure_us: 80.0,
+        node: NodeConfig {
+            accels_per_node: 1,
+            accel_link: PcieParams::gen3(16),
+            rc_cpu_bounce: true,
+            accel_queue_b: 4 * MIB,
+            switch_queue_b: MIB,
+            nic: NicConfig {
+                inter_gbps: 100.0, // InfiniBand EDR
+                intra_side_gbps: 126.0, // PCIe Gen3 x16 effective
+                mtu_b: 4096,
+                header_b: 60,
+                egress_buf_b: MIB,
+                ingress_buf_b: MIB,
+                per_msg_ns: 270.0, // calibrated vs Table 1 small-message rate
+            },
+        },
+        inter: InterConfig {
+            nodes: 2,
+            leaves: 1,
+            spines: 1,
+            link_gbps: 100.0,
+            hop_latency_ns: 130.0, // EDR switch + cable port-to-port
+            port_buf_b: MIB,
+        },
+        traffic: TrafficConfig {
+            pattern: Pattern::Custom { frac_inter: 1.0 },
+            msg_size_b: 4096,
+            load: 0.0, // ib_bench drives injection, not the open-loop generator
+            arrival: Arrival::Poisson,
+        },
+    }
+}
+
+/// RLFT sizing used by the paper (Table 3): 32 nodes -> 8 leaves + 4
+/// spines (12 switches); 128 nodes -> 16 leaves + 8 spines (24 switches).
+pub fn rlft_dims(nodes: usize) -> (usize, usize) {
+    // nodes_per_leaf = 2^floor(log2(sqrt(nodes))); spines = nodes_per_leaf.
+    let npl = {
+        let mut npl = 1usize;
+        while (npl * 2) * (npl * 2) <= nodes {
+            npl *= 2;
+        }
+        npl
+    };
+    let leaves = nodes / npl;
+    (leaves, npl)
+}
+
+/// Scale-out experiment node+network (paper §4.2.1): 8 accelerators per
+/// node, per-accelerator intra links of `aggregated_gbs / 8` GB/s with
+/// 128 B transaction framing, 400 Gbps inter-node RLFT.
+///
+/// `aggregated_gbs` is the paper's knob: 128, 256 or 512 GB/s.
+pub fn scaleout(nodes: usize, aggregated_gbs: f64, pattern: Pattern, load: f64) -> SimConfig {
+    let accels = 8usize;
+    let per_accel_gbps = aggregated_gbs * 8.0 / accels as f64; // GB/s -> Gbps
+    let (leaves, spines) = rlft_dims(nodes);
+    SimConfig {
+        seed: 0x5CA1E,
+        // Paper windows are 2500 + 500 µs; defaults here are scaled down
+        // ~20x for single-core tractability (see DESIGN.md). Sweep drivers
+        // can restore the paper windows with --paper-windows.
+        warmup_us: 100.0,
+        measure_us: 50.0,
+        node: NodeConfig {
+            accels_per_node: accels,
+            accel_link: PcieParams::generic_accel_link(per_accel_gbps),
+            rc_cpu_bounce: false, // modern intra switch, no RC/CPU bounce
+            accel_queue_b: DEFAULT_ACCEL_QUEUE,
+            switch_queue_b: DEFAULT_SWITCH_QUEUE,
+            nic: NicConfig {
+                inter_gbps: 400.0,
+                intra_side_gbps: 400.0,
+                mtu_b: 4096,
+                header_b: 60,
+                egress_buf_b: DEFAULT_NIC_BUF,
+                ingress_buf_b: DEFAULT_NIC_BUF,
+                per_msg_ns: 20.0,
+            },
+        },
+        inter: InterConfig {
+            nodes,
+            leaves,
+            spines,
+            link_gbps: 400.0,
+            hop_latency_ns: 6.0, // paper: first-flit latency
+            port_buf_b: DEFAULT_PORT_BUF,
+        },
+        traffic: TrafficConfig { pattern, msg_size_b: 4096, load, arrival: Arrival::Poisson },
+    }
+}
+
+/// Restore the paper's full simulation windows (2.5 ms + 0.5 ms).
+pub fn with_paper_windows(mut cfg: SimConfig) -> SimConfig {
+    cfg.warmup_us = 2500.0;
+    cfg.measure_us = 500.0;
+    cfg
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rlft_matches_paper_table3() {
+        // 32 nodes: 8 leaves + 4 spines = 12 switches.
+        assert_eq!(rlft_dims(32), (8, 4));
+        // 128 nodes: 16 leaves + 8 spines = 24 switches.
+        assert_eq!(rlft_dims(128), (16, 8));
+    }
+
+    #[test]
+    fn scaleout_configs_validate() {
+        for nodes in [32, 128] {
+            for gbs in [128.0, 256.0, 512.0] {
+                for p in Pattern::PAPER {
+                    let cfg = scaleout(nodes, gbs, p, 0.8);
+                    cfg.validate().unwrap_or_else(|e| panic!("{nodes}/{gbs}/{p:?}: {e}"));
+                    assert_eq!(
+                        cfg.inter.total_switches(),
+                        if nodes == 32 { 12 } else { 24 }
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cellia_validates_and_matches_paper_rates() {
+        let cfg = cellia();
+        cfg.validate().unwrap();
+        assert_eq!(cfg.node.nic.inter_gbps, 100.0);
+        assert_eq!(cfg.node.nic.mtu_b - cfg.node.nic.header_b, 4036);
+        assert!((cfg.node.accel_link.bytes_per_ns() - 15.7538).abs() < 1e-3);
+    }
+
+    #[test]
+    fn paper_windows_override() {
+        let cfg = with_paper_windows(scaleout(32, 128.0, Pattern::C1, 0.5));
+        assert_eq!(cfg.warmup_us, 2500.0);
+        assert_eq!(cfg.measure_us, 500.0);
+    }
+
+    #[test]
+    fn per_accel_link_rate_follows_aggregate() {
+        let cfg = scaleout(32, 512.0, Pattern::C1, 0.5);
+        // 512 GB/s aggregate over 8 accels = 512 Gbps per accel link.
+        assert!((cfg.node.accel_link.datarate_gbps - 512.0).abs() < 1e-9);
+    }
+}

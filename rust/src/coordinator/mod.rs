@@ -1,0 +1,219 @@
+//! Sweep coordinator: the leader that fans simulation points out to a
+//! worker-thread pool, collects [`SimReport`]s in order, and persists
+//! figure series.
+//!
+//! Each paper figure is a sweep over (aggregated intra bandwidth ×
+//! pattern × offered load) at a fixed node count; a full Fig 5+6
+//! reproduction is 3 × 5 × 20 = 300 independent simulations. The
+//! coordinator precomputes the PCIe serialization tables once through the
+//! HLO runtime (or the native mirror) into a [`CachedProvider`] snapshot
+//! so worker threads never touch PJRT concurrently.
+//!
+//! (The build image ships no async runtime, so the pool is plain
+//! `std::thread` + channels — the paper's workload is embarrassingly
+//! parallel batch simulation, for which a blocking pool is the right
+//! shape anyway.)
+
+pub mod pool;
+pub mod results;
+
+use std::sync::Arc;
+
+use crate::config::{presets, Pattern, SimConfig};
+use crate::net::world::{BenchMode, SerProvider, Sim, SimReport};
+use crate::runtime::CachedProvider;
+
+/// Sweep description (one per figure reproduction).
+#[derive(Debug, Clone)]
+pub struct SweepSpec {
+    pub nodes: usize,
+    /// Aggregated intra-node bandwidths in GB/s (paper: 128, 256, 512).
+    pub intra_gbs: Vec<f64>,
+    pub patterns: Vec<Pattern>,
+    /// Offered loads as link-capacity fractions (paper: 20 points).
+    pub loads: Vec<f64>,
+    /// Use the paper's full 2.5 ms + 0.5 ms windows.
+    pub paper_windows: bool,
+    /// Worker threads (defaults to available parallelism).
+    pub workers: usize,
+    pub seed: u64,
+}
+
+impl SweepSpec {
+    /// The paper's sweep for a given topology size.
+    pub fn paper(nodes: usize) -> SweepSpec {
+        SweepSpec {
+            nodes,
+            intra_gbs: vec![128.0, 256.0, 512.0],
+            patterns: Pattern::PAPER.to_vec(),
+            loads: Self::paper_loads(),
+            paper_windows: false,
+            workers: default_workers(),
+            seed: 0x5CA1E,
+        }
+    }
+
+    /// 20 load points from 5% to 100% (paper §4.2.2).
+    pub fn paper_loads() -> Vec<f64> {
+        (1..=20).map(|i| i as f64 * 0.05).collect()
+    }
+
+    /// A trimmed sweep for CI / quick looks.
+    pub fn quick(nodes: usize) -> SweepSpec {
+        SweepSpec {
+            nodes,
+            intra_gbs: vec![128.0, 512.0],
+            patterns: vec![Pattern::C1, Pattern::C3, Pattern::C5],
+            loads: vec![0.2, 0.5, 0.8, 1.0],
+            paper_windows: false,
+            workers: default_workers(),
+            seed: 0x5CA1E,
+        }
+    }
+
+    /// Enumerate every configuration in the sweep.
+    pub fn configs(&self) -> Vec<SimConfig> {
+        let mut out = Vec::new();
+        for &gbs in &self.intra_gbs {
+            for &p in &self.patterns {
+                for &load in &self.loads {
+                    let mut cfg = presets::scaleout(self.nodes, gbs, p, load);
+                    cfg.seed = self.seed ^ (out.len() as u64).wrapping_mul(0x9E3779B97F4A7C15);
+                    if self.paper_windows {
+                        cfg = presets::with_paper_windows(cfg);
+                    }
+                    out.push(cfg);
+                }
+            }
+        }
+        out
+    }
+
+    pub fn points(&self) -> usize {
+        self.intra_gbs.len() * self.patterns.len() * self.loads.len()
+    }
+}
+
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Build the provider snapshot all workers share: one pass through the
+/// real provider (HLO runtime in production) for every distinct PCIe
+/// parameter set and payload size the sweep can need.
+pub fn snapshot_provider(spec: &SweepSpec, inner: &dyn SerProvider) -> CachedProvider {
+    let mut params = Vec::new();
+    for &gbs in &spec.intra_gbs {
+        // GB/s aggregate over 8 accels -> Gbps per accel link.
+        let per_accel = gbs * 8.0 / 8.0;
+        params.push(crate::analytic::PcieParams::generic_accel_link(per_accel));
+    }
+    // Payload sizes a 4 KiB-message world derives: whole message, full txn,
+    // remainder.
+    let probe = presets::scaleout(spec.nodes, spec.intra_gbs[0], Pattern::C1, 0.5);
+    let txn = (probe.node.nic.mtu_b - probe.node.nic.header_b) as u32;
+    let msg = probe.traffic.msg_size_b as u32;
+    let mut sizes = vec![msg, txn];
+    if msg % txn != 0 {
+        sizes.push(msg % txn);
+    }
+    sizes.sort_unstable();
+    sizes.dedup();
+    CachedProvider::build(inner, &params, &sizes)
+}
+
+/// Progress callback: (completed, total, latest report).
+pub type Progress = pool::Callback<SimReport>;
+
+/// Run the sweep on the worker pool; results are returned in spec order.
+pub fn run_sweep(
+    spec: &SweepSpec,
+    provider: Arc<CachedProvider>,
+    progress: Option<Progress>,
+) -> anyhow::Result<Vec<SimReport>> {
+    let configs = spec.configs();
+    let jobs: Vec<_> = configs
+        .into_iter()
+        .map(|cfg| {
+            let provider = provider.clone();
+            move || -> anyhow::Result<SimReport> {
+                Ok(Sim::new(cfg, provider.as_ref(), BenchMode::None)?.run())
+            }
+        })
+        .collect();
+    pool::run_ordered(jobs, spec.workers, progress)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::world::NativeProvider;
+
+    fn tiny_spec() -> SweepSpec {
+        SweepSpec {
+            nodes: 32,
+            intra_gbs: vec![128.0],
+            patterns: vec![Pattern::C3, Pattern::C5],
+            loads: vec![0.1],
+            paper_windows: false,
+            workers: 2,
+            seed: 7,
+        }
+    }
+
+    #[test]
+    fn configs_enumerate_cartesian_product() {
+        let spec = SweepSpec::paper(32);
+        assert_eq!(spec.points(), 300);
+        assert_eq!(spec.configs().len(), 300);
+        assert_eq!(SweepSpec::paper_loads().len(), 20);
+    }
+
+    #[test]
+    fn sweep_runs_and_orders_results() {
+        let spec = tiny_spec();
+        let provider = Arc::new(snapshot_provider(&spec, &NativeProvider));
+        let reports = run_sweep(&spec, provider, None).unwrap();
+        assert_eq!(reports.len(), 2);
+        assert_eq!(reports[0].pattern, "C3");
+        assert_eq!(reports[1].pattern, "C5");
+        assert!(reports.iter().all(|r| r.delivered_msgs > 0));
+    }
+
+    #[test]
+    fn progress_callback_fires_per_point() {
+        let spec = tiny_spec();
+        let provider = Arc::new(snapshot_provider(&spec, &NativeProvider));
+        let hits = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+        let h = hits.clone();
+        let cb: Progress = Box::new(move |_, total, _| {
+            assert_eq!(total, 2);
+            h.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+        });
+        run_sweep(&spec, provider, Some(cb)).unwrap();
+        assert_eq!(hits.load(std::sync::atomic::Ordering::SeqCst), 2);
+    }
+
+    #[test]
+    fn snapshot_provider_covers_sweep_sizes() {
+        let spec = tiny_spec();
+        let p = snapshot_provider(&spec, &NativeProvider);
+        let link = crate::analytic::PcieParams::generic_accel_link(128.0);
+        let _ = p.pcie_latency_ns(&link, &[4096, 4036, 60]);
+        assert_eq!(p.miss_count(), 0);
+    }
+
+    #[test]
+    fn sweep_deterministic_regardless_of_workers() {
+        let mut spec = tiny_spec();
+        let provider = Arc::new(snapshot_provider(&spec, &NativeProvider));
+        spec.workers = 1;
+        let a = run_sweep(&spec, provider.clone(), None).unwrap();
+        spec.workers = 4;
+        let b = run_sweep(&spec, provider, None).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.delivered_msgs, y.delivered_msgs);
+            assert_eq!(x.events, y.events);
+        }
+    }
+}

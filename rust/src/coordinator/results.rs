@@ -1,0 +1,115 @@
+//! Result persistence: CSV series per figure and JSON dumps.
+
+use std::io::Write;
+use std::path::Path;
+
+use crate::net::world::SimReport;
+use crate::serial::json::{FromJson, ToJson, Value};
+
+/// CSV columns written for every sweep point.
+pub const CSV_HEADER: &str = "pattern,load,nodes,accels,intra_gbs_cfg,offered_gbs,\
+intra_tput_gbs,intra_drain_gbs,intra_lat_mean_ns,intra_lat_p99_ns,intra_lat_max_ns,\
+inter_tput_gbs,inter_drain_gbs,fct_mean_ns,fct_p99_ns,fct_max_ns,\
+intra_wire_gbs,inter_wire_gbs,drop_frac,delivered_msgs,events,wall_ms";
+
+pub fn csv_row(r: &SimReport) -> String {
+    format!(
+        "{},{:.4},{},{},{:.1},{:.3},{:.3},{:.3},{:.1},{:.1},{:.1},{:.3},{:.3},{:.1},{:.1},{:.1},{:.3},{:.3},{:.4},{},{},{:.1}",
+        r.pattern,
+        r.load,
+        r.nodes,
+        r.accels,
+        r.aggregated_intra_gbs,
+        r.offered_gbs,
+        r.intra_tput_gbs,
+        r.intra_drain_gbs,
+        r.intra_lat.mean_ns,
+        r.intra_lat.p99_ns,
+        r.intra_lat.max_ns,
+        r.inter_tput_gbs,
+        r.inter_drain_gbs,
+        r.fct.mean_ns,
+        r.fct.p99_ns,
+        r.fct.max_ns,
+        r.intra_wire_gbs,
+        r.inter_wire_gbs,
+        r.drop_frac,
+        r.delivered_msgs,
+        r.events,
+        r.wall_ms,
+    )
+}
+
+/// Write a sweep's reports as CSV.
+pub fn write_csv(path: &Path, reports: &[SimReport]) -> anyhow::Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "{CSV_HEADER}")?;
+    for r in reports {
+        writeln!(f, "{}", csv_row(r))?;
+    }
+    Ok(())
+}
+
+/// Write reports as a JSON array (full fidelity, incl. histograms).
+pub fn write_json(path: &Path, reports: &[SimReport]) -> anyhow::Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let arr = Value::Arr(reports.iter().map(|r| r.to_json()).collect());
+    std::fs::write(path, arr.pretty())?;
+    Ok(())
+}
+
+/// Read reports back from JSON (for report-only invocations).
+pub fn read_json(path: &Path) -> anyhow::Result<Vec<SimReport>> {
+    let v = Value::parse(&std::fs::read_to_string(path)?)?;
+    v.as_arr()?.iter().map(SimReport::from_json).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{presets, Pattern};
+    use crate::net::world::{BenchMode, NativeProvider, Sim};
+
+    fn sample_report() -> SimReport {
+        let mut cfg = presets::scaleout(32, 128.0, Pattern::C3, 0.1);
+        cfg.warmup_us = 5.0;
+        cfg.measure_us = 5.0;
+        Sim::new(cfg, &NativeProvider, BenchMode::None).unwrap().run()
+    }
+
+    #[test]
+    fn csv_roundtrip_has_matching_columns() {
+        let r = sample_report();
+        let row = csv_row(&r);
+        assert_eq!(row.split(',').count(), CSV_HEADER.split(',').count());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let dir = std::env::temp_dir().join("sauron_results_test");
+        let path = dir.join("reports.json");
+        let reports = vec![sample_report()];
+        write_json(&path, &reports).unwrap();
+        let back = read_json(&path).unwrap();
+        assert_eq!(back.len(), 1);
+        assert_eq!(back[0].pattern, reports[0].pattern);
+        assert_eq!(back[0].delivered_msgs, reports[0].delivered_msgs);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn csv_file_written_with_header() {
+        let dir = std::env::temp_dir().join("sauron_csv_test");
+        let path = dir.join("sweep.csv");
+        write_csv(&path, &[sample_report()]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("pattern,load"));
+        assert_eq!(text.lines().count(), 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,40 @@
+//! # sauron-rs
+//!
+//! A packet-level simulator for **combined intra-node and inter-node
+//! interconnection networks**, reproducing Tarraga-Moreno et al.,
+//! *"Understanding Intra-Node Communication in HPC Systems and
+//! Datacenters"* (2025).
+//!
+//! The system is a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L1 (Pallas)** — the paper's §3.2 PCIe transaction-timing equations
+//!   and an α-β ring-collective cost model, as tiled TPU-style kernels
+//!   (`python/compile/kernels/`), AOT-lowered to HLO text.
+//! * **L2 (JAX)** — a Megatron-style LLM communication-volume model
+//!   (`python/compile/model.py`) motivating the paper's C1–C5 traffic
+//!   patterns.
+//! * **L3 (this crate)** — the discrete-event simulator: PCIe-class
+//!   intra-node networks, RLFT fat-trees with D-mod-K routing and
+//!   credit-based flow control, NIC packetisation, LLM traffic patterns,
+//!   and the sweep coordinator that regenerates every table and figure of
+//!   the paper. The Rust runtime executes the AOT artifacts through PJRT —
+//!   Python never runs at simulation time.
+
+pub mod analytic;
+pub mod benchkit;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod metrics;
+pub mod net;
+pub mod report;
+pub mod rng;
+pub mod runtime;
+pub mod serial;
+pub mod sim;
+pub mod testkit;
+pub mod traffic;
+pub mod units;
+
+pub use config::SimConfig;
+pub use net::world::{BenchMode, NativeProvider, Sim, SimReport};

@@ -1,0 +1,346 @@
+//! `sauron` — CLI for the intra-/inter-node interconnection simulator.
+//!
+//! Subcommands map one-to-one onto the paper's experiments:
+//!
+//! * `validate`        — Tables 1/2 + Figure 4 (CELLIA ib_write vs paper)
+//! * `sweep`           — Figures 5–8 scale-out sweeps (32/128-node RLFT)
+//! * `run`             — a single simulation from a JSON config
+//! * `topo`            — dump the RLFT wiring for a node count
+//! * `traffic-model`   — run the L2 LLM traffic artifact for a model config
+//! * `artifacts-check` — cross-check HLO artifacts vs the native mirror
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use sauron::analytic::{CollParams, PcieParams};
+use sauron::cli::Args;
+use sauron::config::{presets, Pattern, SimConfig};
+use sauron::coordinator::{self, results, SweepSpec};
+use sauron::net::world::{BenchMode, NativeProvider, SerProvider, Sim};
+use sauron::report::{figures, tables};
+use sauron::runtime::Runtime;
+use sauron::serial::json::ToJson;
+use sauron::traffic::ib_bench;
+use sauron::traffic::llm::{llm_traffic_native, LlmConfig};
+
+const HELP: &str = "\
+sauron — packet-level intra+inter-node network simulator
+
+USAGE: sauron [--artifacts DIR] [--native] <command> [options]
+
+COMMANDS
+  validate   [--table 1|2] [--sizes a,b,...] [--out DIR]
+             Reproduce Tables 1/2 + Fig 4 (ib_write vs paper's cluster).
+  sweep      [--nodes N] [--intra 128,256,512] [--patterns C1,...,C5]
+             [--loads 20] [--paper-windows] [--quick] [--out DIR]
+             Reproduce Figures 5-8 (scale-out load sweeps).
+  run        <config.json> [--json]
+             One simulation from a JSON config file.
+  topo       [--nodes N]       Describe the RLFT fat-tree.
+  traffic-model [--layers L] [--hidden H] [--seq S] [--vocab V]
+             [--tp T] [--pp P] [--dp D] [--microbatches M]
+             Evaluate the L2 LLM communication-volume model.
+  artifacts-check
+             Load HLO artifacts and cross-check against the native mirror.
+  help       Show this text.
+
+GLOBAL
+  --artifacts DIR   artifact directory (default: ./artifacts or $SAURON_ARTIFACTS)
+  --native          skip PJRT, use the native analytic mirror
+";
+
+/// Provider selection: HLO runtime if artifacts load, else native mirror.
+enum Backend {
+    Hlo(Runtime),
+    Native,
+}
+
+impl Backend {
+    fn provider(&self) -> &dyn SerProvider {
+        match self {
+            Backend::Hlo(rt) => rt,
+            Backend::Native => &NativeProvider,
+        }
+    }
+    fn name(&self) -> &'static str {
+        match self {
+            Backend::Hlo(_) => "hlo/pjrt",
+            Backend::Native => "native",
+        }
+    }
+}
+
+fn backend(args: &Args) -> Backend {
+    if args.flag("native") {
+        return Backend::Native;
+    }
+    let dir = args.opt("artifacts").map(PathBuf::from).unwrap_or_else(Runtime::default_dir);
+    match Runtime::load(&dir) {
+        Ok(rt) => Backend::Hlo(rt),
+        Err(e) => {
+            eprintln!("warning: artifacts unavailable ({e:#}); using native analytic mirror");
+            Backend::Native
+        }
+    }
+}
+
+fn parse_pattern(s: &str) -> anyhow::Result<Pattern> {
+    Ok(match s.to_ascii_uppercase().as_str() {
+        "C1" => Pattern::C1,
+        "C2" => Pattern::C2,
+        "C3" => Pattern::C3,
+        "C4" => Pattern::C4,
+        "C5" => Pattern::C5,
+        other => {
+            let f: f64 = other.parse().map_err(|_| anyhow::anyhow!("unknown pattern {other}"))?;
+            Pattern::Custom { frac_inter: f }
+        }
+    })
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env()?;
+    let cmd = args.subcommand.clone().unwrap_or_else(|| "help".to_string());
+    if cmd == "help" || args.flag("help") {
+        print!("{HELP}");
+        return Ok(());
+    }
+    let be = backend(&args);
+    eprintln!("provider: {}", be.name());
+
+    match cmd.as_str() {
+        "validate" => {
+            let table: Option<u8> = args.opt_parse("table")?;
+            let sizes: Vec<u64> = {
+                let s = args.list::<u64>("sizes")?;
+                if s.is_empty() {
+                    ib_bench::TEST_SIZES.to_vec()
+                } else {
+                    s
+                }
+            };
+            let out: Option<PathBuf> = args.opt("out").map(PathBuf::from);
+            args.reject_unknown()?;
+            let mut bw = Vec::new();
+            let mut lat = Vec::new();
+            for &s in &sizes {
+                if table.is_none() || table == Some(1) {
+                    bw.push(ib_bench::bandwidth_test(be.provider(), s)?);
+                }
+                if table.is_none() || table == Some(2) {
+                    lat.push(ib_bench::latency_test(be.provider(), s)?);
+                }
+                eprint!(".");
+            }
+            eprintln!();
+            if !bw.is_empty() {
+                println!("{}", tables::render_table1(&bw));
+                let err = tables::geomean_abs_rel_err(
+                    &bw.iter().map(|p| (p.sim_gib_s, p.paper_gib_s)).collect::<Vec<_>>(),
+                );
+                println!("geomean |rel err| = {:.1}%\n", err * 100.0);
+            }
+            if !lat.is_empty() {
+                println!("{}", tables::render_table2(&lat));
+                let err = tables::geomean_abs_rel_err(
+                    &lat.iter().map(|p| (p.sim_us, p.paper_us)).collect::<Vec<_>>(),
+                );
+                println!("geomean |rel err| = {:.1}%\n", err * 100.0);
+            }
+            if let Some(out) = out {
+                std::fs::create_dir_all(&out)?;
+                let mut csv =
+                    String::from("size_b,paper_bw_gib,sim_bw_gib,paper_lat_us,sim_lat_us\n");
+                for (b, l) in bw.iter().zip(&lat) {
+                    csv.push_str(&format!(
+                        "{},{},{},{},{}\n",
+                        b.size_b, b.paper_gib_s, b.sim_gib_s, l.paper_us, l.sim_us
+                    ));
+                }
+                std::fs::write(out.join("fig4_validation.csv"), csv)?;
+                println!("wrote {}", out.join("fig4_validation.csv").display());
+            }
+        }
+
+        "sweep" => {
+            let nodes = args.get_or("nodes", 32usize)?;
+            let spec = if args.flag("quick") {
+                SweepSpec::quick(nodes)
+            } else {
+                let intra = {
+                    let v = args.list::<f64>("intra")?;
+                    if v.is_empty() {
+                        vec![128.0, 256.0, 512.0]
+                    } else {
+                        v
+                    }
+                };
+                let patterns = {
+                    let v = args.list::<String>("patterns")?;
+                    if v.is_empty() {
+                        Pattern::PAPER.to_vec()
+                    } else {
+                        v.iter().map(|s| parse_pattern(s)).collect::<anyhow::Result<Vec<_>>>()?
+                    }
+                };
+                let n_loads = args.get_or("loads", 20usize)?;
+                SweepSpec {
+                    nodes,
+                    intra_gbs: intra,
+                    patterns,
+                    loads: (1..=n_loads).map(|i| i as f64 / n_loads as f64).collect(),
+                    paper_windows: args.flag("paper-windows"),
+                    workers: args.get_or("workers", coordinator::default_workers())?,
+                    seed: args.get_or("seed", 0x5CA1Eu64)?,
+                }
+            };
+            let out = PathBuf::from(args.opt("out").unwrap_or("results"));
+            args.reject_unknown()?;
+            eprintln!("sweep: {} points ({} nodes)", spec.points(), spec.nodes);
+            let provider = Arc::new(coordinator::snapshot_provider(&spec, be.provider()));
+            let t0 = std::time::Instant::now();
+            let reports = coordinator::run_sweep(
+                &spec,
+                provider,
+                Some(Box::new(|done, total, r| {
+                    eprintln!(
+                        "[{done}/{total}] {} load={:.2} bw={} intra={:.1} inter={:.1} GB/s ({:.0} ms)",
+                        r.pattern,
+                        r.load,
+                        r.aggregated_intra_gbs,
+                        r.intra_tput_gbs,
+                        r.inter_tput_gbs,
+                        r.wall_ms
+                    );
+                })),
+            )?;
+            eprintln!("sweep done in {:.1}s", t0.elapsed().as_secs_f64());
+            let tag = format!("{nodes}n");
+            results::write_csv(&out.join(format!("sweep_{tag}.csv")), &reports)?;
+            results::write_json(&out.join(format!("sweep_{tag}.json")), &reports)?;
+            for kind in [
+                figures::FigureKind::IntraThroughput,
+                figures::FigureKind::IntraLatency,
+                figures::FigureKind::InterThroughput,
+                figures::FigureKind::Fct,
+            ] {
+                println!("{}", figures::render_figure(&reports, kind));
+            }
+            println!("results in {}", out.display());
+        }
+
+        "run" => {
+            let path = args
+                .positional
+                .first()
+                .cloned()
+                .or_else(|| args.opt("config").map(String::from))
+                .ok_or_else(|| anyhow::anyhow!("usage: sauron run <config.json>"))?;
+            let json = args.flag("json");
+            args.reject_unknown()?;
+            let cfg = SimConfig::load(std::path::Path::new(&path))?;
+            let report = Sim::new(cfg, be.provider(), BenchMode::None)?.run();
+            if json {
+                println!("{}", report.to_json().pretty());
+            } else {
+                println!(
+                    "{} load={:.2}: intra {:.2} GB/s (lat {:.1} us p99 {:.1} us), inter {:.2} GB/s (FCT {:.1} us), drops {:.1}%",
+                    report.pattern,
+                    report.load,
+                    report.intra_tput_gbs,
+                    report.intra_lat.mean_ns / 1e3,
+                    report.intra_lat.p99_ns / 1e3,
+                    report.inter_tput_gbs,
+                    report.fct.mean_ns / 1e3,
+                    report.drop_frac * 100.0
+                );
+            }
+        }
+
+        "topo" => {
+            let nodes = args.get_or("nodes", 32usize)?;
+            args.reject_unknown()?;
+            let (leaves, spines) = presets::rlft_dims(nodes);
+            let cfg = presets::scaleout(nodes, 128.0, Pattern::C1, 0.5);
+            let topo = sauron::net::Topology::new(&cfg);
+            println!("RLFT for {nodes} nodes (paper Table 3):");
+            println!("  leaves: {leaves} ({} nodes each)", nodes / leaves);
+            println!("  spines: {spines}");
+            println!("  switches: {}", leaves + spines);
+            println!("  accelerators: {}", topo.total_accels());
+            println!("  unidirectional links: {}", topo.total_links());
+            println!("  routing: D-mod-K (spine = dst_node % {spines})");
+        }
+
+        "traffic-model" => {
+            let llm = LlmConfig {
+                num_layers: args.get_or("layers", 40u32)?,
+                hidden: args.get_or("hidden", 5120u32)?,
+                seq_len: args.get_or("seq", 2048u32)?,
+                microbatch: args.get_or("microbatch", 1u32)?,
+                vocab: args.get_or("vocab", 50257u32)?,
+                tp: args.get_or("tp", 8u32)?,
+                pp: args.get_or("pp", 4u32)?,
+                dp: args.get_or("dp", 8u32)?,
+                bytes_per_elem: 2,
+                num_microbatches: args.get_or("microbatches", 8u32)?,
+            };
+            args.reject_unknown()?;
+            let pcie = PcieParams::generic_accel_link(512.0);
+            let ci =
+                CollParams { n_devices: llm.tp as f64, alpha_ns: 500.0, beta_ns_per_b: 1.0 / 64.0 };
+            let cx =
+                CollParams { n_devices: llm.dp as f64, alpha_ns: 2000.0, beta_ns_per_b: 1.0 / 50.0 };
+            let t = match &be {
+                Backend::Hlo(rt) => rt.llm_traffic(&llm, &pcie, &ci, &cx)?,
+                Backend::Native => llm_traffic_native(&llm, &pcie, &ci, &cx),
+            };
+            println!("{}", t.to_json().pretty());
+            println!(
+                "inter fraction {:.1}% -> nearest paper pattern {}",
+                t.frac_inter * 100.0,
+                t.nearest_paper_pattern().name()
+            );
+        }
+
+        "artifacts-check" => {
+            args.reject_unknown()?;
+            let Backend::Hlo(rt) = &be else {
+                anyhow::bail!("artifacts not loaded; pass --artifacts or run `make artifacts`");
+            };
+            let params = [PcieParams::gen3(16), PcieParams::generic_accel_link(512.0)];
+            let sizes: Vec<u32> = vec![1, 60, 128, 4036, 4096, 131072, 4 << 20];
+            let mut worst: f64 = 0.0;
+            for p in &params {
+                let hlo = rt.pcie_latency_ns_exec(p, &sizes)?;
+                for (s, h) in sizes.iter().zip(&hlo) {
+                    let native = p.latency_ns(*s as u64);
+                    worst = worst.max(((h - native) / native).abs());
+                }
+            }
+            println!("pcie_latency: max |rel err| HLO vs native = {worst:.2e}");
+            let cp = CollParams { n_devices: 8.0, alpha_ns: 500.0, beta_ns_per_b: 0.01 };
+            let rows = rt.collective_cost_exec(&cp, &[1e3, 1e6, 1e8])?;
+            for (i, s) in [1e3f64, 1e6, 1e8].iter().enumerate() {
+                let want = cp.allreduce_ns(*s);
+                worst = worst.max(((rows[0][i] - want) / want).abs());
+            }
+            println!("collective_cost: max |rel err| = {worst:.2e}");
+            let llm = LlmConfig::example_13b();
+            let pc = PcieParams::gen3(16);
+            let ci = CollParams { n_devices: 8.0, alpha_ns: 500.0, beta_ns_per_b: 0.002 };
+            let cx = CollParams { n_devices: 8.0, alpha_ns: 2000.0, beta_ns_per_b: 0.02 };
+            let hlo = rt.llm_traffic(&llm, &pc, &ci, &cx)?;
+            let nat = llm_traffic_native(&llm, &pc, &ci, &cx);
+            let df = (hlo.frac_inter - nat.frac_inter).abs();
+            println!("llm_traffic: |frac_inter HLO - native| = {df:.2e}");
+            anyhow::ensure!(worst < 1e-3 && df < 1e-4, "artifact cross-check failed");
+            println!("artifacts OK ({})", rt.dir.display());
+        }
+
+        other => {
+            anyhow::bail!("unknown command '{other}'\n{HELP}");
+        }
+    }
+    Ok(())
+}

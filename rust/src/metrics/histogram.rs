@@ -1,0 +1,186 @@
+//! Log₂-bucketed latency histogram (HDR-style, fixed memory).
+//!
+//! Buckets are powers of two over picoseconds: bucket `k` holds samples in
+//! `[2^k, 2^(k+1))` ps, giving ≤ ~100% relative error per bucket across
+//! 19 decades in 64 counters. Quantiles interpolate inside the bucket,
+//! which is plenty for the paper's "latency skyrockets at saturation"
+//! curves (log-scale plots).
+
+use crate::units::Time;
+
+
+const BUCKETS: usize = 64;
+
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    counts: [u64; BUCKETS],
+    count: u64,
+    sum_ps: u128,
+    max_ps: u64,
+    min_ps: u64,
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram { counts: [0; BUCKETS], count: 0, sum_ps: 0, max_ps: 0, min_ps: u64::MAX }
+    }
+
+    #[inline]
+    fn bucket(ps: u64) -> usize {
+        (63 - ps.max(1).leading_zeros() as usize).min(BUCKETS - 1)
+    }
+
+    #[inline]
+    pub fn record(&mut self, t: Time) {
+        let ps = t.as_ps();
+        self.counts[Self::bucket(ps)] += 1;
+        self.count += 1;
+        self.sum_ps += ps as u128;
+        self.max_ps = self.max_ps.max(ps);
+        self.min_ps = self.min_ps.min(ps);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> Time {
+        if self.count == 0 {
+            Time::ZERO
+        } else {
+            Time::from_ps((self.sum_ps / self.count as u128) as u64)
+        }
+    }
+
+    pub fn max(&self) -> Time {
+        Time::from_ps(self.max_ps)
+    }
+
+    pub fn min(&self) -> Time {
+        if self.count == 0 {
+            Time::ZERO
+        } else {
+            Time::from_ps(self.min_ps)
+        }
+    }
+
+    /// Quantile with linear interpolation inside the bucket.
+    pub fn quantile(&self, q: f64) -> Time {
+        if self.count == 0 {
+            return Time::ZERO;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.count as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (k, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            if seen + c >= target {
+                let lo = 1u64 << k;
+                let hi = if k + 1 >= 64 { u64::MAX } else { 1u64 << (k + 1) };
+                let frac = (target - seen) as f64 / c as f64;
+                let v = lo as f64 + frac * (hi - lo) as f64;
+                return Time::from_ps((v as u64).min(self.max_ps).max(self.min_ps));
+            }
+            seen += c;
+        }
+        self.max()
+    }
+
+    pub fn summary(&self) -> HistSummary {
+        HistSummary {
+            count: self.count,
+            mean_ns: self.mean().as_ns(),
+            p50_ns: self.quantile(0.50).as_ns(),
+            p99_ns: self.quantile(0.99).as_ns(),
+            p999_ns: self.quantile(0.999).as_ns(),
+            max_ns: self.max().as_ns(),
+            min_ns: self.min().as_ns(),
+        }
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Serializable digest of a histogram.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct HistSummary {
+    pub count: u64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    pub p999_ns: f64,
+    pub max_ns: f64,
+    pub min_ns: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_histogram_is_zero() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.mean(), Time::ZERO);
+        assert_eq!(h.quantile(0.99), Time::ZERO);
+    }
+
+    #[test]
+    fn mean_max_min_exact() {
+        let mut h = Histogram::new();
+        for ns in [10.0, 20.0, 30.0] {
+            h.record(Time::from_ns(ns));
+        }
+        assert_eq!(h.mean().as_ns(), 20.0);
+        assert_eq!(h.max().as_ns(), 30.0);
+        assert_eq!(h.min().as_ns(), 10.0);
+    }
+
+    #[test]
+    fn quantiles_bracket_correctly() {
+        let mut h = Histogram::new();
+        // 1000 samples at ~1us, 10 at ~1ms.
+        for _ in 0..1000 {
+            h.record(Time::from_us(1.0));
+        }
+        for _ in 0..10 {
+            h.record(Time::from_ms(1.0));
+        }
+        let p50 = h.quantile(0.5).as_ns();
+        let p999 = h.quantile(0.999).as_ns();
+        assert!(p50 < 3_000.0, "p50 {p50}");
+        assert!(p999 > 400_000.0, "p999 {p999}");
+        assert!(h.quantile(1.0).as_ns() >= 999_000.0);
+    }
+
+    #[test]
+    fn bucket_boundaries() {
+        assert_eq!(Histogram::bucket(1), 0);
+        assert_eq!(Histogram::bucket(2), 1);
+        assert_eq!(Histogram::bucket(3), 1);
+        assert_eq!(Histogram::bucket(4), 2);
+        assert_eq!(Histogram::bucket(u64::MAX), 63);
+    }
+
+    #[test]
+    fn monotone_quantiles() {
+        let mut h = Histogram::new();
+        let mut x = 7u64;
+        for _ in 0..10_000 {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1);
+            h.record(Time::from_ps(x % 1_000_000_000));
+        }
+        let qs: Vec<f64> = [0.1, 0.5, 0.9, 0.99, 0.999]
+            .iter()
+            .map(|&q| h.quantile(q).as_ns())
+            .collect();
+        for w in qs.windows(2) {
+            assert!(w[0] <= w[1], "{qs:?}");
+        }
+    }
+}

@@ -1,0 +1,202 @@
+//! Performance metrics: log-bucketed latency histograms and the
+//! warmup/measure-window collectors the paper's methodology prescribes
+//! (§4.2.2: generate for a warm-up period, then measure).
+
+pub mod histogram;
+
+pub use histogram::{HistSummary, Histogram};
+
+
+
+use crate::units::Time;
+
+/// Message class for accounting.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Class {
+    /// Source and destination accelerator share a node.
+    Intra,
+    /// Crosses the inter-node network.
+    Inter,
+}
+
+/// Collects delivery statistics inside the measurement window.
+///
+/// Two throughput semantics are tracked:
+/// * **strict** — bytes of messages *generated and delivered* inside the
+///   window. This is the paper's semantics (footnote 2): past saturation
+///   backlogs grow without bound, fresh messages no longer complete inside
+///   the window and measured throughput collapses toward zero.
+/// * **drain** — all payload bytes delivered inside the window regardless
+///   of generation time (what a hardware counter would show).
+#[derive(Debug, Clone)]
+pub struct Collector {
+    pub warmup: Time,
+    pub end: Time,
+    /// Intra-node delivery latency (paper: "intra-node latency").
+    pub intra_hist: Histogram,
+    /// Flow completion time of inter-node messages.
+    pub fct_hist: Histogram,
+    pub intra_bytes_strict: u64,
+    pub inter_bytes_strict: u64,
+    pub intra_bytes_drain: u64,
+    pub inter_bytes_drain: u64,
+    pub offered_msgs: u64,
+    pub offered_bytes: u64,
+    pub dropped_msgs: u64,
+    pub delivered_msgs: u64,
+}
+
+impl Collector {
+    pub fn new(warmup: Time, end: Time) -> Collector {
+        Collector {
+            warmup,
+            end,
+            intra_hist: Histogram::new(),
+            fct_hist: Histogram::new(),
+            intra_bytes_strict: 0,
+            inter_bytes_strict: 0,
+            intra_bytes_drain: 0,
+            inter_bytes_drain: 0,
+            offered_msgs: 0,
+            offered_bytes: 0,
+            dropped_msgs: 0,
+            delivered_msgs: 0,
+        }
+    }
+
+    #[inline]
+    pub fn in_window(&self, t: Time) -> bool {
+        t >= self.warmup && t < self.end
+    }
+
+    /// A generator offered a message (accepted or not).
+    #[inline]
+    pub fn on_offer(&mut self, now: Time, bytes: u64, accepted: bool) {
+        if self.in_window(now) {
+            self.offered_msgs += 1;
+            self.offered_bytes += bytes;
+            if !accepted {
+                self.dropped_msgs += 1;
+            }
+        } else if !accepted {
+            // still track warm-up drops for saturation detection
+        }
+    }
+
+    /// A unit (transaction/packet) delivered its payload.
+    #[inline]
+    pub fn on_unit_delivered(&mut self, now: Time, class: Class, payload: u64) {
+        if self.in_window(now) {
+            match class {
+                Class::Intra => self.intra_bytes_drain += payload,
+                Class::Inter => self.inter_bytes_drain += payload,
+            }
+        }
+    }
+
+    /// A whole message completed.
+    #[inline]
+    pub fn on_msg_complete(&mut self, gen: Time, now: Time, class: Class, bytes: u64) {
+        if !self.in_window(now) {
+            return;
+        }
+        self.delivered_msgs += 1;
+        let latency = now.saturating_sub(gen);
+        match class {
+            Class::Intra => self.intra_hist.record(latency),
+            Class::Inter => self.fct_hist.record(latency),
+        }
+        if gen >= self.warmup {
+            match class {
+                Class::Intra => self.intra_bytes_strict += bytes,
+                Class::Inter => self.inter_bytes_strict += bytes,
+            }
+        }
+    }
+
+    pub fn measure_secs(&self) -> f64 {
+        (self.end.saturating_sub(self.warmup)).as_ns() * 1e-9
+    }
+
+    /// Strict throughput in GB/s for a class (paper's collapse semantics).
+    pub fn strict_gbs(&self, class: Class) -> f64 {
+        let bytes = match class {
+            Class::Intra => self.intra_bytes_strict,
+            Class::Inter => self.inter_bytes_strict,
+        };
+        bytes as f64 / self.measure_secs() / 1e9
+    }
+
+    pub fn drain_gbs(&self, class: Class) -> f64 {
+        let bytes = match class {
+            Class::Intra => self.intra_bytes_drain,
+            Class::Inter => self.inter_bytes_drain,
+        };
+        bytes as f64 / self.measure_secs() / 1e9
+    }
+
+    pub fn drop_frac(&self) -> f64 {
+        if self.offered_msgs == 0 {
+            0.0
+        } else {
+            self.dropped_msgs as f64 / self.offered_msgs as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn c() -> Collector {
+        Collector::new(Time::from_us(10.0), Time::from_us(20.0))
+    }
+
+    #[test]
+    fn window_membership() {
+        let c = c();
+        assert!(!c.in_window(Time::from_us(5.0)));
+        assert!(c.in_window(Time::from_us(10.0)));
+        assert!(c.in_window(Time::from_us(19.999)));
+        assert!(!c.in_window(Time::from_us(20.0)));
+    }
+
+    #[test]
+    fn strict_requires_gen_in_window() {
+        let mut col = c();
+        // generated before warm-up, delivered inside: drain only.
+        col.on_msg_complete(Time::from_us(1.0), Time::from_us(15.0), Class::Inter, 4096);
+        assert_eq!(col.inter_bytes_strict, 0);
+        assert_eq!(col.fct_hist.count(), 1);
+        // generated + delivered inside: strict too.
+        col.on_msg_complete(Time::from_us(12.0), Time::from_us(15.0), Class::Inter, 4096);
+        assert_eq!(col.inter_bytes_strict, 4096);
+    }
+
+    #[test]
+    fn deliveries_outside_window_ignored() {
+        let mut col = c();
+        col.on_msg_complete(Time::from_us(12.0), Time::from_us(25.0), Class::Intra, 100);
+        assert_eq!(col.intra_hist.count(), 0);
+        assert_eq!(col.intra_bytes_strict, 0);
+        col.on_unit_delivered(Time::from_us(25.0), Class::Intra, 100);
+        assert_eq!(col.intra_bytes_drain, 0);
+    }
+
+    #[test]
+    fn throughput_units() {
+        let mut col = c();
+        // 10 us window; 10_000 bytes strict -> 1e4 B / 1e-5 s = 1e9 B/s = 1 GB/s.
+        col.on_msg_complete(Time::from_us(11.0), Time::from_us(12.0), Class::Intra, 10_000);
+        assert!((col.strict_gbs(Class::Intra) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn drop_accounting() {
+        let mut col = c();
+        col.on_offer(Time::from_us(11.0), 4096, true);
+        col.on_offer(Time::from_us(12.0), 4096, false);
+        assert_eq!(col.offered_msgs, 2);
+        assert!((col.drop_frac() - 0.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,179 @@
+//! Unidirectional link servers with finite input queues and backpressure.
+//!
+//! Every port in the system — accelerator↔intra-switch lanes, the
+//! switch↔NIC segments, NIC↔leaf inter links, and leaf↔spine trunks — is a
+//! [`Link`]: a serialization server with a finite byte-capacity FIFO. A
+//! unit starts transmitting only when (a) it is at the head of the queue,
+//! (b) the link is idle and (c) the *next* queue on its path has room —
+//! i.e. credit-based flow control with virtual-cut-through-style per-hop
+//! forwarding. When a downstream queue is full, upstream links stall and
+//! backpressure propagates — the mechanism behind the paper's NIC-boundary
+//! interference.
+
+
+use std::collections::VecDeque;
+
+use crate::analytic::PcieParams;
+use crate::units::{Gbps, Time};
+
+/// Serialization model of a link.
+#[derive(Clone, Debug, PartialEq)]
+pub enum LinkModel {
+    /// Plain wire: time = bytes * 8 / rate (+ hop latency).
+    Raw(Gbps),
+    /// PCIe-style transaction timing (paper §3.2): TLP segmentation at the
+    /// configured MPS plus DLLP ACK overhead, applied to the unit payload.
+    Pcie(PcieParams),
+}
+
+impl LinkModel {
+    /// Serialization time of a unit with `payload` logical bytes carried as
+    /// `wire` bytes (wire ≥ payload on headered segments).
+    #[inline]
+    pub fn ser_time(&self, payload: u32, wire: u32) -> Time {
+        match self {
+            LinkModel::Raw(g) => g.ser_time(wire as u64),
+            LinkModel::Pcie(p) => p.latency(payload as u64),
+        }
+    }
+
+    /// Nominal rate in Gbps (for load accounting).
+    pub fn rate_gbps(&self) -> f64 {
+        match self {
+            LinkModel::Raw(g) => g.0,
+            LinkModel::Pcie(p) => p.width_lanes * p.datarate_gbps * p.encoding,
+        }
+    }
+}
+
+/// Who to wake when queue space frees up.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Waker {
+    /// An upstream link blocked on this queue.
+    Link(u32),
+    /// An accelerator source feeder blocked on its egress queue.
+    Feeder(u32),
+}
+
+/// One unidirectional link + its input queue.
+#[derive(Debug)]
+pub struct Link {
+    pub model: LinkModel,
+    /// Extra per-unit processing time (NIC WQE/DMA handling etc.), ps.
+    pub per_unit: Time,
+    /// Propagation / first-flit hop latency, accumulated into delivered
+    /// latency (does not occupy the serializer), ps.
+    pub prop: Time,
+    /// Queue capacity in bytes.
+    pub cap_b: u64,
+    /// FIFO of unit ids waiting to traverse (head may be in flight).
+    pub queue: VecDeque<u32>,
+    /// Bytes currently reserved in the queue.
+    pub used_b: u64,
+    /// A unit is currently serializing.
+    pub busy: bool,
+    /// Parties blocked waiting for space in *this* queue.
+    pub waiters: Vec<Waker>,
+    /// This link is registered as a waiter somewhere (dedup flag).
+    pub parked: bool,
+    /// Delivered wire bytes (for utilization accounting).
+    pub tx_bytes: u64,
+}
+
+impl Link {
+    pub fn new(model: LinkModel, cap_b: u64, per_unit: Time, prop: Time) -> Link {
+        Link {
+            model,
+            per_unit,
+            prop,
+            cap_b,
+            queue: VecDeque::new(),
+            used_b: 0,
+            busy: false,
+            waiters: Vec::new(),
+            parked: false,
+            tx_bytes: 0,
+        }
+    }
+
+    /// Room for `bytes` more?
+    #[inline]
+    pub fn has_room(&self, bytes: u64) -> bool {
+        self.used_b + bytes <= self.cap_b
+    }
+
+    /// Reserve space and enqueue. Caller must have checked `has_room`.
+    #[inline]
+    pub fn enqueue(&mut self, unit: u32, bytes: u64) {
+        debug_assert!(self.has_room(bytes), "enqueue without room");
+        self.used_b += bytes;
+        self.queue.push_back(unit);
+    }
+
+    /// Reserve space ahead of arrival (credit grab at upstream tx-start,
+    /// so two upstream links cannot both claim the last slot).
+    #[inline]
+    pub fn reserve(&mut self, bytes: u64) {
+        debug_assert!(self.has_room(bytes), "reserve without room");
+        self.used_b += bytes;
+    }
+
+    /// Enqueue a unit whose bytes were already reserved via [`reserve`].
+    #[inline]
+    pub fn push_reserved(&mut self, unit: u32) {
+        self.queue.push_back(unit);
+    }
+
+    /// Release `bytes` after the head unit finished traversing.
+    #[inline]
+    pub fn release(&mut self, bytes: u64) {
+        debug_assert!(self.used_b >= bytes, "release underflow");
+        self.used_b -= bytes;
+    }
+
+    /// Register a waiter (dedup is the caller's job via `parked`).
+    #[inline]
+    pub fn add_waiter(&mut self, w: Waker) {
+        self.waiters.push(w);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn raw_ser_time_uses_wire_bytes() {
+        let m = LinkModel::Raw(Gbps(400.0));
+        assert_eq!(m.ser_time(4036, 4096).as_ps(), 81_920);
+    }
+
+    #[test]
+    fn pcie_ser_time_uses_payload() {
+        let p = PcieParams::gen3(16);
+        let m = LinkModel::Pcie(p);
+        let want = p.latency(4036);
+        assert_eq!(m.ser_time(4036, 4096), want);
+    }
+
+    #[test]
+    fn queue_accounting() {
+        let mut l = Link::new(LinkModel::Raw(Gbps(100.0)), 1000, Time::ZERO, Time::ZERO);
+        assert!(l.has_room(1000));
+        l.enqueue(1, 600);
+        assert!(!l.has_room(600));
+        assert!(l.has_room(400));
+        l.enqueue(2, 400);
+        assert_eq!(l.queue.len(), 2);
+        l.release(600);
+        assert!(l.has_room(600));
+    }
+
+    #[test]
+    fn rate_gbps_reports_nominal() {
+        assert_eq!(LinkModel::Raw(Gbps(400.0)).rate_gbps(), 400.0);
+        let p = PcieParams::gen3(16);
+        let r = LinkModel::Pcie(p).rate_gbps();
+        assert!((r - 16.0 * 8.0 * (128.0 / 130.0)).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,18 @@
+//! The combined intra-/inter-node network model.
+//!
+//! * [`link`] — unidirectional link servers with finite queues and
+//!   credit-style backpressure (the paper's flow-control substrate).
+//! * [`topo`] — dense link-id space, RLFT fat-tree wiring, D-mod-K routing.
+//! * [`world`] — the discrete-event model tying it together: open-loop
+//!   traffic generators at accelerators, message segmentation into
+//!   intra-node transactions, NIC packetisation to/from the inter network,
+//!   delivery tracking and metrics.
+
+pub mod link;
+pub mod slab;
+pub mod topo;
+pub mod world;
+
+pub use link::{Link, LinkModel, Waker};
+pub use topo::{Kind, Topology};
+pub use world::{BenchMode, Class, SimReport, World};

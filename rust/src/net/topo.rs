@@ -1,0 +1,279 @@
+//! Link-graph construction and routing for the combined intra+inter model.
+//!
+//! Layout of the dense link-id space for `N` nodes with `A` accelerators
+//! each, `L` leaves and `S` spines:
+//!
+//! ```text
+//! per node n (stride 2A+4, base n*(2A+4)):
+//!   +a        accel_up[a]   accelerator a -> intra switch
+//!   +A+a      accel_down[a] intra switch -> accelerator a
+//!   +2A       sw_to_nic     intra switch -> NIC (egress staging)
+//!   +2A+1     nic_to_sw     NIC -> intra switch (ingress staging)
+//!   +2A+2     nic_up        NIC -> leaf switch (inter link)
+//!   +2A+3     nic_down      leaf switch -> NIC
+//! then (base N*(2A+4)):
+//!   +l*S+s    leaf_up[l][s]    leaf l -> spine s
+//!   +L*S+s*L+l spine_down[s][l] spine s -> leaf l
+//! ```
+//!
+//! Routing is the paper's deterministic **D-mod-K** on the 2-level RLFT:
+//! the up-path spine for a packet to destination node `d` is `d % S`, which
+//! spreads destinations evenly over spines and keeps each destination's
+//! down-path unique (Zahavi's contention-free ordering for uniform
+//! traffic).
+
+use crate::config::SimConfig;
+
+/// What a link is, with its owning node / leaf / spine index.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kind {
+    AccelUp { node: u32, accel: u32 },
+    AccelDown { node: u32, accel: u32 },
+    SwToNic { node: u32 },
+    NicToSw { node: u32 },
+    NicUp { node: u32 },
+    NicDown { node: u32 },
+    LeafUp { leaf: u32, spine: u32 },
+    SpineDown { spine: u32, leaf: u32 },
+}
+
+/// Static topology indexing helper.
+#[derive(Clone, Debug)]
+pub struct Topology {
+    pub nodes: u32,
+    pub accels_per_node: u32,
+    pub leaves: u32,
+    pub spines: u32,
+    node_stride: u32,
+    inter_base: u32,
+}
+
+impl Topology {
+    pub fn new(cfg: &SimConfig) -> Topology {
+        let nodes = cfg.inter.nodes as u32;
+        let a = cfg.node.accels_per_node as u32;
+        let stride = 2 * a + 4;
+        Topology {
+            nodes,
+            accels_per_node: a,
+            leaves: cfg.inter.leaves as u32,
+            spines: cfg.inter.spines as u32,
+            node_stride: stride,
+            inter_base: nodes * stride,
+        }
+    }
+
+    pub fn total_links(&self) -> u32 {
+        self.inter_base + 2 * self.leaves * self.spines
+    }
+    pub fn total_accels(&self) -> u32 {
+        self.nodes * self.accels_per_node
+    }
+
+    // -- accel-id helpers (global accel id = node * A + a) ------------------
+    #[inline]
+    pub fn accel_node(&self, accel: u32) -> u32 {
+        accel / self.accels_per_node
+    }
+    #[inline]
+    pub fn accel_local(&self, accel: u32) -> u32 {
+        accel % self.accels_per_node
+    }
+    #[inline]
+    pub fn node_leaf(&self, node: u32) -> u32 {
+        node / (self.nodes / self.leaves)
+    }
+
+    // -- link-id constructors ----------------------------------------------
+    #[inline]
+    pub fn accel_up(&self, node: u32, a: u32) -> u32 {
+        node * self.node_stride + a
+    }
+    #[inline]
+    pub fn accel_down(&self, node: u32, a: u32) -> u32 {
+        node * self.node_stride + self.accels_per_node + a
+    }
+    #[inline]
+    pub fn sw_to_nic(&self, node: u32) -> u32 {
+        node * self.node_stride + 2 * self.accels_per_node
+    }
+    #[inline]
+    pub fn nic_to_sw(&self, node: u32) -> u32 {
+        node * self.node_stride + 2 * self.accels_per_node + 1
+    }
+    #[inline]
+    pub fn nic_up(&self, node: u32) -> u32 {
+        node * self.node_stride + 2 * self.accels_per_node + 2
+    }
+    #[inline]
+    pub fn nic_down(&self, node: u32) -> u32 {
+        node * self.node_stride + 2 * self.accels_per_node + 3
+    }
+    #[inline]
+    pub fn leaf_up(&self, leaf: u32, spine: u32) -> u32 {
+        self.inter_base + leaf * self.spines + spine
+    }
+    #[inline]
+    pub fn spine_down(&self, spine: u32, leaf: u32) -> u32 {
+        self.inter_base + self.leaves * self.spines + spine * self.leaves + leaf
+    }
+
+    /// Decode a link id back into its kind (used to build the kind table).
+    pub fn kind_of(&self, link: u32) -> Kind {
+        let a = self.accels_per_node;
+        if link < self.inter_base {
+            let node = link / self.node_stride;
+            let off = link % self.node_stride;
+            if off < a {
+                Kind::AccelUp { node, accel: off }
+            } else if off < 2 * a {
+                Kind::AccelDown { node, accel: off - a }
+            } else if off == 2 * a {
+                Kind::SwToNic { node }
+            } else if off == 2 * a + 1 {
+                Kind::NicToSw { node }
+            } else if off == 2 * a + 2 {
+                Kind::NicUp { node }
+            } else {
+                Kind::NicDown { node }
+            }
+        } else {
+            let rel = link - self.inter_base;
+            if rel < self.leaves * self.spines {
+                Kind::LeafUp { leaf: rel / self.spines, spine: rel % self.spines }
+            } else {
+                let rel = rel - self.leaves * self.spines;
+                Kind::SpineDown { spine: rel / self.leaves, leaf: rel % self.leaves }
+            }
+        }
+    }
+
+    /// D-mod-K spine selection for destination node `d`.
+    #[inline]
+    pub fn dmodk_spine(&self, dst_node: u32) -> u32 {
+        dst_node % self.spines
+    }
+
+    /// Next link on a unit's path after finishing `link`, given the unit's
+    /// destination accelerator. `None` means the unit is delivered.
+    ///
+    /// Full inter path: accel_up → sw_to_nic → nic_up → [leaf_up →
+    /// spine_down]? → nic_down → nic_to_sw → accel_down → deliver.
+    /// Intra path: accel_up → accel_down → deliver.
+    #[inline]
+    pub fn next_hop(&self, kind: Kind, dst_accel: u32) -> Option<u32> {
+        let dst_node = self.accel_node(dst_accel);
+        let dst_local = self.accel_local(dst_accel);
+        match kind {
+            Kind::AccelUp { node, .. } => {
+                if dst_node == node {
+                    Some(self.accel_down(node, dst_local))
+                } else {
+                    Some(self.sw_to_nic(node))
+                }
+            }
+            Kind::SwToNic { node } => Some(self.nic_up(node)),
+            Kind::NicUp { node } => {
+                let src_leaf = self.node_leaf(node);
+                let dst_leaf = self.node_leaf(dst_node);
+                if src_leaf == dst_leaf {
+                    Some(self.nic_down(dst_node))
+                } else {
+                    Some(self.leaf_up(src_leaf, self.dmodk_spine(dst_node)))
+                }
+            }
+            Kind::LeafUp { spine, .. } => Some(self.spine_down(spine, self.node_leaf(dst_node))),
+            Kind::SpineDown { .. } => Some(self.nic_down(dst_node)),
+            Kind::NicDown { node } => Some(self.nic_to_sw(node)),
+            Kind::NicToSw { node } => Some(self.accel_down(node, dst_local)),
+            Kind::AccelDown { .. } => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{presets, Pattern};
+
+    fn topo32() -> Topology {
+        Topology::new(&presets::scaleout(32, 128.0, Pattern::C1, 0.5))
+    }
+
+    #[test]
+    fn link_ids_are_dense_and_invertible() {
+        let t = topo32();
+        let total = t.total_links();
+        // 32*(16+4) + 2*8*4 = 640 + 64 = 704 links.
+        assert_eq!(total, 704);
+        for link in 0..total {
+            let kind = t.kind_of(link);
+            let back = match kind {
+                Kind::AccelUp { node, accel } => t.accel_up(node, accel),
+                Kind::AccelDown { node, accel } => t.accel_down(node, accel),
+                Kind::SwToNic { node } => t.sw_to_nic(node),
+                Kind::NicToSw { node } => t.nic_to_sw(node),
+                Kind::NicUp { node } => t.nic_up(node),
+                Kind::NicDown { node } => t.nic_down(node),
+                Kind::LeafUp { leaf, spine } => t.leaf_up(leaf, spine),
+                Kind::SpineDown { spine, leaf } => t.spine_down(spine, leaf),
+            };
+            assert_eq!(back, link);
+        }
+    }
+
+    #[test]
+    fn intra_path_is_two_hops() {
+        let t = topo32();
+        // accel 0 (node 0) -> accel 3 (node 0).
+        let up = t.kind_of(t.accel_up(0, 0));
+        let h1 = t.next_hop(up, 3).unwrap();
+        assert_eq!(h1, t.accel_down(0, 3));
+        assert_eq!(t.next_hop(t.kind_of(h1), 3), None);
+    }
+
+    #[test]
+    fn inter_path_crosses_spine_for_remote_leaf() {
+        let t = topo32();
+        // node 0 (leaf 0) -> node 31 (leaf 7), accel 31*8 = 248.
+        let dst = 248;
+        let mut link = t.accel_up(0, 0);
+        let mut path = vec![link];
+        while let Some(n) = t.next_hop(t.kind_of(link), dst) {
+            path.push(n);
+            link = n;
+        }
+        assert_eq!(
+            path,
+            vec![
+                t.accel_up(0, 0),
+                t.sw_to_nic(0),
+                t.nic_up(0),
+                t.leaf_up(0, t.dmodk_spine(31)),
+                t.spine_down(31 % 4, 7),
+                t.nic_down(31),
+                t.nic_to_sw(31),
+                t.accel_down(31, 0),
+            ]
+        );
+    }
+
+    #[test]
+    fn same_leaf_skips_spine() {
+        let t = topo32();
+        // node 0 -> node 1 share leaf 0 (4 nodes per leaf).
+        let dst = 1 * 8 + 5;
+        let k = t.kind_of(t.nic_up(0));
+        assert_eq!(t.next_hop(k, dst), Some(t.nic_down(1)));
+    }
+
+    #[test]
+    fn dmodk_balances_spines() {
+        let t = topo32();
+        let mut counts = [0u32; 4];
+        for d in 0..32 {
+            counts[t.dmodk_spine(d) as usize] += 1;
+        }
+        assert_eq!(counts, [8, 8, 8, 8]);
+    }
+}

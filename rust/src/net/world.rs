@@ -1,0 +1,985 @@
+//! The discrete-event world: accelerators, intra-node switches, NICs and
+//! the inter-node fat-tree, driven by open-loop traffic generators or
+//! closed-loop benchmark drivers.
+//!
+//! ## Message life cycle (paper §1, three communication phases)
+//!
+//! 1. An accelerator generates a message. Inter-node messages are
+//!    segmented into *transactions* of at most `MTU - header` payload bytes
+//!    (the unit a NIC turns into one inter-node packet); intra-node
+//!    messages travel as one transaction. Each transaction crosses the
+//!    intra-node network — accelerator up-link (PCIe §3.2 timing, TLP/DLLP
+//!    overheads) into the all-to-all intra switch, then either a peer
+//!    accelerator's down-link or the switch→NIC segment.
+//! 2. The NIC prepends the inter-node header (60 B) and injects the packet
+//!    into the fat-tree (D-mod-K routed, credit-backpressured, 6 ns hops).
+//! 3. The destination NIC strips the header and re-injects the payload into
+//!    the destination intra network, where the accelerator down-link again
+//!    pays PCIe transaction framing (the paper's "large number of small
+//!    intra packets" effect). The message completes when all its
+//!    transactions arrive.
+//!
+//! Backpressure is end-to-end: every queue is finite, a link only starts
+//! serializing when the next queue has room, and blocked links park on the
+//! downstream queue's waiter list. The paper's headline phenomenon — NIC
+//! boundary congestion spreading both into the intra network and back up
+//! the fat-tree — emerges from exactly this mechanism.
+
+use crate::serial::json::{FromJson, ToJson, Value};
+use std::collections::VecDeque;
+
+use crate::analytic::PcieParams;
+use crate::config::{Arrival, SimConfig};
+use crate::metrics::{Collector, HistSummary};
+pub use crate::metrics::Class;
+use crate::net::link::{Link, LinkModel, Waker};
+use crate::net::slab::Slab;
+use crate::net::topo::{Kind, Topology};
+use crate::rng::Rng;
+use crate::sim::{Engine, EventQueue, Model};
+use crate::units::{Gbps, Time};
+
+/// Maximum messages queued at a source before new offers are dropped
+/// (bounded source buffer; open-loop semantics past saturation).
+const BACKLOG_LIMIT: usize = 64;
+
+/// Source of PCIe serialization latencies for the table build. The default
+/// production implementation executes the AOT-compiled Pallas kernel via
+/// PJRT ([`crate::runtime::HloProvider`]); [`NativeProvider`] is the
+/// bit-equivalent (to f32 rounding) Rust mirror used as fallback and
+/// cross-check oracle.
+pub trait SerProvider {
+    fn pcie_latency_ns(&self, params: &PcieParams, sizes_b: &[u32]) -> Vec<f64>;
+}
+
+/// Native analytic provider (no PJRT).
+pub struct NativeProvider;
+
+impl SerProvider for NativeProvider {
+    fn pcie_latency_ns(&self, params: &PcieParams, sizes_b: &[u32]) -> Vec<f64> {
+        sizes_b.iter().map(|&s| params.latency_ns(s as u64)).collect()
+    }
+}
+
+/// Closed-loop benchmark drivers (validation experiments).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum BenchMode {
+    /// Open-loop generators per the traffic config.
+    None,
+    /// One message bounces between two accelerators (ib_*_lat style).
+    PingPong { a: u32, b: u32, size_b: u32 },
+    /// `inflight` messages kept outstanding src→dst (ib_*_bw style).
+    Window { src: u32, dst: u32, size_b: u32, inflight: u32 },
+}
+
+#[derive(Default, Clone, Copy)]
+struct Unit {
+    msg: u32,
+    dst: u32,
+    payload: u32,
+    /// Accumulated per-hop propagation (applied to delivered latency).
+    prop_ps: u32,
+    /// First transaction of its message (per-message NIC overhead applies
+    /// once, on this unit).
+    first: bool,
+    /// Next link on the path, resolved (and reserved) at tx start.
+    /// u32::MAX means the unit delivers after the current link.
+    next: u32,
+}
+
+#[derive(Default, Clone, Copy)]
+struct Msg {
+    gen_ps: u64,
+    size_b: u32,
+    remaining: u32,
+    inter: bool,
+    src: u32,
+    dst: u32,
+}
+
+struct Feeder {
+    backlog: VecDeque<u32>,
+    /// Transactions of the head message not yet pushed into the up-link.
+    head_txns_left: u32,
+    parked: bool,
+}
+
+/// Simulation events.
+#[derive(Clone, Copy, Debug)]
+pub enum Ev {
+    /// Open-loop arrival at an accelerator.
+    Gen { accel: u32 },
+    /// A link finished serializing its head unit.
+    TxEnd { link: u32 },
+}
+
+/// Full world state (implements [`Model`]).
+pub struct World {
+    pub cfg: SimConfig,
+    pub topo: Topology,
+    links: Vec<Link>,
+    kinds: Vec<Kind>,
+    units: Slab<Unit>,
+    msgs: Slab<Msg>,
+    feeders: Vec<Feeder>,
+    rngs: Vec<Rng>,
+    pub metrics: Collector,
+    bench: BenchMode,
+    /// Sorted (payload, latency) table for the accel PCIe link model,
+    /// built from a [`SerProvider`] (normally the AOT HLO kernel).
+    pcie_table: Vec<(u32, Time)>,
+    pub table_misses: u64,
+    txn_payload: u32,
+    header_b: u32,
+    warmup: Time,
+    end: Time,
+    mean_ia_ps: f64,
+    /// Wire-byte snapshots at warm-up (for utilization deltas).
+    wire_snapshot: Vec<u64>,
+    /// Whole-run conservation counters (window-independent).
+    pub injected_msgs: u64,
+    pub completed_msgs: u64,
+    /// Reusable scratch for waking waiter lists without reallocating.
+    waiter_scratch: Vec<Waker>,
+}
+
+impl World {
+    pub fn new(
+        cfg: SimConfig,
+        provider: &dyn SerProvider,
+        bench: BenchMode,
+        extra_sizes: &[u32],
+    ) -> anyhow::Result<World> {
+        cfg.validate().map_err(|e| anyhow::anyhow!("invalid config: {e}"))?;
+        let topo = Topology::new(&cfg);
+        let txn_payload = (cfg.node.nic.mtu_b - cfg.node.nic.header_b) as u32;
+
+        // -- link construction ------------------------------------------
+        let total = topo.total_links() as usize;
+        let mut links = Vec::with_capacity(total);
+        let mut kinds = Vec::with_capacity(total);
+        let n = &cfg.node;
+        let inter = &cfg.inter;
+        let hop = Time::from_ns(inter.hop_latency_ns);
+        for id in 0..topo.total_links() {
+            let kind = topo.kind_of(id);
+            let link = match kind {
+                Kind::AccelUp { .. } => Link::new(
+                    LinkModel::Pcie(n.accel_link),
+                    n.accel_queue_b,
+                    Time::ZERO,
+                    Time::ZERO,
+                ),
+                Kind::AccelDown { .. } => Link::new(
+                    LinkModel::Pcie(n.accel_link),
+                    n.switch_queue_b,
+                    Time::ZERO,
+                    Time::ZERO,
+                ),
+                Kind::SwToNic { .. } => Link::new(
+                    LinkModel::Raw(Gbps(n.nic.intra_side_gbps)),
+                    n.switch_queue_b,
+                    Time::ZERO,
+                    Time::ZERO,
+                ),
+                Kind::NicToSw { .. } => Link::new(
+                    LinkModel::Raw(Gbps(n.nic.intra_side_gbps)),
+                    n.nic.ingress_buf_b,
+                    Time::ZERO,
+                    Time::ZERO,
+                ),
+                Kind::NicUp { .. } => Link::new(
+                    LinkModel::Raw(Gbps(n.nic.inter_gbps)),
+                    n.nic.egress_buf_b,
+                    Time::from_ns(n.nic.per_msg_ns),
+                    hop,
+                ),
+                Kind::NicDown { .. } => Link::new(
+                    LinkModel::Raw(Gbps(inter.link_gbps)),
+                    inter.port_buf_b,
+                    Time::ZERO,
+                    hop,
+                ),
+                Kind::LeafUp { .. } | Kind::SpineDown { .. } => Link::new(
+                    LinkModel::Raw(Gbps(inter.link_gbps)),
+                    inter.port_buf_b,
+                    Time::ZERO,
+                    hop,
+                ),
+            };
+            links.push(link);
+            kinds.push(kind);
+        }
+
+        // -- PCIe serialization table (the HLO/PJRT hot-path feed) -------
+        let mut sizes: Vec<u32> = Vec::new();
+        let push_msg_sizes = |sizes: &mut Vec<u32>, s: u32| {
+            sizes.push(s); // intra whole-message unit
+            sizes.push(txn_payload);
+            let rem = s % txn_payload;
+            if rem != 0 {
+                sizes.push(rem);
+            }
+        };
+        push_msg_sizes(&mut sizes, cfg.traffic.msg_size_b as u32);
+        for &s in extra_sizes {
+            push_msg_sizes(&mut sizes, s);
+        }
+        sizes.sort_unstable();
+        sizes.dedup();
+        let lats = provider.pcie_latency_ns(&n.accel_link, &sizes);
+        let pcie_table: Vec<(u32, Time)> =
+            sizes.iter().zip(lats).map(|(&s, l)| (s, Time::from_ns(l))).collect();
+
+        // -- feeders, rngs, metrics --------------------------------------
+        let accels = topo.total_accels() as usize;
+        let root = Rng::new(cfg.seed);
+        let rngs = (0..accels).map(|i| root.fork(i as u64)).collect();
+        let feeders = (0..accels)
+            .map(|_| Feeder { backlog: VecDeque::new(), head_txns_left: 0, parked: false })
+            .collect();
+
+        let warmup = Time::from_us(cfg.warmup_us);
+        let end = warmup + Time::from_us(cfg.measure_us);
+        let raw_gbps = n.accel_link.width_lanes * n.accel_link.datarate_gbps;
+        let mean_ia_ps = if cfg.traffic.load > 0.0 {
+            cfg.traffic.msg_size_b as f64 * 8000.0 / (cfg.traffic.load * raw_gbps)
+        } else {
+            f64::INFINITY
+        };
+
+        // Intra whole-message units must fit the queues they traverse.
+        if cfg.traffic.msg_size_b > n.accel_queue_b || cfg.traffic.msg_size_b > n.switch_queue_b {
+            anyhow::bail!(
+                "msg_size_b {} exceeds intra queue capacity",
+                cfg.traffic.msg_size_b
+            );
+        }
+
+        Ok(World {
+            metrics: Collector::new(warmup, end),
+            wire_snapshot: vec![0; total],
+            cfg,
+            topo,
+            links,
+            kinds,
+            units: Slab::with_capacity(4096),
+            msgs: Slab::with_capacity(4096),
+            feeders,
+            rngs,
+            bench,
+            pcie_table,
+            table_misses: 0,
+            injected_msgs: 0,
+            completed_msgs: 0,
+            waiter_scratch: Vec::new(),
+            txn_payload,
+            header_b: 0, // set below
+            warmup,
+            end,
+            mean_ia_ps,
+        }
+        .finish_init())
+    }
+
+    fn finish_init(mut self) -> World {
+        self.header_b = self.cfg.node.nic.header_b as u32;
+        self
+    }
+
+    pub fn warmup_time(&self) -> Time {
+        self.warmup
+    }
+    pub fn end_time(&self) -> Time {
+        self.end
+    }
+
+    /// Schedule the initial events (generators and/or bench injections).
+    pub fn prime(&mut self, q: &mut EventQueue<Ev>) {
+        if self.cfg.traffic.load > 0.0 {
+            for a in 0..self.topo.total_accels() {
+                let dt = self.interarrival(a);
+                q.push(Time::ZERO + dt, Ev::Gen { accel: a });
+            }
+        }
+        match self.bench {
+            BenchMode::None => {}
+            BenchMode::PingPong { a, b, size_b } => {
+                self.inject(Time::ZERO, a, b, size_b, q);
+            }
+            BenchMode::Window { src, dst, size_b, inflight } => {
+                for i in 0..inflight {
+                    self.inject(Time::from_ps(i as u64), src, dst, size_b, q);
+                }
+            }
+        }
+    }
+
+    #[inline]
+    fn interarrival(&mut self, accel: u32) -> Time {
+        let mean = self.mean_ia_ps;
+        match self.cfg.traffic.arrival {
+            Arrival::Poisson => Time::from_ps(self.rngs[accel as usize].exponential(mean) as u64),
+            Arrival::Deterministic => Time::from_ps(mean as u64),
+        }
+    }
+
+    /// Wire bytes a unit occupies on a link of the given kind.
+    #[inline]
+    fn wire_bytes(&self, kind: Kind, payload: u32) -> u64 {
+        match kind {
+            Kind::NicUp { .. } | Kind::NicDown { .. } | Kind::LeafUp { .. } | Kind::SpineDown { .. } => {
+                (payload + self.header_b) as u64
+            }
+            _ => payload as u64,
+        }
+    }
+
+    /// Serialization time of `unit` on link `l` (table-driven for PCIe).
+    #[inline]
+    fn ser_time(&mut self, l: u32, uid: u32) -> Time {
+        let unit = *self.units.get(uid);
+        let link = &self.links[l as usize];
+        let kind = self.kinds[l as usize];
+        let base = match &link.model {
+            LinkModel::Raw(g) => g.ser_time(self.wire_bytes(kind, unit.payload)),
+            LinkModel::Pcie(p) => match self.pcie_table.binary_search_by_key(&unit.payload, |e| e.0) {
+                Ok(i) => self.pcie_table[i].1,
+                Err(_) => {
+                    self.table_misses += 1;
+                    p.latency(unit.payload as u64)
+                }
+            },
+        };
+        // CELLIA root-complex path: device-to-device intra traffic crosses
+        // the PCIe fabric twice per segment (EP→RC→CPU→RC→EP).
+        let bounce = self.cfg.node.rc_cpu_bounce
+            && !self.msgs.get(unit.msg).inter
+            && matches!(kind, Kind::AccelUp { .. } | Kind::AccelDown { .. });
+        let base = if bounce { Time::from_ps(base.as_ps() * 2) } else { base };
+        // Per-message processing overhead (WQE/doorbell/DMA setup) is paid
+        // once per message, on its first transaction, and pipelines with
+        // wire serialization (the engine processes the next WQE while the
+        // current payload is on the wire) — so it floors rather than adds.
+        if unit.first {
+            base.max(link.per_unit)
+        } else {
+            base
+        }
+    }
+
+    fn txn_count(&self, m: &Msg) -> u32 {
+        if m.inter {
+            (m.size_b + self.txn_payload - 1) / self.txn_payload
+        } else {
+            1
+        }
+    }
+
+    fn txn_payload_at(&self, m: &Msg, idx_from_end: u32) -> u32 {
+        if !m.inter {
+            return m.size_b;
+        }
+        // idx_from_end == head_txns_left; the *last* txn carries the tail.
+        if idx_from_end == 1 {
+            let rem = m.size_b % self.txn_payload;
+            if rem != 0 {
+                return rem;
+            }
+        }
+        self.txn_payload
+    }
+
+    /// Inject a message (bench drivers / generators).
+    fn inject(&mut self, now: Time, src: u32, dst: u32, size_b: u32, q: &mut EventQueue<Ev>) {
+        self.injected_msgs += 1;
+        let inter = self.topo.accel_node(src) != self.topo.accel_node(dst);
+        let m = Msg { gen_ps: now.as_ps(), size_b, remaining: 0, inter, src, dst };
+        let txns = self.txn_count(&m);
+        let mid = self.msgs.insert(Msg { remaining: txns, ..m });
+        let f = &mut self.feeders[src as usize];
+        if f.backlog.is_empty() {
+            f.head_txns_left = txns;
+        }
+        f.backlog.push_back(mid);
+        self.pump(src, now, q);
+    }
+
+    /// Push as many head-of-backlog transactions into the up-link as fit.
+    fn pump(&mut self, accel: u32, now: Time, q: &mut EventQueue<Ev>) {
+        let node = self.topo.accel_node(accel);
+        let local = self.topo.accel_local(accel);
+        let up = self.topo.accel_up(node, local);
+        loop {
+            let f = &self.feeders[accel as usize];
+            let Some(&mid) = f.backlog.front() else { return };
+            let left = f.head_txns_left;
+            debug_assert!(left > 0);
+            let m = *self.msgs.get(mid);
+            let payload = self.txn_payload_at(&m, left);
+            let wire = payload as u64;
+            if !self.links[up as usize].has_room(wire) {
+                if !self.feeders[accel as usize].parked {
+                    self.links[up as usize].add_waiter(Waker::Feeder(accel));
+                    self.feeders[accel as usize].parked = true;
+                }
+                return;
+            }
+            let first = left == self.txn_count(&m);
+            let uid = self
+                .units
+                .insert(Unit { msg: mid, dst: m.dst, payload, prop_ps: 0, first, next: u32::MAX });
+            self.links[up as usize].enqueue(uid, wire);
+            self.try_start(up, now, q);
+            let f = &mut self.feeders[accel as usize];
+            f.head_txns_left -= 1;
+            if f.head_txns_left == 0 {
+                f.backlog.pop_front();
+                if let Some(&next) = f.backlog.front() {
+                    let txns = self.txn_count(self.msgs.get(next));
+                    self.feeders[accel as usize].head_txns_left = txns;
+                }
+            }
+        }
+    }
+
+    /// Try to begin serializing the head unit of link `l` (credit check on
+    /// the next queue, reserve-on-start).
+    fn try_start(&mut self, l: u32, now: Time, q: &mut EventQueue<Ev>) {
+        let li = l as usize;
+        if self.links[li].busy {
+            return;
+        }
+        let Some(&uid) = self.links[li].queue.front() else { return };
+        let unit = *self.units.get(uid);
+        let kind = self.kinds[li];
+        match self.topo.next_hop(kind, unit.dst) {
+            Some(nl) => {
+                let wire_next = self.wire_bytes(self.kinds[nl as usize], unit.payload);
+                if !self.links[nl as usize].has_room(wire_next) {
+                    if !self.links[li].parked {
+                        self.links[nl as usize].add_waiter(Waker::Link(l));
+                        self.links[li].parked = true;
+                    }
+                    return;
+                }
+                self.links[nl as usize].reserve(wire_next);
+                self.units.get_mut(uid).next = nl;
+            }
+            None => self.units.get_mut(uid).next = u32::MAX,
+        }
+        let ser = self.ser_time(l, uid);
+        self.links[li].busy = true;
+        q.push(now + ser, Ev::TxEnd { link: l });
+    }
+
+    fn tx_end(&mut self, l: u32, now: Time, q: &mut EventQueue<Ev>) {
+        let li = l as usize;
+        let uid = self.links[li].queue.pop_front().expect("busy link has head");
+        self.links[li].busy = false;
+        let unit = *self.units.get(uid);
+        let kind = self.kinds[li];
+        let wire_here = self.wire_bytes(kind, unit.payload);
+        self.links[li].release(wire_here);
+        self.links[li].tx_bytes += wire_here;
+
+        // Wake everyone blocked on this queue's space (scratch-swap keeps
+        // the waiter Vec's capacity on the link instead of reallocating).
+        if !self.links[li].waiters.is_empty() {
+            let mut waiters = std::mem::take(&mut self.waiter_scratch);
+            std::mem::swap(&mut waiters, &mut self.links[li].waiters);
+            for &w in &waiters {
+                match w {
+                    Waker::Link(u) => {
+                        self.links[u as usize].parked = false;
+                        self.try_start(u, now, q);
+                    }
+                    Waker::Feeder(a) => {
+                        self.feeders[a as usize].parked = false;
+                        self.pump(a, now, q);
+                    }
+                }
+            }
+            waiters.clear();
+            self.waiter_scratch = waiters;
+        }
+
+        self.units.get_mut(uid).prop_ps += self.links[li].prop.as_ps() as u32;
+        let _ = kind;
+        match unit.next {
+            u32::MAX => self.deliver(uid, now, q),
+            nl => {
+                self.links[nl as usize].push_reserved(uid);
+                self.try_start(nl, now, q);
+            }
+        }
+        self.try_start(l, now, q);
+    }
+
+    fn deliver(&mut self, uid: u32, now: Time, q: &mut EventQueue<Ev>) {
+        let unit = *self.units.get(uid);
+        self.units.remove(uid);
+        let mid = unit.msg;
+        let m = *self.msgs.get(mid);
+        let class = if m.inter { Class::Inter } else { Class::Intra };
+        let eff = now + Time::from_ps(unit.prop_ps as u64);
+        self.metrics.on_unit_delivered(eff, class, unit.payload as u64);
+        let rem = {
+            let mm = self.msgs.get_mut(mid);
+            mm.remaining -= 1;
+            mm.remaining
+        };
+        if rem == 0 {
+            self.completed_msgs += 1;
+            self.metrics.on_msg_complete(Time::from_ps(m.gen_ps), eff, class, m.size_b as u64);
+            self.msgs.remove(mid);
+            match self.bench {
+                BenchMode::None => {}
+                BenchMode::PingPong { size_b, .. } => {
+                    // bounce back
+                    self.inject(eff.max(now), m.dst, m.src, size_b, q);
+                }
+                BenchMode::Window { src, dst, size_b, .. } => {
+                    if now < self.end {
+                        self.inject(now, src, dst, size_b, q);
+                    }
+                }
+            }
+        }
+    }
+
+    fn gen(&mut self, accel: u32, now: Time, q: &mut EventQueue<Ev>) {
+        if now >= self.end {
+            return;
+        }
+        let dt = self.interarrival(accel);
+        q.push(now + dt, Ev::Gen { accel });
+
+        let a = self.topo.accels_per_node;
+        let nodes = self.topo.nodes;
+        let node = self.topo.accel_node(accel);
+        let local = self.topo.accel_local(accel);
+        let f_inter = self.cfg.traffic.pattern.frac_inter();
+        let rng = &mut self.rngs[accel as usize];
+        let go_inter = (a == 1 || rng.next_f64() < f_inter) && nodes > 1 && f_inter > 0.0;
+        let dst = if go_inter {
+            let mut nd = rng.below((nodes - 1) as u64) as u32;
+            if nd >= node {
+                nd += 1;
+            }
+            nd * a + rng.below(a as u64) as u32
+        } else {
+            if a == 1 {
+                return; // no possible intra destination
+            }
+            let mut la = rng.below((a - 1) as u64) as u32;
+            if la >= local {
+                la += 1;
+            }
+            node * a + la
+        };
+        let size = self.cfg.traffic.msg_size_b as u32;
+        let accepted = self.feeders[accel as usize].backlog.len() < BACKLOG_LIMIT;
+        self.metrics.on_offer(now, size as u64, accepted);
+        if accepted {
+            self.inject(now, accel, dst, size, q);
+        }
+    }
+
+    /// Snapshot wire counters at the warm-up boundary.
+    pub fn snapshot_wire(&mut self) {
+        for (i, l) in self.links.iter().enumerate() {
+            self.wire_snapshot[i] = l.tx_bytes;
+        }
+    }
+
+    fn wire_delta_gbs(&self, filter: impl Fn(Kind) -> bool) -> f64 {
+        let secs = self.metrics.measure_secs();
+        let mut bytes = 0u64;
+        for (i, l) in self.links.iter().enumerate() {
+            if filter(self.kinds[i]) {
+                bytes += l.tx_bytes - self.wire_snapshot[i];
+            }
+        }
+        bytes as f64 / secs / 1e9
+    }
+
+    /// Build the final report (after the run completes).
+    pub fn report(&self, events: u64, wall_ms: f64) -> SimReport {
+        let m = &self.metrics;
+        let raw_gbps = self.cfg.node.accel_link.width_lanes * self.cfg.node.accel_link.datarate_gbps;
+        SimReport {
+            pattern: self.cfg.traffic.pattern.name(),
+            load: self.cfg.traffic.load,
+            nodes: self.cfg.inter.nodes,
+            accels: self.topo.total_accels() as usize,
+            aggregated_intra_gbs: self.cfg.aggregated_intra_gbs(),
+            offered_gbs: self.cfg.traffic.load * raw_gbps / 8.0 * self.topo.total_accels() as f64,
+            intra_tput_gbs: m.strict_gbs(Class::Intra),
+            intra_drain_gbs: m.drain_gbs(Class::Intra),
+            intra_lat: m.intra_hist.summary(),
+            inter_tput_gbs: m.strict_gbs(Class::Inter),
+            inter_drain_gbs: m.drain_gbs(Class::Inter),
+            fct: m.fct_hist.summary(),
+            intra_wire_gbs: self
+                .wire_delta_gbs(|k| matches!(k, Kind::AccelUp { .. } | Kind::AccelDown { .. })),
+            inter_wire_gbs: self.wire_delta_gbs(|k| matches!(k, Kind::NicUp { .. })),
+            drop_frac: m.drop_frac(),
+            delivered_msgs: m.delivered_msgs,
+            offered_msgs: m.offered_msgs,
+            events,
+            wall_ms,
+            table_misses: self.table_misses,
+        }
+    }
+
+    /// Test/diagnostic access: (queued bytes, capacity) of a link.
+    pub fn link_occupancy(&self, l: u32) -> (u64, u64) {
+        (self.links[l as usize].used_b, self.links[l as usize].cap_b)
+    }
+
+    /// Invariant check used by property tests: byte accounting of every
+    /// queue is within capacity and non-negative; parked flags consistent.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        for (i, l) in self.links.iter().enumerate() {
+            if l.used_b > l.cap_b {
+                return Err(format!("link {i}: used {} > cap {}", l.used_b, l.cap_b));
+            }
+            if l.busy && l.queue.is_empty() {
+                return Err(format!("link {i}: busy with empty queue"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Number of in-flight units (for drain assertions).
+    pub fn units_in_flight(&self) -> usize {
+        self.units.len()
+    }
+
+    /// Messages injected but not yet completed (incl. source backlogs).
+    pub fn msgs_in_flight(&self) -> usize {
+        self.msgs.len()
+    }
+}
+
+impl Model for World {
+    type Event = Ev;
+
+    #[inline]
+    fn handle(&mut self, now: Time, ev: Ev, q: &mut EventQueue<Ev>) {
+        match ev {
+            Ev::Gen { accel } => self.gen(accel, now, q),
+            Ev::TxEnd { link } => self.tx_end(link, now, q),
+        }
+    }
+}
+
+/// Everything a paper figure needs from one simulation run.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    pub pattern: String,
+    pub load: f64,
+    pub nodes: usize,
+    pub accels: usize,
+    pub aggregated_intra_gbs: f64,
+    /// Offered load in GB/s across all accelerators.
+    pub offered_gbs: f64,
+    /// Paper semantics: generated-and-delivered inside the window.
+    pub intra_tput_gbs: f64,
+    pub intra_drain_gbs: f64,
+    pub intra_lat: HistSummary,
+    pub inter_tput_gbs: f64,
+    pub inter_drain_gbs: f64,
+    pub fct: HistSummary,
+    /// Wire utilization (includes headers/overheads).
+    pub intra_wire_gbs: f64,
+    pub inter_wire_gbs: f64,
+    pub drop_frac: f64,
+    pub delivered_msgs: u64,
+    pub offered_msgs: u64,
+    pub events: u64,
+    pub wall_ms: f64,
+    pub table_misses: u64,
+}
+
+impl ToJson for crate::metrics::HistSummary {
+    fn to_json(&self) -> Value {
+        Value::obj()
+            .with("count", self.count)
+            .with("mean_ns", self.mean_ns)
+            .with("p50_ns", self.p50_ns)
+            .with("p99_ns", self.p99_ns)
+            .with("p999_ns", self.p999_ns)
+            .with("max_ns", self.max_ns)
+            .with("min_ns", self.min_ns)
+    }
+}
+
+impl FromJson for crate::metrics::HistSummary {
+    fn from_json(v: &Value) -> anyhow::Result<Self> {
+        Ok(crate::metrics::HistSummary {
+            count: v.u64_of("count")?,
+            mean_ns: v.f64_of("mean_ns")?,
+            p50_ns: v.f64_of("p50_ns")?,
+            p99_ns: v.f64_of("p99_ns")?,
+            p999_ns: v.f64_of("p999_ns")?,
+            max_ns: v.f64_of("max_ns")?,
+            min_ns: v.f64_of("min_ns")?,
+        })
+    }
+}
+
+impl ToJson for SimReport {
+    fn to_json(&self) -> Value {
+        Value::obj()
+            .with("pattern", self.pattern.as_str())
+            .with("load", self.load)
+            .with("nodes", self.nodes)
+            .with("accels", self.accels)
+            .with("aggregated_intra_gbs", self.aggregated_intra_gbs)
+            .with("offered_gbs", self.offered_gbs)
+            .with("intra_tput_gbs", self.intra_tput_gbs)
+            .with("intra_drain_gbs", self.intra_drain_gbs)
+            .with("intra_lat", self.intra_lat.to_json())
+            .with("inter_tput_gbs", self.inter_tput_gbs)
+            .with("inter_drain_gbs", self.inter_drain_gbs)
+            .with("fct", self.fct.to_json())
+            .with("intra_wire_gbs", self.intra_wire_gbs)
+            .with("inter_wire_gbs", self.inter_wire_gbs)
+            .with("drop_frac", self.drop_frac)
+            .with("delivered_msgs", self.delivered_msgs)
+            .with("offered_msgs", self.offered_msgs)
+            .with("events", self.events)
+            .with("wall_ms", self.wall_ms)
+            .with("table_misses", self.table_misses)
+    }
+}
+
+impl FromJson for SimReport {
+    fn from_json(v: &Value) -> anyhow::Result<Self> {
+        Ok(SimReport {
+            pattern: v.str_of("pattern")?.to_string(),
+            load: v.f64_of("load")?,
+            nodes: v.usize_of("nodes")?,
+            accels: v.usize_of("accels")?,
+            aggregated_intra_gbs: v.f64_of("aggregated_intra_gbs")?,
+            offered_gbs: v.f64_of("offered_gbs")?,
+            intra_tput_gbs: v.f64_of("intra_tput_gbs")?,
+            intra_drain_gbs: v.f64_of("intra_drain_gbs")?,
+            intra_lat: FromJson::from_json(v.req("intra_lat")?)?,
+            inter_tput_gbs: v.f64_of("inter_tput_gbs")?,
+            inter_drain_gbs: v.f64_of("inter_drain_gbs")?,
+            fct: FromJson::from_json(v.req("fct")?)?,
+            intra_wire_gbs: v.f64_of("intra_wire_gbs")?,
+            inter_wire_gbs: v.f64_of("inter_wire_gbs")?,
+            drop_frac: v.f64_of("drop_frac")?,
+            delivered_msgs: v.u64_of("delivered_msgs")?,
+            offered_msgs: v.u64_of("offered_msgs")?,
+            events: v.u64_of("events")?,
+            wall_ms: v.f64_of("wall_ms")?,
+            table_misses: v.u64_of("table_misses")?,
+        })
+    }
+}
+
+/// Convenience wrapper: build, prime, run warm-up + measurement, report.
+pub struct Sim {
+    engine: Engine<World>,
+}
+
+impl Sim {
+    pub fn new(cfg: SimConfig, provider: &dyn SerProvider, bench: BenchMode) -> anyhow::Result<Sim> {
+        Self::with_extra_sizes(cfg, provider, bench, &[])
+    }
+
+    pub fn with_extra_sizes(
+        cfg: SimConfig,
+        provider: &dyn SerProvider,
+        bench: BenchMode,
+        extra_sizes: &[u32],
+    ) -> anyhow::Result<Sim> {
+        let world = World::new(cfg, provider, bench, extra_sizes)?;
+        let mut engine = Engine::new(world);
+        let mut q = std::mem::replace(&mut engine.queue, EventQueue::new());
+        engine.model.prime(&mut q);
+        engine.queue = q;
+        Ok(Sim { engine })
+    }
+
+    /// Run the configured warm-up + measurement windows and report.
+    pub fn run(mut self) -> SimReport {
+        let t0 = std::time::Instant::now();
+        let warmup = self.engine.model.warmup_time();
+        let end = self.engine.model.end_time();
+        let s1 = self.engine.run_until(warmup);
+        self.engine.model.snapshot_wire();
+        let s2 = self.engine.run_until(end);
+        let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+        self.engine.model.report(s1.events + s2.events, wall_ms)
+    }
+
+    /// Access the world (tests).
+    pub fn world(&self) -> &World {
+        &self.engine.model
+    }
+    pub fn world_mut(&mut self) -> &mut World {
+        &mut self.engine.model
+    }
+    pub fn engine_mut(&mut self) -> &mut Engine<World> {
+        &mut self.engine
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{presets, Pattern};
+
+    fn small_cfg(load: f64, pattern: Pattern) -> SimConfig {
+        let mut cfg = presets::scaleout(32, 128.0, pattern, load);
+        cfg.warmup_us = 10.0;
+        cfg.measure_us = 10.0;
+        cfg
+    }
+
+    #[test]
+    fn zero_load_produces_nothing() {
+        let sim = Sim::new(small_cfg(0.0, Pattern::C1), &NativeProvider, BenchMode::None).unwrap();
+        let r = sim.run();
+        assert_eq!(r.delivered_msgs, 0);
+        assert_eq!(r.events, 0);
+    }
+
+    #[test]
+    fn light_load_delivers_everything_offered() {
+        let r = Sim::new(small_cfg(0.05, Pattern::C3), &NativeProvider, BenchMode::None)
+            .unwrap()
+            .run();
+        assert!(r.delivered_msgs > 100, "delivered {}", r.delivered_msgs);
+        assert_eq!(r.drop_frac, 0.0);
+        // At 5% load nothing saturates: strict ~= offered for both classes.
+        let total = r.intra_tput_gbs + r.inter_tput_gbs;
+        assert!(
+            (total - r.offered_gbs).abs() / r.offered_gbs < 0.15,
+            "strict {total} vs offered {}",
+            r.offered_gbs
+        );
+    }
+
+    #[test]
+    fn c5_has_no_inter_traffic() {
+        let r = Sim::new(small_cfg(0.3, Pattern::C5), &NativeProvider, BenchMode::None)
+            .unwrap()
+            .run();
+        assert_eq!(r.inter_tput_gbs, 0.0);
+        assert_eq!(r.fct.count, 0);
+        assert!(r.intra_tput_gbs > 0.0);
+    }
+
+    #[test]
+    fn intra_latency_floor_matches_two_pcie_hops() {
+        // At very light load, intra latency ~= 2 x PCIe(4096) on a 128 Gbps
+        // 128B-MPS link.
+        let cfg = small_cfg(0.01, Pattern::C5);
+        let per_hop = cfg.node.accel_link.latency_ns(4096);
+        let r = Sim::new(cfg, &NativeProvider, BenchMode::None).unwrap().run();
+        let floor = 2.0 * per_hop;
+        assert!(
+            r.intra_lat.mean_ns >= floor * 0.95 && r.intra_lat.mean_ns < floor * 2.0,
+            "mean {} floor {floor}",
+            r.intra_lat.mean_ns
+        );
+    }
+
+    #[test]
+    fn overload_collapses_strict_throughput() {
+        // C1 at full load on 512 GB/s: NIC egress is hugely oversubscribed;
+        // strict intra+inter throughput must fall well below offered and
+        // drops must appear.
+        let mut cfg = presets::scaleout(32, 512.0, Pattern::C1, 1.0);
+        cfg.warmup_us = 20.0;
+        cfg.measure_us = 20.0;
+        let r = Sim::new(cfg, &NativeProvider, BenchMode::None).unwrap().run();
+        assert!(r.drop_frac > 0.1, "drop_frac {}", r.drop_frac);
+        assert!(
+            r.inter_tput_gbs < r.offered_gbs * 0.2 * 0.9,
+            "inter strict {} offered inter {}",
+            r.inter_tput_gbs,
+            r.offered_gbs * 0.2
+        );
+    }
+
+    #[test]
+    fn pingpong_round_trips() {
+        let mut cfg = presets::cellia();
+        cfg.warmup_us = 5.0;
+        cfg.measure_us = 50.0;
+        let sim = Sim::with_extra_sizes(
+            cfg,
+            &NativeProvider,
+            BenchMode::PingPong { a: 0, b: 1, size_b: 4096 },
+            &[4096],
+        )
+        .unwrap();
+        let r = sim.run();
+        assert!(r.fct.count > 10, "round trips {}", r.fct.count);
+        assert!(r.fct.mean_ns > 300.0 && r.fct.mean_ns < 10_000.0, "{}", r.fct.mean_ns);
+    }
+
+    #[test]
+    fn window_bw_saturates_ib_link() {
+        let mut cfg = presets::cellia();
+        cfg.warmup_us = 20.0;
+        cfg.measure_us = 100.0;
+        let sim = Sim::with_extra_sizes(
+            cfg,
+            &NativeProvider,
+            BenchMode::Window { src: 0, dst: 1, size_b: 1 << 20, inflight: 4 },
+            &[1 << 20],
+        )
+        .unwrap();
+        let r = sim.run();
+        // 1 MiB messages: drain throughput should approach the EDR payload
+        // bound (~12.3 GB/s) and certainly exceed 10 GB/s.
+        assert!(r.inter_drain_gbs > 10.0, "drain {}", r.inter_drain_gbs);
+        assert!(r.inter_drain_gbs < 12.6, "drain {}", r.inter_drain_gbs);
+    }
+
+    #[test]
+    fn invariants_hold_after_heavy_run() {
+        let mut cfg = presets::scaleout(32, 256.0, Pattern::C1, 0.9);
+        cfg.warmup_us = 10.0;
+        cfg.measure_us = 10.0;
+        let mut sim = Sim::new(cfg, &NativeProvider, BenchMode::None).unwrap();
+        let warm = sim.world().warmup_time();
+        sim.engine_mut().run_until(warm);
+        sim.world().check_invariants().unwrap();
+        let end = sim.world().end_time();
+        sim.engine_mut().run_until(end);
+        sim.world().check_invariants().unwrap();
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let run = || {
+            Sim::new(small_cfg(0.4, Pattern::C2), &NativeProvider, BenchMode::None)
+                .unwrap()
+                .run()
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.delivered_msgs, b.delivered_msgs);
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.intra_tput_gbs, b.intra_tput_gbs);
+        assert_eq!(a.fct.mean_ns, b.fct.mean_ns);
+    }
+
+    #[test]
+    fn no_table_misses_for_standard_run() {
+        let r = Sim::new(small_cfg(0.2, Pattern::C2), &NativeProvider, BenchMode::None)
+            .unwrap()
+            .run();
+        assert_eq!(r.table_misses, 0);
+    }
+}

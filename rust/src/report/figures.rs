@@ -1,0 +1,175 @@
+//! Figures 5–8: group sweep reports into the per-subfigure series the
+//! paper plots (metric vs traffic load, one curve per pattern, one
+//! subfigure per aggregated intra bandwidth) and render ASCII plots.
+
+use crate::net::world::SimReport;
+
+/// Which paper figure a series belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FigureKind {
+    /// Fig 5/7 top row: intra-node throughput (GB/s) vs load.
+    IntraThroughput,
+    /// Fig 5/7 bottom row: intra-node latency (µs, mean) vs load.
+    IntraLatency,
+    /// Fig 6/8 top row: inter-node throughput (GB/s) vs load.
+    InterThroughput,
+    /// Fig 6/8 bottom row: flow completion time (µs, mean) vs load.
+    Fct,
+}
+
+impl FigureKind {
+    pub fn metric(&self, r: &SimReport) -> f64 {
+        match self {
+            FigureKind::IntraThroughput => r.intra_tput_gbs,
+            FigureKind::IntraLatency => r.intra_lat.mean_ns / 1_000.0,
+            FigureKind::InterThroughput => r.inter_tput_gbs,
+            FigureKind::Fct => r.fct.mean_ns / 1_000.0,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            FigureKind::IntraThroughput => "intra throughput (GB/s)",
+            FigureKind::IntraLatency => "intra latency (us)",
+            FigureKind::InterThroughput => "inter throughput (GB/s)",
+            FigureKind::Fct => "FCT (us)",
+        }
+    }
+}
+
+/// One curve: a pattern's metric across the load axis.
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub pattern: String,
+    pub loads: Vec<f64>,
+    pub values: Vec<f64>,
+}
+
+/// One subfigure: all pattern curves at one intra-bandwidth config.
+#[derive(Debug, Clone)]
+pub struct SubFigure {
+    pub intra_gbs: f64,
+    pub kind_label: &'static str,
+    pub series: Vec<Series>,
+}
+
+/// Group sweep reports into subfigures for a metric.
+pub fn figure_series(reports: &[SimReport], kind: FigureKind) -> Vec<SubFigure> {
+    let mut bws: Vec<f64> = reports.iter().map(|r| r.aggregated_intra_gbs).collect();
+    bws.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    bws.dedup();
+    let mut out = Vec::new();
+    for bw in bws {
+        let mut patterns: Vec<String> = reports
+            .iter()
+            .filter(|r| r.aggregated_intra_gbs == bw)
+            .map(|r| r.pattern.clone())
+            .collect();
+        patterns.dedup();
+        let mut series = Vec::new();
+        for p in patterns {
+            let mut pts: Vec<(f64, f64)> = reports
+                .iter()
+                .filter(|r| r.aggregated_intra_gbs == bw && r.pattern == p)
+                .map(|r| (r.load, kind.metric(r)))
+                .collect();
+            pts.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            series.push(Series {
+                pattern: p,
+                loads: pts.iter().map(|x| x.0).collect(),
+                values: pts.iter().map(|x| x.1).collect(),
+            });
+        }
+        out.push(SubFigure { intra_gbs: bw, kind_label: kind.label(), series });
+    }
+    out
+}
+
+/// Render a subfigure as an ASCII table (load columns × pattern rows).
+pub fn render_subfigure(sf: &SubFigure) -> String {
+    let mut out = format!("-- {} @ {} GB/s intra --\n", sf.kind_label, sf.intra_gbs);
+    if sf.series.is_empty() {
+        return out;
+    }
+    out.push_str(&format!("{:>8}", "load"));
+    for l in &sf.series[0].loads {
+        out.push_str(&format!("{:>9.2}", l));
+    }
+    out.push('\n');
+    for s in &sf.series {
+        out.push_str(&format!("{:>8}", s.pattern));
+        for v in &s.values {
+            out.push_str(&format!("{:>9.2}", v));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Render the full figure (all bandwidths) for terminal display.
+pub fn render_figure(reports: &[SimReport], kind: FigureKind) -> String {
+    figure_series(reports, kind).iter().map(render_subfigure).collect::<Vec<_>>().join("\n")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::HistSummary;
+
+    fn report(pattern: &str, load: f64, bw: f64, intra: f64, fct_ns: f64) -> SimReport {
+        SimReport {
+            pattern: pattern.into(),
+            load,
+            nodes: 32,
+            accels: 256,
+            aggregated_intra_gbs: bw,
+            offered_gbs: 0.0,
+            intra_tput_gbs: intra,
+            intra_drain_gbs: intra,
+            intra_lat: HistSummary::default(),
+            inter_tput_gbs: 1.0,
+            inter_drain_gbs: 1.0,
+            fct: HistSummary { mean_ns: fct_ns, ..Default::default() },
+            intra_wire_gbs: 0.0,
+            inter_wire_gbs: 0.0,
+            drop_frac: 0.0,
+            delivered_msgs: 1,
+            offered_msgs: 1,
+            events: 1,
+            wall_ms: 0.0,
+            table_misses: 0,
+        }
+    }
+
+    #[test]
+    fn groups_by_bandwidth_and_pattern() {
+        let reports = vec![
+            report("C1", 0.5, 128.0, 10.0, 1000.0),
+            report("C1", 0.2, 128.0, 5.0, 900.0),
+            report("C5", 0.2, 128.0, 6.0, 0.0),
+            report("C1", 0.2, 512.0, 7.0, 2000.0),
+        ];
+        let figs = figure_series(&reports, FigureKind::IntraThroughput);
+        assert_eq!(figs.len(), 2);
+        assert_eq!(figs[0].intra_gbs, 128.0);
+        assert_eq!(figs[0].series.len(), 2);
+        // loads sorted ascending
+        assert_eq!(figs[0].series[0].loads, vec![0.2, 0.5]);
+        assert_eq!(figs[0].series[0].values, vec![5.0, 10.0]);
+    }
+
+    #[test]
+    fn metric_extraction_per_kind() {
+        let r = report("C2", 0.4, 256.0, 42.0, 5_000.0);
+        assert_eq!(FigureKind::IntraThroughput.metric(&r), 42.0);
+        assert_eq!(FigureKind::Fct.metric(&r), 5.0);
+    }
+
+    #[test]
+    fn render_contains_series() {
+        let reports = vec![report("C1", 0.5, 128.0, 10.0, 1000.0)];
+        let txt = render_figure(&reports, FigureKind::IntraThroughput);
+        assert!(txt.contains("C1"));
+        assert!(txt.contains("128"));
+    }
+}

@@ -1,0 +1,9 @@
+//! Paper-artifact formatters: render simulation results in the same shape
+//! as the paper's tables and figures (rows / series), for terminal output
+//! and CSV export.
+
+pub mod figures;
+pub mod tables;
+
+pub use figures::{figure_series, FigureKind};
+pub use tables::{render_table1, render_table2};

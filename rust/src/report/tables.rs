@@ -1,0 +1,105 @@
+//! Tables 1 and 2: validation of the simulated `ib_write` micro-benchmarks
+//! against the paper's measured cluster numbers.
+
+use crate::traffic::ib_bench::{BwPoint, LatPoint};
+
+fn fmt_size(b: u64) -> String {
+    if b >= 1024 * 1024 {
+        format!("{} MiB", b / (1024 * 1024))
+    } else if b >= 1024 {
+        format!("{} KiB", b / 1024)
+    } else {
+        format!("{b} B")
+    }
+}
+
+/// Render the Table 1 comparison (bandwidth, GiB/s).
+pub fn render_table1(points: &[BwPoint]) -> String {
+    let mut out = String::new();
+    out.push_str("Table 1 — bandwidth (GiB/s), simulated ib_write vs paper's cluster\n");
+    out.push_str(&format!(
+        "{:>10} | {:>10} | {:>10} | {:>8}\n",
+        "Msg size", "paper", "simulated", "delta"
+    ));
+    out.push_str(&"-".repeat(48));
+    out.push('\n');
+    for p in points {
+        let delta = (p.sim_gib_s - p.paper_gib_s) / p.paper_gib_s * 100.0;
+        out.push_str(&format!(
+            "{:>10} | {:>10.2} | {:>10.2} | {:>+7.1}%\n",
+            fmt_size(p.size_b),
+            p.paper_gib_s,
+            p.sim_gib_s,
+            delta
+        ));
+    }
+    out
+}
+
+/// Render the Table 2 comparison (one-way latency, µs).
+pub fn render_table2(points: &[LatPoint]) -> String {
+    let mut out = String::new();
+    out.push_str("Table 2 — latency (µs), simulated ib_write vs paper's cluster\n");
+    out.push_str(&format!(
+        "{:>10} | {:>10} | {:>10} | {:>8} | {:>7}\n",
+        "Msg size", "paper", "simulated", "delta", "samples"
+    ));
+    out.push_str(&"-".repeat(58));
+    out.push('\n');
+    for p in points {
+        let delta = (p.sim_us - p.paper_us) / p.paper_us * 100.0;
+        out.push_str(&format!(
+            "{:>10} | {:>10.2} | {:>10.2} | {:>+7.1}% | {:>7}\n",
+            fmt_size(p.size_b),
+            p.paper_us,
+            p.sim_us,
+            delta,
+            p.samples
+        ));
+    }
+    out
+}
+
+/// Geometric-mean absolute relative error across rows (validation score).
+pub fn geomean_abs_rel_err(pairs: &[(f64, f64)]) -> f64 {
+    let n = pairs.len() as f64;
+    let s: f64 = pairs
+        .iter()
+        .map(|(sim, paper)| ((sim - paper).abs() / paper).max(1e-9).ln())
+        .sum();
+    (s / n).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_renders_all_rows() {
+        let pts = vec![
+            BwPoint { size_b: 128, sim_gib_s: 0.45, paper_gib_s: 0.44 },
+            BwPoint { size_b: 1 << 20, sim_gib_s: 11.4, paper_gib_s: 11.93 },
+        ];
+        let t = render_table1(&pts);
+        assert!(t.contains("128 B"));
+        assert!(t.contains("1 MiB"));
+        assert_eq!(t.lines().count(), 5);
+    }
+
+    #[test]
+    fn table2_includes_samples() {
+        let pts = vec![LatPoint { size_b: 4096, sim_us: 2.5, paper_us: 2.46, samples: 100 }];
+        let t = render_table2(&pts);
+        assert!(t.contains("4 KiB"));
+        assert!(t.contains("100"));
+    }
+
+    #[test]
+    fn geomean_err_basics() {
+        // 10% error everywhere -> 0.1.
+        let e = geomean_abs_rel_err(&[(1.1, 1.0), (2.2, 2.0)]);
+        assert!((e - 0.1).abs() < 1e-9);
+        // perfect match -> ~0.
+        assert!(geomean_abs_rel_err(&[(1.0, 1.0)]) < 1e-8);
+    }
+}

@@ -1,0 +1,150 @@
+//! Artifact manifest: shape/layout metadata written by `aot.py`, verified
+//! at load time so the Rust runtime never executes an artifact whose
+//! calling convention drifted.
+
+use std::path::Path;
+
+use crate::serial::json::Value;
+
+pub const SUPPORTED_VERSION: u64 = 1;
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub version: u64,
+    pub pcie_latency: KernelMeta,
+    pub collective_cost: KernelMeta,
+    pub llm_traffic: LlmMeta,
+}
+
+#[derive(Debug, Clone)]
+pub struct KernelMeta {
+    pub batch: usize,
+    pub param_layout: Vec<String>,
+}
+
+#[derive(Debug, Clone)]
+pub struct LlmMeta {
+    pub llm_param_layout: Vec<String>,
+    pub out_layout: Vec<String>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> anyhow::Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("cannot read {path:?}: {e}; run `make artifacts`"))?;
+        Manifest::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> anyhow::Result<Manifest> {
+        let v = Value::parse(text)?;
+        let kernel = |key: &str| -> anyhow::Result<KernelMeta> {
+            let k = v.req(key)?;
+            Ok(KernelMeta {
+                batch: k.usize_of("batch")?,
+                param_layout: k
+                    .req("param_layout")?
+                    .as_arr()?
+                    .iter()
+                    .map(|s| Ok(s.as_str()?.to_string()))
+                    .collect::<anyhow::Result<Vec<_>>>()?,
+            })
+        };
+        let lt = v.req("llm_traffic")?;
+        let strs = |val: &Value| -> anyhow::Result<Vec<String>> {
+            val.as_arr()?.iter().map(|s| Ok(s.as_str()?.to_string())).collect()
+        };
+        Ok(Manifest {
+            version: v.u64_of("version")?,
+            pcie_latency: kernel("pcie_latency")?,
+            collective_cost: kernel("collective_cost")?,
+            llm_traffic: LlmMeta {
+                llm_param_layout: strs(lt.req("llm_param_layout")?)?,
+                out_layout: strs(lt.req("out_layout")?)?,
+            },
+        })
+    }
+
+    /// Verify the manifest matches what this binary was built against.
+    pub fn check(&self, pcie_batch: usize, coll_batch: usize) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.version == SUPPORTED_VERSION,
+            "manifest version {} != supported {}",
+            self.version,
+            SUPPORTED_VERSION
+        );
+        anyhow::ensure!(
+            self.pcie_latency.batch == pcie_batch,
+            "pcie batch {} != {}",
+            self.pcie_latency.batch,
+            pcie_batch
+        );
+        anyhow::ensure!(
+            self.collective_cost.batch == coll_batch,
+            "collective batch {} != {}",
+            self.collective_cost.batch,
+            coll_batch
+        );
+        anyhow::ensure!(
+            self.pcie_latency.param_layout.len() == 8,
+            "pcie param layout must have 8 entries"
+        );
+        anyhow::ensure!(
+            self.collective_cost.param_layout.len() == 3,
+            "collective param layout must have 3 entries"
+        );
+        anyhow::ensure!(
+            self.llm_traffic.llm_param_layout.len() == 10,
+            "llm param layout must have 10 entries"
+        );
+        anyhow::ensure!(
+            self.llm_traffic.out_layout.len() == 16,
+            "llm out layout must have 16 entries"
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Manifest {
+        Manifest::parse(
+            r#"{
+            "version": 1,
+            "pcie_latency": {"batch": 1024, "param_layout": ["a","b","c","d","e","f","g","h"]},
+            "collective_cost": {"batch": 256, "param_layout": ["n","alpha","beta"]},
+            "llm_traffic": {
+                "llm_param_layout": ["1","2","3","4","5","6","7","8","9","10"],
+                "out_layout": ["1","2","3","4","5","6","7","8","9","10","11","12","13","14","15","16"]
+            }
+        }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn valid_manifest_checks() {
+        sample().check(1024, 256).unwrap();
+    }
+
+    #[test]
+    fn version_mismatch_rejected() {
+        let mut m = sample();
+        m.version = 2;
+        assert!(m.check(1024, 256).is_err());
+    }
+
+    #[test]
+    fn batch_mismatch_rejected() {
+        assert!(sample().check(512, 256).is_err());
+        assert!(sample().check(1024, 128).is_err());
+    }
+
+    #[test]
+    fn layout_width_enforced() {
+        let mut m = sample();
+        m.pcie_latency.param_layout.pop();
+        assert!(m.check(1024, 256).is_err());
+    }
+}

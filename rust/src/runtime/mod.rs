@@ -1,0 +1,232 @@
+//! PJRT runtime: load the AOT-compiled HLO artifacts and execute them from
+//! Rust. Python never runs on this path — `make artifacts` produced HLO
+//! *text* (xla_extension 0.5.1 rejects jax≥0.5 serialized protos; the text
+//! parser reassigns instruction ids) and this module compiles + executes
+//! it on the PJRT CPU client.
+
+pub mod artifacts;
+
+pub use artifacts::Manifest;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::analytic::{CollParams, PcieParams};
+use crate::net::world::SerProvider;
+use crate::traffic::llm::{LlmConfig, TrafficSummary};
+
+/// Batch widths baked into the artifacts (must match `aot.py` / manifest).
+pub const PCIE_BATCH: usize = 1024;
+pub const COLL_BATCH: usize = 256;
+
+/// Compiled artifact bundle.
+pub struct Runtime {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    pcie: xla::PjRtLoadedExecutable,
+    coll: xla::PjRtLoadedExecutable,
+    llm: xla::PjRtLoadedExecutable,
+    pub manifest: Manifest,
+    pub dir: PathBuf,
+}
+
+impl Runtime {
+    /// Default artifact location relative to the repo root.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("SAURON_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    /// Load and compile all artifacts from `dir`.
+    pub fn load(dir: &Path) -> anyhow::Result<Runtime> {
+        let manifest = Manifest::load(&dir.join("manifest.json"))?;
+        manifest.check(PCIE_BATCH, COLL_BATCH)?;
+        let client = xla::PjRtClient::cpu().map_err(wrap)?;
+        let compile = |name: &str| -> anyhow::Result<xla::PjRtLoadedExecutable> {
+            let path = dir.join(format!("{name}.hlo.txt"));
+            anyhow::ensure!(path.exists(), "missing artifact {path:?}; run `make artifacts`");
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+            )
+            .map_err(wrap)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            client.compile(&comp).map_err(wrap)
+        };
+        Ok(Runtime {
+            pcie: compile("pcie_latency")?,
+            coll: compile("collective_cost")?,
+            llm: compile("llm_traffic")?,
+            client,
+            manifest,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    /// Execute the batched PCIe-latency kernel for arbitrarily many sizes
+    /// (chunked through the fixed artifact batch; pad lanes use size 1).
+    pub fn pcie_latency_ns_exec(
+        &self,
+        params: &PcieParams,
+        sizes_b: &[u32],
+    ) -> anyhow::Result<Vec<f64>> {
+        let pv = xla::Literal::vec1(params.to_f32_vec().as_slice());
+        let mut out = Vec::with_capacity(sizes_b.len());
+        for chunk in sizes_b.chunks(PCIE_BATCH) {
+            let mut batch = vec![1.0f32; PCIE_BATCH];
+            for (i, &s) in chunk.iter().enumerate() {
+                batch[i] = s as f32;
+            }
+            let sv = xla::Literal::vec1(batch.as_slice());
+            let result = self.pcie.execute::<xla::Literal>(&[sv, pv.clone()]).map_err(wrap)?
+                [0][0]
+                .to_literal_sync()
+                .map_err(wrap)?;
+            let vals = result.to_tuple1().map_err(wrap)?.to_vec::<f32>().map_err(wrap)?;
+            anyhow::ensure!(vals.len() == PCIE_BATCH, "bad output width {}", vals.len());
+            out.extend(vals[..chunk.len()].iter().map(|&v| v as f64));
+        }
+        Ok(out)
+    }
+
+    /// Execute the α-β collective kernel: returns (allreduce, allgather,
+    /// p2p) rows.
+    pub fn collective_cost_exec(
+        &self,
+        params: &CollParams,
+        sizes_b: &[f32],
+    ) -> anyhow::Result<[Vec<f64>; 3]> {
+        let pv = xla::Literal::vec1(params.to_f32_vec().as_slice());
+        let mut rows: [Vec<f64>; 3] = [Vec::new(), Vec::new(), Vec::new()];
+        for chunk in sizes_b.chunks(COLL_BATCH) {
+            let mut batch = vec![1.0f32; COLL_BATCH];
+            batch[..chunk.len()].copy_from_slice(chunk);
+            let sv = xla::Literal::vec1(batch.as_slice());
+            let result = self.coll.execute::<xla::Literal>(&[sv, pv.clone()]).map_err(wrap)?
+                [0][0]
+                .to_literal_sync()
+                .map_err(wrap)?;
+            let vals = result.to_tuple1().map_err(wrap)?.to_vec::<f32>().map_err(wrap)?;
+            anyhow::ensure!(vals.len() == 3 * COLL_BATCH, "bad output width {}", vals.len());
+            for r in 0..3 {
+                rows[r].extend(
+                    vals[r * COLL_BATCH..r * COLL_BATCH + chunk.len()]
+                        .iter()
+                        .map(|&v| v as f64),
+                );
+            }
+        }
+        Ok(rows)
+    }
+
+    /// Execute the L2 LLM traffic-volume model.
+    pub fn llm_traffic(
+        &self,
+        llm: &LlmConfig,
+        pcie: &PcieParams,
+        coll_intra: &CollParams,
+        coll_inter: &CollParams,
+    ) -> anyhow::Result<TrafficSummary> {
+        let args = [
+            xla::Literal::vec1(llm.to_f32_vec().as_slice()),
+            xla::Literal::vec1(pcie.to_f32_vec().as_slice()),
+            xla::Literal::vec1(coll_intra.to_f32_vec().as_slice()),
+            xla::Literal::vec1(coll_inter.to_f32_vec().as_slice()),
+        ];
+        let result = self.llm.execute::<xla::Literal>(&args).map_err(wrap)?[0][0]
+            .to_literal_sync()
+            .map_err(wrap)?;
+        let vals = result.to_tuple1().map_err(wrap)?.to_vec::<f32>().map_err(wrap)?;
+        TrafficSummary::from_slice(&vals)
+    }
+}
+
+impl SerProvider for Runtime {
+    fn pcie_latency_ns(&self, params: &PcieParams, sizes_b: &[u32]) -> Vec<f64> {
+        // SerProvider is infallible by contract; PJRT failures here are
+        // programming errors (artifact already compiled + shape-checked).
+        self.pcie_latency_ns_exec(params, sizes_b)
+            .expect("PJRT execution of pcie_latency artifact failed")
+    }
+}
+
+fn wrap(e: xla::Error) -> anyhow::Error {
+    anyhow::anyhow!("xla: {e}")
+}
+
+/// A [`SerProvider`] snapshot: latencies precomputed through any provider
+/// (normally the HLO [`Runtime`]), then `Send + Sync + 'static` for use
+/// inside coordinator worker tasks. Misses fall back to the native
+/// analytic mirror (and are counted).
+pub struct CachedProvider {
+    entries: Vec<(PcieParams, HashMap<u32, f64>)>,
+    pub misses: std::sync::atomic::AtomicU64,
+}
+
+impl CachedProvider {
+    /// Precompute `sizes` for each parameter set through `inner`.
+    pub fn build(inner: &dyn SerProvider, params: &[PcieParams], sizes: &[u32]) -> CachedProvider {
+        let mut entries = Vec::new();
+        for p in params {
+            let lats = inner.pcie_latency_ns(p, sizes);
+            let map = sizes.iter().copied().zip(lats).collect();
+            entries.push((*p, map));
+        }
+        CachedProvider { entries, misses: std::sync::atomic::AtomicU64::new(0) }
+    }
+
+    pub fn miss_count(&self) -> u64 {
+        self.misses.load(std::sync::atomic::Ordering::Relaxed)
+    }
+}
+
+impl SerProvider for CachedProvider {
+    fn pcie_latency_ns(&self, params: &PcieParams, sizes_b: &[u32]) -> Vec<f64> {
+        let found = self.entries.iter().find(|(p, _)| p == params);
+        sizes_b
+            .iter()
+            .map(|s| {
+                if let Some((_, map)) = found {
+                    if let Some(&v) = map.get(s) {
+                        return v;
+                    }
+                }
+                self.misses.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                params.latency_ns(*s as u64)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::world::NativeProvider;
+
+    #[test]
+    fn cached_provider_hits_and_falls_back() {
+        let p = PcieParams::gen3(16);
+        let sizes = [128u32, 4036, 4096];
+        let cached = CachedProvider::build(&NativeProvider, &[p], &sizes);
+        let got = cached.pcie_latency_ns(&p, &sizes);
+        let want = NativeProvider.pcie_latency_ns(&p, &sizes);
+        assert_eq!(got, want);
+        assert_eq!(cached.miss_count(), 0);
+        // unseen size falls back to analytic and counts a miss
+        let v = cached.pcie_latency_ns(&p, &[999]);
+        assert!((v[0] - p.latency_ns(999)).abs() < 1e-9);
+        assert_eq!(cached.miss_count(), 1);
+    }
+
+    #[test]
+    fn cached_provider_distinguishes_params() {
+        let a = PcieParams::gen3(16);
+        let b = PcieParams::gen3(8);
+        let cached = CachedProvider::build(&NativeProvider, &[a, b], &[4096]);
+        let va = cached.pcie_latency_ns(&a, &[4096])[0];
+        let vb = cached.pcie_latency_ns(&b, &[4096])[0];
+        assert!((va - a.latency_ns(4096)).abs() < 1e-9);
+        assert!((vb - b.latency_ns(4096)).abs() < 1e-9);
+        assert!(vb > va);
+    }
+}

@@ -1,0 +1,492 @@
+//! Minimal JSON: value tree, recursive-descent parser, pretty printer.
+//!
+//! Supports the full JSON grammar except exotic number forms beyond f64.
+//! Object key order is preserved (Vec of pairs) so emitted files are
+//! stable and diffable.
+
+use std::fmt;
+
+/// A JSON value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Value>),
+    Obj(Vec<(String, Value)>),
+}
+
+impl Value {
+    // -- constructors ------------------------------------------------------
+    pub fn obj() -> Value {
+        Value::Obj(Vec::new())
+    }
+
+    /// Builder-style field insert.
+    pub fn with(mut self, key: &str, value: impl Into<Value>) -> Value {
+        if let Value::Obj(fields) = &mut self {
+            fields.push((key.to_string(), value.into()));
+        } else {
+            panic!("with() on non-object");
+        }
+        self
+    }
+
+    // -- accessors ---------------------------------------------------------
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        match self {
+            Value::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn req(&self, key: &str) -> anyhow::Result<&Value> {
+        self.get(key).ok_or_else(|| anyhow::anyhow!("missing field '{key}'"))
+    }
+
+    pub fn as_f64(&self) -> anyhow::Result<f64> {
+        match self {
+            Value::Num(n) => Ok(*n),
+            other => anyhow::bail!("expected number, got {other:?}"),
+        }
+    }
+
+    pub fn as_u64(&self) -> anyhow::Result<u64> {
+        let n = self.as_f64()?;
+        anyhow::ensure!(n >= 0.0 && n.fract() == 0.0, "expected unsigned integer, got {n}");
+        Ok(n as u64)
+    }
+
+    pub fn as_usize(&self) -> anyhow::Result<usize> {
+        Ok(self.as_u64()? as usize)
+    }
+
+    pub fn as_bool(&self) -> anyhow::Result<bool> {
+        match self {
+            Value::Bool(b) => Ok(*b),
+            other => anyhow::bail!("expected bool, got {other:?}"),
+        }
+    }
+
+    pub fn as_str(&self) -> anyhow::Result<&str> {
+        match self {
+            Value::Str(s) => Ok(s),
+            other => anyhow::bail!("expected string, got {other:?}"),
+        }
+    }
+
+    pub fn as_arr(&self) -> anyhow::Result<&[Value]> {
+        match self {
+            Value::Arr(items) => Ok(items),
+            other => anyhow::bail!("expected array, got {other:?}"),
+        }
+    }
+
+    // field helpers
+    pub fn f64_of(&self, key: &str) -> anyhow::Result<f64> {
+        self.req(key)?.as_f64()
+    }
+    pub fn u64_of(&self, key: &str) -> anyhow::Result<u64> {
+        self.req(key)?.as_u64()
+    }
+    pub fn usize_of(&self, key: &str) -> anyhow::Result<usize> {
+        self.req(key)?.as_usize()
+    }
+    pub fn bool_of(&self, key: &str) -> anyhow::Result<bool> {
+        self.req(key)?.as_bool()
+    }
+    pub fn str_of(&self, key: &str) -> anyhow::Result<&str> {
+        self.req(key)?.as_str()
+    }
+
+    /// Parse JSON text.
+    pub fn parse(text: &str) -> anyhow::Result<Value> {
+        let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
+        p.skip_ws();
+        let v = p.value()?;
+        p.skip_ws();
+        anyhow::ensure!(p.pos == p.bytes.len(), "trailing characters at byte {}", p.pos);
+        Ok(v)
+    }
+
+    /// Pretty-print with 2-space indentation.
+    pub fn pretty(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out, 0);
+        out
+    }
+
+    fn write(&self, out: &mut String, indent: usize) {
+        match self {
+            Value::Null => out.push_str("null"),
+            Value::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Value::Num(n) => out.push_str(&fmt_num(*n)),
+            Value::Str(s) => write_escaped(out, s),
+            Value::Arr(items) => {
+                if items.is_empty() {
+                    out.push_str("[]");
+                    return;
+                }
+                let simple = items.iter().all(|i| matches!(i, Value::Num(_) | Value::Str(_) | Value::Bool(_)));
+                if simple && items.len() <= 16 {
+                    out.push('[');
+                    for (i, item) in items.iter().enumerate() {
+                        if i > 0 {
+                            out.push_str(", ");
+                        }
+                        item.write(out, indent);
+                    }
+                    out.push(']');
+                } else {
+                    out.push_str("[\n");
+                    for (i, item) in items.iter().enumerate() {
+                        out.push_str(&"  ".repeat(indent + 1));
+                        item.write(out, indent + 1);
+                        if i + 1 < items.len() {
+                            out.push(',');
+                        }
+                        out.push('\n');
+                    }
+                    out.push_str(&"  ".repeat(indent));
+                    out.push(']');
+                }
+            }
+            Value::Obj(fields) => {
+                if fields.is_empty() {
+                    out.push_str("{}");
+                    return;
+                }
+                out.push_str("{\n");
+                for (i, (k, v)) in fields.iter().enumerate() {
+                    out.push_str(&"  ".repeat(indent + 1));
+                    write_escaped(out, k);
+                    out.push_str(": ");
+                    v.write(out, indent + 1);
+                    if i + 1 < fields.len() {
+                        out.push(',');
+                    }
+                    out.push('\n');
+                }
+                out.push_str(&"  ".repeat(indent));
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn fmt_num(n: f64) -> String {
+    if n.fract() == 0.0 && n.abs() < 9.0e15 {
+        format!("{}", n as i64)
+    } else {
+        format!("{n}")
+    }
+}
+
+fn write_escaped(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.pretty())
+    }
+}
+
+// -- From conversions -------------------------------------------------------
+impl From<f64> for Value {
+    fn from(v: f64) -> Value {
+        Value::Num(v)
+    }
+}
+impl From<u64> for Value {
+    fn from(v: u64) -> Value {
+        Value::Num(v as f64)
+    }
+}
+impl From<u32> for Value {
+    fn from(v: u32) -> Value {
+        Value::Num(v as f64)
+    }
+}
+impl From<usize> for Value {
+    fn from(v: usize) -> Value {
+        Value::Num(v as f64)
+    }
+}
+impl From<bool> for Value {
+    fn from(v: bool) -> Value {
+        Value::Bool(v)
+    }
+}
+impl From<&str> for Value {
+    fn from(v: &str) -> Value {
+        Value::Str(v.to_string())
+    }
+}
+impl From<String> for Value {
+    fn from(v: String) -> Value {
+        Value::Str(v)
+    }
+}
+impl<T: Into<Value>> From<Vec<T>> for Value {
+    fn from(v: Vec<T>) -> Value {
+        Value::Arr(v.into_iter().map(Into::into).collect())
+    }
+}
+
+/// Types that render to a JSON value.
+pub trait ToJson {
+    fn to_json(&self) -> Value;
+}
+
+/// Types that parse from a JSON value.
+pub trait FromJson: Sized {
+    fn from_json(v: &Value) -> anyhow::Result<Self>;
+}
+
+// -- parser ------------------------------------------------------------------
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn skip_ws(&mut self) {
+        while self.pos < self.bytes.len() && self.bytes[self.pos].is_ascii_whitespace() {
+            self.pos += 1;
+        }
+    }
+
+    fn peek(&self) -> anyhow::Result<u8> {
+        self.bytes
+            .get(self.pos)
+            .copied()
+            .ok_or_else(|| anyhow::anyhow!("unexpected end of input"))
+    }
+
+    fn expect(&mut self, b: u8) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.peek()? == b,
+            "expected '{}' at byte {}, found '{}'",
+            b as char,
+            self.pos,
+            self.peek().unwrap() as char
+        );
+        self.pos += 1;
+        Ok(())
+    }
+
+    fn value(&mut self) -> anyhow::Result<Value> {
+        self.skip_ws();
+        match self.peek()? {
+            b'{' => self.object(),
+            b'[' => self.array(),
+            b'"' => Ok(Value::Str(self.string()?)),
+            b't' | b'f' => self.boolean(),
+            b'n' => self.null(),
+            _ => self.number(),
+        }
+    }
+
+    fn object(&mut self) -> anyhow::Result<Value> {
+        self.expect(b'{')?;
+        let mut fields = Vec::new();
+        self.skip_ws();
+        if self.peek()? == b'}' {
+            self.pos += 1;
+            return Ok(Value::Obj(fields));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            let val = self.value()?;
+            fields.push((key, val));
+            self.skip_ws();
+            match self.peek()? {
+                b',' => self.pos += 1,
+                b'}' => {
+                    self.pos += 1;
+                    return Ok(Value::Obj(fields));
+                }
+                c => anyhow::bail!("expected ',' or '}}' at byte {}, found '{}'", self.pos, c as char),
+            }
+        }
+    }
+
+    fn array(&mut self) -> anyhow::Result<Value> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek()? == b']' {
+            self.pos += 1;
+            return Ok(Value::Arr(items));
+        }
+        loop {
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.peek()? {
+                b',' => self.pos += 1,
+                b']' => {
+                    self.pos += 1;
+                    return Ok(Value::Arr(items));
+                }
+                c => anyhow::bail!("expected ',' or ']' at byte {}, found '{}'", self.pos, c as char),
+            }
+        }
+    }
+
+    fn string(&mut self) -> anyhow::Result<String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            let b = self.peek()?;
+            self.pos += 1;
+            match b {
+                b'"' => return Ok(out),
+                b'\\' => {
+                    let esc = self.peek()?;
+                    self.pos += 1;
+                    match esc {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'n' => out.push('\n'),
+                        b't' => out.push('\t'),
+                        b'r' => out.push('\r'),
+                        b'b' => out.push('\u{8}'),
+                        b'f' => out.push('\u{c}'),
+                        b'u' => {
+                            anyhow::ensure!(self.pos + 4 <= self.bytes.len(), "bad \\u escape");
+                            let hex = std::str::from_utf8(&self.bytes[self.pos..self.pos + 4])?;
+                            let code = u32::from_str_radix(hex, 16)?;
+                            self.pos += 4;
+                            out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                        }
+                        c => anyhow::bail!("bad escape '\\{}'", c as char),
+                    }
+                }
+                b if b < 0x80 => out.push(b as char),
+                _ => {
+                    // multi-byte UTF-8: copy the full scalar
+                    self.pos -= 1;
+                    let rest = std::str::from_utf8(&self.bytes[self.pos..])?;
+                    let c = rest.chars().next().unwrap();
+                    out.push(c);
+                    self.pos += c.len_utf8();
+                }
+            }
+        }
+    }
+
+    fn boolean(&mut self) -> anyhow::Result<Value> {
+        if self.bytes[self.pos..].starts_with(b"true") {
+            self.pos += 4;
+            Ok(Value::Bool(true))
+        } else if self.bytes[self.pos..].starts_with(b"false") {
+            self.pos += 5;
+            Ok(Value::Bool(false))
+        } else {
+            anyhow::bail!("bad literal at byte {}", self.pos)
+        }
+    }
+
+    fn null(&mut self) -> anyhow::Result<Value> {
+        anyhow::ensure!(self.bytes[self.pos..].starts_with(b"null"), "bad literal at {}", self.pos);
+        self.pos += 4;
+        Ok(Value::Null)
+    }
+
+    fn number(&mut self) -> anyhow::Result<Value> {
+        let start = self.pos;
+        while self.pos < self.bytes.len()
+            && matches!(self.bytes[self.pos], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+        {
+            self.pos += 1;
+        }
+        let text = std::str::from_utf8(&self.bytes[start..self.pos])?;
+        let n: f64 = text
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad number '{text}' at byte {start}"))?;
+        Ok(Value::Num(n))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars() {
+        assert_eq!(Value::parse("42").unwrap(), Value::Num(42.0));
+        assert_eq!(Value::parse("-3.5e2").unwrap(), Value::Num(-350.0));
+        assert_eq!(Value::parse("true").unwrap(), Value::Bool(true));
+        assert_eq!(Value::parse("null").unwrap(), Value::Null);
+        assert_eq!(Value::parse(r#""hi""#).unwrap(), Value::Str("hi".into()));
+    }
+
+    #[test]
+    fn parses_nested_structures() {
+        let v = Value::parse(r#"{"a": [1, 2, {"b": "x"}], "c": {"d": false}}"#).unwrap();
+        assert_eq!(v.get("a").unwrap().as_arr().unwrap().len(), 3);
+        assert_eq!(v.get("c").unwrap().get("d").unwrap(), &Value::Bool(false));
+    }
+
+    #[test]
+    fn string_escapes_roundtrip() {
+        let original = Value::Str("line\n\"quoted\"\ttab \\ slash ünïcode".into());
+        let text = original.pretty();
+        assert_eq!(Value::parse(&text).unwrap(), original);
+    }
+
+    #[test]
+    fn pretty_roundtrip_complex() {
+        let v = Value::obj()
+            .with("name", "test")
+            .with("nums", vec![1.5f64, 2.0, 3.25])
+            .with("flag", true)
+            .with("nested", Value::obj().with("k", 9u64));
+        let text = v.pretty();
+        assert_eq!(Value::parse(&text).unwrap(), v);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Value::parse("{").is_err());
+        assert!(Value::parse("[1,]").is_err());
+        assert!(Value::parse("12 34").is_err());
+        assert!(Value::parse(r#"{"a" 1}"#).is_err());
+        assert!(Value::parse("nul").is_err());
+    }
+
+    #[test]
+    fn field_accessors_and_errors() {
+        let v = Value::parse(r#"{"n": 7, "s": "x", "b": true, "f": 1.5}"#).unwrap();
+        assert_eq!(v.u64_of("n").unwrap(), 7);
+        assert_eq!(v.str_of("s").unwrap(), "x");
+        assert!(v.bool_of("b").unwrap());
+        assert_eq!(v.f64_of("f").unwrap(), 1.5);
+        assert!(v.u64_of("f").is_err()); // non-integer
+        assert!(v.req("missing").is_err());
+    }
+
+    #[test]
+    fn integers_print_without_decimal() {
+        assert_eq!(Value::Num(42.0).pretty(), "42");
+        assert_eq!(Value::Num(42.5).pretty(), "42.5");
+    }
+}

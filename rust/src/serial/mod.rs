@@ -1,0 +1,12 @@
+//! In-tree serialization substrate.
+//!
+//! The build environment ships no serde/toml/serde_json, so the project
+//! carries its own minimal JSON implementation: a recursive-descent parser
+//! and a pretty printer over a [`json::Value`] tree, plus the
+//! [`json::FromJson`]/[`json::ToJson`] conversion traits the config,
+//! report and manifest types implement by hand. Configs are JSON files
+//! (`sauron run --config cfg.json`); sweep results serialize to JSON/CSV.
+
+pub mod json;
+
+pub use json::{FromJson, ToJson, Value};

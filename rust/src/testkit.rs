@@ -1,0 +1,212 @@
+//! Property-based testing kit (the build image ships no proptest).
+//!
+//! [`forall`] runs a property over `cases` randomly generated inputs from
+//! a deterministic seed. On failure it attempts greedy shrinking via the
+//! generator's [`Gen::shrink`] candidates and reports the minimal failing
+//! input plus the seed to reproduce.
+//!
+//! Used by `rust/tests/props_*.rs` for routing, flow-control and
+//! coordinator invariants (DESIGN.md test inventory).
+
+use crate::rng::Rng;
+
+/// A random-input generator with optional shrinking.
+pub trait Gen {
+    type Value: std::fmt::Debug + Clone;
+    fn generate(&self, rng: &mut Rng) -> Self::Value;
+    /// Candidate smaller versions of a failing value (greedy shrink).
+    fn shrink(&self, _value: &Self::Value) -> Vec<Self::Value> {
+        Vec::new()
+    }
+}
+
+/// Run `prop` on `cases` random inputs; panic with a reproducible report
+/// on the first (shrunk) failure.
+pub fn forall<G: Gen>(seed: u64, cases: u32, gen: &G, prop: impl Fn(&G::Value) -> Result<(), String>) {
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let value = gen.generate(&mut rng);
+        if let Err(msg) = prop(&value) {
+            // Greedy shrink: keep taking the first failing candidate.
+            let mut best = value.clone();
+            let mut best_msg = msg;
+            let mut budget = 5000;
+            'outer: while budget > 0 {
+                for cand in gen.shrink(&best) {
+                    budget -= 1;
+                    if let Err(m) = prop(&cand) {
+                        best = cand;
+                        best_msg = m;
+                        continue 'outer;
+                    }
+                    if budget == 0 {
+                        break;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property failed (seed={seed}, case={case}):\n  input: {best:?}\n  error: {best_msg}\n  original: {value:?}"
+            );
+        }
+    }
+}
+
+/// Uniform integer in [lo, hi] with shrinking toward lo.
+pub struct IntRange {
+    pub lo: u64,
+    pub hi: u64,
+}
+
+impl Gen for IntRange {
+    type Value = u64;
+    fn generate(&self, rng: &mut Rng) -> u64 {
+        self.lo + rng.below(self.hi - self.lo + 1)
+    }
+    fn shrink(&self, v: &u64) -> Vec<u64> {
+        let mut out = Vec::new();
+        if *v > self.lo {
+            out.push(self.lo);
+            out.push(self.lo + (*v - self.lo) / 2);
+            out.push(*v - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+/// Uniform f64 in [lo, hi) with shrinking toward lo.
+pub struct FloatRange {
+    pub lo: f64,
+    pub hi: f64,
+}
+
+impl Gen for FloatRange {
+    type Value = f64;
+    fn generate(&self, rng: &mut Rng) -> f64 {
+        self.lo + rng.next_f64() * (self.hi - self.lo)
+    }
+    fn shrink(&self, v: &f64) -> Vec<f64> {
+        if *v > self.lo {
+            vec![self.lo, self.lo + (*v - self.lo) / 2.0]
+        } else {
+            vec![]
+        }
+    }
+}
+
+/// Pick uniformly from a fixed slice (shrinks toward the first choice).
+pub struct Choice<T: Clone + std::fmt::Debug + PartialEq + 'static>(pub &'static [T]);
+
+impl<T: Clone + std::fmt::Debug + PartialEq> Gen for Choice<T> {
+    type Value = T;
+    fn generate(&self, rng: &mut Rng) -> T {
+        self.0[rng.below(self.0.len() as u64) as usize].clone()
+    }
+    fn shrink(&self, v: &T) -> Vec<T> {
+        if self.0.first().map(|f| f != v).unwrap_or(false) {
+            vec![self.0[0].clone()]
+        } else {
+            vec![]
+        }
+    }
+}
+
+/// Pair combinator.
+pub struct Pair<A: Gen, B: Gen>(pub A, pub B);
+
+impl<A: Gen, B: Gen> Gen for Pair<A, B> {
+    type Value = (A::Value, B::Value);
+    fn generate(&self, rng: &mut Rng) -> Self::Value {
+        (self.0.generate(rng), self.1.generate(rng))
+    }
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out: Vec<Self::Value> =
+            self.0.shrink(&v.0).into_iter().map(|a| (a, v.1.clone())).collect();
+        out.extend(self.1.shrink(&v.1).into_iter().map(|b| (v.0.clone(), b)));
+        out
+    }
+}
+
+/// Triple combinator.
+pub struct Triple<A: Gen, B: Gen, C: Gen>(pub A, pub B, pub C);
+
+impl<A: Gen, B: Gen, C: Gen> Gen for Triple<A, B, C> {
+    type Value = (A::Value, B::Value, C::Value);
+    fn generate(&self, rng: &mut Rng) -> Self::Value {
+        (self.0.generate(rng), self.1.generate(rng), self.2.generate(rng))
+    }
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out: Vec<Self::Value> =
+            self.0.shrink(&v.0).into_iter().map(|a| (a, v.1.clone(), v.2.clone())).collect();
+        out.extend(self.1.shrink(&v.1).into_iter().map(|b| (v.0.clone(), b, v.2.clone())));
+        out.extend(self.2.shrink(&v.2).into_iter().map(|c| (v.0.clone(), v.1.clone(), c)));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let counter = std::cell::Cell::new(0u32);
+        forall(1, 50, &IntRange { lo: 0, hi: 100 }, |v| {
+            counter.set(counter.get() + 1);
+            if *v <= 100 {
+                Ok(())
+            } else {
+                Err("out of range".into())
+            }
+        });
+        assert_eq!(counter.get(), 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        forall(2, 100, &IntRange { lo: 0, hi: 1000 }, |v| {
+            if *v < 500 {
+                Ok(())
+            } else {
+                Err(format!("{v} too big"))
+            }
+        });
+    }
+
+    #[test]
+    fn shrinking_reaches_boundary() {
+        // Catch the panic and confirm the shrunk input is the minimal
+        // failing value (500).
+        let result = std::panic::catch_unwind(|| {
+            forall(3, 200, &IntRange { lo: 0, hi: 1000 }, |v| {
+                if *v < 500 {
+                    Ok(())
+                } else {
+                    Err("boom".into())
+                }
+            });
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("input: 500"), "{msg}");
+    }
+
+    #[test]
+    fn generators_are_deterministic_per_seed() {
+        let g = Triple(IntRange { lo: 1, hi: 9 }, FloatRange { lo: 0.0, hi: 1.0 }, Choice(&[1u8, 2, 3]));
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..20 {
+            assert_eq!(format!("{:?}", g.generate(&mut a)), format!("{:?}", g.generate(&mut b)));
+        }
+    }
+
+    #[test]
+    fn choice_and_pair_shrink() {
+        let p = Pair(IntRange { lo: 0, hi: 10 }, Choice(&["a", "b"]));
+        let shr = p.shrink(&(7, "b"));
+        assert!(shr.contains(&(0, "b")));
+        assert!(shr.contains(&(7, "a")));
+    }
+}

@@ -1,0 +1,232 @@
+//! Simulated InfiniBand perftest micro-benchmarks (paper §4.1).
+//!
+//! Two drivers over the CELLIA end-node model:
+//!
+//! * [`latency_test`] — `ib_write_lat` style: one message ping-pongs
+//!   between the two hosts; the reported one-way latency is the mean flow
+//!   completion time plus a fixed host-side base overhead
+//!   ([`HOST_BASE_NS`], the doorbell/completion path the packet model does
+//!   not carry, calibrated once against the paper's 128 B row).
+//! * [`bandwidth_test`] — `ib_write_bw` style: a window of messages is
+//!   kept outstanding and delivered payload (drain) throughput is
+//!   measured.
+//!
+//! The paper's measured cluster results (Tables 1 and 2) are embedded as
+//! ground truth for comparison — we do not have the CELLIA hardware, so
+//! validation means matching the *published* numbers (DESIGN.md
+//! substitution table).
+
+use crate::config::{presets, SimConfig};
+use crate::net::world::{BenchMode, SerProvider, Sim};
+use crate::units::{KIB, MIB};
+
+/// Host-side software overhead (ns) added to simulated one-way latency:
+/// WQE post, doorbell, completion polling. Calibrated against the paper's
+/// Table 2 `ib_write` 128 B row (1.12 µs).
+pub const HOST_BASE_NS: f64 = 520.0;
+
+/// Message sizes used by the paper's perftest sweep (128 B .. 4 MiB).
+pub const TEST_SIZES: [u64; 16] = [
+    128,
+    256,
+    512,
+    KIB,
+    2 * KIB,
+    4 * KIB,
+    8 * KIB,
+    16 * KIB,
+    32 * KIB,
+    64 * KIB,
+    128 * KIB,
+    256 * KIB,
+    512 * KIB,
+    MIB,
+    2 * MIB,
+    4 * MIB,
+];
+
+/// Paper Table 1 (bandwidth, GiB/s): columns osu_latency / ib_read /
+/// ib_write / ib_send per size in [`TEST_SIZES`] order.
+pub const PAPER_TABLE1: [[f64; 4]; 16] = [
+    [0.54, 0.37, 0.44, 0.41],
+    [1.04, 0.79, 0.87, 0.77],
+    [2.04, 1.51, 1.75, 1.64],
+    [3.44, 2.74, 3.30, 3.10],
+    [6.17, 6.63, 7.35, 6.22],
+    [8.41, 9.90, 11.02, 11.00],
+    [10.39, 11.38, 11.58, 11.55],
+    [11.11, 11.78, 11.53, 11.63],
+    [11.64, 11.80, 11.60, 11.67],
+    [11.93, 11.81, 11.62, 11.60],
+    [12.08, 12.09, 11.90, 11.90],
+    [12.16, 12.09, 11.92, 11.93],
+    [12.20, 12.09, 11.93, 11.92],
+    [12.21, 12.09, 11.93, 11.93],
+    [12.17, 12.06, 11.93, 11.94],
+    [12.16, 12.03, 11.86, 11.94],
+];
+
+/// Paper Table 2 (one-way latency, µs): same column order.
+pub const PAPER_TABLE2: [[f64; 4]; 16] = [
+    [1.61, 2.03, 1.12, 1.20],
+    [2.09, 2.07, 1.56, 1.59],
+    [1.96, 2.02, 1.58, 1.64],
+    [2.20, 2.15, 1.70, 1.77],
+    [3.00, 2.43, 1.95, 2.02],
+    [3.90, 2.88, 2.46, 2.56],
+    [5.52, 3.40, 2.84, 2.94],
+    [7.42, 4.28, 3.88, 3.86],
+    [9.26, 5.68, 5.41, 5.32],
+    [14.14, 8.38, 8.06, 7.97],
+    [23.32, 13.66, 13.39, 13.25],
+    [26.41, 24.25, 24.27, 24.10],
+    [47.88, 45.40, 45.73, 45.41],
+    [91.85, 87.73, 88.95, 88.46],
+    [177.96, 173.31, 174.65, 173.74],
+    [350.68, 343.93, 345.97, 344.31],
+];
+
+/// One latency-test row.
+#[derive(Debug, Clone, Copy)]
+pub struct LatPoint {
+    pub size_b: u64,
+    /// Simulated one-way latency in µs (incl. HOST_BASE_NS).
+    pub sim_us: f64,
+    /// Paper's measured ib_write latency in µs.
+    pub paper_us: f64,
+    /// Round trips completed inside the measurement window.
+    pub samples: u64,
+}
+
+/// One bandwidth-test row.
+#[derive(Debug, Clone, Copy)]
+pub struct BwPoint {
+    pub size_b: u64,
+    /// Simulated delivered bandwidth in GiB/s.
+    pub sim_gib_s: f64,
+    /// Paper's measured ib_write bandwidth in GiB/s.
+    pub paper_gib_s: f64,
+}
+
+fn paper_row(size_b: u64) -> usize {
+    TEST_SIZES.iter().position(|&s| s == size_b).unwrap_or_else(|| {
+        panic!("size {size_b} not a paper test size")
+    })
+}
+
+/// Rough analytic latency estimate (ns) used to size simulation windows.
+fn est_latency_ns(size_b: u64) -> f64 {
+    1_500.0 + size_b as f64 / 12.0
+}
+
+/// Scale the CELLIA config windows to the message size under test.
+fn windows_for(mut cfg: SimConfig, size_b: u64, samples: f64) -> SimConfig {
+    let est_us = est_latency_ns(size_b) / 1_000.0;
+    cfg.warmup_us = (est_us * 4.0).max(10.0);
+    cfg.measure_us = (est_us * samples).max(60.0);
+    cfg
+}
+
+/// Run the simulated `ib_write_lat` ping-pong for one message size.
+pub fn latency_test(provider: &dyn SerProvider, size_b: u64) -> anyhow::Result<LatPoint> {
+    let cfg = windows_for(presets::cellia(), size_b, 40.0);
+    let sim = Sim::with_extra_sizes(
+        cfg,
+        provider,
+        BenchMode::PingPong { a: 0, b: 1, size_b: size_b as u32 },
+        &[size_b as u32],
+    )?;
+    let r = sim.run();
+    anyhow::ensure!(r.fct.count > 0, "no round trips completed for {size_b} B");
+    Ok(LatPoint {
+        size_b,
+        sim_us: (r.fct.mean_ns + HOST_BASE_NS) / 1_000.0,
+        paper_us: PAPER_TABLE2[paper_row(size_b)][2],
+        samples: r.fct.count,
+    })
+}
+
+/// Run the simulated `ib_write_bw` windowed test for one message size.
+pub fn bandwidth_test(provider: &dyn SerProvider, size_b: u64) -> anyhow::Result<BwPoint> {
+    let cfg = windows_for(presets::cellia(), size_b, 80.0);
+    let sim = Sim::with_extra_sizes(
+        cfg,
+        provider,
+        BenchMode::Window { src: 0, dst: 1, size_b: size_b as u32, inflight: 8 },
+        &[size_b as u32],
+    )?;
+    let r = sim.run();
+    Ok(BwPoint {
+        size_b,
+        sim_gib_s: r.inter_drain_gbs * 1e9 / (1u64 << 30) as f64,
+        paper_gib_s: PAPER_TABLE1[paper_row(size_b)][2],
+    })
+}
+
+/// Run the full sweep (all 16 paper sizes) for both tests.
+pub fn full_validation(
+    provider: &dyn SerProvider,
+) -> anyhow::Result<(Vec<BwPoint>, Vec<LatPoint>)> {
+    let mut bw = Vec::new();
+    let mut lat = Vec::new();
+    for &s in &TEST_SIZES {
+        bw.push(bandwidth_test(provider, s)?);
+        lat.push(latency_test(provider, s)?);
+    }
+    Ok((bw, lat))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::world::NativeProvider;
+
+    #[test]
+    fn latency_small_message_near_paper() {
+        let p = latency_test(&NativeProvider, 128).unwrap();
+        // Within 35% of the paper's 1.12 us (calibration target).
+        assert!(
+            (p.sim_us - p.paper_us).abs() / p.paper_us < 0.35,
+            "sim {} vs paper {}",
+            p.sim_us,
+            p.paper_us
+        );
+    }
+
+    #[test]
+    fn bandwidth_small_message_rate_limited() {
+        let p = bandwidth_test(&NativeProvider, 128).unwrap();
+        assert!(
+            (p.sim_gib_s - p.paper_gib_s).abs() / p.paper_gib_s < 0.35,
+            "sim {} vs paper {}",
+            p.sim_gib_s,
+            p.paper_gib_s
+        );
+    }
+
+    #[test]
+    fn bandwidth_large_message_hits_edr_bound() {
+        let p = bandwidth_test(&NativeProvider, MIB).unwrap();
+        assert!(p.sim_gib_s > 10.0 && p.sim_gib_s < 12.5, "{}", p.sim_gib_s);
+    }
+
+    #[test]
+    fn latency_grows_linearly_for_large_messages() {
+        let a = latency_test(&NativeProvider, MIB).unwrap();
+        let b = latency_test(&NativeProvider, 2 * MIB).unwrap();
+        let ratio = b.sim_us / a.sim_us;
+        assert!(ratio > 1.7 && ratio < 2.3, "ratio {ratio}");
+    }
+
+    #[test]
+    fn paper_tables_have_consistent_shapes() {
+        assert_eq!(PAPER_TABLE1.len(), TEST_SIZES.len());
+        assert_eq!(PAPER_TABLE2.len(), TEST_SIZES.len());
+        // Bandwidth saturates: last ib_write rows near 11.9 GiB/s.
+        assert!(PAPER_TABLE1[15][2] > 11.0);
+        // Latency monotone beyond 4 KiB rows.
+        for w in PAPER_TABLE2[5..].windows(2) {
+            assert!(w[1][2] > w[0][2]);
+        }
+    }
+}

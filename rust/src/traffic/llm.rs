@@ -1,0 +1,273 @@
+//! Bridge from the L2 LLM communication-volume model to simulator traffic
+//! patterns.
+//!
+//! The paper's C1–C5 are quantised intra/inter splits; this module lets a
+//! user describe an actual transformer + parallelism layout and obtain the
+//! equivalent [`Pattern::Custom`] plus per-step volume estimates — either
+//! through the AOT HLO artifact (production path, see
+//! [`crate::runtime::Runtime::llm_traffic`]) or the native mirror here.
+
+
+
+use crate::analytic::{CollParams, PcieParams};
+use crate::config::Pattern;
+use crate::serial::json::{ToJson, Value};
+
+/// Transformer + parallelism description (mirrors the `f32[10]`
+/// `LLM_PARAM_LAYOUT` of the artifact).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LlmConfig {
+    pub num_layers: u32,
+    pub hidden: u32,
+    pub seq_len: u32,
+    pub microbatch: u32,
+    pub vocab: u32,
+    pub tp: u32,
+    pub pp: u32,
+    pub dp: u32,
+    pub bytes_per_elem: u32,
+    pub num_microbatches: u32,
+}
+
+impl LlmConfig {
+    /// GPT-3-ish 13B config on 8-accelerator nodes (tp=8 in-node).
+    pub fn example_13b() -> LlmConfig {
+        LlmConfig {
+            num_layers: 40,
+            hidden: 5120,
+            seq_len: 2048,
+            microbatch: 1,
+            vocab: 50257,
+            tp: 8,
+            pp: 4,
+            dp: 8,
+            bytes_per_elem: 2,
+            num_microbatches: 8,
+        }
+    }
+
+    pub fn to_f32_vec(&self) -> Vec<f32> {
+        vec![
+            self.num_layers as f32,
+            self.hidden as f32,
+            self.seq_len as f32,
+            self.microbatch as f32,
+            self.vocab as f32,
+            self.tp as f32,
+            self.pp as f32,
+            self.dp as f32,
+            self.bytes_per_elem as f32,
+            self.num_microbatches as f32,
+        ]
+    }
+}
+
+/// Decoded output of the LLM traffic artifact (`TRAFFIC_OUT_LAYOUT`).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct TrafficSummary {
+    pub tp_msg_size_b: f64,
+    pub pp_msg_size_b: f64,
+    pub dp_msg_size_b: f64,
+    pub n_tp_collectives: f64,
+    pub n_pp_transfers: f64,
+    pub n_dp_collectives: f64,
+    pub intra_bytes_per_step: f64,
+    pub inter_bytes_per_step: f64,
+    pub frac_inter: f64,
+    pub tp_allreduce_ns: f64,
+    pub pp_p2p_ns: f64,
+    pub dp_allreduce_ns: f64,
+    pub pcie_tp_msg_ns: f64,
+    pub pcie_pp_msg_ns: f64,
+    pub pcie_dp_msg_ns: f64,
+    pub total_params: f64,
+}
+
+impl TrafficSummary {
+    pub const N: usize = 16;
+
+    pub fn from_slice(v: &[f32]) -> anyhow::Result<TrafficSummary> {
+        anyhow::ensure!(v.len() == Self::N, "expected {} values, got {}", Self::N, v.len());
+        Ok(TrafficSummary {
+            tp_msg_size_b: v[0] as f64,
+            pp_msg_size_b: v[1] as f64,
+            dp_msg_size_b: v[2] as f64,
+            n_tp_collectives: v[3] as f64,
+            n_pp_transfers: v[4] as f64,
+            n_dp_collectives: v[5] as f64,
+            intra_bytes_per_step: v[6] as f64,
+            inter_bytes_per_step: v[7] as f64,
+            frac_inter: v[8] as f64,
+            tp_allreduce_ns: v[9] as f64,
+            pp_p2p_ns: v[10] as f64,
+            dp_allreduce_ns: v[11] as f64,
+            pcie_tp_msg_ns: v[12] as f64,
+            pcie_pp_msg_ns: v[13] as f64,
+            pcie_dp_msg_ns: v[14] as f64,
+            total_params: v[15] as f64,
+        })
+    }
+
+    /// The simulator pattern with this model's intra/inter split.
+    pub fn pattern(&self) -> Pattern {
+        Pattern::Custom { frac_inter: self.frac_inter }
+    }
+
+    /// Nearest paper pattern (C1..C5) by inter fraction.
+    pub fn nearest_paper_pattern(&self) -> Pattern {
+        *Pattern::PAPER
+            .iter()
+            .min_by(|a, b| {
+                let da = (a.frac_inter() - self.frac_inter).abs();
+                let db = (b.frac_inter() - self.frac_inter).abs();
+                da.partial_cmp(&db).unwrap()
+            })
+            .unwrap()
+    }
+}
+
+impl ToJson for TrafficSummary {
+    fn to_json(&self) -> Value {
+        Value::obj()
+            .with("tp_msg_size_b", self.tp_msg_size_b)
+            .with("pp_msg_size_b", self.pp_msg_size_b)
+            .with("dp_msg_size_b", self.dp_msg_size_b)
+            .with("n_tp_collectives", self.n_tp_collectives)
+            .with("n_pp_transfers", self.n_pp_transfers)
+            .with("n_dp_collectives", self.n_dp_collectives)
+            .with("intra_bytes_per_step", self.intra_bytes_per_step)
+            .with("inter_bytes_per_step", self.inter_bytes_per_step)
+            .with("frac_inter", self.frac_inter)
+            .with("tp_allreduce_ns", self.tp_allreduce_ns)
+            .with("pp_p2p_ns", self.pp_p2p_ns)
+            .with("dp_allreduce_ns", self.dp_allreduce_ns)
+            .with("pcie_tp_msg_ns", self.pcie_tp_msg_ns)
+            .with("pcie_pp_msg_ns", self.pcie_pp_msg_ns)
+            .with("pcie_dp_msg_ns", self.pcie_dp_msg_ns)
+            .with("total_params", self.total_params)
+    }
+}
+
+/// Native mirror of the L2 `llm_traffic` entry (same equations; the HLO
+/// path is cross-checked against this in `rust/tests/runtime_hlo.rs`).
+pub fn llm_traffic_native(
+    llm: &LlmConfig,
+    pcie: &PcieParams,
+    coll_intra: &CollParams,
+    coll_inter: &CollParams,
+) -> TrafficSummary {
+    let l = llm.num_layers as f64;
+    let h = llm.hidden as f64;
+    let s = llm.seq_len as f64;
+    let b = llm.microbatch as f64;
+    let v = llm.vocab as f64;
+    let tp = llm.tp as f64;
+    let pp = llm.pp as f64;
+    let dp = llm.dp as f64;
+    let be = llm.bytes_per_elem as f64;
+    let m = llm.num_microbatches as f64;
+
+    let total_params = 12.0 * l * h * h + v * h;
+    let act = b * s * h * be;
+    let tp_msg = act;
+    let pp_msg = act;
+    let dp_msg = total_params * be / (tp * pp);
+
+    let n_tp = 4.0 * (l / pp) * m;
+    let n_pp = 2.0 * m * (pp - 1.0).max(0.0);
+    let n_dp = 1.0;
+
+    let tp_wire = if tp > 1.0 { 2.0 * (tp - 1.0) / tp * tp_msg } else { 0.0 } * n_tp * tp;
+    let pp_wire = pp_msg * n_pp;
+    let dp_wire = if dp > 1.0 { 2.0 * (dp - 1.0) / dp * dp_msg } else { 0.0 } * n_dp * dp;
+    let intra = tp_wire;
+    let inter = pp_wire + dp_wire;
+    let frac_inter = inter / (intra + inter).max(1.0);
+
+    TrafficSummary {
+        tp_msg_size_b: tp_msg,
+        pp_msg_size_b: pp_msg,
+        dp_msg_size_b: dp_msg,
+        n_tp_collectives: n_tp,
+        n_pp_transfers: n_pp,
+        n_dp_collectives: n_dp,
+        intra_bytes_per_step: intra,
+        inter_bytes_per_step: inter,
+        frac_inter,
+        tp_allreduce_ns: coll_intra.allreduce_ns(tp_msg),
+        pp_p2p_ns: coll_inter.p2p_ns(pp_msg),
+        dp_allreduce_ns: coll_inter.allreduce_ns(dp_msg),
+        pcie_tp_msg_ns: pcie.latency_ns(tp_msg as u64),
+        pcie_pp_msg_ns: pcie.latency_ns(pp_msg as u64),
+        pcie_dp_msg_ns: pcie.latency_ns(dp_msg as u64),
+        total_params,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params() -> (PcieParams, CollParams, CollParams) {
+        (
+            PcieParams::gen3(16),
+            CollParams { n_devices: 8.0, alpha_ns: 500.0, beta_ns_per_b: 0.002 },
+            CollParams { n_devices: 8.0, alpha_ns: 2000.0, beta_ns_per_b: 0.02 },
+        )
+    }
+
+    #[test]
+    fn example_config_lands_near_c3() {
+        let (p, ci, cx) = params();
+        let t = llm_traffic_native(&LlmConfig::example_13b(), &p, &ci, &cx);
+        assert!(t.frac_inter > 0.02 && t.frac_inter < 0.25, "{}", t.frac_inter);
+        assert!(matches!(
+            t.nearest_paper_pattern(),
+            Pattern::C1 | Pattern::C2 | Pattern::C3 | Pattern::C4
+        ));
+    }
+
+    #[test]
+    fn pure_tp_maps_to_c5() {
+        let (p, ci, cx) = params();
+        let cfg = LlmConfig { pp: 1, dp: 1, ..LlmConfig::example_13b() };
+        let t = llm_traffic_native(&cfg, &p, &ci, &cx);
+        assert_eq!(t.frac_inter, 0.0);
+        assert_eq!(t.nearest_paper_pattern(), Pattern::C5);
+    }
+
+    #[test]
+    fn roundtrip_through_f32_slice() {
+        let (p, ci, cx) = params();
+        let t = llm_traffic_native(&LlmConfig::example_13b(), &p, &ci, &cx);
+        let v: Vec<f32> = vec![
+            t.tp_msg_size_b as f32,
+            t.pp_msg_size_b as f32,
+            t.dp_msg_size_b as f32,
+            t.n_tp_collectives as f32,
+            t.n_pp_transfers as f32,
+            t.n_dp_collectives as f32,
+            t.intra_bytes_per_step as f32,
+            t.inter_bytes_per_step as f32,
+            t.frac_inter as f32,
+            t.tp_allreduce_ns as f32,
+            t.pp_p2p_ns as f32,
+            t.dp_allreduce_ns as f32,
+            t.pcie_tp_msg_ns as f32,
+            t.pcie_pp_msg_ns as f32,
+            t.pcie_dp_msg_ns as f32,
+            t.total_params as f32,
+        ];
+        let back = TrafficSummary::from_slice(&v).unwrap();
+        assert!((back.frac_inter - t.frac_inter).abs() < 1e-6);
+        assert!(TrafficSummary::from_slice(&v[..5]).is_err());
+    }
+
+    #[test]
+    fn more_dp_increases_inter_share() {
+        let (p, ci, cx) = params();
+        let lo = llm_traffic_native(&LlmConfig { dp: 2, ..LlmConfig::example_13b() }, &p, &ci, &cx);
+        let hi = llm_traffic_native(&LlmConfig { dp: 64, ..LlmConfig::example_13b() }, &p, &ci, &cx);
+        assert!(hi.frac_inter > lo.frac_inter);
+    }
+}

@@ -1,0 +1,8 @@
+//! Workload drivers: the validation micro-benchmarks (InfiniBand
+//! perftest-style latency/bandwidth tests over the CELLIA model) and the
+//! LLM-derived traffic-pattern bridge from the L2 artifact.
+
+pub mod ib_bench;
+pub mod llm;
+
+pub use ib_bench::{bandwidth_test, latency_test, BwPoint, LatPoint, PAPER_TABLE1, PAPER_TABLE2, TEST_SIZES};

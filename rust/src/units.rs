@@ -1,0 +1,166 @@
+//! Simulation units: picosecond time, byte counts, link rates.
+//!
+//! All simulator arithmetic is done in integer **picoseconds** so event
+//! ordering is exact and runs are bit-reproducible across platforms; the
+//! floating-point analytic models (mirroring the L1 kernels) convert to ps
+//! only at the boundary.
+
+use std::fmt;
+use std::ops::{Add, AddAssign, Sub};
+
+/// Simulation time in picoseconds.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct Time(pub u64);
+
+impl Time {
+    pub const ZERO: Time = Time(0);
+    pub const MAX: Time = Time(u64::MAX);
+
+    #[inline]
+    pub fn from_ps(ps: u64) -> Time {
+        Time(ps)
+    }
+    #[inline]
+    pub fn from_ns(ns: f64) -> Time {
+        Time((ns * 1e3).round() as u64)
+    }
+    #[inline]
+    pub fn from_us(us: f64) -> Time {
+        Time((us * 1e6).round() as u64)
+    }
+    #[inline]
+    pub fn from_ms(ms: f64) -> Time {
+        Time((ms * 1e9).round() as u64)
+    }
+    #[inline]
+    pub fn as_ps(self) -> u64 {
+        self.0
+    }
+    #[inline]
+    pub fn as_ns(self) -> f64 {
+        self.0 as f64 / 1e3
+    }
+    #[inline]
+    pub fn as_us(self) -> f64 {
+        self.0 as f64 / 1e6
+    }
+    #[inline]
+    pub fn as_ms(self) -> f64 {
+        self.0 as f64 / 1e9
+    }
+    #[inline]
+    pub fn saturating_sub(self, rhs: Time) -> Time {
+        Time(self.0.saturating_sub(rhs.0))
+    }
+}
+
+impl Add for Time {
+    type Output = Time;
+    #[inline]
+    fn add(self, rhs: Time) -> Time {
+        Time(self.0 + rhs.0)
+    }
+}
+impl AddAssign for Time {
+    #[inline]
+    fn add_assign(&mut self, rhs: Time) {
+        self.0 += rhs.0;
+    }
+}
+impl Sub for Time {
+    type Output = Time;
+    #[inline]
+    fn sub(self, rhs: Time) -> Time {
+        debug_assert!(self.0 >= rhs.0, "negative time delta");
+        Time(self.0 - rhs.0)
+    }
+}
+impl fmt::Debug for Time {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:.3}ns", self.as_ns())
+    }
+}
+impl fmt::Display for Time {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.0 >= 1_000_000_000 {
+            write!(f, "{:.3}ms", self.as_ms())
+        } else if self.0 >= 1_000_000 {
+            write!(f, "{:.3}us", self.as_us())
+        } else {
+            write!(f, "{:.3}ns", self.as_ns())
+        }
+    }
+}
+
+/// Link rate in Gbit/s (1 Gbit/s == 1 bit/ns == 0.125 bytes/ns).
+#[derive(Clone, Copy, PartialEq, PartialOrd, Debug)]
+pub struct Gbps(pub f64);
+
+impl Gbps {
+    /// Serialization time for `bytes` on a raw link of this rate.
+    #[inline]
+    pub fn ser_time(self, bytes: u64) -> Time {
+        debug_assert!(self.0 > 0.0);
+        // bytes*8 bits / (rate bit/ns) = ns; *1000 -> ps.
+        Time(((bytes as f64) * 8000.0 / self.0).round() as u64)
+    }
+
+    /// Picoseconds per byte (precomputed multiplier for the hot path).
+    #[inline]
+    pub fn ps_per_byte(self) -> f64 {
+        8000.0 / self.0
+    }
+    /// Bytes per nanosecond.
+    #[inline]
+    pub fn bytes_per_ns(self) -> f64 {
+        self.0 / 8.0
+    }
+    /// Gigabytes per second (decimal).
+    #[inline]
+    pub fn gb_per_s(self) -> f64 {
+        self.0 / 8.0
+    }
+}
+
+/// Convenience: binary-prefixed sizes.
+pub const KIB: u64 = 1024;
+pub const MIB: u64 = 1024 * 1024;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_conversions_roundtrip() {
+        assert_eq!(Time::from_ns(1.0).as_ps(), 1000);
+        assert_eq!(Time::from_us(2.5).as_ps(), 2_500_000);
+        assert_eq!(Time::from_ms(0.5).as_ps(), 500_000_000);
+        assert!((Time::from_ns(123.456).as_ns() - 123.456).abs() < 1e-9);
+    }
+
+    #[test]
+    fn time_arith_and_order() {
+        let a = Time::from_ns(10.0);
+        let b = Time::from_ns(3.0);
+        assert_eq!((a + b).as_ps(), 13_000);
+        assert_eq!((a - b).as_ps(), 7_000);
+        assert!(b < a);
+        assert_eq!(b.saturating_sub(a), Time::ZERO);
+    }
+
+    #[test]
+    fn gbps_serialization_time() {
+        // 400 Gbps: 4096 B = 32768 bits -> 81.92 ns.
+        assert_eq!(Gbps(400.0).ser_time(4096).as_ps(), 81_920);
+        // 100 Gbps EDR: 4096 B -> 327.68 ns.
+        assert_eq!(Gbps(100.0).ser_time(4096).as_ps(), 327_680);
+        assert_eq!(Gbps(100.0).bytes_per_ns(), 12.5);
+    }
+
+    #[test]
+    fn display_picks_scale() {
+        assert_eq!(format!("{}", Time::from_ns(5.0)), "5.000ns");
+        assert_eq!(format!("{}", Time::from_us(5.0)), "5.000us");
+        assert_eq!(format!("{}", Time::from_ms(5.0)), "5.000ms");
+    }
+}

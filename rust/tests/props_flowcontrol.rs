@@ -1,0 +1,127 @@
+//! Property tests: flow-control / buffer invariants and message
+//! conservation under randomized configurations (DESIGN.md inventory).
+
+use sauron::config::{presets, Arrival, Pattern};
+use sauron::net::world::{BenchMode, NativeProvider, Sim};
+use sauron::testkit::{forall, Choice, FloatRange, Triple};
+use sauron::units::Time;
+
+fn build(nodes: usize, gbs: f64, pattern: Pattern, load: f64, arrival: Arrival) -> Sim {
+    let mut cfg = presets::scaleout(nodes, gbs, pattern, load);
+    cfg.warmup_us = 5.0;
+    cfg.measure_us = 10.0;
+    cfg.traffic.arrival = arrival;
+    Sim::new(cfg, &NativeProvider, BenchMode::None).expect("valid config")
+}
+
+#[test]
+fn prop_buffers_never_exceed_capacity() {
+    let gen = Triple(
+        Choice(&[128.0f64, 256.0, 512.0]),
+        Choice(&[Pattern::C1, Pattern::C2, Pattern::C3, Pattern::C4, Pattern::C5]),
+        FloatRange { lo: 0.05, hi: 1.0 },
+    );
+    forall(0xF10, 12, &gen, |&(gbs, pattern, load)| {
+        let mut sim = build(32, gbs, pattern, load, Arrival::Poisson);
+        // Check invariants at several points mid-run, not just at the end.
+        for step in 1..=4 {
+            let t = Time::from_us(step as f64 * 3.0);
+            sim.engine_mut().run_until(t);
+            sim.world().check_invariants().map_err(|e| format!("{gbs}/{pattern:?}/{load}: {e}"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_messages_conserved_after_drain() {
+    // Stop generating, drain the network completely: every injected
+    // message either completed or is still queued nowhere (all units
+    // delivered) -- nothing lost, nothing duplicated.
+    let gen = Triple(
+        Choice(&[128.0f64, 512.0]),
+        Choice(&[Pattern::C1, Pattern::C4, Pattern::C5]),
+        FloatRange { lo: 0.1, hi: 0.9 },
+    );
+    forall(0xD8A1, 8, &gen, |&(gbs, pattern, load)| {
+        let mut sim = build(32, gbs, pattern, load, Arrival::Poisson);
+        let end = sim.world().end_time();
+        sim.engine_mut().run_until(end);
+        // Let the network drain (generators stop at `end`).
+        sim.engine_mut().run();
+        let w = sim.world();
+        if w.units_in_flight() != 0 {
+            return Err(format!("{} units stuck in flight", w.units_in_flight()));
+        }
+        if w.msgs_in_flight() != 0 {
+            return Err(format!("{} messages never completed", w.msgs_in_flight()));
+        }
+        if w.injected_msgs != w.completed_msgs {
+            return Err(format!(
+                "injected {} != completed {}",
+                w.injected_msgs, w.completed_msgs
+            ));
+        }
+        w.check_invariants()?;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_deterministic_replay() {
+    let gen = Triple(
+        Choice(&[128.0f64, 256.0]),
+        Choice(&[Pattern::C2, Pattern::C5]),
+        FloatRange { lo: 0.1, hi: 1.0 },
+    );
+    forall(0x5EED, 6, &gen, |&(gbs, pattern, load)| {
+        let a = build(32, gbs, pattern, load, Arrival::Poisson).run();
+        let b = build(32, gbs, pattern, load, Arrival::Poisson).run();
+        if a.events != b.events || a.delivered_msgs != b.delivered_msgs {
+            return Err(format!(
+                "non-deterministic: {}/{} vs {}/{}",
+                a.events, a.delivered_msgs, b.events, b.delivered_msgs
+            ));
+        }
+        if a.intra_tput_gbs != b.intra_tput_gbs || a.fct.mean_ns != b.fct.mean_ns {
+            return Err("metrics differ between identical runs".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_throughput_bounded_by_offered_load() {
+    let gen = Triple(
+        Choice(&[128.0f64, 256.0, 512.0]),
+        Choice(&[Pattern::C1, Pattern::C3, Pattern::C5]),
+        FloatRange { lo: 0.05, hi: 0.6 },
+    );
+    forall(0xB0DE, 10, &gen, |&(gbs, pattern, load)| {
+        let r = build(32, gbs, pattern, load, Arrival::Deterministic).run();
+        let total = r.intra_tput_gbs + r.inter_tput_gbs;
+        // Strict throughput can never exceed offered (with margin for
+        // window edge effects).
+        if total > r.offered_gbs * 1.10 {
+            return Err(format!("strict {total:.1} > offered {:.1}", r.offered_gbs));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_inter_share_tracks_pattern() {
+    // At light load the delivered inter fraction approximates the
+    // pattern's configured split.
+    let gen = Choice(&[Pattern::C1, Pattern::C2, Pattern::C3, Pattern::C4]);
+    forall(0xF8AC, 4, &gen, |&pattern| {
+        let r = build(32, 128.0, pattern, 0.2, Arrival::Poisson).run();
+        let total = r.intra_tput_gbs + r.inter_tput_gbs;
+        let frac = r.inter_tput_gbs / total;
+        let want = pattern.frac_inter();
+        if (frac - want).abs() > 0.05 {
+            return Err(format!("{pattern:?}: inter frac {frac:.3} vs configured {want}"));
+        }
+        Ok(())
+    });
+}

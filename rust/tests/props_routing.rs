@@ -1,0 +1,161 @@
+//! Property tests: RLFT topology construction and D-mod-K routing
+//! (DESIGN.md test inventory — routing properties).
+
+use sauron::config::{presets, Pattern};
+use sauron::net::{Kind, Topology};
+use sauron::testkit::{forall, Choice, IntRange, Triple};
+
+fn topo(nodes: usize) -> Topology {
+    Topology::new(&presets::scaleout(nodes, 128.0, Pattern::C1, 0.5))
+}
+
+/// Walk a unit's full path from src accel to dst accel; return link kinds.
+fn walk(t: &Topology, src: u32, dst: u32) -> Vec<Kind> {
+    let node = t.accel_node(src);
+    let local = t.accel_local(src);
+    let mut link = t.accel_up(node, local);
+    let mut kinds = vec![t.kind_of(link)];
+    let mut hops = 0;
+    while let Some(next) = t.next_hop(t.kind_of(link), dst) {
+        link = next;
+        kinds.push(t.kind_of(link));
+        hops += 1;
+        assert!(hops <= 16, "routing loop: {kinds:?}");
+    }
+    kinds
+}
+
+#[test]
+fn prop_every_pair_delivers_within_8_hops() {
+    let gen = Triple(
+        Choice(&[32usize, 128]),
+        IntRange { lo: 0, hi: 1023 },
+        IntRange { lo: 0, hi: 1023 },
+    );
+    forall(0xA11CE, 400, &gen, |&(nodes, s, d)| {
+        let t = topo(nodes);
+        let total = t.total_accels() as u64;
+        let (src, dst) = ((s % total) as u32, (d % total) as u32);
+        if src == dst {
+            return Ok(());
+        }
+        let kinds = walk(&t, src, dst);
+        // Terminates at the destination accelerator's down-link.
+        match *kinds.last().unwrap() {
+            Kind::AccelDown { node, accel } => {
+                if node != t.accel_node(dst) || accel != t.accel_local(dst) {
+                    return Err(format!("delivered to wrong accel: {kinds:?}"));
+                }
+            }
+            other => return Err(format!("path ends at {other:?}")),
+        }
+        if kinds.len() > 8 {
+            return Err(format!("path too long ({}): {kinds:?}", kinds.len()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_intra_pairs_never_touch_the_nic() {
+    let gen = Triple(Choice(&[32usize, 128]), IntRange { lo: 0, hi: 1023 }, IntRange { lo: 0, hi: 6 });
+    forall(0xB0B, 300, &gen, |&(nodes, s, off)| {
+        let t = topo(nodes);
+        let total = t.total_accels() as u64;
+        let src = (s % total) as u32;
+        let node = t.accel_node(src);
+        let a = t.accels_per_node as u64;
+        let dst_local = (t.accel_local(src) as u64 + 1 + off) % a;
+        let dst = node * t.accels_per_node + dst_local as u32;
+        if dst == src {
+            return Ok(());
+        }
+        let kinds = walk(&t, src, dst);
+        if kinds.len() != 2 {
+            return Err(format!("intra path must be 2 hops, got {kinds:?}"));
+        }
+        if kinds.iter().any(|k| {
+            matches!(
+                k,
+                Kind::NicUp { .. } | Kind::NicDown { .. } | Kind::SwToNic { .. } | Kind::LeafUp { .. }
+            )
+        }) {
+            return Err(format!("intra path crossed NIC: {kinds:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dmodk_spreads_destinations_evenly() {
+    for nodes in [32usize, 128] {
+        let t = topo(nodes);
+        let mut counts = vec![0u32; t.spines as usize];
+        for d in 0..t.nodes {
+            counts[t.dmodk_spine(d) as usize] += 1;
+        }
+        let expect = (t.nodes / t.spines) as u32;
+        assert!(counts.iter().all(|&c| c == expect), "{nodes} nodes: {counts:?}");
+    }
+}
+
+#[test]
+fn prop_same_destination_same_spine() {
+    // D-mod-K: the spine serving a destination is source-independent ->
+    // every destination has a unique down-path (contention-free ordering).
+    let gen = Triple(
+        Choice(&[32usize, 128]),
+        IntRange { lo: 0, hi: 1023 },
+        IntRange { lo: 0, hi: 1023 },
+    );
+    forall(0xD0D0, 300, &gen, |&(nodes, s1, s2)| {
+        let t = topo(nodes);
+        let total = t.total_accels() as u64;
+        let dst = ((17 % t.nodes) * t.accels_per_node) as u32;
+        let (a, b) = ((s1 % total) as u32, (s2 % total) as u32);
+        let spine_of = |src: u32| -> Option<u32> {
+            if t.accel_node(src) == t.accel_node(dst) {
+                return None;
+            }
+            walk(&t, src, dst).iter().find_map(|k| match k {
+                Kind::SpineDown { spine, .. } => Some(*spine),
+                _ => None,
+            })
+        };
+        match (spine_of(a), spine_of(b)) {
+            (Some(x), Some(y)) if x != y => Err(format!("dst {dst}: spines {x} vs {y}")),
+            _ => Ok(()),
+        }
+    });
+}
+
+#[test]
+fn prop_link_ids_bijective() {
+    let gen = Choice(&[2usize, 8, 32, 128]);
+    forall(0x1D5, 20, &gen, |&nodes| {
+        let t = topo(nodes);
+        for link in 0..t.total_links() {
+            let kind = t.kind_of(link);
+            let back = match kind {
+                Kind::AccelUp { node, accel } => t.accel_up(node, accel),
+                Kind::AccelDown { node, accel } => t.accel_down(node, accel),
+                Kind::SwToNic { node } => t.sw_to_nic(node),
+                Kind::NicToSw { node } => t.nic_to_sw(node),
+                Kind::NicUp { node } => t.nic_up(node),
+                Kind::NicDown { node } => t.nic_down(node),
+                Kind::LeafUp { leaf, spine } => t.leaf_up(leaf, spine),
+                Kind::SpineDown { spine, leaf } => t.spine_down(spine, leaf),
+            };
+            if back != link {
+                return Err(format!("link {link} -> {kind:?} -> {back}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn rlft_dims_match_paper_for_both_sizes() {
+    assert_eq!(presets::rlft_dims(32), (8, 4), "32 nodes: 8+4 = 12 switches");
+    assert_eq!(presets::rlft_dims(128), (16, 8), "128 nodes: 16+8 = 24 switches");
+}

@@ -1,0 +1,125 @@
+//! Runtime integration: the AOT HLO artifacts executed through PJRT must
+//! agree with the native analytic mirror, and a simulation fed by the HLO
+//! provider must be *identical* to one fed by the native provider.
+//!
+//! These tests require `make artifacts` to have run (skipped with a clear
+//! message otherwise).
+
+use sauron::analytic::{CollParams, PcieParams};
+use sauron::config::{presets, Pattern};
+use sauron::net::world::{BenchMode, NativeProvider, SerProvider, Sim};
+use sauron::runtime::Runtime;
+use sauron::traffic::llm::{llm_traffic_native, LlmConfig};
+
+fn runtime() -> Option<Runtime> {
+    let dir = Runtime::default_dir();
+    match Runtime::load(&dir) {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("SKIP: artifacts not available ({e:#}); run `make artifacts`");
+            None
+        }
+    }
+}
+
+#[test]
+fn pcie_kernel_matches_native_mirror() {
+    let Some(rt) = runtime() else { return };
+    for p in [PcieParams::gen3(16), PcieParams::gen3(8), PcieParams::generic_accel_link(512.0)] {
+        let sizes: Vec<u32> = (0..50).map(|i| 1 + i * 83_221).collect();
+        let hlo = rt.pcie_latency_ns_exec(&p, &sizes).unwrap();
+        for (s, h) in sizes.iter().zip(&hlo) {
+            let native = p.latency_ns(*s as u64);
+            let rel = ((h - native) / native).abs();
+            assert!(rel < 1e-4, "size {s}: HLO {h} vs native {native}");
+        }
+    }
+}
+
+#[test]
+fn pcie_kernel_handles_multi_batch_requests() {
+    let Some(rt) = runtime() else { return };
+    // 2500 sizes -> 3 executions of the 1024-wide artifact.
+    let p = PcieParams::gen3(16);
+    let sizes: Vec<u32> = (1..=2500).map(|i| i * 1000).collect();
+    let hlo = rt.pcie_latency_ns_exec(&p, &sizes).unwrap();
+    assert_eq!(hlo.len(), 2500);
+    for (s, h) in sizes.iter().zip(&hlo).step_by(97) {
+        let native = p.latency_ns(*s as u64);
+        assert!(((h - native) / native).abs() < 1e-4);
+    }
+}
+
+#[test]
+fn collective_kernel_matches_native_mirror() {
+    let Some(rt) = runtime() else { return };
+    let cp = CollParams { n_devices: 8.0, alpha_ns: 700.0, beta_ns_per_b: 0.015 };
+    let sizes: Vec<f32> = vec![1.0, 1e3, 1e6, 5e7];
+    let rows = rt.collective_cost_exec(&cp, &sizes).unwrap();
+    for (i, &s) in sizes.iter().enumerate() {
+        let s = s as f64;
+        for (row, want) in
+            [(0, cp.allreduce_ns(s)), (1, cp.allgather_ns(s)), (2, cp.p2p_ns(s))]
+        {
+            let got = rows[row][i];
+            assert!(((got - want) / want.max(1.0)).abs() < 1e-4, "row {row} size {s}: {got} vs {want}");
+        }
+    }
+}
+
+#[test]
+fn llm_traffic_artifact_matches_native_mirror() {
+    let Some(rt) = runtime() else { return };
+    let pcie = PcieParams::gen3(16);
+    let ci = CollParams { n_devices: 8.0, alpha_ns: 500.0, beta_ns_per_b: 0.002 };
+    let cx = CollParams { n_devices: 8.0, alpha_ns: 2000.0, beta_ns_per_b: 0.02 };
+    for llm in [
+        LlmConfig::example_13b(),
+        LlmConfig { tp: 1, pp: 8, ..LlmConfig::example_13b() },
+        LlmConfig { tp: 8, pp: 1, dp: 1, ..LlmConfig::example_13b() },
+    ] {
+        let hlo = rt.llm_traffic(&llm, &pcie, &ci, &cx).unwrap();
+        let nat = llm_traffic_native(&llm, &pcie, &ci, &cx);
+        assert!((hlo.frac_inter - nat.frac_inter).abs() < 1e-4, "{llm:?}");
+        let rel = |a: f64, b: f64| (a - b).abs() / b.abs().max(1.0);
+        assert!(rel(hlo.intra_bytes_per_step, nat.intra_bytes_per_step) < 1e-3);
+        assert!(rel(hlo.dp_allreduce_ns, nat.dp_allreduce_ns) < 1e-3);
+        assert!(rel(hlo.total_params, nat.total_params) < 1e-3);
+        assert_eq!(hlo.nearest_paper_pattern(), nat.nearest_paper_pattern());
+    }
+}
+
+#[test]
+fn simulation_identical_under_hlo_and_native_providers() {
+    let Some(rt) = runtime() else { return };
+    let mut cfg = presets::scaleout(32, 256.0, Pattern::C2, 0.4);
+    cfg.warmup_us = 5.0;
+    cfg.measure_us = 10.0;
+    let hlo = Sim::new(cfg.clone(), &rt, BenchMode::None).unwrap().run();
+    let nat = Sim::new(cfg, &NativeProvider, BenchMode::None).unwrap().run();
+    // f32 vs f64 rounding can shift a serialization by <=1 ps; with the
+    // same seed the run should still be event-identical in practice.
+    assert_eq!(hlo.delivered_msgs, nat.delivered_msgs);
+    assert_eq!(hlo.events, nat.events);
+    let rel = (hlo.intra_tput_gbs - nat.intra_tput_gbs).abs() / nat.intra_tput_gbs;
+    assert!(rel < 1e-6, "throughput drifted: {rel}");
+    assert_eq!(hlo.table_misses, 0);
+}
+
+#[test]
+fn manifest_is_checked_on_load() {
+    let Some(rt) = runtime() else { return };
+    assert_eq!(rt.manifest.version, 1);
+    assert_eq!(rt.manifest.pcie_latency.batch, 1024);
+    assert_eq!(rt.manifest.collective_cost.batch, 256);
+    assert_eq!(rt.manifest.llm_traffic.out_layout.len(), 16);
+}
+
+#[test]
+fn provider_trait_through_runtime() {
+    let Some(rt) = runtime() else { return };
+    let p = PcieParams::generic_accel_link(128.0);
+    let v = SerProvider::pcie_latency_ns(&rt, &p, &[4096, 4036, 60]);
+    assert_eq!(v.len(), 3);
+    assert!(v.iter().all(|x| *x > 0.0));
+}

@@ -1,0 +1,101 @@
+//! Coordinator + reporting integration: tiny sweeps end-to-end through
+//! the worker pool, CSV/JSON persistence, and figure-series grouping.
+
+use std::sync::Arc;
+
+use sauron::config::Pattern;
+use sauron::coordinator::{self, results, SweepSpec};
+use sauron::net::world::NativeProvider;
+use sauron::report::figures::{self, FigureKind};
+
+fn tiny() -> SweepSpec {
+    SweepSpec {
+        nodes: 32,
+        intra_gbs: vec![128.0, 512.0],
+        patterns: vec![Pattern::C1, Pattern::C5],
+        loads: vec![0.2, 0.6],
+        paper_windows: false,
+        workers: 2,
+        seed: 0xFEED,
+    }
+}
+
+#[test]
+fn sweep_to_figures_pipeline() {
+    let spec = tiny();
+    let provider = Arc::new(coordinator::snapshot_provider(&spec, &NativeProvider));
+    let reports = coordinator::run_sweep(&spec, provider.clone(), None).unwrap();
+    assert_eq!(reports.len(), 8);
+    assert_eq!(provider.miss_count(), 0, "sweep must be fully table-driven");
+
+    // Figure grouping: 2 subfigures (bandwidths) x 2 series (patterns) x 2 loads.
+    let figs = figures::figure_series(&reports, FigureKind::IntraThroughput);
+    assert_eq!(figs.len(), 2);
+    for sf in &figs {
+        assert_eq!(sf.series.len(), 2);
+        for s in &sf.series {
+            assert_eq!(s.loads, vec![0.2, 0.6]);
+        }
+    }
+    // C5 has no FCT series values > 0.
+    let fct = figures::figure_series(&reports, FigureKind::Fct);
+    let c5 = fct[0].series.iter().find(|s| s.pattern == "C5").unwrap();
+    assert!(c5.values.iter().all(|&v| v == 0.0));
+}
+
+#[test]
+fn csv_and_json_roundtrip() {
+    let spec = SweepSpec { loads: vec![0.3], patterns: vec![Pattern::C3], intra_gbs: vec![128.0], ..tiny() };
+    let provider = Arc::new(coordinator::snapshot_provider(&spec, &NativeProvider));
+    let reports = coordinator::run_sweep(&spec, provider, None).unwrap();
+
+    let dir = std::env::temp_dir().join("sauron_sweep_int_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let csv_path = dir.join("sweep.csv");
+    let json_path = dir.join("sweep.json");
+    results::write_csv(&csv_path, &reports).unwrap();
+    results::write_json(&json_path, &reports).unwrap();
+
+    let csv = std::fs::read_to_string(&csv_path).unwrap();
+    assert_eq!(csv.lines().count(), 2);
+    assert!(csv.lines().nth(1).unwrap().starts_with("C3,0.3"));
+
+    let back = results::read_json(&json_path).unwrap();
+    assert_eq!(back.len(), reports.len());
+    assert_eq!(back[0].pattern, "C3");
+    assert_eq!(back[0].delivered_msgs, reports[0].delivered_msgs);
+    assert_eq!(back[0].fct.p99_ns, reports[0].fct.p99_ns);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn render_figures_contains_all_series() {
+    let spec = tiny();
+    let provider = Arc::new(coordinator::snapshot_provider(&spec, &NativeProvider));
+    let reports = coordinator::run_sweep(&spec, provider, None).unwrap();
+    for kind in [
+        FigureKind::IntraThroughput,
+        FigureKind::IntraLatency,
+        FigureKind::InterThroughput,
+        FigureKind::Fct,
+    ] {
+        let txt = figures::render_figure(&reports, kind);
+        assert!(txt.contains("C1") && txt.contains("C5"), "{kind:?}: {txt}");
+        assert!(txt.contains("128") && txt.contains("512"));
+    }
+}
+
+#[test]
+fn paper_spec_enumerates_full_grid() {
+    for nodes in [32, 128] {
+        let spec = SweepSpec::paper(nodes);
+        assert_eq!(spec.points(), 300);
+        let cfgs = spec.configs();
+        // all loads in (0, 1], all patterns present, seeds unique
+        assert!(cfgs.iter().all(|c| c.traffic.load > 0.0 && c.traffic.load <= 1.0));
+        let mut seeds: Vec<u64> = cfgs.iter().map(|c| c.seed).collect();
+        seeds.sort_unstable();
+        seeds.dedup();
+        assert_eq!(seeds.len(), 300);
+    }
+}

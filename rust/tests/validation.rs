@@ -1,0 +1,84 @@
+//! Validation vs the paper's published CELLIA measurements (Tables 1/2,
+//! Figure 4). We do not have the cluster; the paper's numbers are the
+//! ground truth (DESIGN.md substitution table). Tolerances are loose
+//! enough for a packet-level model, tight enough to catch regressions in
+//! the PCIe/NIC/IB calibration.
+
+use sauron::net::world::NativeProvider;
+use sauron::traffic::ib_bench::{self, TEST_SIZES};
+use sauron::units::{KIB, MIB};
+
+/// Table 2 latency within 30% of the paper across the size sweep, and
+/// within 10% for the large (>= 128 KiB) rows where pipeline behaviour
+/// dominates calibration constants.
+#[test]
+fn table2_latency_tracks_paper() {
+    for &size in &[128, 4 * KIB, 128 * KIB, MIB, 4 * MIB] {
+        let p = ib_bench::latency_test(&NativeProvider, size).unwrap();
+        let rel = (p.sim_us - p.paper_us).abs() / p.paper_us;
+        let tol = if size >= 128 * KIB { 0.10 } else { 0.30 };
+        assert!(rel < tol, "{size} B: sim {:.2} vs paper {:.2} ({rel:.2})", p.sim_us, p.paper_us);
+    }
+}
+
+/// Table 1 bandwidth within 25% everywhere, 10% for the calibrated ends.
+#[test]
+fn table1_bandwidth_tracks_paper() {
+    for &size in &[128, 512, 4 * KIB, 64 * KIB, MIB] {
+        let p = ib_bench::bandwidth_test(&NativeProvider, size).unwrap();
+        let rel = (p.sim_gib_s - p.paper_gib_s).abs() / p.paper_gib_s;
+        let tol = if size == 128 || size >= 64 * KIB { 0.10 } else { 0.25 };
+        assert!(
+            rel < tol,
+            "{size} B: sim {:.2} vs paper {:.2} GiB/s ({rel:.2})",
+            p.sim_gib_s,
+            p.paper_gib_s
+        );
+    }
+}
+
+/// Figure 4a shape: bandwidth rises monotonically with message size and
+/// saturates near the EDR payload bound.
+#[test]
+fn fig4_bandwidth_monotone_to_saturation() {
+    let sizes = [128u64, 1 * KIB, 4 * KIB, 32 * KIB, 256 * KIB, 2 * MIB];
+    let mut last = 0.0;
+    for &s in &sizes {
+        let bw = ib_bench::bandwidth_test(&NativeProvider, s).unwrap().sim_gib_s;
+        assert!(bw >= last * 0.98, "bandwidth dipped at {s}: {bw} after {last}");
+        last = bw;
+    }
+    assert!(last > 11.0 && last < 12.0, "saturation {last}");
+}
+
+/// Figure 4b shape: latency is flat for sub-MTU messages, then linear in
+/// size (slope ~ 1/12.3 GB/s).
+#[test]
+fn fig4_latency_flat_then_linear() {
+    let small = ib_bench::latency_test(&NativeProvider, 128).unwrap().sim_us;
+    let mtu = ib_bench::latency_test(&NativeProvider, 4 * KIB).unwrap().sim_us;
+    assert!(mtu < 3.5 * small, "no cliff below MTU: {small} -> {mtu}");
+    let m1 = ib_bench::latency_test(&NativeProvider, MIB).unwrap().sim_us;
+    let m4 = ib_bench::latency_test(&NativeProvider, 4 * MIB).unwrap().sim_us;
+    let slope = (m4 - m1) / 3.0; // us per MiB
+    let expect = (MIB as f64) / 12.3e3; // us per MiB at 12.3 GB/s
+    assert!((slope - expect).abs() / expect < 0.1, "slope {slope:.1} vs {expect:.1} us/MiB");
+}
+
+/// The geomean error across the FULL 16-size sweep stays under 15% for
+/// both tables (regression guard for the calibration constants).
+#[test]
+fn full_sweep_geomean_error_bounded() {
+    let mut bw_pairs = Vec::new();
+    let mut lat_pairs = Vec::new();
+    for &s in TEST_SIZES.iter() {
+        let b = ib_bench::bandwidth_test(&NativeProvider, s).unwrap();
+        bw_pairs.push((b.sim_gib_s, b.paper_gib_s));
+        let l = ib_bench::latency_test(&NativeProvider, s).unwrap();
+        lat_pairs.push((l.sim_us, l.paper_us));
+    }
+    let bw_err = sauron::report::tables::geomean_abs_rel_err(&bw_pairs);
+    let lat_err = sauron::report::tables::geomean_abs_rel_err(&lat_pairs);
+    assert!(bw_err < 0.15, "Table 1 geomean error {bw_err:.3}");
+    assert!(lat_err < 0.15, "Table 2 geomean error {lat_err:.3}");
+}
