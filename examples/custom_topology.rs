@@ -10,7 +10,9 @@
 //! Run: `cargo run --release --example custom_topology`
 
 use sauron::analytic::PcieParams;
-use sauron::config::{Arrival, InterConfig, NicConfig, NodeConfig, Pattern, SimConfig, TrafficConfig};
+use sauron::config::{
+    Arrival, InterConfig, NicConfig, NodeConfig, Pattern, SimConfig, TrafficConfig, Workload,
+};
 use sauron::net::world::{BenchMode, NativeProvider, Sim};
 use sauron::units::MIB;
 
@@ -62,6 +64,7 @@ fn main() -> anyhow::Result<()> {
             load: 0.7,
             arrival: Arrival::Poisson,
         },
+        workload: Workload::None,
     };
     cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
 

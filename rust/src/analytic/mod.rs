@@ -122,10 +122,37 @@ impl CollParams {
         vec![self.n_devices as f32, self.alpha_ns as f32, self.beta_ns_per_b as f32]
     }
 
+    /// α-β parameters for a ring running over a simulated intra-node
+    /// PCIe-class link: each ring step serializes the chunk twice (accel
+    /// up-link into the switch, then the peer's down-link), so the
+    /// effective per-byte cost is `2 · latency(chunk) / chunk` with the
+    /// TLP/DLLP framing folded into β (α = 0). This is the oracle the
+    /// simulated single-node ring collectives are cross-checked against.
+    pub fn from_pcie(link: &PcieParams, n_devices: u32, chunk_b: u64) -> CollParams {
+        let chunk = chunk_b.max(1);
+        CollParams {
+            n_devices: n_devices as f64,
+            alpha_ns: 0.0,
+            beta_ns_per_b: 2.0 * link.latency_ns(chunk) / chunk as f64,
+        }
+    }
+
     /// Ring AllReduce completion (ns): 2(n-1) steps of size/n bytes.
-    pub fn allreduce_ns(&self, size_b: f64) -> f64 {
+    /// (`allreduce_ns` is kept as the short alias.)
+    pub fn ring_allreduce_ns(&self, size_b: f64) -> f64 {
         let n = self.n_devices;
         2.0 * (n - 1.0) * self.alpha_ns + 2.0 * (n - 1.0) / n * size_b * self.beta_ns_per_b
+    }
+
+    /// Ring AllReduce completion (ns): 2(n-1) steps of size/n bytes.
+    pub fn allreduce_ns(&self, size_b: f64) -> f64 {
+        self.ring_allreduce_ns(size_b)
+    }
+
+    /// Ring reduce-scatter completion (ns): (n-1) steps of size/n bytes.
+    pub fn reduce_scatter_ns(&self, size_b: f64) -> f64 {
+        let n = self.n_devices;
+        (n - 1.0) * self.alpha_ns + (n - 1.0) / n * size_b * self.beta_ns_per_b
     }
 
     /// Ring AllGather completion (ns).
@@ -134,10 +161,26 @@ impl CollParams {
         (n - 1.0) * self.alpha_ns + (n - 1.0) / n * size_b * self.beta_ns_per_b
     }
 
+    /// Pairwise-exchange all-to-all completion (ns): n-1 rounds of
+    /// size/n-byte exchanges — the same round structure (and cost) as a
+    /// ring allgather.
+    pub fn all_to_all_ns(&self, size_b: f64) -> f64 {
+        self.allgather_ns(size_b)
+    }
+
     /// Point-to-point transfer (ns).
     pub fn p2p_ns(&self, size_b: f64) -> f64 {
         self.alpha_ns + size_b * self.beta_ns_per_b
     }
+}
+
+/// Hierarchical (two-level) AllReduce completion (ns): intra reduce-
+/// scatter of the full buffer, inter AllReduce of the per-accelerator
+/// shard between nodes, intra allgather to broadcast — the three phases
+/// run back to back (the paper's interleaved intra/inter structure).
+pub fn hierarchical_allreduce_ns(intra: &CollParams, inter: &CollParams, size_b: f64) -> f64 {
+    let shard = size_b / intra.n_devices.max(1.0);
+    intra.reduce_scatter_ns(size_b) + inter.ring_allreduce_ns(shard) + intra.allgather_ns(size_b)
 }
 
 #[cfg(test)]
@@ -195,5 +238,38 @@ mod tests {
         assert!((c.p2p_ns(0.0) - 500.0).abs() < 1e-12);
         let one = CollParams { n_devices: 1.0, ..c };
         assert_eq!(one.allreduce_ns(s), 0.0);
+        // AllReduce = reduce-scatter + allgather; all-to-all matches the
+        // allgather wire volume.
+        assert!((c.allreduce_ns(s) - c.reduce_scatter_ns(s) - c.allgather_ns(s)).abs() < 1e-6);
+        assert_eq!(c.all_to_all_ns(s), c.allgather_ns(s));
+        assert_eq!(c.ring_allreduce_ns(s), c.allreduce_ns(s));
+    }
+
+    #[test]
+    fn from_pcie_matches_two_hop_chunk_cost() {
+        let link = PcieParams::generic_accel_link(128.0);
+        let chunk = 128 * 1024u64;
+        let n = 8u32;
+        let c = CollParams::from_pcie(&link, n, chunk);
+        // Ring AllReduce of n*chunk bytes = 2(n-1) rounds of one chunk
+        // crossing two PCIe hops each.
+        let total = (n as f64) * chunk as f64;
+        let want = 2.0 * (n as f64 - 1.0) * 2.0 * link.latency_ns(chunk);
+        assert!((c.ring_allreduce_ns(total) - want).abs() / want < 1e-9);
+    }
+
+    #[test]
+    fn hierarchical_prediction_composes_phases() {
+        let intra = CollParams { n_devices: 8.0, alpha_ns: 0.0, beta_ns_per_b: 0.002 };
+        let inter = CollParams { n_devices: 32.0, alpha_ns: 100.0, beta_ns_per_b: 0.02 };
+        let s = 1e6;
+        let want = intra.reduce_scatter_ns(s)
+            + inter.ring_allreduce_ns(s / 8.0)
+            + intra.allgather_ns(s);
+        assert_eq!(hierarchical_allreduce_ns(&intra, &inter, s), want);
+        // Hierarchical beats a flat inter ring over all 256 ranks for
+        // large buffers (the motivation for the two-level structure).
+        let flat = CollParams { n_devices: 256.0, alpha_ns: 100.0, beta_ns_per_b: 0.02 };
+        assert!(hierarchical_allreduce_ns(&intra, &inter, s) < flat.ring_allreduce_ns(s));
     }
 }

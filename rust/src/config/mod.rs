@@ -59,6 +59,120 @@ impl Pattern {
         [Pattern::C1, Pattern::C2, Pattern::C3, Pattern::C4, Pattern::C5];
 }
 
+/// Collective operation families the workload engine can schedule
+/// (`traffic::collective` builds the per-rank send/recv programs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CollOp {
+    /// Ring AllReduce: reduce-scatter pass then allgather pass.
+    RingAllReduce,
+    /// Ring reduce-scatter only (each rank ends owning one reduced shard).
+    ReduceScatter,
+    /// Ring allgather (each rank starts owning one shard of the result).
+    AllGather,
+    /// Pairwise-exchange all-to-all (MoE-dispatch style).
+    AllToAll,
+    /// Two-level AllReduce: intra-node reduce-scatter → inter-node
+    /// AllReduce between same-local-rank peers → intra-node allgather.
+    /// This is the op whose intra/inter phase interleaving produces the
+    /// paper's NIC-boundary interference effect.
+    HierarchicalAllReduce,
+}
+
+impl CollOp {
+    pub fn name(self) -> &'static str {
+        match self {
+            CollOp::RingAllReduce => "ring_allreduce",
+            CollOp::ReduceScatter => "reduce_scatter",
+            CollOp::AllGather => "allgather",
+            CollOp::AllToAll => "all_to_all",
+            CollOp::HierarchicalAllReduce => "hier_allreduce",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<CollOp> {
+        Ok(match s {
+            "ring_allreduce" | "allreduce" => CollOp::RingAllReduce,
+            "reduce_scatter" | "reducescatter" => CollOp::ReduceScatter,
+            "allgather" | "all_gather" => CollOp::AllGather,
+            "all_to_all" | "alltoall" => CollOp::AllToAll,
+            "hier_allreduce" | "hierarchical" | "hier" => CollOp::HierarchicalAllReduce,
+            other => anyhow::bail!("unknown collective op '{other}'"),
+        })
+    }
+
+    pub const ALL: [CollOp; 5] = [
+        CollOp::RingAllReduce,
+        CollOp::ReduceScatter,
+        CollOp::AllGather,
+        CollOp::AllToAll,
+        CollOp::HierarchicalAllReduce,
+    ];
+}
+
+/// Which ranks participate in a collective.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CollScope {
+    /// One collective over every accelerator in the system.
+    Global,
+    /// Independent concurrent collectives, one per node over its local
+    /// accelerators (tensor-parallel style). Iteration completion is
+    /// still barriered across all nodes.
+    PerNode,
+}
+
+impl CollScope {
+    pub fn name(self) -> &'static str {
+        match self {
+            CollScope::Global => "global",
+            CollScope::PerNode => "per_node",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<CollScope> {
+        Ok(match s {
+            "global" => CollScope::Global,
+            "per_node" | "node" => CollScope::PerNode,
+            other => anyhow::bail!("unknown collective scope '{other}'"),
+        })
+    }
+}
+
+/// A closed-loop collective workload: every participating accelerator
+/// executes a dependency-ordered schedule of send/recv steps, repeated
+/// `iters` times with a global barrier between iterations.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CollectiveSpec {
+    pub op: CollOp,
+    pub scope: CollScope,
+    /// Total collective payload per rank in bytes (the buffer size an
+    /// application would pass to the collective call).
+    pub size_b: u64,
+    /// Barrier-separated iterations to run (completion time is measured
+    /// per iteration).
+    pub iters: u32,
+}
+
+/// Closed-loop workload driving the simulation alongside (or instead of)
+/// the open-loop generators. Generalizes the old two-mode bench driver
+/// (`BenchMode` remains as a type alias).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Workload {
+    /// Open-loop generators only, per the traffic config.
+    None,
+    /// One message bounces between two accelerators (ib_*_lat style).
+    PingPong { a: u32, b: u32, size_b: u32 },
+    /// `inflight` messages kept outstanding src→dst (ib_*_bw style).
+    Window { src: u32, dst: u32, size_b: u32, inflight: u32 },
+    /// Dependency-ordered collective schedule over the accelerators.
+    Collective(CollectiveSpec),
+}
+
+impl Workload {
+    pub fn is_none(&self) -> bool {
+        matches!(self, Workload::None)
+    }
+}
+
 /// Message inter-arrival process at each generator.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum Arrival {
@@ -164,6 +278,9 @@ pub struct SimConfig {
     pub node: NodeConfig,
     pub inter: InterConfig,
     pub traffic: TrafficConfig,
+    /// Closed-loop workload (collectives / bench drivers) running on top
+    /// of — or instead of — the open-loop generators.
+    pub workload: Workload,
 }
 
 impl SimConfig {
@@ -215,6 +332,54 @@ impl SimConfig {
         if self.measure_us <= 0.0 {
             return Err("measure window must be positive".into());
         }
+        self.validate_workload(&self.workload)?;
+        Ok(())
+    }
+
+    /// Validate a workload against this config's topology. Split out from
+    /// [`SimConfig::validate`] because the world also accepts an explicit
+    /// bench argument that overrides `self.workload` and must pass the
+    /// same checks.
+    pub fn validate_workload(&self, w: &Workload) -> Result<(), String> {
+        let n = &self.node;
+        match *w {
+            Workload::None => {}
+            Workload::PingPong { a, b, size_b } => {
+                let accels = (self.inter.nodes * n.accels_per_node) as u32;
+                if a >= accels || b >= accels || a == b {
+                    return Err(format!("pingpong endpoints {a}/{b} invalid for {accels} accels"));
+                }
+                if size_b == 0 {
+                    return Err("pingpong size_b must be > 0".into());
+                }
+            }
+            Workload::Window { src, dst, size_b, inflight } => {
+                let accels = (self.inter.nodes * n.accels_per_node) as u32;
+                if src >= accels || dst >= accels || src == dst {
+                    return Err(format!("window endpoints {src}/{dst} invalid for {accels} accels"));
+                }
+                if size_b == 0 || inflight == 0 {
+                    return Err("window size_b and inflight must be > 0".into());
+                }
+            }
+            Workload::Collective(spec) => {
+                if self.inter.nodes * n.accels_per_node < 2 {
+                    return Err("collective needs >= 2 accelerators".into());
+                }
+                if spec.size_b == 0 {
+                    return Err("collective size_b must be > 0".into());
+                }
+                if spec.iters == 0 || spec.iters > 100_000 {
+                    return Err(format!("collective iters {} outside 1..=100000", spec.iters));
+                }
+                if spec.op == CollOp::HierarchicalAllReduce && spec.scope == CollScope::PerNode {
+                    return Err("hierarchical allreduce is inherently global scope".into());
+                }
+                if spec.scope == CollScope::PerNode && n.accels_per_node < 2 {
+                    return Err("per-node collective needs >= 2 accels per node".into());
+                }
+            }
+        }
         Ok(())
     }
 
@@ -262,6 +427,67 @@ impl FromJson for Pattern {
             },
             Value::Obj(_) => Ok(Pattern::Custom { frac_inter: v.f64_of("custom_frac_inter")? }),
             other => anyhow::bail!("bad pattern value {other:?}"),
+        }
+    }
+}
+
+impl ToJson for Workload {
+    fn to_json(&self) -> Value {
+        match self {
+            Workload::None => Value::Str("none".into()),
+            Workload::PingPong { a, b, size_b } => Value::obj()
+                .with("type", "pingpong")
+                .with("a", *a)
+                .with("b", *b)
+                .with("size_b", *size_b),
+            Workload::Window { src, dst, size_b, inflight } => Value::obj()
+                .with("type", "window")
+                .with("src", *src)
+                .with("dst", *dst)
+                .with("size_b", *size_b)
+                .with("inflight", *inflight),
+            Workload::Collective(spec) => Value::obj()
+                .with("type", "collective")
+                .with("op", spec.op.name())
+                .with("scope", spec.scope.name())
+                .with("size_b", spec.size_b)
+                .with("iters", spec.iters),
+        }
+    }
+}
+
+impl FromJson for Workload {
+    fn from_json(v: &Value) -> anyhow::Result<Workload> {
+        // Checked narrowing: a silently wrapped endpoint or size would
+        // run a very different simulation than the file describes.
+        let u32_field = |key: &str| -> anyhow::Result<u32> {
+            let n = v.u64_of(key)?;
+            anyhow::ensure!(n <= u32::MAX as u64, "workload field '{key}' value {n} exceeds u32");
+            Ok(n as u32)
+        };
+        match v {
+            Value::Str(s) if s == "none" => Ok(Workload::None),
+            Value::Obj(_) => match v.str_of("type")? {
+                "pingpong" => Ok(Workload::PingPong {
+                    a: u32_field("a")?,
+                    b: u32_field("b")?,
+                    size_b: u32_field("size_b")?,
+                }),
+                "window" => Ok(Workload::Window {
+                    src: u32_field("src")?,
+                    dst: u32_field("dst")?,
+                    size_b: u32_field("size_b")?,
+                    inflight: u32_field("inflight")?,
+                }),
+                "collective" => Ok(Workload::Collective(CollectiveSpec {
+                    op: CollOp::parse(v.str_of("op")?)?,
+                    scope: CollScope::parse(v.str_of("scope")?)?,
+                    size_b: v.u64_of("size_b")?,
+                    iters: u32_field("iters")?,
+                })),
+                other => anyhow::bail!("unknown workload type '{other}'"),
+            },
+            other => anyhow::bail!("bad workload value {other:?}"),
         }
     }
 }
@@ -424,6 +650,7 @@ impl ToJson for SimConfig {
             .with("node", self.node.to_json())
             .with("inter", self.inter.to_json())
             .with("traffic", self.traffic.to_json())
+            .with("workload", self.workload.to_json())
     }
 }
 
@@ -436,6 +663,11 @@ impl FromJson for SimConfig {
             node: NodeConfig::from_json(v.req("node")?)?,
             inter: InterConfig::from_json(v.req("inter")?)?,
             traffic: TrafficConfig::from_json(v.req("traffic")?)?,
+            // Optional for compatibility with pre-workload config files.
+            workload: match v.get("workload") {
+                Some(w) => Workload::from_json(w)?,
+                None => Workload::None,
+            },
         })
     }
 }
@@ -474,6 +706,75 @@ mod tests {
         assert!(cfg.validate().is_err());
         cfg.inter.leaves = 8;
         cfg.node.nic.header_b = cfg.node.nic.mtu_b;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn workload_json_roundtrip_all_variants() {
+        let specs = [
+            Workload::None,
+            Workload::PingPong { a: 0, b: 1, size_b: 4096 },
+            Workload::Window { src: 2, dst: 9, size_b: 1 << 20, inflight: 8 },
+            Workload::Collective(CollectiveSpec {
+                op: CollOp::HierarchicalAllReduce,
+                scope: CollScope::Global,
+                size_b: 1 << 20,
+                iters: 4,
+            }),
+        ];
+        for w in specs {
+            let back = Workload::from_json(&w.to_json()).unwrap();
+            assert_eq!(w, back, "{w:?}");
+        }
+        // every op/scope name parses back
+        for op in CollOp::ALL {
+            assert_eq!(CollOp::parse(op.name()).unwrap(), op);
+        }
+        for scope in [CollScope::Global, CollScope::PerNode] {
+            assert_eq!(CollScope::parse(scope.name()).unwrap(), scope);
+        }
+        assert!(CollOp::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn config_with_collective_workload_roundtrips_and_validates() {
+        let mut cfg = scaleout(32, 256.0, Pattern::C1, 0.3);
+        cfg.workload = Workload::Collective(CollectiveSpec {
+            op: CollOp::RingAllReduce,
+            scope: CollScope::PerNode,
+            size_b: 1 << 20,
+            iters: 3,
+        });
+        cfg.validate().unwrap();
+        let back = SimConfig::from_json_str(&cfg.to_json_string()).unwrap();
+        assert_eq!(cfg, back);
+        // old config files without a workload field still parse
+        let mut v = cfg.to_json();
+        if let Value::Obj(fields) = &mut v {
+            fields.retain(|(k, _)| k != "workload");
+        }
+        let old = SimConfig::from_json(&v).unwrap();
+        assert_eq!(old.workload, Workload::None);
+    }
+
+    #[test]
+    fn workload_validation_catches_bad_specs() {
+        let mut cfg = scaleout(32, 128.0, Pattern::C1, 0.0);
+        cfg.workload = Workload::Collective(CollectiveSpec {
+            op: CollOp::HierarchicalAllReduce,
+            scope: CollScope::PerNode, // hierarchical must be global
+            size_b: 4096,
+            iters: 1,
+        });
+        assert!(cfg.validate().is_err());
+        cfg.workload = Workload::Collective(CollectiveSpec {
+            op: CollOp::RingAllReduce,
+            scope: CollScope::Global,
+            size_b: 0, // empty buffer
+            iters: 1,
+        });
+        assert!(cfg.validate().is_err());
+        cfg.workload = Workload::PingPong { a: 0, b: 0, size_b: 64 }; // a == b
         assert!(cfg.validate().is_err());
     }
 

@@ -45,6 +45,7 @@ pub fn cellia() -> SimConfig {
             load: 0.0, // ib_bench drives injection, not the open-loop generator
             arrival: Arrival::Poisson,
         },
+        workload: Workload::None,
     }
 }
 
@@ -104,7 +105,30 @@ pub fn scaleout(nodes: usize, aggregated_gbs: f64, pattern: Pattern, load: f64) 
             port_buf_b: DEFAULT_PORT_BUF,
         },
         traffic: TrafficConfig { pattern, msg_size_b: 4096, load, arrival: Arrival::Poisson },
+        workload: Workload::None,
     }
+}
+
+/// Collective-workload experiment on the scale-out node+network: a
+/// closed-loop collective over all accelerators plus optional open-loop
+/// background traffic (`bg_load` fraction of link capacity with
+/// `bg_pattern`'s inter split). The paper's interference scenario is a
+/// hierarchical AllReduce against inter-node background traffic while the
+/// intra knob sweeps 128→256→512 GB/s.
+pub fn collective_scaleout(
+    nodes: usize,
+    aggregated_gbs: f64,
+    spec: CollectiveSpec,
+    bg_pattern: Pattern,
+    bg_load: f64,
+) -> SimConfig {
+    let mut cfg = scaleout(nodes, aggregated_gbs, bg_pattern, bg_load);
+    // Collectives are latency experiments: long enough windows that the
+    // background traffic stays live for the whole measured run.
+    cfg.warmup_us = 20.0;
+    cfg.measure_us = 200.0;
+    cfg.workload = Workload::Collective(spec);
+    cfg
 }
 
 /// Restore the paper's full simulation windows (2.5 ms + 0.5 ms).
@@ -156,6 +180,26 @@ mod tests {
         let cfg = with_paper_windows(scaleout(32, 128.0, Pattern::C1, 0.5));
         assert_eq!(cfg.warmup_us, 2500.0);
         assert_eq!(cfg.measure_us, 500.0);
+    }
+
+    #[test]
+    fn collective_presets_validate_for_all_ops() {
+        for op in CollOp::ALL {
+            let scope = if op == CollOp::HierarchicalAllReduce {
+                CollScope::Global
+            } else {
+                CollScope::PerNode
+            };
+            let cfg = collective_scaleout(
+                32,
+                256.0,
+                CollectiveSpec { op, scope, size_b: 1 << 20, iters: 2 },
+                Pattern::Custom { frac_inter: 1.0 },
+                0.2,
+            );
+            cfg.validate().unwrap_or_else(|e| panic!("{op:?}: {e}"));
+            assert!(matches!(cfg.workload, Workload::Collective(s) if s.op == op));
+        }
     }
 
     #[test]

@@ -10,11 +10,12 @@ use crate::serial::json::{FromJson, ToJson, Value};
 pub const CSV_HEADER: &str = "pattern,load,nodes,accels,intra_gbs_cfg,offered_gbs,\
 intra_tput_gbs,intra_drain_gbs,intra_lat_mean_ns,intra_lat_p99_ns,intra_lat_max_ns,\
 inter_tput_gbs,inter_drain_gbs,fct_mean_ns,fct_p99_ns,fct_max_ns,\
-intra_wire_gbs,inter_wire_gbs,drop_frac,delivered_msgs,events,wall_ms";
+intra_wire_gbs,inter_wire_gbs,drop_frac,delivered_msgs,events,wall_ms,\
+coll_op,coll_size_b,coll_iters,coll_mean_ns,coll_p99_ns,coll_pred_ns";
 
 pub fn csv_row(r: &SimReport) -> String {
     format!(
-        "{},{:.4},{},{},{:.1},{:.3},{:.3},{:.3},{:.1},{:.1},{:.1},{:.3},{:.3},{:.1},{:.1},{:.1},{:.3},{:.3},{:.4},{},{},{:.1}",
+        "{},{:.4},{},{},{:.1},{:.3},{:.3},{:.3},{:.1},{:.1},{:.1},{:.3},{:.3},{:.1},{:.1},{:.1},{:.3},{:.3},{:.4},{},{},{:.1},{},{},{},{:.1},{:.1},{:.1}",
         r.pattern,
         r.load,
         r.nodes,
@@ -37,6 +38,12 @@ pub fn csv_row(r: &SimReport) -> String {
         r.delivered_msgs,
         r.events,
         r.wall_ms,
+        if r.coll_op.is_empty() { "-" } else { r.coll_op.as_str() },
+        r.coll_size_b,
+        r.coll_iters,
+        r.coll_time.mean_ns,
+        r.coll_time.p99_ns,
+        r.coll_pred_ns,
     )
 }
 

@@ -36,5 +36,5 @@ pub mod testkit;
 pub mod traffic;
 pub mod units;
 
-pub use config::SimConfig;
+pub use config::{CollOp, CollScope, CollectiveSpec, SimConfig, Workload};
 pub use net::world::{BenchMode, NativeProvider, Sim, SimReport};

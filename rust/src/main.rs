@@ -14,12 +14,13 @@ use std::sync::Arc;
 
 use sauron::analytic::{CollParams, PcieParams};
 use sauron::cli::Args;
-use sauron::config::{presets, Pattern, SimConfig};
+use sauron::config::{presets, CollOp, CollScope, CollectiveSpec, Pattern, SimConfig};
 use sauron::coordinator::{self, results, SweepSpec};
 use sauron::net::world::{BenchMode, NativeProvider, SerProvider, Sim};
 use sauron::report::{figures, tables};
 use sauron::runtime::Runtime;
 use sauron::serial::json::ToJson;
+use sauron::traffic::collective;
 use sauron::traffic::ib_bench;
 use sauron::traffic::llm::{llm_traffic_native, LlmConfig};
 
@@ -36,6 +37,13 @@ COMMANDS
              Reproduce Figures 5-8 (scale-out load sweeps).
   run        <config.json> [--json]
              One simulation from a JSON config file.
+  collective [--op ring_allreduce|reduce_scatter|allgather|all_to_all|hier_allreduce]
+             [--scope global|per_node] [--nodes N] [--intra 128,256,512]
+             [--size BYTES] [--iters K] [--bg-load F] [--bg-pattern C1|..|0.3]
+             [--json]
+             Closed-loop collective completion time vs the analytic
+             oracle, optionally against open-loop background traffic
+             (the paper's NIC-boundary interference scenario).
   topo       [--nodes N]       Describe the RLFT fat-tree.
   traffic-model [--layers L] [--hidden H] [--seq S] [--vocab V]
              [--tp T] [--pp P] [--dp D] [--microbatches M]
@@ -257,6 +265,61 @@ fn main() -> anyhow::Result<()> {
             }
         }
 
+        "collective" => {
+            let op =
+                CollOp::parse(&args.opt("op").unwrap_or("hier_allreduce").to_ascii_lowercase())?;
+            let default_scope =
+                if op == CollOp::HierarchicalAllReduce { "global" } else { "per_node" };
+            let scope = CollScope::parse(
+                &args.opt("scope").unwrap_or(default_scope).to_ascii_lowercase(),
+            )?;
+            let nodes = args.get_or("nodes", 32usize)?;
+            let intra: Vec<f64> = {
+                let v = args.list::<f64>("intra")?;
+                if v.is_empty() {
+                    vec![128.0, 256.0, 512.0]
+                } else {
+                    v
+                }
+            };
+            let size_b = args.get_or("size", 1u64 << 20)?;
+            let iters = args.get_or("iters", 4u32)?;
+            let bg_load = args.get_or("bg-load", 0.0f64)?;
+            let bg_pattern = parse_pattern(args.opt("bg-pattern").unwrap_or("C1"))?;
+            let json = args.flag("json");
+            args.reject_unknown()?;
+            let spec = CollectiveSpec { op, scope, size_b, iters };
+            for &gbs in &intra {
+                let cfg = presets::collective_scaleout(nodes, gbs, spec, bg_pattern, bg_load);
+                let report = Sim::new(cfg, be.provider(), BenchMode::None)?.run();
+                if json {
+                    println!("{}", report.to_json().pretty());
+                } else {
+                    let mean_us = report.coll_time.mean_ns / 1e3;
+                    let pred_us = report.coll_pred_ns / 1e3;
+                    let delta = if pred_us > 0.0 {
+                        (mean_us - pred_us) / pred_us * 100.0
+                    } else {
+                        0.0
+                    };
+                    println!(
+                        "{} {} B x{} iters @ {:.0} GB/s intra, bg {} load {:.2}: \
+                         mean {:.1} us (p99 {:.1} us) | analytic {:.1} us ({:+.1}%)",
+                        report.coll_op,
+                        report.coll_size_b,
+                        report.coll_iters,
+                        gbs,
+                        report.pattern,
+                        bg_load,
+                        mean_us,
+                        report.coll_time.p99_ns / 1e3,
+                        pred_us,
+                        delta
+                    );
+                }
+            }
+        }
+
         "topo" => {
             let nodes = args.get_or("nodes", 32usize)?;
             args.reject_unknown()?;
@@ -300,6 +363,17 @@ fn main() -> anyhow::Result<()> {
                 "inter fraction {:.1}% -> nearest paper pattern {}",
                 t.frac_inter * 100.0,
                 t.nearest_paper_pattern().name()
+            );
+            let spec = collective::llm_collective(&llm);
+            println!(
+                "dominant collective: {} ({}) of {} B — run it closed-loop with \
+                 `sauron collective --op {} --scope {} --size {}`",
+                spec.op.name(),
+                spec.scope.name(),
+                spec.size_b,
+                spec.op.name(),
+                spec.scope.name(),
+                spec.size_b
             );
         }
 

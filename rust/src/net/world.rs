@@ -28,15 +28,17 @@
 use crate::serial::json::{FromJson, ToJson, Value};
 use std::collections::VecDeque;
 
-use crate::analytic::PcieParams;
+use crate::analytic::{CollParams, PcieParams};
 use crate::config::{Arrival, SimConfig};
-use crate::metrics::{Collector, HistSummary};
+pub use crate::config::{CollOp, CollScope, CollectiveSpec, Workload};
+use crate::metrics::{Collector, HistSummary, Histogram};
 pub use crate::metrics::Class;
 use crate::net::link::{Link, LinkModel, Waker};
 use crate::net::slab::Slab;
 use crate::net::topo::{Kind, Topology};
 use crate::rng::Rng;
 use crate::sim::{Engine, EventQueue, Model};
+use crate::traffic::collective::{self, Step};
 use crate::units::{Gbps, Time};
 
 /// Maximum messages queued at a source before new offers are dropped
@@ -61,15 +63,61 @@ impl SerProvider for NativeProvider {
     }
 }
 
-/// Closed-loop benchmark drivers (validation experiments).
-#[derive(Clone, Copy, Debug, PartialEq)]
-pub enum BenchMode {
-    /// Open-loop generators per the traffic config.
-    None,
-    /// One message bounces between two accelerators (ib_*_lat style).
-    PingPong { a: u32, b: u32, size_b: u32 },
-    /// `inflight` messages kept outstanding src→dst (ib_*_bw style).
-    Window { src: u32, dst: u32, size_b: u32, inflight: u32 },
+/// Back-compat alias: the original two-mode bench driver generalized
+/// into the [`Workload`] subsystem (`Workload::PingPong` / `::Window`
+/// keep the old semantics; `Workload::Collective` is the closed-loop
+/// schedule engine).
+pub type BenchMode = Workload;
+
+/// Runtime state of a [`Workload::Collective`]: per-rank program
+/// counters over the compiled schedule, per-(dst, src) arrival/consumed
+/// counters for recv matching, and the iteration barrier.
+struct CollectiveState {
+    spec: CollectiveSpec,
+    /// `steps[rank]` — rank's program for one iteration.
+    steps: Vec<Vec<Step>>,
+    ranks: u32,
+    pcs: Vec<u32>,
+    done: Vec<bool>,
+    done_count: u32,
+    /// Flat `[dst * ranks + src]` delivery counters. FIFO matching per
+    /// ordered pair is guaranteed by the deterministic single-path
+    /// routing, so counts are sufficient.
+    arrived: Vec<u32>,
+    consumed: Vec<u32>,
+    iters_done: u32,
+    iter_start: Time,
+    /// Completion time of each finished iteration.
+    durations: Vec<Time>,
+}
+
+impl CollectiveState {
+    fn new(spec: CollectiveSpec, sched: collective::Schedule) -> CollectiveState {
+        let ranks = sched.ranks;
+        let n = ranks as usize;
+        CollectiveState {
+            spec,
+            steps: sched.steps,
+            ranks,
+            pcs: vec![0; n],
+            done: vec![false; n],
+            done_count: 0,
+            arrived: vec![0; n * n],
+            consumed: vec![0; n * n],
+            iters_done: 0,
+            iter_start: Time::ZERO,
+            durations: Vec::new(),
+        }
+    }
+}
+
+/// What [`World::advance_rank`] decided while holding the collective
+/// state borrow (acted on after the borrow is released).
+enum CollAction {
+    Send { peer: u32, size_b: u32 },
+    Continue,
+    Blocked,
+    Barrier,
 }
 
 #[derive(Default, Clone, Copy)]
@@ -93,6 +141,9 @@ struct Msg {
     size_b: u32,
     remaining: u32,
     inter: bool,
+    /// Belongs to the collective workload (completion drives the
+    /// destination rank's program counter).
+    coll: bool,
     src: u32,
     dst: u32,
 }
@@ -124,7 +175,11 @@ pub struct World {
     feeders: Vec<Feeder>,
     rngs: Vec<Rng>,
     pub metrics: Collector,
-    bench: BenchMode,
+    /// Effective closed-loop workload (explicit bench argument wins over
+    /// the config's `workload` field; see [`World::new`]).
+    bench: Workload,
+    /// Runtime state when `bench` is a collective.
+    coll: Option<Box<CollectiveState>>,
     /// Sorted (payload, latency) table for the accel PCIe link model,
     /// built from a [`SerProvider`] (normally the AOT HLO kernel).
     pcie_table: Vec<(u32, Time)>,
@@ -136,6 +191,9 @@ pub struct World {
     mean_ia_ps: f64,
     /// Wire-byte snapshots at warm-up (for utilization deltas).
     wire_snapshot: Vec<u64>,
+    /// Wire-byte snapshots at the measure-window end (empty until taken;
+    /// guards utilization against post-window collective drains).
+    wire_end: Vec<u64>,
     /// Whole-run conservation counters (window-independent).
     pub injected_msgs: u64,
     pub completed_msgs: u64,
@@ -153,6 +211,38 @@ impl World {
         cfg.validate().map_err(|e| anyhow::anyhow!("invalid config: {e}"))?;
         let topo = Topology::new(&cfg);
         let txn_payload = (cfg.node.nic.mtu_b - cfg.node.nic.header_b) as u32;
+
+        // Effective workload: an explicit bench argument overrides the
+        // config's workload field (the bench drivers predate it) — and
+        // must pass the same topology checks the config field gets.
+        let bench = if bench.is_none() { cfg.workload } else { bench };
+        cfg.validate_workload(&bench)
+            .map_err(|e| anyhow::anyhow!("invalid workload: {e}"))?;
+        let mut coll_sizes: Vec<u32> = Vec::new();
+        let coll = if let Workload::Collective(spec) = bench {
+            let sched = collective::build(&spec, topo.nodes, topo.accels_per_node)?;
+            sched
+                .check()
+                .map_err(|e| anyhow::anyhow!("collective schedule unsound: {e}"))?;
+            anyhow::ensure!(sched.total_steps() > 0, "collective schedule is empty");
+            // Intra-node sends travel as one whole-message unit and must
+            // fit the finite accel/switch queues (inter sends segment
+            // into MTU transactions and always fit).
+            let a = topo.accels_per_node;
+            let intra_max = sched.max_send_where(|s, d| s / a == d / a) as u64;
+            anyhow::ensure!(
+                intra_max <= cfg.node.accel_queue_b && intra_max <= cfg.node.switch_queue_b,
+                "collective intra chunk {} B exceeds intra queue capacity ({}/{} B); \
+                 use a smaller size_b or deeper queues",
+                intra_max,
+                cfg.node.accel_queue_b,
+                cfg.node.switch_queue_b
+            );
+            coll_sizes = sched.distinct_send_sizes();
+            Some(Box::new(CollectiveState::new(spec, sched)))
+        } else {
+            None
+        };
 
         // -- link construction ------------------------------------------
         let total = topo.total_links() as usize;
@@ -225,6 +315,12 @@ impl World {
         for &s in extra_sizes {
             push_msg_sizes(&mut sizes, s);
         }
+        // Prime the serialization table with every distinct chunk the
+        // collective schedule can put on a PCIe link (whole intra units
+        // plus the MTU segmentation of inter units).
+        for &s in &coll_sizes {
+            push_msg_sizes(&mut sizes, s);
+        }
         sizes.sort_unstable();
         sizes.dedup();
         let lats = provider.pcie_latency_ns(&n.accel_link, &sizes);
@@ -259,6 +355,7 @@ impl World {
         Ok(World {
             metrics: Collector::new(warmup, end),
             wire_snapshot: vec![0; total],
+            wire_end: Vec::new(),
             cfg,
             topo,
             links,
@@ -268,6 +365,7 @@ impl World {
             feeders,
             rngs,
             bench,
+            coll,
             pcie_table,
             table_misses: 0,
             injected_msgs: 0,
@@ -303,16 +401,122 @@ impl World {
             }
         }
         match self.bench {
-            BenchMode::None => {}
-            BenchMode::PingPong { a, b, size_b } => {
-                self.inject(Time::ZERO, a, b, size_b, q);
+            Workload::None => {}
+            Workload::PingPong { a, b, size_b } => {
+                self.inject(Time::ZERO, a, b, size_b, false, q);
             }
-            BenchMode::Window { src, dst, size_b, inflight } => {
+            Workload::Window { src, dst, size_b, inflight } => {
                 for i in 0..inflight {
-                    self.inject(Time::from_ps(i as u64), src, dst, size_b, q);
+                    self.inject(Time::from_ps(i as u64), src, dst, size_b, false, q);
+                }
+            }
+            Workload::Collective(_) => {
+                for rank in 0..self.topo.total_accels() {
+                    self.advance_rank(rank, Time::ZERO, q);
                 }
             }
         }
+    }
+
+    /// Run `rank`'s collective program as far as it can go: sends post
+    /// asynchronously, recvs block until the matching delivery bumps the
+    /// arrival counter (at which point [`World::deliver`] re-enters here).
+    fn advance_rank(&mut self, rank: u32, now: Time, q: &mut EventQueue<Ev>) {
+        loop {
+            // Decide under the borrow, act after releasing it (inject
+            // never touches the collective state).
+            let action = {
+                let Some(cs) = self.coll.as_mut() else { return };
+                let r = rank as usize;
+                if cs.done[r] {
+                    CollAction::Blocked
+                } else if cs.pcs[r] as usize >= cs.steps[r].len() {
+                    cs.done[r] = true;
+                    cs.done_count += 1;
+                    if cs.done_count == cs.ranks {
+                        CollAction::Barrier
+                    } else {
+                        CollAction::Blocked
+                    }
+                } else {
+                    match cs.steps[r][cs.pcs[r] as usize] {
+                        Step::Send { peer, size_b } => {
+                            cs.pcs[r] += 1;
+                            CollAction::Send { peer, size_b }
+                        }
+                        Step::Recv { peer } => {
+                            let idx = r * cs.ranks as usize + peer as usize;
+                            if cs.arrived[idx] > cs.consumed[idx] {
+                                cs.consumed[idx] += 1;
+                                cs.pcs[r] += 1;
+                                CollAction::Continue
+                            } else {
+                                CollAction::Blocked
+                            }
+                        }
+                    }
+                }
+            };
+            match action {
+                CollAction::Send { peer, size_b } => self.inject(now, rank, peer, size_b, true, q),
+                CollAction::Continue => {}
+                CollAction::Blocked => return,
+                CollAction::Barrier => {
+                    self.coll_barrier(now, q);
+                    return;
+                }
+            }
+        }
+    }
+
+    /// All ranks finished the iteration: record its completion time and
+    /// start the next one (if any).
+    fn coll_barrier(&mut self, now: Time, q: &mut EventQueue<Ev>) {
+        let restart = {
+            let cs = self.coll.as_mut().expect("barrier without collective");
+            cs.durations.push(now - cs.iter_start);
+            cs.iters_done += 1;
+            if cs.iters_done < cs.spec.iters {
+                // Every posted send was consumed by a matching recv (the
+                // schedule checker guarantees pairing), so the counters
+                // reset cleanly.
+                debug_assert_eq!(cs.arrived, cs.consumed, "in-flight messages at barrier");
+                cs.pcs.fill(0);
+                cs.done.fill(false);
+                cs.done_count = 0;
+                cs.arrived.fill(0);
+                cs.consumed.fill(0);
+                cs.iter_start = now;
+                true
+            } else {
+                false
+            }
+        };
+        if restart {
+            for rank in 0..self.topo.total_accels() {
+                self.advance_rank(rank, now, q);
+            }
+        }
+    }
+
+    /// A collective message fully arrived at `dst`: bump the pair counter
+    /// and re-run the destination rank's program.
+    fn coll_arrival(&mut self, src: u32, dst: u32, now: Time, q: &mut EventQueue<Ev>) {
+        if let Some(cs) = self.coll.as_mut() {
+            cs.arrived[dst as usize * cs.ranks as usize + src as usize] += 1;
+        }
+        self.advance_rank(dst, now, q);
+    }
+
+    /// True while the configured collective still has iterations to
+    /// finish (used by [`Sim::run`] to drain past the measure window).
+    pub fn collective_pending(&self) -> bool {
+        self.coll.as_ref().map(|c| c.iters_done < c.spec.iters).unwrap_or(false)
+    }
+
+    /// Completion time of each finished collective iteration.
+    pub fn collective_durations(&self) -> Vec<Time> {
+        self.coll.as_ref().map(|c| c.durations.clone()).unwrap_or_default()
     }
 
     #[inline]
@@ -390,11 +594,11 @@ impl World {
         self.txn_payload
     }
 
-    /// Inject a message (bench drivers / generators).
-    fn inject(&mut self, now: Time, src: u32, dst: u32, size_b: u32, q: &mut EventQueue<Ev>) {
+    /// Inject a message (bench drivers / generators / collective sends).
+    fn inject(&mut self, now: Time, src: u32, dst: u32, size_b: u32, coll: bool, q: &mut EventQueue<Ev>) {
         self.injected_msgs += 1;
         let inter = self.topo.accel_node(src) != self.topo.accel_node(dst);
-        let m = Msg { gen_ps: now.as_ps(), size_b, remaining: 0, inter, src, dst };
+        let m = Msg { gen_ps: now.as_ps(), size_b, remaining: 0, inter, coll, src, dst };
         let txns = self.txn_count(&m);
         let mid = self.msgs.insert(Msg { remaining: txns, ..m });
         let f = &mut self.feeders[src as usize];
@@ -533,15 +737,22 @@ impl World {
             self.completed_msgs += 1;
             self.metrics.on_msg_complete(Time::from_ps(m.gen_ps), eff, class, m.size_b as u64);
             self.msgs.remove(mid);
+            if m.coll {
+                // Advance the rank at the message's effective arrival time
+                // (propagation is accounted post-hoc, like PingPong's
+                // re-inject) so collective timing includes hop latency.
+                self.coll_arrival(m.src, m.dst, eff.max(now), q);
+                return;
+            }
             match self.bench {
-                BenchMode::None => {}
-                BenchMode::PingPong { size_b, .. } => {
+                Workload::None | Workload::Collective(_) => {}
+                Workload::PingPong { size_b, .. } => {
                     // bounce back
-                    self.inject(eff.max(now), m.dst, m.src, size_b, q);
+                    self.inject(eff.max(now), m.dst, m.src, size_b, false, q);
                 }
-                BenchMode::Window { src, dst, size_b, .. } => {
+                Workload::Window { src, dst, size_b, .. } => {
                     if now < self.end {
-                        self.inject(now, src, dst, size_b, q);
+                        self.inject(now, src, dst, size_b, false, q);
                     }
                 }
             }
@@ -582,7 +793,7 @@ impl World {
         let accepted = self.feeders[accel as usize].backlog.len() < BACKLOG_LIMIT;
         self.metrics.on_offer(now, size as u64, accepted);
         if accepted {
-            self.inject(now, accel, dst, size, q);
+            self.inject(now, accel, dst, size, false, q);
         }
     }
 
@@ -593,22 +804,158 @@ impl World {
         }
     }
 
+    /// Snapshot wire counters at the measure-window end, so bytes moved
+    /// during a post-window collective drain don't inflate the reported
+    /// utilization (the denominator stays the measure window).
+    pub fn snapshot_wire_end(&mut self) {
+        self.wire_end = self.links.iter().map(|l| l.tx_bytes).collect();
+    }
+
     fn wire_delta_gbs(&self, filter: impl Fn(Kind) -> bool) -> f64 {
         let secs = self.metrics.measure_secs();
         let mut bytes = 0u64;
         for (i, l) in self.links.iter().enumerate() {
             if filter(self.kinds[i]) {
-                bytes += l.tx_bytes - self.wire_snapshot[i];
+                let at_end = if self.wire_end.is_empty() { l.tx_bytes } else { self.wire_end[i] };
+                bytes += at_end - self.wire_snapshot[i];
             }
         }
         bytes as f64 / secs / 1e9
+    }
+
+    /// α-β ring parameters of the intra-node fabric for `n`-rank rings of
+    /// `chunk_b`-byte steps (see [`CollParams::from_pcie`]).
+    fn intra_ring_params(&self, n: u32, chunk_b: u64) -> CollParams {
+        let mut p = CollParams::from_pcie(&self.cfg.node.accel_link, n, chunk_b);
+        if self.cfg.node.rc_cpu_bounce {
+            p.beta_ns_per_b *= 2.0;
+        }
+        p
+    }
+
+    /// One uncongested PCIe hop for a `chunk_b`-byte unit (ns).
+    fn accel_hop_ns(&self, chunk_b: u64) -> f64 {
+        let l = self.cfg.node.accel_link.latency_ns(chunk_b.max(1));
+        if self.cfg.node.rc_cpu_bounce {
+            2.0 * l
+        } else {
+            l
+        }
+    }
+
+    /// Uncongested node-to-node chunk latency (ns): the per-MTU-
+    /// transaction pipeline accel→switch→NIC→fabric→NIC→switch→accel,
+    /// i.e. one pass through every stage plus the bottleneck stage for
+    /// each further transaction. `concurrent` is how many same-node
+    /// chunks cross the shared NIC-boundary stages simultaneously (the
+    /// hierarchical inter phase runs one ring per local rank, all
+    /// funnelling through the node's single NIC).
+    fn inter_p2p_ns(&self, chunk_b: u64, concurrent: u32) -> f64 {
+        let nic = &self.cfg.node.nic;
+        let inter = &self.cfg.inter;
+        let txn = self.txn_payload as u64;
+        let chunk = chunk_b.max(1);
+        let txns = (chunk + txn - 1) / txn;
+        let unit = txn.min(chunk);
+        let wire = (unit + nic.header_b) as f64;
+        let up = self.accel_hop_ns(unit);
+        let swnic = unit as f64 * 8.0 / nic.intra_side_gbps;
+        let nicup = wire * 8.0 / nic.inter_gbps;
+        let fabric = wire * 8.0 / inter.link_gbps;
+        let down = self.accel_hop_ns(unit);
+        // nic_up + leaf_up + spine_down + nic_down first-flit hops.
+        let hops = 4.0 * inter.hop_latency_ns;
+        let stages = [up, swnic, nicup, fabric, fabric, fabric, swnic, down];
+        let sum: f64 = stages.iter().sum();
+        let bottleneck = stages.iter().cloned().fold(0.0, f64::max);
+        // Shared (per-node, not per-rank) stages serialize the other
+        // concurrent chunks' transactions ahead of ours.
+        let shared = [swnic, nicup, fabric].iter().cloned().fold(0.0, f64::max);
+        sum + (txns as f64 - 1.0) * bottleneck
+            + (concurrent.max(1) as f64 - 1.0) * txns as f64 * shared
+            + hops
+            + nic.per_msg_ns
+    }
+
+    /// Analytic completion-time prediction (ns) for one iteration of the
+    /// configured collective on an *uncongested* network — the oracle the
+    /// simulation is cross-checked against. Per-node ring phases are
+    /// exact (α-β over the PCIe chunk cost); NIC-boundary phases model
+    /// the per-transaction pipeline.
+    pub fn collective_predicted_ns(&self) -> f64 {
+        let Some(cs) = &self.coll else { return 0.0 };
+        let spec = cs.spec;
+        let a = self.topo.accels_per_node;
+        let nodes = self.topo.nodes;
+        let s = spec.size_b as f64;
+        match (spec.op, spec.scope) {
+            (CollOp::HierarchicalAllReduce, _) => {
+                let shard = (spec.size_b / a.max(1) as u64).max(1);
+                let inter_chunk = (shard / nodes as u64).max(1);
+                let intra = self.intra_ring_params(a, shard);
+                // Each inter ring round moves one pipelined NIC-boundary
+                // chunk; folding that cost into α (β = 0) lets the
+                // analytic composition apply unchanged.
+                let inter = CollParams {
+                    n_devices: nodes as f64,
+                    alpha_ns: self.inter_p2p_ns(inter_chunk, a),
+                    beta_ns_per_b: 0.0,
+                };
+                crate::analytic::hierarchical_allreduce_ns(&intra, &inter, s)
+            }
+            (op, CollScope::PerNode) => {
+                let chunk = (spec.size_b / a as u64).max(1);
+                let p = self.intra_ring_params(a, chunk);
+                match op {
+                    CollOp::RingAllReduce => p.ring_allreduce_ns(s),
+                    CollOp::ReduceScatter => p.reduce_scatter_ns(s),
+                    CollOp::AllGather => p.allgather_ns(s),
+                    CollOp::AllToAll => p.all_to_all_ns(s),
+                    CollOp::HierarchicalAllReduce => unreachable!("handled above"),
+                }
+            }
+            (op, CollScope::Global) => {
+                let n = self.topo.total_accels();
+                let chunk = (spec.size_b / n as u64).max(1);
+                let rounds = match op {
+                    CollOp::RingAllReduce => 2.0 * (n as f64 - 1.0),
+                    _ => n as f64 - 1.0,
+                };
+                // A flat global ring advances at the pace of its slowest
+                // link — the node-boundary hop (one boundary crossing per
+                // node per round: consecutive-rank ring order).
+                let intra_round = 2.0 * self.accel_hop_ns(chunk);
+                rounds * intra_round.max(self.inter_p2p_ns(chunk, 1))
+            }
+        }
     }
 
     /// Build the final report (after the run completes).
     pub fn report(&self, events: u64, wall_ms: f64) -> SimReport {
         let m = &self.metrics;
         let raw_gbps = self.cfg.node.accel_link.width_lanes * self.cfg.node.accel_link.datarate_gbps;
+        let (coll_op, coll_size_b, coll_iters, coll_time, coll_pred_ns) = match &self.coll {
+            Some(cs) => {
+                let mut h = Histogram::new();
+                for &d in &cs.durations {
+                    h.record(d);
+                }
+                (
+                    cs.spec.op.name().to_string(),
+                    cs.spec.size_b,
+                    cs.durations.len() as u64,
+                    h.summary(),
+                    self.collective_predicted_ns(),
+                )
+            }
+            None => (String::new(), 0, 0, HistSummary::default(), 0.0),
+        };
         SimReport {
+            coll_op,
+            coll_size_b,
+            coll_iters,
+            coll_time,
+            coll_pred_ns,
             pattern: self.cfg.traffic.pattern.name(),
             load: self.cfg.traffic.load,
             nodes: self.cfg.inter.nodes,
@@ -701,6 +1048,15 @@ pub struct SimReport {
     pub events: u64,
     pub wall_ms: f64,
     pub table_misses: u64,
+    /// Collective workload results (empty/zero when no collective ran).
+    pub coll_op: String,
+    pub coll_size_b: u64,
+    /// Completed barrier-separated iterations.
+    pub coll_iters: u64,
+    /// Per-iteration completion-time distribution.
+    pub coll_time: HistSummary,
+    /// Analytic uncongested prediction for one iteration (ns).
+    pub coll_pred_ns: f64,
 }
 
 impl ToJson for crate::metrics::HistSummary {
@@ -753,6 +1109,11 @@ impl ToJson for SimReport {
             .with("events", self.events)
             .with("wall_ms", self.wall_ms)
             .with("table_misses", self.table_misses)
+            .with("coll_op", self.coll_op.as_str())
+            .with("coll_size_b", self.coll_size_b)
+            .with("coll_iters", self.coll_iters)
+            .with("coll_time", self.coll_time.to_json())
+            .with("coll_pred_ns", self.coll_pred_ns)
     }
 }
 
@@ -779,6 +1140,28 @@ impl FromJson for SimReport {
             events: v.u64_of("events")?,
             wall_ms: v.f64_of("wall_ms")?,
             table_misses: v.u64_of("table_misses")?,
+            // Collective fields are optional so pre-workload result files
+            // still parse.
+            coll_op: match v.get("coll_op") {
+                Some(s) => s.as_str()?.to_string(),
+                None => String::new(),
+            },
+            coll_size_b: match v.get("coll_size_b") {
+                Some(n) => n.as_u64()?,
+                None => 0,
+            },
+            coll_iters: match v.get("coll_iters") {
+                Some(n) => n.as_u64()?,
+                None => 0,
+            },
+            coll_time: match v.get("coll_time") {
+                Some(h) => FromJson::from_json(h)?,
+                None => HistSummary::default(),
+            },
+            coll_pred_ns: match v.get("coll_pred_ns") {
+                Some(n) => n.as_f64()?,
+                None => 0.0,
+            },
         })
     }
 }
@@ -807,7 +1190,10 @@ impl Sim {
         Ok(Sim { engine })
     }
 
-    /// Run the configured warm-up + measurement windows and report.
+    /// Run the configured warm-up + measurement windows and report. A
+    /// collective workload that has not completed all its iterations by
+    /// the window end keeps running until it does (the open-loop
+    /// generators stop at the window end, so the tail drains).
     pub fn run(mut self) -> SimReport {
         let t0 = std::time::Instant::now();
         let warmup = self.engine.model.warmup_time();
@@ -815,8 +1201,14 @@ impl Sim {
         let s1 = self.engine.run_until(warmup);
         self.engine.model.snapshot_wire();
         let s2 = self.engine.run_until(end);
+        self.engine.model.snapshot_wire_end();
+        let s3 = if self.engine.model.collective_pending() {
+            self.engine.run_until(Time::MAX)
+        } else {
+            crate::sim::RunStats { events: 0, end_time: end }
+        };
         let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
-        self.engine.model.report(s1.events + s2.events, wall_ms)
+        self.engine.model.report(s1.events + s2.events + s3.events, wall_ms)
     }
 
     /// Access the world (tests).
@@ -981,5 +1373,109 @@ mod tests {
             .unwrap()
             .run();
         assert_eq!(r.table_misses, 0);
+    }
+
+    fn coll_cfg(op: CollOp, scope: CollScope, size_b: u64, iters: u32) -> SimConfig {
+        let mut cfg = small_cfg(0.0, Pattern::C5);
+        cfg.workload =
+            Workload::Collective(CollectiveSpec { op, scope, size_b, iters });
+        cfg
+    }
+
+    #[test]
+    fn per_node_ring_allreduce_completes_all_iterations() {
+        let cfg = coll_cfg(CollOp::RingAllReduce, CollScope::PerNode, 64 * 1024, 3);
+        let r = Sim::new(cfg, &NativeProvider, BenchMode::None).unwrap().run();
+        assert_eq!(r.coll_iters, 3);
+        assert_eq!(r.coll_op, "ring_allreduce");
+        assert!(r.coll_time.mean_ns > 0.0);
+        assert_eq!(r.table_misses, 0, "collective chunks must be table-driven");
+    }
+
+    #[test]
+    fn collective_iterations_are_identical_when_uncongested() {
+        let cfg = coll_cfg(CollOp::RingAllReduce, CollScope::PerNode, 64 * 1024, 4);
+        let mut sim = Sim::new(cfg, &NativeProvider, BenchMode::None).unwrap();
+        let end = sim.world().end_time();
+        sim.engine_mut().run_until(end);
+        if sim.world().collective_pending() {
+            sim.engine_mut().run_until(Time::MAX);
+        }
+        let durs = sim.world().collective_durations();
+        assert_eq!(durs.len(), 4);
+        for d in &durs {
+            assert_eq!(*d, durs[0], "uncongested iterations must be identical: {durs:?}");
+        }
+        sim.world().check_invariants().unwrap();
+    }
+
+    #[test]
+    fn every_collective_op_runs_end_to_end() {
+        for op in CollOp::ALL {
+            let scope = if op == CollOp::HierarchicalAllReduce {
+                CollScope::Global
+            } else {
+                CollScope::PerNode
+            };
+            let cfg = coll_cfg(op, scope, 32 * 1024, 2);
+            let r = Sim::new(cfg, &NativeProvider, BenchMode::None)
+                .unwrap_or_else(|e| panic!("{op:?}: {e}"))
+                .run();
+            assert_eq!(r.coll_iters, 2, "{op:?}");
+            assert!(r.coll_time.mean_ns > 0.0, "{op:?}");
+        }
+    }
+
+    #[test]
+    fn hierarchical_runs_with_background_traffic_and_conserves_messages() {
+        let mut cfg = coll_cfg(CollOp::HierarchicalAllReduce, CollScope::Global, 256 * 1024, 2);
+        cfg.traffic.pattern = Pattern::Custom { frac_inter: 1.0 };
+        cfg.traffic.load = 0.2;
+        let mut sim = Sim::new(cfg, &NativeProvider, BenchMode::None).unwrap();
+        let end = sim.world().end_time();
+        sim.engine_mut().run_until(end);
+        sim.engine_mut().run_until(Time::MAX); // drain generators + collective
+        let w = sim.world();
+        assert_eq!(w.collective_durations().len(), 2);
+        assert_eq!(w.units_in_flight(), 0);
+        assert_eq!(w.msgs_in_flight(), 0);
+        assert_eq!(w.injected_msgs, w.completed_msgs);
+        w.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn explicit_bench_argument_overrides_config_workload() {
+        let cfg = coll_cfg(CollOp::RingAllReduce, CollScope::PerNode, 64 * 1024, 2);
+        // Passing an explicit Window bench suppresses the config's
+        // collective.
+        let sim = Sim::with_extra_sizes(
+            cfg,
+            &NativeProvider,
+            BenchMode::Window { src: 0, dst: 8, size_b: 4096, inflight: 2 },
+            &[4096],
+        )
+        .unwrap();
+        let r = sim.run();
+        assert_eq!(r.coll_iters, 0);
+        assert!(r.coll_op.is_empty());
+    }
+
+    #[test]
+    fn oversized_intra_chunk_is_rejected() {
+        // 16 MiB over 8 ranks = 2 MiB chunks > 256 KiB intra queues.
+        let cfg = coll_cfg(CollOp::RingAllReduce, CollScope::PerNode, 16 << 20, 1);
+        let err = Sim::new(cfg, &NativeProvider, BenchMode::None).unwrap_err();
+        assert!(format!("{err:#}").contains("queue capacity"), "{err:#}");
+    }
+
+    #[test]
+    fn collective_report_roundtrips_json() {
+        let cfg = coll_cfg(CollOp::AllGather, CollScope::PerNode, 64 * 1024, 2);
+        let r = Sim::new(cfg, &NativeProvider, BenchMode::None).unwrap().run();
+        let back = SimReport::from_json(&r.to_json()).unwrap();
+        assert_eq!(back.coll_op, "allgather");
+        assert_eq!(back.coll_iters, 2);
+        assert_eq!(back.coll_time.count, r.coll_time.count);
+        assert!((back.coll_pred_ns - r.coll_pred_ns).abs() < 1e-9);
     }
 }

@@ -138,6 +138,11 @@ mod tests {
             events: 1,
             wall_ms: 0.0,
             table_misses: 0,
+            coll_op: String::new(),
+            coll_size_b: 0,
+            coll_iters: 0,
+            coll_time: HistSummary::default(),
+            coll_pred_ns: 0.0,
         }
     }
 

@@ -3,156 +3,259 @@
 //! *text* (xla_extension 0.5.1 rejects jax≥0.5 serialized protos; the text
 //! parser reassigns instruction ids) and this module compiles + executes
 //! it on the PJRT CPU client.
+//!
+//! The PJRT path needs the external `xla` bindings crate plus the XLA C++
+//! runtime, which the offline build image does not ship. It is therefore
+//! gated behind the off-by-default `pjrt` cargo feature; without it,
+//! [`Runtime`] is an API-compatible stub whose [`Runtime::load`] always
+//! fails, so every caller (CLI, benches, examples, tests) takes its
+//! documented fallback to the native analytic mirror.
 
 pub mod artifacts;
 
 pub use artifacts::Manifest;
 
 use std::collections::HashMap;
-use std::path::{Path, PathBuf};
 
-use crate::analytic::{CollParams, PcieParams};
+use crate::analytic::PcieParams;
 use crate::net::world::SerProvider;
-use crate::traffic::llm::{LlmConfig, TrafficSummary};
 
 /// Batch widths baked into the artifacts (must match `aot.py` / manifest).
 pub const PCIE_BATCH: usize = 1024;
 pub const COLL_BATCH: usize = 256;
 
-/// Compiled artifact bundle.
-pub struct Runtime {
-    #[allow(dead_code)]
-    client: xla::PjRtClient,
-    pcie: xla::PjRtLoadedExecutable,
-    coll: xla::PjRtLoadedExecutable,
-    llm: xla::PjRtLoadedExecutable,
-    pub manifest: Manifest,
-    pub dir: PathBuf,
-}
+#[cfg(feature = "pjrt")]
+mod pjrt_impl {
+    use std::path::{Path, PathBuf};
 
-impl Runtime {
-    /// Default artifact location relative to the repo root.
-    pub fn default_dir() -> PathBuf {
-        std::env::var_os("SAURON_ARTIFACTS")
-            .map(PathBuf::from)
-            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    use super::{Manifest, COLL_BATCH, PCIE_BATCH};
+    use crate::analytic::{CollParams, PcieParams};
+    use crate::net::world::SerProvider;
+    use crate::traffic::llm::{LlmConfig, TrafficSummary};
+
+    /// Compiled artifact bundle.
+    pub struct Runtime {
+        #[allow(dead_code)]
+        client: xla::PjRtClient,
+        pcie: xla::PjRtLoadedExecutable,
+        coll: xla::PjRtLoadedExecutable,
+        llm: xla::PjRtLoadedExecutable,
+        pub manifest: Manifest,
+        pub dir: PathBuf,
     }
 
-    /// Load and compile all artifacts from `dir`.
-    pub fn load(dir: &Path) -> anyhow::Result<Runtime> {
-        let manifest = Manifest::load(&dir.join("manifest.json"))?;
-        manifest.check(PCIE_BATCH, COLL_BATCH)?;
-        let client = xla::PjRtClient::cpu().map_err(wrap)?;
-        let compile = |name: &str| -> anyhow::Result<xla::PjRtLoadedExecutable> {
-            let path = dir.join(format!("{name}.hlo.txt"));
-            anyhow::ensure!(path.exists(), "missing artifact {path:?}; run `make artifacts`");
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+    impl Runtime {
+        /// Default artifact location relative to the repo root.
+        pub fn default_dir() -> PathBuf {
+            std::env::var_os("SAURON_ARTIFACTS")
+                .map(PathBuf::from)
+                .unwrap_or_else(|| PathBuf::from("artifacts"))
+        }
+
+        /// Load and compile all artifacts from `dir`.
+        pub fn load(dir: &Path) -> anyhow::Result<Runtime> {
+            let manifest = Manifest::load(&dir.join("manifest.json"))?;
+            manifest.check(PCIE_BATCH, COLL_BATCH)?;
+            let client = xla::PjRtClient::cpu().map_err(wrap)?;
+            let compile = |name: &str| -> anyhow::Result<xla::PjRtLoadedExecutable> {
+                let path = dir.join(format!("{name}.hlo.txt"));
+                anyhow::ensure!(path.exists(), "missing artifact {path:?}; run `make artifacts`");
+                let proto = xla::HloModuleProto::from_text_file(
+                    path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+                )
+                .map_err(wrap)?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                client.compile(&comp).map_err(wrap)
+            };
+            Ok(Runtime {
+                pcie: compile("pcie_latency")?,
+                coll: compile("collective_cost")?,
+                llm: compile("llm_traffic")?,
+                client,
+                manifest,
+                dir: dir.to_path_buf(),
+            })
+        }
+
+        /// Execute the batched PCIe-latency kernel for arbitrarily many sizes
+        /// (chunked through the fixed artifact batch; pad lanes use size 1).
+        pub fn pcie_latency_ns_exec(
+            &self,
+            params: &PcieParams,
+            sizes_b: &[u32],
+        ) -> anyhow::Result<Vec<f64>> {
+            let pv = xla::Literal::vec1(params.to_f32_vec().as_slice());
+            let mut out = Vec::with_capacity(sizes_b.len());
+            for chunk in sizes_b.chunks(PCIE_BATCH) {
+                let mut batch = vec![1.0f32; PCIE_BATCH];
+                for (i, &s) in chunk.iter().enumerate() {
+                    batch[i] = s as f32;
+                }
+                let sv = xla::Literal::vec1(batch.as_slice());
+                let result = self.pcie.execute::<xla::Literal>(&[sv, pv.clone()]).map_err(wrap)?
+                    [0][0]
+                    .to_literal_sync()
+                    .map_err(wrap)?;
+                let vals = result.to_tuple1().map_err(wrap)?.to_vec::<f32>().map_err(wrap)?;
+                anyhow::ensure!(vals.len() == PCIE_BATCH, "bad output width {}", vals.len());
+                out.extend(vals[..chunk.len()].iter().map(|&v| v as f64));
+            }
+            Ok(out)
+        }
+
+        /// Execute the α-β collective kernel: returns (allreduce, allgather,
+        /// p2p) rows.
+        pub fn collective_cost_exec(
+            &self,
+            params: &CollParams,
+            sizes_b: &[f32],
+        ) -> anyhow::Result<[Vec<f64>; 3]> {
+            let pv = xla::Literal::vec1(params.to_f32_vec().as_slice());
+            let mut rows: [Vec<f64>; 3] = [Vec::new(), Vec::new(), Vec::new()];
+            for chunk in sizes_b.chunks(COLL_BATCH) {
+                let mut batch = vec![1.0f32; COLL_BATCH];
+                batch[..chunk.len()].copy_from_slice(chunk);
+                let sv = xla::Literal::vec1(batch.as_slice());
+                let result = self.coll.execute::<xla::Literal>(&[sv, pv.clone()]).map_err(wrap)?
+                    [0][0]
+                    .to_literal_sync()
+                    .map_err(wrap)?;
+                let vals = result.to_tuple1().map_err(wrap)?.to_vec::<f32>().map_err(wrap)?;
+                anyhow::ensure!(vals.len() == 3 * COLL_BATCH, "bad output width {}", vals.len());
+                for r in 0..3 {
+                    rows[r].extend(
+                        vals[r * COLL_BATCH..r * COLL_BATCH + chunk.len()]
+                            .iter()
+                            .map(|&v| v as f64),
+                    );
+                }
+            }
+            Ok(rows)
+        }
+
+        /// Execute the L2 LLM traffic-volume model.
+        pub fn llm_traffic(
+            &self,
+            llm: &LlmConfig,
+            pcie: &PcieParams,
+            coll_intra: &CollParams,
+            coll_inter: &CollParams,
+        ) -> anyhow::Result<TrafficSummary> {
+            let args = [
+                xla::Literal::vec1(llm.to_f32_vec().as_slice()),
+                xla::Literal::vec1(pcie.to_f32_vec().as_slice()),
+                xla::Literal::vec1(coll_intra.to_f32_vec().as_slice()),
+                xla::Literal::vec1(coll_inter.to_f32_vec().as_slice()),
+            ];
+            let result = self.llm.execute::<xla::Literal>(&args).map_err(wrap)?[0][0]
+                .to_literal_sync()
+                .map_err(wrap)?;
+            let vals = result.to_tuple1().map_err(wrap)?.to_vec::<f32>().map_err(wrap)?;
+            TrafficSummary::from_slice(&vals)
+        }
+    }
+
+    impl SerProvider for Runtime {
+        fn pcie_latency_ns(&self, params: &PcieParams, sizes_b: &[u32]) -> Vec<f64> {
+            // SerProvider is infallible by contract; PJRT failures here are
+            // programming errors (artifact already compiled + shape-checked).
+            self.pcie_latency_ns_exec(params, sizes_b)
+                .expect("PJRT execution of pcie_latency artifact failed")
+        }
+    }
+
+    fn wrap(e: xla::Error) -> anyhow::Error {
+        anyhow::anyhow!("xla: {e}")
+    }
+}
+
+#[cfg(feature = "pjrt")]
+pub use pjrt_impl::Runtime;
+
+#[cfg(not(feature = "pjrt"))]
+mod stub_impl {
+    use std::path::{Path, PathBuf};
+
+    use super::Manifest;
+    use crate::analytic::{CollParams, PcieParams};
+    use crate::net::world::SerProvider;
+    use crate::traffic::llm::{llm_traffic_native, LlmConfig, TrafficSummary};
+
+    /// API-compatible stand-in for the PJRT runtime when the crate is
+    /// built without the `pjrt` feature. [`Runtime::load`] always fails
+    /// (there is no executor to hand the artifacts to), which routes every
+    /// caller onto its native-mirror fallback path. The compute methods
+    /// mirror the artifacts' semantics natively so any hypothetical
+    /// instance would still be correct.
+    pub struct Runtime {
+        pub manifest: Manifest,
+        pub dir: PathBuf,
+    }
+
+    impl Runtime {
+        /// Default artifact location relative to the repo root.
+        pub fn default_dir() -> PathBuf {
+            std::env::var_os("SAURON_ARTIFACTS")
+                .map(PathBuf::from)
+                .unwrap_or_else(|| PathBuf::from("artifacts"))
+        }
+
+        /// Always fails: executing HLO artifacts needs the `pjrt` feature.
+        pub fn load(dir: &Path) -> anyhow::Result<Runtime> {
+            anyhow::bail!(
+                "built without the `pjrt` cargo feature; cannot execute HLO artifacts \
+                 from {} — using the native analytic mirror instead",
+                dir.display()
             )
-            .map_err(wrap)?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            client.compile(&comp).map_err(wrap)
-        };
-        Ok(Runtime {
-            pcie: compile("pcie_latency")?,
-            coll: compile("collective_cost")?,
-            llm: compile("llm_traffic")?,
-            client,
-            manifest,
-            dir: dir.to_path_buf(),
-        })
-    }
-
-    /// Execute the batched PCIe-latency kernel for arbitrarily many sizes
-    /// (chunked through the fixed artifact batch; pad lanes use size 1).
-    pub fn pcie_latency_ns_exec(
-        &self,
-        params: &PcieParams,
-        sizes_b: &[u32],
-    ) -> anyhow::Result<Vec<f64>> {
-        let pv = xla::Literal::vec1(params.to_f32_vec().as_slice());
-        let mut out = Vec::with_capacity(sizes_b.len());
-        for chunk in sizes_b.chunks(PCIE_BATCH) {
-            let mut batch = vec![1.0f32; PCIE_BATCH];
-            for (i, &s) in chunk.iter().enumerate() {
-                batch[i] = s as f32;
-            }
-            let sv = xla::Literal::vec1(batch.as_slice());
-            let result = self.pcie.execute::<xla::Literal>(&[sv, pv.clone()]).map_err(wrap)?
-                [0][0]
-                .to_literal_sync()
-                .map_err(wrap)?;
-            let vals = result.to_tuple1().map_err(wrap)?.to_vec::<f32>().map_err(wrap)?;
-            anyhow::ensure!(vals.len() == PCIE_BATCH, "bad output width {}", vals.len());
-            out.extend(vals[..chunk.len()].iter().map(|&v| v as f64));
         }
-        Ok(out)
-    }
 
-    /// Execute the α-β collective kernel: returns (allreduce, allgather,
-    /// p2p) rows.
-    pub fn collective_cost_exec(
-        &self,
-        params: &CollParams,
-        sizes_b: &[f32],
-    ) -> anyhow::Result<[Vec<f64>; 3]> {
-        let pv = xla::Literal::vec1(params.to_f32_vec().as_slice());
-        let mut rows: [Vec<f64>; 3] = [Vec::new(), Vec::new(), Vec::new()];
-        for chunk in sizes_b.chunks(COLL_BATCH) {
-            let mut batch = vec![1.0f32; COLL_BATCH];
-            batch[..chunk.len()].copy_from_slice(chunk);
-            let sv = xla::Literal::vec1(batch.as_slice());
-            let result = self.coll.execute::<xla::Literal>(&[sv, pv.clone()]).map_err(wrap)?
-                [0][0]
-                .to_literal_sync()
-                .map_err(wrap)?;
-            let vals = result.to_tuple1().map_err(wrap)?.to_vec::<f32>().map_err(wrap)?;
-            anyhow::ensure!(vals.len() == 3 * COLL_BATCH, "bad output width {}", vals.len());
-            for r in 0..3 {
-                rows[r].extend(
-                    vals[r * COLL_BATCH..r * COLL_BATCH + chunk.len()]
-                        .iter()
-                        .map(|&v| v as f64),
-                );
-            }
+        /// Native mirror of the batched PCIe-latency kernel.
+        pub fn pcie_latency_ns_exec(
+            &self,
+            params: &PcieParams,
+            sizes_b: &[u32],
+        ) -> anyhow::Result<Vec<f64>> {
+            Ok(sizes_b.iter().map(|&s| params.latency_ns(s as u64)).collect())
         }
-        Ok(rows)
+
+        /// Native mirror of the α-β collective kernel: (allreduce,
+        /// allgather, p2p) rows.
+        pub fn collective_cost_exec(
+            &self,
+            params: &CollParams,
+            sizes_b: &[f32],
+        ) -> anyhow::Result<[Vec<f64>; 3]> {
+            let mut rows: [Vec<f64>; 3] = [Vec::new(), Vec::new(), Vec::new()];
+            for &s in sizes_b {
+                let s = s as f64;
+                rows[0].push(params.allreduce_ns(s));
+                rows[1].push(params.allgather_ns(s));
+                rows[2].push(params.p2p_ns(s));
+            }
+            Ok(rows)
+        }
+
+        /// Native mirror of the L2 LLM traffic-volume model.
+        pub fn llm_traffic(
+            &self,
+            llm: &LlmConfig,
+            pcie: &PcieParams,
+            coll_intra: &CollParams,
+            coll_inter: &CollParams,
+        ) -> anyhow::Result<TrafficSummary> {
+            Ok(llm_traffic_native(llm, pcie, coll_intra, coll_inter))
+        }
     }
 
-    /// Execute the L2 LLM traffic-volume model.
-    pub fn llm_traffic(
-        &self,
-        llm: &LlmConfig,
-        pcie: &PcieParams,
-        coll_intra: &CollParams,
-        coll_inter: &CollParams,
-    ) -> anyhow::Result<TrafficSummary> {
-        let args = [
-            xla::Literal::vec1(llm.to_f32_vec().as_slice()),
-            xla::Literal::vec1(pcie.to_f32_vec().as_slice()),
-            xla::Literal::vec1(coll_intra.to_f32_vec().as_slice()),
-            xla::Literal::vec1(coll_inter.to_f32_vec().as_slice()),
-        ];
-        let result = self.llm.execute::<xla::Literal>(&args).map_err(wrap)?[0][0]
-            .to_literal_sync()
-            .map_err(wrap)?;
-        let vals = result.to_tuple1().map_err(wrap)?.to_vec::<f32>().map_err(wrap)?;
-        TrafficSummary::from_slice(&vals)
+    impl SerProvider for Runtime {
+        fn pcie_latency_ns(&self, params: &PcieParams, sizes_b: &[u32]) -> Vec<f64> {
+            sizes_b.iter().map(|&s| params.latency_ns(s as u64)).collect()
+        }
     }
 }
 
-impl SerProvider for Runtime {
-    fn pcie_latency_ns(&self, params: &PcieParams, sizes_b: &[u32]) -> Vec<f64> {
-        // SerProvider is infallible by contract; PJRT failures here are
-        // programming errors (artifact already compiled + shape-checked).
-        self.pcie_latency_ns_exec(params, sizes_b)
-            .expect("PJRT execution of pcie_latency artifact failed")
-    }
-}
-
-fn wrap(e: xla::Error) -> anyhow::Error {
-    anyhow::anyhow!("xla: {e}")
-}
+#[cfg(not(feature = "pjrt"))]
+pub use stub_impl::Runtime;
 
 /// A [`SerProvider`] snapshot: latencies precomputed through any provider
 /// (normally the HLO [`Runtime`]), then `Send + Sync + 'static` for use
@@ -228,5 +331,12 @@ mod tests {
         assert!((va - a.latency_ns(4096)).abs() < 1e-9);
         assert!((vb - b.latency_ns(4096)).abs() < 1e-9);
         assert!(vb > va);
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_runtime_load_fails_with_clear_message() {
+        let err = Runtime::load(std::path::Path::new("artifacts")).unwrap_err();
+        assert!(format!("{err:#}").contains("pjrt"), "{err:#}");
     }
 }

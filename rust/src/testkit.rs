@@ -112,6 +112,62 @@ impl<T: Clone + std::fmt::Debug + PartialEq> Gen for Choice<T> {
     }
 }
 
+/// Random-length vector of values from an inner generator. Shrinks along
+/// two axes: structurally (halving toward `min_len`, dropping single
+/// elements) and element-wise (delegating to the inner generator's
+/// shrink), so a failing vector collapses to a minimal witness.
+pub struct VecGen<G: Gen> {
+    pub elem: G,
+    pub min_len: usize,
+    pub max_len: usize,
+}
+
+impl<G: Gen> Gen for VecGen<G> {
+    type Value = Vec<G::Value>;
+
+    fn generate(&self, rng: &mut Rng) -> Vec<G::Value> {
+        debug_assert!(self.min_len <= self.max_len);
+        let span = (self.max_len - self.min_len) as u64;
+        let len = self.min_len + if span == 0 { 0 } else { rng.below(span + 1) as usize };
+        (0..len).map(|_| self.elem.generate(rng)).collect()
+    }
+
+    fn shrink(&self, v: &Vec<G::Value>) -> Vec<Vec<G::Value>> {
+        let mut out: Vec<Vec<G::Value>> = Vec::new();
+        if v.len() > self.min_len {
+            // Halve first (big structural jumps shrink fastest)...
+            let half = self.min_len.max(v.len() / 2);
+            if half < v.len() {
+                out.push(v[..half].to_vec());
+            }
+            // ...then drop single elements at representative positions,
+            // skipping duplicates (the positions collide for short
+            // vectors, and dropping the tail reproduces the halved
+            // prefix when half == len-1) — each duplicate would cost a
+            // full property re-evaluation.
+            let mut tried: [usize; 3] = [usize::MAX; 3];
+            for (k, idx) in [0, v.len() / 2, v.len() - 1].into_iter().enumerate() {
+                if tried[..k].contains(&idx) || (idx == v.len() - 1 && half + 1 == v.len()) {
+                    continue;
+                }
+                tried[k] = idx;
+                let mut smaller = v.clone();
+                smaller.remove(idx);
+                out.push(smaller);
+            }
+        }
+        // Element-wise shrink, one position at a time.
+        for (i, e) in v.iter().enumerate() {
+            for cand in self.elem.shrink(e) {
+                let mut copy = v.clone();
+                copy[i] = cand;
+                out.push(copy);
+            }
+        }
+        out
+    }
+}
+
 /// Pair combinator.
 pub struct Pair<A: Gen, B: Gen>(pub A, pub B);
 
@@ -208,5 +264,74 @@ mod tests {
         let shr = p.shrink(&(7, "b"));
         assert!(shr.contains(&(0, "b")));
         assert!(shr.contains(&(7, "a")));
+    }
+
+    #[test]
+    fn vecgen_generates_within_bounds() {
+        let g = VecGen { elem: IntRange { lo: 1, hi: 6 }, min_len: 2, max_len: 9 };
+        let mut rng = Rng::new(77);
+        for _ in 0..200 {
+            let v = g.generate(&mut rng);
+            assert!((2..=9).contains(&v.len()), "{v:?}");
+            assert!(v.iter().all(|&x| (1..=6).contains(&x)), "{v:?}");
+        }
+        // Fixed-length degenerate case.
+        let fixed = VecGen { elem: IntRange { lo: 0, hi: 1 }, min_len: 3, max_len: 3 };
+        assert_eq!(fixed.generate(&mut rng).len(), 3);
+    }
+
+    #[test]
+    fn vecgen_shrink_candidates_respect_min_len() {
+        let g = VecGen { elem: IntRange { lo: 0, hi: 100 }, min_len: 1, max_len: 8 };
+        let shr = g.shrink(&vec![50, 60, 70, 80]);
+        assert!(!shr.is_empty());
+        for cand in &shr {
+            assert!(!cand.is_empty(), "{cand:?}");
+            assert!(cand.len() <= 4);
+        }
+        // Structural candidates include the halved prefix and single drops.
+        assert!(shr.contains(&vec![50, 60]));
+        assert!(shr.contains(&vec![60, 70, 80]));
+        // Element-wise candidates include shrinking one slot toward lo.
+        assert!(shr.contains(&vec![0, 60, 70, 80]));
+        // At min_len only element-wise shrinks remain.
+        let at_min = g.shrink(&vec![42]);
+        assert!(at_min.iter().all(|c| c.len() == 1));
+        assert!(at_min.contains(&vec![0]));
+    }
+
+    #[test]
+    fn vecgen_shrinks_failure_to_minimal_witness() {
+        // Property: no element reaches 500. The shrunk counterexample
+        // must be the single minimal offender [500].
+        let result = std::panic::catch_unwind(|| {
+            forall(
+                11,
+                100,
+                &VecGen { elem: IntRange { lo: 0, hi: 1000 }, min_len: 0, max_len: 12 },
+                |v| {
+                    if v.iter().any(|&x| x >= 500) {
+                        Err(format!("offender in {v:?}"))
+                    } else {
+                        Ok(())
+                    }
+                },
+            );
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("input: [500]"), "{msg}");
+    }
+
+    #[test]
+    fn vecgen_composes_with_other_combinators() {
+        let g = Pair(
+            Choice(&[2u32, 4, 8]),
+            VecGen { elem: FloatRange { lo: 0.0, hi: 1.0 }, min_len: 1, max_len: 4 },
+        );
+        let mut a = Rng::new(5);
+        let mut b = Rng::new(5);
+        for _ in 0..50 {
+            assert_eq!(format!("{:?}", g.generate(&mut a)), format!("{:?}", g.generate(&mut b)));
+        }
     }
 }

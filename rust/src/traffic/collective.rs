@@ -1,0 +1,565 @@
+//! Collective schedule builders for the closed-loop workload engine.
+//!
+//! A collective is compiled into one dependency-ordered program per rank
+//! (a [`Schedule`]): a sequence of [`Step::Send`] / [`Step::Recv`] steps.
+//! The world engine executes each rank's program with a program counter —
+//! sends are posted asynchronously (they enter the source's egress feeder
+//! and obey all queue backpressure), recvs block the rank until the
+//! matching message is delivered. Message matching is FIFO per ordered
+//! (src, dst) pair, which the deterministic single-path routing
+//! guarantees.
+//!
+//! Builders provided:
+//!
+//! * ring reduce-scatter / allgather / AllReduce (α-β textbook rings),
+//! * pairwise-exchange all-to-all (MoE-dispatch style),
+//! * **hierarchical AllReduce** — intra-node ring reduce-scatter, then an
+//!   inter-node ring AllReduce between same-local-rank peers, then an
+//!   intra-node ring allgather. Its alternating intra/inter phases are
+//!   the paper's interference scenario.
+//!
+//! Byte accounting is exact: a buffer of `size_b` splits into per-shard
+//! sizes differing by at most one byte ([`shards`]), so property tests
+//! can compare schedule volumes against the closed-form collective
+//! formulas to sub-shard precision.
+
+use crate::config::{CollOp, CollScope, CollectiveSpec};
+use crate::traffic::llm::LlmConfig;
+
+/// One step of a rank's program.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Step {
+    /// Post a `size_b`-byte message to `peer` (asynchronous; the rank
+    /// proceeds to its next step immediately).
+    Send { peer: u32, size_b: u32 },
+    /// Block until one more message from `peer` has been delivered here.
+    Recv { peer: u32 },
+}
+
+/// Per-rank programs for one collective iteration.
+#[derive(Clone, Debug)]
+pub struct Schedule {
+    pub ranks: u32,
+    /// `steps[rank]` is rank's program, executed strictly in order.
+    pub steps: Vec<Vec<Step>>,
+}
+
+/// Split `total_b` bytes into `n` shards whose sizes differ by at most
+/// one byte and sum exactly to `total_b`.
+pub fn shards(total_b: u64, n: u32) -> anyhow::Result<Vec<u32>> {
+    anyhow::ensure!(n > 0, "cannot shard over 0 ranks");
+    let n64 = n as u64;
+    let base = total_b / n64;
+    anyhow::ensure!(base + 1 <= u32::MAX as u64, "shard size {base} exceeds u32 message limit");
+    let rem = (total_b % n64) as u32;
+    Ok((0..n).map(|i| (base + u64::from(i < rem)) as u32).collect())
+}
+
+/// Append one ring pass (n-1 rounds of send-next / recv-prev) to every
+/// rank of `group`. In round `t`, the rank at ring position `i` sends
+/// shard `(i + offset - t) mod n`; `offset = 0` starts each rank at its
+/// own shard (reduce-scatter, allgather), `offset = 1` starts at the
+/// shard it owns after a reduce-scatter pass (the allgather half of
+/// AllReduce). Zero-byte shards are still sent: the dependency structure
+/// (and its α cost) exists regardless of payload.
+fn ring_pass_into(steps: &mut [Vec<Step>], group: &[u32], sh: &[u32], offset: u32) {
+    let n = group.len();
+    if n < 2 {
+        return;
+    }
+    for i in 0..n {
+        let rank = group[i] as usize;
+        let next = group[(i + 1) % n];
+        let prev = group[(i + n - 1) % n];
+        for t in 0..n - 1 {
+            let shard = (i + offset as usize + n - t) % n;
+            steps[rank].push(Step::Send { peer: next, size_b: sh[shard].max(1) });
+            steps[rank].push(Step::Recv { peer: prev });
+        }
+    }
+}
+
+/// Append a pairwise-exchange all-to-all over `group`: in round `k`, ring
+/// position `i` sends its shard destined to position `(i+k) mod n` and
+/// receives from position `(i-k) mod n`. The self-shard stays local.
+fn all_to_all_into(steps: &mut [Vec<Step>], group: &[u32], sh: &[u32]) {
+    let n = group.len();
+    if n < 2 {
+        return;
+    }
+    for i in 0..n {
+        let rank = group[i] as usize;
+        for k in 1..n {
+            let to_pos = (i + k) % n;
+            let from_pos = (i + n - k) % n;
+            steps[rank].push(Step::Send { peer: group[to_pos], size_b: sh[to_pos].max(1) });
+            steps[rank].push(Step::Recv { peer: group[from_pos] });
+        }
+    }
+}
+
+/// Ring reduce-scatter over ranks `0..n` of a `total_b`-byte buffer.
+pub fn ring_reduce_scatter(n: u32, total_b: u64) -> anyhow::Result<Schedule> {
+    build_single(n, total_b, |steps, group, sh| ring_pass_into(steps, group, sh, 0))
+}
+
+/// Ring allgather over ranks `0..n`; `total_b` is the gathered result
+/// size (each rank starts owning shard `rank`).
+pub fn ring_allgather(n: u32, total_b: u64) -> anyhow::Result<Schedule> {
+    build_single(n, total_b, |steps, group, sh| ring_pass_into(steps, group, sh, 0))
+}
+
+/// Ring AllReduce over ranks `0..n`: reduce-scatter pass then allgather
+/// pass, `2(n-1)` rounds total.
+pub fn ring_allreduce(n: u32, total_b: u64) -> anyhow::Result<Schedule> {
+    build_single(n, total_b, |steps, group, sh| {
+        ring_pass_into(steps, group, sh, 0);
+        ring_pass_into(steps, group, sh, 1);
+    })
+}
+
+/// Pairwise-exchange all-to-all over ranks `0..n` (`total_b` bytes of
+/// per-rank send buffer).
+pub fn all_to_all(n: u32, total_b: u64) -> anyhow::Result<Schedule> {
+    build_single(n, total_b, all_to_all_into)
+}
+
+fn build_single(
+    n: u32,
+    total_b: u64,
+    f: impl Fn(&mut [Vec<Step>], &[u32], &[u32]),
+) -> anyhow::Result<Schedule> {
+    anyhow::ensure!(n >= 2, "collective needs >= 2 ranks, got {n}");
+    let group: Vec<u32> = (0..n).collect();
+    let sh = shards(total_b, n)?;
+    let mut steps = vec![Vec::new(); n as usize];
+    f(&mut steps, &group, &sh);
+    Ok(Schedule { ranks: n, steps })
+}
+
+/// Hierarchical (two-level) AllReduce over `nodes * accels_per_node`
+/// ranks, rank id = `node * accels_per_node + local` (the simulator's
+/// global accelerator id):
+///
+/// 1. **intra-reduce** — ring reduce-scatter inside each node
+///    (`A-1` rounds of `size/A`-byte shards over intra links),
+/// 2. **inter-exchange** — ring AllReduce of each local rank's owned
+///    shard across its same-local-rank peers on every node
+///    (`2(N-1)` rounds of `size/(A·N)`-byte chunks over the NIC),
+/// 3. **intra-broadcast** — ring allgather inside each node
+///    (`A-1` rounds of `size/A`).
+pub fn hierarchical_allreduce(
+    nodes: u32,
+    accels_per_node: u32,
+    total_b: u64,
+) -> anyhow::Result<Schedule> {
+    let (n, a) = (nodes, accels_per_node);
+    anyhow::ensure!(n >= 2, "hierarchical allreduce needs >= 2 nodes, got {n}");
+    anyhow::ensure!(a >= 1, "need at least one accelerator per node");
+    let ranks = n * a;
+    let mut steps = vec![Vec::new(); ranks as usize];
+    let sh_intra = shards(total_b, a)?;
+    // Phase 1: intra-node ring reduce-scatter.
+    let node_group = |nd: u32| (nd * a..(nd + 1) * a).collect::<Vec<u32>>();
+    for nd in 0..n {
+        ring_pass_into(&mut steps, &node_group(nd), &sh_intra, 0);
+    }
+    // Phase 2: inter-node ring AllReduce per local rank. After the
+    // reduce-scatter, ring position `local` owns shard `(local+1) mod A`.
+    for local in 0..a {
+        let owned = if a >= 2 { (local + 1) % a } else { 0 };
+        let group: Vec<u32> = (0..n).map(|nd| nd * a + local).collect();
+        let sh_inter = shards(sh_intra[owned as usize] as u64, n)?;
+        ring_pass_into(&mut steps, &group, &sh_inter, 0);
+        ring_pass_into(&mut steps, &group, &sh_inter, 1);
+    }
+    // Phase 3: intra-node ring allgather, starting from the owned shard.
+    for nd in 0..n {
+        ring_pass_into(&mut steps, &node_group(nd), &sh_intra, 1);
+    }
+    Ok(Schedule { ranks, steps })
+}
+
+/// Build the schedule for a [`CollectiveSpec`] on a `nodes ×
+/// accels_per_node` system.
+pub fn build(spec: &CollectiveSpec, nodes: u32, accels_per_node: u32) -> anyhow::Result<Schedule> {
+    let ranks = nodes * accels_per_node;
+    anyhow::ensure!(ranks >= 2, "collective needs >= 2 accelerators");
+    if spec.op == CollOp::HierarchicalAllReduce {
+        anyhow::ensure!(
+            spec.scope == CollScope::Global,
+            "hierarchical allreduce is inherently global"
+        );
+        return hierarchical_allreduce(nodes, accels_per_node, spec.size_b);
+    }
+    let groups: Vec<Vec<u32>> = match spec.scope {
+        CollScope::Global => vec![(0..ranks).collect()],
+        CollScope::PerNode => {
+            anyhow::ensure!(
+                accels_per_node >= 2,
+                "per-node collective needs >= 2 accels per node"
+            );
+            (0..nodes)
+                .map(|nd| (nd * accels_per_node..(nd + 1) * accels_per_node).collect())
+                .collect()
+        }
+    };
+    let mut steps = vec![Vec::new(); ranks as usize];
+    for g in &groups {
+        let sh = shards(spec.size_b, g.len() as u32)?;
+        match spec.op {
+            CollOp::RingAllReduce => {
+                ring_pass_into(&mut steps, g, &sh, 0);
+                ring_pass_into(&mut steps, g, &sh, 1);
+            }
+            CollOp::ReduceScatter | CollOp::AllGather => ring_pass_into(&mut steps, g, &sh, 0),
+            CollOp::AllToAll => all_to_all_into(&mut steps, g, &sh),
+            CollOp::HierarchicalAllReduce => unreachable!("handled above"),
+        }
+    }
+    Ok(Schedule { ranks, steps })
+}
+
+impl Schedule {
+    /// Total bytes rank posts across its sends.
+    pub fn sent_bytes(&self, rank: u32) -> u64 {
+        self.steps[rank as usize]
+            .iter()
+            .map(|s| match s {
+                Step::Send { size_b, .. } => *size_b as u64,
+                Step::Recv { .. } => 0,
+            })
+            .sum()
+    }
+
+    /// Total bytes addressed to `rank` across every rank's sends.
+    pub fn recv_bytes(&self, rank: u32) -> u64 {
+        self.steps
+            .iter()
+            .flatten()
+            .map(|s| match s {
+                Step::Send { peer, size_b } if *peer == rank => *size_b as u64,
+                _ => 0,
+            })
+            .sum()
+    }
+
+    /// Number of recv steps in rank's program.
+    pub fn recv_count(&self, rank: u32) -> usize {
+        self.steps[rank as usize].iter().filter(|s| matches!(s, Step::Recv { .. })).count()
+    }
+
+    pub fn total_steps(&self) -> usize {
+        self.steps.iter().map(Vec::len).sum()
+    }
+
+    /// Sorted, deduplicated send payload sizes (PCIe-table priming).
+    pub fn distinct_send_sizes(&self) -> Vec<u32> {
+        let mut out: Vec<u32> = self
+            .steps
+            .iter()
+            .flatten()
+            .filter_map(|s| match s {
+                Step::Send { size_b, .. } => Some(*size_b),
+                Step::Recv { .. } => None,
+            })
+            .collect();
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
+    /// Largest send payload for which `pred(src, dst)` holds (0 if none) —
+    /// used to validate intra-node chunks against finite queue capacities.
+    pub fn max_send_where(&self, pred: impl Fn(u32, u32) -> bool) -> u32 {
+        let mut max = 0u32;
+        for (src, prog) in self.steps.iter().enumerate() {
+            for s in prog {
+                if let Step::Send { peer, size_b } = s {
+                    if pred(src as u32, *peer) {
+                        max = max.max(*size_b);
+                    }
+                }
+            }
+        }
+        max
+    }
+
+    /// Structural soundness: every recv has a matching send on the
+    /// reverse pair, and the dependency graph is deadlock-free — the
+    /// abstract execution (non-blocking sends, counting recvs) runs every
+    /// rank's program to completion.
+    pub fn check(&self) -> Result<(), String> {
+        let n = self.ranks as usize;
+        if self.steps.len() != n {
+            return Err(format!("{} programs for {} ranks", self.steps.len(), n));
+        }
+        let mut sends = vec![0u32; n * n]; // [src * n + dst]
+        let mut recvs = vec![0u32; n * n]; // [dst * n + src]
+        for (r, prog) in self.steps.iter().enumerate() {
+            for s in prog {
+                match s {
+                    Step::Send { peer, size_b } => {
+                        if *peer as usize >= n {
+                            return Err(format!("rank {r} sends to out-of-range {peer}"));
+                        }
+                        if *peer as usize == r {
+                            return Err(format!("rank {r} sends to itself"));
+                        }
+                        if *size_b == 0 {
+                            return Err(format!("rank {r} posts a zero-byte send"));
+                        }
+                        sends[r * n + *peer as usize] += 1;
+                    }
+                    Step::Recv { peer } => {
+                        if *peer as usize >= n {
+                            return Err(format!("rank {r} recvs from out-of-range {peer}"));
+                        }
+                        recvs[r * n + *peer as usize] += 1;
+                    }
+                }
+            }
+        }
+        for s in 0..n {
+            for d in 0..n {
+                if sends[s * n + d] != recvs[d * n + s] {
+                    return Err(format!(
+                        "unmatched pair {s}->{d}: {} sends vs {} recvs",
+                        sends[s * n + d],
+                        recvs[d * n + s]
+                    ));
+                }
+            }
+        }
+        // Abstract execution for deadlock freedom.
+        let mut pc = vec![0usize; n];
+        let mut arrived = vec![0u32; n * n]; // [dst * n + src]
+        let mut consumed = vec![0u32; n * n];
+        loop {
+            let mut progress = false;
+            for r in 0..n {
+                let prog = &self.steps[r];
+                while pc[r] < prog.len() {
+                    match prog[pc[r]] {
+                        Step::Send { peer, .. } => {
+                            arrived[peer as usize * n + r] += 1;
+                            pc[r] += 1;
+                            progress = true;
+                        }
+                        Step::Recv { peer } => {
+                            let idx = r * n + peer as usize;
+                            if arrived[idx] > consumed[idx] {
+                                consumed[idx] += 1;
+                                pc[r] += 1;
+                                progress = true;
+                            } else {
+                                break;
+                            }
+                        }
+                    }
+                }
+            }
+            if !progress {
+                break;
+            }
+        }
+        for (r, prog) in self.steps.iter().enumerate() {
+            if pc[r] < prog.len() {
+                return Err(format!(
+                    "deadlock: rank {r} stuck at step {} of {} ({:?})",
+                    pc[r],
+                    prog.len(),
+                    prog[pc[r]]
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Map an LLM parallelism layout onto the collective that dominates its
+/// communication (the L2 traffic model's volume hierarchy):
+///
+/// * `dp > 1` — the gradient AllReduce over data-parallel replicas is
+///   the cross-node phase-interleaved op: hierarchical AllReduce of the
+///   per-replica gradient bucket (`params · bytes / (tp·pp)`).
+/// * else `tp > 1` — tensor-parallel activation AllReduce inside each
+///   node: per-node ring AllReduce of the activation tensor.
+/// * else — pipeline/MoE style exchange: global all-to-all of the
+///   activation tensor.
+pub fn llm_collective(llm: &LlmConfig) -> CollectiveSpec {
+    let act = llm.microbatch as u64 * llm.seq_len as u64 * llm.hidden as u64
+        * llm.bytes_per_elem as u64;
+    let params = 12 * llm.num_layers as u64 * llm.hidden as u64 * llm.hidden as u64
+        + llm.vocab as u64 * llm.hidden as u64;
+    if llm.dp > 1 {
+        let bucket = (params * llm.bytes_per_elem as u64) / (llm.tp as u64 * llm.pp as u64);
+        CollectiveSpec {
+            op: CollOp::HierarchicalAllReduce,
+            scope: CollScope::Global,
+            size_b: bucket.max(1),
+            iters: 1,
+        }
+    } else if llm.tp > 1 {
+        CollectiveSpec {
+            op: CollOp::RingAllReduce,
+            scope: CollScope::PerNode,
+            size_b: act.max(1),
+            iters: 1,
+        }
+    } else {
+        CollectiveSpec {
+            op: CollOp::AllToAll,
+            scope: CollScope::Global,
+            size_b: act.max(1),
+            iters: 1,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shards_sum_and_balance() {
+        for (total, n) in [(1000u64, 7u32), (4096, 8), (5, 3), (1, 4)] {
+            let sh = shards(total, n).unwrap();
+            assert_eq!(sh.iter().map(|&s| s as u64).sum::<u64>(), total);
+            let (mn, mx) = (sh.iter().min().unwrap(), sh.iter().max().unwrap());
+            assert!(mx - mn <= 1, "{sh:?}");
+        }
+    }
+
+    #[test]
+    fn ring_allreduce_volume_matches_closed_form() {
+        // Divisible case: every rank sends exactly 2(n-1)/n * S.
+        let (n, s) = (8u32, 1u64 << 20);
+        let sched = ring_allreduce(n, s).unwrap();
+        sched.check().unwrap();
+        for r in 0..n {
+            assert_eq!(sched.sent_bytes(r), 2 * (n as u64 - 1) * s / n as u64);
+            assert_eq!(sched.recv_bytes(r), 2 * (n as u64 - 1) * s / n as u64);
+        }
+    }
+
+    #[test]
+    fn all_to_all_volume_matches_closed_form() {
+        let (n, s) = (6u32, 6_000u64);
+        let sched = all_to_all(n, s).unwrap();
+        sched.check().unwrap();
+        let sh = shards(s, n).unwrap();
+        for r in 0..n {
+            assert_eq!(sched.sent_bytes(r), s - sh[r as usize] as u64);
+            assert_eq!(sched.recv_bytes(r), (n as u64 - 1) * sh[r as usize] as u64);
+        }
+    }
+
+    #[test]
+    fn hierarchical_phases_have_expected_step_counts() {
+        let (nodes, a, s) = (4u32, 8u32, 1u64 << 20);
+        let sched = hierarchical_allreduce(nodes, a, s).unwrap();
+        sched.check().unwrap();
+        // Per rank: (A-1) RS rounds + 2(N-1) inter rounds + (A-1) AG
+        // rounds, 2 steps (send+recv) each.
+        let per_rank = 2 * ((a - 1) + 2 * (nodes - 1) + (a - 1)) as usize;
+        for r in 0..nodes * a {
+            assert_eq!(sched.steps[r as usize].len(), per_rank, "rank {r}");
+        }
+        // Global volume: intra 2(A-1)/A·S per rank, inter 2(N-1)/(N·A)·S.
+        let intra_pred = 2 * (a as u64 - 1) * s / a as u64;
+        let inter_pred = 2 * (nodes as u64 - 1) * s / (nodes as u64 * a as u64);
+        for r in 0..nodes * a {
+            let sent = sched.sent_bytes(r);
+            let want = intra_pred + inter_pred;
+            assert!(
+                sent.abs_diff(want) <= (nodes + a) as u64,
+                "rank {r}: sent {sent} vs predicted {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn hierarchical_single_accel_degenerates_to_inter_ring() {
+        let sched = hierarchical_allreduce(4, 1, 4096).unwrap();
+        sched.check().unwrap();
+        let flat = ring_allreduce(4, 4096).unwrap();
+        for r in 0..4 {
+            assert_eq!(sched.sent_bytes(r), flat.sent_bytes(r));
+        }
+    }
+
+    #[test]
+    fn build_respects_scope() {
+        let spec = CollectiveSpec {
+            op: CollOp::RingAllReduce,
+            scope: CollScope::PerNode,
+            size_b: 8192,
+            iters: 1,
+        };
+        let sched = build(&spec, 4, 4).unwrap();
+        sched.check().unwrap();
+        // Per-node scope: rank 0 only ever talks to ranks 1..3.
+        for s in &sched.steps[0] {
+            let peer = match s {
+                Step::Send { peer, .. } | Step::Recv { peer } => *peer,
+            };
+            assert!(peer < 4, "rank 0 reached outside its node: {peer}");
+        }
+        let global =
+            build(&CollectiveSpec { scope: CollScope::Global, ..spec }, 4, 4).unwrap();
+        global.check().unwrap();
+        assert!(global.steps[0].len() > sched.steps[0].len());
+    }
+
+    #[test]
+    fn checker_catches_deadlock_and_mismatch() {
+        // Recv-before-send cycle: 0 and 1 both wait first -> deadlock.
+        let dead = Schedule {
+            ranks: 2,
+            steps: vec![
+                vec![Step::Recv { peer: 1 }, Step::Send { peer: 1, size_b: 10 }],
+                vec![Step::Recv { peer: 0 }, Step::Send { peer: 0, size_b: 10 }],
+            ],
+        };
+        assert!(dead.check().unwrap_err().contains("deadlock"));
+        // Send with no matching recv.
+        let unmatched = Schedule {
+            ranks: 2,
+            steps: vec![vec![Step::Send { peer: 1, size_b: 10 }], vec![]],
+        };
+        assert!(unmatched.check().unwrap_err().contains("unmatched"));
+        // Self-send.
+        let selfsend = Schedule {
+            ranks: 2,
+            steps: vec![vec![Step::Send { peer: 0, size_b: 10 }], vec![]],
+        };
+        assert!(selfsend.check().is_err());
+    }
+
+    #[test]
+    fn llm_mapping_follows_parallelism_layout() {
+        let base = LlmConfig::example_13b();
+        assert_eq!(llm_collective(&base).op, CollOp::HierarchicalAllReduce);
+        let tp_only = LlmConfig { dp: 1, pp: 1, ..base };
+        let spec = llm_collective(&tp_only);
+        assert_eq!(spec.op, CollOp::RingAllReduce);
+        assert_eq!(spec.scope, CollScope::PerNode);
+        assert_eq!(spec.size_b, 2048 * 5120 * 2);
+        let pp_only = LlmConfig { dp: 1, tp: 1, ..base };
+        assert_eq!(llm_collective(&pp_only).op, CollOp::AllToAll);
+    }
+
+    #[test]
+    fn distinct_sizes_and_max_send_filters() {
+        let sched = hierarchical_allreduce(2, 4, 1 << 20).unwrap();
+        let sizes = sched.distinct_send_sizes();
+        assert!(sizes.contains(&(1 << 18))); // intra shard S/A
+        assert!(sizes.contains(&(1 << 17))); // inter chunk S/(A*N)
+        let a = 4;
+        let intra_max = sched.max_send_where(|s, d| s / a == d / a);
+        assert_eq!(intra_max, 1 << 18);
+        let inter_max = sched.max_send_where(|s, d| s / a != d / a);
+        assert_eq!(inter_max, 1 << 17);
+    }
+}

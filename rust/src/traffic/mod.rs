@@ -1,8 +1,11 @@
 //! Workload drivers: the validation micro-benchmarks (InfiniBand
-//! perftest-style latency/bandwidth tests over the CELLIA model) and the
-//! LLM-derived traffic-pattern bridge from the L2 artifact.
+//! perftest-style latency/bandwidth tests over the CELLIA model), the
+//! LLM-derived traffic-pattern bridge from the L2 artifact, and the
+//! collective schedule builders for the closed-loop workload engine.
 
+pub mod collective;
 pub mod ib_bench;
 pub mod llm;
 
+pub use collective::{Schedule, Step};
 pub use ib_bench::{bandwidth_test, latency_test, BwPoint, LatPoint, PAPER_TABLE1, PAPER_TABLE2, TEST_SIZES};

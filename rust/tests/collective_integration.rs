@@ -1,0 +1,175 @@
+//! Closed-loop collective workloads end-to-end through the world engine:
+//! the sim-vs-analytic oracle on an uncongested intra-node ring, and the
+//! paper's qualitative interference trend — with concurrent inter-node
+//! background traffic, raising intra-node bandwidth does not improve
+//! (and eventually degrades) hierarchical-AllReduce completion time,
+//! because offered background load scales with the intra links while the
+//! NIC boundary stays fixed.
+
+use sauron::analytic::CollParams;
+use sauron::config::{presets, CollOp, CollScope, CollectiveSpec, Pattern, Workload};
+use sauron::net::world::{BenchMode, NativeProvider, Sim};
+
+const MIB: u64 = 1 << 20;
+
+fn run_collective(
+    nodes: usize,
+    gbs: f64,
+    spec: CollectiveSpec,
+    bg_pattern: Pattern,
+    bg_load: f64,
+) -> sauron::SimReport {
+    let cfg = presets::collective_scaleout(nodes, gbs, spec, bg_pattern, bg_load);
+    Sim::new(cfg, &NativeProvider, BenchMode::None).unwrap().run()
+}
+
+/// Satellite oracle: simulated ring AllReduce on an uncongested
+/// single-node group agrees with `CollParams::ring_allreduce` (α-β over
+/// the PCIe chunk cost) within 5%.
+#[test]
+fn ring_allreduce_matches_analytic_oracle_within_5pct() {
+    let spec = CollectiveSpec {
+        op: CollOp::RingAllReduce,
+        scope: CollScope::PerNode,
+        size_b: MIB,
+        iters: 3,
+    };
+    for gbs in [128.0, 256.0, 512.0] {
+        let cfg = presets::collective_scaleout(32, gbs, spec, Pattern::C5, 0.0);
+        let accels = cfg.node.accels_per_node as u32;
+        let chunk = spec.size_b / accels as u64;
+        let oracle = CollParams::from_pcie(&cfg.node.accel_link, accels, chunk)
+            .ring_allreduce_ns(spec.size_b as f64);
+        let r = Sim::new(cfg, &NativeProvider, BenchMode::None).unwrap().run();
+        assert_eq!(r.coll_iters, 3);
+        let rel = (r.coll_time.mean_ns - oracle).abs() / oracle;
+        assert!(
+            rel < 0.05,
+            "{gbs} GB/s: sim {:.1} ns vs oracle {oracle:.1} ns ({:.1}%)",
+            r.coll_time.mean_ns,
+            rel * 100.0
+        );
+        // The report's built-in prediction is the same oracle.
+        let rel_report = (r.coll_pred_ns - oracle).abs() / oracle;
+        assert!(rel_report < 1e-9, "report pred {} vs {oracle}", r.coll_pred_ns);
+    }
+}
+
+/// Uncongested hierarchical AllReduce benefits from intra bandwidth: the
+/// intra reduce/broadcast phases dominate and speed up 128→512 GB/s.
+#[test]
+fn hierarchical_uncongested_improves_with_intra_bandwidth() {
+    let spec = CollectiveSpec {
+        op: CollOp::HierarchicalAllReduce,
+        scope: CollScope::Global,
+        size_b: MIB,
+        iters: 2,
+    };
+    let t128 = run_collective(32, 128.0, spec, Pattern::C5, 0.0).coll_time.mean_ns;
+    let t512 = run_collective(32, 512.0, spec, Pattern::C5, 0.0).coll_time.mean_ns;
+    assert!(
+        t512 < 0.7 * t128,
+        "512 GB/s should beat 128 GB/s uncongested: {t512:.0} vs {t128:.0} ns"
+    );
+    // The composed analytic prediction tracks the same order of magnitude
+    // (sanity for the NIC-boundary pipeline model; the strict 5% oracle
+    // is the per-node ring above).
+    let r = run_collective(32, 128.0, spec, Pattern::C5, 0.0);
+    assert!(r.coll_pred_ns > 0.0);
+    let ratio = r.coll_time.mean_ns / r.coll_pred_ns;
+    assert!((0.3..3.0).contains(&ratio), "sim/pred ratio {ratio:.2}");
+}
+
+/// Acceptance trend: against concurrent inter-node background traffic,
+/// raising intra-node bandwidth does not improve hierarchical-AllReduce
+/// completion — the background offered load grows with the intra links
+/// (load is a fraction of link capacity), over-subscribing the fixed
+/// 400 Gbps NIC and stalling the inter-exchange phase.
+#[test]
+fn hierarchical_congested_does_not_improve_with_intra_bandwidth() {
+    // One iteration, and a measure window long enough that the background
+    // generators stay live for the whole collective at every bandwidth.
+    let spec = CollectiveSpec {
+        op: CollOp::HierarchicalAllReduce,
+        scope: CollScope::Global,
+        size_b: 256 * 1024,
+        iters: 1,
+    };
+    let bg = Pattern::Custom { frac_inter: 1.0 };
+    let load = 0.35; // offered inter per node: 128 GB/s -> ~358 Gbps
+                     // (below the 400 Gbps NIC); 256 -> ~717; 512 ->
+                     // ~1434 — far past it, so the inter-exchange phase
+                     // stalls behind background backlogs.
+    let run = |gbs: f64, pattern: Pattern, load: f64| {
+        let mut cfg = presets::collective_scaleout(32, gbs, spec, pattern, load);
+        cfg.measure_us = 500.0;
+        Sim::new(cfg, &NativeProvider, BenchMode::None).unwrap().run().coll_time.mean_ns
+    };
+    let t128 = run(128.0, bg, load);
+    let t256 = run(256.0, bg, load);
+    let t512 = run(512.0, bg, load);
+    assert!(
+        t512 >= 0.95 * t128,
+        "raising intra bandwidth must not improve congested completion: \
+         128 -> {t128:.0} ns, 256 -> {t256:.0} ns, 512 -> {t512:.0} ns"
+    );
+    assert!(
+        t512.max(t256) >= t128,
+        "trend: saturation at higher intra bandwidth should dominate: \
+         128 -> {t128:.0} ns, 256 -> {t256:.0} ns, 512 -> {t512:.0} ns"
+    );
+    // And congestion must actually hurt at 512 vs its own uncongested run.
+    let t512_clean = run(512.0, Pattern::C5, 0.0);
+    assert!(
+        t512 > 1.2 * t512_clean,
+        "background traffic should degrade 512 GB/s completion: \
+         {t512:.0} vs clean {t512_clean:.0} ns"
+    );
+}
+
+/// Collectives are deterministic even against Poisson background traffic.
+#[test]
+fn collective_runs_are_deterministic() {
+    let spec = CollectiveSpec {
+        op: CollOp::HierarchicalAllReduce,
+        scope: CollScope::Global,
+        size_b: 256 * 1024,
+        iters: 2,
+    };
+    let bg = Pattern::Custom { frac_inter: 1.0 };
+    let a = run_collective(32, 256.0, spec, bg, 0.2);
+    let b = run_collective(32, 256.0, spec, bg, 0.2);
+    assert_eq!(a.coll_time.mean_ns, b.coll_time.mean_ns);
+    assert_eq!(a.events, b.events);
+    assert_eq!(a.delivered_msgs, b.delivered_msgs);
+}
+
+/// The full config→JSON→file→Sim pipeline carries the workload (what
+/// `sauron run collective.json` executes).
+#[test]
+fn collective_config_runs_from_json_file() {
+    let mut cfg = presets::collective_scaleout(
+        32,
+        256.0,
+        CollectiveSpec {
+            op: CollOp::AllToAll,
+            scope: CollScope::PerNode,
+            size_b: 128 * 1024,
+            iters: 2,
+        },
+        Pattern::C5,
+        0.0,
+    );
+    cfg.seed = 99;
+    let dir = std::env::temp_dir().join("sauron_coll_cfg_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("collective.json");
+    std::fs::write(&path, cfg.to_json_string()).unwrap();
+    let loaded = sauron::SimConfig::load(&path).unwrap();
+    assert!(matches!(loaded.workload, Workload::Collective(s) if s.op == CollOp::AllToAll));
+    let r = Sim::new(loaded, &NativeProvider, BenchMode::None).unwrap().run();
+    assert_eq!(r.coll_iters, 2);
+    assert_eq!(r.coll_op, "all_to_all");
+    assert!(r.coll_time.mean_ns > 0.0);
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,185 @@
+//! Property tests for the collective schedule builders: per-rank volumes
+//! match the closed-form collective formulas, every recv has a matching
+//! send, and the dependency structure is deadlock-free — across
+//! randomized rank counts, node layouts and buffer sizes.
+
+use sauron::config::{CollOp, CollScope, CollectiveSpec};
+use sauron::testkit::{forall, Choice, IntRange, Pair, Triple, VecGen};
+use sauron::traffic::collective::{self, Step};
+
+/// |actual - expected| within a rounding tolerance of one byte per shard
+/// boundary (uneven shards differ by ≤ 1 byte; empty shards are bumped
+/// to 1-byte control messages).
+fn close(actual: u64, expected: f64, slack: u64) -> Result<(), String> {
+    let diff = (actual as f64 - expected).abs();
+    if diff <= slack as f64 {
+        Ok(())
+    } else {
+        Err(format!("volume {actual} vs closed form {expected:.1} (slack {slack})"))
+    }
+}
+
+#[test]
+fn prop_ring_allreduce_volumes_match_closed_form() {
+    let gen = Pair(IntRange { lo: 2, hi: 24 }, IntRange { lo: 1, hi: 1 << 20 });
+    forall(0xC011, 60, &gen, |&(n, size)| {
+        let n = n as u32;
+        let sched = collective::ring_allreduce(n, size).map_err(|e| e.to_string())?;
+        sched.check()?;
+        let expect = 2.0 * (n as f64 - 1.0) / n as f64 * size as f64;
+        for r in 0..n {
+            close(sched.sent_bytes(r), expect, 4 * n as u64)?;
+            close(sched.recv_bytes(r), expect, 4 * n as u64)?;
+            // Dependency count: 2(n-1) recvs per rank.
+            if sched.recv_count(r) != 2 * (n as usize - 1) {
+                return Err(format!("rank {r}: {} recvs", sched.recv_count(r)));
+            }
+        }
+        // Global conservation is exact (sends and recvs are the same
+        // multiset of messages).
+        let sent: u64 = (0..n).map(|r| sched.sent_bytes(r)).sum();
+        let recv: u64 = (0..n).map(|r| sched.recv_bytes(r)).sum();
+        if sent != recv {
+            return Err(format!("global sent {sent} != recv {recv}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_allgather_and_alltoall_volumes_match_closed_form() {
+    let gen = Triple(
+        Choice(&[CollOp::AllGather, CollOp::ReduceScatter, CollOp::AllToAll]),
+        IntRange { lo: 2, hi: 20 },
+        IntRange { lo: 1, hi: 1 << 20 },
+    );
+    forall(0xA11, 60, &gen, |&(op, n, size)| {
+        let n = n as u32;
+        let sched = match op {
+            CollOp::AllGather => collective::ring_allgather(n, size),
+            CollOp::ReduceScatter => collective::ring_reduce_scatter(n, size),
+            CollOp::AllToAll => collective::all_to_all(n, size),
+            _ => unreachable!(),
+        }
+        .map_err(|e| e.to_string())?;
+        sched.check()?;
+        let expect = (n as f64 - 1.0) / n as f64 * size as f64;
+        for r in 0..n {
+            close(sched.sent_bytes(r), expect, 4 * n as u64)
+                .map_err(|e| format!("{op:?} rank {r}: {e}"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_hierarchical_volumes_split_intra_vs_inter() {
+    let gen = Triple(
+        IntRange { lo: 2, hi: 8 },  // nodes
+        IntRange { lo: 1, hi: 8 },  // accels per node
+        IntRange { lo: 1, hi: 1 << 22 },
+    );
+    forall(0x41E2, 50, &gen, |&(nodes, a, size)| {
+        let (nodes, a) = (nodes as u32, a as u32);
+        let sched =
+            collective::hierarchical_allreduce(nodes, a, size).map_err(|e| e.to_string())?;
+        sched.check()?;
+        let intra_expect = if a >= 2 {
+            2.0 * (a as f64 - 1.0) / a as f64 * size as f64
+        } else {
+            0.0
+        };
+        let inter_expect =
+            2.0 * (nodes as f64 - 1.0) / nodes as f64 * (size as f64 / a as f64);
+        let slack = 4 * (nodes + a) as u64;
+        for r in 0..nodes * a {
+            let intra = intra_bytes(&sched, r, a);
+            let inter = sched.sent_bytes(r) - intra;
+            close(intra, intra_expect, slack).map_err(|e| format!("rank {r} intra: {e}"))?;
+            close(inter, inter_expect, slack).map_err(|e| format!("rank {r} inter: {e}"))?;
+        }
+        Ok(())
+    });
+}
+
+/// Bytes rank sends to peers on its own node.
+fn intra_bytes(sched: &collective::Schedule, rank: u32, accels_per_node: u32) -> u64 {
+    sched.steps[rank as usize]
+        .iter()
+        .map(|s| match s {
+            Step::Send { peer, size_b } if peer / accels_per_node == rank / accels_per_node => {
+                *size_b as u64
+            }
+            _ => 0,
+        })
+        .sum()
+}
+
+#[test]
+fn prop_build_is_deadlock_free_for_every_op_and_layout() {
+    let gen = Triple(
+        Choice(&CollOp::ALL),
+        Pair(IntRange { lo: 2, hi: 8 }, IntRange { lo: 1, hi: 8 }),
+        IntRange { lo: 1, hi: 1 << 20 },
+    );
+    forall(0xDEAD, 120, &gen, |&(op, (nodes, accels), size)| {
+        let (nodes, accels) = (nodes as u32, accels as u32);
+        let spec =
+            CollectiveSpec { op, scope: CollScope::Global, size_b: size, iters: 1 };
+        let sched = collective::build(&spec, nodes, accels).map_err(|e| e.to_string())?;
+        sched.check()?;
+        // A non-trivial system always yields a non-empty schedule.
+        if sched.total_steps() == 0 {
+            return Err("empty schedule".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_per_node_scope_never_crosses_nodes() {
+    let gen = Triple(
+        Choice(&[CollOp::RingAllReduce, CollOp::ReduceScatter, CollOp::AllGather, CollOp::AllToAll]),
+        Pair(IntRange { lo: 2, hi: 6 }, IntRange { lo: 2, hi: 8 }),
+        IntRange { lo: 1, hi: 1 << 18 },
+    );
+    forall(0x5C09E, 80, &gen, |&(op, (nodes, accels), size)| {
+        let (nodes, accels) = (nodes as u32, accels as u32);
+        let spec =
+            CollectiveSpec { op, scope: CollScope::PerNode, size_b: size, iters: 1 };
+        let sched = collective::build(&spec, nodes, accels).map_err(|e| e.to_string())?;
+        sched.check()?;
+        for (rank, prog) in sched.steps.iter().enumerate() {
+            let node = rank as u32 / accels;
+            for s in prog {
+                let peer = match s {
+                    Step::Send { peer, .. } | Step::Recv { peer } => *peer,
+                };
+                if peer / accels != node {
+                    return Err(format!("rank {rank} crosses nodes to {peer} ({op:?})"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_hierarchical_sound_over_size_batches() {
+    // VecGen drives a whole batch of sizes per case; on failure the vector
+    // shrinks to the minimal offending size set.
+    let gen = VecGen { elem: IntRange { lo: 1, hi: 1 << 22 }, min_len: 1, max_len: 6 };
+    forall(0xBA7C4, 40, &gen, |sizes| {
+        for &size in sizes {
+            let sched = collective::hierarchical_allreduce(4, 8, size)
+                .map_err(|e| format!("size {size}: {e}"))?;
+            sched.check().map_err(|e| format!("size {size}: {e}"))?;
+            let sent: u64 = (0..32).map(|r| sched.sent_bytes(r)).sum();
+            let recv: u64 = (0..32).map(|r| sched.recv_bytes(r)).sum();
+            if sent != recv {
+                return Err(format!("size {size}: sent {sent} != recv {recv}"));
+            }
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,164 @@
+//! Minimal in-tree mirror of the `anyhow` API surface this project uses.
+//!
+//! The build image has no crates.io access, so the workspace vendors this
+//! shim as a path dependency instead of pulling the real crate. Supported
+//! subset (kept intentionally tiny — extend only when a call site needs
+//! it):
+//!
+//! * [`Error`] — a string-carrying error with a context chain.
+//! * [`Result`] — `Result<T, Error>` alias with the usual default param.
+//! * [`anyhow!`] / [`bail!`] / [`ensure!`] — the constructor macros.
+//! * `Error::context` — context wrapping (pool.rs error reporting).
+//! * `From<E: std::error::Error>` — so `?` converts std errors.
+//!
+//! Like the real crate, `Error` deliberately does **not** implement
+//! `std::error::Error`: that keeps the blanket `From` impl coherent.
+
+use std::fmt;
+
+/// A string-backed error with an outermost-first context chain.
+pub struct Error {
+    /// Context messages, outermost first, then the root message last.
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from a preformatted message.
+    pub fn msg(message: impl fmt::Display) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap with an outer context message (mirrors `anyhow::Error::context`).
+    pub fn context(mut self, context: impl fmt::Display) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The outermost message (what plain `Display` shows).
+    pub fn root_message(&self) -> &str {
+        &self.chain[0]
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}` renders the whole chain, real-anyhow style.
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `fn main() -> anyhow::Result<()>` prints errors via Debug; show
+        // the full chain there too.
+        write!(f, "{}", self.chain.join(": "))
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        Error::msg(e.to_string())
+    }
+}
+
+/// `anyhow::Result<T>` — plain `Result` with [`Error`] as the default.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string or any `Display` value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(&$err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Return early with an [`Error`] when the condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!(
+                ::std::concat!("condition failed: ", ::std::stringify!($cond))
+            ));
+        }
+    };
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($t)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails(flag: bool) -> Result<u32> {
+        ensure!(!flag, "flag was {}", flag);
+        Ok(7)
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        let e = anyhow!("plain");
+        assert_eq!(format!("{e}"), "plain");
+        let x = 3;
+        let e = anyhow!("value {x} and {}", 4);
+        assert_eq!(format!("{e}"), "value 3 and 4");
+        let from_display = anyhow!(String::from("owned message"));
+        assert_eq!(format!("{from_display}"), "owned message");
+    }
+
+    #[test]
+    fn ensure_and_bail() {
+        assert_eq!(fails(false).unwrap(), 7);
+        let e = fails(true).unwrap_err();
+        assert_eq!(format!("{e}"), "flag was true");
+        fn b() -> Result<()> {
+            bail!("boom {}", 1)
+        }
+        assert_eq!(format!("{}", b().unwrap_err()), "boom 1");
+    }
+
+    #[test]
+    fn context_chains_render_in_alternate() {
+        let e = anyhow!("root cause").context("outer job");
+        assert_eq!(format!("{e}"), "outer job");
+        assert_eq!(format!("{e:#}"), "outer job: root cause");
+        assert_eq!(format!("{e:?}"), "outer job: root cause");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse(s: &str) -> Result<i64> {
+            Ok(s.parse::<i64>()?)
+        }
+        assert_eq!(parse("42").unwrap(), 42);
+        assert!(format!("{}", parse("nope").unwrap_err()).contains("invalid digit"));
+        fn io() -> Result<String> {
+            Ok(std::fs::read_to_string("/definitely/not/a/real/path/xyz")?)
+        }
+        assert!(io().is_err());
+    }
+}
