@@ -65,6 +65,7 @@ fn main() -> anyhow::Result<()> {
             arrival: Arrival::Poisson,
         },
         workload: Workload::None,
+        coalescing: true,
     };
     cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
 

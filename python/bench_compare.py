@@ -1,0 +1,89 @@
+#!/usr/bin/env python3
+"""Compare a fresh perf_hotpath run against the committed baseline.
+
+Used by CI's non-gating perf-smoke job:
+
+    python3 python/bench_compare.py BASELINE.json FRESH.json --max-regression 2.0
+
+Both files follow the `sauron-bench-v1` schema written by
+`benchkit::Bench::write_json`. A benchmark regresses when its fresh
+`rate_per_s` falls below `baseline_rate / max_regression`; benchmarks
+without a throughput annotation are compared on `mean_ns` instead
+(regression = fresh mean more than `max_regression` times the baseline
+mean). Benchmarks present on only one side are reported but never fail
+the comparison (machines differ in which optional benches run, e.g. the
+PJRT table build). Exit status: 0 = within bounds, 1 = regression,
+2 = usage/parse error.
+"""
+
+import argparse
+import json
+import sys
+
+
+def load(path):
+    with open(path, "r", encoding="utf-8") as f:
+        doc = json.load(f)
+    if doc.get("schema") != "sauron-bench-v1":
+        raise ValueError(f"{path}: unexpected schema {doc.get('schema')!r}")
+    out = {}
+    for b in doc.get("benches", []):
+        out[b["name"]] = b
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline")
+    ap.add_argument("fresh")
+    ap.add_argument(
+        "--max-regression",
+        type=float,
+        default=2.0,
+        help="fail when fresh is worse than baseline by more than this factor",
+    )
+    args = ap.parse_args()
+
+    try:
+        base = load(args.baseline)
+        fresh = load(args.fresh)
+    except (OSError, ValueError, KeyError, json.JSONDecodeError) as e:
+        print(f"bench_compare: {e}", file=sys.stderr)
+        return 2
+
+    failed = []
+    for name in sorted(set(base) | set(fresh)):
+        if name not in base or name not in fresh:
+            side = "baseline" if name in base else "fresh run"
+            print(f"  {name:<44} only in {side} (ignored)")
+            continue
+        b, f = base[name], fresh[name]
+        if "rate_per_s" in b and "rate_per_s" in f and b["rate_per_s"] > 0:
+            ratio = f["rate_per_s"] / b["rate_per_s"]
+            verdict = "OK" if ratio * args.max_regression >= 1.0 else "REGRESSION"
+            print(
+                f"  {name:<44} {b['rate_per_s']:>14.0f} -> {f['rate_per_s']:>14.0f} /s"
+                f"  ({ratio:5.2f}x)  {verdict}"
+            )
+        elif b.get("mean_ns", 0) > 0:
+            ratio = b["mean_ns"] / max(f.get("mean_ns", 0), 1e-9)
+            verdict = "OK" if ratio * args.max_regression >= 1.0 else "REGRESSION"
+            print(
+                f"  {name:<44} {b['mean_ns']:>14.0f} -> {f.get('mean_ns', 0):>14.0f} ns"
+                f"  ({ratio:5.2f}x)  {verdict}"
+            )
+        else:
+            continue
+        if verdict == "REGRESSION":
+            failed.append(name)
+
+    if failed:
+        print(f"bench_compare: {len(failed)} benchmark(s) regressed >"
+              f"{args.max_regression}x: {', '.join(failed)}", file=sys.stderr)
+        return 1
+    print("bench_compare: all benchmarks within bounds")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

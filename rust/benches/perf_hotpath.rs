@@ -1,12 +1,22 @@
 //! Hot-path microbenchmarks (EXPERIMENTS.md §Perf): the DES core and the
 //! end-to-end simulation step, isolated from figure regeneration.
 //!
-//! Run: `cargo bench --bench perf_hotpath`
+//! Every world benchmark reports throughput in **scalar-equivalent
+//! events/sec**: the unit of work is the event count of the force-scalar
+//! (coalescing-disabled) engine on the same config, so rates stay
+//! comparable across engine generations no matter how many heap events
+//! the coalesced engine actually dispatches.
+//!
+//! Run: `cargo bench --bench perf_hotpath`. Prints the grep-friendly
+//! table, appends results/bench_history.csv, and writes
+//! `BENCH_hotpath.json` — the recorded perf trajectory that CI's
+//! perf-smoke job diffs against the committed baseline
+//! (python/bench_compare.py).
 
 mod common;
 
 use sauron::benchkit::Bench;
-use sauron::config::{presets, Pattern};
+use sauron::config::{presets, CollOp, CollScope, CollectiveSpec, Pattern, SimConfig};
 use sauron::net::world::{BenchMode, NativeProvider, Sim};
 use sauron::sim::{Engine, EventQueue, Model};
 use sauron::units::Time;
@@ -25,10 +35,19 @@ impl Model for Spin {
     }
 }
 
+/// Scalar-equivalent event count of `cfg` — the logical unit of work a
+/// world benchmark divides wall time by.
+fn scalar_events(cfg: &SimConfig) -> f64 {
+    let mut scalar = cfg.clone();
+    scalar.coalescing = false;
+    Sim::new(scalar, &NativeProvider, BenchMode::None).unwrap().run().events as f64
+}
+
 fn main() {
     let mut b = Bench::new();
 
-    // 1. Raw DES engine dispatch rate (single chain).
+    // 1. Raw DES engine dispatch rate (single chain; the front-slot fast
+    //    path of sim::queue never touches the heap here).
     const N: u64 = 1_000_000;
     b.bench_units("perf/engine_dispatch_chain", N as f64, "events", || {
         let mut e = Engine::new(Spin { left: N });
@@ -51,27 +70,50 @@ fn main() {
     let mut cfg = presets::scaleout(32, 256.0, Pattern::C1, 0.6);
     cfg.warmup_us = 10.0;
     cfg.measure_us = 10.0;
-    let probe = Sim::new(cfg.clone(), &NativeProvider, BenchMode::None).unwrap().run();
-    b.bench_units("perf/world_32n_c1_60pct", probe.events as f64, "events", || {
+    let units = scalar_events(&cfg);
+    b.bench_units("perf/world_32n_c1_60pct", units, "events", || {
         Sim::new(cfg.clone(), &NativeProvider, BenchMode::None).unwrap().run()
     });
 
-    // 4. Saturated world (backpressure-heavy path).
+    // 4. Saturated world (backpressure-heavy path: deep queues, long
+    //    delivery trains, waiter truncation).
     let mut cfg2 = presets::scaleout(32, 512.0, Pattern::C1, 1.0);
     cfg2.warmup_us = 10.0;
     cfg2.measure_us = 10.0;
-    let probe2 = Sim::new(cfg2.clone(), &NativeProvider, BenchMode::None).unwrap().run();
-    b.bench_units("perf/world_32n_c1_saturated", probe2.events as f64, "events", || {
+    let units2 = scalar_events(&cfg2);
+    b.bench_units("perf/world_32n_c1_saturated", units2, "events", || {
         Sim::new(cfg2.clone(), &NativeProvider, BenchMode::None).unwrap().run()
     });
 
-    // 5. World construction cost (128 nodes — allocation path).
-    let cfg3 = presets::scaleout(128, 128.0, Pattern::C3, 0.0);
-    b.bench("perf/world_build_128n", || {
-        Sim::new(cfg3.clone(), &NativeProvider, BenchMode::None).unwrap()
+    // 5. Collective world: hierarchical AllReduce with inter-node
+    //    background traffic (multi-transaction inter sends are where
+    //    trains pay off for closed-loop workloads).
+    let mut cfg3 = presets::collective_scaleout(
+        8,
+        256.0,
+        CollectiveSpec {
+            op: CollOp::HierarchicalAllReduce,
+            scope: CollScope::Global,
+            size_b: 1 << 20,
+            iters: 2,
+        },
+        Pattern::Custom { frac_inter: 1.0 },
+        0.2,
+    );
+    cfg3.warmup_us = 5.0;
+    cfg3.measure_us = 20.0;
+    let units3 = scalar_events(&cfg3);
+    b.bench_units("perf/world_collective_hier_1mib", units3, "events", || {
+        Sim::new(cfg3.clone(), &NativeProvider, BenchMode::None).unwrap().run()
     });
 
-    // 6. PJRT artifact table build, when artifacts exist.
+    // 6. World construction cost (128 nodes — allocation path).
+    let cfg4 = presets::scaleout(128, 128.0, Pattern::C3, 0.0);
+    b.bench("perf/world_build_128n", || {
+        Sim::new(cfg4.clone(), &NativeProvider, BenchMode::None).unwrap()
+    });
+
+    // 7. PJRT artifact table build, when artifacts exist.
     if let Ok(rt) = sauron::runtime::Runtime::load(&sauron::runtime::Runtime::default_dir()) {
         let p = sauron::analytic::PcieParams::generic_accel_link(512.0);
         let sizes: Vec<u32> = (1..=1024).map(|i| i * 977).collect();
@@ -81,4 +123,8 @@ fn main() {
     }
 
     b.append_csv(std::path::Path::new("results/bench_history.csv")).ok();
+    match b.write_json(std::path::Path::new("BENCH_hotpath.json")) {
+        Ok(()) => println!("wrote BENCH_hotpath.json ({} benches)", b.results.len()),
+        Err(e) => eprintln!("could not write BENCH_hotpath.json: {e}"),
+    }
 }

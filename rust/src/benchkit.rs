@@ -5,11 +5,15 @@
 //! closures, and get per-benchmark wall-clock statistics (mean ± stddev,
 //! min, iterations) printed in a stable, grep-friendly format. Each
 //! benchmark is auto-calibrated to a target measurement time and warmed
-//! up first. Results can also be appended to a CSV for the EXPERIMENTS.md
-//! perf log.
+//! up first. Results can be appended to a CSV for the EXPERIMENTS.md
+//! perf log, or emitted as a JSON document (`BENCH_hotpath.json` schema)
+//! that CI diffs against the committed baseline
+//! (`python/bench_compare.py`).
 
 use std::io::Write;
 use std::time::{Duration, Instant};
+
+use crate::serial::json::{ToJson, Value};
 
 /// One benchmark's measurement.
 #[derive(Debug, Clone)]
@@ -43,6 +47,25 @@ impl Measurement {
             s.push_str(&format!("  [{} {label}/s]", fmt_rate(rate)));
         }
         s
+    }
+}
+
+impl ToJson for Measurement {
+    fn to_json(&self) -> Value {
+        let mut v = Value::obj()
+            .with("name", self.name.as_str())
+            .with("iters", self.iters)
+            .with("mean_ns", self.mean.as_nanos() as f64)
+            .with("stddev_ns", self.stddev.as_nanos() as f64)
+            .with("min_ns", self.min.as_nanos() as f64)
+            .with("max_ns", self.max.as_nanos() as f64);
+        if let Some((units, label)) = self.throughput {
+            v = v
+                .with("units_per_iter", units)
+                .with("unit", label)
+                .with("rate_per_s", self.per_second().unwrap_or(0.0));
+        }
+        v
     }
 }
 
@@ -162,6 +185,25 @@ impl Bench {
         self.results.last().unwrap()
     }
 
+    /// Render all results as a stable JSON document (the
+    /// `BENCH_hotpath.json` schema; see EXPERIMENTS.md §Perf).
+    pub fn to_json(&self) -> Value {
+        Value::obj()
+            .with("schema", "sauron-bench-v1")
+            .with("benches", Value::Arr(self.results.iter().map(|m| m.to_json()).collect()))
+    }
+
+    /// Write the JSON document to `path`, creating parent directories.
+    pub fn write_json(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        std::fs::write(path, self.to_json().pretty())?;
+        Ok(())
+    }
+
     /// Append results to a CSV (created with header if absent).
     pub fn append_csv(&self, path: &std::path::Path) -> anyhow::Result<()> {
         let existed = path.exists();
@@ -237,6 +279,32 @@ mod tests {
         b.append_csv(&path).unwrap();
         let text = std::fs::read_to_string(&path).unwrap();
         assert_eq!(text.lines().count(), 3); // header + 2 appends
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn json_emission_matches_schema() {
+        let mut b = fast_bench();
+        b.bench_units("world", 1000.0, "events", || (0..500u64).sum::<u64>());
+        b.bench("plain", || 1 + 1);
+        let v = b.to_json();
+        assert_eq!(v.str_of("schema").unwrap(), "sauron-bench-v1");
+        let arr = v.req("benches").unwrap().as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].str_of("name").unwrap(), "world");
+        assert_eq!(arr[0].str_of("unit").unwrap(), "events");
+        assert!(arr[0].f64_of("rate_per_s").unwrap() > 0.0);
+        assert!(arr[0].f64_of("mean_ns").unwrap() > 0.0);
+        // The throughput-free bench omits rate fields.
+        assert!(arr[1].get("rate_per_s").is_none());
+        // Written file parses back through the in-tree JSON parser.
+        let dir = std::env::temp_dir().join("sauron_benchkit_json_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_test.json");
+        b.write_json(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let parsed = Value::parse(&text).unwrap();
+        assert_eq!(parsed.req("benches").unwrap().as_arr().unwrap().len(), 2);
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -281,6 +281,13 @@ pub struct SimConfig {
     /// Closed-loop workload (collectives / bench drivers) running on top
     /// of — or instead of — the open-loop generators.
     pub workload: Workload,
+    /// Coalesce delivery-link transactions into single-event trains in
+    /// the DES hot path (EXPERIMENTS.md §Perf). Results are invariant up
+    /// to equal-timestamp tie-breaking order (see the `net/world.rs`
+    /// module docs) — `tests/props_coalesce.rs` compares both engines
+    /// bit-for-bit — so this stays on except when forcing the scalar
+    /// reference engine.
+    pub coalescing: bool,
 }
 
 impl SimConfig {
@@ -651,6 +658,7 @@ impl ToJson for SimConfig {
             .with("inter", self.inter.to_json())
             .with("traffic", self.traffic.to_json())
             .with("workload", self.workload.to_json())
+            .with("coalescing", self.coalescing)
     }
 }
 
@@ -667,6 +675,11 @@ impl FromJson for SimConfig {
             workload: match v.get("workload") {
                 Some(w) => Workload::from_json(w)?,
                 None => Workload::None,
+            },
+            // Optional (default on) so pre-coalescing config files parse.
+            coalescing: match v.get("coalescing") {
+                Some(b) => b.as_bool()?,
+                None => true,
             },
         })
     }
@@ -755,6 +768,22 @@ mod tests {
         }
         let old = SimConfig::from_json(&v).unwrap();
         assert_eq!(old.workload, Workload::None);
+    }
+
+    #[test]
+    fn coalescing_defaults_on_and_roundtrips_off() {
+        let mut cfg = scaleout(32, 128.0, Pattern::C1, 0.2);
+        assert!(cfg.coalescing, "presets run the coalesced engine");
+        cfg.coalescing = false;
+        let back = SimConfig::from_json_str(&cfg.to_json_string()).unwrap();
+        assert!(!back.coalescing);
+        // Pre-coalescing config files (no field) parse with the default.
+        let mut v = cfg.to_json();
+        if let Value::Obj(fields) = &mut v {
+            fields.retain(|(k, _)| k != "coalescing");
+        }
+        let old = SimConfig::from_json(&v).unwrap();
+        assert!(old.coalescing);
     }
 
     #[test]

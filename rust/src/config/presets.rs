@@ -46,6 +46,7 @@ pub fn cellia() -> SimConfig {
             arrival: Arrival::Poisson,
         },
         workload: Workload::None,
+        coalescing: true,
     }
 }
 
@@ -106,6 +107,7 @@ pub fn scaleout(nodes: usize, aggregated_gbs: f64, pattern: Pattern, load: f64) 
         },
         traffic: TrafficConfig { pattern, msg_size_b: 4096, load, arrival: Arrival::Poisson },
         workload: Workload::None,
+        coalescing: true,
     }
 }
 

@@ -78,6 +78,19 @@ pub struct Link {
     pub parked: bool,
     /// Delivered wire bytes (for utilization accounting).
     pub tx_bytes: u64,
+    /// Precomputed completion times of the in-flight coalesced delivery
+    /// train, aligned with the queue front (world::start_delivery). Empty
+    /// while the link steps one event per unit.
+    pub train_ends: VecDeque<Time>,
+    /// A delivery train is in flight. Stays set (with `busy`) until the
+    /// train's authoritative `TxEnd` event retires the last unit, even if
+    /// observers drained `train_ends` early via world::settle.
+    pub train_active: bool,
+    /// Timestamp of this link's authoritative pending `TxEnd` event
+    /// (`Time::MAX` = none). Train truncation supersedes an already
+    /// scheduled event; the stale one is recognized and ignored because
+    /// its timestamp no longer matches.
+    pub next_fire: Time,
 }
 
 impl Link {
@@ -93,6 +106,9 @@ impl Link {
             waiters: Vec::new(),
             parked: false,
             tx_bytes: 0,
+            train_ends: VecDeque::new(),
+            train_active: false,
+            next_fire: Time::MAX,
         }
     }
 

@@ -9,6 +9,16 @@
 //! heap was tried and **reverted** — std's hole-based sift (one move per
 //! level instead of three) beat it by ~15% on the end-to-end world and
 //! 3× on shallow queues. `pop_if` keeps the engine loop single-access.
+//!
+//! Perf note (EXPERIMENTS.md §Perf, iteration 2): the queue carries a
+//! `front` slot caching the global minimum. A push that beats everything
+//! currently queued parks there instead of sifting into the heap, and the
+//! next pop takes it back without touching the heap — the common
+//! "handler schedules the immediately-next event" pattern (tight event
+//! chains, drained worlds) costs zero heap operations. The invariant
+//! `front ≤ every heap entry` is restored on every push, so ordering
+//! semantics (including FIFO tie-breaks via `seq`) are bit-identical to
+//! the plain heap.
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
@@ -39,30 +49,49 @@ impl<E> Ord for Entry<E> {
 
 pub struct EventQueue<E> {
     heap: BinaryHeap<Reverse<Entry<E>>>,
+    /// Cached global minimum: always ≤ every entry in `heap`, so pops and
+    /// peeks hit this slot without a heap operation when it is occupied.
+    front: Option<Entry<E>>,
     seq: u64,
 }
 
 impl<E> EventQueue<E> {
     pub fn new() -> Self {
-        EventQueue { heap: BinaryHeap::with_capacity(1024), seq: 0 }
+        EventQueue { heap: BinaryHeap::with_capacity(1024), front: None, seq: 0 }
     }
 
     #[inline]
     pub fn push(&mut self, at: Time, event: E) {
         let seq = self.seq;
         self.seq += 1;
-        self.heap.push(Reverse(Entry { key: (at, seq), event }));
+        let entry = Entry { key: (at, seq), event };
+        let goes_front = match (&self.front, self.heap.peek()) {
+            (Some(f), _) => entry.key < f.key,
+            (None, Some(Reverse(top))) => entry.key < top.key,
+            (None, None) => true,
+        };
+        if goes_front {
+            // New global minimum: displace the cached one (if any).
+            if let Some(old) = self.front.replace(entry) {
+                self.heap.push(Reverse(old));
+            }
+        } else {
+            self.heap.push(Reverse(entry));
+        }
     }
 
     #[inline]
     pub fn pop(&mut self) -> Option<(Time, E)> {
+        if let Some(e) = self.front.take() {
+            return Some((e.key.0, e.event));
+        }
         self.heap.pop().map(|Reverse(e)| (e.key.0, e.event))
     }
 
     /// Pop the earliest event only if its timestamp satisfies `pred`.
     #[inline]
     pub fn pop_if(&mut self, pred: impl FnOnce(Time) -> bool) -> Option<(Time, E)> {
-        if pred(self.heap.peek()?.0.key.0) {
+        if pred(self.peek_key()?.0) {
             self.pop()
         } else {
             None
@@ -71,17 +100,20 @@ impl<E> EventQueue<E> {
 
     #[inline]
     pub fn peek_key(&self) -> Option<(Time, u64)> {
-        self.heap.peek().map(|Reverse(e)| e.key)
+        match &self.front {
+            Some(e) => Some(e.key),
+            None => self.heap.peek().map(|Reverse(e)| e.key),
+        }
     }
 
     #[inline]
     pub fn len(&self) -> usize {
-        self.heap.len()
+        self.heap.len() + usize::from(self.front.is_some())
     }
 
     #[inline]
     pub fn is_empty(&self) -> bool {
-        self.heap.is_empty()
+        self.front.is_none() && self.heap.is_empty()
     }
 }
 
@@ -145,6 +177,43 @@ mod tests {
             seen += 1;
         }
         assert_eq!(seen, 5_000);
+    }
+
+    #[test]
+    fn front_slot_preserves_order_under_interleaved_push_pop() {
+        // Alternate pushes that beat / don't beat the current minimum with
+        // pops, mirroring an event-chain workload; the drain order must be
+        // exactly (time, insertion) sorted despite the front-slot shortcut.
+        let mut q = EventQueue::new();
+        let mut popped: Vec<(u64, u32)> = Vec::new();
+        let mut x = 99u64;
+        let mut id = 0u32;
+        for round in 0..2_000u64 {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1);
+            q.push(Time::from_ps(x % 499), id);
+            id += 1;
+            if round % 3 == 0 {
+                if let Some((t, v)) = q.pop() {
+                    popped.push((t.as_ps(), v));
+                }
+            }
+        }
+        while let Some((t, v)) = q.pop() {
+            popped.push((t.as_ps(), v));
+        }
+        assert_eq!(popped.len(), 2_000);
+        // Each pop returns the minimum of what was queued at that moment,
+        // so the tail drain (nothing pushed in between) must be sorted.
+        let tail = &popped[popped.len() - 1_300..];
+        for w in tail.windows(2) {
+            assert!(w[0].0 <= w[1].0, "{:?} then {:?}", w[0], w[1]);
+        }
+        // FIFO among equal timestamps in the tail drain.
+        for w in tail.windows(2) {
+            if w[0].0 == w[1].0 {
+                assert!(w[0].1 < w[1].1, "FIFO violated: {:?} then {:?}", w[0], w[1]);
+            }
+        }
     }
 
     #[test]
