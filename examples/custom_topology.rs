@@ -11,7 +11,8 @@
 
 use sauron::analytic::PcieParams;
 use sauron::config::{
-    Arrival, InterConfig, NicConfig, NodeConfig, Pattern, SimConfig, TrafficConfig, Workload,
+    Arrival, FabricConfig, FabricKind, InterConfig, NicConfig, NodeConfig, Pattern, SimConfig,
+    TrafficConfig, Workload,
 };
 use sauron::net::world::{BenchMode, NativeProvider, Sim};
 use sauron::units::MIB;
@@ -40,6 +41,10 @@ fn main() -> anyhow::Result<()> {
             rc_cpu_bounce: false,
             accel_queue_b: MIB,
             switch_queue_b: MIB,
+            // NVLink-class nodes pair a full mesh with multiple NICs
+            // (Alps/LUMI style): every accel pair gets a direct lane and
+            // egress spreads over two rails.
+            fabric: FabricConfig::new(FabricKind::Mesh, 2),
             nic: NicConfig {
                 inter_gbps: 800.0,
                 intra_side_gbps: 800.0,

@@ -54,6 +54,7 @@ fn main() -> anyhow::Result<()> {
         intra_gbs: vec![512.0],
         patterns: vec![summary.pattern(), summary.nearest_paper_pattern()],
         loads: vec![0.2, 0.4, 0.6, 0.8, 1.0],
+        fabric: sauron::config::FabricConfig::switch_star(),
         paper_windows: false,
         workers: coordinator::default_workers(),
         seed: 0x11A,

@@ -127,13 +127,31 @@ impl CollParams {
     /// up-link into the switch, then the peer's down-link), so the
     /// effective per-byte cost is `2 · latency(chunk) / chunk` with the
     /// TLP/DLLP framing folded into β (α = 0). This is the oracle the
-    /// simulated single-node ring collectives are cross-checked against.
+    /// simulated single-node ring collectives are cross-checked against
+    /// on the switch-star fabric.
     pub fn from_pcie(link: &PcieParams, n_devices: u32, chunk_b: u64) -> CollParams {
+        Self::from_pcie_hops(link, n_devices, chunk_b, 2.0)
+    }
+
+    /// [`CollParams::from_pcie`] generalized to a fabric-dependent hop
+    /// count per ring step: 2 for the switch star (up-link + down-link),
+    /// 1 for an NVLink-style mesh lane or a physical ring whose order
+    /// matches the collective's (one direct hop per step), and `A + 3`
+    /// for a PCIe host tree whose `A` concurrent chunks serialize
+    /// through the shared root-complex bridge pair each round (a
+    /// pipeline-steady-state lower bound). The chosen hop count scales β
+    /// with the TLP/DLLP framing intact.
+    pub fn from_pcie_hops(
+        link: &PcieParams,
+        n_devices: u32,
+        chunk_b: u64,
+        hops_per_step: f64,
+    ) -> CollParams {
         let chunk = chunk_b.max(1);
         CollParams {
             n_devices: n_devices as f64,
             alpha_ns: 0.0,
-            beta_ns_per_b: 2.0 * link.latency_ns(chunk) / chunk as f64,
+            beta_ns_per_b: hops_per_step * link.latency_ns(chunk) / chunk as f64,
         }
     }
 
@@ -256,6 +274,24 @@ mod tests {
         let total = (n as f64) * chunk as f64;
         let want = 2.0 * (n as f64 - 1.0) * 2.0 * link.latency_ns(chunk);
         assert!((c.ring_allreduce_ns(total) - want).abs() / want < 1e-9);
+    }
+
+    #[test]
+    fn from_pcie_hops_scales_linearly_and_matches_legacy() {
+        let link = PcieParams::generic_accel_link(256.0);
+        let (n, chunk) = (8u32, 64 * 1024u64);
+        let star = CollParams::from_pcie(&link, n, chunk);
+        let star2 = CollParams::from_pcie_hops(&link, n, chunk, 2.0);
+        assert_eq!(star.beta_ns_per_b, star2.beta_ns_per_b, "2-hop form must be bit-identical");
+        // Mesh/ring lower bound: one hop per step = half the star cost.
+        let mesh = CollParams::from_pcie_hops(&link, n, chunk, 1.0);
+        assert!((mesh.beta_ns_per_b * 2.0 - star.beta_ns_per_b).abs() < 1e-12);
+        // Host-tree bound grows with the accel count (shared bridge).
+        let tree = CollParams::from_pcie_hops(&link, n, chunk, 8.0 + 3.0);
+        assert!(tree.beta_ns_per_b > 5.0 * star.beta_ns_per_b);
+        let s = (n as u64 * chunk) as f64;
+        assert!(mesh.ring_allreduce_ns(s) < star.ring_allreduce_ns(s));
+        assert!(star.ring_allreduce_ns(s) < tree.ring_allreduce_ns(s));
     }
 
     #[test]

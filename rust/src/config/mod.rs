@@ -173,6 +173,115 @@ impl Workload {
     }
 }
 
+/// Intra-node fabric topology connecting a node's accelerators and NICs
+/// (the paper's real design space: PCIe trees, NVLink/xGMI meshes, rings).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FabricKind {
+    /// Single all-to-all intra switch (the original fixed model, default).
+    /// Intra paths are accel→switch→accel, two PCIe-class hops.
+    SwitchStar,
+    /// NVLink/xGMI-style full mesh: one direct lane per ordered
+    /// accelerator pair; intra traffic is a single hop. NICs attach at
+    /// host accelerators (`nic % accels`), so NIC traffic shares the
+    /// host's lanes with peer-to-peer traffic.
+    Mesh,
+    /// Unidirectional ring over the node's accelerators (older NVLink /
+    /// Infinity Fabric rings): hop i connects accel i → (i+1) mod A.
+    /// Through-traffic and injections share ring links.
+    Ring,
+    /// PCIe host tree: every accelerator hangs off a shared root-complex
+    /// bridge pair (HostUp/HostDown), so *all* intra and NIC traffic
+    /// serializes through the bridge — the CELLIA `EP→RC→CPU→RC→EP`
+    /// path made structural (use `rc_cpu_bounce: false` with this
+    /// fabric; the bounce is already in the topology).
+    HostTree,
+}
+
+impl FabricKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            FabricKind::SwitchStar => "switch_star",
+            FabricKind::Mesh => "mesh",
+            FabricKind::Ring => "ring",
+            FabricKind::HostTree => "host_tree",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<FabricKind> {
+        Ok(match s {
+            "switch_star" | "star" | "switch" => FabricKind::SwitchStar,
+            "mesh" | "nvlink" => FabricKind::Mesh,
+            "ring" => FabricKind::Ring,
+            "host_tree" | "hosttree" | "pcie_tree" => FabricKind::HostTree,
+            other => anyhow::bail!("unknown intra fabric '{other}'"),
+        })
+    }
+
+    pub const ALL: [FabricKind; 4] =
+        [FabricKind::SwitchStar, FabricKind::Mesh, FabricKind::Ring, FabricKind::HostTree];
+}
+
+/// How an egressing message picks one of the node's NICs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NicPolicy {
+    /// `src_local % nics` — rail-style affinity: each local rank sticks
+    /// to one NIC, so the hierarchical AllReduce's per-local-rank inter
+    /// rings spread over distinct NICs.
+    LocalRank,
+    /// `(src_local + dst_node) % nics` — deterministic round-robin over
+    /// destinations, spreading a single rank's flows across all NICs.
+    RoundRobin,
+}
+
+impl NicPolicy {
+    pub fn name(self) -> &'static str {
+        match self {
+            NicPolicy::LocalRank => "local_rank",
+            NicPolicy::RoundRobin => "round_robin",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<NicPolicy> {
+        Ok(match s {
+            "local_rank" | "local" | "affinity" => NicPolicy::LocalRank,
+            "round_robin" | "rr" => NicPolicy::RoundRobin,
+            other => anyhow::bail!("unknown NIC policy '{other}'"),
+        })
+    }
+}
+
+/// Pluggable intra-node fabric selection: topology kind, NIC count and
+/// the egress NIC-selection policy. Optional in JSON (defaults preserve
+/// the original single-NIC switch-star model bit-for-bit).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FabricConfig {
+    pub kind: FabricKind,
+    /// NICs per node (paper systems: 1–4). Each NIC gets its own
+    /// switch↔NIC staging links and inter up/down links.
+    pub nics_per_node: usize,
+    pub nic_policy: NicPolicy,
+}
+
+impl FabricConfig {
+    pub fn switch_star() -> FabricConfig {
+        FabricConfig {
+            kind: FabricKind::SwitchStar,
+            nics_per_node: 1,
+            nic_policy: NicPolicy::LocalRank,
+        }
+    }
+
+    pub fn new(kind: FabricKind, nics_per_node: usize) -> FabricConfig {
+        FabricConfig { kind, nics_per_node, nic_policy: NicPolicy::LocalRank }
+    }
+}
+
+impl Default for FabricConfig {
+    fn default() -> Self {
+        FabricConfig::switch_star()
+    }
+}
+
 /// Message inter-arrival process at each generator.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum Arrival {
@@ -199,8 +308,13 @@ pub struct NodeConfig {
     pub rc_cpu_bounce: bool,
     /// Egress queue capacity at each accelerator (bytes).
     pub accel_queue_b: u64,
-    /// Intra switch output-port queue capacity (bytes).
+    /// Intra switch output-port queue capacity (bytes). Also the input
+    /// queue capacity of mesh lanes, ring hops and host-bridge links on
+    /// the non-star fabrics.
     pub switch_queue_b: u64,
+    /// Intra-node fabric topology + NIC attachment (defaults to the
+    /// single-NIC switch star).
+    pub fabric: FabricConfig,
     /// NIC configuration.
     pub nic: NicConfig,
 }
@@ -312,17 +426,63 @@ impl SimConfig {
         if self.inter.nodes < 2 {
             return Err("need at least 2 nodes".into());
         }
+        // The RLFT mapping assigns node `n` to leaf `n / (nodes/leaves)`:
+        // with uneven division that truncation yields leaf indices past the
+        // last leaf, silently aliasing spine_down/leaf_up link ids into
+        // other links' slots (and `leaves > nodes` divides by zero) — so
+        // uneven layouts are rejected here, before any topology is built.
         if self.inter.leaves == 0 || self.inter.nodes % self.inter.leaves != 0 {
             return Err(format!(
-                "nodes ({}) must divide evenly across leaves ({})",
-                self.inter.nodes, self.inter.leaves
+                "nodes ({}) must divide evenly across leaves ({}): every leaf \
+                 switch connects nodes/leaves end nodes; pick leaves from the \
+                 divisors of {} (e.g. via presets::rlft_dims)",
+                self.inter.nodes, self.inter.leaves, self.inter.nodes
             ));
         }
         if self.inter.spines == 0 {
             return Err("need at least 1 spine".into());
         }
+        if n.fabric.nics_per_node == 0 {
+            return Err("nics_per_node must be >= 1".into());
+        }
+        if n.fabric.nics_per_node > 256 {
+            return Err(format!(
+                "nics_per_node {} is implausible (max 256)",
+                n.fabric.nics_per_node
+            ));
+        }
+        if n.fabric.kind == FabricKind::HostTree && n.rc_cpu_bounce {
+            return Err("host_tree models the root-complex bounce structurally (the shared \
+                 HostUp/HostDown bridge links); rc_cpu_bounce: true would double-count it — \
+                 set it to false (presets::with_fabric does this)"
+                .into());
+        }
         if n.nic.mtu_b <= n.nic.header_b {
             return Err("MTU must exceed header".into());
+        }
+        // A unit larger than a downstream queue's capacity can never pass
+        // `Link::has_room` even on an empty queue: the simulation would
+        // stall forever with an empty event queue. Reject such configs
+        // here with the offending buffer named.
+        let txn_payload = n.nic.mtu_b - n.nic.header_b;
+        let unit_caps: [(&str, u64, u64); 7] = [
+            ("nic.egress_buf_b", n.nic.egress_buf_b, n.nic.mtu_b),
+            ("inter.port_buf_b", self.inter.port_buf_b, n.nic.mtu_b),
+            ("nic.ingress_buf_b", n.nic.ingress_buf_b, txn_payload),
+            ("switch_queue_b", n.switch_queue_b, txn_payload),
+            ("accel_queue_b", n.accel_queue_b, txn_payload),
+            // Intra-node messages travel as one whole-message unit.
+            ("accel_queue_b", n.accel_queue_b, self.traffic.msg_size_b),
+            ("switch_queue_b", n.switch_queue_b, self.traffic.msg_size_b),
+        ];
+        for (name, cap, unit) in unit_caps {
+            if unit > cap {
+                return Err(format!(
+                    "{name} = {cap} B cannot hold one {unit} B unit; the \
+                     simulation would stall — deepen the buffer or shrink \
+                     mtu_b / msg_size_b"
+                ));
+            }
         }
         if !(0.0..=1.0).contains(&self.traffic.load) {
             return Err(format!("load {} outside [0,1]", self.traffic.load));
@@ -384,6 +544,28 @@ impl SimConfig {
                 }
                 if spec.scope == CollScope::PerNode && n.accels_per_node < 2 {
                     return Err("per-node collective needs >= 2 accels per node".into());
+                }
+                // Intra-node collective steps travel as whole-message
+                // units: a chunk larger than the intra queues could never
+                // pass `has_room` and the run would stall. The schedule's
+                // largest intra send is one shard — `ceil(size / group)`
+                // (exactly what `traffic::collective::shards` produces).
+                let a = n.accels_per_node as u64;
+                let ranks = (self.inter.nodes * n.accels_per_node) as u64;
+                let group = match (spec.op, spec.scope) {
+                    (CollOp::HierarchicalAllReduce, _) => a,
+                    (_, CollScope::PerNode) => a,
+                    (_, CollScope::Global) => ranks,
+                };
+                let max_chunk = (spec.size_b + group - 1) / group;
+                let cap = n.accel_queue_b.min(n.switch_queue_b);
+                if max_chunk > cap {
+                    return Err(format!(
+                        "collective intra chunk {max_chunk} B (size_b {} over a \
+                         {group}-rank group) exceeds intra queue capacity ({cap} B); \
+                         use a smaller size_b or deeper queues",
+                        spec.size_b
+                    ));
                 }
             }
         }
@@ -550,6 +732,30 @@ impl FromJson for PcieParams {
     }
 }
 
+impl ToJson for FabricConfig {
+    fn to_json(&self) -> Value {
+        Value::obj()
+            .with("kind", self.kind.name())
+            .with("nics_per_node", self.nics_per_node)
+            .with("nic_policy", self.nic_policy.name())
+    }
+}
+
+impl FromJson for FabricConfig {
+    fn from_json(v: &Value) -> anyhow::Result<FabricConfig> {
+        Ok(FabricConfig {
+            kind: FabricKind::parse(v.str_of("kind")?)?,
+            nics_per_node: v.usize_of("nics_per_node")?,
+            // Optional: files written before the policy knob default to
+            // the rail-style affinity the paper systems use.
+            nic_policy: match v.get("nic_policy") {
+                Some(p) => NicPolicy::parse(p.as_str()?)?,
+                None => NicPolicy::LocalRank,
+            },
+        })
+    }
+}
+
 impl ToJson for NicConfig {
     fn to_json(&self) -> Value {
         Value::obj()
@@ -585,6 +791,7 @@ impl ToJson for NodeConfig {
             .with("rc_cpu_bounce", self.rc_cpu_bounce)
             .with("accel_queue_b", self.accel_queue_b)
             .with("switch_queue_b", self.switch_queue_b)
+            .with("fabric", self.fabric.to_json())
             .with("nic", self.nic.to_json())
     }
 }
@@ -597,6 +804,12 @@ impl FromJson for NodeConfig {
             rc_cpu_bounce: v.bool_of("rc_cpu_bounce")?,
             accel_queue_b: v.u64_of("accel_queue_b")?,
             switch_queue_b: v.u64_of("switch_queue_b")?,
+            // Optional: pre-fabric config files get the original
+            // single-NIC switch star.
+            fabric: match v.get("fabric") {
+                Some(f) => FabricConfig::from_json(f)?,
+                None => FabricConfig::switch_star(),
+            },
             nic: NicConfig::from_json(v.req("nic")?)?,
         })
     }
@@ -805,6 +1018,89 @@ mod tests {
         assert!(cfg.validate().is_err());
         cfg.workload = Workload::PingPong { a: 0, b: 0, size_b: 64 }; // a == b
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn fabric_json_roundtrips_all_kinds_and_defaults() {
+        for kind in FabricKind::ALL {
+            for nics in [1usize, 2, 4] {
+                let mut cfg = scaleout(32, 256.0, Pattern::C2, 0.4);
+                cfg.node.fabric = FabricConfig::new(kind, nics);
+                cfg.node.fabric.nic_policy = NicPolicy::RoundRobin;
+                cfg.validate().unwrap_or_else(|e| panic!("{kind:?}/{nics}: {e}"));
+                let back = SimConfig::from_json_str(&cfg.to_json_string()).unwrap();
+                assert_eq!(cfg, back, "{kind:?}/{nics}");
+            }
+            assert_eq!(FabricKind::parse(kind.name()).unwrap(), kind);
+        }
+        // Pre-fabric config files (no field) parse as the original model.
+        let cfg = scaleout(32, 128.0, Pattern::C1, 0.2);
+        let mut v = cfg.to_json();
+        if let Value::Obj(fields) = &mut v {
+            for (k, nv) in fields.iter_mut() {
+                if k == "node" {
+                    if let Value::Obj(nf) = nv {
+                        nf.retain(|(k, _)| k != "fabric");
+                    }
+                }
+            }
+        }
+        let old = SimConfig::from_json(&v).unwrap();
+        assert_eq!(old.node.fabric, FabricConfig::switch_star());
+        assert_eq!(old, cfg, "default fabric must equal the legacy model");
+        assert!(FabricKind::parse("bogus").is_err());
+        assert!(NicPolicy::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn uneven_leaves_rejected_with_actionable_error() {
+        // nodes % leaves != 0 silently corrupted link ids before this
+        // was validated; the error must name the fix.
+        let mut cfg = scaleout(32, 128.0, Pattern::C1, 0.5);
+        cfg.inter.leaves = 7;
+        let err = cfg.validate().unwrap_err();
+        assert!(err.contains("divide evenly") && err.contains("divisors"), "{err}");
+        // leaves > nodes used to panic with divide-by-zero.
+        cfg.inter.leaves = 64;
+        assert!(cfg.validate().is_err());
+        cfg.inter.leaves = 0;
+        assert!(cfg.validate().is_err());
+        cfg.inter.leaves = 32; // one node per leaf is legal
+        assert!(cfg.validate().is_ok());
+    }
+
+    #[test]
+    fn oversized_units_rejected_at_config_time() {
+        // A unit that cannot fit an empty downstream queue would stall
+        // the simulation forever; the config must not build.
+        let mut cfg = scaleout(32, 128.0, Pattern::C1, 0.5);
+        cfg.node.nic.egress_buf_b = cfg.node.nic.mtu_b - 1;
+        let err = cfg.validate().unwrap_err();
+        assert!(err.contains("stall") && err.contains("egress_buf_b"), "{err}");
+
+        let mut cfg = scaleout(32, 128.0, Pattern::C1, 0.5);
+        cfg.inter.port_buf_b = 100;
+        assert!(cfg.validate().unwrap_err().contains("port_buf_b"));
+
+        let mut cfg = scaleout(32, 128.0, Pattern::C1, 0.5);
+        cfg.traffic.msg_size_b = cfg.node.switch_queue_b + 1;
+        assert!(cfg.validate().unwrap_err().contains("stall"));
+
+        let mut cfg = scaleout(32, 128.0, Pattern::C1, 0.5);
+        cfg.node.fabric.nics_per_node = 0;
+        assert!(cfg.validate().is_err());
+
+        // Collective chunks are whole intra units too: 16 MiB over an
+        // 8-rank per-node group is a 2 MiB step against 256 KiB queues.
+        let mut cfg = scaleout(32, 128.0, Pattern::C1, 0.0);
+        cfg.workload = Workload::Collective(CollectiveSpec {
+            op: CollOp::RingAllReduce,
+            scope: CollScope::PerNode,
+            size_b: 16 << 20,
+            iters: 1,
+        });
+        let err = cfg.validate().unwrap_err();
+        assert!(err.contains("queue capacity"), "{err}");
     }
 
     #[test]

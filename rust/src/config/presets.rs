@@ -21,6 +21,7 @@ pub fn cellia() -> SimConfig {
             rc_cpu_bounce: true,
             accel_queue_b: 4 * MIB,
             switch_queue_b: MIB,
+            fabric: FabricConfig::switch_star(),
             nic: NicConfig {
                 inter_gbps: 100.0, // InfiniBand EDR
                 intra_side_gbps: 126.0, // PCIe Gen3 x16 effective
@@ -87,6 +88,7 @@ pub fn scaleout(nodes: usize, aggregated_gbs: f64, pattern: Pattern, load: f64) 
             rc_cpu_bounce: false, // modern intra switch, no RC/CPU bounce
             accel_queue_b: DEFAULT_ACCEL_QUEUE,
             switch_queue_b: DEFAULT_SWITCH_QUEUE,
+            fabric: FabricConfig::switch_star(),
             nic: NicConfig {
                 inter_gbps: 400.0,
                 intra_side_gbps: 400.0,
@@ -138,6 +140,66 @@ pub fn with_paper_windows(mut cfg: SimConfig) -> SimConfig {
     cfg.warmup_us = 2500.0;
     cfg.measure_us = 500.0;
     cfg
+}
+
+/// Swap the intra-node fabric of any preset. `HostTree` clears
+/// `rc_cpu_bounce`: the root-complex bounce is structural there (the
+/// shared HostUp/HostDown bridge links), so the per-hop doubling would
+/// count it twice.
+pub fn with_fabric(mut cfg: SimConfig, fabric: FabricConfig) -> SimConfig {
+    cfg.node.fabric = fabric;
+    if fabric.kind == FabricKind::HostTree {
+        cfg.node.rc_cpu_bounce = false;
+    }
+    cfg
+}
+
+/// Per-fabric paper presets for the hierarchical-AllReduce interference
+/// experiment (the headline sweep's scenario axis): the scale-out node
+/// at `aggregated_gbs` with the given intra fabric and NIC count,
+/// running a global hierarchical AllReduce against all-inter background
+/// traffic at `bg_load`. NIC counts follow the production systems the
+/// follow-up paper studies (Alps/LUMI-style meshes pair 2–4 NICs with
+/// the intra fabric; the PCIe host tree keeps the classic single NIC).
+pub fn fabric_interference(
+    kind: FabricKind,
+    nics_per_node: usize,
+    nodes: usize,
+    aggregated_gbs: f64,
+    size_b: u64,
+    bg_load: f64,
+) -> SimConfig {
+    let spec = CollectiveSpec {
+        op: CollOp::HierarchicalAllReduce,
+        scope: CollScope::Global,
+        size_b,
+        iters: 2,
+    };
+    let cfg = collective_scaleout(
+        nodes,
+        aggregated_gbs,
+        spec,
+        Pattern::Custom { frac_inter: 1.0 },
+        bg_load,
+    );
+    with_fabric(cfg, FabricConfig::new(kind, nics_per_node))
+}
+
+/// The four-fabric preset family at the paper's default knobs: one
+/// interference configuration per [`FabricKind`], with the NIC count
+/// each fabric's reference system pairs it with.
+pub fn fabric_family(nodes: usize, aggregated_gbs: f64, bg_load: f64) -> Vec<SimConfig> {
+    [
+        (FabricKind::SwitchStar, 1usize),
+        (FabricKind::Mesh, 4),
+        (FabricKind::Ring, 2),
+        (FabricKind::HostTree, 1),
+    ]
+    .into_iter()
+    .map(|(kind, nics)| {
+        fabric_interference(kind, nics, nodes, aggregated_gbs, 256 * 1024, bg_load)
+    })
+    .collect()
 }
 
 #[cfg(test)]
@@ -202,6 +264,24 @@ mod tests {
             cfg.validate().unwrap_or_else(|e| panic!("{op:?}: {e}"));
             assert!(matches!(cfg.workload, Workload::Collective(s) if s.op == op));
         }
+    }
+
+    #[test]
+    fn fabric_presets_validate_for_every_kind() {
+        let family = fabric_family(32, 256.0, 0.2);
+        assert_eq!(family.len(), 4);
+        let kinds: Vec<FabricKind> = family.iter().map(|c| c.node.fabric.kind).collect();
+        assert_eq!(kinds, FabricKind::ALL.to_vec());
+        for cfg in &family {
+            cfg.validate().unwrap_or_else(|e| panic!("{:?}: {e}", cfg.node.fabric));
+            match cfg.workload {
+                Workload::Collective(s) => assert_eq!(s.op, CollOp::HierarchicalAllReduce),
+                other => panic!("fabric preset lost its workload: {other:?}"),
+            }
+        }
+        // HostTree presets must not double-count the RC bounce.
+        assert!(!family[3].node.rc_cpu_bounce);
+        assert_eq!(family[1].node.fabric.nics_per_node, 4);
     }
 
     #[test]

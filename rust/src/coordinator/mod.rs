@@ -19,7 +19,7 @@ pub mod results;
 
 use std::sync::Arc;
 
-use crate::config::{presets, Pattern, SimConfig};
+use crate::config::{presets, FabricConfig, Pattern, SimConfig};
 use crate::net::world::{BenchMode, SerProvider, Sim, SimReport};
 use crate::runtime::CachedProvider;
 
@@ -32,6 +32,9 @@ pub struct SweepSpec {
     pub patterns: Vec<Pattern>,
     /// Offered loads as link-capacity fractions (paper: 20 points).
     pub loads: Vec<f64>,
+    /// Intra-node fabric + NIC count the sweep runs on (the scenario
+    /// axis: the same load sweep is re-runnable per fabric).
+    pub fabric: FabricConfig,
     /// Use the paper's full 2.5 ms + 0.5 ms windows.
     pub paper_windows: bool,
     /// Worker threads (defaults to available parallelism).
@@ -47,6 +50,7 @@ impl SweepSpec {
             intra_gbs: vec![128.0, 256.0, 512.0],
             patterns: Pattern::PAPER.to_vec(),
             loads: Self::paper_loads(),
+            fabric: FabricConfig::switch_star(),
             paper_windows: false,
             workers: default_workers(),
             seed: 0x5CA1E,
@@ -65,6 +69,7 @@ impl SweepSpec {
             intra_gbs: vec![128.0, 512.0],
             patterns: vec![Pattern::C1, Pattern::C3, Pattern::C5],
             loads: vec![0.2, 0.5, 0.8, 1.0],
+            fabric: FabricConfig::switch_star(),
             paper_windows: false,
             workers: default_workers(),
             seed: 0x5CA1E,
@@ -77,7 +82,10 @@ impl SweepSpec {
         for &gbs in &self.intra_gbs {
             for &p in &self.patterns {
                 for &load in &self.loads {
-                    let mut cfg = presets::scaleout(self.nodes, gbs, p, load);
+                    let mut cfg = presets::with_fabric(
+                        presets::scaleout(self.nodes, gbs, p, load),
+                        self.fabric,
+                    );
                     cfg.seed = self.seed ^ (out.len() as u64).wrapping_mul(0x9E3779B97F4A7C15);
                     if self.paper_windows {
                         cfg = presets::with_paper_windows(cfg);
@@ -137,7 +145,7 @@ pub fn run_sweep(
         .map(|cfg| {
             let provider = provider.clone();
             move || -> anyhow::Result<SimReport> {
-                Ok(Sim::new(cfg, provider.as_ref(), BenchMode::None)?.run())
+                Sim::new(cfg, provider.as_ref(), BenchMode::None)?.try_run()
             }
         })
         .collect();
@@ -155,6 +163,7 @@ mod tests {
             intra_gbs: vec![128.0],
             patterns: vec![Pattern::C3, Pattern::C5],
             loads: vec![0.1],
+            fabric: FabricConfig::switch_star(),
             paper_windows: false,
             workers: 2,
             seed: 7,
@@ -201,6 +210,24 @@ mod tests {
         let link = crate::analytic::PcieParams::generic_accel_link(128.0);
         let _ = p.pcie_latency_ns(&link, &[4096, 4036, 60]);
         assert_eq!(p.miss_count(), 0);
+    }
+
+    #[test]
+    fn sweep_runs_on_every_fabric() {
+        use crate::config::{FabricConfig, FabricKind};
+        for kind in FabricKind::ALL {
+            let mut spec = tiny_spec();
+            spec.fabric = FabricConfig::new(kind, 2);
+            let provider = Arc::new(snapshot_provider(&spec, &NativeProvider));
+            let reports =
+                run_sweep(&spec, provider, None).unwrap_or_else(|e| panic!("{kind:?}: {e:#}"));
+            assert_eq!(reports.len(), 2);
+            for r in &reports {
+                assert_eq!(r.fabric, kind.name(), "{kind:?}");
+                assert_eq!(r.nics, 2);
+                assert!(r.delivered_msgs > 0, "{kind:?}");
+            }
+        }
     }
 
     #[test]

@@ -67,6 +67,13 @@ where
             Err(e) => {
                 if first_err.is_none() {
                     first_err = Some(e.context(format!("job {idx} failed")));
+                    // Fail fast: drop every not-yet-started job so a
+                    // large sweep aborts on the first failed point
+                    // instead of burning through the whole batch.
+                    // (Documented contract: "any job error aborts the
+                    // whole batch" — before this, workers kept draining
+                    // the queue after the first error.)
+                    queue.lock().expect("queue poisoned").clear();
                 }
             }
         }
@@ -130,6 +137,35 @@ mod tests {
         let jobs: Vec<_> = (0..10u64).map(|i| move || Ok(i)).collect();
         run_ordered(jobs, 3, Some(cb)).unwrap();
         assert_eq!(hits.load(Ordering::SeqCst), 10);
+    }
+
+    #[test]
+    fn first_error_cancels_queued_jobs() {
+        // Job 0 fails immediately; with one worker and a long queue, the
+        // leader must clear the shared queue on the first error so the
+        // late jobs never execute at all.
+        let executed = Arc::new(AtomicUsize::new(0));
+        let jobs: Vec<_> = (0..64u64)
+            .map(|i| {
+                let executed = executed.clone();
+                move || -> anyhow::Result<u64> {
+                    executed.fetch_add(1, Ordering::SeqCst);
+                    // Give the leader time to observe the error and
+                    // clear the queue before the worker pops again.
+                    std::thread::sleep(std::time::Duration::from_millis(2));
+                    if i == 0 {
+                        anyhow::bail!("boom at job 0");
+                    }
+                    Ok(i)
+                }
+            })
+            .collect();
+        let err = run_ordered(jobs, 1, None).unwrap_err();
+        assert!(format!("{err:#}").contains("boom"), "{err:#}");
+        let ran = executed.load(Ordering::SeqCst);
+        // The worker may race one or two pops past the failure, but the
+        // bulk of the batch must be skipped.
+        assert!(ran < 8, "fail-fast should skip late jobs, ran {ran}/64");
     }
 
     #[test]

@@ -7,7 +7,7 @@ use crate::net::world::SimReport;
 use crate::serial::json::{FromJson, ToJson, Value};
 
 /// CSV columns written for every sweep point.
-pub const CSV_HEADER: &str = "pattern,load,nodes,accels,intra_gbs_cfg,offered_gbs,\
+pub const CSV_HEADER: &str = "pattern,load,nodes,accels,fabric,nics,intra_gbs_cfg,offered_gbs,\
 intra_tput_gbs,intra_drain_gbs,intra_lat_mean_ns,intra_lat_p99_ns,intra_lat_max_ns,\
 inter_tput_gbs,inter_drain_gbs,fct_mean_ns,fct_p99_ns,fct_max_ns,\
 intra_wire_gbs,inter_wire_gbs,drop_frac,delivered_msgs,events,wall_ms,\
@@ -15,11 +15,13 @@ coll_op,coll_size_b,coll_iters,coll_mean_ns,coll_p99_ns,coll_pred_ns";
 
 pub fn csv_row(r: &SimReport) -> String {
     format!(
-        "{},{:.4},{},{},{:.1},{:.3},{:.3},{:.3},{:.1},{:.1},{:.1},{:.3},{:.3},{:.1},{:.1},{:.1},{:.3},{:.3},{:.4},{},{},{:.1},{},{},{},{:.1},{:.1},{:.1}",
+        "{},{:.4},{},{},{},{},{:.1},{:.3},{:.3},{:.3},{:.1},{:.1},{:.1},{:.3},{:.3},{:.1},{:.1},{:.1},{:.3},{:.3},{:.4},{},{},{:.1},{},{},{},{:.1},{:.1},{:.1}",
         r.pattern,
         r.load,
         r.nodes,
         r.accels,
+        r.fabric,
+        r.nics,
         r.aggregated_intra_gbs,
         r.offered_gbs,
         r.intra_tput_gbs,

@@ -36,5 +36,7 @@ pub mod testkit;
 pub mod traffic;
 pub mod units;
 
-pub use config::{CollOp, CollScope, CollectiveSpec, SimConfig, Workload};
+pub use config::{
+    CollOp, CollScope, CollectiveSpec, FabricConfig, FabricKind, NicPolicy, SimConfig, Workload,
+};
 pub use net::world::{BenchMode, NativeProvider, Sim, SimReport};

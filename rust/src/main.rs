@@ -14,7 +14,10 @@ use std::sync::Arc;
 
 use sauron::analytic::{CollParams, PcieParams};
 use sauron::cli::Args;
-use sauron::config::{presets, CollOp, CollScope, CollectiveSpec, Pattern, SimConfig};
+use sauron::config::{
+    presets, CollOp, CollScope, CollectiveSpec, FabricConfig, FabricKind, NicPolicy, Pattern,
+    SimConfig,
+};
 use sauron::coordinator::{self, results, SweepSpec};
 use sauron::net::world::{BenchMode, NativeProvider, SerProvider, Sim};
 use sauron::report::{figures, tables};
@@ -33,18 +36,24 @@ COMMANDS
   validate   [--table 1|2] [--sizes a,b,...] [--out DIR]
              Reproduce Tables 1/2 + Fig 4 (ib_write vs paper's cluster).
   sweep      [--nodes N] [--intra 128,256,512] [--patterns C1,...,C5]
-             [--loads 20] [--paper-windows] [--quick] [--out DIR]
-             Reproduce Figures 5-8 (scale-out load sweeps).
+             [--loads 20] [--fabric star|mesh|ring|host_tree] [--nics K]
+             [--nic-policy local_rank|round_robin] [--paper-windows]
+             [--quick] [--out DIR]
+             Reproduce Figures 5-8 (scale-out load sweeps) on any
+             intra-node fabric x NIC count.
   run        <config.json> [--json]
              One simulation from a JSON config file.
   collective [--op ring_allreduce|reduce_scatter|allgather|all_to_all|hier_allreduce]
              [--scope global|per_node] [--nodes N] [--intra 128,256,512]
+             [--fabric star|mesh|ring|host_tree] [--nics K]
+             [--nic-policy local_rank|round_robin]
              [--size BYTES] [--iters K] [--bg-load F] [--bg-pattern C1|..|0.3]
              [--json]
              Closed-loop collective completion time vs the analytic
              oracle, optionally against open-loop background traffic
              (the paper's NIC-boundary interference scenario).
-  topo       [--nodes N]       Describe the RLFT fat-tree.
+  topo       [--nodes N] [--fabric F] [--nics K]
+             Describe the RLFT fat-tree + intra fabric.
   traffic-model [--layers L] [--hidden H] [--seq S] [--vocab V]
              [--tp T] [--pp P] [--dp D] [--microbatches M]
              Evaluate the L2 LLM communication-volume model.
@@ -90,6 +99,24 @@ fn backend(args: &Args) -> Backend {
             Backend::Native
         }
     }
+}
+
+/// Shared `--fabric` / `--nics` / `--nic-policy` flags.
+fn parse_fabric(args: &Args) -> anyhow::Result<FabricConfig> {
+    let kind = match args.opt("fabric") {
+        Some(s) => FabricKind::parse(&s.to_ascii_lowercase())?,
+        None => FabricKind::SwitchStar,
+    };
+    let mut fab = FabricConfig::new(kind, args.get_or("nics", 1usize)?);
+    anyhow::ensure!(
+        (1..=256).contains(&fab.nics_per_node),
+        "--nics {} out of range (1..=256)",
+        fab.nics_per_node
+    );
+    if let Some(p) = args.opt("nic-policy") {
+        fab.nic_policy = NicPolicy::parse(&p.to_ascii_lowercase())?;
+    }
+    Ok(fab)
 }
 
 fn parse_pattern(s: &str) -> anyhow::Result<Pattern> {
@@ -172,8 +199,11 @@ fn main() -> anyhow::Result<()> {
 
         "sweep" => {
             let nodes = args.get_or("nodes", 32usize)?;
+            let fabric = parse_fabric(&args)?;
             let spec = if args.flag("quick") {
-                SweepSpec::quick(nodes)
+                let mut spec = SweepSpec::quick(nodes);
+                spec.fabric = fabric;
+                spec
             } else {
                 let intra = {
                     let v = args.list::<f64>("intra")?;
@@ -197,6 +227,7 @@ fn main() -> anyhow::Result<()> {
                     intra_gbs: intra,
                     patterns,
                     loads: (1..=n_loads).map(|i| i as f64 / n_loads as f64).collect(),
+                    fabric,
                     paper_windows: args.flag("paper-windows"),
                     workers: args.get_or("workers", coordinator::default_workers())?,
                     seed: args.get_or("seed", 0x5CA1Eu64)?,
@@ -204,7 +235,13 @@ fn main() -> anyhow::Result<()> {
             };
             let out = PathBuf::from(args.opt("out").unwrap_or("results"));
             args.reject_unknown()?;
-            eprintln!("sweep: {} points ({} nodes)", spec.points(), spec.nodes);
+            eprintln!(
+                "sweep: {} points ({} nodes, {} fabric, {} NIC/node)",
+                spec.points(),
+                spec.nodes,
+                spec.fabric.kind.name(),
+                spec.fabric.nics_per_node
+            );
             let provider = Arc::new(coordinator::snapshot_provider(&spec, be.provider()));
             let t0 = std::time::Instant::now();
             let reports = coordinator::run_sweep(
@@ -223,7 +260,15 @@ fn main() -> anyhow::Result<()> {
                 })),
             )?;
             eprintln!("sweep done in {:.1}s", t0.elapsed().as_secs_f64());
-            let tag = format!("{nodes}n");
+            let tag = if spec.fabric == FabricConfig::switch_star() {
+                format!("{nodes}n")
+            } else {
+                format!(
+                    "{nodes}n_{}_{}nic",
+                    spec.fabric.kind.name(),
+                    spec.fabric.nics_per_node
+                )
+            };
             results::write_csv(&out.join(format!("sweep_{tag}.csv")), &reports)?;
             results::write_json(&out.join(format!("sweep_{tag}.json")), &reports)?;
             for kind in [
@@ -247,7 +292,7 @@ fn main() -> anyhow::Result<()> {
             let json = args.flag("json");
             args.reject_unknown()?;
             let cfg = SimConfig::load(std::path::Path::new(&path))?;
-            let report = Sim::new(cfg, be.provider(), BenchMode::None)?.run();
+            let report = Sim::new(cfg, be.provider(), BenchMode::None)?.try_run()?;
             if json {
                 println!("{}", report.to_json().pretty());
             } else {
@@ -286,12 +331,16 @@ fn main() -> anyhow::Result<()> {
             let iters = args.get_or("iters", 4u32)?;
             let bg_load = args.get_or("bg-load", 0.0f64)?;
             let bg_pattern = parse_pattern(args.opt("bg-pattern").unwrap_or("C1"))?;
+            let fabric = parse_fabric(&args)?;
             let json = args.flag("json");
             args.reject_unknown()?;
             let spec = CollectiveSpec { op, scope, size_b, iters };
             for &gbs in &intra {
-                let cfg = presets::collective_scaleout(nodes, gbs, spec, bg_pattern, bg_load);
-                let report = Sim::new(cfg, be.provider(), BenchMode::None)?.run();
+                let cfg = presets::with_fabric(
+                    presets::collective_scaleout(nodes, gbs, spec, bg_pattern, bg_load),
+                    fabric,
+                );
+                let report = Sim::new(cfg, be.provider(), BenchMode::None)?.try_run()?;
                 if json {
                     println!("{}", report.to_json().pretty());
                 } else {
@@ -303,12 +352,15 @@ fn main() -> anyhow::Result<()> {
                         0.0
                     };
                     println!(
-                        "{} {} B x{} iters @ {:.0} GB/s intra, bg {} load {:.2}: \
+                        "{} {} B x{} iters @ {:.0} GB/s intra [{} fabric, {} NIC], \
+                         bg {} load {:.2}: \
                          mean {:.1} us (p99 {:.1} us) | analytic {:.1} us ({:+.1}%)",
                         report.coll_op,
                         report.coll_size_b,
                         report.coll_iters,
                         gbs,
+                        report.fabric,
+                        report.nics,
                         report.pattern,
                         bg_load,
                         mean_us,
@@ -322,15 +374,23 @@ fn main() -> anyhow::Result<()> {
 
         "topo" => {
             let nodes = args.get_or("nodes", 32usize)?;
+            let fabric = parse_fabric(&args)?;
             args.reject_unknown()?;
             let (leaves, spines) = presets::rlft_dims(nodes);
-            let cfg = presets::scaleout(nodes, 128.0, Pattern::C1, 0.5);
+            let cfg =
+                presets::with_fabric(presets::scaleout(nodes, 128.0, Pattern::C1, 0.5), fabric);
             let topo = sauron::net::Topology::new(&cfg);
             println!("RLFT for {nodes} nodes (paper Table 3):");
             println!("  leaves: {leaves} ({} nodes each)", nodes / leaves);
             println!("  spines: {spines}");
             println!("  switches: {}", leaves + spines);
             println!("  accelerators: {}", topo.total_accels());
+            println!(
+                "  intra fabric: {} ({} NIC/node, {} policy)",
+                fabric.kind.name(),
+                fabric.nics_per_node,
+                fabric.nic_policy.name()
+            );
             println!("  unidirectional links: {}", topo.total_links());
             println!("  routing: D-mod-K (spine = dst_node % {spines})");
         }

@@ -76,6 +76,12 @@ pub struct Link {
     pub waiters: Vec<Waker>,
     /// This link is registered as a waiter somewhere (dedup flag).
     pub parked: bool,
+    /// The link whose queue this link is parked on (`u32::MAX` when not
+    /// parked). Edges of the wait-for graph: a cycle of parked links is
+    /// a credit deadlock — possible on the Ring fabric, whose hops form
+    /// a physical cycle with no virtual channels — and is detected at
+    /// park time (`world::World::closes_wait_cycle`).
+    pub waiting_on: u32,
     /// Delivered wire bytes (for utilization accounting).
     pub tx_bytes: u64,
     /// Precomputed completion times of the in-flight coalesced delivery
@@ -105,6 +111,7 @@ impl Link {
             busy: false,
             waiters: Vec::new(),
             parked: false,
+            waiting_on: u32::MAX,
             tx_bytes: 0,
             train_ends: VecDeque::new(),
             train_active: false,

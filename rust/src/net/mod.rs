@@ -2,7 +2,9 @@
 //!
 //! * [`link`] — unidirectional link servers with finite queues and
 //!   credit-style backpressure (the paper's flow-control substrate).
-//! * [`topo`] — dense link-id space, RLFT fat-tree wiring, D-mod-K routing.
+//! * [`topo`] — fabric-computed dense link-id space (pluggable intra
+//!   fabrics: switch star, NVLink-style mesh, ring, PCIe host tree, with
+//!   `nics_per_node >= 1`), RLFT fat-tree wiring, D-mod-K routing.
 //! * [`world`] — the discrete-event model tying it together: open-loop
 //!   traffic generators at accelerators, message segmentation into
 //!   intra-node transactions, NIC packetisation to/from the inter network,

@@ -1,38 +1,66 @@
 //! Link-graph construction and routing for the combined intra+inter model.
 //!
-//! Layout of the dense link-id space for `N` nodes with `A` accelerators
-//! each, `L` leaves and `S` spines:
+//! The intra-node fabric is pluggable ([`FabricKind`]): every fabric
+//! defines its own per-node link set, intra routing and NIC attachment
+//! points, and the dense link-id space is computed from the fabric. For
+//! `N` nodes with `A` accelerators each, `K` NICs per node, `L` leaves
+//! and `S` spines, each node owns a contiguous block of
+//! `intra_stride + 4K` ids (base `n * node_stride`):
 //!
 //! ```text
-//! per node n (stride 2A+4, base n*(2A+4)):
-//!   +a        accel_up[a]   accelerator a -> intra switch
-//!   +A+a      accel_down[a] intra switch -> accelerator a
-//!   +2A       sw_to_nic     intra switch -> NIC (egress staging)
-//!   +2A+1     nic_to_sw     NIC -> intra switch (ingress staging)
-//!   +2A+2     nic_up        NIC -> leaf switch (inter link)
-//!   +2A+3     nic_down      leaf switch -> NIC
-//! then (base N*(2A+4)):
-//!   +l*S+s    leaf_up[l][s]    leaf l -> spine s
+//! SwitchStar  (intra_stride = 2A):
+//!   +a        accel_up[a]    accelerator a -> intra switch
+//!   +A+a      accel_down[a]  intra switch -> accelerator a
+//! Mesh        (intra_stride = A(A-1)):
+//!   +i(A-1)+e lane[i][j]     direct accel i -> accel j (e = j<i ? j : j-1)
+//! Ring        (intra_stride = A, or 0 when A == 1):
+//!   +i        ring_hop[i]    accel i -> accel (i+1) mod A
+//! HostTree    (intra_stride = 2A+2):
+//!   +a        accel_up[a]    accelerator a -> root complex
+//!   +A+a      accel_down[a]  root complex -> accelerator a
+//!   +2A       host_up        shared bridge toward the RC root
+//!   +2A+1     host_down      shared bridge from the RC root
+//! then, for every fabric, per NIC k (base +intra_stride + 4k):
+//!   +0        sw_to_nic[k]   fabric -> NIC k (egress staging)
+//!   +1        nic_to_sw[k]   NIC k -> fabric (ingress staging)
+//!   +2        nic_up[k]      NIC k -> leaf switch (inter link)
+//!   +3        nic_down[k]    leaf switch -> NIC k
+//! then (base N*node_stride):
+//!   +l*S+s     leaf_up[l][s]    leaf l -> spine s
 //!   +L*S+s*L+l spine_down[s][l] spine s -> leaf l
 //! ```
 //!
-//! Routing is the paper's deterministic **D-mod-K** on the 2-level RLFT:
-//! the up-path spine for a packet to destination node `d` is `d % S`, which
-//! spreads destinations evenly over spines and keeps each destination's
-//! down-path unique (Zahavi's contention-free ordering for uniform
-//! traffic).
+//! `SwitchStar` with `K = 1` reproduces the original fixed layout id for
+//! id (stride `2A + 4`), so pre-fabric configurations are bit-for-bit
+//! unchanged.
+//!
+//! Inter-node routing is the paper's deterministic **D-mod-K** on the
+//! 2-level RLFT: the up-path spine for a packet to destination node `d`
+//! is `d % S`, which spreads destinations evenly over spines and keeps
+//! each destination's down-path unique (Zahavi's contention-free
+//! ordering for uniform traffic). NIC k of every node attaches to the
+//! node's leaf (rail-aligned: same-index NICs talk through the same
+//! leaf ports).
 
-use crate::config::SimConfig;
+use crate::config::{FabricKind, NicPolicy, SimConfig};
 
 /// What a link is, with its owning node / leaf / spine index.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Kind {
     AccelUp { node: u32, accel: u32 },
     AccelDown { node: u32, accel: u32 },
-    SwToNic { node: u32 },
-    NicToSw { node: u32 },
-    NicUp { node: u32 },
-    NicDown { node: u32 },
+    /// Direct mesh lane accel `from` -> accel `to` (Mesh fabric).
+    MeshLane { node: u32, from: u32, to: u32 },
+    /// Ring hop accel `from` -> accel `(from+1) % A` (Ring fabric).
+    RingHop { node: u32, from: u32 },
+    /// Shared root-complex bridge toward the root (HostTree fabric).
+    HostUp { node: u32 },
+    /// Shared root-complex bridge from the root (HostTree fabric).
+    HostDown { node: u32 },
+    SwToNic { node: u32, nic: u32 },
+    NicToSw { node: u32, nic: u32 },
+    NicUp { node: u32, nic: u32 },
+    NicDown { node: u32, nic: u32 },
     LeafUp { leaf: u32, spine: u32 },
     SpineDown { spine: u32, leaf: u32 },
 }
@@ -44,22 +72,60 @@ pub struct Topology {
     pub accels_per_node: u32,
     pub leaves: u32,
     pub spines: u32,
+    pub fabric: FabricKind,
+    pub nics_per_node: u32,
+    pub nic_policy: NicPolicy,
+    /// Nodes attached to each leaf switch (validated divisible).
+    nodes_per_leaf: u32,
+    /// Fabric-internal links per node, before the NIC block.
+    intra_stride: u32,
     node_stride: u32,
     inter_base: u32,
 }
 
 impl Topology {
+    /// Build the index helper. The configuration must already be
+    /// validated ([`SimConfig::validate`]); the divisibility assertions
+    /// here guard direct callers that skip it — the old truncated
+    /// `node / (nodes / leaves)` mapping silently aliased link ids when
+    /// `nodes % leaves != 0` and divided by zero when `leaves > nodes`.
     pub fn new(cfg: &SimConfig) -> Topology {
         let nodes = cfg.inter.nodes as u32;
         let a = cfg.node.accels_per_node as u32;
-        let stride = 2 * a + 4;
+        let leaves = cfg.inter.leaves as u32;
+        let fab = &cfg.node.fabric;
+        let nics = fab.nics_per_node as u32;
+        assert!(
+            leaves > 0 && nodes % leaves == 0,
+            "nodes ({nodes}) must divide evenly across leaves ({leaves}); \
+             run SimConfig::validate before building a Topology"
+        );
+        assert!(nics >= 1, "nics_per_node must be >= 1");
+        let intra_stride = match fab.kind {
+            FabricKind::SwitchStar => 2 * a,
+            FabricKind::Mesh => a * a.saturating_sub(1),
+            FabricKind::Ring => {
+                if a >= 2 {
+                    a
+                } else {
+                    0
+                }
+            }
+            FabricKind::HostTree => 2 * a + 2,
+        };
+        let node_stride = intra_stride + 4 * nics;
         Topology {
             nodes,
             accels_per_node: a,
-            leaves: cfg.inter.leaves as u32,
+            leaves,
             spines: cfg.inter.spines as u32,
-            node_stride: stride,
-            inter_base: nodes * stride,
+            fabric: fab.kind,
+            nics_per_node: nics,
+            nic_policy: fab.nic_policy,
+            nodes_per_leaf: nodes / leaves,
+            intra_stride,
+            node_stride,
+            inter_base: nodes * node_stride,
         }
     }
 
@@ -81,33 +147,96 @@ impl Topology {
     }
     #[inline]
     pub fn node_leaf(&self, node: u32) -> u32 {
-        node / (self.nodes / self.leaves)
+        node / self.nodes_per_leaf
+    }
+    /// The accelerator NIC `nic` attaches next to (Mesh/Ring fabrics).
+    #[inline]
+    pub fn nic_host(&self, nic: u32) -> u32 {
+        nic % self.accels_per_node
+    }
+
+    /// Egress NIC for a message from `src` to (remote) `dst`, per the
+    /// configured [`NicPolicy`]. Deterministic and stateless so every
+    /// hop of a unit's path resolves the same NIC.
+    #[inline]
+    pub fn egress_nic(&self, src: u32, dst: u32) -> u32 {
+        match self.nic_policy {
+            NicPolicy::LocalRank => self.accel_local(src) % self.nics_per_node,
+            NicPolicy::RoundRobin => {
+                (self.accel_local(src) + self.accel_node(dst)) % self.nics_per_node
+            }
+        }
+    }
+
+    /// Ingress NIC on the destination node (rail-style: keyed off the
+    /// destination's local rank so same-local-rank peers share a rail).
+    #[inline]
+    pub fn ingress_nic(&self, src: u32, dst: u32) -> u32 {
+        match self.nic_policy {
+            NicPolicy::LocalRank => self.accel_local(dst) % self.nics_per_node,
+            NicPolicy::RoundRobin => {
+                (self.accel_local(dst) + self.accel_node(src)) % self.nics_per_node
+            }
+        }
     }
 
     // -- link-id constructors ----------------------------------------------
     #[inline]
-    pub fn accel_up(&self, node: u32, a: u32) -> u32 {
-        node * self.node_stride + a
+    fn node_base(&self, node: u32) -> u32 {
+        node * self.node_stride
     }
+    /// (SwitchStar / HostTree)
+    #[inline]
+    pub fn accel_up(&self, node: u32, a: u32) -> u32 {
+        debug_assert!(matches!(self.fabric, FabricKind::SwitchStar | FabricKind::HostTree));
+        self.node_base(node) + a
+    }
+    /// (SwitchStar / HostTree)
     #[inline]
     pub fn accel_down(&self, node: u32, a: u32) -> u32 {
-        node * self.node_stride + self.accels_per_node + a
+        debug_assert!(matches!(self.fabric, FabricKind::SwitchStar | FabricKind::HostTree));
+        self.node_base(node) + self.accels_per_node + a
+    }
+    /// (Mesh) direct lane accel `i` -> accel `j`, `i != j`.
+    #[inline]
+    pub fn mesh_lane(&self, node: u32, i: u32, j: u32) -> u32 {
+        debug_assert!(self.fabric == FabricKind::Mesh && i != j);
+        let e = if j < i { j } else { j - 1 };
+        self.node_base(node) + i * (self.accels_per_node - 1) + e
+    }
+    /// (Ring) hop accel `i` -> accel `(i+1) % A`.
+    #[inline]
+    pub fn ring_hop(&self, node: u32, i: u32) -> u32 {
+        debug_assert!(self.fabric == FabricKind::Ring && self.accels_per_node >= 2);
+        self.node_base(node) + i
+    }
+    /// (HostTree) shared bridge toward the root.
+    #[inline]
+    pub fn host_up(&self, node: u32) -> u32 {
+        debug_assert!(self.fabric == FabricKind::HostTree);
+        self.node_base(node) + 2 * self.accels_per_node
+    }
+    /// (HostTree) shared bridge from the root.
+    #[inline]
+    pub fn host_down(&self, node: u32) -> u32 {
+        debug_assert!(self.fabric == FabricKind::HostTree);
+        self.node_base(node) + 2 * self.accels_per_node + 1
     }
     #[inline]
-    pub fn sw_to_nic(&self, node: u32) -> u32 {
-        node * self.node_stride + 2 * self.accels_per_node
+    pub fn sw_to_nic(&self, node: u32, nic: u32) -> u32 {
+        self.node_base(node) + self.intra_stride + 4 * nic
     }
     #[inline]
-    pub fn nic_to_sw(&self, node: u32) -> u32 {
-        node * self.node_stride + 2 * self.accels_per_node + 1
+    pub fn nic_to_sw(&self, node: u32, nic: u32) -> u32 {
+        self.node_base(node) + self.intra_stride + 4 * nic + 1
     }
     #[inline]
-    pub fn nic_up(&self, node: u32) -> u32 {
-        node * self.node_stride + 2 * self.accels_per_node + 2
+    pub fn nic_up(&self, node: u32, nic: u32) -> u32 {
+        self.node_base(node) + self.intra_stride + 4 * nic + 2
     }
     #[inline]
-    pub fn nic_down(&self, node: u32) -> u32 {
-        node * self.node_stride + 2 * self.accels_per_node + 3
+    pub fn nic_down(&self, node: u32, nic: u32) -> u32 {
+        self.node_base(node) + self.intra_stride + 4 * nic + 3
     }
     #[inline]
     pub fn leaf_up(&self, leaf: u32, spine: u32) -> u32 {
@@ -124,18 +253,42 @@ impl Topology {
         if link < self.inter_base {
             let node = link / self.node_stride;
             let off = link % self.node_stride;
-            if off < a {
-                Kind::AccelUp { node, accel: off }
-            } else if off < 2 * a {
-                Kind::AccelDown { node, accel: off - a }
-            } else if off == 2 * a {
-                Kind::SwToNic { node }
-            } else if off == 2 * a + 1 {
-                Kind::NicToSw { node }
-            } else if off == 2 * a + 2 {
-                Kind::NicUp { node }
-            } else {
-                Kind::NicDown { node }
+            if off < self.intra_stride {
+                return match self.fabric {
+                    FabricKind::SwitchStar => {
+                        if off < a {
+                            Kind::AccelUp { node, accel: off }
+                        } else {
+                            Kind::AccelDown { node, accel: off - a }
+                        }
+                    }
+                    FabricKind::Mesh => {
+                        let from = off / (a - 1);
+                        let e = off % (a - 1);
+                        let to = if e < from { e } else { e + 1 };
+                        Kind::MeshLane { node, from, to }
+                    }
+                    FabricKind::Ring => Kind::RingHop { node, from: off },
+                    FabricKind::HostTree => {
+                        if off < a {
+                            Kind::AccelUp { node, accel: off }
+                        } else if off < 2 * a {
+                            Kind::AccelDown { node, accel: off - a }
+                        } else if off == 2 * a {
+                            Kind::HostUp { node }
+                        } else {
+                            Kind::HostDown { node }
+                        }
+                    }
+                };
+            }
+            let rel = off - self.intra_stride;
+            let nic = rel / 4;
+            match rel % 4 {
+                0 => Kind::SwToNic { node, nic },
+                1 => Kind::NicToSw { node, nic },
+                2 => Kind::NicUp { node, nic },
+                _ => Kind::NicDown { node, nic },
             }
         } else {
             let rel = link - self.inter_base;
@@ -154,71 +307,223 @@ impl Topology {
         dst_node % self.spines
     }
 
-    /// Next link on a unit's path after finishing `link`, given the unit's
-    /// destination accelerator. `None` means the unit is delivered.
-    ///
-    /// Full inter path: accel_up → sw_to_nic → nic_up → [leaf_up →
-    /// spine_down]? → nic_down → nic_to_sw → accel_down → deliver.
-    /// Intra path: accel_up → accel_down → deliver.
+    /// First link a unit from `src` to `dst` enters (the source's egress
+    /// queue). Fabric-dependent: on Mesh/Ring the first link already
+    /// depends on the destination (direct lane, ring hop, or the NIC
+    /// staging queue when the source hosts the egress NIC).
     #[inline]
-    pub fn next_hop(&self, kind: Kind, dst_accel: u32) -> Option<u32> {
+    pub fn egress_link(&self, src: u32, dst: u32) -> u32 {
+        let node = self.accel_node(src);
+        let local = self.accel_local(src);
+        match self.fabric {
+            FabricKind::SwitchStar | FabricKind::HostTree => self.accel_up(node, local),
+            FabricKind::Mesh => {
+                let target = if self.accel_node(dst) == node {
+                    self.accel_local(dst)
+                } else {
+                    let nic = self.egress_nic(src, dst);
+                    let host = self.nic_host(nic);
+                    if host == local {
+                        return self.sw_to_nic(node, nic);
+                    }
+                    host
+                };
+                self.mesh_lane(node, local, target)
+            }
+            FabricKind::Ring => {
+                if self.accel_node(dst) != node {
+                    let nic = self.egress_nic(src, dst);
+                    if self.nic_host(nic) == local {
+                        return self.sw_to_nic(node, nic);
+                    }
+                }
+                self.ring_hop(node, local)
+            }
+        }
+    }
+
+    /// Next link on a unit's path after finishing `link`, given the
+    /// unit's source and destination accelerators. `None` means the unit
+    /// is delivered.
+    ///
+    /// SwitchStar inter path: accel_up → sw_to_nic → nic_up → [leaf_up →
+    /// spine_down]? → nic_down → nic_to_sw → accel_down → deliver;
+    /// intra: accel_up → accel_down. The other fabrics substitute their
+    /// own intra legs (mesh lanes, ring hops, host-bridge links) on both
+    /// sides of the identical inter core.
+    #[inline]
+    pub fn next_hop(&self, kind: Kind, src: u32, dst_accel: u32) -> Option<u32> {
         let dst_node = self.accel_node(dst_accel);
         let dst_local = self.accel_local(dst_accel);
         match kind {
-            Kind::AccelUp { node, .. } => {
+            Kind::AccelUp { node, .. } => match self.fabric {
+                FabricKind::HostTree => Some(self.host_up(node)),
+                _ => {
+                    if dst_node == node {
+                        Some(self.accel_down(node, dst_local))
+                    } else {
+                        Some(self.sw_to_nic(node, self.egress_nic(src, dst_accel)))
+                    }
+                }
+            },
+            Kind::HostUp { node } => {
                 if dst_node == node {
-                    Some(self.accel_down(node, dst_local))
+                    Some(self.host_down(node))
                 } else {
-                    Some(self.sw_to_nic(node))
+                    Some(self.sw_to_nic(node, self.egress_nic(src, dst_accel)))
                 }
             }
-            Kind::SwToNic { node } => Some(self.nic_up(node)),
-            Kind::NicUp { node } => {
+            Kind::HostDown { node } => Some(self.accel_down(node, dst_local)),
+            Kind::MeshLane { node, to, .. } => {
+                if dst_node == node {
+                    debug_assert_eq!(to, dst_local, "mesh lanes are direct");
+                    None
+                } else {
+                    // The lane carried the unit to the egress NIC's host.
+                    Some(self.sw_to_nic(node, self.egress_nic(src, dst_accel)))
+                }
+            }
+            Kind::RingHop { node, from } => {
+                let at = (from + 1) % self.accels_per_node;
+                if dst_node == node {
+                    if at == dst_local {
+                        None
+                    } else {
+                        Some(self.ring_hop(node, at))
+                    }
+                } else {
+                    let nic = self.egress_nic(src, dst_accel);
+                    if at == self.nic_host(nic) {
+                        Some(self.sw_to_nic(node, nic))
+                    } else {
+                        Some(self.ring_hop(node, at))
+                    }
+                }
+            }
+            Kind::SwToNic { node, nic } => Some(self.nic_up(node, nic)),
+            Kind::NicUp { node, .. } => {
                 let src_leaf = self.node_leaf(node);
                 let dst_leaf = self.node_leaf(dst_node);
+                let in_nic = self.ingress_nic(src, dst_accel);
                 if src_leaf == dst_leaf {
-                    Some(self.nic_down(dst_node))
+                    Some(self.nic_down(dst_node, in_nic))
                 } else {
                     Some(self.leaf_up(src_leaf, self.dmodk_spine(dst_node)))
                 }
             }
             Kind::LeafUp { spine, .. } => Some(self.spine_down(spine, self.node_leaf(dst_node))),
-            Kind::SpineDown { .. } => Some(self.nic_down(dst_node)),
-            Kind::NicDown { node } => Some(self.nic_to_sw(node)),
-            Kind::NicToSw { node } => Some(self.accel_down(node, dst_local)),
+            Kind::SpineDown { .. } => {
+                Some(self.nic_down(dst_node, self.ingress_nic(src, dst_accel)))
+            }
+            Kind::NicDown { node, nic } => Some(self.nic_to_sw(node, nic)),
+            Kind::NicToSw { node, nic } => match self.fabric {
+                FabricKind::SwitchStar => Some(self.accel_down(node, dst_local)),
+                FabricKind::HostTree => Some(self.host_down(node)),
+                FabricKind::Mesh => {
+                    let host = self.nic_host(nic);
+                    if host == dst_local {
+                        None
+                    } else {
+                        Some(self.mesh_lane(node, host, dst_local))
+                    }
+                }
+                FabricKind::Ring => {
+                    let host = self.nic_host(nic);
+                    if host == dst_local {
+                        None
+                    } else {
+                        Some(self.ring_hop(node, host))
+                    }
+                }
+            },
             Kind::AccelDown { .. } => None,
         }
+    }
+
+    /// Does a path terminating on `kind` deliver at `dst`? (Used by the
+    /// routing property tests: each fabric has its own terminal links —
+    /// accel down-links, mesh lanes, ring hops, or the NIC ingress
+    /// engine when the destination hosts the NIC.)
+    pub fn delivers(&self, kind: Kind, dst: u32) -> bool {
+        let dst_node = self.accel_node(dst);
+        let dst_local = self.accel_local(dst);
+        match kind {
+            Kind::AccelDown { node, accel } => node == dst_node && accel == dst_local,
+            Kind::MeshLane { node, to, .. } => node == dst_node && to == dst_local,
+            Kind::RingHop { node, from } => {
+                node == dst_node && (from + 1) % self.accels_per_node == dst_local
+            }
+            Kind::NicToSw { node, nic } => {
+                node == dst_node
+                    && !matches!(self.fabric, FabricKind::SwitchStar | FabricKind::HostTree)
+                    && self.nic_host(nic) == dst_local
+            }
+            _ => false,
+        }
+    }
+
+    /// Upper bound on any src→dst path length (property-test guard):
+    /// worst intra legs on both ends (ring: A-1 hops each) plus the
+    /// 6-link NIC/fat-tree core.
+    pub fn max_path_links(&self) -> u32 {
+        2 * self.accels_per_node + 8
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::{presets, Pattern};
+    use crate::config::{presets, FabricConfig, Pattern};
 
     fn topo32() -> Topology {
         Topology::new(&presets::scaleout(32, 128.0, Pattern::C1, 0.5))
+    }
+
+    fn topo32_fabric(kind: FabricKind, nics: usize) -> Topology {
+        let mut cfg = presets::scaleout(32, 128.0, Pattern::C1, 0.5);
+        cfg.node.fabric = FabricConfig::new(kind, nics);
+        Topology::new(&cfg)
+    }
+
+    fn roundtrip(t: &Topology, kind: Kind) -> u32 {
+        match kind {
+            Kind::AccelUp { node, accel } => t.accel_up(node, accel),
+            Kind::AccelDown { node, accel } => t.accel_down(node, accel),
+            Kind::MeshLane { node, from, to } => t.mesh_lane(node, from, to),
+            Kind::RingHop { node, from } => t.ring_hop(node, from),
+            Kind::HostUp { node } => t.host_up(node),
+            Kind::HostDown { node } => t.host_down(node),
+            Kind::SwToNic { node, nic } => t.sw_to_nic(node, nic),
+            Kind::NicToSw { node, nic } => t.nic_to_sw(node, nic),
+            Kind::NicUp { node, nic } => t.nic_up(node, nic),
+            Kind::NicDown { node, nic } => t.nic_down(node, nic),
+            Kind::LeafUp { leaf, spine } => t.leaf_up(leaf, spine),
+            Kind::SpineDown { spine, leaf } => t.spine_down(spine, leaf),
+        }
     }
 
     #[test]
     fn link_ids_are_dense_and_invertible() {
         let t = topo32();
         let total = t.total_links();
-        // 32*(16+4) + 2*8*4 = 640 + 64 = 704 links.
+        // 32*(16+4) + 2*8*4 = 640 + 64 = 704 links — the pre-fabric
+        // layout, unchanged for the default star with one NIC.
         assert_eq!(total, 704);
         for link in 0..total {
-            let kind = t.kind_of(link);
-            let back = match kind {
-                Kind::AccelUp { node, accel } => t.accel_up(node, accel),
-                Kind::AccelDown { node, accel } => t.accel_down(node, accel),
-                Kind::SwToNic { node } => t.sw_to_nic(node),
-                Kind::NicToSw { node } => t.nic_to_sw(node),
-                Kind::NicUp { node } => t.nic_up(node),
-                Kind::NicDown { node } => t.nic_down(node),
-                Kind::LeafUp { leaf, spine } => t.leaf_up(leaf, spine),
-                Kind::SpineDown { spine, leaf } => t.spine_down(spine, leaf),
-            };
-            assert_eq!(back, link);
+            assert_eq!(roundtrip(&t, t.kind_of(link)), link);
+        }
+    }
+
+    #[test]
+    fn link_ids_invertible_for_every_fabric_and_nic_count() {
+        for kind in FabricKind::ALL {
+            for nics in [1usize, 2, 4] {
+                let t = topo32_fabric(kind, nics);
+                for link in 0..t.total_links() {
+                    let k = t.kind_of(link);
+                    assert_eq!(roundtrip(&t, k), link, "{kind:?}/{nics}: {k:?}");
+                }
+            }
         }
     }
 
@@ -227,9 +532,52 @@ mod tests {
         let t = topo32();
         // accel 0 (node 0) -> accel 3 (node 0).
         let up = t.kind_of(t.accel_up(0, 0));
-        let h1 = t.next_hop(up, 3).unwrap();
+        let h1 = t.next_hop(up, 0, 3).unwrap();
         assert_eq!(h1, t.accel_down(0, 3));
-        assert_eq!(t.next_hop(t.kind_of(h1), 3), None);
+        assert_eq!(t.next_hop(t.kind_of(h1), 0, 3), None);
+    }
+
+    #[test]
+    fn mesh_intra_is_single_lane() {
+        let t = topo32_fabric(FabricKind::Mesh, 1);
+        let first = t.egress_link(0, 3);
+        assert_eq!(first, t.mesh_lane(0, 0, 3));
+        assert_eq!(t.next_hop(t.kind_of(first), 0, 3), None);
+        assert!(t.delivers(t.kind_of(first), 3));
+    }
+
+    #[test]
+    fn ring_intra_walks_forward() {
+        let t = topo32_fabric(FabricKind::Ring, 1);
+        // accel 6 -> accel 1 on node 0: hops 6,7,0 (wraps), delivers at 1.
+        let mut link = t.egress_link(6, 1);
+        let mut path = vec![link];
+        while let Some(n) = t.next_hop(t.kind_of(link), 6, 1) {
+            link = n;
+            path.push(link);
+        }
+        assert_eq!(path, vec![t.ring_hop(0, 6), t.ring_hop(0, 7), t.ring_hop(0, 0)]);
+        assert!(t.delivers(t.kind_of(link), 1));
+    }
+
+    #[test]
+    fn host_tree_intra_crosses_shared_bridge() {
+        let t = topo32_fabric(FabricKind::HostTree, 1);
+        let mut link = t.egress_link(2, 5);
+        let mut kinds = vec![t.kind_of(link)];
+        while let Some(n) = t.next_hop(t.kind_of(link), 2, 5) {
+            link = n;
+            kinds.push(t.kind_of(link));
+        }
+        assert_eq!(
+            kinds,
+            vec![
+                Kind::AccelUp { node: 0, accel: 2 },
+                Kind::HostUp { node: 0 },
+                Kind::HostDown { node: 0 },
+                Kind::AccelDown { node: 0, accel: 5 },
+            ]
+        );
     }
 
     #[test]
@@ -239,7 +587,7 @@ mod tests {
         let dst = 248;
         let mut link = t.accel_up(0, 0);
         let mut path = vec![link];
-        while let Some(n) = t.next_hop(t.kind_of(link), dst) {
+        while let Some(n) = t.next_hop(t.kind_of(link), 0, dst) {
             path.push(n);
             link = n;
         }
@@ -247,24 +595,52 @@ mod tests {
             path,
             vec![
                 t.accel_up(0, 0),
-                t.sw_to_nic(0),
-                t.nic_up(0),
+                t.sw_to_nic(0, 0),
+                t.nic_up(0, 0),
                 t.leaf_up(0, t.dmodk_spine(31)),
                 t.spine_down(31 % 4, 7),
-                t.nic_down(31),
-                t.nic_to_sw(31),
+                t.nic_down(31, 0),
+                t.nic_to_sw(31, 0),
                 t.accel_down(31, 0),
             ]
         );
     }
 
     #[test]
+    fn multi_nic_local_rank_affinity_selects_rails() {
+        let t = topo32_fabric(FabricKind::SwitchStar, 4);
+        // Local rank r egresses NIC r % 4; the ingress NIC follows the
+        // destination's local rank, so same-local-rank peers share a rail.
+        for local in 0..8u32 {
+            let src = local; // node 0
+            let dst = 8 + local; // node 1, same local rank
+            assert_eq!(t.egress_nic(src, dst), local % 4);
+            assert_eq!(t.ingress_nic(src, dst), local % 4);
+            let up = t.next_hop(t.kind_of(t.accel_up(0, local)), src, dst).unwrap();
+            assert_eq!(up, t.sw_to_nic(0, local % 4));
+        }
+    }
+
+    #[test]
+    fn round_robin_spreads_over_nics() {
+        let mut cfg = presets::scaleout(32, 128.0, Pattern::C1, 0.5);
+        cfg.node.fabric = FabricConfig::new(FabricKind::SwitchStar, 4);
+        cfg.node.fabric.nic_policy = crate::config::NicPolicy::RoundRobin;
+        let t = Topology::new(&cfg);
+        let mut seen = [false; 4];
+        for dst_node in 1..5u32 {
+            seen[t.egress_nic(0, dst_node * 8) as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "round robin must reach every NIC");
+    }
+
+    #[test]
     fn same_leaf_skips_spine() {
         let t = topo32();
         // node 0 -> node 1 share leaf 0 (4 nodes per leaf).
-        let dst = 1 * 8 + 5;
-        let k = t.kind_of(t.nic_up(0));
-        assert_eq!(t.next_hop(k, dst), Some(t.nic_down(1)));
+        let dst = 8 + 5;
+        let k = t.kind_of(t.nic_up(0, 0));
+        assert_eq!(t.next_hop(k, 0, dst), Some(t.nic_down(1, 0)));
     }
 
     #[test]
@@ -275,5 +651,13 @@ mod tests {
             counts[t.dmodk_spine(d) as usize] += 1;
         }
         assert_eq!(counts, [8, 8, 8, 8]);
+    }
+
+    #[test]
+    #[should_panic(expected = "divide evenly")]
+    fn uneven_leaf_division_panics_instead_of_corrupting() {
+        let mut cfg = presets::scaleout(32, 128.0, Pattern::C1, 0.5);
+        cfg.inter.leaves = 7; // 32 % 7 != 0: used to alias link ids
+        let _ = Topology::new(&cfg);
     }
 }

@@ -8,9 +8,12 @@
 //!    segmented into *transactions* of at most `MTU - header` payload bytes
 //!    (the unit a NIC turns into one inter-node packet); intra-node
 //!    messages travel as one transaction. Each transaction crosses the
-//!    intra-node network — accelerator up-link (PCIe §3.2 timing, TLP/DLLP
-//!    overheads) into the all-to-all intra switch, then either a peer
-//!    accelerator's down-link or the switch→NIC segment.
+//!    intra-node fabric — by default the all-to-all intra switch
+//!    (accelerator up-link with PCIe §3.2 timing, then a peer's down-link
+//!    or the switch→NIC segment), or the configured alternative
+//!    ([`crate::config::FabricKind`]): direct mesh lanes, ring hops, or
+//!    the host-tree bridge pair — toward a peer accelerator or one of the
+//!    node's NICs ([`crate::config::NicPolicy`] picks the rail).
 //! 2. The NIC prepends the inter-node header (60 B) and injects the packet
 //!    into the fat-tree (D-mod-K routed, credit-backpressured, 6 ns hops).
 //! 3. The destination NIC strips the header and re-injects the payload into
@@ -69,7 +72,7 @@ use crate::serial::json::{FromJson, ToJson, Value};
 use std::collections::VecDeque;
 
 use crate::analytic::{CollParams, PcieParams};
-use crate::config::{Arrival, SimConfig};
+use crate::config::{Arrival, FabricKind, SimConfig};
 pub use crate::config::{CollOp, CollScope, CollectiveSpec, Workload};
 use crate::metrics::{Collector, HistSummary, Histogram};
 pub use crate::metrics::Class;
@@ -163,6 +166,7 @@ enum CollAction {
 #[derive(Default, Clone, Copy)]
 struct Unit {
     msg: u32,
+    src: u32,
     dst: u32,
     payload: u32,
     /// Accumulated per-hop propagation (applied to delivered latency).
@@ -242,6 +246,10 @@ pub struct World {
     pub completed_msgs: u64,
     /// Delivery-link transaction trains enabled (`SimConfig::coalescing`).
     coalescing: bool,
+    /// A wait-for cycle of parked links was detected (permanent credit
+    /// deadlock — see [`World::closes_wait_cycle`]). Checked by
+    /// [`Sim::try_run`], which turns it into an error.
+    deadlocked: bool,
     /// Per-link last-hit memo in front of the `pcie_table` binary search:
     /// steady-state traffic serializes one payload size per link, so the
     /// common lookup is a single compare.
@@ -272,7 +280,8 @@ impl World {
             .map_err(|e| anyhow::anyhow!("invalid workload: {e}"))?;
         let mut coll_sizes: Vec<u32> = Vec::new();
         let coll = if let Workload::Collective(spec) = bench {
-            let sched = collective::build(&spec, topo.nodes, topo.accels_per_node)?;
+            let sched =
+                collective::build(&spec, topo.nodes, topo.accels_per_node, topo.nics_per_node)?;
             sched
                 .check()
                 .map_err(|e| anyhow::anyhow!("collective schedule unsound: {e}"))?;
@@ -348,6 +357,19 @@ impl World {
                     Time::ZERO,
                     hop,
                 ),
+                // Fabric-internal intra links (mesh lanes, ring hops, the
+                // host-tree bridge pair) carry the same PCIe-class
+                // transaction timing as the accel links and queue into
+                // switch-depth buffers.
+                Kind::MeshLane { .. }
+                | Kind::RingHop { .. }
+                | Kind::HostUp { .. }
+                | Kind::HostDown { .. } => Link::new(
+                    LinkModel::Pcie(n.accel_link),
+                    n.switch_queue_b,
+                    Time::ZERO,
+                    Time::ZERO,
+                ),
             };
             links.push(link);
             kinds.push(kind);
@@ -401,19 +423,17 @@ impl World {
             f64::INFINITY
         };
 
-        // Intra whole-message units must fit the queues they traverse.
-        if cfg.traffic.msg_size_b > n.accel_queue_b || cfg.traffic.msg_size_b > n.switch_queue_b {
-            anyhow::bail!(
-                "msg_size_b {} exceeds intra queue capacity",
-                cfg.traffic.msg_size_b
-            );
-        }
+        // (Intra whole-message units vs queue capacities, MTU vs NIC
+        // buffers and leaf divisibility are all rejected by
+        // `SimConfig::validate` above — a unit that cannot fit an empty
+        // downstream queue would stall the simulation forever.)
 
         Ok(World {
             metrics: Collector::new(warmup, end),
             wire_snapshot: vec![0; total],
             wire_end: Vec::new(),
             coalescing: cfg.coalescing,
+            deadlocked: false,
             pcie_memo: vec![(u32::MAX, Time::ZERO); total],
             tally_scratch: Vec::new(),
             wake_pool: Vec::new(),
@@ -683,14 +703,45 @@ impl World {
         self.pump(src, now, q);
     }
 
-    /// Push as many head-of-backlog transactions into the up-link as fit.
+    /// Push as many head-of-backlog transactions into the egress link as
+    /// fit. The first link is fabric- and destination-dependent (star:
+    /// always the accel up-link; mesh: the direct lane; ring: the local
+    /// ring hop; and the NIC staging queue when the source hosts the
+    /// egress NIC), so it is resolved per head message.
+    ///
+    /// On the non-star fabrics the egress link can itself be a delivery
+    /// link with an in-flight coalesced train, so the feeder follows the
+    /// same discipline as [`World::try_start`]: settle due train units
+    /// before observing the queue's occupancy, and re-pace the train to
+    /// per-unit boundaries when parking on it.
     fn pump(&mut self, accel: u32, now: Time, q: &mut EventQueue<Ev>) {
-        let node = self.topo.accel_node(accel);
-        let local = self.topo.accel_local(accel);
-        let up = self.topo.accel_up(node, local);
+        // Star / host-tree egress is destination-independent (always the
+        // accel up-link, which never hosts trains): hoist it out of the
+        // per-transaction loop, keeping the original hot path.
+        let fixed_up = match self.topo.fabric {
+            FabricKind::SwitchStar | FabricKind::HostTree => {
+                let node = self.topo.accel_node(accel);
+                Some(self.topo.accel_up(node, self.topo.accel_local(accel)))
+            }
+            _ => None,
+        };
         loop {
+            let Some(&head) = self.feeders[accel as usize].backlog.front() else { return };
+            let mut mid = head;
+            let mut up = fixed_up
+                .unwrap_or_else(|| self.topo.egress_link(accel, self.msgs.get(mid).dst));
+            // Materialize due train units on the (fabric-routed) egress
+            // link before the credit check, so it sees exactly the
+            // scalar engine's occupancy. The settle cascade can feed
+            // back into this very feeder (delivery → collective advance
+            // → inject → pump), so head state is re-resolved after it.
+            if fixed_up.is_none() && !self.links[up as usize].train_ends.is_empty() {
+                self.settle(up, now, q);
+                let Some(&head) = self.feeders[accel as usize].backlog.front() else { return };
+                mid = head;
+                up = self.topo.egress_link(accel, self.msgs.get(mid).dst);
+            }
             let f = &self.feeders[accel as usize];
-            let Some(&mid) = f.backlog.front() else { return };
             let left = f.head_txns_left;
             let total = f.head_txns;
             debug_assert!(left > 0 && left <= total);
@@ -701,15 +752,26 @@ impl World {
                 if !self.feeders[accel as usize].parked {
                     self.links[up as usize].add_waiter(Waker::Feeder(accel));
                     self.feeders[accel as usize].parked = true;
+                    // Parked waiters need per-unit release wake-ups.
+                    self.truncate_train(up, q);
                 }
                 return;
             }
             let first = left == total;
-            let uid = self
-                .units
-                .insert(Unit { msg: mid, dst: m.dst, payload, prop_ps: 0, first, next: u32::MAX });
+            let uid = self.units.insert(Unit {
+                msg: mid,
+                src: accel,
+                dst: m.dst,
+                payload,
+                prop_ps: 0,
+                first,
+                next: u32::MAX,
+            });
             self.links[up as usize].enqueue(uid, wire);
-            self.try_start(up, now, q);
+            // Advance the feeder BEFORE try_start: its settle cascade can
+            // re-enter this feeder (delivery → feedback → inject → pump),
+            // which must observe the counters already past this
+            // transaction or it would pump the same one twice.
             let f = &mut self.feeders[accel as usize];
             f.head_txns_left -= 1;
             if f.head_txns_left == 0 {
@@ -721,6 +783,7 @@ impl World {
                     f.head_txns = txns;
                 }
             }
+            self.try_start(up, now, q);
         }
     }
 
@@ -734,9 +797,12 @@ impl World {
             return;
         }
         let Some(&uid) = self.links[li].queue.front() else { return };
-        let dst = self.units.get(uid).dst;
+        let (src, dst) = {
+            let u = self.units.get(uid);
+            (u.src, u.dst)
+        };
         let kind = self.kinds[li];
-        match self.topo.next_hop(kind, dst) {
+        match self.topo.next_hop(kind, src, dst) {
             Some(nl) => {
                 let ni = nl as usize;
                 // Materialize any due train units at the next queue before
@@ -755,9 +821,19 @@ impl World {
                     if !self.links[li].parked {
                         self.links[ni].add_waiter(Waker::Link(l));
                         self.links[li].parked = true;
+                        self.links[li].waiting_on = nl;
                         // Parked waiters must be woken at per-unit release
                         // times: pace any train at `nl` unit-by-unit.
                         self.truncate_train(nl, q);
+                        // A cycle of parked links (possible on the Ring
+                        // fabric) can never make progress: every queue in
+                        // the cycle frees space only by serving its head,
+                        // which needs space in the next. Flag it so the
+                        // run surfaces a diagnosis instead of silently
+                        // reporting collapsed throughput.
+                        if self.closes_wait_cycle(l) {
+                            self.deadlocked = true;
+                        }
                     }
                     return;
                 }
@@ -794,6 +870,12 @@ impl World {
             return;
         }
         let bench_feedback = !matches!(self.bench, Workload::None | Workload::Collective(_));
+        let kind = self.kinds[li];
+        // Only the mesh/ring fabrics mix delivering and forwarding units
+        // on one link; star/host-tree delivery links (accel down-links)
+        // never forward, so their trains skip the per-unit routing check
+        // (keeping the PR 2 coalescing hot path unchanged).
+        let mixed_fabric = matches!(self.topo.fabric, FabricKind::Mesh | FabricKind::Ring);
         let mut tally = std::mem::take(&mut self.tally_scratch);
         tally.clear();
         let mut t = now;
@@ -801,6 +883,20 @@ impl World {
         let mut k = 0;
         while k < n {
             let uid = self.links[li].queue[k];
+            // On the non-star fabrics a link can queue delivering units
+            // behind units that still forward (a mesh lane serves both
+            // its own node's deliveries and the egress leg to a NIC
+            // host; ring hops likewise). The train covers only the
+            // delivering prefix — the first forwarding unit ends it and
+            // is dispatched normally once the train retires. (The head
+            // is always delivering: the caller dispatched here because
+            // its next_hop was None.)
+            if mixed_fabric && k > 0 {
+                let u = *self.units.get(uid);
+                if self.topo.next_hop(kind, u.src, u.dst).is_some() {
+                    break;
+                }
+            }
             self.units.get_mut(uid).next = u32::MAX;
             let ser = self.ser_time(l, uid);
             t = t + ser;
@@ -902,6 +998,7 @@ impl World {
             match w {
                 Waker::Link(u) => {
                     self.links[u as usize].parked = false;
+                    self.links[u as usize].waiting_on = u32::MAX;
                     self.try_start(u, now, q);
                 }
                 Waker::Feeder(a) => {
@@ -1064,10 +1161,38 @@ impl World {
         bytes as f64 / secs / 1e9
     }
 
+    /// PCIe-class fabric hops one consecutive-rank ring step crosses, per
+    /// intra fabric. Star: up-link + down-link. Mesh: one direct lane.
+    /// Ring: one ring hop (ring order matches physical order). HostTree:
+    /// the step's two private hops plus the `A` concurrent chunks that
+    /// serialize through the shared bridge pair each round (`A + 3`
+    /// effective hops in pipeline steady state — a lower bound).
+    fn fabric_ring_hops(&self) -> f64 {
+        match self.topo.fabric {
+            FabricKind::SwitchStar => 2.0,
+            FabricKind::Mesh | FabricKind::Ring => 1.0,
+            FabricKind::HostTree => self.topo.accels_per_node as f64 + 3.0,
+        }
+    }
+
+    /// PCIe-class hops between an accelerator and its egress NIC's
+    /// staging queue (the intra leg of the NIC pipeline), per fabric.
+    fn fabric_nic_hops(&self) -> f64 {
+        match self.topo.fabric {
+            FabricKind::SwitchStar | FabricKind::Mesh | FabricKind::Ring => 1.0,
+            FabricKind::HostTree => 2.0,
+        }
+    }
+
     /// α-β ring parameters of the intra-node fabric for `n`-rank rings of
-    /// `chunk_b`-byte steps (see [`CollParams::from_pcie`]).
+    /// `chunk_b`-byte steps (see [`CollParams::from_pcie_hops`]).
     fn intra_ring_params(&self, n: u32, chunk_b: u64) -> CollParams {
-        let mut p = CollParams::from_pcie(&self.cfg.node.accel_link, n, chunk_b);
+        let mut p = CollParams::from_pcie_hops(
+            &self.cfg.node.accel_link,
+            n,
+            chunk_b,
+            self.fabric_ring_hops(),
+        );
         if self.cfg.node.rc_cpu_bounce {
             p.beta_ns_per_b *= 2.0;
         }
@@ -1106,7 +1231,19 @@ impl World {
         let down = self.accel_hop_ns(unit);
         // nic_up + leaf_up + spine_down + nic_down first-flit hops.
         let hops = 4.0 * inter.hop_latency_ns;
-        let stages = [up, swnic, nicup, fabric, fabric, fabric, swnic, down];
+        // Intra legs on both ends are fabric-dependent (star/mesh/ring:
+        // one PCIe-class hop to the NIC staging; host tree: two, through
+        // the shared bridge). The stage order matches the original fixed
+        // pipeline so the single-hop case is bit-identical.
+        let end_hops = self.fabric_nic_hops() as usize;
+        let mut stages = Vec::with_capacity(2 * end_hops + 6);
+        for _ in 0..end_hops {
+            stages.push(up);
+        }
+        stages.extend_from_slice(&[swnic, nicup, fabric, fabric, fabric, swnic]);
+        for _ in 0..end_hops {
+            stages.push(down);
+        }
         let sum: f64 = stages.iter().sum();
         let bottleneck = stages.iter().cloned().fold(0.0, f64::max);
         // Shared (per-node, not per-rank) stages serialize the other
@@ -1134,15 +1271,38 @@ impl World {
                 let shard = (spec.size_b / a.max(1) as u64).max(1);
                 let inter_chunk = (shard / nodes as u64).max(1);
                 let intra = self.intra_ring_params(a, shard);
-                // Each inter ring round moves one pipelined NIC-boundary
-                // chunk; folding that cost into α (β = 0) lets the
-                // analytic composition apply unchanged.
-                let inter = CollParams {
-                    n_devices: nodes as f64,
-                    alpha_ns: self.inter_p2p_ns(inter_chunk, a),
-                    beta_ns_per_b: 0.0,
-                };
-                crate::analytic::hierarchical_allreduce_ns(&intra, &inter, s)
+                let k = self.topo.nics_per_node;
+                let leaders = collective::hier_leaders(a, k);
+                if leaders == a {
+                    // Per-local-rank inter rings (single NIC, or one NIC
+                    // per rank): ceil(A/K) rings share each NIC. Each
+                    // inter ring round moves one pipelined NIC-boundary
+                    // chunk; folding that cost into α (β = 0) lets the
+                    // analytic composition apply unchanged.
+                    let inter = CollParams {
+                        n_devices: nodes as f64,
+                        alpha_ns: self.inter_p2p_ns(inter_chunk, (a + k - 1) / k),
+                        beta_ns_per_b: 0.0,
+                    };
+                    crate::analytic::hierarchical_allreduce_ns(&intra, &inter, s)
+                } else {
+                    // Leader-based inter exchange (2 ≤ NICs < A): each
+                    // NIC's leader runs its collected shards' rings back
+                    // to back (one ring at a time per NIC), plus the
+                    // gather/scatter hand-off of each follower shard
+                    // (one fabric crossing each way).
+                    let inter = CollParams {
+                        n_devices: nodes as f64,
+                        alpha_ns: self.inter_p2p_ns(inter_chunk, 1),
+                        beta_ns_per_b: 0.0,
+                    };
+                    let seq_rings = (a + leaders - 1) / leaders;
+                    let shard_f = s / a as f64;
+                    intra.reduce_scatter_ns(s)
+                        + seq_rings as f64 * inter.ring_allreduce_ns(shard_f)
+                        + 2.0 * intra.beta_ns_per_b * shard_f
+                        + intra.allgather_ns(s)
+                }
             }
             (op, CollScope::PerNode) => {
                 let chunk = (spec.size_b / a as u64).max(1);
@@ -1164,8 +1324,10 @@ impl World {
                 };
                 // A flat global ring advances at the pace of its slowest
                 // link — the node-boundary hop (one boundary crossing per
-                // node per round: consecutive-rank ring order).
-                let intra_round = 2.0 * self.accel_hop_ns(chunk);
+                // node per round: consecutive-rank ring order). The intra
+                // step cost is fabric-dependent (star: up+down; mesh/ring:
+                // one direct hop; host tree: the shared-bridge round).
+                let intra_round = self.fabric_ring_hops() * self.accel_hop_ns(chunk);
                 rounds * intra_round.max(self.inter_p2p_ns(chunk, 1))
             }
         }
@@ -1201,6 +1363,8 @@ impl World {
             load: self.cfg.traffic.load,
             nodes: self.cfg.inter.nodes,
             accels: self.topo.total_accels() as usize,
+            fabric: self.topo.fabric.name().to_string(),
+            nics: self.topo.nics_per_node as usize,
             aggregated_intra_gbs: self.cfg.aggregated_intra_gbs(),
             offered_gbs: self.cfg.traffic.load * raw_gbps / 8.0 * self.topo.total_accels() as f64,
             intra_tput_gbs: m.strict_gbs(Class::Intra),
@@ -1209,8 +1373,17 @@ impl World {
             inter_tput_gbs: m.strict_gbs(Class::Inter),
             inter_drain_gbs: m.drain_gbs(Class::Inter),
             fct: m.fct_hist.summary(),
-            intra_wire_gbs: self
-                .wire_delta_gbs(|k| matches!(k, Kind::AccelUp { .. } | Kind::AccelDown { .. })),
+            intra_wire_gbs: self.wire_delta_gbs(|k| {
+                matches!(
+                    k,
+                    Kind::AccelUp { .. }
+                        | Kind::AccelDown { .. }
+                        | Kind::MeshLane { .. }
+                        | Kind::RingHop { .. }
+                        | Kind::HostUp { .. }
+                        | Kind::HostDown { .. }
+                )
+            }),
             inter_wire_gbs: self.wire_delta_gbs(|k| matches!(k, Kind::NicUp { .. })),
             drop_frac: m.drop_frac(),
             delivered_msgs: m.delivered_msgs,
@@ -1224,6 +1397,41 @@ impl World {
     /// Test/diagnostic access: (queued bytes, capacity) of a link.
     pub fn link_occupancy(&self, l: u32) -> (u64, u64) {
         (self.links[l as usize].used_b, self.links[l as usize].cap_b)
+    }
+
+    /// Collective iterations still owed (stall diagnostics).
+    pub fn collective_iters_left(&self) -> u32 {
+        self.coll.as_ref().map(|c| c.spec.iters.saturating_sub(c.iters_done)).unwrap_or(0)
+    }
+
+    /// Does parking link `l` close a wait-for cycle of parked links?
+    /// Follow `waiting_on` edges through parked links: a cycle means
+    /// every queue on it frees space only by serving its head, which in
+    /// turn needs space in the next queue — permanent deadlock (no
+    /// false positives: a busy or unparked link on the chain breaks it,
+    /// and its completion event keeps the simulation live). Ring-fabric
+    /// hops are the one place the link graph is cyclic; the walk is
+    /// bounded and runs only on the cold park path.
+    fn closes_wait_cycle(&self, l: u32) -> bool {
+        let mut cur = self.links[l as usize].waiting_on;
+        let mut steps = 0;
+        while cur != u32::MAX && self.links[cur as usize].parked {
+            if cur == l {
+                return true;
+            }
+            cur = self.links[cur as usize].waiting_on;
+            steps += 1;
+            if steps > self.links.len() {
+                return true; // unreachable guard: a longer walk is itself a cycle
+            }
+        }
+        false
+    }
+
+    /// A permanent credit deadlock was detected ([`Sim::try_run`] turns
+    /// this into an error; tests can poll it directly).
+    pub fn is_deadlocked(&self) -> bool {
+        self.deadlocked
     }
 
     /// Invariant check used by property tests: byte accounting of every
@@ -1248,6 +1456,12 @@ impl World {
             }
             if l.train_active && !l.busy {
                 return Err(format!("link {i}: active train on an idle link"));
+            }
+            if l.parked != (l.waiting_on != u32::MAX) {
+                return Err(format!(
+                    "link {i}: parked flag and waiting_on edge disagree ({} vs {})",
+                    l.parked, l.waiting_on
+                ));
             }
         }
         Ok(())
@@ -1283,6 +1497,10 @@ pub struct SimReport {
     pub load: f64,
     pub nodes: usize,
     pub accels: usize,
+    /// Intra-node fabric name (`switch_star`, `mesh`, `ring`, `host_tree`).
+    pub fabric: String,
+    /// NICs per node.
+    pub nics: usize,
     pub aggregated_intra_gbs: f64,
     /// Offered load in GB/s across all accelerators.
     pub offered_gbs: f64,
@@ -1347,6 +1565,8 @@ impl ToJson for SimReport {
             .with("load", self.load)
             .with("nodes", self.nodes)
             .with("accels", self.accels)
+            .with("fabric", self.fabric.as_str())
+            .with("nics", self.nics)
             .with("aggregated_intra_gbs", self.aggregated_intra_gbs)
             .with("offered_gbs", self.offered_gbs)
             .with("intra_tput_gbs", self.intra_tput_gbs)
@@ -1378,6 +1598,15 @@ impl FromJson for SimReport {
             load: v.f64_of("load")?,
             nodes: v.usize_of("nodes")?,
             accels: v.usize_of("accels")?,
+            // Fabric fields are optional so pre-fabric result files parse.
+            fabric: match v.get("fabric") {
+                Some(s) => s.as_str()?.to_string(),
+                None => "switch_star".to_string(),
+            },
+            nics: match v.get("nics") {
+                Some(n) => n.as_u64()? as usize,
+                None => 1,
+            },
             aggregated_intra_gbs: v.f64_of("aggregated_intra_gbs")?,
             offered_gbs: v.f64_of("offered_gbs")?,
             intra_tput_gbs: v.f64_of("intra_tput_gbs")?,
@@ -1448,7 +1677,24 @@ impl Sim {
     /// collective workload that has not completed all its iterations by
     /// the window end keeps running until it does (the open-loop
     /// generators stop at the window end, so the tail drains).
-    pub fn run(mut self) -> SimReport {
+    ///
+    /// Panics if the simulation stalls (see [`Sim::try_run`] for the
+    /// error-returning form — preferred on CLI / sweep paths).
+    pub fn run(self) -> SimReport {
+        match self.try_run() {
+            Ok(r) => r,
+            Err(e) => panic!("{e:#}"),
+        }
+    }
+
+    /// Like [`Sim::run`], but surfaces a diagnosis instead of silently
+    /// reporting a partial run when the event queue drains with work
+    /// still outstanding — units parked on queues that will never gain
+    /// room (e.g. a bench unit larger than a queue capacity, or a
+    /// credit-cycle deadlock on the Ring fabric) leave the engine with
+    /// nothing scheduled and, before this check, no symptom beyond
+    /// too-small numbers.
+    pub fn try_run(mut self) -> anyhow::Result<SimReport> {
         let t0 = std::time::Instant::now();
         let warmup = self.engine.model.warmup_time();
         let end = self.engine.model.end_time();
@@ -1466,8 +1712,43 @@ impl Sim {
         } else {
             crate::sim::RunStats { events: 0, end_time: end }
         };
+        // Stall checks. First: a detected wait-for cycle of parked links
+        // is a permanent credit deadlock even while unrelated events
+        // keep the queue busy (possible on the Ring fabric, whose hops
+        // form a physical cycle with no virtual channels).
+        let w = &self.engine.model;
+        if w.is_deadlocked() {
+            anyhow::bail!(
+                "credit-cycle deadlock in the intra fabric: a cycle of parked \
+                 links can never free queue space ({} units parked, {} messages \
+                 in flight, {} collective iterations unfinished) — lower the \
+                 offered load or deepen switch_queue_b (the ring fabric has no \
+                 virtual channels)",
+                w.units_in_flight(),
+                w.msgs_in_flight(),
+                w.collective_iters_left()
+            );
+        }
+        // Second: an empty event queue with in-flight work means nothing
+        // can ever move again (every serializing link keeps an event
+        // scheduled; parked units and backlogged messages depend on one).
+        if self.engine.queue.is_empty()
+            && (w.collective_pending() || w.units_in_flight() > 0 || w.msgs_in_flight() > 0)
+        {
+            let iters_left = w.collective_iters_left();
+            anyhow::bail!(
+                "simulation made no progress: {} units parked and {} messages \
+                 in flight with an empty event queue ({} collective iterations \
+                 unfinished) — a unit is larger than a downstream queue's \
+                 capacity or the fabric deadlocked; check unit sizes against \
+                 queue capacities",
+                w.units_in_flight(),
+                w.msgs_in_flight(),
+                iters_left
+            );
+        }
         let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
-        self.engine.model.report(s1.events + s2.events + s3.events, wall_ms)
+        Ok(self.engine.model.report(s1.events + s2.events + s3.events, wall_ms))
     }
 
     /// Access the world (tests).
@@ -1725,6 +2006,125 @@ mod tests {
         let cfg = coll_cfg(CollOp::RingAllReduce, CollScope::PerNode, 16 << 20, 1);
         let err = Sim::new(cfg, &NativeProvider, BenchMode::None).unwrap_err();
         assert!(format!("{err:#}").contains("queue capacity"), "{err:#}");
+    }
+
+    #[test]
+    fn every_fabric_runs_open_loop_and_conserves_messages() {
+        use crate::config::{FabricConfig, FabricKind};
+        for kind in FabricKind::ALL {
+            for nics in [1usize, 2] {
+                let mut cfg = small_cfg(0.1, Pattern::C2);
+                cfg = presets::with_fabric(cfg, FabricConfig::new(kind, nics));
+                let mut sim = Sim::new(cfg, &NativeProvider, BenchMode::None).unwrap();
+                let end = sim.world().end_time();
+                sim.engine_mut().run_until(end);
+                sim.engine_mut().run_until(crate::units::Time::MAX);
+                let w = sim.world();
+                assert!(w.completed_msgs > 50, "{kind:?}/{nics}: {}", w.completed_msgs);
+                assert_eq!(w.injected_msgs, w.completed_msgs, "{kind:?}/{nics}");
+                assert_eq!(w.units_in_flight(), 0, "{kind:?}/{nics}");
+                w.check_invariants().unwrap_or_else(|e| panic!("{kind:?}/{nics}: {e}"));
+            }
+        }
+    }
+
+    #[test]
+    fn mesh_intra_latency_is_single_hop() {
+        use crate::config::{FabricConfig, FabricKind};
+        // Mesh delivers intra traffic over one direct lane: at very light
+        // load the mean intra latency is one PCIe(4096) serialization,
+        // half the star's two-hop floor.
+        let mut cfg = small_cfg(0.01, Pattern::C5);
+        cfg = presets::with_fabric(cfg, FabricConfig::new(FabricKind::Mesh, 1));
+        let per_hop = cfg.node.accel_link.latency_ns(4096);
+        let r = Sim::new(cfg, &NativeProvider, BenchMode::None).unwrap().run();
+        assert!(
+            r.intra_lat.mean_ns >= per_hop * 0.95 && r.intra_lat.mean_ns < per_hop * 1.6,
+            "mesh mean {} vs one hop {per_hop}",
+            r.intra_lat.mean_ns
+        );
+        assert_eq!(r.fabric, "mesh");
+        assert_eq!(r.nics, 1);
+    }
+
+    #[test]
+    fn host_tree_intra_is_slower_than_star() {
+        use crate::config::{FabricConfig, FabricKind};
+        let run = |kind| {
+            let mut cfg = small_cfg(0.3, Pattern::C5);
+            cfg = presets::with_fabric(cfg, FabricConfig::new(kind, 1));
+            Sim::new(cfg, &NativeProvider, BenchMode::None).unwrap().run()
+        };
+        let star = run(FabricKind::SwitchStar);
+        let tree = run(FabricKind::HostTree);
+        // All intra traffic of a node shares the host bridge pair: at
+        // moderate load the tree's latency must exceed the star's.
+        assert!(
+            tree.intra_lat.mean_ns > star.intra_lat.mean_ns,
+            "host tree {} vs star {}",
+            tree.intra_lat.mean_ns,
+            star.intra_lat.mean_ns
+        );
+    }
+
+    #[test]
+    fn stalled_simulation_surfaces_no_progress_error() {
+        // A window bench unit bigger than the intra queues can never pass
+        // has_room even on an empty queue: the engine used to drain its
+        // event queue and report a silent near-empty run.
+        let cfg = small_cfg(0.0, Pattern::C5);
+        let size = (cfg.node.accel_queue_b + 1) as u32;
+        let sim = Sim::with_extra_sizes(
+            cfg,
+            &NativeProvider,
+            // same-node pair: travels as one whole-message intra unit
+            BenchMode::Window { src: 0, dst: 1, size_b: size, inflight: 2 },
+            &[size],
+        )
+        .unwrap();
+        let err = sim.try_run().unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("no progress"), "{msg}");
+        assert!(msg.contains("messages"), "{msg}");
+    }
+
+    #[test]
+    fn ring_high_load_either_completes_or_diagnoses_deadlock() {
+        use crate::config::{FabricConfig, FabricKind};
+        // The unidirectional ring has no virtual channels, so a full
+        // cycle of parked hops is a real (and acceptable-to-model)
+        // outcome at saturation — but it must be *diagnosed*, never a
+        // silent throughput collapse.
+        let mut cfg = small_cfg(0.9, Pattern::C5);
+        cfg = presets::with_fabric(cfg, FabricConfig::new(FabricKind::Ring, 1));
+        let sim = Sim::new(cfg, &NativeProvider, BenchMode::None).unwrap();
+        match sim.try_run() {
+            Ok(r) => assert!(r.delivered_msgs > 0, "ran clean but delivered nothing"),
+            Err(e) => {
+                let msg = format!("{e:#}");
+                assert!(msg.contains("deadlock"), "stall without diagnosis: {msg}");
+            }
+        }
+    }
+
+    #[test]
+    fn multi_nic_star_beats_single_nic_on_inter_throughput() {
+        use crate::config::{FabricConfig, FabricKind};
+        // All-inter traffic at high load is NIC-bound; 4 NICs quadruple
+        // the node's egress capacity.
+        let run = |nics| {
+            let mut cfg = small_cfg(0.8, Pattern::Custom { frac_inter: 1.0 });
+            cfg = presets::with_fabric(cfg, FabricConfig::new(FabricKind::SwitchStar, nics));
+            Sim::new(cfg, &NativeProvider, BenchMode::None).unwrap().run()
+        };
+        let one = run(1);
+        let four = run(4);
+        assert!(
+            four.inter_tput_gbs > one.inter_tput_gbs * 1.5,
+            "4 NICs {} vs 1 NIC {} GB/s",
+            four.inter_tput_gbs,
+            one.inter_tput_gbs
+        );
     }
 
     #[test]

@@ -122,6 +122,8 @@ mod tests {
             load,
             nodes: 32,
             accels: 256,
+            fabric: "switch_star".into(),
+            nics: 1,
             aggregated_intra_gbs: bw,
             offered_gbs: 0.0,
             intra_tput_gbs: intra,

@@ -137,6 +137,26 @@ fn build_single(
     Ok(Schedule { ranks: n, steps })
 }
 
+/// Number of inter-exchange leaders the hierarchical AllReduce elects
+/// for a node with `accels_per_node` ranks and `nics` NICs.
+///
+/// * `nics == 1` — every local rank runs its own inter ring (the
+///   historical schedule): the rings serialize through the single NIC
+///   either way, and keeping the legacy shape preserves bit-for-bit
+///   reproducibility of pre-fabric experiments.
+/// * `nics >= accels_per_node` — every local rank is its own leader
+///   with a private rail, which is again the per-rank schedule.
+/// * otherwise (`2 ≤ nics < A`) — one leader per NIC: local rank `k`
+///   leads NIC `k` (its LocalRank-affinity rail), collecting the shards
+///   of followers `l` with `l % nics == k`.
+pub fn hier_leaders(accels_per_node: u32, nics: u32) -> u32 {
+    if nics <= 1 || nics >= accels_per_node {
+        accels_per_node
+    } else {
+        nics
+    }
+}
+
 /// Hierarchical (two-level) AllReduce over `nodes * accels_per_node`
 /// ranks, rank id = `node * accels_per_node + local` (the simulator's
 /// global accelerator id):
@@ -148,6 +168,10 @@ fn build_single(
 ///    (`2(N-1)` rounds of `size/(A·N)`-byte chunks over the NIC),
 /// 3. **intra-broadcast** — ring allgather inside each node
 ///    (`A-1` rounds of `size/A`).
+///
+/// This is the single-NIC / per-rank-rail schedule;
+/// [`hierarchical_allreduce_multinic`] elects per-NIC leaders when
+/// `2 ≤ nics < A`.
 pub fn hierarchical_allreduce(
     nodes: u32,
     accels_per_node: u32,
@@ -180,9 +204,91 @@ pub fn hierarchical_allreduce(
     Ok(Schedule { ranks, steps })
 }
 
+/// Hierarchical AllReduce with NIC-aware inter-exchange leaders: when
+/// `2 ≤ nics < A`, only `nics` leaders (local ranks `0..nics`, one per
+/// NIC under LocalRank affinity) cross the node boundary. Followers hand
+/// their reduced shard to their leader (`local % nics`) after the
+/// intra reduce-scatter; each leader runs one inter ring AllReduce per
+/// collected shard over its same-local-rank peers, then returns the
+/// reduced shards before the intra allgather. Degenerates to
+/// [`hierarchical_allreduce`] for `nics == 1` or `nics ≥ A`.
+pub fn hierarchical_allreduce_multinic(
+    nodes: u32,
+    accels_per_node: u32,
+    nics: u32,
+    total_b: u64,
+) -> anyhow::Result<Schedule> {
+    let (n, a) = (nodes, accels_per_node);
+    let l = hier_leaders(a, nics);
+    if l == a {
+        return hierarchical_allreduce(n, a, total_b);
+    }
+    anyhow::ensure!(n >= 2, "hierarchical allreduce needs >= 2 nodes, got {n}");
+    let ranks = n * a;
+    let mut steps = vec![Vec::new(); ranks as usize];
+    let sh_intra = shards(total_b, a)?;
+    let node_group = |nd: u32| (nd * a..(nd + 1) * a).collect::<Vec<u32>>();
+    // After the reduce-scatter pass, ring position `local` owns shard
+    // `(local + 1) mod A` (same convention as the per-rank schedule).
+    let owned = |local: u32| (local + 1) % a;
+    // Phase 1: intra-node ring reduce-scatter.
+    for nd in 0..n {
+        ring_pass_into(&mut steps, &node_group(nd), &sh_intra, 0);
+    }
+    // Phase 1.5: followers hand their owned shard to their NIC leader.
+    for nd in 0..n {
+        for local in l..a {
+            let leader = (nd * a + local % l) as usize;
+            let follower = (nd * a + local) as usize;
+            let size_b = sh_intra[owned(local) as usize].max(1);
+            steps[follower].push(Step::Send { peer: leader as u32, size_b });
+            steps[leader].push(Step::Recv { peer: follower as u32 });
+        }
+    }
+    // Phase 2: each leader rings its collected shards across its
+    // same-local-rank peers — one ring AllReduce per shard, back to
+    // back, each on the leader's own NIC rail.
+    for ld in 0..l {
+        let group: Vec<u32> = (0..n).map(|nd| nd * a + ld).collect();
+        let mut shard_ids = vec![owned(ld)];
+        for local in l..a {
+            if local % l == ld {
+                shard_ids.push(owned(local));
+            }
+        }
+        for sid in shard_ids {
+            let sh_inter = shards(sh_intra[sid as usize].max(1) as u64, n)?;
+            ring_pass_into(&mut steps, &group, &sh_inter, 0);
+            ring_pass_into(&mut steps, &group, &sh_inter, 1);
+        }
+    }
+    // Phase 2.5: leaders return the reduced shards to their owners.
+    for nd in 0..n {
+        for local in l..a {
+            let leader = (nd * a + local % l) as usize;
+            let follower = (nd * a + local) as usize;
+            let size_b = sh_intra[owned(local) as usize].max(1);
+            steps[leader].push(Step::Send { peer: follower as u32, size_b });
+            steps[follower].push(Step::Recv { peer: leader as u32 });
+        }
+    }
+    // Phase 3: intra-node ring allgather from the owned shards.
+    for nd in 0..n {
+        ring_pass_into(&mut steps, &node_group(nd), &sh_intra, 1);
+    }
+    Ok(Schedule { ranks, steps })
+}
+
 /// Build the schedule for a [`CollectiveSpec`] on a `nodes ×
-/// accels_per_node` system.
-pub fn build(spec: &CollectiveSpec, nodes: u32, accels_per_node: u32) -> anyhow::Result<Schedule> {
+/// accels_per_node` system with `nics` NICs per node (the NIC count
+/// shapes the hierarchical AllReduce's inter-exchange leader election;
+/// the other collectives ignore it).
+pub fn build(
+    spec: &CollectiveSpec,
+    nodes: u32,
+    accels_per_node: u32,
+    nics: u32,
+) -> anyhow::Result<Schedule> {
     let ranks = nodes * accels_per_node;
     anyhow::ensure!(ranks >= 2, "collective needs >= 2 accelerators");
     if spec.op == CollOp::HierarchicalAllReduce {
@@ -190,7 +296,7 @@ pub fn build(spec: &CollectiveSpec, nodes: u32, accels_per_node: u32) -> anyhow:
             spec.scope == CollScope::Global,
             "hierarchical allreduce is inherently global"
         );
-        return hierarchical_allreduce(nodes, accels_per_node, spec.size_b);
+        return hierarchical_allreduce_multinic(nodes, accels_per_node, nics, spec.size_b);
     }
     let groups: Vec<Vec<u32>> = match spec.scope {
         CollScope::Global => vec![(0..ranks).collect()],
@@ -477,6 +583,78 @@ mod tests {
                 "rank {r}: sent {sent} vs predicted {want}"
             );
         }
+    }
+
+    #[test]
+    fn multinic_leader_schedule_is_sound_and_conserves_volume() {
+        let (nodes, a, s) = (4u32, 8u32, 1u64 << 20);
+        for nics in [2u32, 3, 4] {
+            let sched = hierarchical_allreduce_multinic(nodes, a, nics, s).unwrap();
+            sched.check().unwrap_or_else(|e| panic!("nics={nics}: {e}"));
+            let l = hier_leaders(a, nics);
+            assert_eq!(l, nics);
+            // Only leaders (locals 0..l) cross the node boundary, and
+            // only to their same-local-rank peers (their NIC rail).
+            for (r, prog) in sched.steps.iter().enumerate() {
+                let (nd, local) = (r as u32 / a, r as u32 % a);
+                for st in prog {
+                    if let Step::Send { peer, .. } = st {
+                        if peer / a != nd {
+                            assert!(local < l, "follower {r} crossed the node boundary");
+                            assert_eq!(peer % a, local, "inter send off the leader's rail");
+                        }
+                    }
+                }
+            }
+            // The inter wire volume is unchanged: every byte of the
+            // reduced buffer still crosses the boundary 2(N-1)/N times.
+            let inter_total: u64 = (0..nodes * a)
+                .map(|r| {
+                    sched.steps[r as usize]
+                        .iter()
+                        .map(|st| match st {
+                            Step::Send { peer, size_b } if peer / a != r / a => *size_b as u64,
+                            _ => 0,
+                        })
+                        .sum::<u64>()
+                })
+                .sum();
+            let want = 2 * (nodes as u64 - 1) * s / nodes as u64;
+            assert!(
+                inter_total.abs_diff(want) <= (nodes * a) as u64,
+                "nics={nics}: inter volume {inter_total} vs {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn multinic_degenerates_to_legacy_at_the_edges() {
+        let (nodes, a, s) = (4u32, 8u32, 1u64 << 20);
+        let legacy = hierarchical_allreduce(nodes, a, s).unwrap();
+        for nics in [1u32, 8, 16] {
+            let sched = hierarchical_allreduce_multinic(nodes, a, nics, s).unwrap();
+            assert_eq!(
+                sched.steps, legacy.steps,
+                "nics={nics} must keep the historical per-rank schedule"
+            );
+        }
+    }
+
+    #[test]
+    fn build_passes_nics_to_hierarchical_only() {
+        let spec = CollectiveSpec {
+            op: CollOp::HierarchicalAllReduce,
+            scope: CollScope::Global,
+            size_b: 1 << 20,
+            iters: 1,
+        };
+        let s1 = build(&spec, 4, 8, 1).unwrap();
+        let s2 = build(&spec, 4, 8, 2).unwrap();
+        assert_ne!(s1.steps, s2.steps, "NIC count must shape the hierarchical schedule");
+        let ring = CollectiveSpec { op: CollOp::RingAllReduce, ..spec };
+        let r1 = build(&ring, 4, 8, 1).unwrap();
+        let r2 = build(&ring, 4, 8, 2).unwrap();
+        assert_eq!(r1.steps, r2.steps, "flat rings ignore the NIC count");
     }
 
     #[test]

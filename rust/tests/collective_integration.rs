@@ -7,7 +7,7 @@
 //! NIC boundary stays fixed.
 
 use sauron::analytic::CollParams;
-use sauron::config::{presets, CollOp, CollScope, CollectiveSpec, Pattern, Workload};
+use sauron::config::{presets, CollOp, CollScope, CollectiveSpec, FabricKind, Pattern, Workload};
 use sauron::net::world::{BenchMode, NativeProvider, Sim};
 
 const MIB: u64 = 1 << 20;
@@ -124,6 +124,114 @@ fn hierarchical_congested_does_not_improve_with_intra_bandwidth() {
         t512 > 1.2 * t512_clean,
         "background traffic should degrade 512 GB/s completion: \
          {t512:.0} vs clean {t512_clean:.0} ns"
+    );
+}
+
+/// Acceptance: one preset per intra fabric runs the hierarchical-
+/// AllReduce experiment end-to-end uncongested, and the per-fabric
+/// analytic oracle tracks the simulation within tolerance. The star's
+/// pipeline model historically lands within 3x; the mesh/ring
+/// single-hop oracles are at least as tight; the host tree's shared-
+/// bridge bound is the roughest and gets the widest band.
+#[test]
+fn every_fabric_hierarchical_matches_its_oracle_within_tolerance() {
+    for (kind, nics, lo, hi) in [
+        (FabricKind::SwitchStar, 1usize, 0.3, 3.0),
+        (FabricKind::Mesh, 4, 0.3, 3.0),
+        (FabricKind::Ring, 2, 0.3, 3.0),
+        (FabricKind::HostTree, 1, 0.2, 5.0),
+    ] {
+        let cfg = presets::fabric_interference(kind, nics, 32, 256.0, 256 * 1024, 0.0);
+        let r = Sim::new(cfg, &NativeProvider, BenchMode::None)
+            .unwrap_or_else(|e| panic!("{kind:?}: {e:#}"))
+            .try_run()
+            .unwrap_or_else(|e| panic!("{kind:?}: {e:#}"));
+        assert_eq!(r.coll_iters, 2, "{kind:?}");
+        assert_eq!(r.fabric, kind.name());
+        assert_eq!(r.nics, nics);
+        assert!(r.coll_pred_ns > 0.0, "{kind:?}: oracle missing");
+        let ratio = r.coll_time.mean_ns / r.coll_pred_ns;
+        assert!(
+            (lo..hi).contains(&ratio),
+            "{kind:?}/{nics} NIC: sim {:.0} ns vs oracle {:.0} ns (ratio {ratio:.2}, \
+             tolerance {lo}..{hi})",
+            r.coll_time.mean_ns,
+            r.coll_pred_ns
+        );
+    }
+}
+
+/// Acceptance: the same presets survive the *interference* experiment —
+/// hierarchical AllReduce against all-inter background traffic — end to
+/// end on every fabric, and congestion never speeds the collective up.
+#[test]
+fn every_fabric_interference_runs_end_to_end() {
+    for cfg in presets::fabric_family(32, 256.0, 0.2) {
+        let kind = cfg.node.fabric.kind;
+        let mut clean = cfg.clone();
+        clean.traffic.load = 0.0;
+        let clean_ns = Sim::new(clean, &NativeProvider, BenchMode::None)
+            .unwrap()
+            .try_run()
+            .unwrap_or_else(|e| panic!("{kind:?} clean: {e:#}"))
+            .coll_time
+            .mean_ns;
+        let congested = Sim::new(cfg, &NativeProvider, BenchMode::None)
+            .unwrap()
+            .try_run()
+            .unwrap_or_else(|e| panic!("{kind:?} congested: {e:#}"));
+        assert_eq!(congested.coll_iters, 2, "{kind:?}");
+        assert!(
+            congested.coll_time.mean_ns >= clean_ns * 0.99,
+            "{kind:?}: background traffic sped the collective up?! \
+             {:.0} vs clean {clean_ns:.0} ns",
+            congested.coll_time.mean_ns
+        );
+    }
+}
+
+/// Multi-NIC payoff: on the star fabric, the congested hierarchical
+/// AllReduce completes faster with 4 NICs than with 1 — the follow-up
+/// paper's motivation for opening the NIC-count axis.
+#[test]
+fn more_nics_relieve_the_interference_bottleneck() {
+    let run = |nics: usize| {
+        let cfg =
+            presets::fabric_interference(FabricKind::SwitchStar, nics, 32, 256.0, 256 * 1024, 0.3);
+        Sim::new(cfg, &NativeProvider, BenchMode::None)
+            .unwrap()
+            .try_run()
+            .unwrap_or_else(|e| panic!("{nics} NICs: {e:#}"))
+            .coll_time
+            .mean_ns
+    };
+    let one = run(1);
+    let four = run(4);
+    assert!(
+        four < one,
+        "4 NICs must beat 1 NIC under NIC-boundary congestion: {four:.0} vs {one:.0} ns"
+    );
+}
+
+/// Mesh-vs-star interference (the worked example in EXPERIMENTS.md):
+/// uncongested, the mesh's single-hop intra phases beat the star's
+/// two-hop phases at equal per-lane bandwidth.
+#[test]
+fn mesh_uncongested_beats_star_on_intra_phases() {
+    let run = |kind: FabricKind, nics: usize| {
+        let cfg = presets::fabric_interference(kind, nics, 32, 256.0, 1 << 20, 0.0);
+        Sim::new(cfg, &NativeProvider, BenchMode::None)
+            .unwrap()
+            .try_run()
+            .unwrap()
+            .coll_time
+            .mean_ns
+    };
+    let star = run(FabricKind::SwitchStar, 1);
+    let mesh = run(FabricKind::Mesh, 1);
+    assert!(
+        mesh < star,
+        "mesh intra phases are single-hop and must finish first: mesh {mesh:.0} vs star {star:.0} ns"
     );
 }
 

@@ -124,9 +124,12 @@ fn prop_build_is_deadlock_free_for_every_op_and_layout() {
     );
     forall(0xDEAD, 120, &gen, |&(op, (nodes, accels), size)| {
         let (nodes, accels) = (nodes as u32, accels as u32);
+        // Derive a NIC count from the size so the hierarchical leader
+        // election is exercised across 1..=8 NICs too.
+        let nics = 1 + (size % 8) as u32;
         let spec =
             CollectiveSpec { op, scope: CollScope::Global, size_b: size, iters: 1 };
-        let sched = collective::build(&spec, nodes, accels).map_err(|e| e.to_string())?;
+        let sched = collective::build(&spec, nodes, accels, nics).map_err(|e| e.to_string())?;
         sched.check()?;
         // A non-trivial system always yields a non-empty schedule.
         if sched.total_steps() == 0 {
@@ -147,7 +150,8 @@ fn prop_per_node_scope_never_crosses_nodes() {
         let (nodes, accels) = (nodes as u32, accels as u32);
         let spec =
             CollectiveSpec { op, scope: CollScope::PerNode, size_b: size, iters: 1 };
-        let sched = collective::build(&spec, nodes, accels).map_err(|e| e.to_string())?;
+        let sched = collective::build(&spec, nodes, accels, 1 + (size % 4) as u32)
+            .map_err(|e| e.to_string())?;
         sched.check()?;
         for (rank, prog) in sched.steps.iter().enumerate() {
             let node = rank as u32 / accels;
@@ -159,6 +163,36 @@ fn prop_per_node_scope_never_crosses_nodes() {
                     return Err(format!("rank {rank} crosses nodes to {peer} ({op:?})"));
                 }
             }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_multinic_hierarchical_sound_and_volume_preserving() {
+    // The leader-based inter exchange must stay deadlock-free and keep
+    // the same global wire volume as the per-rank schedule for every
+    // (nodes, accels, nics, size) combination.
+    let gen = Triple(
+        Pair(IntRange { lo: 2, hi: 6 }, IntRange { lo: 2, hi: 8 }),
+        IntRange { lo: 1, hi: 8 },
+        IntRange { lo: 1, hi: 1 << 22 },
+    );
+    forall(0x141C, 80, &gen, |&((nodes, a), nics, size)| {
+        let (nodes, a, nics) = (nodes as u32, a as u32, nics as u32);
+        let sched = collective::hierarchical_allreduce_multinic(nodes, a, nics, size)
+            .map_err(|e| e.to_string())?;
+        sched.check()?;
+        let legacy = collective::hierarchical_allreduce(nodes, a, size).map_err(|e| e.to_string())?;
+        let inter = |s: &collective::Schedule| -> u64 {
+            (0..nodes * a).map(|r| s.sent_bytes(r) - intra_bytes(s, r, a)).sum()
+        };
+        let (iv, lv) = (inter(&sched), inter(&legacy));
+        // Same reduced bytes cross the node boundary either way (slack:
+        // 1-byte control bumps on empty shards + shard rounding).
+        let slack = (4 * (nodes + a) * nics) as u64;
+        if iv.abs_diff(lv) > slack {
+            return Err(format!("inter volume {iv} (leaders) vs {lv} (per-rank)"));
         }
         Ok(())
     });

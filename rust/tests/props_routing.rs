@@ -1,28 +1,35 @@
 //! Property tests: RLFT topology construction and D-mod-K routing
-//! (DESIGN.md test inventory — routing properties).
+//! (DESIGN.md test inventory — routing properties), across every
+//! pluggable intra fabric and NIC count.
 
-use sauron::config::{presets, Pattern};
+use sauron::config::{presets, FabricConfig, FabricKind, NicPolicy, Pattern, SimConfig};
 use sauron::net::{Kind, Topology};
-use sauron::testkit::{forall, Choice, IntRange, Triple};
+use sauron::testkit::{forall, Choice, IntRange, Pair, Triple};
 
 fn topo(nodes: usize) -> Topology {
     Topology::new(&presets::scaleout(nodes, 128.0, Pattern::C1, 0.5))
 }
 
 /// Walk a unit's full path from src accel to dst accel; return link kinds.
-fn walk(t: &Topology, src: u32, dst: u32) -> Vec<Kind> {
-    let node = t.accel_node(src);
-    let local = t.accel_local(src);
-    let mut link = t.accel_up(node, local);
-    let mut kinds = vec![t.kind_of(link)];
-    let mut hops = 0;
-    while let Some(next) = t.next_hop(t.kind_of(link), dst) {
-        link = next;
+/// Every visited link id must be in bounds and the walk must terminate.
+fn walk(t: &Topology, src: u32, dst: u32) -> Result<Vec<Kind>, String> {
+    let mut link = t.egress_link(src, dst);
+    let mut kinds = Vec::new();
+    let mut hops = 0u32;
+    loop {
+        if link >= t.total_links() {
+            return Err(format!("link id {link} out of bounds ({}): {kinds:?}", t.total_links()));
+        }
         kinds.push(t.kind_of(link));
         hops += 1;
-        assert!(hops <= 16, "routing loop: {kinds:?}");
+        if hops > t.max_path_links() {
+            return Err(format!("routing loop after {hops} hops: {kinds:?}"));
+        }
+        match t.next_hop(*kinds.last().unwrap(), src, dst) {
+            Some(next) => link = next,
+            None => return Ok(kinds),
+        }
     }
-    kinds
 }
 
 #[test]
@@ -39,7 +46,7 @@ fn prop_every_pair_delivers_within_8_hops() {
         if src == dst {
             return Ok(());
         }
-        let kinds = walk(&t, src, dst);
+        let kinds = walk(&t, src, dst)?;
         // Terminates at the destination accelerator's down-link.
         match *kinds.last().unwrap() {
             Kind::AccelDown { node, accel } => {
@@ -56,6 +63,106 @@ fn prop_every_pair_delivers_within_8_hops() {
     });
 }
 
+/// The satellite property: every link id produced by routing — walking
+/// from every source to every destination — is in-bounds and the walk
+/// terminates at a link that delivers to the destination, across
+/// randomized `(nodes, leaves, spines, accels, fabric, nics, policy)`
+/// including all the new fabrics.
+#[test]
+fn prop_routing_in_bounds_and_terminates_for_every_fabric() {
+    let gen = Triple(
+        Pair(
+            Choice(&[4usize, 8, 16, 32]), // nodes
+            Choice(&[1usize, 2, 4, 0]),   // leaves divisor selector (0 = leaves == nodes)
+        ),
+        Pair(
+            Choice(&[1usize, 2, 3, 4]), // spines
+            Choice(&[1usize, 2, 4, 8]), // accels per node
+        ),
+        Pair(
+            Choice(&FabricKind::ALL),
+            Pair(
+                Choice(&[1usize, 2, 3, 4, 8]), // nics
+                Choice(&[NicPolicy::LocalRank, NicPolicy::RoundRobin]),
+            ),
+        ),
+    );
+    forall(0xFAB, 80, &gen, |&((nodes, ldiv), (spines, accels), (fabric, (nics, policy)))| {
+        let leaves = if ldiv == 0 { nodes } else { nodes / ldiv.min(nodes) };
+        let mut cfg = presets::scaleout(32, 128.0, Pattern::C1, 0.5);
+        cfg.node.accels_per_node = accels;
+        cfg.inter.nodes = nodes;
+        cfg.inter.leaves = leaves;
+        cfg.inter.spines = spines;
+        cfg.node.fabric = FabricConfig::new(fabric, nics);
+        cfg.node.fabric.nic_policy = policy;
+        cfg.validate().map_err(|e| format!("config should be valid: {e}"))?;
+        let t = Topology::new(&cfg);
+        let total = t.total_accels();
+        for src in 0..total {
+            for dst in 0..total {
+                if src == dst {
+                    continue;
+                }
+                let kinds = walk(&t, src, dst)
+                    .map_err(|e| format!("{fabric:?}/{nics}nic {src}->{dst}: {e}"))?;
+                let last = *kinds.last().unwrap();
+                if !t.delivers(last, dst) {
+                    return Err(format!(
+                        "{fabric:?}/{nics}nic {src}->{dst}: terminal {last:?} does not deliver"
+                    ));
+                }
+                // Intra pairs must never leave the node.
+                if t.accel_node(src) == t.accel_node(dst)
+                    && kinds.iter().any(|k| {
+                        matches!(k, Kind::NicUp { .. } | Kind::LeafUp { .. } | Kind::SpineDown { .. })
+                    })
+                {
+                    return Err(format!(
+                        "{fabric:?} intra pair {src}->{dst} crossed the NIC: {kinds:?}"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn uneven_and_degenerate_layouts_fail_at_config_time() {
+    // The old `node / (nodes / leaves)` mapping silently produced leaf
+    // indices == leaves when nodes % leaves != 0 (corrupting
+    // spine_down/leaf_up ids into other links' slots) and panicked with
+    // a divide-by-zero when leaves > nodes. Both must now be rejected
+    // with an actionable error before any topology exists.
+    let base = || presets::scaleout(32, 128.0, Pattern::C1, 0.5);
+    for leaves in [3usize, 5, 7, 9, 12, 20, 31, 33, 64, 100] {
+        let mut cfg = base();
+        cfg.inter.leaves = leaves;
+        let err = cfg.validate().expect_err(&format!("leaves={leaves} must be rejected"));
+        assert!(err.contains("divide evenly"), "leaves={leaves}: {err}");
+        assert!(
+            sauron::net::world::Sim::new(
+                cfg,
+                &sauron::net::world::NativeProvider,
+                sauron::net::world::BenchMode::None
+            )
+            .is_err(),
+            "world construction must also reject leaves={leaves}"
+        );
+    }
+    // Every divisor of 32 is legal and maps each node to a leaf < leaves.
+    for leaves in [1usize, 2, 4, 8, 16, 32] {
+        let mut cfg = base();
+        cfg.inter.leaves = leaves;
+        cfg.validate().unwrap_or_else(|e| panic!("leaves={leaves}: {e}"));
+        let t = Topology::new(&cfg);
+        for node in 0..t.nodes {
+            assert!(t.node_leaf(node) < t.leaves, "node {node} mapped past the last leaf");
+        }
+    }
+}
+
 #[test]
 fn prop_intra_pairs_never_touch_the_nic() {
     let gen = Triple(Choice(&[32usize, 128]), IntRange { lo: 0, hi: 1023 }, IntRange { lo: 0, hi: 6 });
@@ -70,7 +177,7 @@ fn prop_intra_pairs_never_touch_the_nic() {
         if dst == src {
             return Ok(());
         }
-        let kinds = walk(&t, src, dst);
+        let kinds = walk(&t, src, dst)?;
         if kinds.len() != 2 {
             return Err(format!("intra path must be 2 hops, got {kinds:?}"));
         }
@@ -117,7 +224,7 @@ fn prop_same_destination_same_spine() {
             if t.accel_node(src) == t.accel_node(dst) {
                 return None;
             }
-            walk(&t, src, dst).iter().find_map(|k| match k {
+            walk(&t, src, dst).unwrap().iter().find_map(|k| match k {
                 Kind::SpineDown { spine, .. } => Some(*spine),
                 _ => None,
             })
@@ -131,23 +238,32 @@ fn prop_same_destination_same_spine() {
 
 #[test]
 fn prop_link_ids_bijective() {
-    let gen = Choice(&[2usize, 8, 32, 128]);
-    forall(0x1D5, 20, &gen, |&nodes| {
-        let t = topo(nodes);
+    let gen = Pair(
+        Choice(&[2usize, 8, 32, 128]),
+        Pair(Choice(&FabricKind::ALL), Choice(&[1usize, 2, 4])),
+    );
+    forall(0x1D5, 40, &gen, |&(nodes, (fabric, nics))| {
+        let mut cfg = presets::scaleout(nodes, 128.0, Pattern::C1, 0.5);
+        cfg.node.fabric = FabricConfig::new(fabric, nics);
+        let t = Topology::new(&cfg);
         for link in 0..t.total_links() {
             let kind = t.kind_of(link);
             let back = match kind {
                 Kind::AccelUp { node, accel } => t.accel_up(node, accel),
                 Kind::AccelDown { node, accel } => t.accel_down(node, accel),
-                Kind::SwToNic { node } => t.sw_to_nic(node),
-                Kind::NicToSw { node } => t.nic_to_sw(node),
-                Kind::NicUp { node } => t.nic_up(node),
-                Kind::NicDown { node } => t.nic_down(node),
+                Kind::MeshLane { node, from, to } => t.mesh_lane(node, from, to),
+                Kind::RingHop { node, from } => t.ring_hop(node, from),
+                Kind::HostUp { node } => t.host_up(node),
+                Kind::HostDown { node } => t.host_down(node),
+                Kind::SwToNic { node, nic } => t.sw_to_nic(node, nic),
+                Kind::NicToSw { node, nic } => t.nic_to_sw(node, nic),
+                Kind::NicUp { node, nic } => t.nic_up(node, nic),
+                Kind::NicDown { node, nic } => t.nic_down(node, nic),
                 Kind::LeafUp { leaf, spine } => t.leaf_up(leaf, spine),
                 Kind::SpineDown { spine, leaf } => t.spine_down(spine, leaf),
             };
             if back != link {
-                return Err(format!("link {link} -> {kind:?} -> {back}"));
+                return Err(format!("{fabric:?}/{nics}: link {link} -> {kind:?} -> {back}"));
             }
         }
         Ok(())
@@ -158,4 +274,19 @@ fn prop_link_ids_bijective() {
 fn rlft_dims_match_paper_for_both_sizes() {
     assert_eq!(presets::rlft_dims(32), (8, 4), "32 nodes: 8+4 = 12 switches");
     assert_eq!(presets::rlft_dims(128), (16, 8), "128 nodes: 16+8 = 24 switches");
+}
+
+/// SimConfig round-trip sanity used by the routing props: a fabric
+/// config survives JSON and still builds the identical topology.
+#[test]
+fn fabric_config_roundtrip_builds_identical_topology() {
+    for kind in FabricKind::ALL {
+        let mut cfg = presets::scaleout(32, 256.0, Pattern::C3, 0.5);
+        cfg.node.fabric = FabricConfig::new(kind, 2);
+        let back = SimConfig::from_json_str(&cfg.to_json_string()).unwrap();
+        let (a, b) = (Topology::new(&cfg), Topology::new(&back));
+        assert_eq!(a.total_links(), b.total_links());
+        assert_eq!(a.fabric, b.fabric);
+        assert_eq!(a.nics_per_node, b.nics_per_node);
+    }
 }

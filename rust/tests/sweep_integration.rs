@@ -14,6 +14,7 @@ fn tiny() -> SweepSpec {
         intra_gbs: vec![128.0, 512.0],
         patterns: vec![Pattern::C1, Pattern::C5],
         loads: vec![0.2, 0.6],
+        fabric: sauron::config::FabricConfig::switch_star(),
         paper_windows: false,
         workers: 2,
         seed: 0xFEED,
