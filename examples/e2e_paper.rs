@@ -75,7 +75,7 @@ fn main() -> anyhow::Result<()> {
     let reports = coordinator::run_sweep(
         &spec,
         snapshot.clone(),
-        Some(Box::new(|done, total, r| {
+        Some(Box::new(|_idx, done, total, r| {
             if done % 25 == 0 || done == total {
                 eprintln!("  [{done}/{total}] latest: {} load {:.2} bw {:.0}", r.pattern, r.load, r.aggregated_intra_gbs);
             }

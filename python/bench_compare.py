@@ -1,11 +1,14 @@
 #!/usr/bin/env python3
-"""Compare a fresh perf_hotpath run against the committed baseline.
+"""Compare fresh bench runs against committed baselines.
 
 Used by CI's non-gating perf-smoke job:
 
-    python3 python/bench_compare.py BASELINE.json FRESH.json --max-regression 2.0
+    python3 python/bench_compare.py BASELINE.json FRESH.json \
+        [BASELINE2.json FRESH2.json ...] --max-regression 2.0
 
-Both files follow the `sauron-bench-v1` schema written by
+Files are given as (baseline, fresh) pairs so one invocation can cover
+both bench suites (BENCH_hotpath.json and BENCH_sweep.json). All files
+follow the `sauron-bench-v1` schema written by
 `benchkit::Bench::write_json`. A benchmark regresses when its fresh
 `rate_per_s` falls below `baseline_rate / max_regression`; benchmarks
 without a throughput annotation are compared on `mean_ns` instead
@@ -32,25 +35,8 @@ def load(path):
     return out
 
 
-def main():
-    ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("baseline")
-    ap.add_argument("fresh")
-    ap.add_argument(
-        "--max-regression",
-        type=float,
-        default=2.0,
-        help="fail when fresh is worse than baseline by more than this factor",
-    )
-    args = ap.parse_args()
-
-    try:
-        base = load(args.baseline)
-        fresh = load(args.fresh)
-    except (OSError, ValueError, KeyError, json.JSONDecodeError) as e:
-        print(f"bench_compare: {e}", file=sys.stderr)
-        return 2
-
+def compare_pair(base, fresh, max_regression):
+    """Print per-benchmark verdicts; return the list of regressed names."""
     failed = []
     for name in sorted(set(base) | set(fresh)):
         if name not in base or name not in fresh:
@@ -60,14 +46,14 @@ def main():
         b, f = base[name], fresh[name]
         if "rate_per_s" in b and "rate_per_s" in f and b["rate_per_s"] > 0:
             ratio = f["rate_per_s"] / b["rate_per_s"]
-            verdict = "OK" if ratio * args.max_regression >= 1.0 else "REGRESSION"
+            verdict = "OK" if ratio * max_regression >= 1.0 else "REGRESSION"
             print(
                 f"  {name:<44} {b['rate_per_s']:>14.0f} -> {f['rate_per_s']:>14.0f} /s"
                 f"  ({ratio:5.2f}x)  {verdict}"
             )
         elif b.get("mean_ns", 0) > 0:
             ratio = b["mean_ns"] / max(f.get("mean_ns", 0), 1e-9)
-            verdict = "OK" if ratio * args.max_regression >= 1.0 else "REGRESSION"
+            verdict = "OK" if ratio * max_regression >= 1.0 else "REGRESSION"
             print(
                 f"  {name:<44} {b['mean_ns']:>14.0f} -> {f.get('mean_ns', 0):>14.0f} ns"
                 f"  ({ratio:5.2f}x)  {verdict}"
@@ -76,6 +62,42 @@ def main():
             continue
         if verdict == "REGRESSION":
             failed.append(name)
+    return failed
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "files",
+        nargs="+",
+        help="alternating baseline/fresh JSON paths: BASE FRESH [BASE2 FRESH2 ...]",
+    )
+    ap.add_argument(
+        "--max-regression",
+        type=float,
+        default=2.0,
+        help="fail when fresh is worse than baseline by more than this factor",
+    )
+    args = ap.parse_args()
+
+    if len(args.files) < 2 or len(args.files) % 2 != 0:
+        print(
+            "bench_compare: expected an even number of files "
+            "(baseline/fresh pairs)",
+            file=sys.stderr,
+        )
+        return 2
+
+    failed = []
+    for base_path, fresh_path in zip(args.files[0::2], args.files[1::2]):
+        try:
+            base = load(base_path)
+            fresh = load(fresh_path)
+        except (OSError, ValueError, KeyError, json.JSONDecodeError) as e:
+            print(f"bench_compare: {e}", file=sys.stderr)
+            return 2
+        print(f"{base_path} vs {fresh_path}:")
+        failed.extend(compare_pair(base, fresh, args.max_regression))
 
     if failed:
         print(f"bench_compare: {len(failed)} benchmark(s) regressed >"

@@ -1,0 +1,120 @@
+//! Sweep-scale throughput bench (EXPERIMENTS.md §Perf, iteration 3):
+//! points/sec over a small fabric × bandwidth × load grid, comparing the
+//! **fresh-build** arm (full `World` construction per point — the
+//! pre-blueprint coordinator behavior) against the **blueprint-reuse**
+//! arm (one compiled `WorldBlueprint` per fabric × bandwidth axis value,
+//! one pinned `Sim` per blueprint, zero-reallocation `reset` between
+//! points — what `coordinator::run_sweep` does per worker).
+//!
+//! Windows are deliberately short so construction cost is a large share
+//! of each point, mirroring the many-configuration regime of the paper's
+//! parameter sweeps where rebuild overhead dominates.
+//!
+//! Run: `cargo bench --bench perf_sweep`. Prints the grep-friendly
+//! table plus the reuse-over-fresh speedup, and writes
+//! `BENCH_sweep.json` next to `BENCH_hotpath.json` for CI's perf-smoke
+//! comparison (python/bench_compare.py).
+
+use std::sync::Arc;
+
+use sauron::benchkit::Bench;
+use sauron::config::{presets, FabricConfig, FabricKind, Pattern, SimConfig};
+use sauron::net::world::{BenchMode, NativeProvider, Sim, WorldBlueprint};
+
+/// Reference grid: 2 fabrics × 2 bandwidths × 3 loads = 12 points,
+/// grouped into 4 blueprints (fabric × bandwidth are compile-phase,
+/// load/pattern/seed run-phase).
+fn grid() -> Vec<SimConfig> {
+    let mut out = Vec::new();
+    for kind in [FabricKind::SwitchStar, FabricKind::Mesh] {
+        for gbs in [128.0, 512.0] {
+            for load in [0.2, 0.5, 0.8] {
+                let mut cfg = presets::with_fabric(
+                    presets::scaleout(32, gbs, Pattern::C2, load),
+                    FabricConfig::new(kind, 2),
+                );
+                cfg.warmup_us = 2.0;
+                cfg.measure_us = 3.0;
+                cfg.seed = 0x5EE7 ^ (out.len() as u64).wrapping_mul(0x9E3779B97F4A7C15);
+                out.push(cfg);
+            }
+        }
+    }
+    out
+}
+
+fn run_fresh(configs: &[SimConfig]) -> u64 {
+    let mut events = 0u64;
+    for cfg in configs {
+        let r = Sim::new(cfg.clone(), &NativeProvider, BenchMode::None)
+            .expect("valid grid point")
+            .try_run()
+            .expect("grid point runs");
+        events += r.events;
+    }
+    events
+}
+
+fn run_reused(configs: &[SimConfig], sims: &mut Vec<(String, Sim)>) -> u64 {
+    let mut events = 0u64;
+    for cfg in configs {
+        let key = WorldBlueprint::key_for(cfg, BenchMode::None, &[]);
+        if let Some((_, sim)) = sims.iter_mut().find(|(k, _)| *k == key) {
+            sim.reset(cfg.clone()).expect("run-phase delta");
+            events += sim.try_run_mut().expect("grid point runs").events;
+        } else {
+            let bp = Arc::new(
+                WorldBlueprint::compile(cfg.clone(), &NativeProvider, BenchMode::None, &[])
+                    .expect("valid grid point"),
+            );
+            let mut sim = Sim::from_blueprint(&bp, cfg.clone()).expect("valid grid point");
+            events += sim.try_run_mut().expect("grid point runs").events;
+            sims.push((key, sim));
+        }
+    }
+    events
+}
+
+fn main() {
+    let configs = grid();
+    let points = configs.len() as f64;
+
+    // Equivalence sanity before timing anything: both arms must produce
+    // the same simulated work (props_reuse.rs holds the full property).
+    {
+        let mut sims = Vec::new();
+        let fresh = run_fresh(&configs);
+        let reused = run_reused(&configs, &mut sims);
+        assert_eq!(fresh, reused, "arms disagree on simulated events — reuse is broken");
+    }
+
+    let mut b = Bench::new();
+
+    let fresh_cfgs = configs.clone();
+    b.bench_units("perf/sweep_fresh_build", points, "points", move || run_fresh(&fresh_cfgs));
+
+    // Blueprints + pinned Sims persist across bench iterations, exactly
+    // like a sweep worker's state persists across points.
+    let reuse_cfgs = configs.clone();
+    let mut sims: Vec<(String, Sim)> = Vec::new();
+    b.bench_units("perf/sweep_blueprint_reuse", points, "points", move || {
+        run_reused(&reuse_cfgs, &mut sims)
+    });
+
+    let fresh_rate = b.results[0].per_second().unwrap_or(0.0);
+    let reuse_rate = b.results[1].per_second().unwrap_or(0.0);
+    if fresh_rate > 0.0 {
+        println!(
+            "sweep points/sec: fresh {:.1}, blueprint-reuse {:.1} ({:.2}x)",
+            fresh_rate,
+            reuse_rate,
+            reuse_rate / fresh_rate
+        );
+    }
+
+    b.append_csv(std::path::Path::new("results/bench_history.csv")).ok();
+    match b.write_json(std::path::Path::new("BENCH_sweep.json")) {
+        Ok(()) => println!("wrote BENCH_sweep.json ({} benches)", b.results.len()),
+        Err(e) => eprintln!("could not write BENCH_sweep.json: {e}"),
+    }
+}

@@ -572,6 +572,38 @@ impl SimConfig {
         Ok(())
     }
 
+    /// Canonical fingerprint of everything the **compile phase** of a
+    /// world depends on (see `net::world::WorldBlueprint`): topology
+    /// dimensions, the intra fabric, the PCIe link parameters (they
+    /// shape the serialization table), packetisation (MTU / header /
+    /// message size) and the workload's schedule shape — everything but
+    /// `iters`, the one collective knob that never touches the compiled
+    /// schedule. Two configs with equal fingerprints share a blueprint;
+    /// every other field (seed, load, pattern, arrival, windows, link
+    /// rates, queue depths, `rc_cpu_bounce`, `coalescing`) is a cheap
+    /// run-phase delta applied at instantiation or reset.
+    pub fn blueprint_fingerprint(&self) -> String {
+        // Normalize the schedule-irrelevant iteration count.
+        let workload = match self.workload {
+            Workload::Collective(spec) => {
+                Workload::Collective(CollectiveSpec { iters: 1, ..spec })
+            }
+            other => other,
+        };
+        Value::obj()
+            .with("accels_per_node", self.node.accels_per_node)
+            .with("accel_link", self.node.accel_link.to_json())
+            .with("fabric", self.node.fabric.to_json())
+            .with("mtu_b", self.node.nic.mtu_b)
+            .with("header_b", self.node.nic.header_b)
+            .with("nodes", self.inter.nodes)
+            .with("leaves", self.inter.leaves)
+            .with("spines", self.inter.spines)
+            .with("msg_size_b", self.traffic.msg_size_b)
+            .with("workload", workload.to_json())
+            .pretty()
+    }
+
     /// Aggregated intra-node bandwidth across all accelerators of one node
     /// (the paper's 128/256/512 GB/s knob), in GB/s.
     pub fn aggregated_intra_gbs(&self) -> f64 {
@@ -1101,6 +1133,46 @@ mod tests {
         });
         let err = cfg.validate().unwrap_err();
         assert!(err.contains("queue capacity"), "{err}");
+    }
+
+    #[test]
+    fn blueprint_fingerprint_separates_compile_from_run_phase() {
+        let base = scaleout(32, 256.0, Pattern::C1, 0.2);
+        // Run-phase deltas share a fingerprint.
+        let mut delta = scaleout(32, 256.0, Pattern::C4, 0.9);
+        delta.seed = 42;
+        delta.warmup_us = 1.0;
+        delta.node.accel_queue_b *= 2;
+        delta.node.nic.inter_gbps = 200.0;
+        delta.coalescing = false;
+        assert_eq!(base.blueprint_fingerprint(), delta.blueprint_fingerprint());
+        // Compile-phase deltas do not.
+        let bw = scaleout(32, 512.0, Pattern::C1, 0.2);
+        assert_ne!(base.blueprint_fingerprint(), bw.blueprint_fingerprint());
+        let mut fab = base.clone();
+        fab.node.fabric = FabricConfig::new(FabricKind::Mesh, 2);
+        assert_ne!(base.blueprint_fingerprint(), fab.blueprint_fingerprint());
+        // A collective workload pins the schedule shape, but iters is a
+        // run-phase knob.
+        let coll = |size_b, iters| {
+            let mut cfg = base.clone();
+            cfg.workload = Workload::Collective(CollectiveSpec {
+                op: CollOp::RingAllReduce,
+                scope: CollScope::PerNode,
+                size_b,
+                iters,
+            });
+            cfg
+        };
+        assert_ne!(base.blueprint_fingerprint(), coll(1 << 16, 2).blueprint_fingerprint());
+        assert_eq!(
+            coll(1 << 16, 2).blueprint_fingerprint(),
+            coll(1 << 16, 7).blueprint_fingerprint()
+        );
+        assert_ne!(
+            coll(1 << 16, 2).blueprint_fingerprint(),
+            coll(1 << 17, 2).blueprint_fingerprint()
+        );
     }
 
     #[test]

@@ -20,7 +20,7 @@ pub mod results;
 use std::sync::Arc;
 
 use crate::config::{presets, FabricConfig, Pattern, SimConfig};
-use crate::net::world::{BenchMode, SerProvider, Sim, SimReport};
+use crate::net::world::{BenchMode, SerProvider, Sim, SimReport, WorldBlueprint};
 use crate::runtime::CachedProvider;
 
 /// Sweep description (one per figure reproduction).
@@ -130,26 +130,70 @@ pub fn snapshot_provider(spec: &SweepSpec, inner: &dyn SerProvider) -> CachedPro
     CachedProvider::build(inner, &params, &sizes)
 }
 
-/// Progress callback: (completed, total, latest report).
+/// Progress callback: (submission index, completed, total, latest
+/// report). Completion-ordered; the submission index lets observers
+/// (e.g. [`results::CsvStream`]) restore spec order.
 pub type Progress = pool::Callback<SimReport>;
 
 /// Run the sweep on the worker pool; results are returned in spec order.
+///
+/// Blueprint-aware: sweep points are keyed by their compile-phase
+/// fingerprint ([`WorldBlueprint::key_for`] — one blueprint per
+/// bandwidth/fabric axis value; pattern, load and seed are run-phase
+/// deltas), each distinct blueprint is compiled exactly once, and every
+/// worker thread pins one reusable `Sim` (for its current blueprint)
+/// that it re-points across points with a zero-reallocation
+/// [`Sim::reset`], rebuilding only at blueprint boundaries. Reports are
+/// bit-identical to per-point fresh builds (`tests/props_reuse.rs`), so
+/// large sweeps are event-loop-bound instead of rebuild-bound.
 pub fn run_sweep(
     spec: &SweepSpec,
     provider: Arc<CachedProvider>,
     progress: Option<Progress>,
 ) -> anyhow::Result<Vec<SimReport>> {
-    let configs = spec.configs();
-    let jobs: Vec<_> = configs
-        .into_iter()
-        .map(|cfg| {
-            let provider = provider.clone();
-            move || -> anyhow::Result<SimReport> {
-                Sim::new(cfg, provider.as_ref(), BenchMode::None)?.try_run()
+    // Blueprints compile serially on the leader: sweeps have few axis
+    // values and many points per value (paper: 3 blueprints, 300
+    // points), so compile time is noise next to the runs it amortizes.
+    // A blueprint-heavy, point-light sweep would want lazy per-worker
+    // compilation instead; not worth the shared-map locking today.
+    let mut keys: Vec<String> = Vec::new();
+    let mut blueprints: Vec<Arc<WorldBlueprint>> = Vec::new();
+    let mut jobs = Vec::with_capacity(spec.points());
+    for cfg in spec.configs() {
+        let key = WorldBlueprint::key_for(&cfg, BenchMode::None, &[]);
+        let id = match keys.iter().position(|k| *k == key) {
+            Some(i) => i,
+            None => {
+                blueprints.push(Arc::new(WorldBlueprint::compile(
+                    cfg.clone(),
+                    provider.as_ref(),
+                    BenchMode::None,
+                    &[],
+                )?));
+                keys.push(key);
+                keys.len() - 1
             }
-        })
-        .collect();
-    pool::run_ordered(jobs, spec.workers, progress)
+        };
+        let bp = blueprints[id].clone();
+        jobs.push(move |slot: &mut Option<(usize, Sim)>| -> anyhow::Result<SimReport> {
+            if let Some((pinned, sim)) = slot.as_mut() {
+                if *pinned == id {
+                    sim.reset(cfg)?;
+                    return sim.try_run_mut();
+                }
+            }
+            // First job, or the worker crossed a blueprint boundary.
+            // `configs()` emits points blueprint-contiguous, so this
+            // rebuild happens at most ~once per worker per axis
+            // transition; keeping exactly one pinned Sim bounds resident
+            // worlds at O(workers) instead of O(workers × blueprints).
+            let mut sim = Sim::from_blueprint(&bp, cfg)?;
+            let report = sim.try_run_mut();
+            *slot = Some((id, sim));
+            report
+        });
+    }
+    pool::run_ordered_with(jobs, spec.workers, || None, progress)
 }
 
 #[cfg(test)]
@@ -195,12 +239,39 @@ mod tests {
         let provider = Arc::new(snapshot_provider(&spec, &NativeProvider));
         let hits = Arc::new(std::sync::atomic::AtomicUsize::new(0));
         let h = hits.clone();
-        let cb: Progress = Box::new(move |_, total, _| {
+        let cb: Progress = Box::new(move |idx, _, total, _| {
             assert_eq!(total, 2);
+            assert!(idx < 2);
             h.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
         });
         run_sweep(&spec, provider, Some(cb)).unwrap();
         assert_eq!(hits.load(std::sync::atomic::Ordering::SeqCst), 2);
+    }
+
+    #[test]
+    fn blueprint_sweep_matches_per_point_fresh_builds() {
+        // The blueprint-keyed reuse path must be invisible in the
+        // results: every report identical to a from-scratch build of the
+        // same point (the coordinator-level face of props_reuse).
+        let mut spec = tiny_spec();
+        spec.intra_gbs = vec![128.0, 512.0]; // two blueprints
+        spec.loads = vec![0.1, 0.4];
+        let provider = Arc::new(snapshot_provider(&spec, &NativeProvider));
+        let reports = run_sweep(&spec, provider.clone(), None).unwrap();
+        let configs = spec.configs();
+        assert_eq!(reports.len(), configs.len());
+        for (cfg, swept) in configs.into_iter().zip(&reports) {
+            let fresh = Sim::new(cfg, provider.as_ref(), BenchMode::None)
+                .unwrap()
+                .try_run()
+                .unwrap();
+            assert_eq!(swept.events, fresh.events);
+            assert_eq!(swept.delivered_msgs, fresh.delivered_msgs);
+            assert_eq!(swept.intra_tput_gbs, fresh.intra_tput_gbs);
+            assert_eq!(swept.inter_tput_gbs, fresh.inter_tput_gbs);
+            assert_eq!(swept.fct, fresh.fct);
+            assert_eq!(swept.intra_lat, fresh.intra_lat);
+        }
     }
 
     #[test]

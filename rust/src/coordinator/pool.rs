@@ -1,17 +1,24 @@
 //! A minimal ordered worker pool over `std::thread` + `mpsc`.
 //!
 //! [`run_ordered`] executes jobs on a bounded pool and returns their
-//! results in submission order. Any job error aborts the whole batch (a
-//! sweep with a failed point is invalid); worker panics surface as errors
-//! rather than hanging the leader.
+//! results in submission order. [`run_ordered_with`] additionally gives
+//! every worker thread a private state value its jobs can reuse — the
+//! blueprint-aware sweep path pins one reusable `Sim` per worker in it,
+//! so consecutive sweep points skip world construction entirely. Any job
+//! error aborts the whole batch (a sweep with a failed point is
+//! invalid); worker panics surface as errors rather than hanging the
+//! leader.
 
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 
-type Job<T> = Box<dyn FnOnce() -> anyhow::Result<T> + Send>;
+type Job<T, S> = Box<dyn FnOnce(&mut S) -> anyhow::Result<T> + Send>;
 
-/// Progress callback: (completed_count, total, latest_result).
-pub type Callback<T> = Box<dyn Fn(usize, usize, &T) + Send + Sync>;
+/// Progress callback: (submission_index, completed_count, total,
+/// latest_result). The submission index lets observers reorder
+/// completion-ordered events back into submission order (streamed CSV
+/// rows — `results::CsvStream`).
+pub type Callback<T> = Box<dyn Fn(usize, usize, usize, &T) + Send + Sync>;
 
 /// Run boxed jobs with a bounded pool; preserve input order in the output.
 pub fn run_ordered<T, F>(
@@ -23,30 +30,59 @@ where
     T: Send + 'static,
     F: FnOnce() -> anyhow::Result<T> + Send + 'static,
 {
+    run_ordered_with(
+        jobs.into_iter().map(|job| move |_: &mut ()| job()).collect(),
+        workers,
+        || (),
+        progress,
+    )
+}
+
+/// Like [`run_ordered`], but every worker thread owns a state value
+/// created by `init` that each job it executes receives mutably. State
+/// never crosses threads; it is created on the worker and dropped with
+/// it.
+pub fn run_ordered_with<T, S, F, I>(
+    jobs: Vec<F>,
+    workers: usize,
+    init: I,
+    progress: Option<Callback<T>>,
+) -> anyhow::Result<Vec<T>>
+where
+    T: Send + 'static,
+    S: 'static,
+    F: FnOnce(&mut S) -> anyhow::Result<T> + Send + 'static,
+    I: Fn() -> S + Send + Sync + 'static,
+{
     let total = jobs.len();
     if total == 0 {
         return Ok(Vec::new());
     }
-    let queue: Arc<Mutex<Vec<(usize, Job<T>)>>> = Arc::new(Mutex::new(
+    let queue: Arc<Mutex<Vec<(usize, Job<T, S>)>>> = Arc::new(Mutex::new(
         jobs.into_iter()
             .enumerate()
             .rev() // pop() takes from the back; reverse so index 0 runs first
-            .map(|(i, j)| (i, Box::new(j) as Job<T>))
+            .map(|(i, j)| (i, Box::new(j) as Job<T, S>))
             .collect(),
     ));
     let (tx, rx) = mpsc::channel::<(usize, anyhow::Result<T>)>();
+    let init = Arc::new(init);
 
     let n_workers = workers.clamp(1, total);
     let mut handles = Vec::with_capacity(n_workers);
     for _ in 0..n_workers {
         let queue = queue.clone();
         let tx = tx.clone();
-        handles.push(std::thread::spawn(move || loop {
-            let job = queue.lock().expect("queue poisoned").pop();
-            let Some((idx, job)) = job else { break };
-            let result = job();
-            if tx.send((idx, result)).is_err() {
-                break; // leader gone
+        let init = init.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut state = init();
+            loop {
+                let job = queue.lock().expect("queue poisoned").pop();
+                let Some((idx, job)) = job else { break };
+                let result = job(&mut state);
+                if tx.send((idx, result)).is_err() {
+                    break; // leader gone
+                }
             }
         }));
     }
@@ -60,7 +96,7 @@ where
         match result {
             Ok(v) => {
                 if let Some(cb) = &progress {
-                    cb(done, total, &v);
+                    cb(idx, done, total, &v);
                 }
                 out[idx] = Some(v);
             }
@@ -127,16 +163,66 @@ mod tests {
     }
 
     #[test]
-    fn progress_counts_every_completion() {
+    fn progress_reports_submission_index_and_counts() {
         let hits = Arc::new(AtomicUsize::new(0));
         let h = hits.clone();
-        let cb: Callback<u64> = Box::new(move |done, total, _| {
+        let cb: Callback<u64> = Box::new(move |idx, done, total, v| {
             assert!(done <= total);
+            assert!(idx < total);
+            // Job i returns i: the reported index must match its result.
+            assert_eq!(idx as u64, *v);
             h.fetch_add(1, Ordering::SeqCst);
         });
         let jobs: Vec<_> = (0..10u64).map(|i| move || Ok(i)).collect();
         run_ordered(jobs, 3, Some(cb)).unwrap();
         assert_eq!(hits.load(Ordering::SeqCst), 10);
+    }
+
+    #[test]
+    fn worker_state_is_created_once_per_thread_and_reused() {
+        // Each job bumps its worker's private counter and returns the
+        // value it saw; with one worker the counter must reach the job
+        // count (state survives across jobs), and init must run exactly
+        // once per worker.
+        let inits = Arc::new(AtomicUsize::new(0));
+        let ic = inits.clone();
+        let jobs: Vec<_> = (0..16u64)
+            .map(|_| {
+                move |state: &mut u64| -> anyhow::Result<u64> {
+                    *state += 1;
+                    Ok(*state)
+                }
+            })
+            .collect();
+        let out = run_ordered_with(
+            jobs,
+            1,
+            move || {
+                ic.fetch_add(1, Ordering::SeqCst);
+                0u64
+            },
+            None,
+        )
+        .unwrap();
+        assert_eq!(inits.load(Ordering::SeqCst), 1);
+        assert_eq!(out, (1..=16u64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn worker_state_partitions_across_threads() {
+        // With N workers, every job sees a state that only its own
+        // thread mutates: per-job increments never exceed the total.
+        let jobs: Vec<_> = (0..32u64)
+            .map(|_| {
+                move |state: &mut Vec<u64>| -> anyhow::Result<usize> {
+                    state.push(0);
+                    Ok(state.len())
+                }
+            })
+            .collect();
+        let out = run_ordered_with(jobs, 4, Vec::new, None).unwrap();
+        assert_eq!(out.len(), 32);
+        assert!(out.iter().all(|&n| (1..=32).contains(&n)));
     }
 
     #[test]

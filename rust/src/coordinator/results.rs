@@ -62,6 +62,88 @@ pub fn write_csv(path: &Path, reports: &[SimReport]) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Streams sweep rows to CSV as points complete instead of buffering the
+/// whole sweep in memory. Completions arrive in arbitrary order (the
+/// worker pool reports them as they finish); rows are emitted strictly
+/// in submission order, so only the out-of-order window — O(workers)
+/// rows in practice — is ever buffered. Wire it to the pool's progress
+/// callback: `stream.push(idx, report)` per completion, then
+/// [`CsvStream::finish`].
+pub struct CsvStream {
+    out: std::io::BufWriter<std::fs::File>,
+    /// Completed-but-not-yet-in-order rows, keyed by submission index.
+    pending: std::collections::BTreeMap<usize, String>,
+    /// Next submission index to emit.
+    next: usize,
+    written: usize,
+    /// First mid-stream IO error (latched; push is called from progress
+    /// callbacks that cannot propagate errors, so it surfaces at finish).
+    err: Option<std::io::Error>,
+}
+
+impl CsvStream {
+    /// Create the file (parents included) and write the header row.
+    pub fn create(path: &Path) -> anyhow::Result<CsvStream> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        let mut out = std::io::BufWriter::new(std::fs::File::create(path)?);
+        writeln!(out, "{CSV_HEADER}")?;
+        Ok(CsvStream {
+            out,
+            pending: std::collections::BTreeMap::new(),
+            next: 0,
+            written: 0,
+            err: None,
+        })
+    }
+
+    /// Submit the report completed at submission index `idx` (each index
+    /// exactly once). Emits it plus any directly following buffered
+    /// rows, then flushes — a killed run keeps every in-order completed
+    /// row on disk (the flush is noise next to a sweep point's runtime).
+    pub fn push(&mut self, idx: usize, r: &SimReport) {
+        if self.err.is_some() {
+            return;
+        }
+        self.pending.insert(idx, csv_row(r));
+        let mut emitted = false;
+        while let Some(row) = self.pending.remove(&self.next) {
+            if let Err(e) = writeln!(self.out, "{row}") {
+                self.err = Some(e);
+                return;
+            }
+            self.next += 1;
+            self.written += 1;
+            emitted = true;
+        }
+        if emitted {
+            if let Err(e) = self.out.flush() {
+                self.err = Some(e);
+            }
+        }
+    }
+
+    /// Flush and report the row count. Errors on a latched IO failure or
+    /// if a gap in the submitted indices left rows buffered (a missing
+    /// point would silently truncate the series).
+    pub fn finish(&mut self) -> anyhow::Result<usize> {
+        if let Some(e) = self.err.take() {
+            return Err(e.into());
+        }
+        anyhow::ensure!(
+            self.pending.is_empty(),
+            "csv stream finished with {} rows still buffered (missing submission index {})",
+            self.pending.len(),
+            self.next
+        );
+        self.out.flush()?;
+        Ok(self.written)
+    }
+}
+
 /// Write reports as a JSON array (full fidelity, incl. histograms).
 pub fn write_json(path: &Path, reports: &[SimReport]) -> anyhow::Result<()> {
     if let Some(parent) = path.parent() {
@@ -108,6 +190,40 @@ mod tests {
         assert_eq!(back.len(), 1);
         assert_eq!(back[0].pattern, reports[0].pattern);
         assert_eq!(back[0].delivered_msgs, reports[0].delivered_msgs);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn csv_stream_reorders_to_submission_order() {
+        let dir = std::env::temp_dir().join("sauron_csv_stream_test");
+        let stream_path = dir.join("stream.csv");
+        let batch_path = dir.join("batch.csv");
+        let reports: Vec<SimReport> = (0..4).map(|_| sample_report()).collect();
+
+        let mut stream = CsvStream::create(&stream_path).unwrap();
+        // Completion order 2, 0, 3, 1 — rows must come out 0, 1, 2, 3.
+        for idx in [2usize, 0, 3, 1] {
+            stream.push(idx, &reports[idx]);
+        }
+        assert_eq!(stream.finish().unwrap(), 4);
+        write_csv(&batch_path, &reports).unwrap();
+
+        let streamed = std::fs::read_to_string(&stream_path).unwrap();
+        let batch = std::fs::read_to_string(&batch_path).unwrap();
+        assert_eq!(streamed, batch, "streamed CSV must equal the batch writer's output");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn csv_stream_finish_detects_gaps() {
+        let dir = std::env::temp_dir().join("sauron_csv_stream_gap_test");
+        let path = dir.join("gap.csv");
+        let r = sample_report();
+        let mut stream = CsvStream::create(&path).unwrap();
+        stream.push(0, &r);
+        stream.push(2, &r); // index 1 never arrives
+        let err = stream.finish().unwrap_err();
+        assert!(format!("{err:#}").contains("missing submission index 1"), "{err:#}");
         std::fs::remove_dir_all(&dir).ok();
     }
 

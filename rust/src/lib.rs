@@ -39,4 +39,4 @@ pub mod units;
 pub use config::{
     CollOp, CollScope, CollectiveSpec, FabricConfig, FabricKind, NicPolicy, SimConfig, Workload,
 };
-pub use net::world::{BenchMode, NativeProvider, Sim, SimReport};
+pub use net::world::{BenchMode, NativeProvider, Sim, SimReport, WorldBlueprint};

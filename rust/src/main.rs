@@ -243,23 +243,6 @@ fn main() -> anyhow::Result<()> {
                 spec.fabric.nics_per_node
             );
             let provider = Arc::new(coordinator::snapshot_provider(&spec, be.provider()));
-            let t0 = std::time::Instant::now();
-            let reports = coordinator::run_sweep(
-                &spec,
-                provider,
-                Some(Box::new(|done, total, r| {
-                    eprintln!(
-                        "[{done}/{total}] {} load={:.2} bw={} intra={:.1} inter={:.1} GB/s ({:.0} ms)",
-                        r.pattern,
-                        r.load,
-                        r.aggregated_intra_gbs,
-                        r.intra_tput_gbs,
-                        r.inter_tput_gbs,
-                        r.wall_ms
-                    );
-                })),
-            )?;
-            eprintln!("sweep done in {:.1}s", t0.elapsed().as_secs_f64());
             let tag = if spec.fabric == FabricConfig::switch_star() {
                 format!("{nodes}n")
             } else {
@@ -269,7 +252,36 @@ fn main() -> anyhow::Result<()> {
                     spec.fabric.nics_per_node
                 )
             };
-            results::write_csv(&out.join(format!("sweep_{tag}.csv")), &reports)?;
+            // CSV rows stream out as points complete (submission-ordered)
+            // instead of buffering the whole sweep in memory; a killed
+            // run keeps every finished prefix row on disk.
+            let csv_path = out.join(format!("sweep_{tag}.csv"));
+            let csv = Arc::new(std::sync::Mutex::new(results::CsvStream::create(&csv_path)?));
+            let csv_cb = csv.clone();
+            let t0 = std::time::Instant::now();
+            let reports = coordinator::run_sweep(
+                &spec,
+                provider,
+                Some(Box::new(move |idx, done, total, r| {
+                    eprintln!(
+                        "[{done}/{total}] {} load={:.2} bw={} intra={:.1} inter={:.1} GB/s ({:.0} ms)",
+                        r.pattern,
+                        r.load,
+                        r.aggregated_intra_gbs,
+                        r.intra_tput_gbs,
+                        r.inter_tput_gbs,
+                        r.wall_ms
+                    );
+                    csv_cb.lock().expect("csv stream poisoned").push(idx, r);
+                })),
+            )?;
+            eprintln!("sweep done in {:.1}s", t0.elapsed().as_secs_f64());
+            let rows = csv.lock().expect("csv stream poisoned").finish()?;
+            anyhow::ensure!(
+                rows == reports.len(),
+                "csv stream wrote {rows} of {} rows",
+                reports.len()
+            );
             results::write_json(&out.join(format!("sweep_{tag}.json")), &reports)?;
             for kind in [
                 figures::FigureKind::IntraThroughput,

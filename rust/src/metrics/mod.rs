@@ -64,6 +64,15 @@ impl Collector {
         }
     }
 
+    /// Reinitialize for new measurement windows. The collector owns no
+    /// heap allocations (fixed-size histograms plus scalars), so a plain
+    /// reconstruction is both allocation-free and immune to a future
+    /// field being initialized in `new` but missed in a hand-rolled
+    /// reset (which would leak state across reused sweep points).
+    pub fn reset(&mut self, warmup: Time, end: Time) {
+        *self = Collector::new(warmup, end);
+    }
+
     #[inline]
     pub fn in_window(&self, t: Time) -> bool {
         t >= self.warmup && t < self.end

@@ -119,6 +119,27 @@ impl Link {
         }
     }
 
+    /// Reinitialize for a new sweep point: swap in the (possibly
+    /// different) serialization parameters and clear all runtime state.
+    /// The queue, waiter and train-time buffers keep their allocations —
+    /// this is the zero-reallocation reset path of a reused `World`.
+    pub fn reset(&mut self, model: LinkModel, cap_b: u64, per_unit: Time, prop: Time) {
+        self.model = model;
+        self.per_unit = per_unit;
+        self.prop = prop;
+        self.cap_b = cap_b;
+        self.queue.clear();
+        self.used_b = 0;
+        self.busy = false;
+        self.waiters.clear();
+        self.parked = false;
+        self.waiting_on = u32::MAX;
+        self.tx_bytes = 0;
+        self.train_ends.clear();
+        self.train_active = false;
+        self.next_fire = Time::MAX;
+    }
+
     /// Room for `bytes` more?
     #[inline]
     pub fn has_room(&self, bytes: u64) -> bool {

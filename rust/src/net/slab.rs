@@ -6,22 +6,44 @@ pub struct Slab<T> {
     items: Vec<T>,
     free: Vec<u32>,
     live: usize,
+    /// Debug-build occupancy map: `remove` on an already-freed index
+    /// would push a duplicate onto the free list, after which two
+    /// `insert`s hand out the *same* slot — two live handles silently
+    /// aliasing one entry. Release builds skip the bookkeeping.
+    #[cfg(debug_assertions)]
+    occupied: Vec<bool>,
 }
 
 impl<T: Default> Slab<T> {
     pub fn with_capacity(cap: usize) -> Slab<T> {
-        Slab { items: Vec::with_capacity(cap), free: Vec::new(), live: 0 }
+        Slab {
+            items: Vec::with_capacity(cap),
+            free: Vec::new(),
+            live: 0,
+            #[cfg(debug_assertions)]
+            occupied: Vec::with_capacity(cap),
+        }
     }
 
     #[inline]
     pub fn insert(&mut self, value: T) -> u32 {
         self.live += 1;
         if let Some(idx) = self.free.pop() {
+            #[cfg(debug_assertions)]
+            {
+                debug_assert!(
+                    !self.occupied[idx as usize],
+                    "slab free list handed out a live slot {idx}"
+                );
+                self.occupied[idx as usize] = true;
+            }
             self.items[idx as usize] = value;
             idx
         } else {
             let idx = self.items.len() as u32;
             self.items.push(value);
+            #[cfg(debug_assertions)]
+            self.occupied.push(true);
             idx
         }
     }
@@ -29,9 +51,28 @@ impl<T: Default> Slab<T> {
     #[inline]
     pub fn remove(&mut self, idx: u32) {
         debug_assert!(self.live > 0);
+        #[cfg(debug_assertions)]
+        {
+            assert!(
+                self.occupied[idx as usize],
+                "double free: slab slot {idx} is already on the free list"
+            );
+            self.occupied[idx as usize] = false;
+        }
         self.live -= 1;
         self.items[idx as usize] = T::default();
         self.free.push(idx);
+    }
+
+    /// Drop every entry but keep all allocations (items, free list and
+    /// the debug occupancy map retain capacity) — the reset path of a
+    /// reused `World` between sweep points.
+    pub fn clear(&mut self) {
+        self.items.clear();
+        self.free.clear();
+        self.live = 0;
+        #[cfg(debug_assertions)]
+        self.occupied.clear();
     }
 
     #[inline]
@@ -53,6 +94,11 @@ impl<T: Default> Slab<T> {
     /// High-water mark of allocated slots (capacity actually touched).
     pub fn slots(&self) -> usize {
         self.items.len()
+    }
+    /// Reserved backing capacity (allocation-reuse assertions: a reused
+    /// slab re-running the same workload must not grow this).
+    pub fn capacity(&self) -> usize {
+        self.items.capacity()
     }
 }
 
@@ -85,5 +131,38 @@ mod tests {
         }
         assert_eq!(s.slots(), 1);
         assert!(s.is_empty());
+    }
+
+    #[test]
+    fn clear_retains_capacity() {
+        let mut s: Slab<u64> = Slab::with_capacity(0);
+        for i in 0..64 {
+            s.insert(i);
+        }
+        let cap = s.capacity();
+        assert!(cap >= 64);
+        s.clear();
+        assert!(s.is_empty());
+        assert_eq!(s.slots(), 0);
+        assert_eq!(s.capacity(), cap, "clear must keep the backing allocation");
+        // Refilling to the same high-water mark must not reallocate.
+        for i in 0..64 {
+            s.insert(i);
+        }
+        assert_eq!(s.capacity(), cap);
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "double free")]
+    fn double_remove_panics_in_debug() {
+        // Before the occupancy check, the second remove silently pushed a
+        // duplicate free-list entry, after which two inserts returned the
+        // same slot — two live handles aliasing one entry.
+        let mut s: Slab<u64> = Slab::with_capacity(4);
+        let a = s.insert(1);
+        let _b = s.insert(2);
+        s.remove(a);
+        s.remove(a);
     }
 }

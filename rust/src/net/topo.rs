@@ -301,6 +301,14 @@ impl Topology {
         }
     }
 
+    /// Decode every link id into its [`Kind`] — the per-link dispatch
+    /// table the world indexes on the hot path. Built once per
+    /// [`crate::net::world::WorldBlueprint`] and shared across every
+    /// world instantiated from it.
+    pub fn kind_table(&self) -> Vec<Kind> {
+        (0..self.total_links()).map(|l| self.kind_of(l)).collect()
+    }
+
     /// D-mod-K spine selection for destination node `d`.
     #[inline]
     pub fn dmodk_spine(&self, dst_node: u32) -> u32 {

@@ -67,9 +67,22 @@
 //! those regimes. Deterministic-arrival configs, whose synchronized
 //! generators tie constantly, get a valid simulation either way but not
 //! a bit-identical one.
+//!
+//! ## Compile-once blueprints (EXPERIMENTS.md §Perf, iteration 3)
+//!
+//! World construction is split into a **compile phase** and a **run
+//! phase**: a [`WorldBlueprint`] holds everything invariant across a
+//! sweep axis (topology + link-kind table, compiled collective
+//! schedules, the PCIe serialization table) and is shared across worker
+//! threads via `Arc`; a [`World`] is instantiated from it with only the
+//! cheap per-point deltas and gains [`World::reset`] so one
+//! worker-affine world is reused across sweep points with zero
+//! reallocation. `tests/props_reuse.rs` anchors the bit-identical
+//! equivalence of fresh vs reset-reused worlds.
 
 use crate::serial::json::{FromJson, ToJson, Value};
 use std::collections::VecDeque;
+use std::sync::Arc;
 
 use crate::analytic::{CollParams, PcieParams};
 use crate::config::{Arrival, FabricKind, SimConfig};
@@ -117,8 +130,10 @@ pub type BenchMode = Workload;
 /// counters for recv matching, and the iteration barrier.
 struct CollectiveState {
     spec: CollectiveSpec,
-    /// `steps[rank]` — rank's program for one iteration.
-    steps: Vec<Vec<Step>>,
+    /// Compiled per-rank programs (blueprint-owned, shared across every
+    /// world of a sweep axis): `sched.steps[rank]` is rank's program for
+    /// one iteration.
+    sched: Arc<collective::Schedule>,
     ranks: u32,
     pcs: Vec<u32>,
     done: Vec<bool>,
@@ -135,12 +150,12 @@ struct CollectiveState {
 }
 
 impl CollectiveState {
-    fn new(spec: CollectiveSpec, sched: collective::Schedule) -> CollectiveState {
+    fn new(spec: CollectiveSpec, sched: Arc<collective::Schedule>) -> CollectiveState {
         let ranks = sched.ranks;
         let n = ranks as usize;
         CollectiveState {
             spec,
-            steps: sched.steps,
+            sched,
             ranks,
             pcs: vec![0; n],
             done: vec![false; n],
@@ -151,6 +166,21 @@ impl CollectiveState {
             iter_start: Time::ZERO,
             durations: Vec::new(),
         }
+    }
+
+    /// Rewind to iteration zero for a reused world (every allocation
+    /// retained). `spec` may differ from the previous point's in `iters`
+    /// only — the schedule shape is blueprint-fixed.
+    fn reset(&mut self, spec: CollectiveSpec) {
+        self.spec = spec;
+        self.pcs.fill(0);
+        self.done.fill(false);
+        self.done_count = 0;
+        self.arrived.fill(0);
+        self.consumed.fill(0);
+        self.iters_done = 0;
+        self.iter_start = Time::ZERO;
+        self.durations.clear();
     }
 }
 
@@ -215,8 +245,11 @@ pub enum Ev {
 pub struct World {
     pub cfg: SimConfig,
     pub topo: Topology,
+    /// Compile-phase state shared across every world of a sweep axis:
+    /// the per-link kind dispatch table, the PCIe serialization table
+    /// and the compiled collective schedule (see [`WorldBlueprint`]).
+    blueprint: Arc<WorldBlueprint>,
     links: Vec<Link>,
-    kinds: Vec<Kind>,
     units: Slab<Unit>,
     msgs: Slab<Msg>,
     feeders: Vec<Feeder>,
@@ -227,9 +260,6 @@ pub struct World {
     bench: Workload,
     /// Runtime state when `bench` is a collective.
     coll: Option<Box<CollectiveState>>,
-    /// Sorted (payload, latency) table for the accel PCIe link model,
-    /// built from a [`SerProvider`] (normally the AOT HLO kernel).
-    pcie_table: Vec<(u32, Time)>,
     pub table_misses: u64,
     txn_payload: u32,
     header_b: u32,
@@ -261,13 +291,83 @@ pub struct World {
     wake_pool: Vec<Vec<Waker>>,
 }
 
-impl World {
-    pub fn new(
+/// Compile-phase product of world construction: everything invariant
+/// across a sweep axis, shared across worker threads via `Arc`. A
+/// [`World`] is *instantiated from* a blueprint (cheap per-point deltas:
+/// seed, load, pattern, arrival, windows, link rates, queue depths,
+/// `rc_cpu_bounce`, `coalescing`, collective iteration count) and
+/// [`World::reset`] re-points an existing world at a new point with zero
+/// reallocation — which turns thousand-point fabric × NIC × bandwidth
+/// sweeps from rebuild-bound into event-loop-bound.
+///
+/// Compile-phase state: the fabric-computed [`Topology`] and its
+/// per-link [`Kind`] dispatch table, the compiled + soundness-checked
+/// collective schedule, and the PCIe serialization table (the HLO/PJRT
+/// product). [`SimConfig::blueprint_fingerprint`] defines the split; the
+/// reuse equivalence property (`tests/props_reuse.rs`) holds a
+/// blueprint-instantiated, reset-reused world bit-identical (all
+/// [`SimReport`] fields except `wall_ms`) to a freshly built one.
+pub struct WorldBlueprint {
+    /// The config the blueprint was compiled from (the base point).
+    pub base: SimConfig,
+    /// Effective workload (an explicit bench argument overrides the
+    /// config's `workload` field and is then pinned for every world of
+    /// this blueprint).
+    bench: Workload,
+    /// `bench` came from an explicit argument rather than the config
+    /// (instantiation then ignores the per-point `workload` field, like
+    /// the original `World::new` did).
+    explicit_bench: bool,
+    pub topo: Topology,
+    /// Per-link kind dispatch table ([`Topology::kind_table`]).
+    kinds: Vec<Kind>,
+    /// Sorted (payload, latency) table for the accel PCIe link model,
+    /// built from a [`SerProvider`] (normally the AOT HLO kernel).
+    pcie_table: Vec<(u32, Time)>,
+    /// Compiled collective schedule when `bench` is a collective.
+    sched: Option<Arc<collective::Schedule>>,
+    /// Largest intra-node whole-message unit the schedule posts
+    /// (queue depths are per-point knobs, so the capacity check runs per
+    /// instantiation — in O(1) off this precomputed bound).
+    intra_max_send: u64,
+    txn_payload: u32,
+    /// Extra payload sizes the serialization table was primed with
+    /// (part of the blueprint identity).
+    extra_sizes: Vec<u32>,
+    /// Identity: configs whose [`WorldBlueprint::key_for`] equals this
+    /// may instantiate from (or reset onto) this blueprint.
+    key: String,
+}
+
+impl WorldBlueprint {
+    /// Blueprint identity of a (config, bench, extra-sizes) triple: the
+    /// config's compile-phase fingerprint with an explicit bench
+    /// override folded in, plus the table-priming sizes. Sweep jobs are
+    /// grouped by this key (`coordinator::run_sweep`).
+    pub fn key_for(cfg: &SimConfig, bench: BenchMode, extra_sizes: &[u32]) -> String {
+        use std::fmt::Write;
+        let mut key = if bench.is_none() {
+            cfg.blueprint_fingerprint()
+        } else {
+            let mut eff = cfg.clone();
+            eff.workload = bench;
+            eff.blueprint_fingerprint()
+        };
+        write!(key, "\nextra_sizes: {extra_sizes:?}").expect("string write");
+        key
+    }
+
+    /// Compile everything about `cfg` that is invariant across a sweep
+    /// axis — the expensive half of the old monolithic world build:
+    /// topology link-id computation and kind table, collective schedule
+    /// build + soundness check, and the PCIe serialization table (one
+    /// provider pass, the HLO/PJRT hot path).
+    pub fn compile(
         cfg: SimConfig,
         provider: &dyn SerProvider,
         bench: BenchMode,
         extra_sizes: &[u32],
-    ) -> anyhow::Result<World> {
+    ) -> anyhow::Result<WorldBlueprint> {
         cfg.validate().map_err(|e| anyhow::anyhow!("invalid config: {e}"))?;
         let topo = Topology::new(&cfg);
         let txn_payload = (cfg.node.nic.mtu_b - cfg.node.nic.header_b) as u32;
@@ -275,105 +375,25 @@ impl World {
         // Effective workload: an explicit bench argument overrides the
         // config's workload field (the bench drivers predate it) — and
         // must pass the same topology checks the config field gets.
-        let bench = if bench.is_none() { cfg.workload } else { bench };
+        let explicit_bench = !bench.is_none();
+        let bench = if explicit_bench { bench } else { cfg.workload };
         cfg.validate_workload(&bench)
             .map_err(|e| anyhow::anyhow!("invalid workload: {e}"))?;
         let mut coll_sizes: Vec<u32> = Vec::new();
-        let coll = if let Workload::Collective(spec) = bench {
+        let mut intra_max_send = 0u64;
+        let sched = if let Workload::Collective(spec) = bench {
             let sched =
                 collective::build(&spec, topo.nodes, topo.accels_per_node, topo.nics_per_node)?;
             sched
                 .check()
                 .map_err(|e| anyhow::anyhow!("collective schedule unsound: {e}"))?;
             anyhow::ensure!(sched.total_steps() > 0, "collective schedule is empty");
-            // Intra-node sends travel as one whole-message unit and must
-            // fit the finite accel/switch queues (inter sends segment
-            // into MTU transactions and always fit).
-            let a = topo.accels_per_node;
-            let intra_max = sched.max_send_where(|s, d| s / a == d / a) as u64;
-            anyhow::ensure!(
-                intra_max <= cfg.node.accel_queue_b && intra_max <= cfg.node.switch_queue_b,
-                "collective intra chunk {} B exceeds intra queue capacity ({}/{} B); \
-                 use a smaller size_b or deeper queues",
-                intra_max,
-                cfg.node.accel_queue_b,
-                cfg.node.switch_queue_b
-            );
+            intra_max_send = sched.max_intra_send(topo.accels_per_node) as u64;
             coll_sizes = sched.distinct_send_sizes();
-            Some(Box::new(CollectiveState::new(spec, sched)))
+            Some(Arc::new(sched))
         } else {
             None
         };
-
-        // -- link construction ------------------------------------------
-        let total = topo.total_links() as usize;
-        let mut links = Vec::with_capacity(total);
-        let mut kinds = Vec::with_capacity(total);
-        let n = &cfg.node;
-        let inter = &cfg.inter;
-        let hop = Time::from_ns(inter.hop_latency_ns);
-        for id in 0..topo.total_links() {
-            let kind = topo.kind_of(id);
-            let link = match kind {
-                Kind::AccelUp { .. } => Link::new(
-                    LinkModel::Pcie(n.accel_link),
-                    n.accel_queue_b,
-                    Time::ZERO,
-                    Time::ZERO,
-                ),
-                Kind::AccelDown { .. } => Link::new(
-                    LinkModel::Pcie(n.accel_link),
-                    n.switch_queue_b,
-                    Time::ZERO,
-                    Time::ZERO,
-                ),
-                Kind::SwToNic { .. } => Link::new(
-                    LinkModel::Raw(Gbps(n.nic.intra_side_gbps)),
-                    n.switch_queue_b,
-                    Time::ZERO,
-                    Time::ZERO,
-                ),
-                Kind::NicToSw { .. } => Link::new(
-                    LinkModel::Raw(Gbps(n.nic.intra_side_gbps)),
-                    n.nic.ingress_buf_b,
-                    Time::ZERO,
-                    Time::ZERO,
-                ),
-                Kind::NicUp { .. } => Link::new(
-                    LinkModel::Raw(Gbps(n.nic.inter_gbps)),
-                    n.nic.egress_buf_b,
-                    Time::from_ns(n.nic.per_msg_ns),
-                    hop,
-                ),
-                Kind::NicDown { .. } => Link::new(
-                    LinkModel::Raw(Gbps(inter.link_gbps)),
-                    inter.port_buf_b,
-                    Time::ZERO,
-                    hop,
-                ),
-                Kind::LeafUp { .. } | Kind::SpineDown { .. } => Link::new(
-                    LinkModel::Raw(Gbps(inter.link_gbps)),
-                    inter.port_buf_b,
-                    Time::ZERO,
-                    hop,
-                ),
-                // Fabric-internal intra links (mesh lanes, ring hops, the
-                // host-tree bridge pair) carry the same PCIe-class
-                // transaction timing as the accel links and queue into
-                // switch-depth buffers.
-                Kind::MeshLane { .. }
-                | Kind::RingHop { .. }
-                | Kind::HostUp { .. }
-                | Kind::HostDown { .. } => Link::new(
-                    LinkModel::Pcie(n.accel_link),
-                    n.switch_queue_b,
-                    Time::ZERO,
-                    Time::ZERO,
-                ),
-            };
-            links.push(link);
-            kinds.push(kind);
-        }
 
         // -- PCIe serialization table (the HLO/PJRT hot-path feed) -------
         let mut sizes: Vec<u32> = Vec::new();
@@ -397,12 +417,95 @@ impl World {
         }
         sizes.sort_unstable();
         sizes.dedup();
-        let lats = provider.pcie_latency_ns(&n.accel_link, &sizes);
+        let lats = provider.pcie_latency_ns(&cfg.node.accel_link, &sizes);
         let pcie_table: Vec<(u32, Time)> =
             sizes.iter().zip(lats).map(|(&s, l)| (s, Time::from_ns(l))).collect();
 
-        // -- feeders, rngs, metrics --------------------------------------
-        let accels = topo.total_accels() as usize;
+        let key = Self::key_for(
+            &cfg,
+            if explicit_bench { bench } else { Workload::None },
+            extra_sizes,
+        );
+        Ok(WorldBlueprint {
+            bench,
+            explicit_bench,
+            kinds: topo.kind_table(),
+            topo,
+            pcie_table,
+            sched,
+            intra_max_send,
+            txn_payload,
+            extra_sizes: extra_sizes.to_vec(),
+            key,
+            base: cfg,
+        })
+    }
+
+    /// The effective workload for a world instantiated at `cfg`.
+    fn bench_for(&self, cfg: &SimConfig) -> Workload {
+        if self.explicit_bench {
+            self.bench
+        } else {
+            cfg.workload
+        }
+    }
+
+    /// Validate that `cfg` is a run-phase delta of this blueprint: a
+    /// valid config whose compile-phase fingerprint matches, with queue
+    /// depths (a per-point knob) re-checked against the schedule's
+    /// largest intra-node unit.
+    fn check_point(&self, cfg: &SimConfig) -> anyhow::Result<()> {
+        cfg.validate().map_err(|e| anyhow::anyhow!("invalid config: {e}"))?;
+        let key = Self::key_for(
+            cfg,
+            if self.explicit_bench { self.bench } else { Workload::None },
+            &self.extra_sizes,
+        );
+        anyhow::ensure!(
+            key == self.key,
+            "config is not a run-phase delta of this blueprint (compile-phase \
+             fields differ; see SimConfig::blueprint_fingerprint)"
+        );
+        if self.sched.is_some() {
+            // Intra-node sends travel as one whole-message unit and must
+            // fit the finite accel/switch queues (inter sends segment
+            // into MTU transactions and always fit).
+            anyhow::ensure!(
+                self.intra_max_send <= cfg.node.accel_queue_b
+                    && self.intra_max_send <= cfg.node.switch_queue_b,
+                "collective intra chunk {} B exceeds intra queue capacity ({}/{} B); \
+                 use a smaller size_b or deeper queues",
+                self.intra_max_send,
+                cfg.node.accel_queue_b,
+                cfg.node.switch_queue_b
+            );
+        }
+        Ok(())
+    }
+
+    /// Instantiate a runnable world at sweep point `cfg` — the cheap
+    /// run-phase half of construction: per-point link parameters,
+    /// feeders, RNG streams and metrics. `cfg` must share the
+    /// blueprint's compile-phase fingerprint. (Associated function
+    /// because the world keeps an `Arc` handle to its blueprint.)
+    pub fn instantiate(bp: &Arc<WorldBlueprint>, cfg: SimConfig) -> anyhow::Result<World> {
+        bp.check_point(&cfg)?;
+        let bench = bp.bench_for(&cfg);
+        let coll = bp.sched.as_ref().map(|sched| {
+            let Workload::Collective(spec) = bench else {
+                unreachable!("blueprint has a schedule but the workload is not collective")
+            };
+            Box::new(CollectiveState::new(spec, sched.clone()))
+        });
+
+        let total = bp.topo.total_links() as usize;
+        let mut links = Vec::with_capacity(total);
+        for id in 0..total {
+            let (model, cap_b, per_unit, prop) = link_params(&cfg, bp.kinds[id]);
+            links.push(Link::new(model, cap_b, per_unit, prop));
+        }
+
+        let accels = bp.topo.total_accels() as usize;
         let root = Rng::new(cfg.seed);
         let rngs = (0..accels).map(|i| root.fork(i as u64)).collect();
         let feeders = (0..accels)
@@ -416,17 +519,8 @@ impl World {
 
         let warmup = Time::from_us(cfg.warmup_us);
         let end = warmup + Time::from_us(cfg.measure_us);
-        let raw_gbps = n.accel_link.width_lanes * n.accel_link.datarate_gbps;
-        let mean_ia_ps = if cfg.traffic.load > 0.0 {
-            cfg.traffic.msg_size_b as f64 * 8000.0 / (cfg.traffic.load * raw_gbps)
-        } else {
-            f64::INFINITY
-        };
-
-        // (Intra whole-message units vs queue capacities, MTU vs NIC
-        // buffers and leaf divisibility are all rejected by
-        // `SimConfig::validate` above — a unit that cannot fit an empty
-        // downstream queue would stall the simulation forever.)
+        let mean_ia_ps = mean_interarrival_ps(&cfg);
+        let header_b = cfg.node.nic.header_b as u32;
 
         Ok(World {
             metrics: Collector::new(warmup, end),
@@ -437,32 +531,163 @@ impl World {
             pcie_memo: vec![(u32::MAX, Time::ZERO); total],
             tally_scratch: Vec::new(),
             wake_pool: Vec::new(),
+            topo: bp.topo.clone(),
+            blueprint: bp.clone(),
             cfg,
-            topo,
             links,
-            kinds,
             units: Slab::with_capacity(4096),
             msgs: Slab::with_capacity(4096),
             feeders,
             rngs,
             bench,
             coll,
-            pcie_table,
             table_misses: 0,
             injected_msgs: 0,
             completed_msgs: 0,
-            txn_payload,
-            header_b: 0, // set below
+            txn_payload: bp.txn_payload,
+            header_b,
             warmup,
             end,
             mean_ia_ps,
+        })
+    }
+}
+
+/// Per-point link serialization parameters: (model, queue capacity,
+/// per-unit overhead, propagation). Run-phase — rates, depths and
+/// overheads may all differ between sweep points sharing a blueprint —
+/// so both instantiation and [`World::reset`] derive them from the
+/// point's own config.
+fn link_params(cfg: &SimConfig, kind: Kind) -> (LinkModel, u64, Time, Time) {
+    let n = &cfg.node;
+    let inter = &cfg.inter;
+    let hop = Time::from_ns(inter.hop_latency_ns);
+    match kind {
+        Kind::AccelUp { .. } => {
+            (LinkModel::Pcie(n.accel_link), n.accel_queue_b, Time::ZERO, Time::ZERO)
         }
-        .finish_init())
+        Kind::AccelDown { .. } => {
+            (LinkModel::Pcie(n.accel_link), n.switch_queue_b, Time::ZERO, Time::ZERO)
+        }
+        Kind::SwToNic { .. } => (
+            LinkModel::Raw(Gbps(n.nic.intra_side_gbps)),
+            n.switch_queue_b,
+            Time::ZERO,
+            Time::ZERO,
+        ),
+        Kind::NicToSw { .. } => (
+            LinkModel::Raw(Gbps(n.nic.intra_side_gbps)),
+            n.nic.ingress_buf_b,
+            Time::ZERO,
+            Time::ZERO,
+        ),
+        Kind::NicUp { .. } => (
+            LinkModel::Raw(Gbps(n.nic.inter_gbps)),
+            n.nic.egress_buf_b,
+            Time::from_ns(n.nic.per_msg_ns),
+            hop,
+        ),
+        Kind::NicDown { .. } => {
+            (LinkModel::Raw(Gbps(inter.link_gbps)), inter.port_buf_b, Time::ZERO, hop)
+        }
+        Kind::LeafUp { .. } | Kind::SpineDown { .. } => {
+            (LinkModel::Raw(Gbps(inter.link_gbps)), inter.port_buf_b, Time::ZERO, hop)
+        }
+        // Fabric-internal intra links (mesh lanes, ring hops, the
+        // host-tree bridge pair) carry the same PCIe-class transaction
+        // timing as the accel links and queue into switch-depth buffers.
+        Kind::MeshLane { .. }
+        | Kind::RingHop { .. }
+        | Kind::HostUp { .. }
+        | Kind::HostDown { .. } => {
+            (LinkModel::Pcie(n.accel_link), n.switch_queue_b, Time::ZERO, Time::ZERO)
+        }
+    }
+}
+
+/// Mean open-loop inter-arrival time (ps) at each generator under `cfg`.
+fn mean_interarrival_ps(cfg: &SimConfig) -> f64 {
+    let raw_gbps = cfg.node.accel_link.width_lanes * cfg.node.accel_link.datarate_gbps;
+    if cfg.traffic.load > 0.0 {
+        cfg.traffic.msg_size_b as f64 * 8000.0 / (cfg.traffic.load * raw_gbps)
+    } else {
+        f64::INFINITY
+    }
+}
+
+impl World {
+    /// Build a world from scratch: compile a single-use blueprint and
+    /// instantiate it at the same config. Sweep paths instead compile
+    /// once per axis and reuse ([`WorldBlueprint::instantiate`],
+    /// [`World::reset`]).
+    pub fn new(
+        cfg: SimConfig,
+        provider: &dyn SerProvider,
+        bench: BenchMode,
+        extra_sizes: &[u32],
+    ) -> anyhow::Result<World> {
+        let bp = Arc::new(WorldBlueprint::compile(cfg.clone(), provider, bench, extra_sizes)?);
+        WorldBlueprint::instantiate(&bp, cfg)
     }
 
-    fn finish_init(mut self) -> World {
-        self.header_b = self.cfg.node.nic.header_b as u32;
-        self
+    /// The blueprint this world was instantiated from.
+    pub fn blueprint(&self) -> &Arc<WorldBlueprint> {
+        &self.blueprint
+    }
+
+    /// Re-point this world at a new sweep point sharing its blueprint,
+    /// reusing every allocation: links, unit/message slabs, feeders,
+    /// wake pools and scratch all retain capacity; only per-point scalar
+    /// state is rewritten. After `reset` the world is observationally
+    /// identical to a freshly instantiated one — `tests/props_reuse.rs`
+    /// holds the bit-identical-report property across all fabrics,
+    /// multi-NIC policies and workload kinds.
+    pub fn reset(&mut self, cfg: SimConfig) -> anyhow::Result<()> {
+        let bp = self.blueprint.clone();
+        bp.check_point(&cfg)?;
+        let bench = bp.bench_for(&cfg);
+        for (i, link) in self.links.iter_mut().enumerate() {
+            let (model, cap_b, per_unit, prop) = link_params(&cfg, bp.kinds[i]);
+            link.reset(model, cap_b, per_unit, prop);
+        }
+        self.units.clear();
+        self.msgs.clear();
+        for f in &mut self.feeders {
+            f.backlog.clear();
+            f.head_txns_left = 0;
+            f.head_txns = 0;
+            f.parked = false;
+        }
+        let root = Rng::new(cfg.seed);
+        for (i, rng) in self.rngs.iter_mut().enumerate() {
+            *rng = root.fork(i as u64);
+        }
+        let warmup = Time::from_us(cfg.warmup_us);
+        let end = warmup + Time::from_us(cfg.measure_us);
+        self.metrics.reset(warmup, end);
+        self.wire_snapshot.fill(0);
+        self.wire_end.clear();
+        self.coalescing = cfg.coalescing;
+        self.deadlocked = false;
+        for memo in &mut self.pcie_memo {
+            *memo = (u32::MAX, Time::ZERO);
+        }
+        if let Some(cs) = self.coll.as_mut() {
+            let Workload::Collective(spec) = bench else {
+                unreachable!("blueprint has a schedule but the workload is not collective")
+            };
+            cs.reset(spec);
+        }
+        self.table_misses = 0;
+        self.injected_msgs = 0;
+        self.completed_msgs = 0;
+        self.header_b = cfg.node.nic.header_b as u32;
+        self.mean_ia_ps = mean_interarrival_ps(&cfg);
+        self.warmup = warmup;
+        self.end = end;
+        self.bench = bench;
+        self.cfg = cfg;
+        Ok(())
     }
 
     pub fn warmup_time(&self) -> Time {
@@ -510,7 +735,7 @@ impl World {
                 let r = rank as usize;
                 if cs.done[r] {
                     CollAction::Blocked
-                } else if cs.pcs[r] as usize >= cs.steps[r].len() {
+                } else if cs.pcs[r] as usize >= cs.sched.steps[r].len() {
                     cs.done[r] = true;
                     cs.done_count += 1;
                     if cs.done_count == cs.ranks {
@@ -519,7 +744,7 @@ impl World {
                         CollAction::Blocked
                     }
                 } else {
-                    match cs.steps[r][cs.pcs[r] as usize] {
+                    match cs.sched.steps[r][cs.pcs[r] as usize] {
                         Step::Send { peer, size_b } => {
                             cs.pcs[r] += 1;
                             CollAction::Send { peer, size_b }
@@ -627,16 +852,16 @@ impl World {
     fn ser_time(&mut self, l: u32, uid: u32) -> Time {
         let unit = *self.units.get(uid);
         let li = l as usize;
-        let kind = self.kinds[li];
+        let kind = self.blueprint.kinds[li];
         let base = match &self.links[li].model {
             LinkModel::Raw(g) => g.ser_time(self.wire_bytes(kind, unit.payload)),
             LinkModel::Pcie(p) => {
                 if self.pcie_memo[li].0 == unit.payload {
                     self.pcie_memo[li].1
                 } else {
-                    match self.pcie_table.binary_search_by_key(&unit.payload, |e| e.0) {
+                    match self.blueprint.pcie_table.binary_search_by_key(&unit.payload, |e| e.0) {
                         Ok(i) => {
-                            let lat = self.pcie_table[i].1;
+                            let lat = self.blueprint.pcie_table[i].1;
                             self.pcie_memo[li] = (unit.payload, lat);
                             lat
                         }
@@ -801,7 +1026,7 @@ impl World {
             let u = self.units.get(uid);
             (u.src, u.dst)
         };
-        let kind = self.kinds[li];
+        let kind = self.blueprint.kinds[li];
         match self.topo.next_hop(kind, src, dst) {
             Some(nl) => {
                 let ni = nl as usize;
@@ -816,7 +1041,7 @@ impl World {
                     }
                 }
                 let payload = self.units.get(uid).payload;
-                let wire_next = self.wire_bytes(self.kinds[ni], payload);
+                let wire_next = self.wire_bytes(self.blueprint.kinds[ni], payload);
                 if !self.links[ni].has_room(wire_next) {
                     if !self.links[li].parked {
                         self.links[ni].add_waiter(Waker::Link(l));
@@ -870,7 +1095,7 @@ impl World {
             return;
         }
         let bench_feedback = !matches!(self.bench, Workload::None | Workload::Collective(_));
-        let kind = self.kinds[li];
+        let kind = self.blueprint.kinds[li];
         // Only the mesh/ring fabrics mix delivering and forwarding units
         // on one link; star/host-tree delivery links (accel down-links)
         // never forward, so their trains skip the per-unit routing check
@@ -946,7 +1171,7 @@ impl World {
             let uid = self.links[li].queue.pop_front().expect("train unit at queue head");
             let unit = *self.units.get(uid);
             debug_assert_eq!(unit.next, u32::MAX, "train units deliver");
-            let wire = self.wire_bytes(self.kinds[li], unit.payload);
+            let wire = self.wire_bytes(self.blueprint.kinds[li], unit.payload);
             self.links[li].release(wire);
             self.links[li].tx_bytes += wire;
             self.wake_waiters(l, end, q);
@@ -1042,7 +1267,7 @@ impl World {
         let uid = self.links[li].queue.pop_front().expect("busy link has head");
         self.links[li].busy = false;
         let unit = *self.units.get(uid);
-        let kind = self.kinds[li];
+        let kind = self.blueprint.kinds[li];
         let wire_here = self.wire_bytes(kind, unit.payload);
         self.links[li].release(wire_here);
         self.links[li].tx_bytes += wire_here;
@@ -1146,14 +1371,17 @@ impl World {
     /// during a post-window collective drain don't inflate the reported
     /// utilization (the denominator stays the measure window).
     pub fn snapshot_wire_end(&mut self) {
-        self.wire_end = self.links.iter().map(|l| l.tx_bytes).collect();
+        // In-place so a reused world's snapshot buffer keeps its
+        // allocation across sweep points.
+        self.wire_end.clear();
+        self.wire_end.extend(self.links.iter().map(|l| l.tx_bytes));
     }
 
     fn wire_delta_gbs(&self, filter: impl Fn(Kind) -> bool) -> f64 {
         let secs = self.metrics.measure_secs();
         let mut bytes = 0u64;
         for (i, l) in self.links.iter().enumerate() {
-            if filter(self.kinds[i]) {
+            if filter(self.blueprint.kinds[i]) {
                 let at_end = if self.wire_end.is_empty() { l.tx_bytes } else { self.wire_end[i] };
                 bytes += at_end - self.wire_snapshot[i];
             }
@@ -1476,6 +1704,18 @@ impl World {
     pub fn msgs_in_flight(&self) -> usize {
         self.msgs.len()
     }
+
+    /// Backing capacities of the unit/message slabs. Allocation-reuse
+    /// assertions: a reset world re-running the same point must not grow
+    /// these (`tests/props_reuse.rs`).
+    pub fn slab_capacities(&self) -> (usize, usize) {
+        (self.units.capacity(), self.msgs.capacity())
+    }
+
+    /// High-water slot marks of the unit/message slabs for this run.
+    pub fn slab_slots(&self) -> (usize, usize) {
+        (self.units.slots(), self.msgs.slots())
+    }
 }
 
 impl Model for World {
@@ -1665,12 +1905,40 @@ impl Sim {
         bench: BenchMode,
         extra_sizes: &[u32],
     ) -> anyhow::Result<Sim> {
-        let world = World::new(cfg, provider, bench, extra_sizes)?;
-        let mut engine = Engine::new(world);
-        let mut q = std::mem::replace(&mut engine.queue, EventQueue::new());
-        engine.model.prime(&mut q);
-        engine.queue = q;
-        Ok(Sim { engine })
+        Ok(Self::primed(World::new(cfg, provider, bench, extra_sizes)?))
+    }
+
+    /// Instantiate from a shared blueprint at sweep point `cfg` and
+    /// prime. Sweep workers hold one `Sim` per blueprint and re-point it
+    /// across points with [`Sim::reset`].
+    pub fn from_blueprint(bp: &Arc<WorldBlueprint>, cfg: SimConfig) -> anyhow::Result<Sim> {
+        Ok(Self::primed(WorldBlueprint::instantiate(bp, cfg)?))
+    }
+
+    fn primed(world: World) -> Sim {
+        let mut sim = Sim { engine: Engine::new(world) };
+        sim.prime_queue();
+        sim
+    }
+
+    fn prime_queue(&mut self) {
+        let engine = &mut self.engine;
+        engine.model.prime(&mut engine.queue);
+    }
+
+    /// Reuse this sim for a new sweep point: zero-reallocation reset of
+    /// the world, event queue and clock, then re-prime. `cfg` must be a
+    /// run-phase delta of this sim's blueprint. A reset sim produces a
+    /// bit-identical [`SimReport`] (minus `wall_ms`) to a freshly built
+    /// one (`tests/props_reuse.rs`).
+    pub fn reset(&mut self, cfg: SimConfig) -> anyhow::Result<()> {
+        // World::reset validates the point before touching any state, so
+        // a failed reset leaves this sim exactly as it was — only after
+        // it succeeds is the event queue wiped and re-primed.
+        self.engine.model.reset(cfg)?;
+        self.engine.reset();
+        self.prime_queue();
+        Ok(())
     }
 
     /// Run the configured warm-up + measurement windows and report. A
@@ -1695,6 +1963,13 @@ impl Sim {
     /// nothing scheduled and, before this check, no symptom beyond
     /// too-small numbers.
     pub fn try_run(mut self) -> anyhow::Result<SimReport> {
+        self.try_run_mut()
+    }
+
+    /// The reusable form of [`Sim::try_run`]: runs in place so the sim
+    /// (and all its allocations) survives for the next sweep point. A
+    /// sim that already ran must be [`Sim::reset`] before running again.
+    pub fn try_run_mut(&mut self) -> anyhow::Result<SimReport> {
         let t0 = std::time::Instant::now();
         let warmup = self.engine.model.warmup_time();
         let end = self.engine.model.end_time();
@@ -2125,6 +2400,89 @@ mod tests {
             four.inter_tput_gbs,
             one.inter_tput_gbs
         );
+    }
+
+    #[test]
+    fn blueprint_reset_reuse_matches_fresh_build() {
+        let base = small_cfg(0.3, Pattern::C2);
+        let bp = Arc::new(
+            WorldBlueprint::compile(base.clone(), &NativeProvider, BenchMode::None, &[]).unwrap(),
+        );
+        let mut sim = Sim::from_blueprint(&bp, base).unwrap();
+        sim.try_run_mut().unwrap(); // dirty every slab/queue/feeder
+        // A different load/pattern/seed is a run-phase delta.
+        let mut delta = small_cfg(0.7, Pattern::C1);
+        delta.seed = 777;
+        sim.reset(delta.clone()).unwrap();
+        let reused = sim.try_run_mut().unwrap();
+        let fresh = Sim::new(delta, &NativeProvider, BenchMode::None).unwrap().run();
+        assert_eq!(reused.events, fresh.events);
+        assert_eq!(reused.delivered_msgs, fresh.delivered_msgs);
+        assert_eq!(reused.intra_tput_gbs, fresh.intra_tput_gbs);
+        assert_eq!(reused.intra_lat, fresh.intra_lat);
+        assert_eq!(reused.fct, fresh.fct);
+        assert_eq!(reused.table_misses, fresh.table_misses);
+    }
+
+    #[test]
+    fn blueprint_rejects_compile_phase_delta() {
+        let base = small_cfg(0.3, Pattern::C2);
+        let bp = Arc::new(
+            WorldBlueprint::compile(base.clone(), &NativeProvider, BenchMode::None, &[]).unwrap(),
+        );
+        let mut sim = Sim::from_blueprint(&bp, base).unwrap();
+        // A different bandwidth changes the PCIe serialization table —
+        // a compile-phase field, not a run-phase delta.
+        let mut other = presets::scaleout(32, 512.0, Pattern::C2, 0.3);
+        other.warmup_us = 10.0;
+        other.measure_us = 10.0;
+        let err = sim.reset(other).unwrap_err();
+        assert!(format!("{err:#}").contains("run-phase delta"), "{err:#}");
+        // A failed reset is side-effect-free: the sim still accepts a
+        // valid run-phase delta and reproduces a fresh build exactly.
+        let delta = small_cfg(0.4, Pattern::C5);
+        sim.reset(delta.clone()).unwrap();
+        let reused = sim.try_run_mut().unwrap();
+        let fresh = Sim::new(delta, &NativeProvider, BenchMode::None).unwrap().run();
+        assert_eq!(reused.events, fresh.events);
+        assert_eq!(reused.delivered_msgs, fresh.delivered_msgs);
+    }
+
+    #[test]
+    fn collective_iters_is_a_run_phase_delta() {
+        let cfg2 = coll_cfg(CollOp::RingAllReduce, CollScope::PerNode, 64 * 1024, 2);
+        let cfg5 = coll_cfg(CollOp::RingAllReduce, CollScope::PerNode, 64 * 1024, 5);
+        let bp = Arc::new(
+            WorldBlueprint::compile(cfg2.clone(), &NativeProvider, BenchMode::None, &[]).unwrap(),
+        );
+        let mut sim = Sim::from_blueprint(&bp, cfg2).unwrap();
+        let r2 = sim.try_run_mut().unwrap();
+        assert_eq!(r2.coll_iters, 2);
+        sim.reset(cfg5.clone()).unwrap();
+        let r5 = sim.try_run_mut().unwrap();
+        assert_eq!(r5.coll_iters, 5);
+        let fresh = Sim::new(cfg5, &NativeProvider, BenchMode::None).unwrap().run();
+        assert_eq!(r5.coll_time, fresh.coll_time);
+        assert_eq!(r5.events, fresh.events);
+        assert_eq!(r5.coll_pred_ns, fresh.coll_pred_ns);
+    }
+
+    #[test]
+    fn reset_reuse_keeps_slab_capacity_stable() {
+        let cfg = small_cfg(0.5, Pattern::C1);
+        let bp = Arc::new(
+            WorldBlueprint::compile(cfg.clone(), &NativeProvider, BenchMode::None, &[]).unwrap(),
+        );
+        let mut sim = Sim::from_blueprint(&bp, cfg.clone()).unwrap();
+        sim.try_run_mut().unwrap();
+        let (ucap, mcap) = sim.world().slab_capacities();
+        let slots = sim.world().slab_slots();
+        for _ in 0..3 {
+            sim.reset(cfg.clone()).unwrap();
+            sim.try_run_mut().unwrap();
+            assert_eq!(sim.world().slab_capacities(), (ucap, mcap), "reset must not reallocate");
+            assert_eq!(sim.world().slab_slots(), slots, "same point, same high-water marks");
+        }
     }
 
     #[test]

@@ -51,6 +51,14 @@ impl<M: Model> Engine<M> {
         self.queue.push(at, event);
     }
 
+    /// Rewind for reuse: drop all queued events (the queue's allocation
+    /// is retained) and reset the clock to zero. The model is untouched —
+    /// callers reset it separately (`World::reset`).
+    pub fn reset(&mut self) {
+        self.queue.clear();
+        self.now = Time::ZERO;
+    }
+
     /// Run until the queue drains or simulated time exceeds `until`
     /// (events strictly after `until` are left unprocessed).
     pub fn run_until(&mut self, until: Time) -> RunStats {

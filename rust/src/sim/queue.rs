@@ -106,6 +106,23 @@ impl<E> EventQueue<E> {
         }
     }
 
+    /// Drop every queued event and restart the insertion-sequence
+    /// counter, retaining the heap's allocation. A cleared queue is
+    /// observably identical to a fresh one — same FIFO tie-breaking from
+    /// `seq = 0` — which the bit-identical-report reuse property
+    /// (`tests/props_reuse.rs`) depends on.
+    pub fn clear(&mut self) {
+        self.heap.clear();
+        self.front = None;
+        self.seq = 0;
+    }
+
+    /// Reserved heap capacity (allocation-reuse assertions: a cleared,
+    /// refilled queue must not grow this).
+    pub fn capacity(&self) -> usize {
+        self.heap.capacity()
+    }
+
     #[inline]
     pub fn len(&self) -> usize {
         self.heap.len() + usize::from(self.front.is_some())
@@ -213,6 +230,30 @@ mod tests {
             if w[0].0 == w[1].0 {
                 assert!(w[0].1 < w[1].1, "FIFO violated: {:?} then {:?}", w[0], w[1]);
             }
+        }
+    }
+
+    #[test]
+    fn clear_resets_sequence_and_retains_events_capacity() {
+        let mut q = EventQueue::new();
+        for i in 0..5000u32 {
+            q.push(Time::from_ps(5000 - i as u64), i);
+        }
+        let cap = q.capacity();
+        assert!(cap >= 4999, "5k events minus the front slot live in the heap");
+        q.clear();
+        assert!(q.is_empty());
+        assert_eq!(q.len(), 0);
+        assert_eq!(q.capacity(), cap, "clear must keep the heap allocation");
+        // Refilling to the same high-water mark must not reallocate, and
+        // re-pushed equal-timestamp events tie-break exactly like a fresh
+        // queue (seq restarted at 0).
+        for i in 0..5000u32 {
+            q.push(Time::from_ps(7), i);
+        }
+        assert_eq!(q.capacity(), cap);
+        for i in 0..5000u32 {
+            assert_eq!(q.pop().unwrap().1, i);
         }
     }
 

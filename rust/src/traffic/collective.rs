@@ -375,6 +375,17 @@ impl Schedule {
         out
     }
 
+    /// Largest intra-node send of the schedule (source and destination
+    /// share a node of `accels_per_node` ranks). Intra sends travel as
+    /// one whole-message unit and must fit the finite intra queues;
+    /// precomputed at blueprint compile time so the per-point capacity
+    /// check at world instantiation/reset is O(1) instead of
+    /// O(schedule).
+    pub fn max_intra_send(&self, accels_per_node: u32) -> u32 {
+        let a = accels_per_node;
+        self.max_send_where(|s, d| s / a == d / a)
+    }
+
     /// Largest send payload for which `pred(src, dst)` holds (0 if none) —
     /// used to validate intra-node chunks against finite queue capacities.
     pub fn max_send_where(&self, pred: impl Fn(u32, u32) -> bool) -> u32 {

@@ -1,0 +1,278 @@
+//! Reuse equivalence suite: a blueprint-instantiated, reset-reused
+//! `World` must produce a **bit-identical** [`SimReport`] (every field
+//! except `wall_ms` — including the dispatched-event count, since both
+//! engines run the same event sequence) to a freshly constructed one.
+//!
+//! The property is the correctness anchor of the compile-once /
+//! reset-reuse split (`net::world::WorldBlueprint`): it is exercised
+//! across all four intra fabrics, both NIC policies and multi-NIC
+//! counts, and every workload kind (open loop, PingPong, Window, all
+//! collective ops). A materiality check asserts the reuse is real —
+//! slab capacities and high-water marks stay stable across reused
+//! points instead of being reallocated.
+
+use std::sync::Arc;
+
+use sauron::config::{
+    presets, CollOp, CollScope, CollectiveSpec, FabricConfig, FabricKind, NicPolicy, Pattern,
+    SimConfig, Workload,
+};
+use sauron::net::world::{BenchMode, NativeProvider, Sim, SimReport, WorldBlueprint};
+use sauron::testkit::{forall, Choice, FloatRange, Triple};
+
+/// Compare every result-describing field; only `wall_ms` is excluded.
+fn reports_identical(reused: &SimReport, fresh: &SimReport) -> Result<(), String> {
+    macro_rules! field_eq {
+        ($field:ident) => {
+            if reused.$field != fresh.$field {
+                return Err(format!(
+                    "field {} differs: {:?} (reused) vs {:?} (fresh)",
+                    stringify!($field),
+                    reused.$field,
+                    fresh.$field
+                ));
+            }
+        };
+    }
+    field_eq!(pattern);
+    field_eq!(load);
+    field_eq!(nodes);
+    field_eq!(accels);
+    field_eq!(fabric);
+    field_eq!(nics);
+    field_eq!(aggregated_intra_gbs);
+    field_eq!(offered_gbs);
+    field_eq!(intra_tput_gbs);
+    field_eq!(intra_drain_gbs);
+    field_eq!(intra_lat);
+    field_eq!(inter_tput_gbs);
+    field_eq!(inter_drain_gbs);
+    field_eq!(fct);
+    field_eq!(intra_wire_gbs);
+    field_eq!(inter_wire_gbs);
+    field_eq!(drop_frac);
+    field_eq!(delivered_msgs);
+    field_eq!(offered_msgs);
+    field_eq!(events);
+    field_eq!(table_misses);
+    field_eq!(coll_op);
+    field_eq!(coll_size_b);
+    field_eq!(coll_iters);
+    field_eq!(coll_time);
+    field_eq!(coll_pred_ns);
+    Ok(())
+}
+
+/// Dirty a blueprint-pinned sim on `first`, reset it to `second`, and
+/// compare the reused run against a from-scratch build of `second`.
+fn check_reuse(first: SimConfig, second: SimConfig) -> Result<(), String> {
+    let bp = Arc::new(
+        WorldBlueprint::compile(first.clone(), &NativeProvider, BenchMode::None, &[])
+            .map_err(|e| format!("compile: {e:#}"))?,
+    );
+    let mut sim =
+        Sim::from_blueprint(&bp, first).map_err(|e| format!("instantiate: {e:#}"))?;
+    sim.try_run_mut().map_err(|e| format!("first run: {e:#}"))?;
+    sim.reset(second.clone()).map_err(|e| format!("reset: {e:#}"))?;
+    let reused = sim.try_run_mut().map_err(|e| format!("reused run: {e:#}"))?;
+    let fresh = Sim::new(second, &NativeProvider, BenchMode::None)
+        .map_err(|e| format!("fresh build: {e:#}"))?
+        .try_run()
+        .map_err(|e| format!("fresh run: {e:#}"))?;
+    reports_identical(&reused, &fresh)
+}
+
+fn fabric_cfg(
+    kind: FabricKind,
+    nics: usize,
+    policy: NicPolicy,
+    load: f64,
+    pattern: Pattern,
+    seed: u64,
+) -> SimConfig {
+    let mut fab = FabricConfig::new(kind, nics);
+    fab.nic_policy = policy;
+    let mut cfg = presets::with_fabric(presets::scaleout(32, 256.0, pattern, load), fab);
+    cfg.warmup_us = 5.0;
+    cfg.measure_us = 10.0;
+    cfg.seed = seed;
+    cfg
+}
+
+#[test]
+fn prop_open_loop_reuse_identical_across_fabrics_and_policies() {
+    // Load capped below saturation: at sustained overload the ring
+    // fabric can hit its (diagnosed) credit-cycle deadlock, which is a
+    // legitimate outcome but not a report to compare.
+    let gen = Triple(
+        Choice(&FabricKind::ALL),
+        Choice(&[
+            (1usize, NicPolicy::LocalRank),
+            (2, NicPolicy::LocalRank),
+            (2, NicPolicy::RoundRobin),
+            (4, NicPolicy::RoundRobin),
+        ]),
+        FloatRange { lo: 0.05, hi: 0.45 },
+    );
+    forall(0x2E05E, 10, &gen, |&(kind, (nics, policy), load)| {
+        // The dirtying point and the measured point differ in load,
+        // pattern and seed — all run-phase deltas of one blueprint.
+        let first = fabric_cfg(kind, nics, policy, (load * 0.5).max(0.05), Pattern::C1, 7);
+        let second = fabric_cfg(kind, nics, policy, load, Pattern::C3, 0xD15EA5E);
+        check_reuse(first, second)
+            .map_err(|e| format!("{kind:?}/{nics}nic/{policy:?}/{load:.3}: {e}"))
+    });
+}
+
+#[test]
+fn prop_collective_reuse_identical_with_iters_delta() {
+    let gen = Triple(
+        Choice(&[
+            CollOp::RingAllReduce,
+            CollOp::ReduceScatter,
+            CollOp::AllGather,
+            CollOp::AllToAll,
+        ]),
+        Choice(&[16u64 * 1024, 64 * 1024]),
+        Choice(&[0.0f64, 0.3]),
+    );
+    forall(0x2E05C, 8, &gen, |&(op, size_b, bg_load)| {
+        let base = |iters: u32, seed: u64| {
+            let mut cfg = presets::scaleout(32, 256.0, Pattern::C2, bg_load);
+            cfg.warmup_us = 5.0;
+            cfg.measure_us = 10.0;
+            cfg.seed = seed;
+            cfg.workload = Workload::Collective(CollectiveSpec {
+                op,
+                scope: CollScope::PerNode,
+                size_b,
+                iters,
+            });
+            cfg
+        };
+        // `iters` is the one workload knob that is a run-phase delta.
+        check_reuse(base(2, 11), base(3, 0xBEEF))
+            .map_err(|e| format!("{op:?}/{size_b}/{bg_load}: {e}"))
+    });
+}
+
+#[test]
+fn hierarchical_multinic_reuse_identical() {
+    // The paper's interference scenario: global two-level AllReduce over
+    // all-inter background traffic, leader-based inter exchange on 2
+    // NICs. The reused world must reproduce it bit-for-bit.
+    let cfg = |seed: u64, bg_load: f64| {
+        let mut cfg = presets::scaleout(32, 256.0, Pattern::Custom { frac_inter: 1.0 }, bg_load);
+        cfg = presets::with_fabric(cfg, FabricConfig::new(FabricKind::SwitchStar, 2));
+        cfg.warmup_us = 5.0;
+        cfg.measure_us = 20.0;
+        cfg.seed = seed;
+        cfg.workload = Workload::Collective(CollectiveSpec {
+            op: CollOp::HierarchicalAllReduce,
+            scope: CollScope::Global,
+            size_b: 256 * 1024,
+            iters: 2,
+        });
+        cfg
+    };
+    check_reuse(cfg(1, 0.1), cfg(99, 0.2)).unwrap();
+}
+
+#[test]
+fn bench_driver_reuse_identical() {
+    // PingPong and Window are explicit-bench workloads: the bench (and
+    // its table-priming sizes) is pinned by the blueprint, the per-point
+    // config varies seed and windows.
+    for (bench, sizes) in [
+        // Inter-node endpoints so the FCT sanity check below sees traffic.
+        (BenchMode::PingPong { a: 0, b: 17, size_b: 4096 }, vec![4096u32]),
+        (BenchMode::Window { src: 0, dst: 9, size_b: 1 << 16, inflight: 4 }, vec![1 << 16]),
+    ] {
+        let cfg = |seed: u64, measure_us: f64| {
+            let mut cfg = presets::scaleout(32, 256.0, Pattern::C5, 0.0);
+            cfg.warmup_us = 5.0;
+            cfg.measure_us = measure_us;
+            cfg.seed = seed;
+            cfg
+        };
+        let bp = Arc::new(
+            WorldBlueprint::compile(cfg(1, 20.0), &NativeProvider, bench, &sizes).unwrap(),
+        );
+        let mut sim = Sim::from_blueprint(&bp, cfg(1, 20.0)).unwrap();
+        sim.try_run_mut().unwrap();
+        sim.reset(cfg(2, 30.0)).unwrap();
+        let reused = sim.try_run_mut().unwrap();
+        let fresh = Sim::with_extra_sizes(cfg(2, 30.0), &NativeProvider, bench, &sizes)
+            .unwrap()
+            .try_run()
+            .unwrap();
+        reports_identical(&reused, &fresh).unwrap_or_else(|e| panic!("{bench:?}: {e}"));
+        assert!(reused.fct.count > 0, "{bench:?}: sanity — traffic flowed");
+    }
+}
+
+#[test]
+fn reuse_is_material_allocations_and_high_water_stay_stable() {
+    // Re-running the same point through reset must reuse the first run's
+    // allocations: slab backing capacity unchanged (nothing reallocated)
+    // and slot high-water marks identical (same simulated work).
+    let mut cfg = presets::scaleout(32, 256.0, Pattern::C1, 0.6);
+    cfg.warmup_us = 5.0;
+    cfg.measure_us = 10.0;
+    let bp = Arc::new(
+        WorldBlueprint::compile(cfg.clone(), &NativeProvider, BenchMode::None, &[]).unwrap(),
+    );
+    let mut sim = Sim::from_blueprint(&bp, cfg.clone()).unwrap();
+    let first = sim.try_run_mut().unwrap();
+    let caps = sim.world().slab_capacities();
+    let slots = sim.world().slab_slots();
+    assert!(slots.0 > 0 && slots.1 > 0, "sanity: the run used the slabs");
+    for round in 0..3 {
+        sim.reset(cfg.clone()).unwrap();
+        let again = sim.try_run_mut().unwrap();
+        reports_identical(&again, &first).unwrap_or_else(|e| panic!("round {round}: {e}"));
+        assert_eq!(
+            sim.world().slab_capacities(),
+            caps,
+            "round {round}: reset reallocated slab storage"
+        );
+        assert_eq!(
+            sim.world().slab_slots(),
+            slots,
+            "round {round}: high-water marks moved on an identical point"
+        );
+    }
+}
+
+#[test]
+fn blueprint_is_shareable_across_threads() {
+    // The sweep path hands one Arc'd blueprint to every worker; two
+    // threads instantiating and running different points concurrently
+    // must each match their fresh builds.
+    let point = |load: f64, seed: u64| {
+        let mut cfg = presets::scaleout(32, 256.0, Pattern::C2, load);
+        cfg.warmup_us = 5.0;
+        cfg.measure_us = 10.0;
+        cfg.seed = seed;
+        cfg
+    };
+    let bp = Arc::new(
+        WorldBlueprint::compile(point(0.2, 1), &NativeProvider, BenchMode::None, &[]).unwrap(),
+    );
+    let handles: Vec<_> = [(0.2f64, 1u64), (0.4, 2), (0.6, 3), (0.8, 4)]
+        .into_iter()
+        .map(|(load, seed)| {
+            let bp = bp.clone();
+            std::thread::spawn(move || {
+                let mut sim = Sim::from_blueprint(&bp, point(load, seed)).unwrap();
+                let reused = sim.try_run_mut().unwrap();
+                let fresh =
+                    Sim::new(point(load, seed), &NativeProvider, BenchMode::None).unwrap().run();
+                reports_identical(&reused, &fresh).unwrap();
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().expect("worker panicked");
+    }
+}
