@@ -56,6 +56,7 @@ fn main() -> anyhow::Result<()> {
         loads: vec![0.2, 0.4, 0.6, 0.8, 1.0],
         fabric: sauron::config::FabricConfig::switch_star(),
         paper_windows: false,
+        telemetry: false,
         workers: coordinator::default_workers(),
         seed: 0x11A,
     };

@@ -17,6 +17,15 @@ mean). Benchmarks present on only one side are reported but never fail
 the comparison (machines differ in which optional benches run, e.g. the
 PJRT table build). Exit status: 0 = within bounds, 1 = regression,
 2 = usage/parse error.
+
+The world benches also record their deterministic work unit
+(`units_per_iter` — the scalar-equivalent event count of the config;
+all bench arms run telemetry-off). A units mismatch between baseline
+and fresh means the *simulation itself* changed behavior, not just its
+speed — reported as EVENTS-DRIFT, and a failure when
+``--require-equal-units`` is passed (CI does; a drift is expected
+exactly once per intentional engine-semantics change, cleared by
+regenerating the committed baseline).
 """
 
 import argparse
@@ -33,6 +42,21 @@ def load(path):
     for b in doc.get("benches", []):
         out[b["name"]] = b
     return out
+
+
+def compare_units(base, fresh):
+    """Names whose recorded work units (event counts) drifted."""
+    drifted = []
+    for name in sorted(set(base) & set(fresh)):
+        bu, fu = base[name].get("units_per_iter"), fresh[name].get("units_per_iter")
+        if bu is None or fu is None:
+            continue
+        if abs(bu - fu) > 0.5:  # event counts are integers carried as f64
+            print(
+                f"  {name:<44} {bu:>14.0f} -> {fu:>14.0f} units  EVENTS-DRIFT"
+            )
+            drifted.append(name)
+    return drifted
 
 
 def compare_pair(base, fresh, max_regression):
@@ -78,6 +102,13 @@ def main():
         default=2.0,
         help="fail when fresh is worse than baseline by more than this factor",
     )
+    ap.add_argument(
+        "--require-equal-units",
+        action="store_true",
+        help="fail when a benchmark's recorded work units (telemetry-off "
+        "scalar-equivalent event count) differ from the baseline's — a "
+        "simulation-behavior change, not a perf change",
+    )
     args = ap.parse_args()
 
     if len(args.files) < 2 or len(args.files) % 2 != 0:
@@ -89,6 +120,7 @@ def main():
         return 2
 
     failed = []
+    drifted = []
     for base_path, fresh_path in zip(args.files[0::2], args.files[1::2]):
         try:
             base = load(base_path)
@@ -98,7 +130,14 @@ def main():
             return 2
         print(f"{base_path} vs {fresh_path}:")
         failed.extend(compare_pair(base, fresh, args.max_regression))
+        drifted.extend(compare_units(base, fresh))
 
+    if drifted and args.require_equal_units:
+        print(f"bench_compare: {len(drifted)} benchmark(s) changed their "
+              f"telemetry-off event counts vs baseline: {', '.join(drifted)} "
+              "(simulation behavior changed; regenerate the committed "
+              "baseline if intentional)", file=sys.stderr)
+        return 1
     if failed:
         print(f"bench_compare: {len(failed)} benchmark(s) regressed >"
               f"{args.max_regression}x: {', '.join(failed)}", file=sys.stderr)

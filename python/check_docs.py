@@ -1,0 +1,115 @@
+#!/usr/bin/env python3
+"""Docs link checker: every relative link in docs/*.md and every anchor
+in README.md / EXPERIMENTS.md must resolve.
+
+Checks, for each markdown file in the set (README.md, EXPERIMENTS.md,
+docs/*.md):
+
+* ``[text](relative/path)``   -> the file exists relative to the
+  referencing file's directory;
+* ``[text](path#anchor)``     -> the file exists AND contains a heading
+  whose GitHub-style slug equals ``anchor``;
+* ``[text](#anchor)``         -> the same file contains the heading.
+
+``http(s)://`` and ``mailto:`` targets are skipped (the build image is
+offline). Exit status: 0 = all links resolve, 1 = broken links found.
+
+Run from the repository root (CI does): ``python3 python/check_docs.py``.
+"""
+
+import glob
+import os
+import re
+import sys
+
+LINK_RE = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$")
+CODE_FENCE_RE = re.compile(r"^(```|~~~)")
+
+
+def slugify(heading):
+    """GitHub-style anchor slug: lowercase, drop punctuation, dash-join."""
+    # Strip code/emphasis markers but keep in-word underscores, which
+    # GitHub preserves in slugs.
+    text = re.sub(r"[`*]", "", heading.strip())
+    text = re.sub(r"[^\w\- ]", "", text, flags=re.UNICODE)
+    return text.lower().replace(" ", "-")
+
+
+def headings_of(path):
+    slugs = set()
+    in_fence = False
+    with open(path, "r", encoding="utf-8") as f:
+        for line in f:
+            if CODE_FENCE_RE.match(line):
+                in_fence = not in_fence
+                continue
+            if in_fence:
+                continue
+            m = HEADING_RE.match(line)
+            if m:
+                slugs.add(slugify(m.group(1)))
+    return slugs
+
+
+def links_of(path):
+    """(target, line_number) pairs outside fenced code blocks."""
+    out = []
+    in_fence = False
+    with open(path, "r", encoding="utf-8") as f:
+        for i, line in enumerate(f, 1):
+            if CODE_FENCE_RE.match(line):
+                in_fence = not in_fence
+                continue
+            if in_fence:
+                continue
+            for m in LINK_RE.finditer(line):
+                out.append((m.group(1), i))
+    return out
+
+
+def check_file(path, heading_cache):
+    errors = []
+    base = os.path.dirname(path)
+    for target, line in links_of(path):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        file_part, _, anchor = target.partition("#")
+        dest = path if not file_part else os.path.normpath(os.path.join(base, file_part))
+        if not os.path.isfile(dest):
+            errors.append(f"{path}:{line}: broken link '{target}' (no file {dest})")
+            continue
+        if anchor:
+            if not dest.endswith(".md"):
+                continue  # anchors into non-markdown files are not checked
+            if dest not in heading_cache:
+                heading_cache[dest] = headings_of(dest)
+            if anchor.lower() not in heading_cache[dest]:
+                errors.append(
+                    f"{path}:{line}: anchor '#{anchor}' not found in {dest}"
+                )
+    return errors
+
+
+def main():
+    files = ["README.md", "EXPERIMENTS.md"] + sorted(glob.glob("docs/*.md"))
+    missing = [f for f in files if not os.path.isfile(f)]
+    if missing:
+        print(f"check_docs: missing expected files: {', '.join(missing)}", file=sys.stderr)
+        return 1
+    heading_cache = {}
+    errors = []
+    for f in files:
+        errors.extend(check_file(f, heading_cache))
+    if errors:
+        for e in errors:
+            print(e, file=sys.stderr)
+        print(f"check_docs: {len(errors)} broken link(s)", file=sys.stderr)
+        return 1
+    n_links = sum(len(links_of(f)) for f in files)
+    print(f"check_docs: {len(files)} files, {n_links} links, all resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -36,10 +36,14 @@ impl Model for Spin {
 }
 
 /// Scalar-equivalent event count of `cfg` — the logical unit of work a
-/// world benchmark divides wall time by.
+/// world benchmark divides wall time by. All bench arms run with
+/// telemetry off (the preset default), so this count is the
+/// deterministic engine-behavior fingerprint `python/bench_compare.py
+/// --require-equal-units` diffs against the committed baseline.
 fn scalar_events(cfg: &SimConfig) -> f64 {
     let mut scalar = cfg.clone();
     scalar.coalescing = false;
+    assert!(!scalar.telemetry.enabled, "bench arms are telemetry-off by contract");
     Sim::new(scalar, &NativeProvider, BenchMode::None).unwrap().run().events as f64
 }
 

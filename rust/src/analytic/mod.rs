@@ -4,7 +4,7 @@
 //! (paper §3.2 PCIe timing; α-β ring collectives). The test suite asserts
 //! this mirror agrees with the AOT-compiled HLO executed through PJRT, so
 //! the simulator's hot path can consume either source interchangeably (see
-//! [`crate::runtime::Backend`]). The HLO path is the default; this module
+//! [`crate::runtime::Runtime`]). The HLO path is the default; this module
 //! is the documented fallback and the cross-check oracle.
 
 
@@ -112,12 +112,16 @@ impl PcieParams {
 /// `COLL_PARAM_LAYOUT` / the `f32[3]` artifact input.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct CollParams {
+    /// Participating devices.
     pub n_devices: f64,
+    /// Per-message latency term (ns).
     pub alpha_ns: f64,
+    /// Per-byte cost (ns/B).
     pub beta_ns_per_b: f64,
 }
 
 impl CollParams {
+    /// Flatten to the `f32[3]` layout consumed by the HLO artifacts.
     pub fn to_f32_vec(&self) -> Vec<f32> {
         vec![self.n_devices as f32, self.alpha_ns as f32, self.beta_ns_per_b as f32]
     }

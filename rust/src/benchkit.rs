@@ -18,21 +18,29 @@ use crate::serial::json::{ToJson, Value};
 /// One benchmark's measurement.
 #[derive(Debug, Clone)]
 pub struct Measurement {
+    /// Benchmark name (stable across runs; the comparison key).
     pub name: String,
+    /// Timed iterations sampled.
     pub iters: u64,
+    /// Mean wall time per iteration.
     pub mean: Duration,
+    /// Standard deviation over iteration timings.
     pub stddev: Duration,
+    /// Fastest iteration.
     pub min: Duration,
+    /// Slowest iteration.
     pub max: Duration,
     /// Optional throughput annotation: (units_per_iter, unit label).
     pub throughput: Option<(f64, &'static str)>,
 }
 
 impl Measurement {
+    /// Throughput in units/second, when annotated.
     pub fn per_second(&self) -> Option<f64> {
         self.throughput.map(|(units, _)| units / self.mean.as_secs_f64())
     }
 
+    /// One grep-friendly result line.
     pub fn render(&self) -> String {
         let mut s = format!(
             "bench {:<44} {:>12} ± {:>10}  (min {:>12}, {} iters)",
@@ -102,10 +110,12 @@ pub struct Bench {
     pub warmup_time: Duration,
     /// Max sample iterations (cap for very slow benchmarks).
     pub max_iters: u64,
+    /// Accumulated measurements, in registration order.
     pub results: Vec<Measurement>,
 }
 
 impl Bench {
+    /// Harness with the default (env-overridable) time budgets.
     pub fn new() -> Bench {
         // Heavy end-to-end simulations: keep bench budgets modest; override
         // with SAURON_BENCH_MS / SAURON_BENCH_FAST env vars.
@@ -129,7 +139,8 @@ impl Bench {
         })
     }
 
-    /// Like [`bench`] but annotates units/iteration (e.g. simulated events).
+    /// Like [`Bench::bench`] but annotates units/iteration (e.g.
+    /// simulated events).
     pub fn bench_units<T>(
         &mut self,
         name: &str,

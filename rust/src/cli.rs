@@ -10,9 +10,11 @@ use std::collections::BTreeMap;
 /// Parsed command line: subcommand + options + positionals.
 #[derive(Debug, Clone, Default)]
 pub struct Args {
+    /// First bare word (the command).
     pub subcommand: Option<String>,
     opts: BTreeMap<String, Vec<String>>,
     flags: Vec<String>,
+    /// Bare words after the subcommand.
     pub positional: Vec<String>,
     consumed: std::cell::RefCell<Vec<String>>,
 }
@@ -41,6 +43,7 @@ impl Args {
         Ok(out)
     }
 
+    /// Parse the process arguments (skipping argv[0]).
     pub fn from_env() -> anyhow::Result<Args> {
         Args::parse(std::env::args().skip(1))
     }
@@ -61,6 +64,7 @@ impl Args {
         self.opts.get(key).and_then(|v| v.last()).map(|s| s.as_str())
     }
 
+    /// Last occurrence of `--key value`, parsed as `T`.
     pub fn opt_parse<T: std::str::FromStr>(&self, key: &str) -> anyhow::Result<Option<T>>
     where
         T::Err: std::fmt::Display,
@@ -74,6 +78,7 @@ impl Args {
         }
     }
 
+    /// Like [`Args::opt_parse`] with a default for an absent option.
     pub fn get_or<T: std::str::FromStr>(&self, key: &str, default: T) -> anyhow::Result<T>
     where
         T::Err: std::fmt::Display,

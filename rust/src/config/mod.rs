@@ -44,6 +44,7 @@ impl Pattern {
         }
     }
 
+    /// Display name (figure legends, CSV).
     pub fn name(self) -> String {
         match self {
             Pattern::C1 => "C1".into(),
@@ -55,6 +56,7 @@ impl Pattern {
         }
     }
 
+    /// The five patterns of the paper's figures.
     pub const PAPER: [Pattern; 5] =
         [Pattern::C1, Pattern::C2, Pattern::C3, Pattern::C4, Pattern::C5];
 }
@@ -79,6 +81,7 @@ pub enum CollOp {
 }
 
 impl CollOp {
+    /// Stable snake_case name (CSV/JSON key).
     pub fn name(self) -> &'static str {
         match self {
             CollOp::RingAllReduce => "ring_allreduce",
@@ -89,6 +92,7 @@ impl CollOp {
         }
     }
 
+    /// Parse a collective-op name (accepts common aliases).
     pub fn parse(s: &str) -> anyhow::Result<CollOp> {
         Ok(match s {
             "ring_allreduce" | "allreduce" => CollOp::RingAllReduce,
@@ -100,6 +104,7 @@ impl CollOp {
         })
     }
 
+    /// Every collective op.
     pub const ALL: [CollOp; 5] = [
         CollOp::RingAllReduce,
         CollOp::ReduceScatter,
@@ -121,6 +126,7 @@ pub enum CollScope {
 }
 
 impl CollScope {
+    /// Stable name (CSV/JSON key).
     pub fn name(self) -> &'static str {
         match self {
             CollScope::Global => "global",
@@ -128,6 +134,7 @@ impl CollScope {
         }
     }
 
+    /// Parse a scope name.
     pub fn parse(s: &str) -> anyhow::Result<CollScope> {
         Ok(match s {
             "global" => CollScope::Global,
@@ -142,7 +149,9 @@ impl CollScope {
 /// `iters` times with a global barrier between iterations.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct CollectiveSpec {
+    /// Collective operation.
     pub op: CollOp,
+    /// Participation scope.
     pub scope: CollScope,
     /// Total collective payload per rank in bytes (the buffer size an
     /// application would pass to the collective call).
@@ -168,6 +177,7 @@ pub enum Workload {
 }
 
 impl Workload {
+    /// True for [`Workload::None`] (open-loop only).
     pub fn is_none(&self) -> bool {
         matches!(self, Workload::None)
     }
@@ -198,6 +208,7 @@ pub enum FabricKind {
 }
 
 impl FabricKind {
+    /// Stable name (CSV/JSON key).
     pub fn name(self) -> &'static str {
         match self {
             FabricKind::SwitchStar => "switch_star",
@@ -207,6 +218,7 @@ impl FabricKind {
         }
     }
 
+    /// Parse a fabric name (accepts common aliases).
     pub fn parse(s: &str) -> anyhow::Result<FabricKind> {
         Ok(match s {
             "switch_star" | "star" | "switch" => FabricKind::SwitchStar,
@@ -217,6 +229,7 @@ impl FabricKind {
         })
     }
 
+    /// Every fabric kind.
     pub const ALL: [FabricKind; 4] =
         [FabricKind::SwitchStar, FabricKind::Mesh, FabricKind::Ring, FabricKind::HostTree];
 }
@@ -234,6 +247,7 @@ pub enum NicPolicy {
 }
 
 impl NicPolicy {
+    /// Stable name (CSV/JSON key).
     pub fn name(self) -> &'static str {
         match self {
             NicPolicy::LocalRank => "local_rank",
@@ -241,6 +255,7 @@ impl NicPolicy {
         }
     }
 
+    /// Parse a NIC-policy name (accepts common aliases).
     pub fn parse(s: &str) -> anyhow::Result<NicPolicy> {
         Ok(match s {
             "local_rank" | "local" | "affinity" => NicPolicy::LocalRank,
@@ -255,14 +270,17 @@ impl NicPolicy {
 /// the original single-NIC switch-star model bit-for-bit).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct FabricConfig {
+    /// Fabric topology.
     pub kind: FabricKind,
     /// NICs per node (paper systems: 1–4). Each NIC gets its own
     /// switch↔NIC staging links and inter up/down links.
     pub nics_per_node: usize,
+    /// Egress NIC-selection policy.
     pub nic_policy: NicPolicy,
 }
 
 impl FabricConfig {
+    /// The original model: single NIC behind the intra switch.
     pub fn switch_star() -> FabricConfig {
         FabricConfig {
             kind: FabricKind::SwitchStar,
@@ -271,6 +289,7 @@ impl FabricConfig {
         }
     }
 
+    /// A fabric with the default rail-affinity NIC policy.
     pub fn new(kind: FabricKind, nics_per_node: usize) -> FabricConfig {
         FabricConfig { kind, nics_per_node, nic_policy: NicPolicy::LocalRank }
     }
@@ -279,6 +298,34 @@ impl FabricConfig {
 impl Default for FabricConfig {
     fn default() -> Self {
         FabricConfig::switch_star()
+    }
+}
+
+/// Per-link flow-class telemetry controls (`metrics::telemetry`): when
+/// `enabled`, the world accumulates per-link × per-[`TrafficClass`]
+/// wire bytes, busy time, a time-binned utilization series, queue
+/// high-water marks and head-of-line blocking time, surfaced as
+/// `SimReport::link_stats`. Off by default — the accounting is strictly
+/// observational and every pre-existing report field stays bit-identical
+/// either way (`rust/tests/props_telemetry.rs`), but the hot path keeps
+/// zero overhead when disabled. A **run-phase** knob: it is not part of
+/// [`SimConfig::blueprint_fingerprint`], so sweep points sharing a
+/// blueprint may toggle it freely.
+///
+/// [`TrafficClass`]: crate::metrics::TrafficClass
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TelemetryConfig {
+    /// Accumulate per-link per-class telemetry for this run.
+    pub enabled: bool,
+    /// Number of time bins for the utilization series over
+    /// `[0, warmup + measure)` (completions past the window clamp into
+    /// the last bin).
+    pub bins: u32,
+}
+
+impl Default for TelemetryConfig {
+    fn default() -> Self {
+        TelemetryConfig { enabled: false, bins: 20 }
     }
 }
 
@@ -361,9 +408,11 @@ pub struct InterConfig {
 }
 
 impl InterConfig {
+    /// Nodes attached to each leaf switch.
     pub fn nodes_per_leaf(&self) -> usize {
         self.nodes / self.leaves
     }
+    /// Total inter switches (leaves + spines).
     pub fn total_switches(&self) -> usize {
         self.leaves + self.spines
     }
@@ -372,25 +421,31 @@ impl InterConfig {
 /// Traffic generation configuration.
 #[derive(Clone, Debug, PartialEq)]
 pub struct TrafficConfig {
+    /// Intra/inter destination split.
     pub pattern: Pattern,
     /// Message size generated at accelerators (paper: 4 KiB).
     pub msg_size_b: u64,
     /// Offered load as a fraction of each accelerator link's capacity
     /// (0.0–1.0).
     pub load: f64,
+    /// Inter-arrival process.
     pub arrival: Arrival,
 }
 
 /// Full simulation configuration.
 #[derive(Clone, Debug, PartialEq)]
 pub struct SimConfig {
+    /// Root RNG seed (each accelerator forks a stream from it).
     pub seed: u64,
     /// Warm-up window (metrics ignored), µs. Paper: 2500 µs.
     pub warmup_us: f64,
     /// Measurement window, µs. Paper: 500 µs.
     pub measure_us: f64,
+    /// Per-end-node model.
     pub node: NodeConfig,
+    /// Inter-node network model.
     pub inter: InterConfig,
+    /// Open-loop traffic generators.
     pub traffic: TrafficConfig,
     /// Closed-loop workload (collectives / bench drivers) running on top
     /// of — or instead of — the open-loop generators.
@@ -402,17 +457,23 @@ pub struct SimConfig {
     /// bit-for-bit — so this stays on except when forcing the scalar
     /// reference engine.
     pub coalescing: bool,
+    /// Per-link flow-class telemetry (off by default; `--telemetry` on
+    /// the CLI). JSON-optional for pre-telemetry config files.
+    pub telemetry: TelemetryConfig,
 }
 
 impl SimConfig {
+    /// Parse a config from JSON text.
     pub fn from_json_str(text: &str) -> anyhow::Result<SimConfig> {
         SimConfig::from_json(&Value::parse(text)?)
     }
 
+    /// Serialize to pretty JSON.
     pub fn to_json_string(&self) -> String {
         self.to_json().pretty()
     }
 
+    /// Load a config from a JSON file.
     pub fn load(path: &std::path::Path) -> anyhow::Result<SimConfig> {
         SimConfig::from_json_str(&std::fs::read_to_string(path)?)
     }
@@ -498,6 +559,12 @@ impl SimConfig {
         }
         if self.measure_us <= 0.0 {
             return Err("measure window must be positive".into());
+        }
+        if self.telemetry.bins == 0 || self.telemetry.bins > 100_000 {
+            return Err(format!(
+                "telemetry.bins {} outside 1..=100000",
+                self.telemetry.bins
+            ));
         }
         self.validate_workload(&self.workload)?;
         Ok(())
@@ -615,8 +682,11 @@ impl SimConfig {
 
 /// Reasonable default buffer sizes used by presets.
 pub const DEFAULT_ACCEL_QUEUE: u64 = 256 * KIB;
+/// Default intra-switch port queue (bytes).
 pub const DEFAULT_SWITCH_QUEUE: u64 = 256 * KIB;
+/// Default NIC staging buffer (bytes).
 pub const DEFAULT_NIC_BUF: u64 = MIB_;
+/// Default inter-switch port buffer (bytes).
 pub const DEFAULT_PORT_BUF: u64 = 256 * KIB;
 const MIB_: u64 = 1024 * 1024;
 
@@ -710,6 +780,31 @@ impl FromJson for Workload {
             },
             other => anyhow::bail!("bad workload value {other:?}"),
         }
+    }
+}
+
+impl ToJson for TelemetryConfig {
+    fn to_json(&self) -> Value {
+        Value::obj().with("enabled", self.enabled).with("bins", self.bins)
+    }
+}
+
+impl FromJson for TelemetryConfig {
+    fn from_json(v: &Value) -> anyhow::Result<TelemetryConfig> {
+        Ok(TelemetryConfig {
+            enabled: v.bool_of("enabled")?,
+            // Optional: files that only flip the switch get the default
+            // bin count. Checked narrowing — a silently wrapped value
+            // would bin a very different series than the file describes.
+            bins: match v.get("bins") {
+                Some(b) => {
+                    let n = b.as_u64()?;
+                    anyhow::ensure!(n <= u32::MAX as u64, "telemetry.bins {n} exceeds u32");
+                    n as u32
+                }
+                None => TelemetryConfig::default().bins,
+            },
+        })
     }
 }
 
@@ -904,6 +999,7 @@ impl ToJson for SimConfig {
             .with("traffic", self.traffic.to_json())
             .with("workload", self.workload.to_json())
             .with("coalescing", self.coalescing)
+            .with("telemetry", self.telemetry.to_json())
     }
 }
 
@@ -925,6 +1021,11 @@ impl FromJson for SimConfig {
             coalescing: match v.get("coalescing") {
                 Some(b) => b.as_bool()?,
                 None => true,
+            },
+            // Optional (default off) so pre-telemetry config files parse.
+            telemetry: match v.get("telemetry") {
+                Some(t) => TelemetryConfig::from_json(t)?,
+                None => TelemetryConfig::default(),
             },
         })
     }
@@ -1173,6 +1274,45 @@ mod tests {
             coll(1 << 16, 2).blueprint_fingerprint(),
             coll(1 << 17, 2).blueprint_fingerprint()
         );
+    }
+
+    #[test]
+    fn telemetry_defaults_off_and_is_a_run_phase_delta() {
+        let cfg = scaleout(32, 256.0, Pattern::C1, 0.2);
+        assert!(!cfg.telemetry.enabled, "telemetry must default off");
+        assert_eq!(cfg.telemetry.bins, 20);
+        // Round-trips through JSON.
+        let mut on = cfg.clone();
+        on.telemetry = TelemetryConfig { enabled: true, bins: 48 };
+        on.validate().unwrap();
+        let back = SimConfig::from_json_str(&on.to_json_string()).unwrap();
+        assert_eq!(on, back);
+        // Pre-telemetry config files (no field) parse with the default.
+        let mut v = cfg.to_json();
+        if let Value::Obj(fields) = &mut v {
+            fields.retain(|(k, _)| k != "telemetry");
+        }
+        let old = SimConfig::from_json(&v).unwrap();
+        assert_eq!(old.telemetry, TelemetryConfig::default());
+        assert_eq!(old, cfg);
+        // A `{"enabled": true}` block without bins gets the default count.
+        let mut v = on.to_json();
+        if let Value::Obj(fields) = &mut v {
+            for (k, tv) in fields.iter_mut() {
+                if k == "telemetry" {
+                    *tv = Value::obj().with("enabled", true);
+                }
+            }
+        }
+        let sparse = SimConfig::from_json(&v).unwrap();
+        assert!(sparse.telemetry.enabled);
+        assert_eq!(sparse.telemetry.bins, 20);
+        // Run-phase: toggling telemetry must not change the blueprint.
+        assert_eq!(cfg.blueprint_fingerprint(), on.blueprint_fingerprint());
+        // Degenerate bin counts are rejected.
+        let mut bad = cfg.clone();
+        bad.telemetry.bins = 0;
+        assert!(bad.validate().unwrap_err().contains("telemetry.bins"));
     }
 
     #[test]

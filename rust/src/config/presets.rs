@@ -48,6 +48,7 @@ pub fn cellia() -> SimConfig {
         },
         workload: Workload::None,
         coalescing: true,
+        telemetry: TelemetryConfig::default(),
     }
 }
 
@@ -110,6 +111,7 @@ pub fn scaleout(nodes: usize, aggregated_gbs: f64, pattern: Pattern, load: f64) 
         traffic: TrafficConfig { pattern, msg_size_b: 4096, load, arrival: Arrival::Poisson },
         workload: Workload::None,
         coalescing: true,
+        telemetry: TelemetryConfig::default(),
     }
 }
 

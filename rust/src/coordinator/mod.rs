@@ -26,9 +26,11 @@ use crate::runtime::CachedProvider;
 /// Sweep description (one per figure reproduction).
 #[derive(Debug, Clone)]
 pub struct SweepSpec {
+    /// End nodes per point.
     pub nodes: usize,
     /// Aggregated intra-node bandwidths in GB/s (paper: 128, 256, 512).
     pub intra_gbs: Vec<f64>,
+    /// Traffic patterns to sweep.
     pub patterns: Vec<Pattern>,
     /// Offered loads as link-capacity fractions (paper: 20 points).
     pub loads: Vec<f64>,
@@ -37,8 +39,13 @@ pub struct SweepSpec {
     pub fabric: FabricConfig,
     /// Use the paper's full 2.5 ms + 0.5 ms windows.
     pub paper_windows: bool,
+    /// Enable per-link flow-class telemetry on every point (CLI
+    /// `--telemetry`): each report carries `link_stats` into the sweep's
+    /// JSON output. A run-phase knob — it does not split blueprints.
+    pub telemetry: bool,
     /// Worker threads (defaults to available parallelism).
     pub workers: usize,
+    /// Base RNG seed (each point derives its own from it).
     pub seed: u64,
 }
 
@@ -52,6 +59,7 @@ impl SweepSpec {
             loads: Self::paper_loads(),
             fabric: FabricConfig::switch_star(),
             paper_windows: false,
+            telemetry: false,
             workers: default_workers(),
             seed: 0x5CA1E,
         }
@@ -71,6 +79,7 @@ impl SweepSpec {
             loads: vec![0.2, 0.5, 0.8, 1.0],
             fabric: FabricConfig::switch_star(),
             paper_windows: false,
+            telemetry: false,
             workers: default_workers(),
             seed: 0x5CA1E,
         }
@@ -90,6 +99,7 @@ impl SweepSpec {
                     if self.paper_windows {
                         cfg = presets::with_paper_windows(cfg);
                     }
+                    cfg.telemetry.enabled = self.telemetry;
                     out.push(cfg);
                 }
             }
@@ -97,11 +107,13 @@ impl SweepSpec {
         out
     }
 
+    /// Number of sweep points.
     pub fn points(&self) -> usize {
         self.intra_gbs.len() * self.patterns.len() * self.loads.len()
     }
 }
 
+/// Worker count default: available parallelism.
 pub fn default_workers() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
@@ -209,6 +221,7 @@ mod tests {
             loads: vec![0.1],
             fabric: FabricConfig::switch_star(),
             paper_windows: false,
+            telemetry: false,
             workers: 2,
             seed: 7,
         }
@@ -298,6 +311,24 @@ mod tests {
                 assert_eq!(r.nics, 2);
                 assert!(r.delivered_msgs > 0, "{kind:?}");
             }
+        }
+    }
+
+    #[test]
+    fn telemetry_sweep_attaches_link_stats_without_changing_results() {
+        let mut spec = tiny_spec();
+        let provider = Arc::new(snapshot_provider(&spec, &NativeProvider));
+        let plain = run_sweep(&spec, provider.clone(), None).unwrap();
+        spec.telemetry = true;
+        let telem = run_sweep(&spec, provider, None).unwrap();
+        for (p, t) in plain.iter().zip(&telem) {
+            assert!(p.link_stats.is_empty());
+            assert!(!t.link_stats.is_empty(), "{}: sweep must attach link stats", t.pattern);
+            // Telemetry is observational: identical results either way.
+            assert_eq!(p.events, t.events);
+            assert_eq!(p.delivered_msgs, t.delivered_msgs);
+            assert_eq!(p.intra_tput_gbs, t.intra_tput_gbs);
+            assert_eq!(p.fct, t.fct);
         }
     }
 

@@ -13,6 +13,7 @@ inter_tput_gbs,inter_drain_gbs,fct_mean_ns,fct_p99_ns,fct_max_ns,\
 intra_wire_gbs,inter_wire_gbs,drop_frac,delivered_msgs,events,wall_ms,\
 coll_op,coll_size_b,coll_iters,coll_mean_ns,coll_p99_ns,coll_pred_ns";
 
+/// One CSV row for a report (matches [`CSV_HEADER`]).
 pub fn csv_row(r: &SimReport) -> String {
     format!(
         "{},{:.4},{},{},{},{},{:.1},{:.3},{:.3},{:.3},{:.1},{:.1},{:.1},{:.3},{:.3},{:.1},{:.1},{:.1},{:.3},{:.3},{:.4},{},{},{:.1},{},{},{},{:.1},{:.1},{:.1}",

@@ -16,9 +16,18 @@
 //! * **L3 (this crate)** — the discrete-event simulator: PCIe-class
 //!   intra-node networks, RLFT fat-trees with D-mod-K routing and
 //!   credit-based flow control, NIC packetisation, LLM traffic patterns,
-//!   and the sweep coordinator that regenerates every table and figure of
-//!   the paper. The Rust runtime executes the AOT artifacts through PJRT —
-//!   Python never runs at simulation time.
+//!   flow-class interference telemetry, and the sweep coordinator that
+//!   regenerates every table and figure of the paper. The Rust runtime
+//!   executes the AOT artifacts through PJRT — Python never runs at
+//!   simulation time.
+//!
+//! Start with `docs/architecture.md` for the system walk-through,
+//! `docs/config-schema.md` for the `SimConfig` JSON reference, and
+//! `docs/reproducing.md` for the experiment → command map.
+
+// The public API is documentation-complete; CI's `cargo doc --no-deps`
+// step denies rustdoc warnings so it stays that way.
+#![warn(missing_docs)]
 
 pub mod analytic;
 pub mod benchkit;

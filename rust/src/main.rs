@@ -38,9 +38,12 @@ COMMANDS
   sweep      [--nodes N] [--intra 128,256,512] [--patterns C1,...,C5]
              [--loads 20] [--fabric star|mesh|ring|host_tree] [--nics K]
              [--nic-policy local_rank|round_robin] [--paper-windows]
-             [--quick] [--out DIR]
+             [--telemetry] [--quick] [--out DIR]
              Reproduce Figures 5-8 (scale-out load sweeps) on any
-             intra-node fabric x NIC count.
+             intra-node fabric x NIC count. --telemetry attaches
+             per-link x per-class link_stats to every point's JSON
+             report (interference attribution; default off so bench
+             baselines are untouched).
   run        <config.json> [--json]
              One simulation from a JSON config file.
   collective [--op ring_allreduce|reduce_scatter|allgather|all_to_all|hier_allreduce]
@@ -48,10 +51,13 @@ COMMANDS
              [--fabric star|mesh|ring|host_tree] [--nics K]
              [--nic-policy local_rank|round_robin]
              [--size BYTES] [--iters K] [--bg-load F] [--bg-pattern C1|..|0.3]
-             [--json]
+             [--telemetry] [--out DIR] [--json]
              Closed-loop collective completion time vs the analytic
              oracle, optionally against open-loop background traffic
              (the paper's NIC-boundary interference scenario).
+             --telemetry prints the head-of-line blocking summary and
+             writes a per-link interference-attribution CSV to --out
+             (default results/).
   topo       [--nodes N] [--fabric F] [--nics K]
              Describe the RLFT fat-tree + intra fabric.
   traffic-model [--layers L] [--hidden H] [--seq S] [--vocab V]
@@ -200,9 +206,11 @@ fn main() -> anyhow::Result<()> {
         "sweep" => {
             let nodes = args.get_or("nodes", 32usize)?;
             let fabric = parse_fabric(&args)?;
+            let telemetry = args.flag("telemetry");
             let spec = if args.flag("quick") {
                 let mut spec = SweepSpec::quick(nodes);
                 spec.fabric = fabric;
+                spec.telemetry = telemetry;
                 spec
             } else {
                 let intra = {
@@ -229,6 +237,7 @@ fn main() -> anyhow::Result<()> {
                     loads: (1..=n_loads).map(|i| i as f64 / n_loads as f64).collect(),
                     fabric,
                     paper_windows: args.flag("paper-windows"),
+                    telemetry,
                     workers: args.get_or("workers", coordinator::default_workers())?,
                     seed: args.get_or("seed", 0x5CA1Eu64)?,
                 }
@@ -345,14 +354,29 @@ fn main() -> anyhow::Result<()> {
             let bg_pattern = parse_pattern(args.opt("bg-pattern").unwrap_or("C1"))?;
             let fabric = parse_fabric(&args)?;
             let json = args.flag("json");
+            let telemetry = args.flag("telemetry");
+            let out = PathBuf::from(args.opt("out").unwrap_or("results"));
             args.reject_unknown()?;
             let spec = CollectiveSpec { op, scope, size_b, iters };
             for &gbs in &intra {
-                let cfg = presets::with_fabric(
+                let mut cfg = presets::with_fabric(
                     presets::collective_scaleout(nodes, gbs, spec, bg_pattern, bg_load),
                     fabric,
                 );
+                cfg.telemetry.enabled = telemetry;
                 let report = Sim::new(cfg, be.provider(), BenchMode::None)?.try_run()?;
+                if telemetry {
+                    let csv = out.join(format!(
+                        "interference_{}_{}_{}nic_{:.0}gbs.csv",
+                        report.coll_op,
+                        report.fabric,
+                        report.nics,
+                        gbs
+                    ));
+                    figures::write_link_attribution(&csv, &report)?;
+                    eprintln!("wrote {}", csv.display());
+                    print!("{}", figures::render_interference(&report, 10));
+                }
                 if json {
                     println!("{}", report.to_json().pretty());
                 } else {

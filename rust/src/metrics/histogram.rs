@@ -12,6 +12,7 @@ use crate::units::Time;
 const BUCKETS: usize = 64;
 
 #[derive(Debug, Clone)]
+/// Log2-bucketed latency histogram (fixed 64-counter memory).
 pub struct Histogram {
     counts: [u64; BUCKETS],
     count: u64,
@@ -21,6 +22,7 @@ pub struct Histogram {
 }
 
 impl Histogram {
+    /// An empty histogram.
     pub fn new() -> Histogram {
         Histogram { counts: [0; BUCKETS], count: 0, sum_ps: 0, max_ps: 0, min_ps: u64::MAX }
     }
@@ -31,6 +33,7 @@ impl Histogram {
     }
 
     #[inline]
+    /// Record one sample.
     pub fn record(&mut self, t: Time) {
         let ps = t.as_ps();
         self.counts[Self::bucket(ps)] += 1;
@@ -40,10 +43,12 @@ impl Histogram {
         self.min_ps = self.min_ps.min(ps);
     }
 
+    /// Samples recorded.
     pub fn count(&self) -> u64 {
         self.count
     }
 
+    /// Exact mean (tracked outside the buckets).
     pub fn mean(&self) -> Time {
         if self.count == 0 {
             Time::ZERO
@@ -52,10 +57,12 @@ impl Histogram {
         }
     }
 
+    /// Exact maximum.
     pub fn max(&self) -> Time {
         Time::from_ps(self.max_ps)
     }
 
+    /// Exact minimum (zero when empty).
     pub fn min(&self) -> Time {
         if self.count == 0 {
             Time::ZERO
@@ -87,6 +94,7 @@ impl Histogram {
         self.max()
     }
 
+    /// Serializable digest (count, mean, quantiles, extremes).
     pub fn summary(&self) -> HistSummary {
         HistSummary {
             count: self.count,
@@ -109,12 +117,19 @@ impl Default for Histogram {
 /// Serializable digest of a histogram.
 #[derive(Debug, Clone, Copy, PartialEq, Default)]
 pub struct HistSummary {
+    /// Samples recorded.
     pub count: u64,
+    /// Mean (ns).
     pub mean_ns: f64,
+    /// Median (ns, bucket-interpolated).
     pub p50_ns: f64,
+    /// 99th percentile (ns).
     pub p99_ns: f64,
+    /// 99.9th percentile (ns).
     pub p999_ns: f64,
+    /// Maximum (ns).
     pub max_ns: f64,
+    /// Minimum (ns).
     pub min_ns: f64,
 }
 

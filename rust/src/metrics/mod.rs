@@ -1,12 +1,25 @@
-//! Performance metrics: log-bucketed latency histograms and the
+//! Performance metrics: log-bucketed latency histograms, the
 //! warmup/measure-window collectors the paper's methodology prescribes
-//! (§4.2.2: generate for a warm-up period, then measure).
+//! (§4.2.2: generate for a warm-up period, then measure), and the
+//! per-link × per-class interference-attribution telemetry
+//! ([`telemetry`]).
+//!
+//! Two layers of accounting coexist:
+//!
+//! * the [`Collector`] — endpoint-level, window-gated: latency
+//!   histograms, strict/drain throughput, drops (always on; feeds every
+//!   pre-telemetry `SimReport` field);
+//! * the [`telemetry::Telemetry`] subsystem — link-level, whole-run,
+//!   class-split: wire bytes, busy time, utilization bins, queue
+//!   high-water marks and head-of-line blocking (opt-in via
+//!   `SimConfig::telemetry` / `--telemetry`; feeds
+//!   `SimReport::link_stats`).
 
 pub mod histogram;
+pub mod telemetry;
 
 pub use histogram::{HistSummary, Histogram};
-
-
+pub use telemetry::{LinkStat, Telemetry, TrafficClass, N_CLASSES};
 
 use crate::units::Time;
 
@@ -30,23 +43,34 @@ pub enum Class {
 ///   of generation time (what a hardware counter would show).
 #[derive(Debug, Clone)]
 pub struct Collector {
+    /// Warm-up boundary: samples before this are ignored.
     pub warmup: Time,
+    /// Measurement-window end (exclusive).
     pub end: Time,
     /// Intra-node delivery latency (paper: "intra-node latency").
     pub intra_hist: Histogram,
     /// Flow completion time of inter-node messages.
     pub fct_hist: Histogram,
+    /// Intra bytes generated-and-delivered in the window.
     pub intra_bytes_strict: u64,
+    /// Inter bytes generated-and-delivered in the window.
     pub inter_bytes_strict: u64,
+    /// Intra payload bytes delivered in the window (any gen time).
     pub intra_bytes_drain: u64,
+    /// Inter payload bytes delivered in the window (any gen time).
     pub inter_bytes_drain: u64,
+    /// Messages offered by generators inside the window.
     pub offered_msgs: u64,
+    /// Bytes offered by generators inside the window.
     pub offered_bytes: u64,
+    /// Offered messages rejected by a full source backlog.
     pub dropped_msgs: u64,
+    /// Messages fully delivered inside the window.
     pub delivered_msgs: u64,
 }
 
 impl Collector {
+    /// A collector for the given warm-up/measure boundaries.
     pub fn new(warmup: Time, end: Time) -> Collector {
         Collector {
             warmup,
@@ -74,6 +98,7 @@ impl Collector {
     }
 
     #[inline]
+    /// Is `t` inside the measurement window?
     pub fn in_window(&self, t: Time) -> bool {
         t >= self.warmup && t < self.end
     }
@@ -123,6 +148,7 @@ impl Collector {
         }
     }
 
+    /// Measurement-window length in seconds.
     pub fn measure_secs(&self) -> f64 {
         (self.end.saturating_sub(self.warmup)).as_ns() * 1e-9
     }
@@ -136,6 +162,7 @@ impl Collector {
         bytes as f64 / self.measure_secs() / 1e9
     }
 
+    /// Drain throughput in GB/s for a class (hardware-counter view).
     pub fn drain_gbs(&self, class: Class) -> f64 {
         let bytes = match class {
             Class::Intra => self.intra_bytes_drain,
@@ -144,6 +171,7 @@ impl Collector {
         bytes as f64 / self.measure_secs() / 1e9
     }
 
+    /// Fraction of offered messages dropped at source backlogs.
     pub fn drop_frac(&self) -> f64 {
         if self.offered_msgs == 0 {
             0.0

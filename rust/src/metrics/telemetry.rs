@@ -1,0 +1,521 @@
+//! Per-link × per-traffic-class telemetry: the interference-attribution
+//! subsystem behind `SimReport::link_stats` and the `--telemetry` CLI
+//! flag.
+//!
+//! The paper's central claim — inter-node traffic arriving at intra-node
+//! devices *interferes* with intra-node traffic — is invisible in
+//! endpoint-level latency/throughput numbers. This module makes it
+//! measurable: every message is classified at injection
+//! ([`TrafficClass`]) and the world accumulates, for every link:
+//!
+//! * **wire bytes carried**, split by class (settled at the exact instant
+//!   `Link::tx_bytes` advances, so per-link class bytes always sum to the
+//!   link's total — including units materialized out of coalesced
+//!   delivery trains);
+//! * **busy time** per class (serialization time, accumulated when each
+//!   transaction's serialization interval is fixed);
+//! * a **time-binned utilization series** (wire bytes per class per bin
+//!   over `[0, warmup + measure)`, completions past the window clamped
+//!   into the last bin);
+//! * the **queue-occupancy high-water mark** (bytes, including credit
+//!   reservations);
+//! * **head-of-line blocking time**: whenever a waiter (an upstream link
+//!   whose head unit cannot get credit, or a source feeder whose head
+//!   message cannot enter its egress queue) parks on a full queue, the
+//!   park interval is charged to the *congested* link as
+//!   `hol_ps[blocked class][occupant class]` — "traffic of class A sat
+//!   parked at this link behind class B", the paper's interference as a
+//!   number.
+//!
+//! Telemetry is strictly observational: with it disabled (the default)
+//! the world allocates nothing here and `SimReport` is bit-identical to
+//! the pre-telemetry engine; with it enabled, every pre-existing report
+//! field is still bit-identical (`rust/tests/props_telemetry.rs` holds
+//! both properties across fabrics and workloads).
+
+use crate::serial::json::{FromJson, ToJson, Value};
+use crate::units::Time;
+
+/// Number of [`TrafficClass`] values (array dimension for per-class
+/// counters).
+pub const N_CLASSES: usize = 5;
+
+/// Flow class a message is stamped with at injection, carried by every
+/// transaction of the message across every hop.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum TrafficClass {
+    /// Open-loop generator traffic that stays inside its source node.
+    #[default]
+    IntraLocal,
+    /// Open-loop generator traffic crossing the inter-node network (the
+    /// paper's background load).
+    InterBackground,
+    /// Collective-schedule messages between same-node ranks (the intra
+    /// phases of a hierarchical collective).
+    CollectiveIntra,
+    /// Collective-schedule messages crossing nodes (the inter-exchange
+    /// phase).
+    CollectiveInter,
+    /// Closed-loop bench-driver messages (PingPong / Window).
+    Bench,
+}
+
+impl TrafficClass {
+    /// Every class, in counter-index order.
+    pub const ALL: [TrafficClass; N_CLASSES] = [
+        TrafficClass::IntraLocal,
+        TrafficClass::InterBackground,
+        TrafficClass::CollectiveIntra,
+        TrafficClass::CollectiveInter,
+        TrafficClass::Bench,
+    ];
+
+    /// Stable snake_case name (CSV/JSON column key).
+    pub fn name(self) -> &'static str {
+        match self {
+            TrafficClass::IntraLocal => "intra_local",
+            TrafficClass::InterBackground => "inter_background",
+            TrafficClass::CollectiveIntra => "coll_intra",
+            TrafficClass::CollectiveInter => "coll_inter",
+            TrafficClass::Bench => "bench",
+        }
+    }
+
+    /// Counter-array index of this class.
+    #[inline]
+    pub fn idx(self) -> usize {
+        match self {
+            TrafficClass::IntraLocal => 0,
+            TrafficClass::InterBackground => 1,
+            TrafficClass::CollectiveIntra => 2,
+            TrafficClass::CollectiveInter => 3,
+            TrafficClass::Bench => 4,
+        }
+    }
+
+    /// Inverse of [`TrafficClass::idx`] (panics on an out-of-range index).
+    pub fn from_idx(i: usize) -> TrafficClass {
+        Self::ALL[i]
+    }
+}
+
+/// Accumulated counters of one link (see the module docs for exact
+/// accounting semantics).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LinkCounters {
+    /// Wire bytes carried per class (headers included on headered
+    /// segments — same byte definition as `Link::tx_bytes`).
+    pub bytes: [u64; N_CLASSES],
+    /// Serialization busy time per class (ps), whole run.
+    pub busy_ps: [u64; N_CLASSES],
+    /// Head-of-line blocking time (ps): `hol_ps[blocked][occupant]` is
+    /// how long traffic of class `blocked` sat parked waiting for this
+    /// link's queue while the queue's head belonged to class `occupant`.
+    pub hol_ps: [[u64; N_CLASSES]; N_CLASSES],
+    /// Highest queue occupancy observed (bytes, credit reservations
+    /// included).
+    pub high_water_b: u64,
+    /// Wire bytes per class per time bin (the utilization series).
+    pub bins: Vec<[u64; N_CLASSES]>,
+}
+
+impl LinkCounters {
+    fn new(n_bins: usize) -> LinkCounters {
+        LinkCounters {
+            bytes: [0; N_CLASSES],
+            busy_ps: [0; N_CLASSES],
+            hol_ps: [[0; N_CLASSES]; N_CLASSES],
+            high_water_b: 0,
+            bins: vec![[0; N_CLASSES]; n_bins],
+        }
+    }
+
+    fn reset(&mut self, n_bins: usize) {
+        self.bytes = [0; N_CLASSES];
+        self.busy_ps = [0; N_CLASSES];
+        self.hol_ps = [[0; N_CLASSES]; N_CLASSES];
+        self.high_water_b = 0;
+        self.bins.clear();
+        self.bins.resize(n_bins, [0; N_CLASSES]);
+    }
+
+    fn is_active(&self) -> bool {
+        self.bytes.iter().any(|&b| b > 0)
+            || self.high_water_b > 0
+            || self.hol_ps.iter().flatten().any(|&p| p > 0)
+    }
+}
+
+/// An outstanding park interval (a waiter blocked on a full queue).
+#[derive(Clone, Copy, Debug)]
+struct Park {
+    since: Time,
+    /// Link whose queue the waiter parks on (`u32::MAX` = not parked).
+    on: u32,
+    blocked: u8,
+    occupant: u8,
+}
+
+const NOT_PARKED: Park = Park { since: Time::ZERO, on: u32::MAX, blocked: 0, occupant: 0 };
+
+/// Run-phase telemetry state of one `World` (present only when
+/// `SimConfig::telemetry.enabled`; see the module docs).
+#[derive(Debug, Clone)]
+pub struct Telemetry {
+    bin_ps: u64,
+    n_bins: usize,
+    links: Vec<LinkCounters>,
+    /// Outstanding park per potential link waiter (indexed by link id).
+    link_park: Vec<Park>,
+    /// Outstanding park per source feeder (indexed by accelerator id).
+    feeder_park: Vec<Park>,
+    delivered_b: [u64; N_CLASSES],
+}
+
+impl Telemetry {
+    /// Build zeroed telemetry for `n_links` links and `n_feeders`
+    /// accelerator feeders, binning `[0, end)` into `n_bins` slots.
+    pub fn new(n_links: usize, n_feeders: usize, end: Time, n_bins: u32) -> Telemetry {
+        let n_bins = n_bins.max(1) as usize;
+        Telemetry {
+            bin_ps: (end.as_ps() / n_bins as u64).max(1),
+            n_bins,
+            links: (0..n_links).map(|_| LinkCounters::new(n_bins)).collect(),
+            link_park: vec![NOT_PARKED; n_links],
+            feeder_park: vec![NOT_PARKED; n_feeders],
+            delivered_b: [0; N_CLASSES],
+        }
+    }
+
+    /// Zero every counter for a reused world (allocation-retaining; bin
+    /// count and window may differ between sweep points).
+    pub fn reset(&mut self, end: Time, n_bins: u32) {
+        let n_bins = n_bins.max(1) as usize;
+        self.bin_ps = (end.as_ps() / n_bins as u64).max(1);
+        self.n_bins = n_bins;
+        for l in &mut self.links {
+            l.reset(n_bins);
+        }
+        self.link_park.fill(NOT_PARKED);
+        self.feeder_park.fill(NOT_PARKED);
+        self.delivered_b = [0; N_CLASSES];
+    }
+
+    /// Utilization-bin width (ps).
+    pub fn bin_ps(&self) -> u64 {
+        self.bin_ps
+    }
+
+    /// Per-link counters (test/report access).
+    pub fn links(&self) -> &[LinkCounters] {
+        &self.links
+    }
+
+    /// Delivered payload bytes per class, whole run.
+    pub fn delivered_bytes(&self) -> &[u64; N_CLASSES] {
+        &self.delivered_b
+    }
+
+    /// A unit of `class` finished traversing link `l` carrying `wire`
+    /// bytes at time `at` (call exactly where `Link::tx_bytes` advances).
+    #[inline]
+    pub fn on_wire(&mut self, l: u32, class: TrafficClass, wire: u64, at: Time) {
+        let lc = &mut self.links[l as usize];
+        lc.bytes[class.idx()] += wire;
+        let bin = ((at.as_ps() / self.bin_ps) as usize).min(self.n_bins - 1);
+        lc.bins[bin][class.idx()] += wire;
+    }
+
+    /// Link `l` committed to serializing a unit of `class` for `ser`.
+    #[inline]
+    pub fn on_busy(&mut self, l: u32, class: TrafficClass, ser: Time) {
+        self.links[l as usize].busy_ps[class.idx()] += ser.as_ps();
+    }
+
+    /// Link `l`'s queue occupancy reached `used_b` bytes.
+    #[inline]
+    pub fn on_queue(&mut self, l: u32, used_b: u64) {
+        let lc = &mut self.links[l as usize];
+        if used_b > lc.high_water_b {
+            lc.high_water_b = used_b;
+        }
+    }
+
+    /// A unit of `class` delivered `payload` bytes to its destination.
+    #[inline]
+    pub fn on_delivered(&mut self, class: TrafficClass, payload: u64) {
+        self.delivered_b[class.idx()] += payload;
+    }
+
+    /// Upstream link `waiter` parked on link `on` at `now`: its head
+    /// unit (class `blocked`) is stuck behind `on`'s head (`occupant`).
+    #[inline]
+    pub fn park_link(
+        &mut self,
+        waiter: u32,
+        on: u32,
+        blocked: TrafficClass,
+        occupant: TrafficClass,
+        now: Time,
+    ) {
+        self.link_park[waiter as usize] =
+            Park { since: now, on, blocked: blocked.idx() as u8, occupant: occupant.idx() as u8 };
+    }
+
+    /// Link `waiter` was woken at `now`: charge the park interval to the
+    /// link it was parked on.
+    #[inline]
+    pub fn unpark_link(&mut self, waiter: u32, now: Time) {
+        let p = std::mem::replace(&mut self.link_park[waiter as usize], NOT_PARKED);
+        if p.on != u32::MAX {
+            self.links[p.on as usize].hol_ps[p.blocked as usize][p.occupant as usize] +=
+                now.saturating_sub(p.since).as_ps();
+        }
+    }
+
+    /// Source feeder `accel` parked on its egress link `on` at `now`.
+    #[inline]
+    pub fn park_feeder(
+        &mut self,
+        accel: u32,
+        on: u32,
+        blocked: TrafficClass,
+        occupant: TrafficClass,
+        now: Time,
+    ) {
+        self.feeder_park[accel as usize] =
+            Park { since: now, on, blocked: blocked.idx() as u8, occupant: occupant.idx() as u8 };
+    }
+
+    /// Feeder `accel` was woken at `now`.
+    #[inline]
+    pub fn unpark_feeder(&mut self, accel: u32, now: Time) {
+        let p = std::mem::replace(&mut self.feeder_park[accel as usize], NOT_PARKED);
+        if p.on != u32::MAX {
+            self.links[p.on as usize].hol_ps[p.blocked as usize][p.occupant as usize] +=
+                now.saturating_sub(p.since).as_ps();
+        }
+    }
+
+    /// Assemble the per-link report rows: one [`LinkStat`] per link with
+    /// any recorded activity. `label(l)` supplies the link's
+    /// `(kind, detail)` names and `tx_bytes(l)` its total wire bytes
+    /// (both live on the world, which owns the topology and links).
+    pub fn link_stats(
+        &self,
+        label: impl Fn(usize) -> (String, String),
+        tx_bytes: impl Fn(usize) -> u64,
+    ) -> Vec<LinkStat> {
+        self.links
+            .iter()
+            .enumerate()
+            .filter(|(_, lc)| lc.is_active())
+            .map(|(l, lc)| {
+                let (kind, detail) = label(l);
+                LinkStat {
+                    link: l as u32,
+                    kind,
+                    detail,
+                    wire_bytes: tx_bytes(l),
+                    class_bytes: lc.bytes,
+                    class_busy_ps: lc.busy_ps,
+                    queue_high_water_b: lc.high_water_b,
+                    hol_ps: lc.hol_ps,
+                    util_bins: lc.bins.clone(),
+                }
+            })
+            .collect()
+    }
+}
+
+/// One link's telemetry in a [`crate::net::world::SimReport`] (only
+/// links with recorded activity are listed; all counters are whole-run).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LinkStat {
+    /// Dense link id (see `net/topo.rs` for the id space).
+    pub link: u32,
+    /// Link kind name (`accel_up`, `nic_down`, `mesh_lane`, ...).
+    pub kind: String,
+    /// Kind plus owning node / indices, e.g. `accel_down[n3.a5]`.
+    pub detail: String,
+    /// Total wire bytes carried (equals the per-class sum — the
+    /// conservation invariant `props_telemetry.rs` asserts).
+    pub wire_bytes: u64,
+    /// Wire bytes per [`TrafficClass`] (index = `TrafficClass::idx`).
+    pub class_bytes: [u64; N_CLASSES],
+    /// Serialization busy time per class (ps).
+    pub class_busy_ps: [u64; N_CLASSES],
+    /// Queue-occupancy high-water mark (bytes).
+    pub queue_high_water_b: u64,
+    /// Head-of-line blocking `[blocked class][occupant class]` (ps).
+    pub hol_ps: [[u64; N_CLASSES]; N_CLASSES],
+    /// Wire bytes per class per time bin (bin width =
+    /// `SimReport::telemetry_bin_ps`).
+    pub util_bins: Vec<[u64; N_CLASSES]>,
+}
+
+impl LinkStat {
+    /// Total head-of-line blocking time charged to this link (ps).
+    pub fn hol_total_ps(&self) -> u64 {
+        self.hol_ps.iter().flatten().sum()
+    }
+
+    /// Head-of-line blocking time with `blocked` as the victim class,
+    /// summed over occupant classes (ps).
+    pub fn hol_blocked_ps(&self, blocked: TrafficClass) -> u64 {
+        self.hol_ps[blocked.idx()].iter().sum()
+    }
+}
+
+fn arr_u64(vals: &[u64]) -> Value {
+    Value::Arr(vals.iter().map(|&v| Value::from(v)).collect())
+}
+
+fn parse_classes(v: &Value) -> anyhow::Result<[u64; N_CLASSES]> {
+    let items = v.as_arr()?;
+    anyhow::ensure!(items.len() == N_CLASSES, "expected {N_CLASSES} class counters");
+    let mut out = [0u64; N_CLASSES];
+    for (o, item) in out.iter_mut().zip(items) {
+        *o = item.as_u64()?;
+    }
+    Ok(out)
+}
+
+impl ToJson for LinkStat {
+    fn to_json(&self) -> Value {
+        Value::obj()
+            .with("link", self.link)
+            .with("kind", self.kind.as_str())
+            .with("detail", self.detail.as_str())
+            .with("wire_bytes", self.wire_bytes)
+            .with("class_bytes", arr_u64(&self.class_bytes))
+            .with("class_busy_ps", arr_u64(&self.class_busy_ps))
+            .with("queue_high_water_b", self.queue_high_water_b)
+            .with("hol_ps", Value::Arr(self.hol_ps.iter().map(|row| arr_u64(row)).collect()))
+            .with("util_bins", Value::Arr(self.util_bins.iter().map(|b| arr_u64(b)).collect()))
+    }
+}
+
+impl FromJson for LinkStat {
+    fn from_json(v: &Value) -> anyhow::Result<Self> {
+        let hol_rows = v.req("hol_ps")?.as_arr()?;
+        anyhow::ensure!(hol_rows.len() == N_CLASSES, "expected {N_CLASSES} hol rows");
+        let mut hol_ps = [[0u64; N_CLASSES]; N_CLASSES];
+        for (row, rv) in hol_ps.iter_mut().zip(hol_rows) {
+            *row = parse_classes(rv)?;
+        }
+        Ok(LinkStat {
+            link: v.u64_of("link")? as u32,
+            kind: v.str_of("kind")?.to_string(),
+            detail: v.str_of("detail")?.to_string(),
+            wire_bytes: v.u64_of("wire_bytes")?,
+            class_bytes: parse_classes(v.req("class_bytes")?)?,
+            class_busy_ps: parse_classes(v.req("class_busy_ps")?)?,
+            queue_high_water_b: v.u64_of("queue_high_water_b")?,
+            hol_ps,
+            util_bins: v
+                .req("util_bins")?
+                .as_arr()?
+                .iter()
+                .map(parse_classes)
+                .collect::<anyhow::Result<Vec<_>>>()?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn class_indices_roundtrip() {
+        for (i, c) in TrafficClass::ALL.into_iter().enumerate() {
+            assert_eq!(c.idx(), i);
+            assert_eq!(TrafficClass::from_idx(i), c);
+        }
+        assert_eq!(TrafficClass::default(), TrafficClass::IntraLocal);
+    }
+
+    #[test]
+    fn wire_bytes_and_bins_accumulate() {
+        let mut t = Telemetry::new(3, 2, Time::from_us(10.0), 10);
+        assert_eq!(t.bin_ps(), 1_000_000);
+        t.on_wire(1, TrafficClass::InterBackground, 4096, Time::from_us(0.5));
+        t.on_wire(1, TrafficClass::InterBackground, 4096, Time::from_us(9.5));
+        // Past-window completions clamp into the last bin.
+        t.on_wire(1, TrafficClass::Bench, 100, Time::from_us(42.0));
+        let lc = &t.links()[1];
+        assert_eq!(lc.bytes[TrafficClass::InterBackground.idx()], 8192);
+        assert_eq!(lc.bins[0][TrafficClass::InterBackground.idx()], 4096);
+        assert_eq!(lc.bins[9][TrafficClass::InterBackground.idx()], 4096);
+        assert_eq!(lc.bins[9][TrafficClass::Bench.idx()], 100);
+        assert_eq!(lc.bytes.iter().sum::<u64>(), 8192 + 100);
+    }
+
+    #[test]
+    fn hol_charged_to_parked_on_link() {
+        let mut t = Telemetry::new(4, 2, Time::from_us(10.0), 4);
+        let (intra, inter) = (TrafficClass::CollectiveIntra, TrafficClass::InterBackground);
+        t.park_link(0, 2, intra, inter, Time::from_ns(100.0));
+        t.unpark_link(0, Time::from_ns(350.0));
+        let blocked = TrafficClass::CollectiveIntra.idx();
+        let occ = TrafficClass::InterBackground.idx();
+        assert_eq!(t.links()[2].hol_ps[blocked][occ], 250_000);
+        // Unparking an unparked waiter is a no-op.
+        t.unpark_link(0, Time::from_ns(500.0));
+        assert_eq!(t.links()[2].hol_ps[blocked][occ], 250_000);
+        // Feeder parks charge the same matrix.
+        t.park_feeder(1, 2, TrafficClass::IntraLocal, TrafficClass::InterBackground, Time::ZERO);
+        t.unpark_feeder(1, Time::from_ns(1.0));
+        assert_eq!(t.links()[2].hol_ps[TrafficClass::IntraLocal.idx()][occ], 1_000);
+    }
+
+    #[test]
+    fn reset_zeroes_everything_and_resizes_bins() {
+        let mut t = Telemetry::new(2, 1, Time::from_us(10.0), 4);
+        t.on_wire(0, TrafficClass::IntraLocal, 512, Time::ZERO);
+        t.on_busy(0, TrafficClass::IntraLocal, Time::from_ns(5.0));
+        t.on_queue(0, 9000);
+        t.on_delivered(TrafficClass::IntraLocal, 512);
+        t.park_link(1, 0, TrafficClass::IntraLocal, TrafficClass::IntraLocal, Time::ZERO);
+        t.reset(Time::from_us(20.0), 8);
+        assert_eq!(t.bin_ps(), 2_500_000);
+        let lc = &t.links()[0];
+        assert!(!lc.is_active());
+        assert_eq!(lc.bins.len(), 8);
+        assert_eq!(t.delivered_bytes().iter().sum::<u64>(), 0);
+        // The stale park was dropped by the reset.
+        t.unpark_link(1, Time::from_us(1.0));
+        assert_eq!(t.links()[0].hol_ps.iter().flatten().sum::<u64>(), 0);
+    }
+
+    #[test]
+    fn link_stats_list_only_active_links() {
+        let mut t = Telemetry::new(3, 1, Time::from_us(10.0), 2);
+        t.on_wire(2, TrafficClass::Bench, 4096, Time::ZERO);
+        let stats = t.link_stats(
+            |l| (format!("kind{l}"), format!("detail{l}")),
+            |l| if l == 2 { 4096 } else { 0 },
+        );
+        assert_eq!(stats.len(), 1);
+        let s = &stats[0];
+        assert_eq!(s.link, 2);
+        assert_eq!(s.kind, "kind2");
+        assert_eq!(s.wire_bytes, 4096);
+        assert_eq!(s.class_bytes.iter().sum::<u64>(), s.wire_bytes);
+        assert_eq!(s.hol_total_ps(), 0);
+    }
+
+    #[test]
+    fn link_stat_json_roundtrip() {
+        let mut t = Telemetry::new(2, 1, Time::from_us(5.0), 3);
+        t.on_wire(0, TrafficClass::CollectiveInter, 4156, Time::from_us(1.0));
+        t.on_busy(0, TrafficClass::CollectiveInter, Time::from_ns(83.0));
+        t.on_queue(0, 12_288);
+        t.park_link(1, 0, TrafficClass::CollectiveIntra, TrafficClass::CollectiveInter, Time::ZERO);
+        t.unpark_link(1, Time::from_ns(400.0));
+        let stats = t.link_stats(|_| ("nic_up".into(), "nic_up[n0.k0]".into()), |_| 4156);
+        let back = LinkStat::from_json(&stats[0].to_json()).unwrap();
+        assert_eq!(back, stats[0]);
+    }
+}

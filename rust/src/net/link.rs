@@ -58,6 +58,7 @@ pub enum Waker {
 /// One unidirectional link + its input queue.
 #[derive(Debug)]
 pub struct Link {
+    /// Serialization model (raw wire or PCIe transaction timing).
     pub model: LinkModel,
     /// Extra per-unit processing time (NIC WQE/DMA handling etc.), ps.
     pub per_unit: Time,
@@ -100,6 +101,7 @@ pub struct Link {
 }
 
 impl Link {
+    /// A link with the given model, queue capacity and overheads.
     pub fn new(model: LinkModel, cap_b: u64, per_unit: Time, prop: Time) -> Link {
         Link {
             model,
@@ -162,7 +164,8 @@ impl Link {
         self.used_b += bytes;
     }
 
-    /// Enqueue a unit whose bytes were already reserved via [`reserve`].
+    /// Enqueue a unit whose bytes were already reserved via
+    /// [`Link::reserve`].
     #[inline]
     pub fn push_reserved(&mut self, unit: u32) {
         self.queue.push_back(unit);

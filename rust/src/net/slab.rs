@@ -2,6 +2,7 @@
 //! per-entry allocation. Units and messages churn at millions per run, so
 //! the simulator recycles their slots instead of growing unboundedly.
 
+/// Free-list slab arena with stable `u32` handles.
 pub struct Slab<T> {
     items: Vec<T>,
     free: Vec<u32>,
@@ -15,6 +16,7 @@ pub struct Slab<T> {
 }
 
 impl<T: Default> Slab<T> {
+    /// An empty slab with pre-reserved backing capacity.
     pub fn with_capacity(cap: usize) -> Slab<T> {
         Slab {
             items: Vec::with_capacity(cap),
@@ -26,6 +28,7 @@ impl<T: Default> Slab<T> {
     }
 
     #[inline]
+    /// Store `value`, reusing a freed slot when one exists.
     pub fn insert(&mut self, value: T) -> u32 {
         self.live += 1;
         if let Some(idx) = self.free.pop() {
@@ -49,6 +52,7 @@ impl<T: Default> Slab<T> {
     }
 
     #[inline]
+    /// Free the slot at `idx` (debug builds panic on double free).
     pub fn remove(&mut self, idx: u32) {
         debug_assert!(self.live > 0);
         #[cfg(debug_assertions)]
@@ -76,18 +80,22 @@ impl<T: Default> Slab<T> {
     }
 
     #[inline]
+    /// Borrow the entry at `idx`.
     pub fn get(&self, idx: u32) -> &T {
         &self.items[idx as usize]
     }
 
     #[inline]
+    /// Mutably borrow the entry at `idx`.
     pub fn get_mut(&mut self, idx: u32) -> &mut T {
         &mut self.items[idx as usize]
     }
 
+    /// Live entries.
     pub fn len(&self) -> usize {
         self.live
     }
+    /// True when no entries are live.
     pub fn is_empty(&self) -> bool {
         self.live == 0
     }

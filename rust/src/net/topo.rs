@@ -47,7 +47,9 @@ use crate::config::{FabricKind, NicPolicy, SimConfig};
 /// What a link is, with its owning node / leaf / spine index.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Kind {
+    /// Accelerator -> intra fabric (SwitchStar/HostTree fabrics).
     AccelUp { node: u32, accel: u32 },
+    /// Intra fabric -> accelerator (the delivery link).
     AccelDown { node: u32, accel: u32 },
     /// Direct mesh lane accel `from` -> accel `to` (Mesh fabric).
     MeshLane { node: u32, from: u32, to: u32 },
@@ -57,23 +59,75 @@ pub enum Kind {
     HostUp { node: u32 },
     /// Shared root-complex bridge from the root (HostTree fabric).
     HostDown { node: u32 },
+    /// Fabric -> NIC egress staging queue.
     SwToNic { node: u32, nic: u32 },
+    /// NIC -> fabric ingress staging queue.
     NicToSw { node: u32, nic: u32 },
+    /// NIC -> leaf switch (inter up-link).
     NicUp { node: u32, nic: u32 },
+    /// Leaf switch -> NIC (inter down-link).
     NicDown { node: u32, nic: u32 },
+    /// Leaf -> spine trunk.
     LeafUp { leaf: u32, spine: u32 },
+    /// Spine -> leaf trunk.
     SpineDown { spine: u32, leaf: u32 },
+}
+
+impl Kind {
+    /// Stable kind name (telemetry CSV `kind` column).
+    pub fn short_name(&self) -> &'static str {
+        match self {
+            Kind::AccelUp { .. } => "accel_up",
+            Kind::AccelDown { .. } => "accel_down",
+            Kind::MeshLane { .. } => "mesh_lane",
+            Kind::RingHop { .. } => "ring_hop",
+            Kind::HostUp { .. } => "host_up",
+            Kind::HostDown { .. } => "host_down",
+            Kind::SwToNic { .. } => "sw_to_nic",
+            Kind::NicToSw { .. } => "nic_to_sw",
+            Kind::NicUp { .. } => "nic_up",
+            Kind::NicDown { .. } => "nic_down",
+            Kind::LeafUp { .. } => "leaf_up",
+            Kind::SpineDown { .. } => "spine_down",
+        }
+    }
+
+    /// Kind plus owning node / endpoint indices, e.g. `accel_down[n3.a5]`
+    /// (telemetry CSV `detail` column).
+    pub fn label(&self) -> String {
+        match *self {
+            Kind::AccelUp { node, accel } => format!("accel_up[n{node}.a{accel}]"),
+            Kind::AccelDown { node, accel } => format!("accel_down[n{node}.a{accel}]"),
+            Kind::MeshLane { node, from, to } => format!("mesh_lane[n{node}.a{from}->a{to}]"),
+            Kind::RingHop { node, from } => format!("ring_hop[n{node}.a{from}]"),
+            Kind::HostUp { node } => format!("host_up[n{node}]"),
+            Kind::HostDown { node } => format!("host_down[n{node}]"),
+            Kind::SwToNic { node, nic } => format!("sw_to_nic[n{node}.k{nic}]"),
+            Kind::NicToSw { node, nic } => format!("nic_to_sw[n{node}.k{nic}]"),
+            Kind::NicUp { node, nic } => format!("nic_up[n{node}.k{nic}]"),
+            Kind::NicDown { node, nic } => format!("nic_down[n{node}.k{nic}]"),
+            Kind::LeafUp { leaf, spine } => format!("leaf_up[l{leaf}->s{spine}]"),
+            Kind::SpineDown { spine, leaf } => format!("spine_down[s{spine}->l{leaf}]"),
+        }
+    }
 }
 
 /// Static topology indexing helper.
 #[derive(Clone, Debug)]
 pub struct Topology {
+    /// End nodes.
     pub nodes: u32,
+    /// Accelerators per node.
     pub accels_per_node: u32,
+    /// Leaf switches.
     pub leaves: u32,
+    /// Spine switches.
     pub spines: u32,
+    /// Intra-node fabric kind.
     pub fabric: FabricKind,
+    /// NICs per node.
     pub nics_per_node: u32,
+    /// Egress NIC-selection policy.
     pub nic_policy: NicPolicy,
     /// Nodes attached to each leaf switch (validated divisible).
     nodes_per_leaf: u32,
@@ -129,23 +183,28 @@ impl Topology {
         }
     }
 
+    /// Total unidirectional links (dense id space bound).
     pub fn total_links(&self) -> u32 {
         self.inter_base + 2 * self.leaves * self.spines
     }
+    /// Total accelerators in the system.
     pub fn total_accels(&self) -> u32 {
         self.nodes * self.accels_per_node
     }
 
     // -- accel-id helpers (global accel id = node * A + a) ------------------
     #[inline]
+    /// Node owning a global accelerator id.
     pub fn accel_node(&self, accel: u32) -> u32 {
         accel / self.accels_per_node
     }
     #[inline]
+    /// Local rank of a global accelerator id within its node.
     pub fn accel_local(&self, accel: u32) -> u32 {
         accel % self.accels_per_node
     }
     #[inline]
+    /// Leaf switch a node hangs off.
     pub fn node_leaf(&self, node: u32) -> u32 {
         node / self.nodes_per_leaf
     }
@@ -223,26 +282,32 @@ impl Topology {
         self.node_base(node) + 2 * self.accels_per_node + 1
     }
     #[inline]
+    /// Link id: fabric -> NIC `nic` egress staging.
     pub fn sw_to_nic(&self, node: u32, nic: u32) -> u32 {
         self.node_base(node) + self.intra_stride + 4 * nic
     }
     #[inline]
+    /// Link id: NIC `nic` -> fabric ingress staging.
     pub fn nic_to_sw(&self, node: u32, nic: u32) -> u32 {
         self.node_base(node) + self.intra_stride + 4 * nic + 1
     }
     #[inline]
+    /// Link id: NIC `nic` -> leaf (inter up-link).
     pub fn nic_up(&self, node: u32, nic: u32) -> u32 {
         self.node_base(node) + self.intra_stride + 4 * nic + 2
     }
     #[inline]
+    /// Link id: leaf -> NIC `nic` (inter down-link).
     pub fn nic_down(&self, node: u32, nic: u32) -> u32 {
         self.node_base(node) + self.intra_stride + 4 * nic + 3
     }
     #[inline]
+    /// Link id: leaf `leaf` -> spine `spine` trunk.
     pub fn leaf_up(&self, leaf: u32, spine: u32) -> u32 {
         self.inter_base + leaf * self.spines + spine
     }
     #[inline]
+    /// Link id: spine `spine` -> leaf `leaf` trunk.
     pub fn spine_down(&self, spine: u32, leaf: u32) -> u32 {
         self.inter_base + self.leaves * self.spines + spine * self.leaves + leaf
     }

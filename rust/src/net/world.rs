@@ -43,10 +43,10 @@
 //!
 //! * any code about to observe the link's queue occupancy first
 //!   *settles* the train — due units release/deliver at their recorded
-//!   timestamps ([`World::settle`]);
+//!   timestamps (`World::settle`);
 //! * a waiter parking on a trained queue re-paces the train to fire at
 //!   the next unit boundary, so wake-ups stay per-unit exact
-//!   ([`World::truncate_train`], with stale events ignored through the
+//!   (`World::truncate_train`, with stale events ignored through the
 //!   `next_fire` authority check);
 //! * a train never extends past a unit that completes a message whose
 //!   completion feeds back into the simulation (collective program
@@ -68,6 +68,20 @@
 //! generators tie constantly, get a valid simulation either way but not
 //! a bit-identical one.
 //!
+//! ## Flow-class telemetry (interference attribution)
+//!
+//! With `SimConfig::telemetry.enabled` (CLI `--telemetry`), every
+//! message is stamped with a [`TrafficClass`] at injection and the world
+//! accumulates per-link × per-class wire bytes, busy time, a time-binned
+//! utilization series, queue high-water marks and head-of-line blocking
+//! time (time a waiter of class A sat parked on a full queue whose head
+//! belonged to class B) — surfaced as [`SimReport::link_stats`]. The
+//! accounting is strictly observational: it never schedules, reorders or
+//! suppresses an event, per-class bytes settle at the exact instant
+//! `Link::tx_bytes` advances (including units materialized out of
+//! coalesced trains), and `tests/props_telemetry.rs` holds every
+//! pre-existing report field bit-identical with telemetry on or off.
+//!
 //! ## Compile-once blueprints (EXPERIMENTS.md §Perf, iteration 3)
 //!
 //! World construction is split into a **compile phase** and a **run
@@ -87,8 +101,8 @@ use std::sync::Arc;
 use crate::analytic::{CollParams, PcieParams};
 use crate::config::{Arrival, FabricKind, SimConfig};
 pub use crate::config::{CollOp, CollScope, CollectiveSpec, Workload};
-use crate::metrics::{Collector, HistSummary, Histogram};
-pub use crate::metrics::Class;
+use crate::metrics::{Collector, HistSummary, Histogram, Telemetry};
+pub use crate::metrics::{Class, LinkStat, TrafficClass};
 use crate::net::link::{Link, LinkModel, Waker};
 use crate::net::slab::Slab;
 use crate::net::topo::{Kind, Topology};
@@ -103,10 +117,12 @@ const BACKLOG_LIMIT: usize = 64;
 
 /// Source of PCIe serialization latencies for the table build. The default
 /// production implementation executes the AOT-compiled Pallas kernel via
-/// PJRT ([`crate::runtime::HloProvider`]); [`NativeProvider`] is the
+/// PJRT ([`crate::runtime::Runtime`]); [`NativeProvider`] is the
 /// bit-equivalent (to f32 rounding) Rust mirror used as fallback and
 /// cross-check oracle.
 pub trait SerProvider {
+    /// Serialization latency (ns) of each payload size on a PCIe-class
+    /// link with the given parameters.
     fn pcie_latency_ns(&self, params: &PcieParams, sizes_b: &[u32]) -> Vec<f64>;
 }
 
@@ -218,8 +234,25 @@ struct Msg {
     /// Belongs to the collective workload (completion drives the
     /// destination rank's program counter).
     coll: bool,
+    /// Flow class stamped at injection (telemetry attribution; see
+    /// [`TrafficClass`]). Carried even with telemetry off — it is one
+    /// byte in a struct the hot path already copies.
+    class: TrafficClass,
     src: u32,
     dst: u32,
+}
+
+/// Who injected a message — determines its [`TrafficClass`] together
+/// with the intra/inter split resolved inside [`World::inject`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Origin {
+    /// Open-loop generator traffic.
+    OpenLoop,
+    /// PingPong / Window bench driver.
+    Bench,
+    /// Collective schedule send (completion advances the destination
+    /// rank's program counter).
+    Coll,
 }
 
 struct Feeder {
@@ -243,7 +276,9 @@ pub enum Ev {
 
 /// Full world state (implements [`Model`]).
 pub struct World {
+    /// The sweep point this world currently simulates.
     pub cfg: SimConfig,
+    /// Topology index helper (cloned from the blueprint).
     pub topo: Topology,
     /// Compile-phase state shared across every world of a sweep axis:
     /// the per-link kind dispatch table, the PCIe serialization table
@@ -254,12 +289,14 @@ pub struct World {
     msgs: Slab<Msg>,
     feeders: Vec<Feeder>,
     rngs: Vec<Rng>,
+    /// Window-gated endpoint metrics.
     pub metrics: Collector,
     /// Effective closed-loop workload (explicit bench argument wins over
     /// the config's `workload` field; see [`World::new`]).
     bench: Workload,
     /// Runtime state when `bench` is a collective.
     coll: Option<Box<CollectiveState>>,
+    /// PCIe serialization-table misses (should stay zero).
     pub table_misses: u64,
     txn_payload: u32,
     header_b: u32,
@@ -273,6 +310,7 @@ pub struct World {
     wire_end: Vec<u64>,
     /// Whole-run conservation counters (window-independent).
     pub injected_msgs: u64,
+    /// Messages fully delivered over the whole run.
     pub completed_msgs: u64,
     /// Delivery-link transaction trains enabled (`SimConfig::coalescing`).
     coalescing: bool,
@@ -284,6 +322,12 @@ pub struct World {
     /// steady-state traffic serializes one payload size per link, so the
     /// common lookup is a single compare.
     pcie_memo: Vec<(u32, Time)>,
+    /// Per-link × per-class interference telemetry
+    /// (`SimConfig::telemetry.enabled`; `None` costs the hot path one
+    /// pointer test per hook). Strictly observational: the event
+    /// sequence and every pre-existing report field are bit-identical
+    /// with it on or off (`tests/props_telemetry.rs`).
+    telemetry: Option<Box<Telemetry>>,
     /// Reusable per-message tally for train construction (mid, count).
     tally_scratch: Vec<(u32, u32)>,
     /// Pool of waiter vectors so nested wake cascades (train settles
@@ -318,6 +362,7 @@ pub struct WorldBlueprint {
     /// (instantiation then ignores the per-point `workload` field, like
     /// the original `World::new` did).
     explicit_bench: bool,
+    /// The compiled topology shared by every world of this blueprint.
     pub topo: Topology,
     /// Per-link kind dispatch table ([`Topology::kind_table`]).
     kinds: Vec<Kind>,
@@ -529,6 +574,11 @@ impl WorldBlueprint {
             coalescing: cfg.coalescing,
             deadlocked: false,
             pcie_memo: vec![(u32::MAX, Time::ZERO); total],
+            telemetry: if cfg.telemetry.enabled {
+                Some(Box::new(Telemetry::new(total, accels, end, cfg.telemetry.bins)))
+            } else {
+                None
+            },
             tally_scratch: Vec::new(),
             wake_pool: Vec::new(),
             topo: bp.topo.clone(),
@@ -669,6 +719,23 @@ impl World {
         self.wire_end.clear();
         self.coalescing = cfg.coalescing;
         self.deadlocked = false;
+        // Telemetry is a run-phase knob: points sharing a blueprint may
+        // toggle it or change the bin count between resets.
+        if cfg.telemetry.enabled {
+            match self.telemetry.as_mut() {
+                Some(t) => t.reset(end, cfg.telemetry.bins),
+                None => {
+                    self.telemetry = Some(Box::new(Telemetry::new(
+                        self.links.len(),
+                        self.feeders.len(),
+                        end,
+                        cfg.telemetry.bins,
+                    )))
+                }
+            }
+        } else {
+            self.telemetry = None;
+        }
         for memo in &mut self.pcie_memo {
             *memo = (u32::MAX, Time::ZERO);
         }
@@ -690,9 +757,11 @@ impl World {
         Ok(())
     }
 
+    /// End of the warm-up window.
     pub fn warmup_time(&self) -> Time {
         self.warmup
     }
+    /// End of the measurement window.
     pub fn end_time(&self) -> Time {
         self.end
     }
@@ -708,11 +777,11 @@ impl World {
         match self.bench {
             Workload::None => {}
             Workload::PingPong { a, b, size_b } => {
-                self.inject(Time::ZERO, a, b, size_b, false, q);
+                self.inject(Time::ZERO, a, b, size_b, Origin::Bench, q);
             }
             Workload::Window { src, dst, size_b, inflight } => {
                 for i in 0..inflight {
-                    self.inject(Time::from_ps(i as u64), src, dst, size_b, false, q);
+                    self.inject(Time::from_ps(i as u64), src, dst, size_b, Origin::Bench, q);
                 }
             }
             Workload::Collective(_) => {
@@ -763,7 +832,9 @@ impl World {
                 }
             };
             match action {
-                CollAction::Send { peer, size_b } => self.inject(now, rank, peer, size_b, true, q),
+                CollAction::Send { peer, size_b } => {
+                    self.inject(now, rank, peer, size_b, Origin::Coll, q)
+                }
                 CollAction::Continue => {}
                 CollAction::Blocked => return,
                 CollAction::Barrier => {
@@ -913,10 +984,29 @@ impl World {
     }
 
     /// Inject a message (bench drivers / generators / collective sends).
-    fn inject(&mut self, now: Time, src: u32, dst: u32, size_b: u32, coll: bool, q: &mut EventQueue<Ev>) {
+    /// The message is classified here, once, from its origin and the
+    /// intra/inter split; every transaction carries the class across
+    /// every hop (telemetry attribution).
+    fn inject(
+        &mut self,
+        now: Time,
+        src: u32,
+        dst: u32,
+        size_b: u32,
+        origin: Origin,
+        q: &mut EventQueue<Ev>,
+    ) {
         self.injected_msgs += 1;
         let inter = self.topo.accel_node(src) != self.topo.accel_node(dst);
-        let m = Msg { gen_ps: now.as_ps(), size_b, remaining: 0, inter, coll, src, dst };
+        let class = match (origin, inter) {
+            (Origin::OpenLoop, false) => TrafficClass::IntraLocal,
+            (Origin::OpenLoop, true) => TrafficClass::InterBackground,
+            (Origin::Coll, false) => TrafficClass::CollectiveIntra,
+            (Origin::Coll, true) => TrafficClass::CollectiveInter,
+            (Origin::Bench, _) => TrafficClass::Bench,
+        };
+        let coll = origin == Origin::Coll;
+        let m = Msg { gen_ps: now.as_ps(), size_b, remaining: 0, inter, coll, class, src, dst };
         let txns = self.txn_count(&m);
         let mid = self.msgs.insert(Msg { remaining: txns, ..m });
         let f = &mut self.feeders[src as usize];
@@ -977,6 +1067,17 @@ impl World {
                 if !self.feeders[accel as usize].parked {
                     self.links[up as usize].add_waiter(Waker::Feeder(accel));
                     self.feeders[accel as usize].parked = true;
+                    if let Some(t) = self.telemetry.as_mut() {
+                        // Head-of-line record: the feeder's head message
+                        // (class A) is stuck behind whatever occupies the
+                        // egress queue's head (class B; the blocked class
+                        // itself when only reservations hold the space).
+                        let occupant = match self.links[up as usize].queue.front() {
+                            Some(&huid) => self.msgs.get(self.units.get(huid).msg).class,
+                            None => m.class,
+                        };
+                        t.park_feeder(accel, up, m.class, occupant, now);
+                    }
                     // Parked waiters need per-unit release wake-ups.
                     self.truncate_train(up, q);
                 }
@@ -993,6 +1094,9 @@ impl World {
                 next: u32::MAX,
             });
             self.links[up as usize].enqueue(uid, wire);
+            if let Some(t) = self.telemetry.as_mut() {
+                t.on_queue(up, self.links[up as usize].used_b);
+            }
             // Advance the feeder BEFORE try_start: its settle cascade can
             // re-enter this feeder (delivery → feedback → inject → pump),
             // which must observe the counters already past this
@@ -1047,6 +1151,17 @@ impl World {
                         self.links[ni].add_waiter(Waker::Link(l));
                         self.links[li].parked = true;
                         self.links[li].waiting_on = nl;
+                        if let Some(t) = self.telemetry.as_mut() {
+                            // Head-of-line record: this link's head unit
+                            // (class A) is stuck behind the downstream
+                            // queue's head occupant (class B).
+                            let blocked = self.msgs.get(self.units.get(uid).msg).class;
+                            let occupant = match self.links[ni].queue.front() {
+                                Some(&huid) => self.msgs.get(self.units.get(huid).msg).class,
+                                None => blocked,
+                            };
+                            t.park_link(l, nl, blocked, occupant, now);
+                        }
                         // Parked waiters must be woken at per-unit release
                         // times: pace any train at `nl` unit-by-unit.
                         self.truncate_train(nl, q);
@@ -1063,8 +1178,15 @@ impl World {
                     return;
                 }
                 self.links[ni].reserve(wire_next);
+                if let Some(t) = self.telemetry.as_mut() {
+                    t.on_queue(nl, self.links[ni].used_b);
+                }
                 self.units.get_mut(uid).next = nl;
                 let ser = self.ser_time(l, uid);
+                if let Some(t) = self.telemetry.as_mut() {
+                    let class = self.msgs.get(self.units.get(uid).msg).class;
+                    t.on_busy(l, class, ser);
+                }
                 self.links[li].busy = true;
                 self.schedule_fire(l, now + ser, q);
             }
@@ -1090,6 +1212,10 @@ impl World {
             let uid = *self.links[li].queue.front().expect("caller checked head");
             self.units.get_mut(uid).next = u32::MAX;
             let ser = self.ser_time(l, uid);
+            if let Some(t) = self.telemetry.as_mut() {
+                let class = self.msgs.get(self.units.get(uid).msg).class;
+                t.on_busy(l, class, ser);
+            }
             self.links[li].busy = true;
             self.schedule_fire(l, now + ser, q);
             return;
@@ -1124,6 +1250,13 @@ impl World {
             }
             self.units.get_mut(uid).next = u32::MAX;
             let ser = self.ser_time(l, uid);
+            // Busy time is fixed the moment the train records the unit's
+            // serialization interval (per-class *bytes* settle later, at
+            // the unit's recorded completion time — see World::settle).
+            if let Some(tel) = self.telemetry.as_mut() {
+                let class = self.msgs.get(self.units.get(uid).msg).class;
+                tel.on_busy(l, class, ser);
+            }
             t = t + ser;
             self.links[li].train_ends.push_back(t);
             k += 1;
@@ -1174,6 +1307,12 @@ impl World {
             let wire = self.wire_bytes(self.blueprint.kinds[li], unit.payload);
             self.links[li].release(wire);
             self.links[li].tx_bytes += wire;
+            // Per-class byte counts settle exactly when the train
+            // materializes the unit, at its recorded timestamp — the
+            // same instant the scalar engine would account it.
+            if let Some(t) = self.telemetry.as_mut() {
+                t.on_wire(l, self.msgs.get(unit.msg).class, wire, end);
+            }
             self.wake_waiters(l, end, q);
             self.units.get_mut(uid).prop_ps += self.links[li].prop.as_ps() as u32;
             self.deliver(uid, end, q);
@@ -1222,11 +1361,19 @@ impl World {
         for &w in &waiters {
             match w {
                 Waker::Link(u) => {
+                    // Close the head-of-line interval before the retry
+                    // (an immediate re-park opens a fresh one).
+                    if let Some(t) = self.telemetry.as_mut() {
+                        t.unpark_link(u, now);
+                    }
                     self.links[u as usize].parked = false;
                     self.links[u as usize].waiting_on = u32::MAX;
                     self.try_start(u, now, q);
                 }
                 Waker::Feeder(a) => {
+                    if let Some(t) = self.telemetry.as_mut() {
+                        t.unpark_feeder(a, now);
+                    }
                     self.feeders[a as usize].parked = false;
                     self.pump(a, now, q);
                 }
@@ -1271,6 +1418,9 @@ impl World {
         let wire_here = self.wire_bytes(kind, unit.payload);
         self.links[li].release(wire_here);
         self.links[li].tx_bytes += wire_here;
+        if let Some(t) = self.telemetry.as_mut() {
+            t.on_wire(l, self.msgs.get(unit.msg).class, wire_here, now);
+        }
         self.wake_waiters(l, now, q);
         self.units.get_mut(uid).prop_ps += self.links[li].prop.as_ps() as u32;
         match unit.next {
@@ -1291,6 +1441,9 @@ impl World {
         let class = if m.inter { Class::Inter } else { Class::Intra };
         let eff = now + Time::from_ps(unit.prop_ps as u64);
         self.metrics.on_unit_delivered(eff, class, unit.payload as u64);
+        if let Some(t) = self.telemetry.as_mut() {
+            t.on_delivered(m.class, unit.payload as u64);
+        }
         let rem = {
             let mm = self.msgs.get_mut(mid);
             mm.remaining -= 1;
@@ -1311,11 +1464,11 @@ impl World {
                 Workload::None | Workload::Collective(_) => {}
                 Workload::PingPong { size_b, .. } => {
                     // bounce back
-                    self.inject(eff.max(now), m.dst, m.src, size_b, false, q);
+                    self.inject(eff.max(now), m.dst, m.src, size_b, Origin::Bench, q);
                 }
                 Workload::Window { src, dst, size_b, .. } => {
                     if now < self.end {
-                        self.inject(now, src, dst, size_b, false, q);
+                        self.inject(now, src, dst, size_b, Origin::Bench, q);
                     }
                 }
             }
@@ -1356,7 +1509,7 @@ impl World {
         let accepted = self.feeders[accel as usize].backlog.len() < BACKLOG_LIMIT;
         self.metrics.on_offer(now, size as u64, accepted);
         if accepted {
-            self.inject(now, accel, dst, size, false, q);
+            self.inject(now, accel, dst, size, Origin::OpenLoop, q);
         }
     }
 
@@ -1581,7 +1734,22 @@ impl World {
             }
             None => (String::new(), 0, 0, HistSummary::default(), 0.0),
         };
+        let (link_stats, telemetry_bin_ps) = match &self.telemetry {
+            Some(t) => (
+                t.link_stats(
+                    |l| {
+                        let k = self.blueprint.kinds[l];
+                        (k.short_name().to_string(), k.label())
+                    },
+                    |l| self.links[l].tx_bytes,
+                ),
+                t.bin_ps(),
+            ),
+            None => (Vec::new(), 0),
+        };
         SimReport {
+            link_stats,
+            telemetry_bin_ps,
             coll_op,
             coll_size_b,
             coll_iters,
@@ -1625,6 +1793,13 @@ impl World {
     /// Test/diagnostic access: (queued bytes, capacity) of a link.
     pub fn link_occupancy(&self, l: u32) -> (u64, u64) {
         (self.links[l as usize].used_b, self.links[l as usize].cap_b)
+    }
+
+    /// The run's telemetry state when `SimConfig::telemetry.enabled`
+    /// (tests/diagnostics; the report-facing view is
+    /// [`SimReport::link_stats`]).
+    pub fn telemetry(&self) -> Option<&Telemetry> {
+        self.telemetry.as_deref()
     }
 
     /// Collective iterations still owed (stall diagnostics).
@@ -1733,35 +1908,53 @@ impl Model for World {
 /// Everything a paper figure needs from one simulation run.
 #[derive(Debug, Clone)]
 pub struct SimReport {
+    /// Traffic pattern name (C1..C5 or Custom).
     pub pattern: String,
+    /// Offered load as a link-capacity fraction.
     pub load: f64,
+    /// End nodes simulated.
     pub nodes: usize,
+    /// Total accelerators simulated.
     pub accels: usize,
     /// Intra-node fabric name (`switch_star`, `mesh`, `ring`, `host_tree`).
     pub fabric: String,
     /// NICs per node.
     pub nics: usize,
+    /// Aggregated intra-node bandwidth knob (GB/s).
     pub aggregated_intra_gbs: f64,
     /// Offered load in GB/s across all accelerators.
     pub offered_gbs: f64,
     /// Paper semantics: generated-and-delivered inside the window.
     pub intra_tput_gbs: f64,
+    /// Intra drain throughput (GB/s; delivered regardless of gen time).
     pub intra_drain_gbs: f64,
+    /// Intra-node delivery-latency distribution.
     pub intra_lat: HistSummary,
+    /// Inter strict throughput (GB/s).
     pub inter_tput_gbs: f64,
+    /// Inter drain throughput (GB/s).
     pub inter_drain_gbs: f64,
+    /// Flow-completion-time distribution of inter messages.
     pub fct: HistSummary,
     /// Wire utilization (includes headers/overheads).
     pub intra_wire_gbs: f64,
+    /// Inter wire utilization (GB/s, headers included).
     pub inter_wire_gbs: f64,
+    /// Fraction of offered messages dropped at source backlogs.
     pub drop_frac: f64,
+    /// Messages fully delivered inside the window.
     pub delivered_msgs: u64,
+    /// Messages offered inside the window.
     pub offered_msgs: u64,
+    /// Events the engine dispatched.
     pub events: u64,
+    /// Wall-clock runtime of the simulation (ms).
     pub wall_ms: f64,
+    /// PCIe serialization-table misses.
     pub table_misses: u64,
     /// Collective workload results (empty/zero when no collective ran).
     pub coll_op: String,
+    /// Per-rank collective buffer size (bytes).
     pub coll_size_b: u64,
     /// Completed barrier-separated iterations.
     pub coll_iters: u64,
@@ -1769,6 +1962,13 @@ pub struct SimReport {
     pub coll_time: HistSummary,
     /// Analytic uncongested prediction for one iteration (ns).
     pub coll_pred_ns: f64,
+    /// Per-link × per-class interference telemetry (empty unless the run
+    /// had `SimConfig::telemetry.enabled`; links without activity are
+    /// omitted). See [`LinkStat`] and `docs/architecture.md`.
+    pub link_stats: Vec<LinkStat>,
+    /// Bin width of each [`LinkStat::util_bins`] slot (ps; 0 when
+    /// telemetry was off).
+    pub telemetry_bin_ps: u64,
 }
 
 impl ToJson for crate::metrics::HistSummary {
@@ -1800,7 +2000,7 @@ impl FromJson for crate::metrics::HistSummary {
 
 impl ToJson for SimReport {
     fn to_json(&self) -> Value {
-        Value::obj()
+        let v = Value::obj()
             .with("pattern", self.pattern.as_str())
             .with("load", self.load)
             .with("nodes", self.nodes)
@@ -1827,7 +2027,17 @@ impl ToJson for SimReport {
             .with("coll_size_b", self.coll_size_b)
             .with("coll_iters", self.coll_iters)
             .with("coll_time", self.coll_time.to_json())
-            .with("coll_pred_ns", self.coll_pred_ns)
+            .with("coll_pred_ns", self.coll_pred_ns);
+        if self.link_stats.is_empty() {
+            // Telemetry-off reports keep the pre-telemetry JSON shape
+            // byte-for-byte.
+            v
+        } else {
+            v.with("telemetry_bin_ps", self.telemetry_bin_ps).with(
+                "link_stats",
+                Value::Arr(self.link_stats.iter().map(|s| s.to_json()).collect()),
+            )
+        }
     }
 }
 
@@ -1885,6 +2095,20 @@ impl FromJson for SimReport {
                 Some(n) => n.as_f64()?,
                 None => 0.0,
             },
+            // Telemetry fields are optional: absent in telemetry-off and
+            // pre-telemetry result files.
+            link_stats: match v.get("link_stats") {
+                Some(arr) => arr
+                    .as_arr()?
+                    .iter()
+                    .map(LinkStat::from_json)
+                    .collect::<anyhow::Result<Vec<_>>>()?,
+                None => Vec::new(),
+            },
+            telemetry_bin_ps: match v.get("telemetry_bin_ps") {
+                Some(n) => n.as_u64()?,
+                None => 0,
+            },
         })
     }
 }
@@ -1895,10 +2119,13 @@ pub struct Sim {
 }
 
 impl Sim {
+    /// Build, prime and wrap a world for `cfg` (single-use blueprint).
     pub fn new(cfg: SimConfig, provider: &dyn SerProvider, bench: BenchMode) -> anyhow::Result<Sim> {
         Self::with_extra_sizes(cfg, provider, bench, &[])
     }
 
+    /// Like [`Sim::new`], priming the PCIe table with extra payload
+    /// sizes (bench drivers use message sizes the config cannot imply).
     pub fn with_extra_sizes(
         cfg: SimConfig,
         provider: &dyn SerProvider,
@@ -2030,9 +2257,11 @@ impl Sim {
     pub fn world(&self) -> &World {
         &self.engine.model
     }
+    /// Mutable world access (tests).
     pub fn world_mut(&mut self) -> &mut World {
         &mut self.engine.model
     }
+    /// Engine access for manual stepping (tests/diagnostics).
     pub fn engine_mut(&mut self) -> &mut Engine<World> {
         &mut self.engine
     }
@@ -2483,6 +2712,37 @@ mod tests {
             assert_eq!(sim.world().slab_capacities(), (ucap, mcap), "reset must not reallocate");
             assert_eq!(sim.world().slab_slots(), slots, "same point, same high-water marks");
         }
+    }
+
+    #[test]
+    fn telemetry_link_stats_conserve_wire_bytes() {
+        let mut cfg = small_cfg(0.3, Pattern::C2);
+        cfg.telemetry.enabled = true;
+        let r = Sim::new(cfg, &NativeProvider, BenchMode::None).unwrap().run();
+        assert!(!r.link_stats.is_empty(), "a loaded run must record link activity");
+        assert!(r.telemetry_bin_ps > 0);
+        for s in &r.link_stats {
+            assert_eq!(
+                s.class_bytes.iter().sum::<u64>(),
+                s.wire_bytes,
+                "link {} ({}): class bytes must sum to the wire total",
+                s.link,
+                s.detail
+            );
+            let binned: u64 = s.util_bins.iter().flatten().sum();
+            assert_eq!(binned, s.wire_bytes, "{}: bins must partition the wire bytes", s.detail);
+        }
+    }
+
+    #[test]
+    fn telemetry_off_report_carries_no_link_stats() {
+        let r = Sim::new(small_cfg(0.3, Pattern::C2), &NativeProvider, BenchMode::None)
+            .unwrap()
+            .run();
+        assert!(r.link_stats.is_empty());
+        assert_eq!(r.telemetry_bin_ps, 0);
+        // The telemetry-off JSON shape is the pre-telemetry one.
+        assert!(r.to_json().get("link_stats").is_none());
     }
 
     #[test]

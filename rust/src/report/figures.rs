@@ -1,7 +1,13 @@
 //! Figures 5–8: group sweep reports into the per-subfigure series the
 //! paper plots (metric vs traffic load, one curve per pattern, one
-//! subfigure per aggregated intra bandwidth) and render ASCII plots.
+//! subfigure per aggregated intra bandwidth), render ASCII plots, and
+//! emit the **interference-attribution** figure (per-link × per-class
+//! CSV + terminal summary) from a `--telemetry` run's
+//! [`SimReport::link_stats`].
 
+use std::path::Path;
+
+use crate::metrics::{TrafficClass, N_CLASSES};
 use crate::net::world::SimReport;
 
 /// Which paper figure a series belongs to.
@@ -18,6 +24,7 @@ pub enum FigureKind {
 }
 
 impl FigureKind {
+    /// Extract this figure's metric from one report.
     pub fn metric(&self, r: &SimReport) -> f64 {
         match self {
             FigureKind::IntraThroughput => r.intra_tput_gbs,
@@ -27,6 +34,7 @@ impl FigureKind {
         }
     }
 
+    /// Axis label.
     pub fn label(&self) -> &'static str {
         match self {
             FigureKind::IntraThroughput => "intra throughput (GB/s)",
@@ -40,16 +48,22 @@ impl FigureKind {
 /// One curve: a pattern's metric across the load axis.
 #[derive(Debug, Clone)]
 pub struct Series {
+    /// Pattern name (curve label).
     pub pattern: String,
+    /// Load axis (ascending).
     pub loads: Vec<f64>,
+    /// Metric value per load point.
     pub values: Vec<f64>,
 }
 
 /// One subfigure: all pattern curves at one intra-bandwidth config.
 #[derive(Debug, Clone)]
 pub struct SubFigure {
+    /// Aggregated intra bandwidth of this subfigure (GB/s).
     pub intra_gbs: f64,
+    /// Metric label.
     pub kind_label: &'static str,
+    /// One curve per pattern.
     pub series: Vec<Series>,
 }
 
@@ -111,6 +125,105 @@ pub fn render_figure(reports: &[SimReport], kind: FigureKind) -> String {
     figure_series(reports, kind).iter().map(render_subfigure).collect::<Vec<_>>().join("\n")
 }
 
+/// Header of the interference-attribution CSV: one row per
+/// (link, victim class) with that class's bytes/busy share on the link
+/// (`class_wire_bytes` — the per-class split; `link_wire_bytes` is the
+/// link's total, repeated on each of its rows) and the class's
+/// head-of-line blocking time split by occupant class.
+pub const ATTRIBUTION_HEADER: &str = "link,kind,detail,class,class_wire_bytes,\
+link_wire_bytes,busy_ns,queue_high_water_b,hol_total_ns,hol_behind_intra_local_ns,\
+hol_behind_inter_background_ns,hol_behind_coll_intra_ns,hol_behind_coll_inter_ns,\
+hol_behind_bench_ns";
+
+/// Render a `--telemetry` report's [`SimReport::link_stats`] as the
+/// interference-attribution CSV (rows for every class with bytes, busy
+/// time or blocking recorded on a link; links already filtered to those
+/// with activity).
+pub fn link_attribution_csv(r: &SimReport) -> String {
+    let mut out = String::from(ATTRIBUTION_HEADER);
+    out.push('\n');
+    for s in &r.link_stats {
+        for class in TrafficClass::ALL {
+            let c = class.idx();
+            let hol_row = &s.hol_ps[c];
+            let hol_total: u64 = hol_row.iter().sum();
+            if s.class_bytes[c] == 0 && s.class_busy_ps[c] == 0 && hol_total == 0 {
+                continue;
+            }
+            out.push_str(&format!(
+                "{},{},{},{},{},{},{:.1},{},{:.1}",
+                s.link,
+                s.kind,
+                s.detail,
+                class.name(),
+                s.class_bytes[c],
+                s.wire_bytes,
+                s.class_busy_ps[c] as f64 / 1e3,
+                s.queue_high_water_b,
+                hol_total as f64 / 1e3,
+            ));
+            for &ps in hol_row {
+                out.push_str(&format!(",{:.1}", ps as f64 / 1e3));
+            }
+            out.push('\n');
+        }
+    }
+    out
+}
+
+/// Write [`link_attribution_csv`] to `path` (parents created).
+pub fn write_link_attribution(path: &Path, r: &SimReport) -> anyhow::Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    std::fs::write(path, link_attribution_csv(r))?;
+    Ok(())
+}
+
+/// Terminal summary of a `--telemetry` run: the `top` most-blocked
+/// (link, victim class) pairs with their dominant blocking class — the
+/// quickest read on *which* traffic interfered with *what*, *where*.
+pub fn render_interference(r: &SimReport, top: usize) -> String {
+    let mut rows: Vec<(u64, String)> = Vec::new();
+    for s in &r.link_stats {
+        for blocked in TrafficClass::ALL {
+            let hol_row = &s.hol_ps[blocked.idx()];
+            let total: u64 = hol_row.iter().sum();
+            if total == 0 {
+                continue;
+            }
+            let mut dominant = 0usize;
+            for c in 1..N_CLASSES {
+                if hol_row[c] > hol_row[dominant] {
+                    dominant = c;
+                }
+            }
+            rows.push((
+                total,
+                format!(
+                    "  {:<28} {:<16} blocked {:>10.1} us (mostly behind {})",
+                    s.detail,
+                    blocked.name(),
+                    total as f64 / 1e6,
+                    TrafficClass::from_idx(dominant).name()
+                ),
+            ));
+        }
+    }
+    if rows.is_empty() {
+        return "-- interference attribution: no head-of-line blocking recorded --\n".to_string();
+    }
+    rows.sort_by(|a, b| b.0.cmp(&a.0));
+    let mut out = String::from("-- interference attribution (top head-of-line blocking) --\n");
+    for (_, line) in rows.iter().take(top) {
+        out.push_str(line);
+        out.push('\n');
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -145,6 +258,8 @@ mod tests {
             coll_iters: 0,
             coll_time: HistSummary::default(),
             coll_pred_ns: 0.0,
+            link_stats: Vec::new(),
+            telemetry_bin_ps: 0,
         }
     }
 
@@ -178,5 +293,60 @@ mod tests {
         let txt = render_figure(&reports, FigureKind::IntraThroughput);
         assert!(txt.contains("C1"));
         assert!(txt.contains("128"));
+    }
+
+    fn telemetry_report() -> SimReport {
+        use crate::metrics::LinkStat;
+        let mut r = report("C1", 0.5, 256.0, 10.0, 1000.0);
+        let mut hol = [[0u64; N_CLASSES]; N_CLASSES];
+        // coll_intra blocked 2 us behind inter_background.
+        hol[TrafficClass::CollectiveIntra.idx()][TrafficClass::InterBackground.idx()] = 2_000_000;
+        let mut class_bytes = [0u64; N_CLASSES];
+        class_bytes[TrafficClass::InterBackground.idx()] = 8192;
+        r.telemetry_bin_ps = 1_000_000;
+        r.link_stats = vec![LinkStat {
+            link: 11,
+            kind: "nic_down".into(),
+            detail: "nic_down[n1.k0]".into(),
+            wire_bytes: 8192,
+            class_bytes,
+            class_busy_ps: [0; N_CLASSES],
+            queue_high_water_b: 4096,
+            hol_ps: hol,
+            util_bins: vec![class_bytes],
+        }];
+        r
+    }
+
+    #[test]
+    fn attribution_csv_has_header_and_class_rows() {
+        let r = telemetry_report();
+        let csv = link_attribution_csv(&r);
+        let mut lines = csv.lines();
+        assert_eq!(lines.next().unwrap(), ATTRIBUTION_HEADER);
+        let cols = ATTRIBUTION_HEADER.split(',').count();
+        let rows: Vec<&str> = lines.collect();
+        // One row for the byte-carrying class, one for the blocked class.
+        assert_eq!(rows.len(), 2);
+        for row in &rows {
+            assert_eq!(row.split(',').count(), cols, "{row}");
+            assert!(row.starts_with("11,nic_down,nic_down[n1.k0],"), "{row}");
+        }
+        let blocked = rows.iter().find(|r| r.contains(",coll_intra,")).unwrap();
+        assert!(blocked.contains(",2000.0"), "hol ns column: {blocked}");
+        // A telemetry-off report renders just the header.
+        let empty = link_attribution_csv(&report("C1", 0.5, 256.0, 1.0, 0.0));
+        assert_eq!(empty.trim_end(), ATTRIBUTION_HEADER);
+    }
+
+    #[test]
+    fn interference_summary_names_victim_and_blocker() {
+        let r = telemetry_report();
+        let txt = render_interference(&r, 5);
+        assert!(txt.contains("nic_down[n1.k0]"), "{txt}");
+        assert!(txt.contains("coll_intra"), "{txt}");
+        assert!(txt.contains("inter_background"), "{txt}");
+        let none = render_interference(&report("C1", 0.5, 256.0, 1.0, 0.0), 5);
+        assert!(none.contains("no head-of-line blocking"), "{none}");
     }
 }

@@ -21,6 +21,7 @@ pub struct Rng {
 }
 
 impl Rng {
+    /// Seed a generator (SplitMix64-expanded into the xoshiro state).
     pub fn new(seed: u64) -> Rng {
         let mut sm = seed;
         let mut s = [0u64; 4];
@@ -46,6 +47,7 @@ impl Rng {
     }
 
     #[inline]
+    /// Next raw 64-bit output.
     pub fn next_u64(&mut self) -> u64 {
         let result = self.s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
         let t = self.s[1] << 17;

@@ -6,35 +6,49 @@ use std::path::Path;
 
 use crate::serial::json::Value;
 
+/// Manifest schema version this runtime can execute.
 pub const SUPPORTED_VERSION: u64 = 1;
 
 #[derive(Debug, Clone)]
+/// Parsed `manifest.json` of an AOT artifact directory.
 pub struct Manifest {
+    /// Schema version (must equal [`SUPPORTED_VERSION`]).
     pub version: u64,
+    /// PCIe-latency kernel metadata.
     pub pcie_latency: KernelMeta,
+    /// Collective-cost kernel metadata.
     pub collective_cost: KernelMeta,
+    /// LLM traffic-model metadata.
     pub llm_traffic: LlmMeta,
 }
 
 #[derive(Debug, Clone)]
+/// Batched-kernel metadata (batch width + parameter layout).
 pub struct KernelMeta {
+    /// Batch width baked into the HLO.
     pub batch: usize,
+    /// Ordered parameter names of the input vector.
     pub param_layout: Vec<String>,
 }
 
 #[derive(Debug, Clone)]
+/// LLM artifact metadata (input and output layouts).
 pub struct LlmMeta {
+    /// Ordered LLM parameter names.
     pub llm_param_layout: Vec<String>,
+    /// Ordered output field names.
     pub out_layout: Vec<String>,
 }
 
 impl Manifest {
+    /// Load and validate a manifest file.
     pub fn load(path: &Path) -> anyhow::Result<Manifest> {
         let text = std::fs::read_to_string(path)
             .map_err(|e| anyhow::anyhow!("cannot read {path:?}: {e}; run `make artifacts`"))?;
         Manifest::parse(&text)
     }
 
+    /// Parse and validate manifest JSON text.
     pub fn parse(text: &str) -> anyhow::Result<Manifest> {
         let v = Value::parse(text)?;
         let kernel = |key: &str| -> anyhow::Result<KernelMeta> {

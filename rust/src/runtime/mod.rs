@@ -29,6 +29,7 @@ use crate::net::world::SerProvider;
 
 /// Batch widths baked into the artifacts (must match `aot.py` / manifest).
 pub const PCIE_BATCH: usize = 1024;
+/// Batch width of the collective-cost artifact.
 pub const COLL_BATCH: usize = 256;
 
 #[cfg(feature = "pjrt")]
@@ -47,7 +48,9 @@ mod pjrt_impl {
         pcie: xla::PjRtLoadedExecutable,
         coll: xla::PjRtLoadedExecutable,
         llm: xla::PjRtLoadedExecutable,
+        /// The validated artifact manifest.
         pub manifest: Manifest,
+        /// Artifact directory the bundle was loaded from.
         pub dir: PathBuf,
     }
 
@@ -195,7 +198,9 @@ mod stub_impl {
     /// mirror the artifacts' semantics natively so any hypothetical
     /// instance would still be correct.
     pub struct Runtime {
+        /// The validated artifact manifest.
         pub manifest: Manifest,
+        /// Artifact directory the stub was pointed at.
         pub dir: PathBuf,
     }
 
@@ -270,6 +275,7 @@ pub use stub_impl::Runtime;
 /// analytic mirror (and are counted).
 pub struct CachedProvider {
     entries: Vec<(PcieParams, HashMap<u32, f64>)>,
+    /// Lookups that missed the snapshot (fell back to the mirror).
     pub misses: std::sync::atomic::AtomicU64,
 }
 
@@ -285,6 +291,7 @@ impl CachedProvider {
         CachedProvider { entries, misses: std::sync::atomic::AtomicU64::new(0) }
     }
 
+    /// Number of lookups that missed the snapshot.
     pub fn miss_count(&self) -> u64 {
         self.misses.load(std::sync::atomic::Ordering::Relaxed)
     }

@@ -9,16 +9,23 @@ use std::fmt;
 /// A JSON value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Value {
+    /// JSON `null`.
     Null,
+    /// JSON boolean.
     Bool(bool),
+    /// JSON number (all numbers are f64).
     Num(f64),
+    /// JSON string.
     Str(String),
+    /// JSON array.
     Arr(Vec<Value>),
+    /// JSON object (order-preserving key/value pairs).
     Obj(Vec<(String, Value)>),
 }
 
 impl Value {
     // -- constructors ------------------------------------------------------
+    /// An empty object (builder root; see [`Value::with`]).
     pub fn obj() -> Value {
         Value::Obj(Vec::new())
     }
@@ -34,6 +41,7 @@ impl Value {
     }
 
     // -- accessors ---------------------------------------------------------
+    /// Field lookup on an object (`None` on non-objects too).
     pub fn get(&self, key: &str) -> Option<&Value> {
         match self {
             Value::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
@@ -41,10 +49,12 @@ impl Value {
         }
     }
 
+    /// Field lookup that errors with the missing key's name.
     pub fn req(&self, key: &str) -> anyhow::Result<&Value> {
         self.get(key).ok_or_else(|| anyhow::anyhow!("missing field '{key}'"))
     }
 
+    /// This value as an f64.
     pub fn as_f64(&self) -> anyhow::Result<f64> {
         match self {
             Value::Num(n) => Ok(*n),
@@ -52,16 +62,19 @@ impl Value {
         }
     }
 
+    /// This value as a non-negative integer.
     pub fn as_u64(&self) -> anyhow::Result<u64> {
         let n = self.as_f64()?;
         anyhow::ensure!(n >= 0.0 && n.fract() == 0.0, "expected unsigned integer, got {n}");
         Ok(n as u64)
     }
 
+    /// This value as a usize.
     pub fn as_usize(&self) -> anyhow::Result<usize> {
         Ok(self.as_u64()? as usize)
     }
 
+    /// This value as a bool.
     pub fn as_bool(&self) -> anyhow::Result<bool> {
         match self {
             Value::Bool(b) => Ok(*b),
@@ -69,6 +82,7 @@ impl Value {
         }
     }
 
+    /// This value as a string slice.
     pub fn as_str(&self) -> anyhow::Result<&str> {
         match self {
             Value::Str(s) => Ok(s),
@@ -76,6 +90,7 @@ impl Value {
         }
     }
 
+    /// This value as an array slice.
     pub fn as_arr(&self) -> anyhow::Result<&[Value]> {
         match self {
             Value::Arr(items) => Ok(items),
@@ -84,18 +99,23 @@ impl Value {
     }
 
     // field helpers
+    /// `req(key)` then [`Value::as_f64`].
     pub fn f64_of(&self, key: &str) -> anyhow::Result<f64> {
         self.req(key)?.as_f64()
     }
+    /// `req(key)` then [`Value::as_u64`].
     pub fn u64_of(&self, key: &str) -> anyhow::Result<u64> {
         self.req(key)?.as_u64()
     }
+    /// `req(key)` then [`Value::as_usize`].
     pub fn usize_of(&self, key: &str) -> anyhow::Result<usize> {
         self.req(key)?.as_usize()
     }
+    /// `req(key)` then [`Value::as_bool`].
     pub fn bool_of(&self, key: &str) -> anyhow::Result<bool> {
         self.req(key)?.as_bool()
     }
+    /// `req(key)` then [`Value::as_str`].
     pub fn str_of(&self, key: &str) -> anyhow::Result<&str> {
         self.req(key)?.as_str()
     }
@@ -249,11 +269,13 @@ impl<T: Into<Value>> From<Vec<T>> for Value {
 
 /// Types that render to a JSON value.
 pub trait ToJson {
+    /// Serialize into a JSON value tree.
     fn to_json(&self) -> Value;
 }
 
 /// Types that parse from a JSON value.
 pub trait FromJson: Sized {
+    /// Deserialize from a JSON value tree.
     fn from_json(v: &Value) -> anyhow::Result<Self>;
 }
 

@@ -14,6 +14,7 @@ use crate::units::Time;
 
 /// A simulation model: owns all world state and reacts to events.
 pub trait Model {
+    /// The model's event alphabet.
     type Event;
 
     /// Handle one event at time `now`, scheduling follow-ups via `queue`.
@@ -31,17 +32,21 @@ pub struct RunStats {
 
 /// The event loop.
 pub struct Engine<M: Model> {
+    /// The simulated world (all model state).
     pub model: M,
+    /// Pending events, time-ordered with FIFO tie-breaking.
     pub queue: EventQueue<M::Event>,
     now: Time,
 }
 
 impl<M: Model> Engine<M> {
+    /// Wrap a model with an empty event queue at time zero.
     pub fn new(model: M) -> Self {
         Engine { model, queue: EventQueue::new(), now: Time::ZERO }
     }
 
     #[inline]
+    /// Current simulated time.
     pub fn now(&self) -> Time {
         self.now
     }

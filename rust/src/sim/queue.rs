@@ -47,6 +47,8 @@ impl<E> Ord for Entry<E> {
     }
 }
 
+/// Time-ordered event queue with FIFO tie-breaking and a
+/// front-slot minimum cache (see the module docs).
 pub struct EventQueue<E> {
     heap: BinaryHeap<Reverse<Entry<E>>>,
     /// Cached global minimum: always ≤ every entry in `heap`, so pops and
@@ -56,11 +58,13 @@ pub struct EventQueue<E> {
 }
 
 impl<E> EventQueue<E> {
+    /// An empty queue (preallocated for the typical event population).
     pub fn new() -> Self {
         EventQueue { heap: BinaryHeap::with_capacity(1024), front: None, seq: 0 }
     }
 
     #[inline]
+    /// Schedule `event` at time `at` (FIFO among equal timestamps).
     pub fn push(&mut self, at: Time, event: E) {
         let seq = self.seq;
         self.seq += 1;
@@ -81,6 +85,7 @@ impl<E> EventQueue<E> {
     }
 
     #[inline]
+    /// Remove and return the earliest event.
     pub fn pop(&mut self) -> Option<(Time, E)> {
         if let Some(e) = self.front.take() {
             return Some((e.key.0, e.event));
@@ -99,6 +104,7 @@ impl<E> EventQueue<E> {
     }
 
     #[inline]
+    /// Key `(time, seq)` of the earliest event without removing it.
     pub fn peek_key(&self) -> Option<(Time, u64)> {
         match &self.front {
             Some(e) => Some(e.key),
@@ -124,11 +130,13 @@ impl<E> EventQueue<E> {
     }
 
     #[inline]
+    /// Number of pending events.
     pub fn len(&self) -> usize {
         self.heap.len() + usize::from(self.front.is_some())
     }
 
     #[inline]
+    /// True when no events are pending.
     pub fn is_empty(&self) -> bool {
         self.front.is_none() && self.heap.is_empty()
     }

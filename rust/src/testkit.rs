@@ -12,7 +12,9 @@ use crate::rng::Rng;
 
 /// A random-input generator with optional shrinking.
 pub trait Gen {
+    /// The generated input type.
     type Value: std::fmt::Debug + Clone;
+    /// Draw one random value.
     fn generate(&self, rng: &mut Rng) -> Self::Value;
     /// Candidate smaller versions of a failing value (greedy shrink).
     fn shrink(&self, _value: &Self::Value) -> Vec<Self::Value> {
@@ -54,7 +56,9 @@ pub fn forall<G: Gen>(seed: u64, cases: u32, gen: &G, prop: impl Fn(&G::Value) -
 
 /// Uniform integer in [lo, hi] with shrinking toward lo.
 pub struct IntRange {
+    /// Inclusive lower bound.
     pub lo: u64,
+    /// Inclusive upper bound.
     pub hi: u64,
 }
 
@@ -77,7 +81,9 @@ impl Gen for IntRange {
 
 /// Uniform f64 in [lo, hi) with shrinking toward lo.
 pub struct FloatRange {
+    /// Inclusive lower bound.
     pub lo: f64,
+    /// Exclusive upper bound.
     pub hi: f64,
 }
 
@@ -117,8 +123,11 @@ impl<T: Clone + std::fmt::Debug + PartialEq> Gen for Choice<T> {
 /// elements) and element-wise (delegating to the inner generator's
 /// shrink), so a failing vector collapses to a minimal witness.
 pub struct VecGen<G: Gen> {
+    /// Generator for each element.
     pub elem: G,
+    /// Minimum generated length.
     pub min_len: usize,
+    /// Maximum generated length.
     pub max_len: usize,
 }
 

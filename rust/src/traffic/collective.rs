@@ -39,6 +39,7 @@ pub enum Step {
 /// Per-rank programs for one collective iteration.
 #[derive(Clone, Debug)]
 pub struct Schedule {
+    /// Participating ranks (dense 0..ranks).
     pub ranks: u32,
     /// `steps[rank]` is rank's program, executed strictly in order.
     pub steps: Vec<Vec<Step>>,
@@ -355,6 +356,7 @@ impl Schedule {
         self.steps[rank as usize].iter().filter(|s| matches!(s, Step::Recv { .. })).count()
     }
 
+    /// Total steps across every rank's program.
     pub fn total_steps(&self) -> usize {
         self.steps.iter().map(Vec::len).sum()
     }

@@ -89,6 +89,7 @@ pub const PAPER_TABLE2: [[f64; 4]; 16] = [
 /// One latency-test row.
 #[derive(Debug, Clone, Copy)]
 pub struct LatPoint {
+    /// Message size under test (bytes).
     pub size_b: u64,
     /// Simulated one-way latency in µs (incl. HOST_BASE_NS).
     pub sim_us: f64,
@@ -101,6 +102,7 @@ pub struct LatPoint {
 /// One bandwidth-test row.
 #[derive(Debug, Clone, Copy)]
 pub struct BwPoint {
+    /// Message size under test (bytes).
     pub size_b: u64,
     /// Simulated delivered bandwidth in GiB/s.
     pub sim_gib_s: f64,

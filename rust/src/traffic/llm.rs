@@ -17,15 +17,25 @@ use crate::serial::json::{ToJson, Value};
 /// `LLM_PARAM_LAYOUT` of the artifact).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct LlmConfig {
+    /// Transformer layers.
     pub num_layers: u32,
+    /// Hidden dimension.
     pub hidden: u32,
+    /// Sequence length (tokens).
     pub seq_len: u32,
+    /// Micro-batch size (sequences).
     pub microbatch: u32,
+    /// Vocabulary size.
     pub vocab: u32,
+    /// Tensor-parallel degree.
     pub tp: u32,
+    /// Pipeline-parallel degree.
     pub pp: u32,
+    /// Data-parallel degree.
     pub dp: u32,
+    /// Bytes per element (2 = bf16).
     pub bytes_per_elem: u32,
+    /// Micro-batches per global step.
     pub num_microbatches: u32,
 }
 
@@ -46,6 +56,7 @@ impl LlmConfig {
         }
     }
 
+    /// Flatten to the `f32` layout consumed by the HLO artifact.
     pub fn to_f32_vec(&self) -> Vec<f32> {
         vec![
             self.num_layers as f32,
@@ -65,27 +76,45 @@ impl LlmConfig {
 /// Decoded output of the LLM traffic artifact (`TRAFFIC_OUT_LAYOUT`).
 #[derive(Debug, Clone, Copy, PartialEq, Default)]
 pub struct TrafficSummary {
+    /// Per-TP-collective message size (bytes).
     pub tp_msg_size_b: f64,
+    /// Per-PP-transfer message size (bytes).
     pub pp_msg_size_b: f64,
+    /// Per-DP-collective shard size (bytes).
     pub dp_msg_size_b: f64,
+    /// TP collectives per step.
     pub n_tp_collectives: f64,
+    /// PP point-to-point transfers per step.
     pub n_pp_transfers: f64,
+    /// DP collectives per step.
     pub n_dp_collectives: f64,
+    /// Intra-node bytes per training step.
     pub intra_bytes_per_step: f64,
+    /// Inter-node bytes per training step.
     pub inter_bytes_per_step: f64,
+    /// Inter fraction of total traffic (the C1-C5 axis).
     pub frac_inter: f64,
+    /// Estimated TP allreduce time (ns).
     pub tp_allreduce_ns: f64,
+    /// Estimated PP point-to-point time (ns).
     pub pp_p2p_ns: f64,
+    /// Estimated DP allreduce time (ns).
     pub dp_allreduce_ns: f64,
+    /// PCIe serialization of one TP message (ns).
     pub pcie_tp_msg_ns: f64,
+    /// PCIe serialization of one PP message (ns).
     pub pcie_pp_msg_ns: f64,
+    /// PCIe serialization of one DP shard (ns).
     pub pcie_dp_msg_ns: f64,
+    /// Total model parameters.
     pub total_params: f64,
 }
 
 impl TrafficSummary {
+    /// Number of output values in the artifact layout.
     pub const N: usize = 16;
 
+    /// Decode the artifact's `f32[16]` output row.
     pub fn from_slice(v: &[f32]) -> anyhow::Result<TrafficSummary> {
         anyhow::ensure!(v.len() == Self::N, "expected {} values, got {}", Self::N, v.len());
         Ok(TrafficSummary {

@@ -13,42 +13,53 @@ use std::ops::{Add, AddAssign, Sub};
 pub struct Time(pub u64);
 
 impl Time {
+    /// Zero time (simulation start).
     pub const ZERO: Time = Time(0);
+    /// The largest representable time (run-to-exhaustion sentinel).
     pub const MAX: Time = Time(u64::MAX);
 
     #[inline]
+    /// Wrap a raw picosecond count.
     pub fn from_ps(ps: u64) -> Time {
         Time(ps)
     }
     #[inline]
+    /// Convert nanoseconds (rounded to the nearest picosecond).
     pub fn from_ns(ns: f64) -> Time {
         Time((ns * 1e3).round() as u64)
     }
     #[inline]
+    /// Convert microseconds (rounded to the nearest picosecond).
     pub fn from_us(us: f64) -> Time {
         Time((us * 1e6).round() as u64)
     }
     #[inline]
+    /// Convert milliseconds (rounded to the nearest picosecond).
     pub fn from_ms(ms: f64) -> Time {
         Time((ms * 1e9).round() as u64)
     }
     #[inline]
+    /// Raw picoseconds.
     pub fn as_ps(self) -> u64 {
         self.0
     }
     #[inline]
+    /// As (fractional) nanoseconds.
     pub fn as_ns(self) -> f64 {
         self.0 as f64 / 1e3
     }
     #[inline]
+    /// As (fractional) microseconds.
     pub fn as_us(self) -> f64 {
         self.0 as f64 / 1e6
     }
     #[inline]
+    /// As (fractional) milliseconds.
     pub fn as_ms(self) -> f64 {
         self.0 as f64 / 1e9
     }
     #[inline]
+    /// Subtraction clamped at zero.
     pub fn saturating_sub(self, rhs: Time) -> Time {
         Time(self.0.saturating_sub(rhs.0))
     }
@@ -124,6 +135,7 @@ impl Gbps {
 
 /// Convenience: binary-prefixed sizes.
 pub const KIB: u64 = 1024;
+/// One mebibyte.
 pub const MIB: u64 = 1024 * 1024;
 
 #[cfg(test)]

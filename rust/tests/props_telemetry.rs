@@ -1,0 +1,425 @@
+//! Telemetry invariants (ISSUE 5 tentpole): the flow-class telemetry
+//! subsystem must be **strictly observational**.
+//!
+//! Properties:
+//!
+//! 1. **Toggle invisibility** — a run with `telemetry.enabled` produces
+//!    a `SimReport` bit-identical on every pre-existing field (event
+//!    count included) to the same run with it off, across all four
+//!    fabrics, NIC counts/policies and workload kinds (the generator is
+//!    the `props_reuse.rs` one).
+//! 2. **Byte conservation** — on every reported link, per-class wire
+//!    bytes sum exactly to the link's total (`LinkStat::wire_bytes`),
+//!    and the utilization bins partition the same total; on a fully
+//!    drained open-loop run, per-class delivered payload sums to
+//!    `completed messages × message size`.
+//! 3. **No phantom blocking** — an uncongested single-class run records
+//!    zero head-of-line blocking and touches no other class.
+//! 4. **Interference is visible where the paper says it is** — under
+//!    inter-node background traffic congesting the receive path, the
+//!    NIC down-links record nonzero head-of-line blocking (the
+//!    acceptance anchor for the mesh-vs-star attribution example).
+//! 5. **Reset reuse** — telemetry is a run-phase delta: a reused world
+//!    toggling it between points reproduces a fresh build's link stats
+//!    exactly, and the report round-trips through JSON.
+
+use std::sync::Arc;
+
+use sauron::config::{
+    presets, CollOp, CollScope, CollectiveSpec, FabricConfig, FabricKind, NicPolicy, Pattern,
+    SimConfig, Workload,
+};
+use sauron::metrics::TrafficClass;
+use sauron::net::world::{BenchMode, NativeProvider, Sim, SimReport, WorldBlueprint};
+use sauron::serial::json::{FromJson, ToJson};
+use sauron::testkit::{forall, Choice, FloatRange, Triple};
+use sauron::units::Time;
+
+/// Compare every pre-telemetry result field; `wall_ms` and the new
+/// `link_stats` / `telemetry_bin_ps` are excluded by construction.
+fn pre_existing_identical(on: &SimReport, off: &SimReport) -> Result<(), String> {
+    macro_rules! field_eq {
+        ($field:ident) => {
+            if on.$field != off.$field {
+                return Err(format!(
+                    "field {} differs: {:?} (telemetry on) vs {:?} (off)",
+                    stringify!($field),
+                    on.$field,
+                    off.$field
+                ));
+            }
+        };
+    }
+    field_eq!(pattern);
+    field_eq!(load);
+    field_eq!(nodes);
+    field_eq!(accels);
+    field_eq!(fabric);
+    field_eq!(nics);
+    field_eq!(aggregated_intra_gbs);
+    field_eq!(offered_gbs);
+    field_eq!(intra_tput_gbs);
+    field_eq!(intra_drain_gbs);
+    field_eq!(intra_lat);
+    field_eq!(inter_tput_gbs);
+    field_eq!(inter_drain_gbs);
+    field_eq!(fct);
+    field_eq!(intra_wire_gbs);
+    field_eq!(inter_wire_gbs);
+    field_eq!(drop_frac);
+    field_eq!(delivered_msgs);
+    field_eq!(offered_msgs);
+    field_eq!(events);
+    field_eq!(table_misses);
+    field_eq!(coll_op);
+    field_eq!(coll_size_b);
+    field_eq!(coll_iters);
+    field_eq!(coll_time);
+    field_eq!(coll_pred_ns);
+    Ok(())
+}
+
+/// Per-link conservation: class bytes and bins both partition the
+/// link's total wire bytes.
+fn link_stats_conserve(r: &SimReport) -> Result<(), String> {
+    if r.link_stats.is_empty() {
+        return Err("telemetry run reported no link activity".into());
+    }
+    if r.telemetry_bin_ps == 0 {
+        return Err("telemetry run reported no bin width".into());
+    }
+    for s in &r.link_stats {
+        let class_sum: u64 = s.class_bytes.iter().sum();
+        if class_sum != s.wire_bytes {
+            return Err(format!(
+                "link {} ({}): class bytes {class_sum} != wire total {}",
+                s.link, s.detail, s.wire_bytes
+            ));
+        }
+        let bin_sum: u64 = s.util_bins.iter().flatten().sum();
+        if bin_sum != s.wire_bytes {
+            return Err(format!(
+                "link {} ({}): binned bytes {bin_sum} != wire total {}",
+                s.link, s.detail, s.wire_bytes
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Run `cfg` twice — telemetry off and on — and hold both the toggle
+/// invisibility and the conservation invariants.
+fn check_toggle(mut cfg: SimConfig) -> Result<(), String> {
+    cfg.telemetry.enabled = false;
+    let off = Sim::new(cfg.clone(), &NativeProvider, BenchMode::None)
+        .map_err(|e| format!("build (off): {e:#}"))?
+        .try_run()
+        .map_err(|e| format!("run (off): {e:#}"))?;
+    cfg.telemetry.enabled = true;
+    let on = Sim::new(cfg, &NativeProvider, BenchMode::None)
+        .map_err(|e| format!("build (on): {e:#}"))?
+        .try_run()
+        .map_err(|e| format!("run (on): {e:#}"))?;
+    if !off.link_stats.is_empty() {
+        return Err("telemetry-off report carried link stats".into());
+    }
+    pre_existing_identical(&on, &off)?;
+    link_stats_conserve(&on)
+}
+
+fn fabric_cfg(
+    kind: FabricKind,
+    nics: usize,
+    policy: NicPolicy,
+    load: f64,
+    pattern: Pattern,
+) -> SimConfig {
+    let mut fab = FabricConfig::new(kind, nics);
+    fab.nic_policy = policy;
+    let mut cfg = presets::with_fabric(presets::scaleout(32, 256.0, pattern, load), fab);
+    cfg.warmup_us = 5.0;
+    cfg.measure_us = 10.0;
+    cfg.seed = 0x7E1E;
+    cfg
+}
+
+#[test]
+fn prop_toggle_invisible_across_fabrics_and_policies() {
+    // Load capped below saturation (the ring fabric's diagnosed
+    // credit-cycle deadlock is a legitimate outcome but not a report).
+    let gen = Triple(
+        Choice(&FabricKind::ALL),
+        Choice(&[
+            (1usize, NicPolicy::LocalRank),
+            (2, NicPolicy::LocalRank),
+            (2, NicPolicy::RoundRobin),
+            (4, NicPolicy::RoundRobin),
+        ]),
+        FloatRange { lo: 0.05, hi: 0.45 },
+    );
+    forall(0x7E1EA, 10, &gen, |&(kind, (nics, policy), load)| {
+        check_toggle(fabric_cfg(kind, nics, policy, load, Pattern::C2))
+            .map_err(|e| format!("{kind:?}/{nics}nic/{policy:?}/{load:.3}: {e}"))
+    });
+}
+
+#[test]
+fn prop_toggle_invisible_for_collectives() {
+    let gen = Triple(
+        Choice(&[
+            CollOp::RingAllReduce,
+            CollOp::ReduceScatter,
+            CollOp::AllGather,
+            CollOp::AllToAll,
+            CollOp::HierarchicalAllReduce,
+        ]),
+        Choice(&[32u64 * 1024, 128 * 1024]),
+        Choice(&[0.0f64, 0.25]),
+    );
+    forall(0x7E1EB, 8, &gen, |&(op, size_b, bg_load)| {
+        let scope = if op == CollOp::HierarchicalAllReduce {
+            CollScope::Global
+        } else {
+            CollScope::PerNode
+        };
+        let mut cfg = presets::scaleout(32, 256.0, Pattern::C1, bg_load);
+        cfg.warmup_us = 5.0;
+        cfg.measure_us = 15.0;
+        cfg.seed = 0xC0FFEE;
+        cfg.workload = Workload::Collective(CollectiveSpec { op, scope, size_b, iters: 2 });
+        check_toggle(cfg).map_err(|e| format!("{op:?}/{size_b}/{bg_load}: {e}"))
+    });
+}
+
+#[test]
+fn toggle_invisible_for_bench_drivers() {
+    for (bench, sizes) in [
+        (BenchMode::PingPong { a: 0, b: 17, size_b: 4096 }, vec![4096u32]),
+        (BenchMode::Window { src: 0, dst: 9, size_b: 1 << 16, inflight: 4 }, vec![1u32 << 16]),
+    ] {
+        let mut cfg = presets::scaleout(32, 256.0, Pattern::C5, 0.0);
+        cfg.warmup_us = 5.0;
+        cfg.measure_us = 20.0;
+        let off = Sim::with_extra_sizes(cfg.clone(), &NativeProvider, bench, &sizes)
+            .unwrap()
+            .try_run()
+            .unwrap();
+        cfg.telemetry.enabled = true;
+        let on = Sim::with_extra_sizes(cfg, &NativeProvider, bench, &sizes)
+            .unwrap()
+            .try_run()
+            .unwrap();
+        pre_existing_identical(&on, &off).unwrap_or_else(|e| panic!("{bench:?}: {e}"));
+        link_stats_conserve(&on).unwrap_or_else(|e| panic!("{bench:?}: {e}"));
+        // Bench traffic is the only class on the wire.
+        for s in &on.link_stats {
+            assert_eq!(
+                s.class_bytes[TrafficClass::Bench.idx()],
+                s.wire_bytes,
+                "{bench:?}: {} carried a non-bench class",
+                s.detail
+            );
+        }
+    }
+}
+
+#[test]
+fn delivered_bytes_conserved_on_drained_open_loop_run() {
+    let mut cfg = presets::scaleout(32, 256.0, Pattern::C2, 0.3);
+    cfg.warmup_us = 5.0;
+    cfg.measure_us = 10.0;
+    cfg.telemetry.enabled = true;
+    let msg_size = cfg.traffic.msg_size_b;
+    let mut sim = Sim::new(cfg, &NativeProvider, BenchMode::None).unwrap();
+    let end = sim.world().end_time();
+    sim.engine_mut().run_until(end);
+    sim.engine_mut().run_until(Time::MAX); // generators stopped; drain
+    let w = sim.world();
+    assert_eq!(w.injected_msgs, w.completed_msgs, "sanity: the run drained");
+    assert!(w.completed_msgs > 100, "sanity: traffic flowed");
+    let t = w.telemetry().expect("telemetry enabled");
+    let delivered: u64 = t.delivered_bytes().iter().sum();
+    assert_eq!(
+        delivered,
+        w.completed_msgs * msg_size,
+        "per-class delivered payload must sum to total delivered volume"
+    );
+    // Only the two open-loop classes exist in this run.
+    assert_eq!(t.delivered_bytes()[TrafficClass::CollectiveIntra.idx()], 0);
+    assert_eq!(t.delivered_bytes()[TrafficClass::CollectiveInter.idx()], 0);
+    assert_eq!(t.delivered_bytes()[TrafficClass::Bench.idx()], 0);
+    assert!(t.delivered_bytes()[TrafficClass::IntraLocal.idx()] > 0);
+    assert!(t.delivered_bytes()[TrafficClass::InterBackground.idx()] > 0);
+}
+
+#[test]
+fn uncongested_single_class_run_records_no_blocking() {
+    // C5 = intra only; 5% load saturates nothing.
+    let mut cfg = presets::scaleout(32, 256.0, Pattern::C5, 0.05);
+    cfg.warmup_us = 5.0;
+    cfg.measure_us = 15.0;
+    cfg.telemetry.enabled = true;
+    let r = Sim::new(cfg, &NativeProvider, BenchMode::None).unwrap().run();
+    link_stats_conserve(&r).unwrap();
+    for s in &r.link_stats {
+        assert_eq!(
+            s.hol_total_ps(),
+            0,
+            "{}: uncongested single-class run must record zero HoL blocking",
+            s.detail
+        );
+        assert_eq!(
+            s.class_bytes[TrafficClass::IntraLocal.idx()],
+            s.wire_bytes,
+            "{}: only the intra_local class may appear",
+            s.detail
+        );
+    }
+}
+
+#[test]
+fn receive_congestion_shows_hol_blocking_on_nic_down_links() {
+    // Deterministic receive-path congestion: a Window bench streams the
+    // full 400 Gbps NIC rate into one destination accelerator whose
+    // down-link runs at ~128 Gbps. With the receive-side buffers
+    // shrunk, the ingress chain (nic_to_sw, then the NIC down-link's
+    // port buffer) must fill and the upstream link parks on the NIC
+    // down-link — the paper's "arriving inter traffic backs up into the
+    // intra network", recorded as head-of-line blocking on `nic_down`.
+    let mut cfg = presets::scaleout(32, 128.0, Pattern::C5, 0.0);
+    cfg.warmup_us = 5.0;
+    cfg.measure_us = 30.0;
+    cfg.node.nic.ingress_buf_b = 16 * 1024;
+    cfg.inter.port_buf_b = 8 * 1024;
+    cfg.telemetry.enabled = true;
+    let bench = BenchMode::Window { src: 0, dst: 8, size_b: 1 << 16, inflight: 4 };
+    let r = Sim::with_extra_sizes(cfg, &NativeProvider, bench, &[1 << 16])
+        .unwrap()
+        .try_run()
+        .unwrap();
+    link_stats_conserve(&r).unwrap();
+    let nic_down_hol: u64 = r
+        .link_stats
+        .iter()
+        .filter(|s| s.kind == "nic_down")
+        .map(|s| s.hol_total_ps())
+        .sum();
+    assert!(
+        nic_down_hol > 0,
+        "sustained receive overload must record HoL blocking on nic_down links"
+    );
+}
+
+#[test]
+fn background_inter_saturation_blocks_on_nic_down_links() {
+    // The acceptance anchor in open-loop form: all-inter background
+    // traffic at full load saturates every NIC boundary; the receive
+    // chain behind each NIC down-link runs at utilization ~1 and its
+    // (shrunken) buffers fill, so the fat-tree's last hop parks —
+    // nonzero HoL blocking on NIC down-links, attributed to the
+    // inter_background class on both sides.
+    let mut cfg = presets::scaleout(32, 128.0, Pattern::Custom { frac_inter: 1.0 }, 1.0);
+    cfg.warmup_us = 5.0;
+    cfg.measure_us = 30.0;
+    cfg.node.nic.ingress_buf_b = 16 * 1024;
+    cfg.inter.port_buf_b = 8 * 1024;
+    cfg.telemetry.enabled = true;
+    let r = Sim::new(cfg, &NativeProvider, BenchMode::None).unwrap().try_run().unwrap();
+    link_stats_conserve(&r).unwrap();
+    let blocked_bg: u64 = r
+        .link_stats
+        .iter()
+        .filter(|s| s.kind == "nic_down")
+        .map(|s| s.hol_blocked_ps(TrafficClass::InterBackground))
+        .sum();
+    assert!(
+        blocked_bg > 0,
+        "background inter traffic at saturation must show HoL blocking on nic_down"
+    );
+}
+
+#[test]
+fn interference_preset_attributes_collective_blocking() {
+    // The mesh-vs-star worked example's star arm (1 MiB hierarchical
+    // AllReduce vs all-inter background), shrunk for test budgets: the
+    // collective classes must appear on the NIC-boundary links and be
+    // measurably blocked somewhere on the path.
+    let mut cfg =
+        presets::fabric_interference(FabricKind::SwitchStar, 1, 32, 256.0, 256 * 1024, 0.35);
+    cfg.warmup_us = 10.0;
+    cfg.measure_us = 100.0;
+    cfg.telemetry.enabled = true;
+    let r = Sim::new(cfg, &NativeProvider, BenchMode::None).unwrap().try_run().unwrap();
+    link_stats_conserve(&r).unwrap();
+    assert_eq!(r.coll_iters, 2, "sanity: the collective completed");
+    let nic_up_coll: u64 = r
+        .link_stats
+        .iter()
+        .filter(|s| s.kind == "nic_up")
+        .map(|s| s.class_bytes[TrafficClass::CollectiveInter.idx()])
+        .sum();
+    assert!(nic_up_coll > 0, "the inter exchange must cross the NIC up-links");
+    let total_hol: u64 = r.link_stats.iter().map(|s| s.hol_total_ps()).sum();
+    assert!(total_hol > 0, "an oversubscribed NIC boundary must record HoL blocking");
+    let coll_blocked: u64 = r
+        .link_stats
+        .iter()
+        .map(|s| {
+            s.hol_blocked_ps(TrafficClass::CollectiveInter)
+                + s.hol_blocked_ps(TrafficClass::CollectiveIntra)
+        })
+        .sum();
+    assert!(
+        coll_blocked > 0,
+        "collective traffic must be measurably blocked under background load"
+    );
+}
+
+#[test]
+fn telemetry_is_a_run_phase_delta_and_reuse_matches_fresh() {
+    let point = |seed: u64, load: f64, telemetry: bool| {
+        let mut cfg = presets::scaleout(32, 256.0, Pattern::C1, load);
+        cfg.warmup_us = 5.0;
+        cfg.measure_us = 10.0;
+        cfg.seed = seed;
+        cfg.telemetry.enabled = telemetry;
+        cfg
+    };
+    let bp = Arc::new(
+        WorldBlueprint::compile(point(1, 0.2, false), &NativeProvider, BenchMode::None, &[])
+            .unwrap(),
+    );
+    let mut sim = Sim::from_blueprint(&bp, point(1, 0.2, false)).unwrap();
+    let first = sim.try_run_mut().unwrap();
+    assert!(first.link_stats.is_empty());
+    // Toggle telemetry ON across a reset: a run-phase delta.
+    sim.reset(point(9, 0.4, true)).unwrap();
+    let reused = sim.try_run_mut().unwrap();
+    let fresh = Sim::new(point(9, 0.4, true), &NativeProvider, BenchMode::None)
+        .unwrap()
+        .try_run()
+        .unwrap();
+    pre_existing_identical(&reused, &fresh).unwrap();
+    assert_eq!(reused.telemetry_bin_ps, fresh.telemetry_bin_ps);
+    assert_eq!(reused.link_stats, fresh.link_stats, "reused telemetry must match fresh");
+    link_stats_conserve(&reused).unwrap();
+    // And OFF again: the stats disappear, results unchanged vs fresh.
+    sim.reset(point(9, 0.4, false)).unwrap();
+    let off = sim.try_run_mut().unwrap();
+    assert!(off.link_stats.is_empty());
+    pre_existing_identical(&reused, &off).unwrap();
+}
+
+#[test]
+fn telemetry_report_roundtrips_json() {
+    let mut cfg = presets::scaleout(32, 256.0, Pattern::C1, 0.4);
+    cfg.warmup_us = 5.0;
+    cfg.measure_us = 10.0;
+    cfg.telemetry.enabled = true;
+    let r = Sim::new(cfg, &NativeProvider, BenchMode::None).unwrap().run();
+    assert!(!r.link_stats.is_empty());
+    let back = SimReport::from_json(&r.to_json()).unwrap();
+    assert_eq!(back.link_stats, r.link_stats);
+    assert_eq!(back.telemetry_bin_ps, r.telemetry_bin_ps);
+    pre_existing_identical(&back, &r).unwrap();
+}

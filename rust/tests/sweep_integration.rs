@@ -16,6 +16,7 @@ fn tiny() -> SweepSpec {
         loads: vec![0.2, 0.6],
         fabric: sauron::config::FabricConfig::switch_star(),
         paper_windows: false,
+        telemetry: false,
         workers: 2,
         seed: 0xFEED,
     }
