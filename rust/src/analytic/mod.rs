@@ -205,6 +205,24 @@ pub fn hierarchical_allreduce_ns(intra: &CollParams, inter: &CollParams, size_b:
     intra.reduce_scatter_ns(size_b) + inter.ring_allreduce_ns(shard) + intra.allgather_ns(size_b)
 }
 
+/// Inter-switch trunk crossings on a worst-case minimal path between
+/// two nodes, per pluggable inter topology: leaf→spine→leaf for the
+/// 2-level RLFT, leaf→agg→core→agg→leaf for the 3-level fat tree, and
+/// local→global→local router hops for the dragonfly. The analytic
+/// oracle (`collective_predicted_ns` through the world's
+/// `inter_p2p_ns`) derives both its first-flit hop latency (trunks + 2
+/// NIC boundary hops) and its pipeline stage count (trunks + 1 fabric
+/// serialization stages) from this, so the prediction's hop structure
+/// tracks the simulated topology.
+pub fn inter_trunk_hops(kind: &crate::config::InterKind) -> u32 {
+    use crate::config::InterKind;
+    match kind {
+        InterKind::LeafSpine => 2,
+        InterKind::FatTree3 { .. } => 4,
+        InterKind::Dragonfly { .. } => 3,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -296,6 +314,14 @@ mod tests {
         let s = (n as u64 * chunk) as f64;
         assert!(mesh.ring_allreduce_ns(s) < star.ring_allreduce_ns(s));
         assert!(star.ring_allreduce_ns(s) < tree.ring_allreduce_ns(s));
+    }
+
+    #[test]
+    fn trunk_hops_per_inter_topology() {
+        use crate::config::InterKind;
+        assert_eq!(inter_trunk_hops(&InterKind::LeafSpine), 2);
+        assert_eq!(inter_trunk_hops(&InterKind::FatTree3 { pods: 8, cores: 32 }), 4);
+        assert_eq!(inter_trunk_hops(&InterKind::Dragonfly { groups: 8 }), 3);
     }
 
     #[test]

@@ -234,6 +234,42 @@ impl FabricKind {
         [FabricKind::SwitchStar, FabricKind::Mesh, FabricKind::Ring, FabricKind::HostTree];
 }
 
+/// Inter-node network topology connecting the leaf switches the nodes
+/// hang off (the post-exascale design space: two-level leaf/spine,
+/// three-level fat trees, dragonflies). Mirrors [`FabricKind`] on the
+/// inter side: every kind defines its own inter link-id space past
+/// `inter_base` and its own src-aware minimal + d-mod-k routing, while
+/// the node-side attachment (NIC up/down links into a leaf) is shared.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InterKind {
+    /// The original 2-level RLFT leaf/spine (default): `leaves × spines`
+    /// up trunks and back. Bit-for-bit the pre-pluggable layout.
+    LeafSpine,
+    /// 3-level fat tree: `pods` pods of `leaves/pods` leaf switches,
+    /// `spines` aggregation switches per pod, `cores` core switches
+    /// (`cores % spines == 0`, so core `c` attaches at agg index
+    /// `c % spines` of every pod). Routing is minimal with D-mod-K
+    /// up-path selection (`agg = dst_node % spines`,
+    /// `core = dst_node % cores`).
+    FatTree3 { pods: usize, cores: usize },
+    /// Dragonfly: `groups` groups of `leaves/groups` routers, one leaf
+    /// switch per router; all-to-all local links inside each group and
+    /// one global link per ordered group pair. Minimal routing:
+    /// ≤ 1 local + 1 global + ≤ 1 local hops.
+    Dragonfly { groups: usize },
+}
+
+impl InterKind {
+    /// Stable name (CSV/JSON key).
+    pub fn name(self) -> &'static str {
+        match self {
+            InterKind::LeafSpine => "leaf_spine",
+            InterKind::FatTree3 { .. } => "fat_tree3",
+            InterKind::Dragonfly { .. } => "dragonfly",
+        }
+    }
+}
+
 /// How an egressing message picks one of the node's NICs.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum NicPolicy {
@@ -318,8 +354,9 @@ pub struct TelemetryConfig {
     /// Accumulate per-link per-class telemetry for this run.
     pub enabled: bool,
     /// Number of time bins for the utilization series over
-    /// `[0, warmup + measure)` (completions past the window clamp into
-    /// the last bin).
+    /// `[0, warmup + measure)`. The emitted series carries one extra
+    /// trailing entry: an overflow bucket for completions past the
+    /// window, so in-window bins never over-report utilization.
     pub bins: u32,
 }
 
@@ -390,14 +427,23 @@ pub struct NicConfig {
     pub per_msg_ns: f64,
 }
 
-/// Inter-node network configuration (RLFT 2-level fat-tree).
+/// Inter-node network configuration. The topology above the leaves is
+/// pluggable ([`InterKind`]); `leaves`/`spines` keep their 2-level
+/// meaning for the default leaf/spine and are reinterpreted per kind
+/// (fat tree: `spines` = aggregation switches per pod; dragonfly:
+/// leaves act as group routers and `spines` is unused).
 #[derive(Clone, Debug, PartialEq)]
 pub struct InterConfig {
+    /// Inter topology above the leaf tier. Optional in JSON (defaults
+    /// to the original two-level leaf/spine bit-for-bit). Compile-phase:
+    /// part of [`SimConfig::blueprint_fingerprint`].
+    pub kind: InterKind,
     /// Number of end nodes.
     pub nodes: usize,
     /// Leaf switches (each connects `nodes/leaves` nodes).
     pub leaves: usize,
-    /// Spine switches (each leaf has one up-link per spine).
+    /// Spine switches (each leaf has one up-link per spine). For
+    /// [`InterKind::FatTree3`] this is the per-pod aggregation count.
     pub spines: usize,
     /// Link rate everywhere in the inter network.
     pub link_gbps: f64,
@@ -502,6 +548,54 @@ impl SimConfig {
         }
         if self.inter.spines == 0 {
             return Err("need at least 1 spine".into());
+        }
+        match self.inter.kind {
+            InterKind::LeafSpine => {}
+            InterKind::FatTree3 { pods, cores } => {
+                if pods == 0 || self.inter.leaves % pods != 0 {
+                    return Err(format!(
+                        "fat_tree3: pods ({pods}) must divide evenly into leaves ({}): \
+                         every pod owns leaves/pods leaf switches; pick pods from the \
+                         divisors of {}",
+                        self.inter.leaves, self.inter.leaves
+                    ));
+                }
+                if cores == 0 || cores % self.inter.spines != 0 {
+                    return Err(format!(
+                        "fat_tree3: cores ({cores}) must be a positive multiple of \
+                         spines ({}): core c attaches at aggregation index c % spines \
+                         of every pod, so each agg needs the same core fan-in",
+                        self.inter.spines
+                    ));
+                }
+            }
+            InterKind::Dragonfly { groups } => {
+                if groups == 0 || self.inter.leaves % groups != 0 {
+                    return Err(format!(
+                        "dragonfly: groups ({groups}) must divide evenly into leaves \
+                         ({}): every group owns leaves/groups routers; pick groups \
+                         from the divisors of {}",
+                        self.inter.leaves, self.inter.leaves
+                    ));
+                }
+            }
+        }
+        // Ring/Mesh with a single accelerator have no intra links at all
+        // (`intra_stride` computes to 0): the fabric's own link-id
+        // constructors (`ring_hop`, `mesh_lane`) would alias into the NIC
+        // staging block at the same node offsets. No current route takes
+        // them with A == 1, but any future caller would silently corrupt
+        // another link's queue — reject the degenerate layout up front.
+        if n.accels_per_node == 1
+            && matches!(n.fabric.kind, FabricKind::Ring | FabricKind::Mesh)
+        {
+            return Err(format!(
+                "{} fabric with accels_per_node == 1 has no intra links \
+                 (intra_stride = 0) and its link-id constructors would alias the \
+                 NIC staging block; use the switch_star fabric for single-accel \
+                 nodes (it degenerates to the same accel->NIC path)",
+                n.fabric.kind.name()
+            ));
         }
         if n.fabric.nics_per_node == 0 {
             return Err("nics_per_node must be >= 1".into());
@@ -666,6 +760,7 @@ impl SimConfig {
             .with("nodes", self.inter.nodes)
             .with("leaves", self.inter.leaves)
             .with("spines", self.inter.spines)
+            .with("inter_kind", self.inter.kind.to_json())
             .with("msg_size_b", self.traffic.msg_size_b)
             .with("workload", workload.to_json())
             .pretty()
@@ -942,9 +1037,43 @@ impl FromJson for NodeConfig {
     }
 }
 
+impl ToJson for InterKind {
+    fn to_json(&self) -> Value {
+        match *self {
+            InterKind::LeafSpine => Value::Str("leaf_spine".into()),
+            InterKind::FatTree3 { pods, cores } => Value::obj()
+                .with("kind", "fat_tree3")
+                .with("pods", pods)
+                .with("cores", cores),
+            InterKind::Dragonfly { groups } => {
+                Value::obj().with("kind", "dragonfly").with("groups", groups)
+            }
+        }
+    }
+}
+
+impl FromJson for InterKind {
+    fn from_json(v: &Value) -> anyhow::Result<InterKind> {
+        match v {
+            Value::Str(s) if s == "leaf_spine" => Ok(InterKind::LeafSpine),
+            Value::Obj(_) => match v.str_of("kind")? {
+                "leaf_spine" => Ok(InterKind::LeafSpine),
+                "fat_tree3" => Ok(InterKind::FatTree3 {
+                    pods: v.usize_of("pods")?,
+                    cores: v.usize_of("cores")?,
+                }),
+                "dragonfly" => Ok(InterKind::Dragonfly { groups: v.usize_of("groups")? }),
+                other => anyhow::bail!("unknown inter kind '{other}'"),
+            },
+            other => anyhow::bail!("bad inter kind value {other:?}"),
+        }
+    }
+}
+
 impl ToJson for InterConfig {
     fn to_json(&self) -> Value {
         Value::obj()
+            .with("kind", self.kind.to_json())
             .with("nodes", self.nodes)
             .with("leaves", self.leaves)
             .with("spines", self.spines)
@@ -957,6 +1086,12 @@ impl ToJson for InterConfig {
 impl FromJson for InterConfig {
     fn from_json(v: &Value) -> anyhow::Result<InterConfig> {
         Ok(InterConfig {
+            // Optional: files written before the inter topology was
+            // pluggable get the original two-level leaf/spine.
+            kind: match v.get("kind") {
+                Some(k) => InterKind::from_json(k)?,
+                None => InterKind::LeafSpine,
+            },
             nodes: v.usize_of("nodes")?,
             leaves: v.usize_of("leaves")?,
             spines: v.usize_of("spines")?,
@@ -1313,6 +1448,104 @@ mod tests {
         let mut bad = cfg.clone();
         bad.telemetry.bins = 0;
         assert!(bad.validate().unwrap_err().contains("telemetry.bins"));
+    }
+
+    #[test]
+    fn inter_kind_json_roundtrips_and_defaults() {
+        for kind in [
+            InterKind::LeafSpine,
+            InterKind::FatTree3 { pods: 4, cores: 8 },
+            InterKind::Dragonfly { groups: 4 },
+        ] {
+            let mut cfg = scaleout(32, 256.0, Pattern::C2, 0.4);
+            cfg.inter.kind = kind;
+            cfg.validate().unwrap_or_else(|e| panic!("{kind:?}: {e}"));
+            let back = SimConfig::from_json_str(&cfg.to_json_string()).unwrap();
+            assert_eq!(cfg, back, "{kind:?}");
+        }
+        // Pre-pluggable config files (no kind field) parse as leaf/spine.
+        let cfg = scaleout(32, 128.0, Pattern::C1, 0.2);
+        let mut v = cfg.to_json();
+        if let Value::Obj(fields) = &mut v {
+            for (k, nv) in fields.iter_mut() {
+                if k == "inter" {
+                    if let Value::Obj(inf) = nv {
+                        inf.retain(|(k, _)| k != "kind");
+                    }
+                }
+            }
+        }
+        let old = SimConfig::from_json(&v).unwrap();
+        assert_eq!(old.inter.kind, InterKind::LeafSpine);
+        assert_eq!(old, cfg, "default inter kind must equal the legacy model");
+    }
+
+    #[test]
+    fn inter_kind_is_compile_phase_in_the_fingerprint() {
+        let base = scaleout(32, 256.0, Pattern::C1, 0.2);
+        let mut ft = base.clone();
+        ft.inter.kind = InterKind::FatTree3 { pods: 4, cores: 8 };
+        assert_ne!(base.blueprint_fingerprint(), ft.blueprint_fingerprint());
+        let mut df = base.clone();
+        df.inter.kind = InterKind::Dragonfly { groups: 4 };
+        assert_ne!(base.blueprint_fingerprint(), df.blueprint_fingerprint());
+        assert_ne!(ft.blueprint_fingerprint(), df.blueprint_fingerprint());
+        // Dims are compile-phase too: a different pod count recompiles.
+        let mut ft2 = base.clone();
+        ft2.inter.kind = InterKind::FatTree3 { pods: 2, cores: 8 };
+        assert_ne!(ft.blueprint_fingerprint(), ft2.blueprint_fingerprint());
+    }
+
+    #[test]
+    fn inter_kind_dims_validated_with_actionable_errors() {
+        let base = || scaleout(32, 256.0, Pattern::C1, 0.2); // 8 leaves, 4 spines
+        let mut cfg = base();
+        cfg.inter.kind = InterKind::FatTree3 { pods: 3, cores: 8 };
+        let err = cfg.validate().unwrap_err();
+        assert!(err.contains("pods") && err.contains("divisors"), "{err}");
+        cfg.inter.kind = InterKind::FatTree3 { pods: 4, cores: 6 };
+        let err = cfg.validate().unwrap_err();
+        assert!(err.contains("cores") && err.contains("multiple"), "{err}");
+        cfg.inter.kind = InterKind::FatTree3 { pods: 0, cores: 8 };
+        assert!(cfg.validate().is_err());
+        cfg.inter.kind = InterKind::FatTree3 { pods: 4, cores: 0 };
+        assert!(cfg.validate().is_err());
+        cfg.inter.kind = InterKind::Dragonfly { groups: 3 };
+        let err = cfg.validate().unwrap_err();
+        assert!(err.contains("groups") && err.contains("divisors"), "{err}");
+        cfg.inter.kind = InterKind::Dragonfly { groups: 0 };
+        assert!(cfg.validate().is_err());
+        // Legal dims pass.
+        cfg.inter.kind = InterKind::FatTree3 { pods: 4, cores: 8 };
+        cfg.validate().unwrap();
+        cfg.inter.kind = InterKind::Dragonfly { groups: 8 };
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn degenerate_single_accel_ring_and_mesh_rejected() {
+        // intra_stride computes to 0 for both, so ring_hop/mesh_lane ids
+        // would alias the NIC staging block (satellite bugfix).
+        for kind in [FabricKind::Ring, FabricKind::Mesh] {
+            let mut cfg = scaleout(32, 128.0, Pattern::C1, 0.2);
+            cfg.node.accels_per_node = 1;
+            cfg.node.fabric = FabricConfig::new(kind, 1);
+            let err = cfg.validate().unwrap_err();
+            assert!(
+                err.contains("accels_per_node == 1") && err.contains("switch_star"),
+                "{kind:?}: {err}"
+            );
+        }
+        // switch_star and host_tree stay legal with one accel per node.
+        for kind in [FabricKind::SwitchStar, FabricKind::HostTree] {
+            let mut cfg = scaleout(32, 128.0, Pattern::C1, 0.2);
+            cfg.node.accels_per_node = 1;
+            cfg.node.fabric = FabricConfig::new(kind, 1);
+            if kind == FabricKind::HostTree {
+                cfg.node.rc_cpu_bounce = false;
+            }
+            cfg.validate().unwrap_or_else(|e| panic!("{kind:?}: {e}"));
+        }
     }
 
     #[test]

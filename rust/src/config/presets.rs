@@ -33,6 +33,7 @@ pub fn cellia() -> SimConfig {
             },
         },
         inter: InterConfig {
+            kind: InterKind::LeafSpine,
             nodes: 2,
             leaves: 1,
             spines: 1,
@@ -101,6 +102,7 @@ pub fn scaleout(nodes: usize, aggregated_gbs: f64, pattern: Pattern, load: f64) 
             },
         },
         inter: InterConfig {
+            kind: InterKind::LeafSpine,
             nodes,
             leaves,
             spines,
@@ -154,6 +156,44 @@ pub fn with_fabric(mut cfg: SimConfig, fabric: FabricConfig) -> SimConfig {
         cfg.node.rc_cpu_bounce = false;
     }
     cfg
+}
+
+/// Swap the inter-node topology of any preset. Dims inside `kind`
+/// (pods/cores/groups) must agree with the preset's `leaves`/`spines`;
+/// [`default_pods`]/[`default_groups`] derive compatible values from
+/// the RLFT sizing.
+pub fn with_inter(mut cfg: SimConfig, kind: InterKind) -> SimConfig {
+    cfg.inter.kind = kind;
+    cfg
+}
+
+/// Default pod count for a [`InterKind::FatTree3`] over `leaves` leaf
+/// switches: the largest of 8/4/2 that divides the leaves with at least
+/// two leaves per pod (falling back to one big pod).
+pub fn default_pods(leaves: usize) -> usize {
+    for p in [8usize, 4, 2] {
+        if leaves % p == 0 && leaves / p >= 2 {
+            return p;
+        }
+    }
+    1
+}
+
+/// Default group count for a [`InterKind::Dragonfly`] over `leaves`
+/// routers: the largest of 8/4/2 that divides the leaves with at least
+/// two routers per group (falling back to one group).
+pub fn default_groups(leaves: usize) -> usize {
+    default_pods(leaves)
+}
+
+/// A ready-made [`InterKind`] for a preset's RLFT sizing: fat tree with
+/// default pods and `cores == spines`, dragonfly with default groups.
+pub fn default_inter_kind(name_kind: &str, leaves: usize, spines: usize) -> InterKind {
+    match name_kind {
+        "fat_tree3" => InterKind::FatTree3 { pods: default_pods(leaves), cores: spines },
+        "dragonfly" => InterKind::Dragonfly { groups: default_groups(leaves) },
+        _ => InterKind::LeafSpine,
+    }
 }
 
 /// Per-fabric paper presets for the hierarchical-AllReduce interference
@@ -284,6 +324,27 @@ mod tests {
         // HostTree presets must not double-count the RC bounce.
         assert!(!family[3].node.rc_cpu_bounce);
         assert_eq!(family[1].node.fabric.nics_per_node, 4);
+    }
+
+    #[test]
+    fn inter_presets_validate_for_every_kind_and_scale() {
+        for nodes in [32usize, 128, 1024] {
+            let base = scaleout(nodes, 256.0, Pattern::C1, 0.3);
+            let (leaves, spines) = rlft_dims(nodes);
+            assert_eq!((base.inter.leaves, base.inter.spines), (leaves, spines));
+            for name in ["leaf_spine", "fat_tree3", "dragonfly"] {
+                let kind = default_inter_kind(name, leaves, spines);
+                assert_eq!(kind.name(), name);
+                let cfg = with_inter(base.clone(), kind);
+                cfg.validate().unwrap_or_else(|e| panic!("{nodes}/{name}: {e}"));
+            }
+        }
+        // The default dims follow the 8/4/2 divisor ladder.
+        assert_eq!(default_pods(8), 4);
+        assert_eq!(default_pods(16), 8);
+        assert_eq!(default_pods(32), 8);
+        assert_eq!(default_pods(3), 1);
+        assert_eq!(default_groups(8), 4);
     }
 
     #[test]

@@ -19,7 +19,7 @@ pub mod results;
 
 use std::sync::Arc;
 
-use crate::config::{presets, FabricConfig, Pattern, SimConfig};
+use crate::config::{presets, FabricConfig, InterKind, Pattern, SimConfig};
 use crate::net::world::{BenchMode, SerProvider, Sim, SimReport, WorldBlueprint};
 use crate::runtime::CachedProvider;
 
@@ -37,6 +37,9 @@ pub struct SweepSpec {
     /// Intra-node fabric + NIC count the sweep runs on (the scenario
     /// axis: the same load sweep is re-runnable per fabric).
     pub fabric: FabricConfig,
+    /// Inter-node topology the sweep runs on (the second scenario axis;
+    /// compile-phase, so each inter kind is its own blueprint).
+    pub inter: InterKind,
     /// Use the paper's full 2.5 ms + 0.5 ms windows.
     pub paper_windows: bool,
     /// Enable per-link flow-class telemetry on every point (CLI
@@ -58,6 +61,7 @@ impl SweepSpec {
             patterns: Pattern::PAPER.to_vec(),
             loads: Self::paper_loads(),
             fabric: FabricConfig::switch_star(),
+            inter: InterKind::LeafSpine,
             paper_windows: false,
             telemetry: false,
             workers: default_workers(),
@@ -78,6 +82,7 @@ impl SweepSpec {
             patterns: vec![Pattern::C1, Pattern::C3, Pattern::C5],
             loads: vec![0.2, 0.5, 0.8, 1.0],
             fabric: FabricConfig::switch_star(),
+            inter: InterKind::LeafSpine,
             paper_windows: false,
             telemetry: false,
             workers: default_workers(),
@@ -91,10 +96,9 @@ impl SweepSpec {
         for &gbs in &self.intra_gbs {
             for &p in &self.patterns {
                 for &load in &self.loads {
-                    let mut cfg = presets::with_fabric(
-                        presets::scaleout(self.nodes, gbs, p, load),
-                        self.fabric,
-                    );
+                    let base = presets::scaleout(self.nodes, gbs, p, load);
+                    let mut cfg =
+                        presets::with_inter(presets::with_fabric(base, self.fabric), self.inter);
                     cfg.seed = self.seed ^ (out.len() as u64).wrapping_mul(0x9E3779B97F4A7C15);
                     if self.paper_windows {
                         cfg = presets::with_paper_windows(cfg);
@@ -220,6 +224,7 @@ mod tests {
             patterns: vec![Pattern::C3, Pattern::C5],
             loads: vec![0.1],
             fabric: FabricConfig::switch_star(),
+            inter: InterKind::LeafSpine,
             paper_windows: false,
             telemetry: false,
             workers: 2,
@@ -310,6 +315,28 @@ mod tests {
                 assert_eq!(r.fabric, kind.name(), "{kind:?}");
                 assert_eq!(r.nics, 2);
                 assert!(r.delivered_msgs > 0, "{kind:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn sweep_runs_on_every_inter_kind() {
+        // The inter axis mirrors the fabric axis: each kind compiles its
+        // own blueprint and the reports carry the kind name for the CSV
+        // `inter` column.
+        for name in ["leaf_spine", "fat_tree3", "dragonfly"] {
+            let mut spec = tiny_spec();
+            spec.inter = {
+                let probe = presets::scaleout(spec.nodes, 128.0, Pattern::C1, 0.5);
+                presets::default_inter_kind(name, probe.inter.leaves, probe.inter.spines)
+            };
+            let provider = Arc::new(snapshot_provider(&spec, &NativeProvider));
+            let reports =
+                run_sweep(&spec, provider, None).unwrap_or_else(|e| panic!("{name}: {e:#}"));
+            assert_eq!(reports.len(), 2);
+            for r in &reports {
+                assert_eq!(r.inter, name, "report must carry the inter kind");
+                assert!(r.delivered_msgs > 0, "{name}");
             }
         }
     }

@@ -255,6 +255,38 @@ mod tests {
     }
 
     #[test]
+    fn stateful_pool_surfaces_error_when_late_jobs_are_skipped() {
+        // Fail-fast through `run_ordered_with`: job 1 fails, the queue
+        // is cleared, and the late jobs' result slots stay forever
+        // empty. The leader must surface the original error (with index
+        // context) instead of panicking while unwrapping the
+        // never-filled slots — the skipped jobs' worker state is simply
+        // dropped with its thread.
+        let executed = Arc::new(AtomicUsize::new(0));
+        let jobs: Vec<_> = (0..32u64)
+            .map(|i| {
+                let executed = executed.clone();
+                move |state: &mut u64| -> anyhow::Result<u64> {
+                    executed.fetch_add(1, Ordering::SeqCst);
+                    *state += 1;
+                    // Give the leader time to observe the error and
+                    // clear the queue before the worker pops again.
+                    std::thread::sleep(std::time::Duration::from_millis(2));
+                    if i == 1 {
+                        anyhow::bail!("boom at job 1");
+                    }
+                    Ok(*state)
+                }
+            })
+            .collect();
+        let err = run_ordered_with(jobs, 1, || 0u64, None).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("job 1 failed") && msg.contains("boom"), "{msg}");
+        let ran = executed.load(Ordering::SeqCst);
+        assert!(ran < 8, "late jobs must be skipped under fail-fast, ran {ran}/32");
+    }
+
+    #[test]
     fn empty_batch_is_fine() {
         let jobs: Vec<fn() -> anyhow::Result<u64>> = vec![];
         assert!(run_ordered(jobs, 4, None).unwrap().is_empty());

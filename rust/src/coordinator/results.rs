@@ -7,8 +7,8 @@ use crate::net::world::SimReport;
 use crate::serial::json::{FromJson, ToJson, Value};
 
 /// CSV columns written for every sweep point.
-pub const CSV_HEADER: &str = "pattern,load,nodes,accels,fabric,nics,intra_gbs_cfg,offered_gbs,\
-intra_tput_gbs,intra_drain_gbs,intra_lat_mean_ns,intra_lat_p99_ns,intra_lat_max_ns,\
+pub const CSV_HEADER: &str = "pattern,load,nodes,accels,fabric,nics,inter,intra_gbs_cfg,\
+offered_gbs,intra_tput_gbs,intra_drain_gbs,intra_lat_mean_ns,intra_lat_p99_ns,intra_lat_max_ns,\
 inter_tput_gbs,inter_drain_gbs,fct_mean_ns,fct_p99_ns,fct_max_ns,\
 intra_wire_gbs,inter_wire_gbs,drop_frac,delivered_msgs,events,wall_ms,\
 coll_op,coll_size_b,coll_iters,coll_mean_ns,coll_p99_ns,coll_pred_ns";
@@ -16,13 +16,14 @@ coll_op,coll_size_b,coll_iters,coll_mean_ns,coll_p99_ns,coll_pred_ns";
 /// One CSV row for a report (matches [`CSV_HEADER`]).
 pub fn csv_row(r: &SimReport) -> String {
     format!(
-        "{},{:.4},{},{},{},{},{:.1},{:.3},{:.3},{:.3},{:.1},{:.1},{:.1},{:.3},{:.3},{:.1},{:.1},{:.1},{:.3},{:.3},{:.4},{},{},{:.1},{},{},{},{:.1},{:.1},{:.1}",
+        "{},{:.4},{},{},{},{},{},{:.1},{:.3},{:.3},{:.3},{:.1},{:.1},{:.1},{:.3},{:.3},{:.1},{:.1},{:.1},{:.3},{:.3},{:.4},{},{},{:.1},{},{},{},{:.1},{:.1},{:.1}",
         r.pattern,
         r.load,
         r.nodes,
         r.accels,
         r.fabric,
         r.nics,
+        r.inter,
         r.aggregated_intra_gbs,
         r.offered_gbs,
         r.intra_tput_gbs,
@@ -226,6 +227,39 @@ mod tests {
         let err = stream.finish().unwrap_err();
         assert!(format!("{err:#}").contains("missing submission index 1"), "{err:#}");
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn csv_stream_finish_reports_backlog_after_mid_stream_worker_error() {
+        // The fail-fast sweep shape: the worker running submission
+        // index 1 errored (its row never arrives), while indices 2 and 3
+        // had already completed and streamed in. finish() must refuse to
+        // pass the truncated series off as complete, naming both the
+        // buffered backlog and the first missing index — and the rows
+        // that did land in order must survive on disk.
+        let dir = std::env::temp_dir().join("sauron_csv_stream_err_test");
+        let path = dir.join("aborted.csv");
+        let r = sample_report();
+        let mut stream = CsvStream::create(&path).unwrap();
+        stream.push(0, &r);
+        stream.push(2, &r);
+        stream.push(3, &r);
+        let err = stream.finish().unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("2 rows still buffered"), "{msg}");
+        assert!(msg.contains("missing submission index 1"), "{msg}");
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 2, "header + the one in-order row:\n{text}");
+        assert_eq!(text.lines().nth(1).unwrap(), csv_row(&r));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn csv_row_carries_fabric_and_inter_kind() {
+        let r = sample_report();
+        let row = csv_row(&r);
+        let inter_col = CSV_HEADER.split(',').position(|c| c == "inter").unwrap();
+        assert_eq!(row.split(',').nth(inter_col).unwrap(), "leaf_spine");
     }
 
     #[test]

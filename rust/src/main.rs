@@ -15,8 +15,8 @@ use std::sync::Arc;
 use sauron::analytic::{CollParams, PcieParams};
 use sauron::cli::Args;
 use sauron::config::{
-    presets, CollOp, CollScope, CollectiveSpec, FabricConfig, FabricKind, NicPolicy, Pattern,
-    SimConfig,
+    presets, CollOp, CollScope, CollectiveSpec, FabricConfig, FabricKind, InterKind, NicPolicy,
+    Pattern, SimConfig,
 };
 use sauron::coordinator::{self, results, SweepSpec};
 use sauron::net::world::{BenchMode, NativeProvider, SerProvider, Sim};
@@ -37,19 +37,23 @@ COMMANDS
              Reproduce Tables 1/2 + Fig 4 (ib_write vs paper's cluster).
   sweep      [--nodes N] [--intra 128,256,512] [--patterns C1,...,C5]
              [--loads 20] [--fabric star|mesh|ring|host_tree] [--nics K]
-             [--nic-policy local_rank|round_robin] [--paper-windows]
+             [--nic-policy local_rank|round_robin]
+             [--inter leaf_spine|fat_tree3|dragonfly]
+             [--pods P] [--cores C] [--groups G] [--paper-windows]
              [--telemetry] [--quick] [--out DIR]
              Reproduce Figures 5-8 (scale-out load sweeps) on any
-             intra-node fabric x NIC count. --telemetry attaches
-             per-link x per-class link_stats to every point's JSON
-             report (interference attribution; default off so bench
-             baselines are untouched).
+             intra-node fabric x NIC count x inter-node topology.
+             --telemetry attaches per-link x per-class link_stats to
+             every point's JSON report (interference attribution;
+             default off so bench baselines are untouched).
   run        <config.json> [--json]
              One simulation from a JSON config file.
   collective [--op ring_allreduce|reduce_scatter|allgather|all_to_all|hier_allreduce]
              [--scope global|per_node] [--nodes N] [--intra 128,256,512]
              [--fabric star|mesh|ring|host_tree] [--nics K]
              [--nic-policy local_rank|round_robin]
+             [--inter leaf_spine|fat_tree3|dragonfly]
+             [--pods P] [--cores C] [--groups G]
              [--size BYTES] [--iters K] [--bg-load F] [--bg-pattern C1|..|0.3]
              [--telemetry] [--out DIR] [--json]
              Closed-loop collective completion time vs the analytic
@@ -58,8 +62,8 @@ COMMANDS
              --telemetry prints the head-of-line blocking summary and
              writes a per-link interference-attribution CSV to --out
              (default results/).
-  topo       [--nodes N] [--fabric F] [--nics K]
-             Describe the RLFT fat-tree + intra fabric.
+  topo       [--nodes N] [--fabric F] [--nics K] [--inter I]
+             Describe the inter-node topology + intra fabric.
   traffic-model [--layers L] [--hidden H] [--seq S] [--vocab V]
              [--tp T] [--pp P] [--dp D] [--microbatches M]
              Evaluate the L2 LLM communication-volume model.
@@ -123,6 +127,37 @@ fn parse_fabric(args: &Args) -> anyhow::Result<FabricConfig> {
         fab.nic_policy = NicPolicy::parse(&p.to_ascii_lowercase())?;
     }
     Ok(fab)
+}
+
+/// Shared `--inter` / `--pods` / `--cores` / `--groups` flags. `leaves`
+/// and `spines` are the 2-level dims for the node count
+/// ([`presets::rlft_dims`]); the kind-specific dimensions default from
+/// them ([`presets::default_inter_kind`]) and the explicit flags
+/// override.
+fn parse_inter(args: &Args, leaves: usize, spines: usize) -> anyhow::Result<InterKind> {
+    let name = match args.opt("inter").map(|s| s.to_ascii_lowercase()) {
+        None => "leaf_spine".to_string(),
+        Some(s) => match s.as_str() {
+            "leaf_spine" | "leafspine" | "ls" | "rlft" => "leaf_spine".to_string(),
+            "fat_tree3" | "fat_tree" | "fattree" | "ft3" => "fat_tree3".to_string(),
+            "dragonfly" | "df" => "dragonfly".to_string(),
+            other => anyhow::bail!(
+                "unknown inter topology '{other}' (expected leaf_spine, fat_tree3 or dragonfly)"
+            ),
+        },
+    };
+    let mut kind = presets::default_inter_kind(&name, leaves, spines);
+    match &mut kind {
+        InterKind::FatTree3 { pods, cores } => {
+            *pods = args.get_or("pods", *pods)?;
+            *cores = args.get_or("cores", *cores)?;
+        }
+        InterKind::Dragonfly { groups } => {
+            *groups = args.get_or("groups", *groups)?;
+        }
+        InterKind::LeafSpine => {}
+    }
+    Ok(kind)
 }
 
 fn parse_pattern(s: &str) -> anyhow::Result<Pattern> {
@@ -206,10 +241,13 @@ fn main() -> anyhow::Result<()> {
         "sweep" => {
             let nodes = args.get_or("nodes", 32usize)?;
             let fabric = parse_fabric(&args)?;
+            let (leaves, spines) = presets::rlft_dims(nodes);
+            let inter = parse_inter(&args, leaves, spines)?;
             let telemetry = args.flag("telemetry");
             let spec = if args.flag("quick") {
                 let mut spec = SweepSpec::quick(nodes);
                 spec.fabric = fabric;
+                spec.inter = inter;
                 spec.telemetry = telemetry;
                 spec
             } else {
@@ -236,6 +274,7 @@ fn main() -> anyhow::Result<()> {
                     patterns,
                     loads: (1..=n_loads).map(|i| i as f64 / n_loads as f64).collect(),
                     fabric,
+                    inter,
                     paper_windows: args.flag("paper-windows"),
                     telemetry,
                     workers: args.get_or("workers", coordinator::default_workers())?,
@@ -245,14 +284,15 @@ fn main() -> anyhow::Result<()> {
             let out = PathBuf::from(args.opt("out").unwrap_or("results"));
             args.reject_unknown()?;
             eprintln!(
-                "sweep: {} points ({} nodes, {} fabric, {} NIC/node)",
+                "sweep: {} points ({} nodes, {} fabric, {} NIC/node, {} inter)",
                 spec.points(),
                 spec.nodes,
                 spec.fabric.kind.name(),
-                spec.fabric.nics_per_node
+                spec.fabric.nics_per_node,
+                spec.inter.name()
             );
             let provider = Arc::new(coordinator::snapshot_provider(&spec, be.provider()));
-            let tag = if spec.fabric == FabricConfig::switch_star() {
+            let mut tag = if spec.fabric == FabricConfig::switch_star() {
                 format!("{nodes}n")
             } else {
                 format!(
@@ -261,6 +301,9 @@ fn main() -> anyhow::Result<()> {
                     spec.fabric.nics_per_node
                 )
             };
+            if spec.inter != InterKind::LeafSpine {
+                tag = format!("{tag}_{}", spec.inter.name());
+            }
             // CSV rows stream out as points complete (submission-ordered)
             // instead of buffering the whole sweep in memory; a killed
             // run keeps every finished prefix row on disk.
@@ -353,23 +396,34 @@ fn main() -> anyhow::Result<()> {
             let bg_load = args.get_or("bg-load", 0.0f64)?;
             let bg_pattern = parse_pattern(args.opt("bg-pattern").unwrap_or("C1"))?;
             let fabric = parse_fabric(&args)?;
+            let (leaves, spines) = presets::rlft_dims(nodes);
+            let inter = parse_inter(&args, leaves, spines)?;
             let json = args.flag("json");
             let telemetry = args.flag("telemetry");
             let out = PathBuf::from(args.opt("out").unwrap_or("results"));
             args.reject_unknown()?;
             let spec = CollectiveSpec { op, scope, size_b, iters };
             for &gbs in &intra {
-                let mut cfg = presets::with_fabric(
-                    presets::collective_scaleout(nodes, gbs, spec, bg_pattern, bg_load),
-                    fabric,
+                let mut cfg = presets::with_inter(
+                    presets::with_fabric(
+                        presets::collective_scaleout(nodes, gbs, spec, bg_pattern, bg_load),
+                        fabric,
+                    ),
+                    inter,
                 );
                 cfg.telemetry.enabled = telemetry;
                 let report = Sim::new(cfg, be.provider(), BenchMode::None)?.try_run()?;
                 if telemetry {
+                    let inter_tag = if inter == InterKind::LeafSpine {
+                        String::new()
+                    } else {
+                        format!("_{}", report.inter)
+                    };
                     let csv = out.join(format!(
-                        "interference_{}_{}_{}nic_{:.0}gbs.csv",
+                        "interference_{}_{}{}_{}nic_{:.0}gbs.csv",
                         report.coll_op,
                         report.fabric,
+                        inter_tag,
                         report.nics,
                         gbs
                     ));
@@ -411,15 +465,37 @@ fn main() -> anyhow::Result<()> {
         "topo" => {
             let nodes = args.get_or("nodes", 32usize)?;
             let fabric = parse_fabric(&args)?;
-            args.reject_unknown()?;
             let (leaves, spines) = presets::rlft_dims(nodes);
-            let cfg =
-                presets::with_fabric(presets::scaleout(nodes, 128.0, Pattern::C1, 0.5), fabric);
+            let inter = parse_inter(&args, leaves, spines)?;
+            args.reject_unknown()?;
+            let cfg = presets::with_inter(
+                presets::with_fabric(presets::scaleout(nodes, 128.0, Pattern::C1, 0.5), fabric),
+                inter,
+            );
             let topo = sauron::net::Topology::new(&cfg);
-            println!("RLFT for {nodes} nodes (paper Table 3):");
+            println!("{} for {nodes} nodes:", inter.name());
             println!("  leaves: {leaves} ({} nodes each)", nodes / leaves);
-            println!("  spines: {spines}");
-            println!("  switches: {}", leaves + spines);
+            match inter {
+                InterKind::LeafSpine => {
+                    println!("  spines: {spines}");
+                    println!("  switches: {}", leaves + spines);
+                    println!("  routing: D-mod-K (spine = dst_node % {spines})");
+                }
+                InterKind::FatTree3 { pods, cores } => {
+                    println!("  pods: {pods} ({} leaves, {spines} aggs each)", leaves / pods);
+                    println!("  cores: {cores}");
+                    println!("  switches: {}", leaves + pods * spines + cores);
+                    println!(
+                        "  routing: minimal + D-mod-K (agg = dst_node % {spines}, \
+                         core = dst_node % {cores})"
+                    );
+                }
+                InterKind::Dragonfly { groups } => {
+                    println!("  groups: {groups} ({} routers each)", leaves / groups);
+                    println!("  switches: {leaves} (leaves double as group routers)");
+                    println!("  routing: minimal local-global-local (dst-indexed)");
+                }
+            }
             println!("  accelerators: {}", topo.total_accels());
             println!(
                 "  intra fabric: {} ({} NIC/node, {} policy)",
@@ -428,7 +504,6 @@ fn main() -> anyhow::Result<()> {
                 fabric.nic_policy.name()
             );
             println!("  unidirectional links: {}", topo.total_links());
-            println!("  routing: D-mod-K (spine = dst_node % {spines})");
         }
 
         "traffic-model" => {

@@ -15,8 +15,9 @@
 //! * **busy time** per class (serialization time, accumulated when each
 //!   transaction's serialization interval is fixed);
 //! * a **time-binned utilization series** (wire bytes per class per bin
-//!   over `[0, warmup + measure)`, completions past the window clamped
-//!   into the last bin);
+//!   over `[0, warmup + measure)`, plus one trailing *overflow* entry
+//!   collecting completions past the window — clamping them into the
+//!   last in-window bin used to let it report > 100% utilization);
 //! * the **queue-occupancy high-water mark** (bytes, including credit
 //!   reservations);
 //! * **head-of-line blocking time**: whenever a waiter (an upstream link
@@ -116,6 +117,11 @@ pub struct LinkCounters {
     /// included).
     pub high_water_b: u64,
     /// Wire bytes per class per time bin (the utilization series).
+    /// Holds `n_bins + 1` entries: indices `0..n_bins` cover the run
+    /// window, and the final entry is the overflow bucket for
+    /// completions past it (a bounded bin can never exceed 100%
+    /// utilization; the overflow entry has no width and no utilization
+    /// reading).
     pub bins: Vec<[u64; N_CLASSES]>,
 }
 
@@ -126,7 +132,7 @@ impl LinkCounters {
             busy_ps: [0; N_CLASSES],
             hol_ps: [[0; N_CLASSES]; N_CLASSES],
             high_water_b: 0,
-            bins: vec![[0; N_CLASSES]; n_bins],
+            bins: vec![[0; N_CLASSES]; n_bins + 1],
         }
     }
 
@@ -136,7 +142,7 @@ impl LinkCounters {
         self.hol_ps = [[0; N_CLASSES]; N_CLASSES];
         self.high_water_b = 0;
         self.bins.clear();
-        self.bins.resize(n_bins, [0; N_CLASSES]);
+        self.bins.resize(n_bins + 1, [0; N_CLASSES]);
     }
 
     fn is_active(&self) -> bool {
@@ -218,11 +224,13 @@ impl Telemetry {
 
     /// A unit of `class` finished traversing link `l` carrying `wire`
     /// bytes at time `at` (call exactly where `Link::tx_bytes` advances).
+    /// Completions past the binned window land in the trailing overflow
+    /// entry (index `n_bins`) instead of inflating the last real bin.
     #[inline]
     pub fn on_wire(&mut self, l: u32, class: TrafficClass, wire: u64, at: Time) {
         let lc = &mut self.links[l as usize];
         lc.bytes[class.idx()] += wire;
-        let bin = ((at.as_ps() / self.bin_ps) as usize).min(self.n_bins - 1);
+        let bin = ((at.as_ps() / self.bin_ps) as usize).min(self.n_bins);
         lc.bins[bin][class.idx()] += wire;
     }
 
@@ -350,7 +358,8 @@ pub struct LinkStat {
     /// Head-of-line blocking `[blocked class][occupant class]` (ps).
     pub hol_ps: [[u64; N_CLASSES]; N_CLASSES],
     /// Wire bytes per class per time bin (bin width =
-    /// `SimReport::telemetry_bin_ps`).
+    /// `SimReport::telemetry_bin_ps`). The final entry is the
+    /// past-window overflow bucket, not a width-`telemetry_bin_ps` bin.
     pub util_bins: Vec<[u64; N_CLASSES]>,
 }
 
@@ -442,14 +451,37 @@ mod tests {
         assert_eq!(t.bin_ps(), 1_000_000);
         t.on_wire(1, TrafficClass::InterBackground, 4096, Time::from_us(0.5));
         t.on_wire(1, TrafficClass::InterBackground, 4096, Time::from_us(9.5));
-        // Past-window completions clamp into the last bin.
+        // Past-window completions land in the overflow entry, not bin 9.
         t.on_wire(1, TrafficClass::Bench, 100, Time::from_us(42.0));
         let lc = &t.links()[1];
+        assert_eq!(lc.bins.len(), 11, "10 window bins + 1 overflow");
         assert_eq!(lc.bytes[TrafficClass::InterBackground.idx()], 8192);
         assert_eq!(lc.bins[0][TrafficClass::InterBackground.idx()], 4096);
         assert_eq!(lc.bins[9][TrafficClass::InterBackground.idx()], 4096);
-        assert_eq!(lc.bins[9][TrafficClass::Bench.idx()], 100);
+        assert_eq!(lc.bins[9][TrafficClass::Bench.idx()], 0);
+        assert_eq!(lc.bins[10][TrafficClass::Bench.idx()], 100);
         assert_eq!(lc.bytes.iter().sum::<u64>(), 8192 + 100);
+        // Conservation still holds with the overflow included: the flat
+        // bin sum equals the per-class byte totals.
+        let flat: u64 = lc.bins.iter().flatten().sum();
+        assert_eq!(flat, lc.bytes.iter().sum::<u64>());
+    }
+
+    #[test]
+    fn window_bins_never_exceed_their_capacity_share() {
+        // The old clamp folded arbitrarily late completions into the
+        // last *real* bin, which could report > 100% utilization. With
+        // the overflow bucket, a burst entirely past the window leaves
+        // every in-window bin untouched.
+        let mut t = Telemetry::new(1, 1, Time::from_us(1.0), 4);
+        for i in 0..64 {
+            t.on_wire(0, TrafficClass::InterBackground, 4096, Time::from_us(2.0 + i as f64));
+        }
+        let lc = &t.links()[0];
+        for (i, bin) in lc.bins[..4].iter().enumerate() {
+            assert_eq!(bin.iter().sum::<u64>(), 0, "in-window bin {i} must stay empty");
+        }
+        assert_eq!(lc.bins[4].iter().sum::<u64>(), 64 * 4096);
     }
 
     #[test]
@@ -482,7 +514,7 @@ mod tests {
         assert_eq!(t.bin_ps(), 2_500_000);
         let lc = &t.links()[0];
         assert!(!lc.is_active());
-        assert_eq!(lc.bins.len(), 8);
+        assert_eq!(lc.bins.len(), 9, "8 window bins + 1 overflow");
         assert_eq!(t.delivered_bytes().iter().sum::<u64>(), 0);
         // The stale park was dropped by the reset.
         t.unpark_link(1, Time::from_us(1.0));

@@ -25,24 +25,43 @@
 //!   +1        nic_to_sw[k]   NIC k -> fabric (ingress staging)
 //!   +2        nic_up[k]      NIC k -> leaf switch (inter link)
 //!   +3        nic_down[k]    leaf switch -> NIC k
-//! then (base N*node_stride):
+//! then the inter region (base `inter_base = N*node_stride`), computed
+//! from the pluggable inter topology ([`InterKind`]):
+//!
+//! ```text
+//! LeafSpine (2-level RLFT, default):
 //!   +l*S+s     leaf_up[l][s]    leaf l -> spine s
 //!   +L*S+s*L+l spine_down[s][l] spine s -> leaf l
+//! FatTree3  (P pods of L/P leaves, S aggs per pod, C cores; lpp = L/P):
+//!   +l*S+g                    agg_up[l][g]      leaf l -> agg g of its pod
+//!   +LS+p*S*lpp+g*lpp+(l-p*lpp) agg_down[p][g][l] agg g of pod p -> leaf l
+//!   +2LS+p*C+c                core_up[p][c]     agg (c%S) of pod p -> core c
+//!   +2LS+PC+c*P+p             core_down[c][p]   core c -> agg (c%S) of pod p
+//! Dragonfly (G groups of rpg = L/G routers, one leaf per router):
+//!   +g*rpg*(rpg-1)+r*(rpg-1)+e df_local[g][r][r'] router r -> r' in group g
+//!                              (e = r'<r ? r' : r'-1)
+//!   +G*rpg*(rpg-1)+g*(G-1)+e   df_global[g][g']   group g -> group g'
 //! ```
 //!
 //! `SwitchStar` with `K = 1` reproduces the original fixed layout id for
 //! id (stride `2A + 4`), so pre-fabric configurations are bit-for-bit
-//! unchanged.
+//! unchanged; `LeafSpine` likewise reproduces the pre-pluggable inter
+//! region bit-for-bit.
 //!
-//! Inter-node routing is the paper's deterministic **D-mod-K** on the
-//! 2-level RLFT: the up-path spine for a packet to destination node `d`
-//! is `d % S`, which spreads destinations evenly over spines and keeps
-//! each destination's down-path unique (Zahavi's contention-free
-//! ordering for uniform traffic). NIC k of every node attaches to the
-//! node's leaf (rail-aligned: same-index NICs talk through the same
-//! leaf ports).
+//! Inter-node routing is the paper's deterministic **D-mod-K**,
+//! per topology. LeafSpine: the up-path spine for a packet to
+//! destination node `d` is `d % S`, which spreads destinations evenly
+//! over spines and keeps each destination's down-path unique (Zahavi's
+//! contention-free ordering for uniform traffic). FatTree3: minimal
+//! routing with `agg = d % S` inside a pod and `core = d % C` across
+//! pods (the core's attaching agg is `core % S`, so the up-path is
+//! fully determined by the destination). Dragonfly: minimal ≤1 local +
+//! 1 global + ≤1 local routing; the global link between two groups is
+//! unique, so the path is destination-determined as well. NIC k of
+//! every node attaches to the node's leaf (rail-aligned: same-index
+//! NICs talk through the same leaf ports).
 
-use crate::config::{FabricKind, NicPolicy, SimConfig};
+use crate::config::{FabricKind, InterKind, NicPolicy, SimConfig};
 
 /// What a link is, with its owning node / leaf / spine index.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -67,10 +86,24 @@ pub enum Kind {
     NicUp { node: u32, nic: u32 },
     /// Leaf switch -> NIC (inter down-link).
     NicDown { node: u32, nic: u32 },
-    /// Leaf -> spine trunk.
+    /// Leaf -> spine trunk (LeafSpine inter).
     LeafUp { leaf: u32, spine: u32 },
-    /// Spine -> leaf trunk.
+    /// Spine -> leaf trunk (LeafSpine inter).
     SpineDown { spine: u32, leaf: u32 },
+    /// Leaf -> per-pod aggregation switch trunk (FatTree3 inter).
+    AggUp { leaf: u32, agg: u32 },
+    /// Aggregation switch -> leaf trunk; `leaf` is the global leaf id
+    /// inside pod `pod` (FatTree3 inter).
+    AggDown { pod: u32, agg: u32, leaf: u32 },
+    /// Agg (`core % S`) of pod `pod` -> core switch (FatTree3 inter).
+    CoreUp { pod: u32, core: u32 },
+    /// Core switch -> agg (`core % S`) of pod `pod` (FatTree3 inter).
+    CoreDown { core: u32, pod: u32 },
+    /// Intra-group router link `from` -> `to` (group-relative router
+    /// indices, Dragonfly inter).
+    DfLocal { group: u32, from: u32, to: u32 },
+    /// Global link group `from` -> group `to` (Dragonfly inter).
+    DfGlobal { from: u32, to: u32 },
 }
 
 impl Kind {
@@ -89,6 +122,12 @@ impl Kind {
             Kind::NicDown { .. } => "nic_down",
             Kind::LeafUp { .. } => "leaf_up",
             Kind::SpineDown { .. } => "spine_down",
+            Kind::AggUp { .. } => "agg_up",
+            Kind::AggDown { .. } => "agg_down",
+            Kind::CoreUp { .. } => "core_up",
+            Kind::CoreDown { .. } => "core_down",
+            Kind::DfLocal { .. } => "df_local",
+            Kind::DfGlobal { .. } => "df_global",
         }
     }
 
@@ -108,6 +147,12 @@ impl Kind {
             Kind::NicDown { node, nic } => format!("nic_down[n{node}.k{nic}]"),
             Kind::LeafUp { leaf, spine } => format!("leaf_up[l{leaf}->s{spine}]"),
             Kind::SpineDown { spine, leaf } => format!("spine_down[s{spine}->l{leaf}]"),
+            Kind::AggUp { leaf, agg } => format!("agg_up[l{leaf}->g{agg}]"),
+            Kind::AggDown { pod, agg, leaf } => format!("agg_down[p{pod}.g{agg}->l{leaf}]"),
+            Kind::CoreUp { pod, core } => format!("core_up[p{pod}->c{core}]"),
+            Kind::CoreDown { core, pod } => format!("core_down[c{core}->p{pod}]"),
+            Kind::DfLocal { group, from, to } => format!("df_local[g{group}.r{from}->r{to}]"),
+            Kind::DfGlobal { from, to } => format!("df_global[g{from}->g{to}]"),
         }
     }
 }
@@ -129,6 +174,14 @@ pub struct Topology {
     pub nics_per_node: u32,
     /// Egress NIC-selection policy.
     pub nic_policy: NicPolicy,
+    /// Inter-node topology above the leaves.
+    pub inter_kind: InterKind,
+    /// FatTree3 pods (0 on the other inter kinds).
+    pub pods: u32,
+    /// FatTree3 core switches (0 on the other inter kinds).
+    pub cores: u32,
+    /// Dragonfly groups (0 on the other inter kinds).
+    pub groups: u32,
     /// Nodes attached to each leaf switch (validated divisible).
     nodes_per_leaf: u32,
     /// Fabric-internal links per node, before the NIC block.
@@ -168,14 +221,45 @@ impl Topology {
             FabricKind::HostTree => 2 * a + 2,
         };
         let node_stride = intra_stride + 4 * nics;
+        let spines = cfg.inter.spines as u32;
+        let (pods, cores, groups) = match cfg.inter.kind {
+            InterKind::LeafSpine => (0, 0, 0),
+            InterKind::FatTree3 { pods, cores } => {
+                let (p, c) = (pods as u32, cores as u32);
+                assert!(
+                    p > 0 && leaves % p == 0,
+                    "fat_tree3 pods ({p}) must divide leaves ({leaves}); \
+                     run SimConfig::validate before building a Topology"
+                );
+                assert!(
+                    c > 0 && c % spines == 0,
+                    "fat_tree3 cores ({c}) must be a positive multiple of spines ({spines}); \
+                     run SimConfig::validate before building a Topology"
+                );
+                (p, c, 0)
+            }
+            InterKind::Dragonfly { groups } => {
+                let g = groups as u32;
+                assert!(
+                    g > 0 && leaves % g == 0,
+                    "dragonfly groups ({g}) must divide leaves ({leaves}); \
+                     run SimConfig::validate before building a Topology"
+                );
+                (0, 0, g)
+            }
+        };
         Topology {
             nodes,
             accels_per_node: a,
             leaves,
-            spines: cfg.inter.spines as u32,
+            spines,
             fabric: fab.kind,
             nics_per_node: nics,
             nic_policy: fab.nic_policy,
+            inter_kind: cfg.inter.kind,
+            pods,
+            cores,
+            groups,
             nodes_per_leaf: nodes / leaves,
             intra_stride,
             node_stride,
@@ -185,7 +269,18 @@ impl Topology {
 
     /// Total unidirectional links (dense id space bound).
     pub fn total_links(&self) -> u32 {
-        self.inter_base + 2 * self.leaves * self.spines
+        self.inter_base
+            + match self.inter_kind {
+                InterKind::LeafSpine => 2 * self.leaves * self.spines,
+                InterKind::FatTree3 { .. } => {
+                    2 * self.leaves * self.spines + 2 * self.pods * self.cores
+                }
+                InterKind::Dragonfly { .. } => {
+                    let rpg = self.routers_per_group();
+                    self.groups * rpg * rpg.saturating_sub(1)
+                        + self.groups * self.groups.saturating_sub(1)
+                }
+            }
     }
     /// Total accelerators in the system.
     pub fn total_accels(&self) -> u32 {
@@ -212,6 +307,45 @@ impl Topology {
     #[inline]
     pub fn nic_host(&self, nic: u32) -> u32 {
         nic % self.accels_per_node
+    }
+    /// (FatTree3) leaves per pod.
+    #[inline]
+    pub fn leaves_per_pod(&self) -> u32 {
+        self.leaves / self.pods
+    }
+    /// (FatTree3) pod owning a leaf.
+    #[inline]
+    pub fn leaf_pod(&self, leaf: u32) -> u32 {
+        leaf / self.leaves_per_pod()
+    }
+    /// (Dragonfly) routers (= leaves) per group.
+    #[inline]
+    pub fn routers_per_group(&self) -> u32 {
+        self.leaves / self.groups
+    }
+    /// (Dragonfly) group owning a leaf.
+    #[inline]
+    pub fn leaf_group(&self, leaf: u32) -> u32 {
+        leaf / self.routers_per_group()
+    }
+    /// (Dragonfly) group-relative router index of a leaf.
+    #[inline]
+    pub fn leaf_router(&self, leaf: u32) -> u32 {
+        leaf % self.routers_per_group()
+    }
+    /// (Dragonfly) the router of group `src_g` holding the global link
+    /// toward `dst_g` (compressed peer index spread over the routers).
+    #[inline]
+    pub fn df_out_router(&self, src_g: u32, dst_g: u32) -> u32 {
+        let rel = if dst_g < src_g { dst_g } else { dst_g - 1 };
+        rel % self.routers_per_group()
+    }
+    /// (Dragonfly) the router of group `dst_g` where the global link
+    /// from `src_g` lands.
+    #[inline]
+    pub fn df_in_router(&self, src_g: u32, dst_g: u32) -> u32 {
+        let rel = if src_g < dst_g { src_g } else { src_g - 1 };
+        rel % self.routers_per_group()
     }
 
     /// Egress NIC for a message from `src` to (remote) `dst`, per the
@@ -309,7 +443,61 @@ impl Topology {
     #[inline]
     /// Link id: spine `spine` -> leaf `leaf` trunk.
     pub fn spine_down(&self, spine: u32, leaf: u32) -> u32 {
+        debug_assert!(matches!(self.inter_kind, InterKind::LeafSpine));
         self.inter_base + self.leaves * self.spines + spine * self.leaves + leaf
+    }
+    #[inline]
+    /// (FatTree3) link id: leaf -> agg `agg` of the leaf's pod. Same
+    /// block layout as `leaf_up` (leaf-major over `spines` aggs).
+    pub fn agg_up(&self, leaf: u32, agg: u32) -> u32 {
+        debug_assert!(matches!(self.inter_kind, InterKind::FatTree3 { .. }));
+        self.inter_base + leaf * self.spines + agg
+    }
+    #[inline]
+    /// (FatTree3) link id: agg `agg` of pod `pod` -> (global) leaf `leaf`.
+    pub fn agg_down(&self, pod: u32, agg: u32, leaf: u32) -> u32 {
+        debug_assert!(matches!(self.inter_kind, InterKind::FatTree3 { .. }));
+        let lpp = self.leaves_per_pod();
+        debug_assert_eq!(self.leaf_pod(leaf), pod);
+        self.inter_base
+            + self.leaves * self.spines
+            + pod * self.spines * lpp
+            + agg * lpp
+            + (leaf - pod * lpp)
+    }
+    #[inline]
+    /// (FatTree3) link id: agg (`core % spines`) of pod `pod` -> core.
+    pub fn core_up(&self, pod: u32, core: u32) -> u32 {
+        debug_assert!(matches!(self.inter_kind, InterKind::FatTree3 { .. }));
+        self.inter_base + 2 * self.leaves * self.spines + pod * self.cores + core
+    }
+    #[inline]
+    /// (FatTree3) link id: core -> agg (`core % spines`) of pod `pod`.
+    pub fn core_down(&self, core: u32, pod: u32) -> u32 {
+        debug_assert!(matches!(self.inter_kind, InterKind::FatTree3 { .. }));
+        self.inter_base
+            + 2 * self.leaves * self.spines
+            + self.pods * self.cores
+            + core * self.pods
+            + pod
+    }
+    #[inline]
+    /// (Dragonfly) link id: router `from` -> router `to` inside `group`
+    /// (group-relative indices, `from != to`).
+    pub fn df_local(&self, group: u32, from: u32, to: u32) -> u32 {
+        debug_assert!(matches!(self.inter_kind, InterKind::Dragonfly { .. }) && from != to);
+        let rpg = self.routers_per_group();
+        let e = if to < from { to } else { to - 1 };
+        self.inter_base + group * rpg * (rpg - 1) + from * (rpg - 1) + e
+    }
+    #[inline]
+    /// (Dragonfly) link id: global trunk group `from` -> group `to`
+    /// (`from != to`).
+    pub fn df_global(&self, from: u32, to: u32) -> u32 {
+        debug_assert!(matches!(self.inter_kind, InterKind::Dragonfly { .. }) && from != to);
+        let rpg = self.routers_per_group();
+        let e = if to < from { to } else { to - 1 };
+        self.inter_base + self.groups * rpg * rpg.saturating_sub(1) + from * (self.groups - 1) + e
     }
 
     /// Decode a link id back into its kind (used to build the kind table).
@@ -357,11 +545,58 @@ impl Topology {
             }
         } else {
             let rel = link - self.inter_base;
-            if rel < self.leaves * self.spines {
-                Kind::LeafUp { leaf: rel / self.spines, spine: rel % self.spines }
-            } else {
-                let rel = rel - self.leaves * self.spines;
-                Kind::SpineDown { spine: rel / self.leaves, leaf: rel % self.leaves }
+            match self.inter_kind {
+                InterKind::LeafSpine => {
+                    if rel < self.leaves * self.spines {
+                        Kind::LeafUp { leaf: rel / self.spines, spine: rel % self.spines }
+                    } else {
+                        let rel = rel - self.leaves * self.spines;
+                        Kind::SpineDown { spine: rel / self.leaves, leaf: rel % self.leaves }
+                    }
+                }
+                InterKind::FatTree3 { .. } => {
+                    let ls = self.leaves * self.spines;
+                    let lpp = self.leaves_per_pod();
+                    if rel < ls {
+                        return Kind::AggUp { leaf: rel / self.spines, agg: rel % self.spines };
+                    }
+                    let rel = rel - ls;
+                    if rel < ls {
+                        let pod = rel / (self.spines * lpp);
+                        let r = rel % (self.spines * lpp);
+                        return Kind::AggDown {
+                            pod,
+                            agg: r / lpp,
+                            leaf: pod * lpp + r % lpp,
+                        };
+                    }
+                    let rel = rel - ls;
+                    if rel < self.pods * self.cores {
+                        Kind::CoreUp { pod: rel / self.cores, core: rel % self.cores }
+                    } else {
+                        let rel = rel - self.pods * self.cores;
+                        Kind::CoreDown { core: rel / self.pods, pod: rel % self.pods }
+                    }
+                }
+                InterKind::Dragonfly { .. } => {
+                    let rpg = self.routers_per_group();
+                    let locals = self.groups * rpg * rpg.saturating_sub(1);
+                    if rel < locals {
+                        let per_group = rpg * (rpg - 1);
+                        let group = rel / per_group;
+                        let r = rel % per_group;
+                        let from = r / (rpg - 1);
+                        let e = r % (rpg - 1);
+                        let to = if e < from { e } else { e + 1 };
+                        Kind::DfLocal { group, from, to }
+                    } else {
+                        let rel = rel - locals;
+                        let from = rel / (self.groups - 1);
+                        let e = rel % (self.groups - 1);
+                        let to = if e < from { e } else { e + 1 };
+                        Kind::DfGlobal { from, to }
+                    }
+                }
             }
         }
     }
@@ -374,10 +609,21 @@ impl Topology {
         (0..self.total_links()).map(|l| self.kind_of(l)).collect()
     }
 
-    /// D-mod-K spine selection for destination node `d`.
+    /// D-mod-K spine (LeafSpine) / per-pod agg (FatTree3) selection for
+    /// destination node `d`. Note the intended imbalance: when
+    /// `nodes % spines != 0` the low-id spines serve one extra
+    /// destination each (counts differ by at most 1) — see
+    /// docs/architecture.md and `props_routing`.
     #[inline]
     pub fn dmodk_spine(&self, dst_node: u32) -> u32 {
         dst_node % self.spines
+    }
+
+    /// (FatTree3) D-mod-K core selection for destination node `d`. The
+    /// chosen core pins the up-path agg too (`core % spines`).
+    #[inline]
+    pub fn dmodk_core(&self, dst_node: u32) -> u32 {
+        dst_node % self.cores
     }
 
     /// First link a unit from `src` to `dst` enters (the source's egress
@@ -477,16 +723,83 @@ impl Topology {
             Kind::NicUp { node, .. } => {
                 let src_leaf = self.node_leaf(node);
                 let dst_leaf = self.node_leaf(dst_node);
-                let in_nic = self.ingress_nic(src, dst_accel);
                 if src_leaf == dst_leaf {
-                    Some(self.nic_down(dst_node, in_nic))
-                } else {
-                    Some(self.leaf_up(src_leaf, self.dmodk_spine(dst_node)))
+                    return Some(self.nic_down(dst_node, self.ingress_nic(src, dst_accel)));
+                }
+                match self.inter_kind {
+                    InterKind::LeafSpine => {
+                        Some(self.leaf_up(src_leaf, self.dmodk_spine(dst_node)))
+                    }
+                    InterKind::FatTree3 { .. } => {
+                        // The up-path agg is destination-determined: the
+                        // in-pod agg for an in-pod leaf, the chosen
+                        // core's attaching agg otherwise.
+                        let agg = if self.leaf_pod(src_leaf) == self.leaf_pod(dst_leaf) {
+                            self.dmodk_spine(dst_node)
+                        } else {
+                            self.dmodk_core(dst_node) % self.spines
+                        };
+                        Some(self.agg_up(src_leaf, agg))
+                    }
+                    InterKind::Dragonfly { .. } => {
+                        let (sg, dg) = (self.leaf_group(src_leaf), self.leaf_group(dst_leaf));
+                        let sr = self.leaf_router(src_leaf);
+                        if sg == dg {
+                            // Same group, different router: one local hop.
+                            Some(self.df_local(sg, sr, self.leaf_router(dst_leaf)))
+                        } else {
+                            let out = self.df_out_router(sg, dg);
+                            if sr == out {
+                                Some(self.df_global(sg, dg))
+                            } else {
+                                Some(self.df_local(sg, sr, out))
+                            }
+                        }
+                    }
                 }
             }
             Kind::LeafUp { spine, .. } => Some(self.spine_down(spine, self.node_leaf(dst_node))),
             Kind::SpineDown { .. } => {
                 Some(self.nic_down(dst_node, self.ingress_nic(src, dst_accel)))
+            }
+            Kind::AggUp { leaf, agg } => {
+                let pod = self.leaf_pod(leaf);
+                let dst_leaf = self.node_leaf(dst_node);
+                if self.leaf_pod(dst_leaf) == pod {
+                    Some(self.agg_down(pod, agg, dst_leaf))
+                } else {
+                    Some(self.core_up(pod, self.dmodk_core(dst_node)))
+                }
+            }
+            Kind::CoreUp { core, .. } => {
+                Some(self.core_down(core, self.leaf_pod(self.node_leaf(dst_node))))
+            }
+            Kind::CoreDown { core, pod } => {
+                Some(self.agg_down(pod, core % self.spines, self.node_leaf(dst_node)))
+            }
+            Kind::AggDown { .. } => {
+                Some(self.nic_down(dst_node, self.ingress_nic(src, dst_accel)))
+            }
+            Kind::DfLocal { group, to, .. } => {
+                let dst_leaf = self.node_leaf(dst_node);
+                if self.leaf_group(dst_leaf) == group {
+                    // Minimal routing lands local hops on the
+                    // destination router.
+                    debug_assert_eq!(to, self.leaf_router(dst_leaf));
+                    Some(self.nic_down(dst_node, self.ingress_nic(src, dst_accel)))
+                } else {
+                    Some(self.df_global(group, self.leaf_group(dst_leaf)))
+                }
+            }
+            Kind::DfGlobal { from, to } => {
+                let dst_leaf = self.node_leaf(dst_node);
+                let landing = self.df_in_router(from, to);
+                let dr = self.leaf_router(dst_leaf);
+                if landing == dr {
+                    Some(self.nic_down(dst_node, self.ingress_nic(src, dst_accel)))
+                } else {
+                    Some(self.df_local(to, landing, dr))
+                }
             }
             Kind::NicDown { node, nic } => Some(self.nic_to_sw(node, nic)),
             Kind::NicToSw { node, nic } => match self.fabric {
@@ -537,9 +850,16 @@ impl Topology {
 
     /// Upper bound on any src→dst path length (property-test guard):
     /// worst intra legs on both ends (ring: A-1 hops each) plus the
-    /// 6-link NIC/fat-tree core.
+    /// 6-link NIC core and the inter topology's longest trunk chain
+    /// (leaf/spine 2, fat tree agg+core+core+agg = 4, dragonfly
+    /// local+global+local = 3).
     pub fn max_path_links(&self) -> u32 {
-        2 * self.accels_per_node + 8
+        let trunks = match self.inter_kind {
+            InterKind::LeafSpine => 2,
+            InterKind::FatTree3 { .. } => 4,
+            InterKind::Dragonfly { .. } => 3,
+        };
+        2 * self.accels_per_node + 6 + trunks
     }
 }
 
@@ -572,7 +892,19 @@ mod tests {
             Kind::NicDown { node, nic } => t.nic_down(node, nic),
             Kind::LeafUp { leaf, spine } => t.leaf_up(leaf, spine),
             Kind::SpineDown { spine, leaf } => t.spine_down(spine, leaf),
+            Kind::AggUp { leaf, agg } => t.agg_up(leaf, agg),
+            Kind::AggDown { pod, agg, leaf } => t.agg_down(pod, agg, leaf),
+            Kind::CoreUp { pod, core } => t.core_up(pod, core),
+            Kind::CoreDown { core, pod } => t.core_down(core, pod),
+            Kind::DfLocal { group, from, to } => t.df_local(group, from, to),
+            Kind::DfGlobal { from, to } => t.df_global(from, to),
         }
+    }
+
+    fn topo32_inter(kind: crate::config::InterKind) -> Topology {
+        let mut cfg = presets::scaleout(32, 128.0, Pattern::C1, 0.5);
+        cfg.inter.kind = kind;
+        Topology::new(&cfg)
     }
 
     #[test]
@@ -732,5 +1064,118 @@ mod tests {
         let mut cfg = presets::scaleout(32, 128.0, Pattern::C1, 0.5);
         cfg.inter.leaves = 7; // 32 % 7 != 0: used to alias link ids
         let _ = Topology::new(&cfg);
+    }
+
+    #[test]
+    fn link_ids_invertible_for_every_inter_kind() {
+        use crate::config::InterKind;
+        // 32 nodes: 8 leaves, 4 spines; fat tree adds 2*P*C trunks,
+        // dragonfly replaces the trunks with local + global links.
+        let ft = topo32_inter(InterKind::FatTree3 { pods: 4, cores: 8 });
+        assert_eq!(ft.total_links(), 640 + 2 * 8 * 4 + 2 * 4 * 8);
+        let df = topo32_inter(InterKind::Dragonfly { groups: 4 });
+        assert_eq!(df.total_links(), 640 + 4 * 2 * 1 + 4 * 3);
+        for t in [&ft, &df] {
+            for link in 0..t.total_links() {
+                let k = t.kind_of(link);
+                assert_eq!(roundtrip(t, k), link, "{:?}: {k:?}", t.inter_kind);
+            }
+        }
+    }
+
+    #[test]
+    fn fat_tree_path_crosses_core_for_remote_pod() {
+        let t = topo32_inter(crate::config::InterKind::FatTree3 { pods: 4, cores: 8 });
+        // node 0 (leaf 0, pod 0) -> node 31 (leaf 7, pod 3), accel 248.
+        // core = 31 % 8 = 7, so the up-path agg is 7 % 4 = 3.
+        let dst = 248;
+        let mut link = t.accel_up(0, 0);
+        let mut path = vec![link];
+        while let Some(n) = t.next_hop(t.kind_of(link), 0, dst) {
+            path.push(n);
+            link = n;
+        }
+        assert_eq!(
+            path,
+            vec![
+                t.accel_up(0, 0),
+                t.sw_to_nic(0, 0),
+                t.nic_up(0, 0),
+                t.agg_up(0, 3),
+                t.core_up(0, 7),
+                t.core_down(7, 3),
+                t.agg_down(3, 3, 7),
+                t.nic_down(31, 0),
+                t.nic_to_sw(31, 0),
+                t.accel_down(31, 0),
+            ]
+        );
+        assert!(path.len() as u32 <= t.max_path_links());
+    }
+
+    #[test]
+    fn fat_tree_same_pod_skips_core() {
+        let t = topo32_inter(crate::config::InterKind::FatTree3 { pods: 4, cores: 8 });
+        // node 0 (leaf 0) and node 7 (leaf 1) share pod 0 (2 leaves/pod);
+        // the in-pod agg is dst_node % spines = 7 % 4 = 3.
+        let dst = 7 * 8;
+        let up = t.next_hop(t.kind_of(t.nic_up(0, 0)), 0, dst).unwrap();
+        assert_eq!(up, t.agg_up(0, 3));
+        let down = t.next_hop(t.kind_of(up), 0, dst).unwrap();
+        assert_eq!(down, t.agg_down(0, 3, 1));
+        assert_eq!(t.next_hop(t.kind_of(down), 0, dst), Some(t.nic_down(7, 0)));
+    }
+
+    #[test]
+    fn dragonfly_path_crosses_global_for_remote_group() {
+        let t = topo32_inter(crate::config::InterKind::Dragonfly { groups: 4 });
+        // node 0 (leaf 0 = group 0 router 0) -> node 31 (leaf 7 = group 3
+        // router 1). The g0->g3 global link leaves from router 0 (= src),
+        // lands on router 0 of group 3, then one local hop to router 1.
+        let dst = 248;
+        let mut link = t.accel_up(0, 0);
+        let mut path = vec![link];
+        while let Some(n) = t.next_hop(t.kind_of(link), 0, dst) {
+            path.push(n);
+            link = n;
+        }
+        assert_eq!(
+            path,
+            vec![
+                t.accel_up(0, 0),
+                t.sw_to_nic(0, 0),
+                t.nic_up(0, 0),
+                t.df_global(0, 3),
+                t.df_local(3, 0, 1),
+                t.nic_down(31, 0),
+                t.nic_to_sw(31, 0),
+                t.accel_down(31, 0),
+            ]
+        );
+        assert!(path.len() as u32 <= t.max_path_links());
+    }
+
+    #[test]
+    fn dragonfly_same_group_is_one_local_hop() {
+        let t = topo32_inter(crate::config::InterKind::Dragonfly { groups: 4 });
+        // node 0 (leaf 0, router 0) -> node 7 (leaf 1, router 1), group 0.
+        let dst = 7 * 8;
+        let hop = t.next_hop(t.kind_of(t.nic_up(0, 0)), 0, dst).unwrap();
+        assert_eq!(hop, t.df_local(0, 0, 1));
+        assert_eq!(t.next_hop(t.kind_of(hop), 0, dst), Some(t.nic_down(7, 0)));
+    }
+
+    #[test]
+    fn inter_kind_names_and_labels_are_stable() {
+        let ft = topo32_inter(crate::config::InterKind::FatTree3 { pods: 4, cores: 8 });
+        assert_eq!(ft.kind_of(ft.agg_up(3, 1)).short_name(), "agg_up");
+        assert_eq!(ft.kind_of(ft.agg_up(3, 1)).label(), "agg_up[l3->g1]");
+        assert_eq!(ft.kind_of(ft.agg_down(0, 1, 1)).label(), "agg_down[p0.g1->l1]");
+        assert_eq!(ft.kind_of(ft.core_up(0, 5)).label(), "core_up[p0->c5]");
+        assert_eq!(ft.kind_of(ft.core_down(5, 2)).label(), "core_down[c5->p2]");
+        let df = topo32_inter(crate::config::InterKind::Dragonfly { groups: 4 });
+        assert_eq!(df.kind_of(df.df_local(0, 0, 1)).label(), "df_local[g0.r0->r1]");
+        assert_eq!(df.kind_of(df.df_global(0, 2)).label(), "df_global[g0->g2]");
+        assert_eq!(df.kind_of(df.df_global(0, 2)).short_name(), "df_global");
     }
 }

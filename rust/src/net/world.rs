@@ -640,7 +640,17 @@ fn link_params(cfg: &SimConfig, kind: Kind) -> (LinkModel, u64, Time, Time) {
         Kind::NicDown { .. } => {
             (LinkModel::Raw(Gbps(inter.link_gbps)), inter.port_buf_b, Time::ZERO, hop)
         }
-        Kind::LeafUp { .. } | Kind::SpineDown { .. } => {
+        // Inter trunks of every topology (leaf/spine, fat-tree agg/core
+        // tiers, dragonfly local/global links) share the switch-port
+        // serialization model.
+        Kind::LeafUp { .. }
+        | Kind::SpineDown { .. }
+        | Kind::AggUp { .. }
+        | Kind::AggDown { .. }
+        | Kind::CoreUp { .. }
+        | Kind::CoreDown { .. }
+        | Kind::DfLocal { .. }
+        | Kind::DfGlobal { .. } => {
             (LinkModel::Raw(Gbps(inter.link_gbps)), inter.port_buf_b, Time::ZERO, hop)
         }
         // Fabric-internal intra links (mesh lanes, ring hops, the
@@ -909,9 +919,16 @@ impl World {
     #[inline]
     fn wire_bytes(&self, kind: Kind, payload: u32) -> u64 {
         match kind {
-            Kind::NicUp { .. } | Kind::NicDown { .. } | Kind::LeafUp { .. } | Kind::SpineDown { .. } => {
-                (payload + self.header_b) as u64
-            }
+            Kind::NicUp { .. }
+            | Kind::NicDown { .. }
+            | Kind::LeafUp { .. }
+            | Kind::SpineDown { .. }
+            | Kind::AggUp { .. }
+            | Kind::AggDown { .. }
+            | Kind::CoreUp { .. }
+            | Kind::CoreDown { .. }
+            | Kind::DfLocal { .. }
+            | Kind::DfGlobal { .. } => (payload + self.header_b) as u64,
             _ => payload as u64,
         }
     }
@@ -1610,18 +1627,28 @@ impl World {
         let nicup = wire * 8.0 / nic.inter_gbps;
         let fabric = wire * 8.0 / inter.link_gbps;
         let down = self.accel_hop_ns(unit);
-        // nic_up + leaf_up + spine_down + nic_down first-flit hops.
-        let hops = 4.0 * inter.hop_latency_ns;
+        // Inter-topology-dependent worst-case minimal path: `trunks`
+        // switch-trunk crossings between the two NICs (leaf/spine:
+        // leaf_up + spine_down; fat tree: agg_up + core_up + core_down +
+        // agg_down; dragonfly: local + global + local). First-flit hops
+        // add the NIC up/down links on top; serialization stages add the
+        // destination nic_down.
+        let trunks = crate::analytic::inter_trunk_hops(&self.topo.inter_kind) as usize;
+        let hops = (trunks + 2) as f64 * inter.hop_latency_ns;
         // Intra legs on both ends are fabric-dependent (star/mesh/ring:
         // one PCIe-class hop to the NIC staging; host tree: two, through
         // the shared bridge). The stage order matches the original fixed
-        // pipeline so the single-hop case is bit-identical.
+        // pipeline so the single-hop leaf/spine case is bit-identical.
         let end_hops = self.fabric_nic_hops() as usize;
-        let mut stages = Vec::with_capacity(2 * end_hops + 6);
+        let mut stages = Vec::with_capacity(2 * end_hops + 3 + trunks + 1);
         for _ in 0..end_hops {
             stages.push(up);
         }
-        stages.extend_from_slice(&[swnic, nicup, fabric, fabric, fabric, swnic]);
+        stages.extend_from_slice(&[swnic, nicup]);
+        for _ in 0..trunks + 1 {
+            stages.push(fabric);
+        }
+        stages.push(swnic);
         for _ in 0..end_hops {
             stages.push(down);
         }
@@ -1761,6 +1788,7 @@ impl World {
             accels: self.topo.total_accels() as usize,
             fabric: self.topo.fabric.name().to_string(),
             nics: self.topo.nics_per_node as usize,
+            inter: self.topo.inter_kind.name().to_string(),
             aggregated_intra_gbs: self.cfg.aggregated_intra_gbs(),
             offered_gbs: self.cfg.traffic.load * raw_gbps / 8.0 * self.topo.total_accels() as f64,
             intra_tput_gbs: m.strict_gbs(Class::Intra),
@@ -1920,6 +1948,8 @@ pub struct SimReport {
     pub fabric: String,
     /// NICs per node.
     pub nics: usize,
+    /// Inter-node topology name (`leaf_spine`, `fat_tree3`, `dragonfly`).
+    pub inter: String,
     /// Aggregated intra-node bandwidth knob (GB/s).
     pub aggregated_intra_gbs: f64,
     /// Offered load in GB/s across all accelerators.
@@ -2007,6 +2037,7 @@ impl ToJson for SimReport {
             .with("accels", self.accels)
             .with("fabric", self.fabric.as_str())
             .with("nics", self.nics)
+            .with("inter", self.inter.as_str())
             .with("aggregated_intra_gbs", self.aggregated_intra_gbs)
             .with("offered_gbs", self.offered_gbs)
             .with("intra_tput_gbs", self.intra_tput_gbs)
@@ -2056,6 +2087,11 @@ impl FromJson for SimReport {
             nics: match v.get("nics") {
                 Some(n) => n.as_u64()? as usize,
                 None => 1,
+            },
+            // Optional so pre-pluggable-inter result files parse.
+            inter: match v.get("inter") {
+                Some(s) => s.as_str()?.to_string(),
+                None => "leaf_spine".to_string(),
             },
             aggregated_intra_gbs: v.f64_of("aggregated_intra_gbs")?,
             offered_gbs: v.f64_of("offered_gbs")?,

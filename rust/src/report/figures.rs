@@ -237,6 +237,7 @@ mod tests {
             accels: 256,
             fabric: "switch_star".into(),
             nics: 1,
+            inter: "leaf_spine".into(),
             aggregated_intra_gbs: bw,
             offered_gbs: 0.0,
             intra_tput_gbs: intra,

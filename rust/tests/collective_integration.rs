@@ -7,8 +7,11 @@
 //! NIC boundary stays fixed.
 
 use sauron::analytic::CollParams;
-use sauron::config::{presets, CollOp, CollScope, CollectiveSpec, FabricKind, Pattern, Workload};
+use sauron::config::{
+    presets, CollOp, CollScope, CollectiveSpec, FabricKind, Pattern, TelemetryConfig, Workload,
+};
 use sauron::net::world::{BenchMode, NativeProvider, Sim};
+use sauron::report::figures;
 
 const MIB: u64 = 1 << 20;
 
@@ -125,6 +128,95 @@ fn hierarchical_congested_does_not_improve_with_intra_bandwidth() {
         "background traffic should degrade 512 GB/s completion: \
          {t512:.0} vs clean {t512_clean:.0} ns"
     );
+}
+
+/// The congested trend is a property of the NIC boundary, not of the
+/// inter-node wiring: it must hold unchanged on every pluggable inter
+/// topology (leaf/spine, 3-level fat tree, dragonfly).
+#[test]
+fn hierarchical_congested_trend_holds_on_every_inter_kind() {
+    let spec = CollectiveSpec {
+        op: CollOp::HierarchicalAllReduce,
+        scope: CollScope::Global,
+        size_b: 256 * 1024,
+        iters: 1,
+    };
+    for inter in ["leaf_spine", "fat_tree3", "dragonfly"] {
+        let run = |gbs: f64| {
+            let mut cfg = presets::collective_scaleout(
+                32,
+                gbs,
+                spec,
+                Pattern::Custom { frac_inter: 1.0 },
+                0.35,
+            );
+            cfg.inter.kind =
+                presets::default_inter_kind(inter, cfg.inter.leaves, cfg.inter.spines);
+            cfg.measure_us = 500.0;
+            Sim::new(cfg, &NativeProvider, BenchMode::None)
+                .unwrap_or_else(|e| panic!("{inter}/{gbs}: {e:#}"))
+                .try_run()
+                .unwrap_or_else(|e| panic!("{inter}/{gbs}: {e:#}"))
+                .coll_time
+                .mean_ns
+        };
+        let t128 = run(128.0);
+        let t512 = run(512.0);
+        assert!(
+            t512 >= 0.95 * t128,
+            "{inter}: raising intra bandwidth must not improve congested completion: \
+             128 -> {t128:.0} ns, 512 -> {t512:.0} ns"
+        );
+    }
+}
+
+/// Acceptance (post-exascale scale): a 1024-node hierarchical AllReduce
+/// under all-inter background traffic completes on the 3-level fat tree
+/// AND the dragonfly, and the PR-5 interference-attribution CSV names
+/// the inter *levels* the traffic lands on (`agg_*`/`core_*`,
+/// `df_local`/`df_global`) — the per-level view the 2-level leaf/spine
+/// could never produce. Background generators stop at the (short)
+/// window end, so the collective drains to completion cheaply.
+#[test]
+fn post_exascale_fat_tree_and_dragonfly_attribute_inter_levels() {
+    for (inter, levels) in [
+        ("fat_tree3", &["agg_up", "agg_down", "core_up", "core_down"][..]),
+        ("dragonfly", &["df_local", "df_global"][..]),
+    ] {
+        let spec = CollectiveSpec {
+            op: CollOp::HierarchicalAllReduce,
+            scope: CollScope::Global,
+            size_b: 32 * 1024,
+            iters: 1,
+        };
+        let mut cfg = presets::collective_scaleout(
+            1024,
+            256.0,
+            spec,
+            Pattern::Custom { frac_inter: 1.0 },
+            0.3,
+        );
+        cfg.inter.kind = presets::default_inter_kind(inter, cfg.inter.leaves, cfg.inter.spines);
+        cfg.node.accels_per_node = 2; // 2048 ranks keep the run tractable
+        cfg.warmup_us = 2.0;
+        cfg.measure_us = 20.0;
+        cfg.telemetry = TelemetryConfig { enabled: true, bins: 8 };
+        let r = Sim::new(cfg, &NativeProvider, BenchMode::None)
+            .unwrap_or_else(|e| panic!("{inter}: {e:#}"))
+            .try_run()
+            .unwrap_or_else(|e| panic!("{inter}: {e:#}"));
+        assert_eq!(r.nodes, 1024, "{inter}");
+        assert_eq!(r.inter, inter);
+        assert_eq!(r.coll_iters, 1, "{inter}: collective must complete");
+        assert!(r.coll_time.mean_ns > 0.0, "{inter}");
+        let csv = figures::link_attribution_csv(&r);
+        for level in levels {
+            assert!(
+                csv.lines().any(|l| l.split(',').nth(1) == Some(*level)),
+                "{inter}: attribution CSV must carry {level} rows"
+            );
+        }
+    }
 }
 
 /// Acceptance: one preset per intra fabric runs the hierarchical-

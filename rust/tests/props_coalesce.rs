@@ -41,6 +41,7 @@ fn reports_identical(a: &SimReport, b: &SimReport) -> Result<(), String> {
     field_eq!(accels);
     field_eq!(fabric);
     field_eq!(nics);
+    field_eq!(inter);
     field_eq!(aggregated_intra_gbs);
     field_eq!(offered_gbs);
     field_eq!(intra_tput_gbs);
@@ -183,6 +184,49 @@ fn prop_fabric_reports_identical() {
         let slow = run_engine(&cfg, false, BenchMode::None, &[]);
         reports_identical(&fast, &slow).map_err(|e| format!("{kind:?}/{nics}/{load:.3}: {e}"))
     });
+}
+
+#[test]
+fn prop_inter_kind_reports_identical() {
+    // Coalescing equivalence across the pluggable inter topologies: the
+    // multi-level trunks (agg/core up/down, dragonfly local/global) run
+    // forwarding-hop trains the 2-level leaf/spine never builds, and
+    // the leaf_spine case anchors the bit-for-bit default.
+    let gen = Triple(
+        Choice(&["leaf_spine", "fat_tree3", "dragonfly"]),
+        Choice(&[Pattern::C1, Pattern::C2]),
+        FloatRange { lo: 0.05, hi: 0.45 },
+    );
+    forall(0xC0A3, 9, &gen, |&(inter, pattern, load)| {
+        let mut cfg = presets::scaleout(32, 256.0, pattern, load);
+        cfg.inter.kind = presets::default_inter_kind(inter, cfg.inter.leaves, cfg.inter.spines);
+        cfg.warmup_us = 5.0;
+        cfg.measure_us = 10.0;
+        let fast = run_engine(&cfg, true, BenchMode::None, &[]);
+        let slow = run_engine(&cfg, false, BenchMode::None, &[]);
+        reports_identical(&fast, &slow).map_err(|e| format!("{inter}/{pattern:?}/{load:.3}: {e}"))
+    });
+}
+
+#[test]
+fn hierarchical_reports_identical_on_fat_tree_and_dragonfly() {
+    // The interference scenario on the multi-level topologies.
+    for inter in ["fat_tree3", "dragonfly"] {
+        let mut cfg = presets::scaleout(32, 256.0, Pattern::Custom { frac_inter: 1.0 }, 0.2);
+        cfg.inter.kind = presets::default_inter_kind(inter, cfg.inter.leaves, cfg.inter.spines);
+        cfg.warmup_us = 5.0;
+        cfg.measure_us = 15.0;
+        cfg.workload = Workload::Collective(CollectiveSpec {
+            op: CollOp::HierarchicalAllReduce,
+            scope: CollScope::Global,
+            size_b: 128 * 1024,
+            iters: 2,
+        });
+        let fast = run_engine(&cfg, true, BenchMode::None, &[]);
+        let slow = run_engine(&cfg, false, BenchMode::None, &[]);
+        reports_identical(&fast, &slow).unwrap_or_else(|e| panic!("{inter}: {e}"));
+        assert_eq!(fast.inter, inter);
+    }
 }
 
 #[test]

@@ -40,6 +40,7 @@ fn reports_identical(reused: &SimReport, fresh: &SimReport) -> Result<(), String
     field_eq!(accels);
     field_eq!(fabric);
     field_eq!(nics);
+    field_eq!(inter);
     field_eq!(aggregated_intra_gbs);
     field_eq!(offered_gbs);
     field_eq!(intra_tput_gbs);
@@ -154,6 +155,58 @@ fn prop_collective_reuse_identical_with_iters_delta() {
         check_reuse(base(2, 11), base(3, 0xBEEF))
             .map_err(|e| format!("{op:?}/{size_b}/{bg_load}: {e}"))
     });
+}
+
+#[test]
+fn prop_inter_kind_reuse_identical() {
+    // Per-inter-kind equivalence: each pluggable inter topology is its
+    // own blueprint; a reset-reused world on it must stay bit-identical
+    // to a fresh build of the same point (leaf_spine doubling as the
+    // bit-for-bit default-config anchor).
+    let gen = Triple(
+        Choice(&["leaf_spine", "fat_tree3", "dragonfly"]),
+        Choice(&[Pattern::C1, Pattern::C3]),
+        FloatRange { lo: 0.05, hi: 0.45 },
+    );
+    forall(0x2E05F, 9, &gen, |&(inter, pattern, load)| {
+        let cfg = |seed: u64, load: f64, pattern: Pattern| {
+            let mut cfg = presets::scaleout(32, 256.0, pattern, load);
+            cfg.inter.kind =
+                presets::default_inter_kind(inter, cfg.inter.leaves, cfg.inter.spines);
+            cfg.warmup_us = 5.0;
+            cfg.measure_us = 10.0;
+            cfg.seed = seed;
+            cfg
+        };
+        check_reuse(cfg(7, (load * 0.5).max(0.05), Pattern::C1), cfg(0xD15EA5E, load, pattern))
+            .map_err(|e| format!("{inter}/{pattern:?}/{load:.3}: {e}"))
+    });
+}
+
+#[test]
+fn hierarchical_reuse_identical_on_fat_tree_and_dragonfly() {
+    // The paper's interference scenario on the multi-level topologies:
+    // a reused world crossing agg/core (or local/global) trunks must
+    // still be indistinguishable from fresh builds.
+    for inter in ["fat_tree3", "dragonfly"] {
+        let cfg = |seed: u64, bg_load: f64| {
+            let mut cfg =
+                presets::scaleout(32, 256.0, Pattern::Custom { frac_inter: 1.0 }, bg_load);
+            cfg.inter.kind =
+                presets::default_inter_kind(inter, cfg.inter.leaves, cfg.inter.spines);
+            cfg.warmup_us = 5.0;
+            cfg.measure_us = 20.0;
+            cfg.seed = seed;
+            cfg.workload = Workload::Collective(CollectiveSpec {
+                op: CollOp::HierarchicalAllReduce,
+                scope: CollScope::Global,
+                size_b: 128 * 1024,
+                iters: 2,
+            });
+            cfg
+        };
+        check_reuse(cfg(1, 0.1), cfg(99, 0.2)).unwrap_or_else(|e| panic!("{inter}: {e}"));
+    }
 }
 
 #[test]

@@ -4,6 +4,7 @@
 //! enough for a packet-level model, tight enough to catch regressions in
 //! the PCIe/NIC/IB calibration.
 
+use sauron::config::{presets, FabricConfig, FabricKind, Pattern};
 use sauron::net::world::NativeProvider;
 use sauron::traffic::ib_bench::{self, TEST_SIZES};
 use sauron::units::{KIB, MIB};
@@ -63,6 +64,38 @@ fn fig4_latency_flat_then_linear() {
     let slope = (m4 - m1) / 3.0; // us per MiB
     let expect = (MIB as f64) / 12.3e3; // us per MiB at 12.3 GB/s
     assert!((slope - expect).abs() / expect < 0.1, "slope {slope:.1} vs {expect:.1} us/MiB");
+}
+
+/// Regression: Ring/Mesh fabrics with `accels_per_node == 1` have an
+/// `intra_stride` of 0, so every node's link-id range would alias its
+/// neighbour's. `validate()` must reject the layout with an actionable
+/// error instead of building an aliased world; the single-accelerator
+/// fabrics (SwitchStar, HostTree without the CPU bounce) stay legal.
+#[test]
+fn degenerate_single_accel_ring_and_mesh_are_rejected() {
+    for kind in [FabricKind::Ring, FabricKind::Mesh] {
+        let mut cfg = presets::with_fabric(
+            presets::scaleout(8, 128.0, Pattern::C1, 0.2),
+            FabricConfig::new(kind, 1),
+        );
+        cfg.node.accels_per_node = 1;
+        let err = cfg.validate().expect_err("degenerate layout must be rejected");
+        assert!(
+            err.contains("accels_per_node == 1") && err.contains("switch_star"),
+            "{kind:?}: error must name the cause and a fix, got: {err}"
+        );
+    }
+    for kind in [FabricKind::SwitchStar, FabricKind::HostTree] {
+        let mut cfg = presets::with_fabric(
+            presets::scaleout(8, 128.0, Pattern::C1, 0.2),
+            FabricConfig::new(kind, 1),
+        );
+        cfg.node.accels_per_node = 1;
+        if kind == FabricKind::HostTree {
+            cfg.node.rc_cpu_bounce = false;
+        }
+        cfg.validate().unwrap_or_else(|e| panic!("{kind:?} with one accel must stay legal: {e}"));
+    }
 }
 
 /// The geomean error across the FULL 16-size sweep stays under 15% for

@@ -1,0 +1,49 @@
+#!/usr/bin/env sh
+# Tier-1 gate with toolchain detection.
+#
+# Several of this repo's PRs were authored in offline containers that
+# ship no Rust toolchain (recorded per-PR in CHANGES.md), which left
+# the tier-1 suite desk-checked and the BENCH_*.json baselines as
+# design-estimate placeholders (ROADMAP standing chore). This script is
+# the single entry point for both worlds:
+#
+#   * `cargo` present  — run the real tier-1 gate (release build + full
+#     test suite); with `--bench`, also regenerate BENCH_hotpath.json
+#     and BENCH_sweep.json with measured numbers. Commit the refreshed
+#     JSON files and update the EXPERIMENTS.md §Perf tables from them.
+#   * `cargo` absent   — exit 0 after printing the desk-check caveat,
+#     so authoring environments keep a visible, honest record instead
+#     of a silent skip. The caveat must also stay in CHANGES.md.
+#
+# CI (.github/workflows/ci.yml) calls this from the perf-smoke job with
+# --bench; run it bare for a plain tier-1 pass.
+
+set -eu
+
+cd "$(dirname "$0")/.."
+
+if ! command -v cargo >/dev/null 2>&1; then
+    cat <<'EOF'
+tier1: no Rust toolchain on PATH (cargo not found).
+tier1: DESK-CHECK MODE — nothing was compiled or tested here.
+tier1: keep the desk-check caveat for this change visible in CHANGES.md,
+tier1: and regenerate BENCH_hotpath.json / BENCH_sweep.json on the first
+tier1: toolchain-equipped runner (see EXPERIMENTS.md "Status").
+EOF
+    exit 0
+fi
+
+echo "tier1: toolchain found: $(cargo --version)"
+cargo build --release
+cargo test -q
+
+if [ "${1:-}" = "--bench" ]; then
+    # Regenerates the committed baselines in place; SAURON_BENCH_MS can
+    # shorten the per-benchmark budget (CI uses 400 ms).
+    cargo bench --bench perf_hotpath
+    cargo bench --bench perf_sweep
+    echo "tier1: BENCH_hotpath.json / BENCH_sweep.json regenerated —"
+    echo "tier1: commit them to replace the design-estimate placeholders."
+fi
+
+echo "tier1: PASS"
