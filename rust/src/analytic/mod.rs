@@ -223,6 +223,41 @@ pub fn inter_trunk_hops(kind: &crate::config::InterKind) -> u32 {
     }
 }
 
+/// Number of equal-cost trunk choices a single inter flow can be
+/// re-steered across when links fail, per pluggable inter topology:
+/// the spine count for the 2-level RLFT (one up-link per spine), the
+/// core count for the 3-level fat tree (D-mod-K picks any core, which
+/// pins the agg), and the routers per group for the dragonfly (each
+/// router owns one global link toward a given remote group, reached
+/// minimally or via a Valiant detour). `spines` and `leaves` carry the
+/// topology-shape fields that [`crate::config::InterKind`] itself does
+/// not (see `InterConfig`); the fault-injection back-of-envelope in
+/// `EXPERIMENTS.md` combines this with [`degraded_capacity_frac`].
+pub fn inter_route_choices(kind: &crate::config::InterKind, spines: u32, leaves: u32) -> u32 {
+    use crate::config::InterKind;
+    match kind {
+        InterKind::LeafSpine => spines,
+        InterKind::FatTree3 { cores, .. } => *cores as u32,
+        InterKind::Dragonfly { groups } => (leaves / (*groups as u32)).max(1),
+    }
+}
+
+/// Surviving fraction of a node pair's equal-cost inter capacity after
+/// `dead` of its `choices` trunk alternatives fail: `(choices - dead) /
+/// choices`, saturating at 0 when every alternative is down (the
+/// simulator then reports the traffic as `dropped_units` and, for
+/// closed-loop collectives, escalates to `SimError::Partitioned`).
+/// First-order oracle for the graceful-degradation experiments: a
+/// degraded trunk at speed factor `f` contributes `f` instead of 1 to
+/// the numerator, so a 0.5× trunk on a 4-spine RLFT leaves 3.5/4 of
+/// the pair's capacity.
+pub fn degraded_capacity_frac(choices: u32, dead: u32) -> f64 {
+    if choices == 0 {
+        return 0.0;
+    }
+    (choices.saturating_sub(dead)) as f64 / choices as f64
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -322,6 +357,23 @@ mod tests {
         assert_eq!(inter_trunk_hops(&InterKind::LeafSpine), 2);
         assert_eq!(inter_trunk_hops(&InterKind::FatTree3 { pods: 8, cores: 32 }), 4);
         assert_eq!(inter_trunk_hops(&InterKind::Dragonfly { groups: 8 }), 3);
+    }
+
+    #[test]
+    fn route_choices_and_degraded_capacity() {
+        use crate::config::InterKind;
+        // 8-leaf/4-spine RLFT: 4 equal-cost spines per pair.
+        assert_eq!(inter_route_choices(&InterKind::LeafSpine, 4, 8), 4);
+        // 3-level fat tree: every core is a distinct up-path.
+        assert_eq!(inter_route_choices(&InterKind::FatTree3 { pods: 4, cores: 8 }, 2, 8), 8);
+        // Dragonfly: 8 leaves in 4 groups -> 2 routers (global links) per group.
+        assert_eq!(inter_route_choices(&InterKind::Dragonfly { groups: 4 }, 0, 8), 2);
+        // Capacity fraction: linear in dead trunks, saturating at zero.
+        assert_eq!(degraded_capacity_frac(4, 0), 1.0);
+        assert_eq!(degraded_capacity_frac(4, 1), 0.75);
+        assert_eq!(degraded_capacity_frac(4, 4), 0.0);
+        assert_eq!(degraded_capacity_frac(4, 9), 0.0, "over-kill saturates");
+        assert_eq!(degraded_capacity_frac(0, 0), 0.0, "no trunks, no capacity");
     }
 
     #[test]

@@ -366,6 +366,110 @@ impl Default for TelemetryConfig {
     }
 }
 
+/// Selects a physical link for a fault event. Selectors mirror the
+/// topology's link constructors (`net::topo::Topology`) so plans can be
+/// written against the logical structure instead of raw link ids; `Id`
+/// remains available for tooling that already resolved one. Resolution
+/// happens at run start against the world's compiled topology
+/// (`Topology::resolve_sel`), so a selector that names a switch the
+/// config does not have fails loudly before any event runs.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum LinkSel {
+    /// A raw link id (as printed by `sauron topo`).
+    Id { link: u32 },
+    /// A NIC's egress trunk into the inter network.
+    NicUp { node: usize, nic: usize },
+    /// A NIC's ingress link from the inter network.
+    NicDownLink { node: usize, nic: usize },
+    /// Leaf-to-spine up trunk (leaf/spine inter kind).
+    LeafUp { leaf: usize, spine: usize },
+    /// Spine-to-leaf down trunk (leaf/spine inter kind).
+    SpineDown { spine: usize, leaf: usize },
+    /// Leaf-to-aggregation up trunk (3-level fat tree).
+    AggUp { leaf: usize, agg: usize },
+    /// Pod-to-core up trunk (3-level fat tree).
+    CoreUp { pod: usize, core: usize },
+    /// The minimal global trunk from `group` toward `to_group`
+    /// (dragonfly).
+    DfGlobal { group: usize, to_group: usize },
+    /// One directed ring hop inside a node (ring fabric).
+    RingHop { node: usize, from: usize },
+    /// One directed mesh lane inside a node (mesh fabric).
+    MeshLane { node: usize, from: usize, to: usize },
+}
+
+/// What a [`FaultEvent`] does when it fires.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultAction {
+    /// Kill the selected link: its queued and in-flight units are
+    /// dropped (counted in `SimReport::dropped_units`), nothing
+    /// serializes on it until a `Recover`, and routing steers around it
+    /// where the topology offers an alternative.
+    LinkDown,
+    /// Scale the selected link's serialization rate by `factor`
+    /// (0 < factor ≤ 1; 0.5 halves the usable rate). Applies to units
+    /// whose serialization starts after the event fires.
+    LinkDegrade { factor: f64 },
+    /// Restore the selected link to full health.
+    Recover,
+    /// Kill one NIC of a node: all four of its links (staging in/out,
+    /// inter up/down) go down at once. Multi-NIC nodes fail over to the
+    /// surviving rails.
+    NicDown { node: usize, nic: usize },
+}
+
+/// One timed fault: at `at_us` microseconds of simulated time, apply
+/// `action` to the link(s) named by `sel` (`NicDown` carries its own
+/// target and needs no selector). Events at the exact same simulated
+/// time as ordinary engine events are applied *after* those events.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultEvent {
+    /// Simulated firing time, µs from run start.
+    pub at_us: f64,
+    /// What happens.
+    pub action: FaultAction,
+    /// Which link (required except for [`FaultAction::NicDown`]).
+    pub sel: Option<LinkSel>,
+}
+
+/// A timed fault-injection plan. Default (and JSON-absent) is empty,
+/// which is held bit-for-bit identical to a fault-free run by
+/// `rust/tests/props_faults.rs`. A **run-phase** field: not part of
+/// [`SimConfig::blueprint_fingerprint`], so sweep points sharing a
+/// blueprint can carry different plans.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    /// The timed events; order is irrelevant (the engine sorts by time).
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// No events scheduled — the fault machinery stays entirely off.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+}
+
+/// Run-time watchdog limits so a livelocked or runaway point fails fast
+/// with a structured error instead of stalling a sweep. `0` disables a
+/// limit (the default — the unlimited path is bit-identical to a build
+/// without limits). A **run-phase** field, like [`FaultPlan`].
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct LimitsConfig {
+    /// Abort after this many dispatched events (0 = unlimited).
+    pub max_events: u64,
+    /// Abort after this much wall-clock time in milliseconds
+    /// (0 = unlimited). Checked every few thousand events.
+    pub max_wall_ms: f64,
+}
+
+impl LimitsConfig {
+    /// Neither limit is set.
+    pub fn is_unlimited(&self) -> bool {
+        self.max_events == 0 && self.max_wall_ms == 0.0
+    }
+}
+
 /// Message inter-arrival process at each generator.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum Arrival {
@@ -506,6 +610,12 @@ pub struct SimConfig {
     /// Per-link flow-class telemetry (off by default; `--telemetry` on
     /// the CLI). JSON-optional for pre-telemetry config files.
     pub telemetry: TelemetryConfig,
+    /// Timed fault-injection plan (empty by default; JSON-optional).
+    /// Run-phase: not part of the blueprint fingerprint.
+    pub faults: FaultPlan,
+    /// Event / wall-clock watchdog limits (off by default;
+    /// JSON-optional). Run-phase, like `faults`.
+    pub limits: LimitsConfig,
 }
 
 impl SimConfig {
@@ -658,6 +768,43 @@ impl SimConfig {
             return Err(format!(
                 "telemetry.bins {} outside 1..=100000",
                 self.telemetry.bins
+            ));
+        }
+        for (i, ev) in self.faults.events.iter().enumerate() {
+            if !ev.at_us.is_finite() || ev.at_us < 0.0 {
+                return Err(format!("faults[{i}].at_us {} must be finite and >= 0", ev.at_us));
+            }
+            match ev.action {
+                FaultAction::LinkDegrade { factor } => {
+                    if !(factor > 0.0 && factor <= 1.0) {
+                        return Err(format!(
+                            "faults[{i}].factor {factor} outside (0,1]: a degrade \
+                             scales the link rate (use link_down to kill it)"
+                        ));
+                    }
+                }
+                FaultAction::NicDown { node, nic } => {
+                    if node >= self.inter.nodes || nic >= n.fabric.nics_per_node {
+                        return Err(format!(
+                            "faults[{i}]: nic_down node {node}/nic {nic} outside \
+                             {} nodes x {} nics",
+                            self.inter.nodes, n.fabric.nics_per_node
+                        ));
+                    }
+                }
+                FaultAction::LinkDown | FaultAction::Recover => {}
+            }
+            if ev.sel.is_none() && !matches!(ev.action, FaultAction::NicDown { .. }) {
+                return Err(format!(
+                    "faults[{i}]: {:?} needs a link selector (sel)",
+                    ev.action
+                ));
+            }
+        }
+        if self.limits.max_wall_ms < 0.0 || !self.limits.max_wall_ms.is_finite() {
+            return Err(format!(
+                "limits.max_wall_ms {} must be finite and >= 0",
+                self.limits.max_wall_ms
             ));
         }
         self.validate_workload(&self.workload)?;
@@ -1123,9 +1270,163 @@ impl FromJson for TrafficConfig {
     }
 }
 
-impl ToJson for SimConfig {
+impl ToJson for LinkSel {
+    fn to_json(&self) -> Value {
+        match *self {
+            LinkSel::Id { link } => Value::obj().with("kind", "id").with("link", link),
+            LinkSel::NicUp { node, nic } => {
+                Value::obj().with("kind", "nic_up").with("node", node).with("nic", nic)
+            }
+            LinkSel::NicDownLink { node, nic } => {
+                Value::obj().with("kind", "nic_down").with("node", node).with("nic", nic)
+            }
+            LinkSel::LeafUp { leaf, spine } => {
+                Value::obj().with("kind", "leaf_up").with("leaf", leaf).with("spine", spine)
+            }
+            LinkSel::SpineDown { spine, leaf } => {
+                Value::obj().with("kind", "spine_down").with("spine", spine).with("leaf", leaf)
+            }
+            LinkSel::AggUp { leaf, agg } => {
+                Value::obj().with("kind", "agg_up").with("leaf", leaf).with("agg", agg)
+            }
+            LinkSel::CoreUp { pod, core } => {
+                Value::obj().with("kind", "core_up").with("pod", pod).with("core", core)
+            }
+            LinkSel::DfGlobal { group, to_group } => Value::obj()
+                .with("kind", "df_global")
+                .with("group", group)
+                .with("to_group", to_group),
+            LinkSel::RingHop { node, from } => {
+                Value::obj().with("kind", "ring_hop").with("node", node).with("from", from)
+            }
+            LinkSel::MeshLane { node, from, to } => Value::obj()
+                .with("kind", "mesh_lane")
+                .with("node", node)
+                .with("from", from)
+                .with("to", to),
+        }
+    }
+}
+
+impl FromJson for LinkSel {
+    fn from_json(v: &Value) -> anyhow::Result<LinkSel> {
+        Ok(match v.str_of("kind")? {
+            "id" => LinkSel::Id { link: v.u64_of("link")? as u32 },
+            "nic_up" => LinkSel::NicUp { node: v.usize_of("node")?, nic: v.usize_of("nic")? },
+            "nic_down" => {
+                LinkSel::NicDownLink { node: v.usize_of("node")?, nic: v.usize_of("nic")? }
+            }
+            "leaf_up" => LinkSel::LeafUp { leaf: v.usize_of("leaf")?, spine: v.usize_of("spine")? },
+            "spine_down" => {
+                LinkSel::SpineDown { spine: v.usize_of("spine")?, leaf: v.usize_of("leaf")? }
+            }
+            "agg_up" => LinkSel::AggUp { leaf: v.usize_of("leaf")?, agg: v.usize_of("agg")? },
+            "core_up" => LinkSel::CoreUp { pod: v.usize_of("pod")?, core: v.usize_of("core")? },
+            "df_global" => LinkSel::DfGlobal {
+                group: v.usize_of("group")?,
+                to_group: v.usize_of("to_group")?,
+            },
+            "ring_hop" => LinkSel::RingHop { node: v.usize_of("node")?, from: v.usize_of("from")? },
+            "mesh_lane" => LinkSel::MeshLane {
+                node: v.usize_of("node")?,
+                from: v.usize_of("from")?,
+                to: v.usize_of("to")?,
+            },
+            other => anyhow::bail!("unknown link selector kind '{other}'"),
+        })
+    }
+}
+
+impl ToJson for FaultEvent {
+    fn to_json(&self) -> Value {
+        let v = Value::obj().with("at_us", self.at_us);
+        let v = match self.action {
+            FaultAction::LinkDown => v.with("action", "link_down"),
+            FaultAction::LinkDegrade { factor } => {
+                v.with("action", "link_degrade").with("factor", factor)
+            }
+            FaultAction::Recover => v.with("action", "recover"),
+            FaultAction::NicDown { node, nic } => {
+                v.with("action", "nic_down").with("node", node).with("nic", nic)
+            }
+        };
+        match &self.sel {
+            Some(sel) => v.with("sel", sel.to_json()),
+            None => v,
+        }
+    }
+}
+
+impl FromJson for FaultEvent {
+    fn from_json(v: &Value) -> anyhow::Result<FaultEvent> {
+        let action = match v.str_of("action")? {
+            "link_down" => FaultAction::LinkDown,
+            "link_degrade" => FaultAction::LinkDegrade { factor: v.f64_of("factor")? },
+            "recover" => FaultAction::Recover,
+            "nic_down" => {
+                FaultAction::NicDown { node: v.usize_of("node")?, nic: v.usize_of("nic")? }
+            }
+            other => anyhow::bail!("unknown fault action '{other}'"),
+        };
+        Ok(FaultEvent {
+            at_us: v.f64_of("at_us")?,
+            action,
+            sel: match v.get("sel") {
+                Some(s) => Some(LinkSel::from_json(s)?),
+                None => None,
+            },
+        })
+    }
+}
+
+impl ToJson for FaultPlan {
     fn to_json(&self) -> Value {
         Value::obj()
+            .with("events", Value::Arr(self.events.iter().map(|e| e.to_json()).collect()))
+    }
+}
+
+impl FromJson for FaultPlan {
+    fn from_json(v: &Value) -> anyhow::Result<FaultPlan> {
+        Ok(FaultPlan {
+            events: match v.get("events") {
+                Some(arr) => arr
+                    .as_arr()?
+                    .iter()
+                    .map(FaultEvent::from_json)
+                    .collect::<anyhow::Result<Vec<_>>>()?,
+                None => Vec::new(),
+            },
+        })
+    }
+}
+
+impl ToJson for LimitsConfig {
+    fn to_json(&self) -> Value {
+        Value::obj()
+            .with("max_events", self.max_events)
+            .with("max_wall_ms", self.max_wall_ms)
+    }
+}
+
+impl FromJson for LimitsConfig {
+    fn from_json(v: &Value) -> anyhow::Result<LimitsConfig> {
+        Ok(LimitsConfig {
+            max_events: match v.get("max_events") {
+                Some(n) => n.as_u64()?,
+                None => 0,
+            },
+            max_wall_ms: match v.get("max_wall_ms") {
+                Some(n) => n.as_f64()?,
+                None => 0.0,
+            },
+        })
+    }
+}
+
+impl ToJson for SimConfig {
+    fn to_json(&self) -> Value {
+        let v = Value::obj()
             .with("seed", self.seed)
             .with("warmup_us", self.warmup_us)
             .with("measure_us", self.measure_us)
@@ -1134,7 +1435,16 @@ impl ToJson for SimConfig {
             .with("traffic", self.traffic.to_json())
             .with("workload", self.workload.to_json())
             .with("coalescing", self.coalescing)
-            .with("telemetry", self.telemetry.to_json())
+            .with("telemetry", self.telemetry.to_json());
+        // Fault-free / unlimited configs keep the pre-fault JSON shape
+        // byte-for-byte (the same omit-when-default discipline as the
+        // report's telemetry fields).
+        let v = if self.faults.is_empty() { v } else { v.with("faults", self.faults.to_json()) };
+        if self.limits.is_unlimited() {
+            v
+        } else {
+            v.with("limits", self.limits.to_json())
+        }
     }
 }
 
@@ -1161,6 +1471,18 @@ impl FromJson for SimConfig {
             telemetry: match v.get("telemetry") {
                 Some(t) => TelemetryConfig::from_json(t)?,
                 None => TelemetryConfig::default(),
+            },
+            // Optional (default empty = healthy network) so pre-fault
+            // config files parse.
+            faults: match v.get("faults") {
+                Some(f) => FaultPlan::from_json(f)?,
+                None => FaultPlan::default(),
+            },
+            // Optional (default unlimited) so pre-watchdog config files
+            // parse.
+            limits: match v.get("limits") {
+                Some(l) => LimitsConfig::from_json(l)?,
+                None => LimitsConfig::default(),
             },
         })
     }
@@ -1448,6 +1770,116 @@ mod tests {
         let mut bad = cfg.clone();
         bad.telemetry.bins = 0;
         assert!(bad.validate().unwrap_err().contains("telemetry.bins"));
+    }
+
+    #[test]
+    fn faults_default_empty_and_are_a_run_phase_delta() {
+        let cfg = scaleout(32, 256.0, Pattern::C1, 0.2);
+        assert!(cfg.faults.is_empty(), "fault plan must default empty");
+        assert!(cfg.limits.is_unlimited(), "limits must default off");
+        // A default config's JSON carries neither field (byte-stable
+        // emission for pre-fault consumers).
+        let text = cfg.to_json_string();
+        assert!(!text.contains("\"faults\""), "{text}");
+        assert!(!text.contains("\"limits\""), "{text}");
+        // A populated plan round-trips through JSON.
+        let mut faulty = cfg.clone();
+        faulty.faults.events = vec![
+            FaultEvent {
+                at_us: 3.0,
+                action: FaultAction::LinkDown,
+                sel: Some(LinkSel::LeafUp { leaf: 0, spine: 1 }),
+            },
+            FaultEvent {
+                at_us: 4.5,
+                action: FaultAction::LinkDegrade { factor: 0.5 },
+                sel: Some(LinkSel::Id { link: 7 }),
+            },
+            FaultEvent {
+                at_us: 6.0,
+                action: FaultAction::Recover,
+                sel: Some(LinkSel::LeafUp { leaf: 0, spine: 1 }),
+            },
+            FaultEvent { at_us: 8.0, action: FaultAction::NicDown { node: 3, nic: 0 }, sel: None },
+        ];
+        faulty.limits = LimitsConfig { max_events: 1_000_000, max_wall_ms: 2000.0 };
+        faulty.validate().unwrap();
+        let back = SimConfig::from_json_str(&faulty.to_json_string()).unwrap();
+        assert_eq!(faulty, back);
+        // Pre-fault config files (no field) parse with the defaults.
+        let mut v = faulty.to_json();
+        if let Value::Obj(fields) = &mut v {
+            fields.retain(|(k, _)| k != "faults" && k != "limits");
+        }
+        let old = SimConfig::from_json(&v).unwrap();
+        assert_eq!(old, cfg);
+        // Run-phase: a fault plan or a watchdog must not change the
+        // blueprint (same arena, different run schedule).
+        assert_eq!(cfg.blueprint_fingerprint(), faulty.blueprint_fingerprint());
+    }
+
+    #[test]
+    fn link_selector_json_roundtrips() {
+        let sels = [
+            LinkSel::Id { link: 12 },
+            LinkSel::NicUp { node: 1, nic: 0 },
+            LinkSel::NicDownLink { node: 2, nic: 1 },
+            LinkSel::LeafUp { leaf: 3, spine: 1 },
+            LinkSel::SpineDown { spine: 0, leaf: 2 },
+            LinkSel::AggUp { leaf: 1, agg: 0 },
+            LinkSel::CoreUp { pod: 1, core: 3 },
+            LinkSel::DfGlobal { group: 0, to_group: 2 },
+            LinkSel::RingHop { node: 4, from: 1 },
+            LinkSel::MeshLane { node: 0, from: 1, to: 2 },
+        ];
+        for sel in sels {
+            let back = LinkSel::from_json(&sel.to_json()).unwrap();
+            assert_eq!(sel, back);
+        }
+        let err = LinkSel::from_json(&Value::obj().with("kind", "warp_core")).unwrap_err();
+        assert!(format!("{err:#}").contains("unknown link selector kind"), "{err:#}");
+    }
+
+    #[test]
+    fn fault_plan_validation_rejects_malformed_events() {
+        let base = scaleout(32, 256.0, Pattern::C1, 0.2);
+        let with_event = |action, sel| {
+            let mut cfg = base.clone();
+            cfg.faults.events = vec![FaultEvent { at_us: 1.0, action, sel }];
+            cfg
+        };
+        // Degrade factor outside (0, 1].
+        let err = with_event(
+            FaultAction::LinkDegrade { factor: 1.5 },
+            Some(LinkSel::Id { link: 0 }),
+        )
+        .validate()
+        .unwrap_err();
+        assert!(err.contains("outside (0,1]"), "{err}");
+        let err = with_event(
+            FaultAction::LinkDegrade { factor: 0.0 },
+            Some(LinkSel::Id { link: 0 }),
+        )
+        .validate()
+        .unwrap_err();
+        assert!(err.contains("outside (0,1]"), "{err}");
+        // A link action without a selector has nothing to act on.
+        let err = with_event(FaultAction::LinkDown, None).validate().unwrap_err();
+        assert!(err.contains("needs a link selector"), "{err}");
+        // NicDown bounds-checks against the node count and rail count.
+        let err = with_event(FaultAction::NicDown { node: 99, nic: 0 }, None)
+            .validate()
+            .unwrap_err();
+        assert!(err.contains("nic_down"), "{err}");
+        // Negative / non-finite times.
+        let mut bad = base.clone();
+        bad.faults.events =
+            vec![FaultEvent { at_us: -1.0, action: FaultAction::LinkDown, sel: Some(LinkSel::Id { link: 0 }) }];
+        assert!(bad.validate().unwrap_err().contains("at_us"), "at_us must be checked");
+        // Watchdog wall-time must be finite.
+        let mut bad = base.clone();
+        bad.limits.max_wall_ms = f64::NAN;
+        assert!(bad.validate().unwrap_err().contains("max_wall_ms"));
     }
 
     #[test]

@@ -50,6 +50,8 @@ pub fn cellia() -> SimConfig {
         workload: Workload::None,
         coalescing: true,
         telemetry: TelemetryConfig::default(),
+        faults: FaultPlan::default(),
+        limits: LimitsConfig::default(),
     }
 }
 
@@ -114,6 +116,8 @@ pub fn scaleout(nodes: usize, aggregated_gbs: f64, pattern: Pattern, load: f64) 
         workload: Workload::None,
         coalescing: true,
         telemetry: TelemetryConfig::default(),
+        faults: FaultPlan::default(),
+        limits: LimitsConfig::default(),
     }
 }
 
@@ -165,6 +169,29 @@ pub fn with_fabric(mut cfg: SimConfig, fabric: FabricConfig) -> SimConfig {
 pub fn with_inter(mut cfg: SimConfig, kind: InterKind) -> SimConfig {
     cfg.inter.kind = kind;
     cfg
+}
+
+/// Attach a fault plan to any preset. The plan is run-phase: the
+/// blueprint fingerprint is unchanged, so faulted and healthy points
+/// share one compiled arena in a sweep.
+pub fn with_faults(mut cfg: SimConfig, plan: FaultPlan) -> SimConfig {
+    cfg.faults = plan;
+    cfg
+}
+
+/// The worked EXPERIMENTS.md fault plan: degrade one inter trunk to
+/// `factor`x its rate at `at_us`, leaving recovery to the caller. On
+/// leaf-spine this is the leaf-0 → spine-0 uplink — D-mod-K steers
+/// even-indexed destination leaves through it, so the degradation
+/// shifts their head-of-line wait onto the surviving rails.
+pub fn degraded_trunk_plan(at_us: f64, factor: f64) -> FaultPlan {
+    FaultPlan {
+        events: vec![FaultEvent {
+            at_us,
+            action: FaultAction::LinkDegrade { factor },
+            sel: Some(LinkSel::LeafUp { leaf: 0, spine: 0 }),
+        }],
+    }
 }
 
 /// Default pod count for a [`InterKind::FatTree3`] over `leaves` leaf

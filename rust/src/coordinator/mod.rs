@@ -19,7 +19,7 @@ pub mod results;
 
 use std::sync::Arc;
 
-use crate::config::{presets, FabricConfig, InterKind, Pattern, SimConfig};
+use crate::config::{presets, FabricConfig, FaultPlan, InterKind, LimitsConfig, Pattern, SimConfig};
 use crate::net::world::{BenchMode, SerProvider, Sim, SimReport, WorldBlueprint};
 use crate::runtime::CachedProvider;
 
@@ -50,6 +50,14 @@ pub struct SweepSpec {
     pub workers: usize,
     /// Base RNG seed (each point derives its own from it).
     pub seed: u64,
+    /// Fault plan applied to every point (run-phase delta; the default
+    /// empty plan keeps the sweep bit-identical to a fault-free one and
+    /// does not split blueprints).
+    pub faults: FaultPlan,
+    /// Per-point event/wall-clock watchdog (run-phase; zeroes =
+    /// unlimited). A tripped watchdog fails that point with
+    /// `SimError::LimitExceeded` instead of hanging the sweep.
+    pub limits: LimitsConfig,
 }
 
 impl SweepSpec {
@@ -66,6 +74,8 @@ impl SweepSpec {
             telemetry: false,
             workers: default_workers(),
             seed: 0x5CA1E,
+            faults: FaultPlan::default(),
+            limits: LimitsConfig::default(),
         }
     }
 
@@ -87,6 +97,8 @@ impl SweepSpec {
             telemetry: false,
             workers: default_workers(),
             seed: 0x5CA1E,
+            faults: FaultPlan::default(),
+            limits: LimitsConfig::default(),
         }
     }
 
@@ -104,6 +116,8 @@ impl SweepSpec {
                         cfg = presets::with_paper_windows(cfg);
                     }
                     cfg.telemetry.enabled = self.telemetry;
+                    cfg.faults = self.faults.clone();
+                    cfg.limits = self.limits;
                     out.push(cfg);
                 }
             }
@@ -212,6 +226,103 @@ pub fn run_sweep(
     pool::run_ordered_with(jobs, spec.workers, || None, progress)
 }
 
+/// Outcome of a crash-safe sweep: per-point reports plus the
+/// structured failures, instead of an all-or-nothing `Result`.
+#[derive(Debug)]
+pub struct SweepOutcome {
+    /// One slot per spec point, in spec order. `None` where the point
+    /// was skipped (`start` resume offset) or exhausted its retry
+    /// budget — the latter always has a matching entry in `errors`.
+    pub reports: Vec<Option<SimReport>>,
+    /// Points that failed every attempt, in spec order. Indices are
+    /// absolute spec indices (resume offset already applied).
+    pub errors: Vec<pool::JobFailure>,
+}
+
+impl SweepOutcome {
+    /// Points that produced a report.
+    pub fn completed(&self) -> usize {
+        self.reports.iter().filter(|r| r.is_some()).count()
+    }
+}
+
+/// Crash-safe variant of [`run_sweep`]: a panicking, erroring, or
+/// watchdog-tripped point no longer aborts the batch. Each bad point is
+/// retried up to `attempts` times — every retry re-runs the point from
+/// a fresh `World::reset` (a panic additionally discards the worker's
+/// pinned `Sim`, so the next attempt rebuilds from the blueprint) — and
+/// the sweep always runs to the end, reporting failures per point in
+/// [`SweepOutcome::errors`]. `start` skips the first `start` points
+/// (the `sweep --resume` path: rows already in the partial CSV);
+/// `progress` receives absolute spec indices.
+pub fn run_sweep_resilient(
+    spec: &SweepSpec,
+    provider: Arc<CachedProvider>,
+    attempts: usize,
+    start: usize,
+    progress: Option<Progress>,
+) -> anyhow::Result<SweepOutcome> {
+    let configs = spec.configs();
+    let total = configs.len();
+    anyhow::ensure!(
+        start <= total,
+        "resume offset {start} is beyond the sweep ({total} points) — wrong CSV for this spec?"
+    );
+    let mut keys: Vec<String> = Vec::new();
+    let mut blueprints: Vec<Arc<WorldBlueprint>> = Vec::new();
+    let mut jobs: Vec<
+        Box<dyn Fn(&mut Option<(usize, Sim)>) -> anyhow::Result<SimReport> + Send + Sync>,
+    > = Vec::with_capacity(total - start);
+    for cfg in configs.into_iter().skip(start) {
+        let key = WorldBlueprint::key_for(&cfg, BenchMode::None, &[]);
+        let id = match keys.iter().position(|k| *k == key) {
+            Some(i) => i,
+            None => {
+                blueprints.push(Arc::new(WorldBlueprint::compile(
+                    cfg.clone(),
+                    provider.as_ref(),
+                    BenchMode::None,
+                    &[],
+                )?));
+                keys.push(key);
+                keys.len() - 1
+            }
+        };
+        let bp = blueprints[id].clone();
+        // Re-callable (`Fn`) so the pool can retry it: the config is
+        // cloned per attempt and `Sim::reset` starts each attempt from
+        // a pristine world regardless of how the last one ended.
+        jobs.push(Box::new(move |slot: &mut Option<(usize, Sim)>| {
+            if let Some((pinned, sim)) = slot.as_mut() {
+                if *pinned == id {
+                    sim.reset(cfg.clone())?;
+                    return sim.try_run_mut();
+                }
+            }
+            let mut sim = Sim::from_blueprint(&bp, cfg.clone())?;
+            let report = sim.try_run_mut();
+            *slot = Some((id, sim));
+            report
+        }));
+    }
+    let progress = progress.map(|cb| -> Progress {
+        Box::new(move |idx, done, _, r| cb(idx + start, done + start, total, r))
+    });
+    let out = pool::run_resilient_with(jobs, spec.workers, attempts, || None, progress);
+    let mut reports: Vec<Option<SimReport>> = (0..total).map(|_| None).collect();
+    let mut errors = Vec::new();
+    for (i, point) in out.into_iter().enumerate() {
+        match point {
+            Ok(report) => reports[start + i] = Some(report),
+            Err(mut failure) => {
+                failure.index += start;
+                errors.push(failure);
+            }
+        }
+    }
+    Ok(SweepOutcome { reports, errors })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -229,6 +340,8 @@ mod tests {
             telemetry: false,
             workers: 2,
             seed: 7,
+            faults: FaultPlan::default(),
+            limits: LimitsConfig::default(),
         }
     }
 
@@ -357,6 +470,115 @@ mod tests {
             assert_eq!(p.intra_tput_gbs, t.intra_tput_gbs);
             assert_eq!(p.fct, t.fct);
         }
+    }
+
+    #[test]
+    fn resilient_sweep_isolates_livelocked_point_and_finishes_rest() {
+        // Two load points on one blueprint. First learn their true event
+        // counts, then set the watchdog between them: the light point
+        // completes under budget, the heavy one trips `LimitExceeded` on
+        // every attempt and must be isolated — retried the configured
+        // number of times, reported structurally, and never allowed to
+        // take the healthy point down with it.
+        let mut spec = tiny_spec();
+        spec.patterns = vec![Pattern::C3];
+        spec.loads = vec![0.05, 0.45];
+        spec.workers = 1;
+        let provider = Arc::new(snapshot_provider(&spec, &NativeProvider));
+        let healthy = run_sweep(&spec, provider.clone(), None).unwrap();
+        assert!(healthy[0].events < healthy[1].events, "loads must separate event counts");
+        spec.limits.max_events = (healthy[0].events + healthy[1].events) / 2;
+        let out = run_sweep_resilient(&spec, provider, 2, 0, None).unwrap();
+        assert_eq!(out.completed(), 1);
+        let light = out.reports[0].as_ref().expect("light point survives the watchdog");
+        assert_eq!(light.events, healthy[0].events, "watchdog must not perturb healthy points");
+        assert!(out.reports[1].is_none());
+        assert_eq!(out.errors.len(), 1);
+        let e = &out.errors[0];
+        assert_eq!((e.index, e.attempts), (1, 2));
+        assert!(e.error.contains("watchdog"), "structured summary names the cause: {}", e.error);
+    }
+
+    #[test]
+    fn resilient_sweep_resumes_from_offset_with_absolute_indices() {
+        let spec = tiny_spec(); // 2 points: C3, C5
+        let provider = Arc::new(snapshot_provider(&spec, &NativeProvider));
+        let full = run_sweep(&spec, provider.clone(), None).unwrap();
+        let seen = Arc::new(std::sync::Mutex::new(Vec::new()));
+        let s = seen.clone();
+        let cb: Progress = Box::new(move |idx, _, total, _| {
+            assert_eq!(total, 2, "progress total is the whole spec, not the remainder");
+            s.lock().unwrap().push(idx);
+        });
+        let out = run_sweep_resilient(&spec, provider, 1, 1, Some(cb)).unwrap();
+        assert!(out.reports[0].is_none(), "resumed point 0 is not re-run");
+        let resumed = out.reports[1].as_ref().unwrap();
+        assert_eq!(resumed.events, full[1].events, "resumed point bit-matches the full run");
+        assert_eq!(resumed.pattern, "C5");
+        assert!(out.errors.is_empty());
+        assert_eq!(seen.lock().unwrap().as_slice(), &[1], "callback sees absolute spec index");
+        // An offset past the end is a spec/CSV mismatch, not a no-op.
+        let spec2 = tiny_spec();
+        let provider2 = Arc::new(snapshot_provider(&spec2, &NativeProvider));
+        let err = run_sweep_resilient(&spec2, provider2, 1, 3, None).unwrap_err();
+        assert!(format!("{err:#}").contains("beyond the sweep"), "{err:#}");
+    }
+
+    #[test]
+    fn sweep_with_panicking_and_livelocked_points_completes_the_rest() {
+        // The acceptance scenario, driven through the same resilient
+        // pool the sweep uses: four points where #1 panics outright and
+        // #2 livelocks (event watchdog trips every attempt). The batch
+        // must finish the two healthy simulation points and report both
+        // bad ones in the structured per-point summary.
+        use crate::config::FaultEvent;
+        let spec = tiny_spec();
+        let provider = Arc::new(snapshot_provider(&spec, &NativeProvider));
+        let mk_cfg = {
+            let spec = spec.clone();
+            move |i: usize| spec.configs()[i].clone()
+        };
+        let p = provider.clone();
+        let jobs: Vec<Box<dyn Fn(&mut ()) -> anyhow::Result<SimReport> + Send + Sync>> = vec![
+            {
+                let (cfg, p) = (mk_cfg(0), p.clone());
+                Box::new(move |_| {
+                    Sim::new(cfg.clone(), p.as_ref(), BenchMode::None)?.try_run()
+                })
+            },
+            Box::new(|_| panic!("worker crash while simulating point 1")),
+            {
+                let (mut cfg, p) = (mk_cfg(1), p.clone());
+                cfg.limits.max_events = 50; // far below any real run
+                Box::new(move |_| {
+                    Sim::new(cfg.clone(), p.as_ref(), BenchMode::None)?.try_run()
+                })
+            },
+            {
+                // A healthy point under a mid-run fault plan: degraded
+                // but completing, proving faulty != failed.
+                let (mut cfg, p) = (mk_cfg(1), p.clone());
+                cfg.faults = crate::config::FaultPlan {
+                    events: vec![FaultEvent {
+                        at_us: 12.0,
+                        action: crate::config::FaultAction::LinkDegrade { factor: 0.5 },
+                        sel: Some(crate::config::LinkSel::LeafUp { leaf: 0, spine: 0 }),
+                    }],
+                };
+                Box::new(move |_| {
+                    Sim::new(cfg.clone(), p.as_ref(), BenchMode::None)?.try_run()
+                })
+            },
+        ];
+        let out = pool::run_resilient_with(jobs, 2, 2, || (), None);
+        assert!(out[0].as_ref().unwrap().delivered_msgs > 0);
+        assert!(out[3].as_ref().unwrap().delivered_msgs > 0, "degraded point still completes");
+        let e1 = out[1].as_ref().unwrap_err();
+        assert!(e1.error.contains("worker crash"), "{e1}");
+        assert_eq!(e1.attempts, 2);
+        let e2 = out[2].as_ref().unwrap_err();
+        assert!(e2.error.contains("watchdog"), "{e2}");
+        assert_eq!(e2.attempts, 2);
     }
 
     #[test]

@@ -6,13 +6,65 @@
 //! blueprint-aware sweep path pins one reusable `Sim` per worker in it,
 //! so consecutive sweep points skip world construction entirely. Any job
 //! error aborts the whole batch (a sweep with a failed point is
-//! invalid); worker panics surface as errors rather than hanging the
-//! leader.
+//! invalid).
+//!
+//! Jobs run under [`std::panic::catch_unwind`], so a panicking job
+//! surfaces as an ordinary error naming its submission index instead of
+//! killing its worker thread, and the worker's private state — possibly
+//! left half-mutated by the unwind — is rebuilt from `init` before the
+//! next job. Queue locks recover from poisoning (a `Vec` of pending
+//! jobs is valid under any interleaving of pushes and pops, so a
+//! poisoned mutex only records that *some* thread panicked, which the
+//! catch already reported).
+//!
+//! [`run_resilient_with`] is the crash-safe variant the sweep resumer
+//! builds on: jobs are re-callable, each failed point is retried up to
+//! a bounded attempt budget, and the batch always runs to the end,
+//! returning per-point `Result`s ([`JobFailure`] carries the index,
+//! attempt count, and rendered error) instead of aborting on the first
+//! bad point.
 
+use std::panic::AssertUnwindSafe;
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard};
 
 type Job<T, S> = Box<dyn FnOnce(&mut S) -> anyhow::Result<T> + Send>;
+
+/// Lock that shrugs off poisoning: the pending-jobs `Vec` is
+/// structurally valid after any panic (push/pop are atomic under the
+/// guard), so recover the guard instead of propagating the poison and
+/// cascading one caught panic into every later lock site.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// Best-effort text of a panic payload (`panic!("...")` yields `&str`
+/// or `String`; anything else gets a placeholder).
+fn panic_text(payload: &(dyn std::any::Any + Send)) -> &str {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        s
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s
+    } else {
+        "non-string panic payload"
+    }
+}
+
+/// Run one job with panic isolation. A panic becomes an `Err` naming
+/// the payload; the second element reports whether the worker state
+/// must be treated as corrupt (the unwind may have interrupted a
+/// mutation mid-way) and rebuilt before the next job.
+fn call_isolated<T, S, F>(job: F, state: &mut S) -> (anyhow::Result<T>, bool)
+where
+    F: FnOnce(&mut S) -> anyhow::Result<T>,
+{
+    match std::panic::catch_unwind(AssertUnwindSafe(|| job(state))) {
+        Ok(result) => (result, false),
+        Err(payload) => {
+            (Err(anyhow::anyhow!("job panicked: {}", panic_text(payload.as_ref()))), true)
+        }
+    }
+}
 
 /// Progress callback: (submission_index, completed_count, total,
 /// latest_result). The submission index lets observers reorder
@@ -77,9 +129,12 @@ where
         handles.push(std::thread::spawn(move || {
             let mut state = init();
             loop {
-                let job = queue.lock().expect("queue poisoned").pop();
+                let job = lock(&queue).pop();
                 let Some((idx, job)) = job else { break };
-                let result = job(&mut state);
+                let (result, state_corrupt) = call_isolated(job, &mut state);
+                if state_corrupt {
+                    state = init();
+                }
                 if tx.send((idx, result)).is_err() {
                     break; // leader gone
                 }
@@ -109,7 +164,7 @@ where
                     // (Documented contract: "any job error aborts the
                     // whole batch" — before this, workers kept draining
                     // the queue after the first error.)
-                    queue.lock().expect("queue poisoned").clear();
+                    lock(&queue).clear();
                 }
             }
         }
@@ -121,6 +176,124 @@ where
         return Err(e);
     }
     Ok(out.into_iter().map(|v| v.expect("all jobs completed")).collect())
+}
+
+/// Terminal failure of one job in a resilient batch.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct JobFailure {
+    /// Submission index of the failed job.
+    pub index: usize,
+    /// Attempts executed before giving up (== the configured budget).
+    pub attempts: usize,
+    /// Final error, `{:#}`-rendered so the anyhow context chain — the
+    /// `SimError` variant, the panic payload — survives as text.
+    pub error: String,
+}
+
+impl std::fmt::Display for JobFailure {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "job {} failed after {} attempt(s): {}", self.index, self.attempts, self.error)
+    }
+}
+
+/// Crash-safe sibling of [`run_ordered_with`]: every job runs to a
+/// per-point `Result` instead of the first failure aborting the batch.
+///
+/// Jobs must be re-callable (`Fn`, shared via `Arc`) because a failed
+/// point is requeued and retried — possibly on a different worker — up
+/// to `attempts` total executions. Panics are isolated per attempt and
+/// count as failures; the panicking worker rebuilds its state from
+/// `init` and keeps draining the queue. The returned vector is in
+/// submission order, `Err` slots carrying the index, attempt count and
+/// final rendered error. `progress` fires once per *successful* point.
+pub fn run_resilient_with<T, S, F, I>(
+    jobs: Vec<F>,
+    workers: usize,
+    attempts: usize,
+    init: I,
+    progress: Option<Callback<T>>,
+) -> Vec<Result<T, JobFailure>>
+where
+    T: Send + 'static,
+    S: 'static,
+    F: Fn(&mut S) -> anyhow::Result<T> + Send + Sync + 'static,
+    I: Fn() -> S + Send + Sync + 'static,
+{
+    let total = jobs.len();
+    if total == 0 {
+        return Vec::new();
+    }
+    let attempts = attempts.max(1);
+    // (submission index, attempts already spent, job). Retries push
+    // back onto the tail, which `pop` takes next: a flaky point retries
+    // immediately while its inputs are hot instead of at batch end.
+    type Slot<T, S> = (usize, usize, Arc<dyn Fn(&mut S) -> anyhow::Result<T> + Send + Sync>);
+    let queue: Arc<Mutex<Vec<Slot<T, S>>>> = Arc::new(Mutex::new(
+        jobs.into_iter()
+            .enumerate()
+            .rev() // pop() takes from the back; reverse so index 0 runs first
+            .map(|(i, j)| (i, 0, Arc::new(j) as _))
+            .collect(),
+    ));
+    let (tx, rx) = mpsc::channel::<(usize, Result<T, (usize, String)>)>();
+    let init = Arc::new(init);
+
+    let n_workers = workers.clamp(1, total);
+    let mut handles = Vec::with_capacity(n_workers);
+    for _ in 0..n_workers {
+        let queue = queue.clone();
+        let tx = tx.clone();
+        let init = init.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut state = init();
+            loop {
+                let job = lock(&queue).pop();
+                let Some((idx, spent, job)) = job else { break };
+                let (result, state_corrupt) =
+                    call_isolated(|s: &mut S| job(s), &mut state);
+                if state_corrupt {
+                    state = init();
+                }
+                let spent = spent + 1;
+                let send = match result {
+                    Ok(v) => tx.send((idx, Ok(v))),
+                    Err(e) if spent < attempts => {
+                        lock(&queue).push((idx, spent, job));
+                        let _ = e; // retried; only the final error is reported
+                        continue;
+                    }
+                    Err(e) => tx.send((idx, Err((spent, format!("{e:#}"))))),
+                };
+                if send.is_err() {
+                    break; // leader gone
+                }
+            }
+        }));
+    }
+    drop(tx);
+
+    let mut out: Vec<Option<Result<T, JobFailure>>> = (0..total).map(|_| None).collect();
+    let mut done = 0usize;
+    for (idx, result) in rx {
+        done += 1;
+        out[idx] = Some(match result {
+            Ok(v) => {
+                if let Some(cb) = &progress {
+                    cb(idx, done, total, &v);
+                }
+                Ok(v)
+            }
+            Err((attempts, error)) => Err(JobFailure { index: idx, attempts, error }),
+        });
+    }
+    for h in handles {
+        // Workers never unwind past `call_isolated`; a failed join here
+        // would mean the isolation itself is broken, so keep it loud.
+        h.join().expect("pool worker thread died outside job isolation");
+    }
+    out.into_iter()
+        .map(|v| v.expect("resilient pool reported every job"))
+        .collect()
 }
 
 #[cfg(test)]
@@ -284,6 +457,119 @@ mod tests {
         assert!(msg.contains("job 1 failed") && msg.contains("boom"), "{msg}");
         let ran = executed.load(Ordering::SeqCst);
         assert!(ran < 8, "late jobs must be skipped under fail-fast, ran {ran}/32");
+    }
+
+    #[test]
+    fn panicking_job_is_isolated_and_names_its_index() {
+        // Job 5 panics outright. The worker must survive (catch_unwind),
+        // the queue lock must not cascade the poison, and the leader
+        // must surface the panic as an ordinary error carrying the
+        // failing job's submission index and payload text.
+        let jobs: Vec<_> = (0..8u64)
+            .map(|i| {
+                move || -> anyhow::Result<u64> {
+                    if i == 5 {
+                        panic!("deliberate test panic at job 5");
+                    }
+                    Ok(i)
+                }
+            })
+            .collect();
+        let err = run_ordered(jobs, 2, None).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("job 5 failed") && msg.contains("deliberate test panic"),
+            "panic must surface with index context: {msg}"
+        );
+    }
+
+    #[test]
+    fn panic_rebuilds_worker_state_before_next_job() {
+        // One worker, resilient mode: job 0 half-mutates its state and
+        // panics on its first two attempts; the pool must hand every
+        // attempt (and every later job) a freshly initialised state, so
+        // the third attempt sees 0, succeeds, and job 1 still sees the
+        // state its own increments produced — never job 0's wreckage.
+        let inits = Arc::new(AtomicUsize::new(0));
+        let ic = inits.clone();
+        let fails = Arc::new(AtomicUsize::new(0));
+        let jobs: Vec<_> = (0..2usize)
+            .map(|i| {
+                let fails = fails.clone();
+                move |state: &mut u64| -> anyhow::Result<u64> {
+                    *state += 100; // half-done mutation a panic would leak
+                    if i == 0 && fails.fetch_add(1, Ordering::SeqCst) < 2 {
+                        panic!("crash mid-mutation");
+                    }
+                    Ok(*state)
+                }
+            })
+            .collect();
+        let out = run_resilient_with(
+            jobs,
+            1,
+            3,
+            move || {
+                ic.fetch_add(1, Ordering::SeqCst);
+                0u64
+            },
+            None,
+        );
+        // Every attempt after a panic got a rebuilt state: both
+        // successful jobs observed exactly one increment over zero.
+        assert_eq!(out[0].as_ref().unwrap(), &100);
+        assert_eq!(out[1].as_ref().unwrap(), &200, "job 1 reuses the now-healthy state");
+        // init ran once at spawn plus once per panicked attempt.
+        assert_eq!(inits.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn resilient_batch_retries_and_reports_per_point() {
+        // Four points: #0 fine, #1 flaky (fails twice, then succeeds),
+        // #2 hard-fails every attempt, #3 panics every attempt. The
+        // batch must complete all points, retry within the budget, and
+        // report the two bad points structurally.
+        let flaky = Arc::new(AtomicUsize::new(0));
+        let jobs: Vec<Box<dyn Fn(&mut ()) -> anyhow::Result<u64> + Send + Sync>> = vec![
+            Box::new(|_| Ok(10)),
+            {
+                let flaky = flaky.clone();
+                Box::new(move |_| {
+                    if flaky.fetch_add(1, Ordering::SeqCst) < 2 {
+                        anyhow::bail!("transient")
+                    }
+                    Ok(11)
+                })
+            },
+            Box::new(|_| anyhow::bail!("permanent defect")),
+            Box::new(|_| panic!("unhandled crash")),
+        ];
+        let out = run_resilient_with(jobs, 2, 3, || (), None);
+        assert_eq!(out[0].as_ref().unwrap(), &10);
+        assert_eq!(out[1].as_ref().unwrap(), &11, "flaky point must recover within budget");
+        let e2 = out[2].as_ref().unwrap_err();
+        assert_eq!((e2.index, e2.attempts), (2, 3));
+        assert!(e2.error.contains("permanent defect"), "{e2}");
+        let e3 = out[3].as_ref().unwrap_err();
+        assert_eq!((e3.index, e3.attempts), (3, 3));
+        assert!(e3.error.contains("unhandled crash"), "{e3}");
+        assert!(format!("{e3}").contains("job 3 failed after 3 attempt(s)"));
+    }
+
+    #[test]
+    fn resilient_empty_batch_and_single_attempt() {
+        let none: Vec<fn(&mut ()) -> anyhow::Result<u64>> = vec![];
+        assert!(run_resilient_with(none, 4, 3, || (), None).is_empty());
+        // attempts = 0 clamps to one real execution.
+        let ran = Arc::new(AtomicUsize::new(0));
+        let r = ran.clone();
+        let jobs: Vec<_> = vec![move |_: &mut ()| -> anyhow::Result<u64> {
+            r.fetch_add(1, Ordering::SeqCst);
+            anyhow::bail!("nope")
+        }];
+        let out = run_resilient_with(jobs, 1, 0, || (), None);
+        assert_eq!(out[0].as_ref().unwrap_err().attempts, 1);
+        assert_eq!(ran.load(Ordering::SeqCst), 1);
     }
 
     #[test]

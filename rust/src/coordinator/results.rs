@@ -7,16 +7,21 @@ use crate::net::world::SimReport;
 use crate::serial::json::{FromJson, ToJson, Value};
 
 /// CSV columns written for every sweep point.
+///
+/// Deliberately excludes `wall_ms` (it lives in the JSON dump and the
+/// console summary): every CSV column is a deterministic function of
+/// the config, so a sweep resumed after a crash produces a final file
+/// byte-identical to an uninterrupted run's.
 pub const CSV_HEADER: &str = "pattern,load,nodes,accels,fabric,nics,inter,intra_gbs_cfg,\
 offered_gbs,intra_tput_gbs,intra_drain_gbs,intra_lat_mean_ns,intra_lat_p99_ns,intra_lat_max_ns,\
 inter_tput_gbs,inter_drain_gbs,fct_mean_ns,fct_p99_ns,fct_max_ns,\
-intra_wire_gbs,inter_wire_gbs,drop_frac,delivered_msgs,events,wall_ms,\
-coll_op,coll_size_b,coll_iters,coll_mean_ns,coll_p99_ns,coll_pred_ns";
+intra_wire_gbs,inter_wire_gbs,drop_frac,delivered_msgs,events,\
+coll_op,coll_size_b,coll_iters,coll_mean_ns,coll_p99_ns,coll_pred_ns,dropped_units";
 
 /// One CSV row for a report (matches [`CSV_HEADER`]).
 pub fn csv_row(r: &SimReport) -> String {
     format!(
-        "{},{:.4},{},{},{},{},{},{:.1},{:.3},{:.3},{:.3},{:.1},{:.1},{:.1},{:.3},{:.3},{:.1},{:.1},{:.1},{:.3},{:.3},{:.4},{},{},{:.1},{},{},{},{:.1},{:.1},{:.1}",
+        "{},{:.4},{},{},{},{},{},{:.1},{:.3},{:.3},{:.3},{:.1},{:.1},{:.1},{:.3},{:.3},{:.1},{:.1},{:.1},{:.3},{:.3},{:.4},{},{},{},{},{},{:.1},{:.1},{:.1},{}",
         r.pattern,
         r.load,
         r.nodes,
@@ -41,13 +46,13 @@ pub fn csv_row(r: &SimReport) -> String {
         r.drop_frac,
         r.delivered_msgs,
         r.events,
-        r.wall_ms,
         if r.coll_op.is_empty() { "-" } else { r.coll_op.as_str() },
         r.coll_size_b,
         r.coll_iters,
         r.coll_time.mean_ns,
         r.coll_time.p99_ns,
         r.coll_pred_ns,
+        r.dropped_units,
     )
 }
 
@@ -74,7 +79,10 @@ pub fn write_csv(path: &Path, reports: &[SimReport]) -> anyhow::Result<()> {
 pub struct CsvStream {
     out: std::io::BufWriter<std::fs::File>,
     /// Completed-but-not-yet-in-order rows, keyed by submission index.
-    pending: std::collections::BTreeMap<usize, String>,
+    /// `None` marks an index deliberately skipped ([`CsvStream::skip`]:
+    /// a sweep point that exhausted its retry budget emits no row but
+    /// must not read as a gap in the series).
+    pending: std::collections::BTreeMap<usize, Option<String>>,
     /// Next submission index to emit.
     next: usize,
     written: usize,
@@ -102,24 +110,75 @@ impl CsvStream {
         })
     }
 
+    /// Reopen a partial streamed CSV from a killed run for appending.
+    ///
+    /// Validates the header, counts the complete rows already on disk,
+    /// truncates away a torn final line (a kill mid-`write` can leave
+    /// one; everything before it was flushed whole), and returns the
+    /// stream positioned at the next submission index along with that
+    /// index — the caller resumes the sweep at point `n` and pushes
+    /// with the original absolute indices, producing a final file
+    /// byte-identical to an uninterrupted run.
+    pub fn resume(path: &Path) -> anyhow::Result<(CsvStream, usize)> {
+        let text = std::fs::read_to_string(path).map_err(|e| {
+            anyhow::anyhow!("cannot read partial sweep CSV {}: {e}", path.display())
+        })?;
+        let header_end = text
+            .find('\n')
+            .ok_or_else(|| anyhow::anyhow!("{}: no header line to resume from", path.display()))?;
+        anyhow::ensure!(
+            &text[..header_end] == CSV_HEADER,
+            "{}: header does not match this build's sweep CSV schema — refusing to append",
+            path.display()
+        );
+        let body = &text[header_end + 1..];
+        // Only newline-terminated rows are trusted; a torn tail is cut.
+        let complete_len = body.rfind('\n').map(|i| i + 1).unwrap_or(0);
+        let rows = body[..complete_len].lines().count();
+        let keep = (header_end + 1 + complete_len) as u64;
+        let f = std::fs::OpenOptions::new().append(true).open(path)?;
+        f.set_len(keep)?;
+        let stream = CsvStream {
+            out: std::io::BufWriter::new(f),
+            pending: std::collections::BTreeMap::new(),
+            next: rows,
+            written: rows,
+            err: None,
+        };
+        Ok((stream, rows))
+    }
+
     /// Submit the report completed at submission index `idx` (each index
     /// exactly once). Emits it plus any directly following buffered
     /// rows, then flushes — a killed run keeps every in-order completed
     /// row on disk (the flush is noise next to a sweep point's runtime).
     pub fn push(&mut self, idx: usize, r: &SimReport) {
+        self.submit(idx, Some(csv_row(r)));
+    }
+
+    /// Declare that submission index `idx` will never produce a row (a
+    /// failed sweep point): the series stays contiguous for `finish`
+    /// and later rows keep streaming past the hole.
+    pub fn skip(&mut self, idx: usize) {
+        self.submit(idx, None);
+    }
+
+    fn submit(&mut self, idx: usize, row: Option<String>) {
         if self.err.is_some() {
             return;
         }
-        self.pending.insert(idx, csv_row(r));
+        self.pending.insert(idx, row);
         let mut emitted = false;
-        while let Some(row) = self.pending.remove(&self.next) {
-            if let Err(e) = writeln!(self.out, "{row}") {
-                self.err = Some(e);
-                return;
+        while let Some(slot) = self.pending.remove(&self.next) {
+            if let Some(row) = slot {
+                if let Err(e) = writeln!(self.out, "{row}") {
+                    self.err = Some(e);
+                    return;
+                }
+                self.written += 1;
+                emitted = true;
             }
             self.next += 1;
-            self.written += 1;
-            emitted = true;
         }
         if emitted {
             if let Err(e) = self.out.flush() {
@@ -251,6 +310,78 @@ mod tests {
         let text = std::fs::read_to_string(&path).unwrap();
         assert_eq!(text.lines().count(), 2, "header + the one in-order row:\n{text}");
         assert_eq!(text.lines().nth(1).unwrap(), csv_row(&r));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn csv_stream_skip_keeps_series_contiguous_past_failed_points() {
+        let dir = std::env::temp_dir().join("sauron_csv_skip_test");
+        let path = dir.join("skips.csv");
+        let r = sample_report();
+        let mut stream = CsvStream::create(&path).unwrap();
+        // Point 1 failed all retries; points 0, 2, 3 completed out of
+        // order. The skip must unblock the in-order drain and finish
+        // must not flag a gap.
+        stream.push(0, &r);
+        stream.push(3, &r);
+        stream.skip(1);
+        stream.push(2, &r);
+        assert_eq!(stream.finish().unwrap(), 3, "three real rows around the hole");
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 4, "header + three rows:\n{text}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn csv_stream_resume_reproduces_uninterrupted_run_byte_identically() {
+        let dir = std::env::temp_dir().join("sauron_csv_resume_test");
+        let full_path = dir.join("full.csv");
+        let part_path = dir.join("killed.csv");
+        let reports: Vec<SimReport> = (0..4).map(|_| sample_report()).collect();
+
+        // The reference: one uninterrupted streamed run.
+        let mut full = CsvStream::create(&full_path).unwrap();
+        for (i, r) in reports.iter().enumerate() {
+            full.push(i, r);
+        }
+        assert_eq!(full.finish().unwrap(), 4);
+
+        // The victim: killed after two rows, mid-write of the third —
+        // the torn tail has no trailing newline and must be discarded.
+        let mut part = CsvStream::create(&part_path).unwrap();
+        part.push(0, &reports[0]);
+        part.push(1, &reports[1]);
+        drop(part);
+        use std::io::Write as _;
+        let mut f = std::fs::OpenOptions::new().append(true).open(&part_path).unwrap();
+        write!(f, "C3,0.10,32,256,switch").unwrap(); // torn row, no newline
+        drop(f);
+
+        let (mut resumed, done) = CsvStream::resume(&part_path).unwrap();
+        assert_eq!(done, 2, "two complete rows survive; the torn third does not");
+        for (i, r) in reports.iter().enumerate().skip(done) {
+            resumed.push(i, r);
+        }
+        assert_eq!(resumed.finish().unwrap(), 4);
+        let full_text = std::fs::read_to_string(&full_path).unwrap();
+        let part_text = std::fs::read_to_string(&part_path).unwrap();
+        assert_eq!(part_text, full_text, "resumed CSV must be byte-identical");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn csv_stream_resume_rejects_foreign_files() {
+        let dir = std::env::temp_dir().join("sauron_csv_resume_reject_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("foreign.csv");
+        std::fs::write(&path, "a,b,c\n1,2,3\n").unwrap();
+        let err = CsvStream::resume(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("header does not match"), "{err:#}");
+        // Header-only file resumes at row 0.
+        let empty = dir.join("empty.csv");
+        std::fs::write(&empty, format!("{CSV_HEADER}\n")).unwrap();
+        let (_, done) = CsvStream::resume(&empty).unwrap();
+        assert_eq!(done, 0);
         std::fs::remove_dir_all(&dir).ok();
     }
 

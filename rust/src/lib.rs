@@ -48,4 +48,4 @@ pub mod units;
 pub use config::{
     CollOp, CollScope, CollectiveSpec, FabricConfig, FabricKind, NicPolicy, SimConfig, Workload,
 };
-pub use net::world::{BenchMode, NativeProvider, Sim, SimReport, WorldBlueprint};
+pub use net::world::{BenchMode, NativeProvider, Sim, SimError, SimReport, WorldBlueprint};

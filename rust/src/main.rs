@@ -15,14 +15,14 @@ use std::sync::Arc;
 use sauron::analytic::{CollParams, PcieParams};
 use sauron::cli::Args;
 use sauron::config::{
-    presets, CollOp, CollScope, CollectiveSpec, FabricConfig, FabricKind, InterKind, NicPolicy,
-    Pattern, SimConfig,
+    presets, CollOp, CollScope, CollectiveSpec, FabricConfig, FabricKind, FaultPlan, InterKind,
+    NicPolicy, Pattern, SimConfig,
 };
 use sauron::coordinator::{self, results, SweepSpec};
 use sauron::net::world::{BenchMode, NativeProvider, SerProvider, Sim};
 use sauron::report::{figures, tables};
 use sauron::runtime::Runtime;
-use sauron::serial::json::ToJson;
+use sauron::serial::json::{FromJson, ToJson, Value};
 use sauron::traffic::collective;
 use sauron::traffic::ib_bench;
 use sauron::traffic::llm::{llm_traffic_native, LlmConfig};
@@ -41,11 +41,22 @@ COMMANDS
              [--inter leaf_spine|fat_tree3|dragonfly]
              [--pods P] [--cores C] [--groups G] [--paper-windows]
              [--telemetry] [--quick] [--out DIR]
+             [--faults plan.json] [--max-events N] [--max-wall-ms MS]
+             [--retries N] [--resume sweep.csv]
              Reproduce Figures 5-8 (scale-out load sweeps) on any
              intra-node fabric x NIC count x inter-node topology.
              --telemetry attaches per-link x per-class link_stats to
              every point's JSON report (interference attribution;
              default off so bench baselines are untouched).
+             Execution is crash-safe: every point runs isolated (a
+             panic or watchdog trip fails that point alone), failed
+             points retry up to --retries extra times from a fresh
+             reset (default 1), and a killed run restarts with
+             --resume <csv>, appending only the missing rows for a
+             byte-identical final file. --faults applies a JSON
+             FaultPlan to every point; --max-events / --max-wall-ms
+             bound each point's event count and wall-clock time
+             (0 = unlimited).
   run        <config.json> [--json]
              One simulation from a JSON config file.
   collective [--op ring_allreduce|reduce_scatter|allgather|all_to_all|hier_allreduce]
@@ -55,7 +66,7 @@ COMMANDS
              [--inter leaf_spine|fat_tree3|dragonfly]
              [--pods P] [--cores C] [--groups G]
              [--size BYTES] [--iters K] [--bg-load F] [--bg-pattern C1|..|0.3]
-             [--telemetry] [--out DIR] [--json]
+             [--telemetry] [--faults plan.json] [--out DIR] [--json]
              Closed-loop collective completion time vs the analytic
              oracle, optionally against open-loop background traffic
              (the paper's NIC-boundary interference scenario).
@@ -160,6 +171,20 @@ fn parse_inter(args: &Args, leaves: usize, spines: usize) -> anyhow::Result<Inte
     Ok(kind)
 }
 
+/// Shared `--faults plan.json` flag: a JSON [`FaultPlan`] applied to
+/// every simulated point (absent = the fault-free default).
+fn parse_faults(args: &Args) -> anyhow::Result<FaultPlan> {
+    match args.opt("faults") {
+        None => Ok(FaultPlan::default()),
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .map_err(|e| anyhow::anyhow!("cannot read fault plan {path}: {e}"))?;
+            FaultPlan::from_json(&Value::parse(&text)?)
+                .map_err(|e| anyhow::anyhow!("fault plan {path}: {e}"))
+        }
+    }
+}
+
 fn parse_pattern(s: &str) -> anyhow::Result<Pattern> {
     Ok(match s.to_ascii_uppercase().as_str() {
         "C1" => Pattern::C1,
@@ -244,7 +269,7 @@ fn main() -> anyhow::Result<()> {
             let (leaves, spines) = presets::rlft_dims(nodes);
             let inter = parse_inter(&args, leaves, spines)?;
             let telemetry = args.flag("telemetry");
-            let spec = if args.flag("quick") {
+            let mut spec = if args.flag("quick") {
                 let mut spec = SweepSpec::quick(nodes);
                 spec.fabric = fabric;
                 spec.inter = inter;
@@ -279,8 +304,15 @@ fn main() -> anyhow::Result<()> {
                     telemetry,
                     workers: args.get_or("workers", coordinator::default_workers())?,
                     seed: args.get_or("seed", 0x5CA1Eu64)?,
+                    faults: FaultPlan::default(),
+                    limits: Default::default(),
                 }
             };
+            spec.faults = parse_faults(&args)?;
+            spec.limits.max_events = args.get_or("max-events", 0u64)?;
+            spec.limits.max_wall_ms = args.get_or("max-wall-ms", 0.0f64)?;
+            let retries = args.get_or("retries", 1usize)?;
+            let resume: Option<PathBuf> = args.opt("resume").map(PathBuf::from);
             let out = PathBuf::from(args.opt("out").unwrap_or("results"));
             args.reject_unknown()?;
             eprintln!(
@@ -306,14 +338,32 @@ fn main() -> anyhow::Result<()> {
             }
             // CSV rows stream out as points complete (submission-ordered)
             // instead of buffering the whole sweep in memory; a killed
-            // run keeps every finished prefix row on disk.
-            let csv_path = out.join(format!("sweep_{tag}.csv"));
-            let csv = Arc::new(std::sync::Mutex::new(results::CsvStream::create(&csv_path)?));
+            // run keeps every finished prefix row on disk and restarts
+            // from it with --resume.
+            let csv_path = match &resume {
+                Some(p) => p.clone(),
+                None => out.join(format!("sweep_{tag}.csv")),
+            };
+            let (stream, start) = match &resume {
+                Some(p) => {
+                    let (stream, done) = results::CsvStream::resume(p)?;
+                    eprintln!(
+                        "resuming {}: {done} of {} points already on disk",
+                        p.display(),
+                        spec.points()
+                    );
+                    (stream, done)
+                }
+                None => (results::CsvStream::create(&csv_path)?, 0),
+            };
+            let csv = Arc::new(std::sync::Mutex::new(stream));
             let csv_cb = csv.clone();
             let t0 = std::time::Instant::now();
-            let reports = coordinator::run_sweep(
+            let outcome = coordinator::run_sweep_resilient(
                 &spec,
                 provider,
+                1 + retries,
+                start,
                 Some(Box::new(move |idx, done, total, r| {
                     eprintln!(
                         "[{done}/{total}] {} load={:.2} bw={} intra={:.1} inter={:.1} GB/s ({:.0} ms)",
@@ -324,25 +374,62 @@ fn main() -> anyhow::Result<()> {
                         r.inter_tput_gbs,
                         r.wall_ms
                     );
-                    csv_cb.lock().expect("csv stream poisoned").push(idx, r);
+                    csv_cb.lock().unwrap_or_else(|e| e.into_inner()).push(idx, r);
                 })),
             )?;
             eprintln!("sweep done in {:.1}s", t0.elapsed().as_secs_f64());
-            let rows = csv.lock().expect("csv stream poisoned").finish()?;
+            let rows = {
+                let mut csv = csv.lock().unwrap_or_else(|e| e.into_inner());
+                // Failed points emit no row; declare the holes so the
+                // stream stays contiguous and later rows are kept.
+                for e in &outcome.errors {
+                    csv.skip(e.index);
+                }
+                csv.finish()?
+            };
             anyhow::ensure!(
-                rows == reports.len(),
+                rows == spec.points() - outcome.errors.len(),
                 "csv stream wrote {rows} of {} rows",
-                reports.len()
+                spec.points() - outcome.errors.len()
             );
-            results::write_json(&out.join(format!("sweep_{tag}.json")), &reports)?;
-            for kind in [
-                figures::FigureKind::IntraThroughput,
-                figures::FigureKind::IntraLatency,
-                figures::FigureKind::InterThroughput,
-                figures::FigureKind::Fct,
-            ] {
-                println!("{}", figures::render_figure(&reports, kind));
+            // The structured per-point failure summary: every bad point
+            // with its retry count and final error, after the healthy
+            // rest of the sweep has been persisted.
+            if !outcome.errors.is_empty() {
+                eprintln!(
+                    "{} of {} points failed after {} attempt(s) each:",
+                    outcome.errors.len(),
+                    spec.points(),
+                    1 + retries
+                );
+                for e in &outcome.errors {
+                    eprintln!("  point {:>4}: {}", e.index, e.error);
+                }
             }
+            if start == 0 && outcome.errors.is_empty() {
+                let reports: Vec<_> = outcome.reports.into_iter().flatten().collect();
+                results::write_json(&out.join(format!("sweep_{tag}.json")), &reports)?;
+                for kind in [
+                    figures::FigureKind::IntraThroughput,
+                    figures::FigureKind::IntraLatency,
+                    figures::FigureKind::InterThroughput,
+                    figures::FigureKind::Fct,
+                ] {
+                    println!("{}", figures::render_figure(&reports, kind));
+                }
+            } else {
+                eprintln!(
+                    "partial sweep (resumed and/or failed points): figures + JSON skipped, \
+                     CSV at {}",
+                    csv_path.display()
+                );
+            }
+            anyhow::ensure!(
+                outcome.errors.is_empty(),
+                "{} sweep point(s) failed after {} attempt(s) each",
+                outcome.errors.len(),
+                1 + retries
+            );
             println!("results in {}", out.display());
         }
 
@@ -400,6 +487,7 @@ fn main() -> anyhow::Result<()> {
             let inter = parse_inter(&args, leaves, spines)?;
             let json = args.flag("json");
             let telemetry = args.flag("telemetry");
+            let faults = parse_faults(&args)?;
             let out = PathBuf::from(args.opt("out").unwrap_or("results"));
             args.reject_unknown()?;
             let spec = CollectiveSpec { op, scope, size_b, iters };
@@ -412,6 +500,7 @@ fn main() -> anyhow::Result<()> {
                     inter,
                 );
                 cfg.telemetry.enabled = telemetry;
+                cfg.faults = faults.clone();
                 let report = Sim::new(cfg, be.provider(), BenchMode::None)?.try_run()?;
                 if telemetry {
                     let inter_tag = if inter == InterKind::LeafSpine {

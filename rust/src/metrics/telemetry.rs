@@ -116,6 +116,10 @@ pub struct LinkCounters {
     /// Highest queue occupancy observed (bytes, credit reservations
     /// included).
     pub high_water_b: u64,
+    /// Total time this link spent dead to fault injection (ps; closed
+    /// down→recover intervals — an interval still open at report time
+    /// is closed against the window end by [`Telemetry::link_stats`]).
+    pub fault_ps: u64,
     /// Wire bytes per class per time bin (the utilization series).
     /// Holds `n_bins + 1` entries: indices `0..n_bins` cover the run
     /// window, and the final entry is the overflow bucket for
@@ -132,6 +136,7 @@ impl LinkCounters {
             busy_ps: [0; N_CLASSES],
             hol_ps: [[0; N_CLASSES]; N_CLASSES],
             high_water_b: 0,
+            fault_ps: 0,
             bins: vec![[0; N_CLASSES]; n_bins + 1],
         }
     }
@@ -141,6 +146,7 @@ impl LinkCounters {
         self.busy_ps = [0; N_CLASSES];
         self.hol_ps = [[0; N_CLASSES]; N_CLASSES];
         self.high_water_b = 0;
+        self.fault_ps = 0;
         self.bins.clear();
         self.bins.resize(n_bins + 1, [0; N_CLASSES]);
     }
@@ -148,6 +154,7 @@ impl LinkCounters {
     fn is_active(&self) -> bool {
         self.bytes.iter().any(|&b| b > 0)
             || self.high_water_b > 0
+            || self.fault_ps > 0
             || self.hol_ps.iter().flatten().any(|&p| p > 0)
     }
 }
@@ -170,11 +177,16 @@ const NOT_PARKED: Park = Park { since: Time::ZERO, on: u32::MAX, blocked: 0, occ
 pub struct Telemetry {
     bin_ps: u64,
     n_bins: usize,
+    /// Run-window end (closes fault intervals still open at report
+    /// time).
+    end: Time,
     links: Vec<LinkCounters>,
     /// Outstanding park per potential link waiter (indexed by link id).
     link_park: Vec<Park>,
     /// Outstanding park per source feeder (indexed by accelerator id).
     feeder_park: Vec<Park>,
+    /// Per-link fault-down mark (`Time::MAX` = not currently dead).
+    fault_mark: Vec<Time>,
     delivered_b: [u64; N_CLASSES],
 }
 
@@ -186,9 +198,11 @@ impl Telemetry {
         Telemetry {
             bin_ps: (end.as_ps() / n_bins as u64).max(1),
             n_bins,
+            end,
             links: (0..n_links).map(|_| LinkCounters::new(n_bins)).collect(),
             link_park: vec![NOT_PARKED; n_links],
             feeder_park: vec![NOT_PARKED; n_feeders],
+            fault_mark: vec![Time::MAX; n_links],
             delivered_b: [0; N_CLASSES],
         }
     }
@@ -199,11 +213,13 @@ impl Telemetry {
         let n_bins = n_bins.max(1) as usize;
         self.bin_ps = (end.as_ps() / n_bins as u64).max(1);
         self.n_bins = n_bins;
+        self.end = end;
         for l in &mut self.links {
             l.reset(n_bins);
         }
         self.link_park.fill(NOT_PARKED);
         self.feeder_park.fill(NOT_PARKED);
+        self.fault_mark.fill(Time::MAX);
         self.delivered_b = [0; N_CLASSES];
     }
 
@@ -305,6 +321,21 @@ impl Telemetry {
         }
     }
 
+    /// Link `l` was killed by fault injection at `now`.
+    #[inline]
+    pub fn on_fault_down(&mut self, l: u32, now: Time) {
+        self.fault_mark[l as usize] = now;
+    }
+
+    /// Link `l` recovered at `now`: close its downtime interval.
+    #[inline]
+    pub fn on_fault_recover(&mut self, l: u32, now: Time) {
+        let mark = std::mem::replace(&mut self.fault_mark[l as usize], Time::MAX);
+        if mark != Time::MAX {
+            self.links[l as usize].fault_ps += now.saturating_sub(mark).as_ps();
+        }
+    }
+
     /// Assemble the per-link report rows: one [`LinkStat`] per link with
     /// any recorded activity. `label(l)` supplies the link's
     /// `(kind, detail)` names and `tx_bytes(l)` its total wire bytes
@@ -317,10 +348,18 @@ impl Telemetry {
         self.links
             .iter()
             .enumerate()
-            .filter(|(_, lc)| lc.is_active())
-            .map(|(l, lc)| {
+            .filter_map(|(l, lc)| {
+                // A down interval still open at report time (the link
+                // never recovered) closes against the window end; the
+                // downtime makes an otherwise-idle dead link reportable.
+                let mark = self.fault_mark[l];
+                let fault_ps = lc.fault_ps
+                    + if mark != Time::MAX { self.end.saturating_sub(mark).as_ps() } else { 0 };
+                if !lc.is_active() && fault_ps == 0 {
+                    return None;
+                }
                 let (kind, detail) = label(l);
-                LinkStat {
+                Some(LinkStat {
                     link: l as u32,
                     kind,
                     detail,
@@ -329,8 +368,9 @@ impl Telemetry {
                     class_busy_ps: lc.busy_ps,
                     queue_high_water_b: lc.high_water_b,
                     hol_ps: lc.hol_ps,
+                    fault_ps,
                     util_bins: lc.bins.clone(),
-                }
+                })
             })
             .collect()
     }
@@ -357,6 +397,10 @@ pub struct LinkStat {
     pub queue_high_water_b: u64,
     /// Head-of-line blocking `[blocked class][occupant class]` (ps).
     pub hol_ps: [[u64; N_CLASSES]; N_CLASSES],
+    /// Time this link spent dead to fault injection during the run (ps;
+    /// 0 without a fault plan — and omitted from the JSON then, keeping
+    /// fault-free reports byte-identical).
+    pub fault_ps: u64,
     /// Wire bytes per class per time bin (bin width =
     /// `SimReport::telemetry_bin_ps`). The final entry is the
     /// past-window overflow bucket, not a width-`telemetry_bin_ps` bin.
@@ -392,7 +436,7 @@ fn parse_classes(v: &Value) -> anyhow::Result<[u64; N_CLASSES]> {
 
 impl ToJson for LinkStat {
     fn to_json(&self) -> Value {
-        Value::obj()
+        let v = Value::obj()
             .with("link", self.link)
             .with("kind", self.kind.as_str())
             .with("detail", self.detail.as_str())
@@ -400,8 +444,10 @@ impl ToJson for LinkStat {
             .with("class_bytes", arr_u64(&self.class_bytes))
             .with("class_busy_ps", arr_u64(&self.class_busy_ps))
             .with("queue_high_water_b", self.queue_high_water_b)
-            .with("hol_ps", Value::Arr(self.hol_ps.iter().map(|row| arr_u64(row)).collect()))
-            .with("util_bins", Value::Arr(self.util_bins.iter().map(|b| arr_u64(b)).collect()))
+            .with("hol_ps", Value::Arr(self.hol_ps.iter().map(|row| arr_u64(row)).collect()));
+        // Fault-free stats keep the pre-fault JSON shape byte-for-byte.
+        let v = if self.fault_ps == 0 { v } else { v.with("fault_ps", self.fault_ps) };
+        v.with("util_bins", Value::Arr(self.util_bins.iter().map(|b| arr_u64(b)).collect()))
     }
 }
 
@@ -422,6 +468,11 @@ impl FromJson for LinkStat {
             class_busy_ps: parse_classes(v.req("class_busy_ps")?)?,
             queue_high_water_b: v.u64_of("queue_high_water_b")?,
             hol_ps,
+            // Optional so pre-fault (and fault-free) stats parse.
+            fault_ps: match v.get("fault_ps") {
+                Some(n) => n.as_u64()?,
+                None => 0,
+            },
             util_bins: v
                 .req("util_bins")?
                 .as_arr()?
@@ -536,6 +587,42 @@ mod tests {
         assert_eq!(s.wire_bytes, 4096);
         assert_eq!(s.class_bytes.iter().sum::<u64>(), s.wire_bytes);
         assert_eq!(s.hol_total_ps(), 0);
+    }
+
+    #[test]
+    fn fault_downtime_accrues_and_closes_open_intervals() {
+        let mut t = Telemetry::new(3, 1, Time::from_us(10.0), 4);
+        // Closed interval: down at 1us, back at 3us.
+        t.on_fault_down(0, Time::from_us(1.0));
+        t.on_fault_recover(0, Time::from_us(3.0));
+        // Open interval: down at 6us, never recovers — closed against
+        // the 10us window end at report time.
+        t.on_fault_down(1, Time::from_us(6.0));
+        // Recover without a down is a no-op.
+        t.on_fault_recover(2, Time::from_us(5.0));
+        let stats = t.link_stats(|l| (format!("k{l}"), format!("d{l}")), |_| 0);
+        assert_eq!(stats.len(), 2, "dead links report even with zero bytes");
+        assert_eq!(stats[0].link, 0);
+        assert_eq!(stats[0].fault_ps, 2_000_000);
+        assert_eq!(stats[1].link, 1);
+        assert_eq!(stats[1].fault_ps, 4_000_000);
+        // Downtime round-trips (and is omitted from fault-free JSON).
+        let back = LinkStat::from_json(&stats[1].to_json()).unwrap();
+        assert_eq!(back, stats[1]);
+        assert_eq!(stats[1].to_json().get("fault_ps").unwrap().as_u64().unwrap(), 4_000_000);
+        // Reset clears marks and counters.
+        t.reset(Time::from_us(10.0), 4);
+        assert!(t.link_stats(|l| (format!("k{l}"), format!("d{l}")), |_| 0).is_empty());
+    }
+
+    #[test]
+    fn fault_free_stat_json_carries_no_fault_field() {
+        let mut t = Telemetry::new(1, 1, Time::from_us(5.0), 2);
+        t.on_wire(0, TrafficClass::Bench, 512, Time::ZERO);
+        let stats = t.link_stats(|_| ("k".into(), "d".into()), |_| 512);
+        assert!(stats[0].to_json().get("fault_ps").is_none());
+        let back = LinkStat::from_json(&stats[0].to_json()).unwrap();
+        assert_eq!(back.fault_ps, 0);
     }
 
     #[test]

@@ -17,4 +17,4 @@ pub mod world;
 
 pub use link::{Link, LinkModel, Waker};
 pub use topo::{Kind, Topology};
-pub use world::{BenchMode, Class, SimReport, World, WorldBlueprint};
+pub use world::{BenchMode, Class, SimError, SimReport, World, WorldBlueprint};

@@ -61,7 +61,7 @@
 //! every node attaches to the node's leaf (rail-aligned: same-index
 //! NICs talk through the same leaf ports).
 
-use crate::config::{FabricKind, InterKind, NicPolicy, SimConfig};
+use crate::config::{FabricKind, InterKind, LinkSel, NicPolicy, SimConfig};
 
 /// What a link is, with its owning node / leaf / spine index.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -861,6 +861,532 @@ impl Topology {
         };
         2 * self.accels_per_node + 6 + trunks
     }
+
+    // -- fault plumbing ----------------------------------------------------
+
+    /// Resolve a config-level [`LinkSel`] to a link id, rejecting
+    /// selectors that name structures the active fabric / inter topology
+    /// does not have. Selector resolution is run-phase: it happens when
+    /// a fault plan is armed, never on the routing hot path.
+    pub fn resolve_sel(&self, sel: &LinkSel) -> anyhow::Result<u32> {
+        let id = match *sel {
+            LinkSel::Id { link } => {
+                anyhow::ensure!(
+                    link < self.total_links(),
+                    "link id {link} outside the {} dense link ids",
+                    self.total_links()
+                );
+                link
+            }
+            LinkSel::NicUp { node, nic } => {
+                self.check_nic(node, nic, "nic_up")?;
+                self.nic_up(node as u32, nic as u32)
+            }
+            LinkSel::NicDownLink { node, nic } => {
+                self.check_nic(node, nic, "nic_down")?;
+                self.nic_down(node as u32, nic as u32)
+            }
+            LinkSel::LeafUp { leaf, spine } => {
+                anyhow::ensure!(
+                    matches!(self.inter_kind, InterKind::LeafSpine),
+                    "leaf_up selector needs a leaf_spine inter topology (got {:?})",
+                    self.inter_kind
+                );
+                anyhow::ensure!(
+                    leaf < self.leaves as usize && spine < self.spines as usize,
+                    "leaf_up[{leaf}->{spine}] outside {} leaves x {} spines",
+                    self.leaves,
+                    self.spines
+                );
+                self.leaf_up(leaf as u32, spine as u32)
+            }
+            LinkSel::SpineDown { spine, leaf } => {
+                anyhow::ensure!(
+                    matches!(self.inter_kind, InterKind::LeafSpine),
+                    "spine_down selector needs a leaf_spine inter topology (got {:?})",
+                    self.inter_kind
+                );
+                anyhow::ensure!(
+                    leaf < self.leaves as usize && spine < self.spines as usize,
+                    "spine_down[{spine}->{leaf}] outside {} spines x {} leaves",
+                    self.spines,
+                    self.leaves
+                );
+                self.spine_down(spine as u32, leaf as u32)
+            }
+            LinkSel::AggUp { leaf, agg } => {
+                anyhow::ensure!(
+                    matches!(self.inter_kind, InterKind::FatTree3 { .. }),
+                    "agg_up selector needs a fat_tree3 inter topology (got {:?})",
+                    self.inter_kind
+                );
+                anyhow::ensure!(
+                    leaf < self.leaves as usize && agg < self.spines as usize,
+                    "agg_up[{leaf}->{agg}] outside {} leaves x {} aggs",
+                    self.leaves,
+                    self.spines
+                );
+                self.agg_up(leaf as u32, agg as u32)
+            }
+            LinkSel::CoreUp { pod, core } => {
+                anyhow::ensure!(
+                    matches!(self.inter_kind, InterKind::FatTree3 { .. }),
+                    "core_up selector needs a fat_tree3 inter topology (got {:?})",
+                    self.inter_kind
+                );
+                anyhow::ensure!(
+                    pod < self.pods as usize && core < self.cores as usize,
+                    "core_up[{pod}->{core}] outside {} pods x {} cores",
+                    self.pods,
+                    self.cores
+                );
+                self.core_up(pod as u32, core as u32)
+            }
+            LinkSel::DfGlobal { group, to_group } => {
+                anyhow::ensure!(
+                    matches!(self.inter_kind, InterKind::Dragonfly { .. }),
+                    "df_global selector needs a dragonfly inter topology (got {:?})",
+                    self.inter_kind
+                );
+                anyhow::ensure!(
+                    group != to_group
+                        && group < self.groups as usize
+                        && to_group < self.groups as usize,
+                    "df_global[{group}->{to_group}] outside {} distinct groups",
+                    self.groups
+                );
+                self.df_global(group as u32, to_group as u32)
+            }
+            LinkSel::RingHop { node, from } => {
+                anyhow::ensure!(
+                    self.fabric == FabricKind::Ring && self.accels_per_node >= 2,
+                    "ring_hop selector needs a ring fabric with >= 2 accels (got {:?})",
+                    self.fabric
+                );
+                anyhow::ensure!(
+                    node < self.nodes as usize && from < self.accels_per_node as usize,
+                    "ring_hop[n{node}.a{from}] outside {} nodes x {} accels",
+                    self.nodes,
+                    self.accels_per_node
+                );
+                self.ring_hop(node as u32, from as u32)
+            }
+            LinkSel::MeshLane { node, from, to } => {
+                anyhow::ensure!(
+                    self.fabric == FabricKind::Mesh,
+                    "mesh_lane selector needs a mesh fabric (got {:?})",
+                    self.fabric
+                );
+                anyhow::ensure!(
+                    from != to
+                        && node < self.nodes as usize
+                        && from < self.accels_per_node as usize
+                        && to < self.accels_per_node as usize,
+                    "mesh_lane[n{node}.a{from}->a{to}] outside {} nodes x {} accels",
+                    self.nodes,
+                    self.accels_per_node
+                );
+                self.mesh_lane(node as u32, from as u32, to as u32)
+            }
+        };
+        Ok(id)
+    }
+
+    fn check_nic(&self, node: usize, nic: usize, what: &str) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            node < self.nodes as usize && nic < self.nics_per_node as usize,
+            "{what}[n{node}.k{nic}] outside {} nodes x {} nics",
+            self.nodes,
+            self.nics_per_node
+        );
+        Ok(())
+    }
+
+    /// The four links a NIC owns (staging pair + inter pair) — killed
+    /// together by a `nic_down` fault action.
+    pub fn nic_links(&self, node: u32, nic: u32) -> [u32; 4] {
+        [
+            self.sw_to_nic(node, nic),
+            self.nic_to_sw(node, nic),
+            self.nic_up(node, nic),
+            self.nic_down(node, nic),
+        ]
+    }
+
+    /// [`Topology::egress_nic`] with failover: starting from the
+    /// policy's pick, probe rails in round-robin order and take the
+    /// first whose egress pair (staging + up-link) is alive. Falls back
+    /// to the primary when every rail is dead — the unit then drops at
+    /// the dead link instead of stalling its feeder forever.
+    pub fn egress_nic_faulted(
+        &self,
+        node: u32,
+        src: u32,
+        dst: u32,
+        alive: &dyn Fn(u32) -> bool,
+    ) -> u32 {
+        let primary = self.egress_nic(src, dst);
+        (0..self.nics_per_node)
+            .map(|k| (primary + k) % self.nics_per_node)
+            .find(|&nic| alive(self.sw_to_nic(node, nic)) && alive(self.nic_up(node, nic)))
+            .unwrap_or(primary)
+    }
+
+    /// [`Topology::ingress_nic`] with failover over the destination's
+    /// surviving rails (down-link + ingress staging alive).
+    pub fn ingress_nic_faulted(&self, src: u32, dst: u32, alive: &dyn Fn(u32) -> bool) -> u32 {
+        let node = self.accel_node(dst);
+        let primary = self.ingress_nic(src, dst);
+        (0..self.nics_per_node)
+            .map(|k| (primary + k) % self.nics_per_node)
+            .find(|&nic| alive(self.nic_down(node, nic)) && alive(self.nic_to_sw(node, nic)))
+            .unwrap_or(primary)
+    }
+
+    /// (Dragonfly) is the minimal path src-group -> `via` -> dst-group
+    /// fully alive on its trunk legs (first local hop + globals)?
+    fn df_path_open(
+        &self,
+        sr: u32,
+        sg: u32,
+        via: u32,
+        dg: u32,
+        alive: &dyn Fn(u32) -> bool,
+    ) -> bool {
+        let out = self.df_out_router(sg, via);
+        if sr != out && !alive(self.df_local(sg, sr, out)) {
+            return false;
+        }
+        if !alive(self.df_global(sg, via)) {
+            return false;
+        }
+        via == dg || alive(self.df_global(via, dg))
+    }
+
+    /// (Dragonfly) group to exit toward when heading from `sg` to `dg`:
+    /// the direct global if its path is open, else the first alive
+    /// one-intermediate detour (Valiant-style, deterministic salt
+    /// order), else the dead direct trunk (drop point).
+    fn df_via_group(&self, sr: u32, sg: u32, dg: u32, alive: &dyn Fn(u32) -> bool) -> u32 {
+        if self.df_path_open(sr, sg, dg, dg, alive) {
+            return dg;
+        }
+        for salt in 1..self.groups {
+            let via = (dg + salt) % self.groups;
+            if via == sg || via == dg {
+                continue;
+            }
+            if self.df_path_open(sr, sg, via, dg, alive) {
+                return via;
+            }
+        }
+        dg
+    }
+
+    /// [`Topology::egress_link`] with failover: NIC selection probes
+    /// surviving rails, and a dead direct mesh lane detours through a
+    /// pivot accelerator when a two-lane path is fully alive.
+    pub fn egress_link_faulted(&self, src: u32, dst: u32, alive: &dyn Fn(u32) -> bool) -> u32 {
+        let node = self.accel_node(src);
+        let local = self.accel_local(src);
+        match self.fabric {
+            FabricKind::SwitchStar | FabricKind::HostTree => self.accel_up(node, local),
+            FabricKind::Mesh => {
+                let target = if self.accel_node(dst) == node {
+                    self.accel_local(dst)
+                } else {
+                    let nic = self.egress_nic_faulted(node, src, dst, alive);
+                    let host = self.nic_host(nic);
+                    if host == local {
+                        return self.sw_to_nic(node, nic);
+                    }
+                    host
+                };
+                let direct = self.mesh_lane(node, local, target);
+                if alive(direct) {
+                    return direct;
+                }
+                (0..self.accels_per_node)
+                    .filter(|&p| p != local && p != target)
+                    .find(|&p| {
+                        alive(self.mesh_lane(node, local, p))
+                            && alive(self.mesh_lane(node, p, target))
+                    })
+                    .map(|p| self.mesh_lane(node, local, p))
+                    .unwrap_or(direct)
+            }
+            FabricKind::Ring => {
+                if self.accel_node(dst) != node {
+                    let nic = self.egress_nic_faulted(node, src, dst, alive);
+                    if self.nic_host(nic) == local {
+                        return self.sw_to_nic(node, nic);
+                    }
+                }
+                self.ring_hop(node, local)
+            }
+        }
+    }
+
+    /// [`Topology::next_hop`] for a degraded network: identical to the
+    /// healthy route whenever that route's links are alive (so it can
+    /// replace `next_hop` wholesale once any link has died), otherwise
+    /// steering around dead links at every choice point — D-mod-K salt
+    /// over spines / aggs / cores, one-intermediate Valiant detours over
+    /// dragonfly globals, NIC rail failover, mesh pivot lanes. When no
+    /// alternative survives it returns the dead primary: the unit drops
+    /// there (counted, waiters woken) instead of wedging the engine.
+    ///
+    /// `alive` is the world's per-link fault mask. Kept separate from
+    /// `next_hop` so the fault-free hot path keeps its branch-free
+    /// table lookups.
+    pub fn next_hop_faulted(
+        &self,
+        kind: Kind,
+        src: u32,
+        dst_accel: u32,
+        alive: &dyn Fn(u32) -> bool,
+    ) -> Option<u32> {
+        let dst_node = self.accel_node(dst_accel);
+        let dst_local = self.accel_local(dst_accel);
+        match kind {
+            Kind::AccelUp { node, .. } => match self.fabric {
+                FabricKind::HostTree => Some(self.host_up(node)),
+                _ => {
+                    if dst_node == node {
+                        Some(self.accel_down(node, dst_local))
+                    } else {
+                        let nic = self.egress_nic_faulted(node, src, dst_accel, alive);
+                        Some(self.sw_to_nic(node, nic))
+                    }
+                }
+            },
+            Kind::HostUp { node } => {
+                if dst_node == node {
+                    Some(self.host_down(node))
+                } else {
+                    let nic = self.egress_nic_faulted(node, src, dst_accel, alive);
+                    Some(self.sw_to_nic(node, nic))
+                }
+            }
+            Kind::HostDown { node } => Some(self.accel_down(node, dst_local)),
+            Kind::MeshLane { node, to, .. } => {
+                if dst_node == node {
+                    if to == dst_local {
+                        None
+                    } else {
+                        // Pivot detour: a dead direct lane routed the
+                        // unit through accel `to`; finish on the
+                        // pivot -> destination lane.
+                        Some(self.mesh_lane(node, to, dst_local))
+                    }
+                } else {
+                    let nic = self.egress_nic_faulted(node, src, dst_accel, alive);
+                    let host = self.nic_host(nic);
+                    if host == to {
+                        Some(self.sw_to_nic(node, nic))
+                    } else {
+                        Some(self.mesh_lane(node, to, host))
+                    }
+                }
+            }
+            Kind::RingHop { node, from } => {
+                let at = (from + 1) % self.accels_per_node;
+                if dst_node == node {
+                    if at == dst_local {
+                        None
+                    } else {
+                        Some(self.ring_hop(node, at))
+                    }
+                } else {
+                    let nic = self.egress_nic_faulted(node, src, dst_accel, alive);
+                    if at == self.nic_host(nic) {
+                        Some(self.sw_to_nic(node, nic))
+                    } else {
+                        Some(self.ring_hop(node, at))
+                    }
+                }
+            }
+            Kind::SwToNic { node, nic } => Some(self.nic_up(node, nic)),
+            Kind::NicUp { node, .. } => {
+                let src_leaf = self.node_leaf(node);
+                let dst_leaf = self.node_leaf(dst_node);
+                if src_leaf == dst_leaf {
+                    let nic = self.ingress_nic_faulted(src, dst_accel, alive);
+                    return Some(self.nic_down(dst_node, nic));
+                }
+                match self.inter_kind {
+                    InterKind::LeafSpine => {
+                        let s0 = self.dmodk_spine(dst_node);
+                        let pick = (0..self.spines)
+                            .map(|salt| (s0 + salt) % self.spines)
+                            .find(|&s| {
+                                alive(self.leaf_up(src_leaf, s))
+                                    && alive(self.spine_down(s, dst_leaf))
+                            })
+                            .unwrap_or(s0);
+                        Some(self.leaf_up(src_leaf, pick))
+                    }
+                    InterKind::FatTree3 { .. } => {
+                        let (spod, dpod) = (self.leaf_pod(src_leaf), self.leaf_pod(dst_leaf));
+                        if spod == dpod {
+                            let a0 = self.dmodk_spine(dst_node);
+                            let pick = (0..self.spines)
+                                .map(|salt| (a0 + salt) % self.spines)
+                                .find(|&a| {
+                                    alive(self.agg_up(src_leaf, a))
+                                        && alive(self.agg_down(spod, a, dst_leaf))
+                                })
+                                .unwrap_or(a0);
+                            Some(self.agg_up(src_leaf, pick))
+                        } else {
+                            let c0 = self.dmodk_core(dst_node);
+                            let pick = (0..self.cores)
+                                .map(|salt| (c0 + salt) % self.cores)
+                                .find(|&c| {
+                                    alive(self.agg_up(src_leaf, c % self.spines))
+                                        && alive(self.core_up(spod, c))
+                                        && alive(self.core_down(c, dpod))
+                                        && alive(self.agg_down(dpod, c % self.spines, dst_leaf))
+                                })
+                                .unwrap_or(c0);
+                            Some(self.agg_up(src_leaf, pick % self.spines))
+                        }
+                    }
+                    InterKind::Dragonfly { .. } => {
+                        let (sg, dg) = (self.leaf_group(src_leaf), self.leaf_group(dst_leaf));
+                        let sr = self.leaf_router(src_leaf);
+                        if sg == dg {
+                            // Minimal routing has no in-group
+                            // alternative: a dead local hop between two
+                            // routers partitions their node pairs.
+                            Some(self.df_local(sg, sr, self.leaf_router(dst_leaf)))
+                        } else {
+                            let via = self.df_via_group(sr, sg, dg, alive);
+                            let out = self.df_out_router(sg, via);
+                            if sr == out {
+                                Some(self.df_global(sg, via))
+                            } else {
+                                Some(self.df_local(sg, sr, out))
+                            }
+                        }
+                    }
+                }
+            }
+            Kind::LeafUp { spine, .. } => Some(self.spine_down(spine, self.node_leaf(dst_node))),
+            Kind::SpineDown { .. } => {
+                let nic = self.ingress_nic_faulted(src, dst_accel, alive);
+                Some(self.nic_down(dst_node, nic))
+            }
+            Kind::AggUp { leaf, agg } => {
+                let pod = self.leaf_pod(leaf);
+                let dst_leaf = self.node_leaf(dst_node);
+                let dpod = self.leaf_pod(dst_leaf);
+                if dpod == pod {
+                    Some(self.agg_down(pod, agg, dst_leaf))
+                } else {
+                    // Only cores attached to this agg (core % spines ==
+                    // agg) are reachable; salt over that congruence
+                    // class, starting from the D-mod-K pick when it
+                    // lands here.
+                    let c0 = self.dmodk_core(dst_node);
+                    let start = if c0 % self.spines == agg { c0 } else { agg };
+                    let n = self.cores / self.spines;
+                    let pick = (0..n)
+                        .map(|k| (start + k * self.spines) % self.cores)
+                        .find(|&c| alive(self.core_up(pod, c)) && alive(self.core_down(c, dpod)))
+                        .unwrap_or(start);
+                    Some(self.core_up(pod, pick))
+                }
+            }
+            Kind::CoreUp { core, .. } => {
+                Some(self.core_down(core, self.leaf_pod(self.node_leaf(dst_node))))
+            }
+            Kind::CoreDown { core, pod } => {
+                Some(self.agg_down(pod, core % self.spines, self.node_leaf(dst_node)))
+            }
+            Kind::AggDown { .. } => {
+                let nic = self.ingress_nic_faulted(src, dst_accel, alive);
+                Some(self.nic_down(dst_node, nic))
+            }
+            Kind::DfLocal { group, to, .. } => {
+                let dst_leaf = self.node_leaf(dst_node);
+                let dg = self.leaf_group(dst_leaf);
+                if dg == group {
+                    let nic = self.ingress_nic_faulted(src, dst_accel, alive);
+                    Some(self.nic_down(dst_node, nic))
+                } else {
+                    // At router `to`, pick an exit group whose global
+                    // trunk leaves from here and still reaches `dg` —
+                    // the direct trunk first, then alive detours. No
+                    // further local hops from this arm, so detoured
+                    // units cannot loop inside a group.
+                    let direct = self.df_global(group, dg);
+                    if self.df_out_router(group, dg) == to && alive(direct) {
+                        return Some(direct);
+                    }
+                    for salt in 1..self.groups {
+                        let via = (dg + salt) % self.groups;
+                        if via == group || via == dg {
+                            continue;
+                        }
+                        if self.df_out_router(group, via) == to
+                            && alive(self.df_global(group, via))
+                            && alive(self.df_global(via, dg))
+                        {
+                            return Some(self.df_global(group, via));
+                        }
+                    }
+                    Some(direct)
+                }
+            }
+            Kind::DfGlobal { from, to } => {
+                let dst_leaf = self.node_leaf(dst_node);
+                let dg = self.leaf_group(dst_leaf);
+                let landing = self.df_in_router(from, to);
+                if to == dg {
+                    let dr = self.leaf_router(dst_leaf);
+                    if landing == dr {
+                        let nic = self.ingress_nic_faulted(src, dst_accel, alive);
+                        Some(self.nic_down(dst_node, nic))
+                    } else {
+                        Some(self.df_local(to, landing, dr))
+                    }
+                } else {
+                    // Valiant leg: the unit detoured into group `to`;
+                    // forward along the trunk toward the real
+                    // destination group.
+                    let out = self.df_out_router(to, dg);
+                    if landing == out {
+                        Some(self.df_global(to, dg))
+                    } else {
+                        Some(self.df_local(to, landing, out))
+                    }
+                }
+            }
+            Kind::NicDown { node, nic } => Some(self.nic_to_sw(node, nic)),
+            Kind::NicToSw { node, nic } => match self.fabric {
+                FabricKind::SwitchStar => Some(self.accel_down(node, dst_local)),
+                FabricKind::HostTree => Some(self.host_down(node)),
+                FabricKind::Mesh => {
+                    let host = self.nic_host(nic);
+                    if host == dst_local {
+                        None
+                    } else {
+                        Some(self.mesh_lane(node, host, dst_local))
+                    }
+                }
+                FabricKind::Ring => {
+                    let host = self.nic_host(nic);
+                    if host == dst_local {
+                        None
+                    } else {
+                        Some(self.ring_hop(node, host))
+                    }
+                }
+            },
+            Kind::AccelDown { .. } => None,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -1163,6 +1689,229 @@ mod tests {
         let hop = t.next_hop(t.kind_of(t.nic_up(0, 0)), 0, dst).unwrap();
         assert_eq!(hop, t.df_local(0, 0, 1));
         assert_eq!(t.next_hop(t.kind_of(hop), 0, dst), Some(t.nic_down(7, 0)));
+    }
+
+    /// Walk src -> dst with the faulted router, returning the link path.
+    fn walk_faulted(t: &Topology, src: u32, dst: u32, alive: &dyn Fn(u32) -> bool) -> Vec<u32> {
+        let mut link = t.egress_link_faulted(src, dst, alive);
+        let mut path = vec![link];
+        while let Some(n) = t.next_hop_faulted(t.kind_of(link), src, dst, alive) {
+            path.push(n);
+            link = n;
+            assert!(path.len() < 64, "routing loop: {path:?}");
+        }
+        path
+    }
+
+    /// Walk src -> dst healthily, asserting the faulted router with an
+    /// all-alive mask reproduces every hop (the wholesale-replacement
+    /// guarantee: routing only changes once a link actually dies).
+    fn assert_faulted_matches_healthy(t: &Topology, src: u32, dst: u32) {
+        let all_alive = |_l: u32| true;
+        let mut link = t.egress_link(src, dst);
+        assert_eq!(link, t.egress_link_faulted(src, dst, &all_alive), "{src}->{dst}");
+        loop {
+            let k = t.kind_of(link);
+            let healthy = t.next_hop(k, src, dst);
+            assert_eq!(
+                healthy,
+                t.next_hop_faulted(k, src, dst, &all_alive),
+                "{k:?} {src}->{dst}"
+            );
+            match healthy {
+                Some(n) => link = n,
+                None => break,
+            }
+        }
+    }
+
+    #[test]
+    fn faulted_routing_matches_healthy_when_all_links_alive() {
+        let pairs = [(0u32, 3u32), (0, 200), (9, 100), (17, 25), (60, 4), (0, 248)];
+        for kind in FabricKind::ALL {
+            for nics in [1usize, 2] {
+                let t = topo32_fabric(kind, nics);
+                for (src, dst) in pairs {
+                    if src != dst {
+                        assert_faulted_matches_healthy(&t, src, dst);
+                    }
+                }
+            }
+        }
+        for inter in [
+            crate::config::InterKind::FatTree3 { pods: 4, cores: 8 },
+            crate::config::InterKind::Dragonfly { groups: 4 },
+        ] {
+            let t = topo32_inter(inter);
+            for (src, dst) in pairs {
+                if src != dst {
+                    assert_faulted_matches_healthy(&t, src, dst);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn leaf_spine_resteers_around_dead_trunk() {
+        let t = topo32();
+        // node 0 -> node 31: D-mod-K picks spine 3. Kill leaf 0's trunk
+        // to spine 3; the route must salt to spine 0 and still deliver.
+        let dead = t.leaf_up(0, 3);
+        let alive = |l: u32| l != dead;
+        let path = walk_faulted(&t, 0, 248, &alive);
+        assert!(!path.contains(&dead), "{path:?}");
+        assert!(path.contains(&t.leaf_up(0, 0)), "{path:?}");
+        assert!(path.contains(&t.spine_down(0, 7)), "{path:?}");
+        assert_eq!(*path.last().unwrap(), t.accel_down(31, 0));
+        // A dead down-trunk re-steers too (probed from the up choice).
+        let dead = t.spine_down(3, 7);
+        let alive = |l: u32| l != dead;
+        let path = walk_faulted(&t, 0, 248, &alive);
+        assert!(!path.contains(&dead), "{path:?}");
+        assert_eq!(*path.last().unwrap(), t.accel_down(31, 0));
+    }
+
+    #[test]
+    fn fat_tree_resteers_around_dead_core() {
+        let t = topo32_inter(crate::config::InterKind::FatTree3 { pods: 4, cores: 8 });
+        // node 0 (pod 0) -> node 31 (pod 3): core 7 via agg 3. Kill the
+        // pod-0 up-link to core 7; salt lands on core 0 via agg 0.
+        let dead = t.core_up(0, 7);
+        let alive = |l: u32| l != dead;
+        let path = walk_faulted(&t, 0, 248, &alive);
+        assert!(!path.contains(&dead), "{path:?}");
+        assert!(path.contains(&t.core_up(0, 0)), "{path:?}");
+        assert_eq!(*path.last().unwrap(), t.accel_down(31, 0));
+        // Killing the agg up-link steers within the congruence class at
+        // the AggUp arm's choice point.
+        let dead = t.agg_up(0, 3);
+        let alive = |l: u32| l != dead;
+        let path = walk_faulted(&t, 0, 248, &alive);
+        assert!(!path.contains(&dead), "{path:?}");
+        assert_eq!(*path.last().unwrap(), t.accel_down(31, 0));
+    }
+
+    #[test]
+    fn dragonfly_detours_dead_global_through_intermediate_group() {
+        let t = topo32_inter(crate::config::InterKind::Dragonfly { groups: 4 });
+        // node 0 (group 0) -> node 31 (group 3): the direct g0->g3 trunk
+        // dies, so the route must take g0 -> via -> g3.
+        let dead = t.df_global(0, 3);
+        let alive = |l: u32| l != dead;
+        let path = walk_faulted(&t, 0, 248, &alive);
+        assert!(!path.contains(&dead), "{path:?}");
+        let globals: Vec<_> = path
+            .iter()
+            .filter(|&&l| matches!(t.kind_of(l), Kind::DfGlobal { .. }))
+            .collect();
+        assert_eq!(globals.len(), 2, "one-intermediate detour: {path:?}");
+        assert_eq!(*path.last().unwrap(), t.accel_down(31, 0));
+    }
+
+    #[test]
+    fn multi_nic_fails_over_to_surviving_rail() {
+        let t = topo32_fabric(FabricKind::SwitchStar, 2);
+        // local rank 0 egresses NIC 0; kill its up-link and the route
+        // must take rail 1 end to end.
+        let dead = t.nic_up(0, 0);
+        let alive = |l: u32| l != dead;
+        let path = walk_faulted(&t, 0, 248, &alive);
+        assert!(!path.contains(&dead), "{path:?}");
+        assert!(path.contains(&t.nic_up(0, 1)), "{path:?}");
+        assert_eq!(*path.last().unwrap(), t.accel_down(31, 0));
+        // Ingress rail death fails over on the destination side.
+        let dead = t.nic_down(31, 0);
+        let alive = |l: u32| l != dead;
+        let path = walk_faulted(&t, 0, 248, &alive);
+        assert!(!path.contains(&dead), "{path:?}");
+        assert!(path.contains(&t.nic_down(31, 1)), "{path:?}");
+    }
+
+    #[test]
+    fn mesh_pivots_around_dead_lane() {
+        let t = topo32_fabric(FabricKind::Mesh, 1);
+        let dead = t.mesh_lane(0, 0, 3);
+        let alive = |l: u32| l != dead;
+        let path = walk_faulted(&t, 0, 3, &alive);
+        assert_eq!(path.len(), 2, "two-lane pivot: {path:?}");
+        assert!(!path.contains(&dead), "{path:?}");
+        assert!(t.delivers(t.kind_of(*path.last().unwrap()), 3));
+    }
+
+    #[test]
+    fn dead_primary_with_no_alternative_is_returned_as_drop_point() {
+        let t = topo32();
+        // Kill every spine trunk out of leaf 0: the router returns the
+        // primary dead trunk so the world can drop the unit there.
+        let alive = |l: u32| {
+            !(l >= t.leaf_up(0, 0) && l <= t.leaf_up(0, 3))
+        };
+        let hop = t
+            .next_hop_faulted(t.kind_of(t.nic_up(0, 0)), 0, 248, &alive)
+            .unwrap();
+        assert_eq!(hop, t.leaf_up(0, t.dmodk_spine(31)));
+    }
+
+    #[test]
+    fn resolve_sel_maps_and_rejects_by_topology() {
+        use crate::config::LinkSel;
+        let t = topo32();
+        assert_eq!(t.resolve_sel(&LinkSel::Id { link: 7 }).unwrap(), 7);
+        assert_eq!(
+            t.resolve_sel(&LinkSel::LeafUp { leaf: 2, spine: 1 }).unwrap(),
+            t.leaf_up(2, 1)
+        );
+        assert_eq!(
+            t.resolve_sel(&LinkSel::SpineDown { spine: 3, leaf: 0 }).unwrap(),
+            t.spine_down(3, 0)
+        );
+        assert_eq!(
+            t.resolve_sel(&LinkSel::NicUp { node: 5, nic: 0 }).unwrap(),
+            t.nic_up(5, 0)
+        );
+        assert_eq!(
+            t.resolve_sel(&LinkSel::NicDownLink { node: 5, nic: 0 }).unwrap(),
+            t.nic_down(5, 0)
+        );
+        // Wrong inter kind / fabric is a structured error, not an alias.
+        let err = t.resolve_sel(&LinkSel::AggUp { leaf: 0, agg: 0 }).unwrap_err();
+        assert!(format!("{err:#}").contains("fat_tree3"), "{err:#}");
+        let err = t.resolve_sel(&LinkSel::MeshLane { node: 0, from: 0, to: 1 }).unwrap_err();
+        assert!(format!("{err:#}").contains("mesh fabric"), "{err:#}");
+        let err = t.resolve_sel(&LinkSel::LeafUp { leaf: 99, spine: 0 }).unwrap_err();
+        assert!(format!("{err:#}").contains("outside"), "{err:#}");
+        let err = t.resolve_sel(&LinkSel::Id { link: 100_000 }).unwrap_err();
+        assert!(format!("{err:#}").contains("dense link ids"), "{err:#}");
+
+        let ft = topo32_inter(crate::config::InterKind::FatTree3 { pods: 4, cores: 8 });
+        assert_eq!(
+            ft.resolve_sel(&LinkSel::AggUp { leaf: 1, agg: 2 }).unwrap(),
+            ft.agg_up(1, 2)
+        );
+        assert_eq!(
+            ft.resolve_sel(&LinkSel::CoreUp { pod: 3, core: 5 }).unwrap(),
+            ft.core_up(3, 5)
+        );
+        let df = topo32_inter(crate::config::InterKind::Dragonfly { groups: 4 });
+        assert_eq!(
+            df.resolve_sel(&LinkSel::DfGlobal { group: 1, to_group: 3 }).unwrap(),
+            df.df_global(1, 3)
+        );
+        let ring = topo32_fabric(FabricKind::Ring, 1);
+        assert_eq!(
+            ring.resolve_sel(&LinkSel::RingHop { node: 2, from: 4 }).unwrap(),
+            ring.ring_hop(2, 4)
+        );
+        let mesh = topo32_fabric(FabricKind::Mesh, 1);
+        assert_eq!(
+            mesh.resolve_sel(&LinkSel::MeshLane { node: 1, from: 0, to: 5 }).unwrap(),
+            mesh.mesh_lane(1, 0, 5)
+        );
+        // NicDown faults resolve to the rail's full link set.
+        assert_eq!(
+            t.nic_links(3, 0),
+            [t.sw_to_nic(3, 0), t.nic_to_sw(3, 0), t.nic_up(3, 0), t.nic_down(3, 0)]
+        );
     }
 
     #[test]

@@ -99,7 +99,7 @@ use std::collections::VecDeque;
 use std::sync::Arc;
 
 use crate::analytic::{CollParams, PcieParams};
-use crate::config::{Arrival, FabricKind, SimConfig};
+use crate::config::{Arrival, FabricKind, FaultAction, LimitsConfig, SimConfig};
 pub use crate::config::{CollOp, CollScope, CollectiveSpec, Workload};
 use crate::metrics::{Collector, HistSummary, Histogram, Telemetry};
 pub use crate::metrics::{Class, LinkStat, TrafficClass};
@@ -238,9 +238,152 @@ struct Msg {
     /// [`TrafficClass`]). Carried even with telemetry off — it is one
     /// byte in a struct the hot path already copies.
     class: TrafficClass,
+    /// At least one of this message's units was dropped at a dead link
+    /// (fault injection): the message can never complete, so when its
+    /// last unit retires — delivered or dropped — it is removed without
+    /// any completion feedback (metrics, collective advance, bench
+    /// re-injection).
+    failed: bool,
     src: u32,
     dst: u32,
 }
+
+/// One fault-plan entry resolved against the topology: the dense link
+/// ids it hits and the rate factor it sets (0.0 = down, (0,1) =
+/// degraded, 1.0 = recovered).
+struct ResolvedFault {
+    at: Time,
+    /// Dense link ids the event applies to (four for a NIC-down: both
+    /// intra-side legs plus the inter up/down pair).
+    links: Vec<u32>,
+    factor: f64,
+}
+
+/// Run-phase fault-injection state (`SimConfig::faults`). `None` on the
+/// [`World`] when the plan is empty, so fault-free runs keep the exact
+/// pre-fault hot path — one pointer test per hook site
+/// (`tests/props_faults.rs` holds bit-identical reports).
+struct FaultState {
+    /// Resolved plan, time-sorted (stable sort: same-time events keep
+    /// config order).
+    timeline: Vec<ResolvedFault>,
+    /// Next unapplied timeline entry.
+    next: usize,
+    /// Per-link rate factor: 1.0 healthy, (0,1) degraded, 0.0 dead.
+    speed: Vec<f64>,
+    /// Links currently dead (`speed == 0.0`).
+    dead_links: usize,
+    /// Sticky once any link dies, surviving recovery: units that
+    /// detoured around a dead link may still be mid-path afterwards
+    /// (dragonfly Valiant legs, mesh pivots), and plain
+    /// [`Topology::next_hop`] assumes healthy single-path state. With
+    /// every link alive the faulted router returns exactly the healthy
+    /// hop, so staying on it is only a (cold-path) cost, never a
+    /// behaviour change.
+    routing_dirty: bool,
+    /// Units dropped at dead links (whole-queue drops at fault time
+    /// plus later arrivals into a still-dead link).
+    dropped_units: u64,
+    /// Messages that lost at least one unit.
+    dropped_msgs: u64,
+}
+
+impl FaultState {
+    /// Resolve a validated plan against the topology: selectors become
+    /// dense link-id lists, events sort by time. Returns `None` for an
+    /// empty plan (the world carries no fault state at all).
+    /// Topology-dependent selector errors (e.g. a `leaf_up` selector on
+    /// a dragonfly) surface here — `SimConfig::validate` cannot see the
+    /// topology.
+    fn resolve(cfg: &SimConfig, topo: &Topology) -> anyhow::Result<Option<Box<FaultState>>> {
+        if cfg.faults.is_empty() {
+            return Ok(None);
+        }
+        let mut timeline = Vec::with_capacity(cfg.faults.events.len());
+        for (i, ev) in cfg.faults.events.iter().enumerate() {
+            let links = match &ev.action {
+                FaultAction::NicDown { node, nic } => {
+                    topo.nic_links(*node as u32, *nic as u32).to_vec()
+                }
+                _ => {
+                    let sel = ev.sel.as_ref().expect("validate() requires sel on link actions");
+                    vec![topo.resolve_sel(sel).map_err(|e| anyhow::anyhow!("faults[{i}]: {e}"))?]
+                }
+            };
+            let factor = match ev.action {
+                FaultAction::LinkDown | FaultAction::NicDown { .. } => 0.0,
+                FaultAction::LinkDegrade { factor } => factor,
+                FaultAction::Recover => 1.0,
+            };
+            timeline.push(ResolvedFault { at: Time::from_us(ev.at_us), links, factor });
+        }
+        timeline.sort_by_key(|f| f.at);
+        Ok(Some(Box::new(FaultState {
+            timeline,
+            next: 0,
+            speed: vec![1.0; topo.total_links() as usize],
+            dead_links: 0,
+            routing_dirty: false,
+            dropped_units: 0,
+            dropped_msgs: 0,
+        })))
+    }
+}
+
+/// Structured failure modes of a run ([`Sim::try_run`]). Boxed into the
+/// `anyhow` chain so callers (the sweep coordinator, the CLI) can
+/// downcast and report per-point instead of string-matching.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SimError {
+    /// Fault injection severed every route for in-flight traffic: the
+    /// run drained its event queue with work outstanding *after* links
+    /// died or units were dropped, so the stall is a network partition,
+    /// not a configuration bug.
+    Partitioned {
+        /// Units dropped at dead links over the run.
+        dropped_units: u64,
+        /// Links still dead when the run stalled.
+        dead_links: usize,
+        /// Units parked in queues at the stall.
+        parked_units: usize,
+        /// Messages injected but never completed.
+        inflight_msgs: usize,
+    },
+    /// The `SimConfig::limits` watchdog tripped: the point dispatched
+    /// more events or burned more wall-clock than its budget allows.
+    LimitExceeded {
+        /// Events dispatched when the budget ran out.
+        events: u64,
+        /// Wall-clock spent (ms).
+        wall_ms: f64,
+    },
+}
+
+impl std::fmt::Display for SimError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SimError::Partitioned { dropped_units, dead_links, parked_units, inflight_msgs } => {
+                write!(
+                    f,
+                    "network partitioned by fault injection: {dropped_units} units dropped \
+                     at dead links ({dead_links} links down, {parked_units} units parked, \
+                     {inflight_msgs} messages can never complete) — the fault plan severed \
+                     every route for in-flight traffic"
+                )
+            }
+            SimError::LimitExceeded { events, wall_ms } => {
+                write!(
+                    f,
+                    "simulation watchdog tripped after {events} events / {wall_ms:.0} ms \
+                     without completing (SimConfig::limits) — the point is livelocked or \
+                     its event/wall-time budget is too small"
+                )
+            }
+        }
+    }
+}
+
+impl std::error::Error for SimError {}
 
 /// Who injected a message — determines its [`TrafficClass`] together
 /// with the intra/inter split resolved inside [`World::inject`].
@@ -328,6 +471,9 @@ pub struct World {
     /// sequence and every pre-existing report field are bit-identical
     /// with it on or off (`tests/props_telemetry.rs`).
     telemetry: Option<Box<Telemetry>>,
+    /// Fault-injection state (`SimConfig::faults`; `None` when the plan
+    /// is empty, costing the hot path one pointer test per hook).
+    faults: Option<Box<FaultState>>,
     /// Reusable per-message tally for train construction (mid, count).
     tally_scratch: Vec<(u32, u32)>,
     /// Pool of waiter vectors so nested wake cascades (train settles
@@ -535,6 +681,7 @@ impl WorldBlueprint {
     /// because the world keeps an `Arc` handle to its blueprint.)
     pub fn instantiate(bp: &Arc<WorldBlueprint>, cfg: SimConfig) -> anyhow::Result<World> {
         bp.check_point(&cfg)?;
+        let faults = FaultState::resolve(&cfg, &bp.topo)?;
         let bench = bp.bench_for(&cfg);
         let coll = bp.sched.as_ref().map(|sched| {
             let Workload::Collective(spec) = bench else {
@@ -579,6 +726,7 @@ impl WorldBlueprint {
             } else {
                 None
             },
+            faults,
             tally_scratch: Vec::new(),
             wake_pool: Vec::new(),
             topo: bp.topo.clone(),
@@ -705,6 +853,11 @@ impl World {
     pub fn reset(&mut self, cfg: SimConfig) -> anyhow::Result<()> {
         let bp = self.blueprint.clone();
         bp.check_point(&cfg)?;
+        // Resolved before any state is touched, like the point check: a
+        // bad selector leaves the world exactly as it was. Faults are a
+        // run-phase knob — points sharing a blueprint may add, change
+        // or drop a plan between resets.
+        let faults = FaultState::resolve(&cfg, &self.topo)?;
         let bench = bp.bench_for(&cfg);
         for (i, link) in self.links.iter_mut().enumerate() {
             let (model, cap_b, per_unit, prop) = link_params(&cfg, bp.kinds[i]);
@@ -746,6 +899,7 @@ impl World {
         } else {
             self.telemetry = None;
         }
+        self.faults = faults;
         for memo in &mut self.pcie_memo {
             *memo = (u32::MAX, Time::ZERO);
         }
@@ -967,6 +1121,19 @@ impl World {
             && !self.msgs.get(unit.msg).inter
             && matches!(kind, Kind::AccelUp { .. } | Kind::AccelDown { .. });
         let base = if bounce { Time::from_ps(base.as_ps() * 2) } else { base };
+        // A degraded link serializes at `speed` × its healthy rate:
+        // stretch the wire time. Only serializations *starting* after
+        // the fault see the new rate — in-flight units and coalesced
+        // trains keep their recorded times, like a real link draining
+        // at its old speed. (Dead links never reach here; try_start
+        // drops their queues.)
+        let base = match &self.faults {
+            Some(f) if f.speed[li] < 1.0 => {
+                debug_assert!(f.speed[li] > 0.0, "dead links never serialize");
+                Time::from_ps((base.as_ps() as f64 / f.speed[li]).round() as u64)
+            }
+            _ => base,
+        };
         // Per-message processing overhead (WQE/doorbell/DMA setup) is paid
         // once per message, on its first transaction, and pipelines with
         // wire serialization (the engine processes the next WQE while the
@@ -1000,6 +1167,32 @@ impl World {
         self.txn_payload
     }
 
+    /// Next hop for a unit of (src, dst) sitting on a link of `kind`,
+    /// detouring around dead links once any fault has fired (sticky —
+    /// see `FaultState::routing_dirty`). The fault-free path is the
+    /// plain [`Topology::next_hop`] call, untouched.
+    #[inline]
+    fn route_next_hop(&self, kind: Kind, src: u32, dst: u32) -> Option<u32> {
+        match &self.faults {
+            Some(f) if f.routing_dirty => {
+                self.topo.next_hop_faulted(kind, src, dst, &|l| f.speed[l as usize] > 0.0)
+            }
+            _ => self.topo.next_hop(kind, src, dst),
+        }
+    }
+
+    /// Fabric egress link for `accel` → `dst`, fault-aware like
+    /// [`World::route_next_hop`].
+    #[inline]
+    fn route_egress(&self, accel: u32, dst: u32) -> u32 {
+        match &self.faults {
+            Some(f) if f.routing_dirty => {
+                self.topo.egress_link_faulted(accel, dst, &|l| f.speed[l as usize] > 0.0)
+            }
+            _ => self.topo.egress_link(accel, dst),
+        }
+    }
+
     /// Inject a message (bench drivers / generators / collective sends).
     /// The message is classified here, once, from its origin and the
     /// intra/inter split; every transaction carries the class across
@@ -1023,7 +1216,17 @@ impl World {
             (Origin::Bench, _) => TrafficClass::Bench,
         };
         let coll = origin == Origin::Coll;
-        let m = Msg { gen_ps: now.as_ps(), size_b, remaining: 0, inter, coll, class, src, dst };
+        let m = Msg {
+            gen_ps: now.as_ps(),
+            size_b,
+            remaining: 0,
+            inter,
+            coll,
+            class,
+            failed: false,
+            src,
+            dst,
+        };
         let txns = self.txn_count(&m);
         let mid = self.msgs.insert(Msg { remaining: txns, ..m });
         let f = &mut self.feeders[src as usize];
@@ -1061,7 +1264,7 @@ impl World {
             let Some(&head) = self.feeders[accel as usize].backlog.front() else { return };
             let mut mid = head;
             let mut up = fixed_up
-                .unwrap_or_else(|| self.topo.egress_link(accel, self.msgs.get(mid).dst));
+                .unwrap_or_else(|| self.route_egress(accel, self.msgs.get(mid).dst));
             // Materialize due train units on the (fabric-routed) egress
             // link before the credit check, so it sees exactly the
             // scalar engine's occupancy. The settle cascade can feed
@@ -1071,7 +1274,7 @@ impl World {
                 self.settle(up, now, q);
                 let Some(&head) = self.feeders[accel as usize].backlog.front() else { return };
                 mid = head;
-                up = self.topo.egress_link(accel, self.msgs.get(mid).dst);
+                up = self.route_egress(accel, self.msgs.get(mid).dst);
             }
             let f = &self.feeders[accel as usize];
             let left = f.head_txns_left;
@@ -1139,6 +1342,15 @@ impl World {
     /// stepping one event per unit ([`World::start_delivery`]).
     fn try_start(&mut self, l: u32, now: Time, q: &mut EventQueue<Ev>) {
         let li = l as usize;
+        // A dead link serializes nothing: whatever reaches its queue is
+        // lost (routing detours around it when a live alternative
+        // exists; when none does, the dead link is the drop point).
+        if let Some(f) = &self.faults {
+            if f.speed[li] == 0.0 {
+                self.drop_dead_queue(l, now, q);
+                return;
+            }
+        }
         if self.links[li].busy {
             return;
         }
@@ -1148,7 +1360,7 @@ impl World {
             (u.src, u.dst)
         };
         let kind = self.blueprint.kinds[li];
-        match self.topo.next_hop(kind, src, dst) {
+        match self.route_next_hop(kind, src, dst) {
             Some(nl) => {
                 let ni = nl as usize;
                 // Materialize any due train units at the next queue before
@@ -1261,7 +1473,7 @@ impl World {
             // its next_hop was None.)
             if mixed_fabric && k > 0 {
                 let u = *self.units.get(uid);
-                if self.topo.next_hop(kind, u.src, u.dst).is_some() {
+                if self.route_next_hop(kind, u.src, u.dst).is_some() {
                     break;
                 }
             }
@@ -1345,6 +1557,151 @@ impl World {
                 self.settle(l, t, q);
             }
         }
+    }
+
+    /// Sim time of the next unapplied fault event, if any.
+    pub fn next_fault_at(&self) -> Option<Time> {
+        let f = self.faults.as_ref()?;
+        f.timeline.get(f.next).map(|e| e.at)
+    }
+
+    /// Apply every fault event due at or before `now`. The run driver
+    /// ([`Sim::try_run_mut`]) segments its `run_until` calls at fault
+    /// times, so faults land at exact sim instants without ever
+    /// occupying the event queue — a plan that never fires inside the
+    /// run window leaves the event sequence bit-identical to no plan at
+    /// all. Events scheduled at exactly a fault's time dispatch first
+    /// (the fault acts "just after t").
+    pub fn apply_due_faults(&mut self, now: Time, q: &mut EventQueue<Ev>) {
+        loop {
+            let Some(f) = self.faults.as_ref() else { return };
+            let Some(entry) = f.timeline.get(f.next) else { return };
+            if entry.at > now {
+                return;
+            }
+            let links = entry.links.clone();
+            let factor = entry.factor;
+            self.faults.as_mut().expect("checked above").next += 1;
+            for &l in &links {
+                self.apply_fault_to_link(l, factor, now, q);
+            }
+        }
+    }
+
+    /// Set link `l`'s rate factor, handling the kill and recover edges.
+    fn apply_fault_to_link(&mut self, l: u32, factor: f64, now: Time, q: &mut EventQueue<Ev>) {
+        let li = l as usize;
+        let f = self.faults.as_mut().expect("faults active");
+        let old = f.speed[li];
+        f.speed[li] = factor;
+        if factor == 0.0 && old != 0.0 {
+            f.dead_links += 1;
+            f.routing_dirty = true;
+            // Units whose recorded completion lies before the fault
+            // finished in time: materialize them, then kill the rest.
+            if !self.links[li].train_ends.is_empty() {
+                self.settle(l, now, q);
+            }
+            if self.links[li].busy {
+                // Cancel the in-flight serialization: its pending TxEnd
+                // goes stale via the next_fire authority check, and the
+                // space it reserved downstream is handed back.
+                self.links[li].busy = false;
+                self.links[li].train_active = false;
+                self.links[li].train_ends.clear();
+                self.links[li].next_fire = Time::MAX;
+                if let Some(&uid) = self.links[li].queue.front() {
+                    let next = self.units.get(uid).next;
+                    if next != u32::MAX && next != l {
+                        let wire = self.wire_bytes(
+                            self.blueprint.kinds[next as usize],
+                            self.units.get(uid).payload,
+                        );
+                        self.links[next as usize].release(wire);
+                        self.units.get_mut(uid).next = u32::MAX;
+                        self.wake_waiters(next, now, q);
+                    }
+                }
+            }
+            if let Some(t) = self.telemetry.as_mut() {
+                t.on_fault_down(l, now);
+            }
+            self.drop_dead_queue(l, now, q);
+        } else if old == 0.0 && factor > 0.0 {
+            let f = self.faults.as_mut().expect("faults active");
+            f.dead_links -= 1;
+            // The link comes back empty and idle (everything queued was
+            // dropped while it was dead); routing_dirty stays set so
+            // units still mid-detour keep the fault-aware router, which
+            // now routes through the recovered primary again.
+            if let Some(t) = self.telemetry.as_mut() {
+                t.on_fault_recover(l, now);
+            }
+        }
+        // A pure degrade (old > 0, 0 < factor < 1) needs no bookkeeping
+        // beyond the factor itself: only serializations starting after
+        // this instant see the stretched rate (World::ser_time).
+    }
+
+    /// Drop every unit queued on dead link `l`: count them, release
+    /// their queue bytes and retire their messages as failed. Waiters
+    /// parked on the link are woken — they re-resolve routing and
+    /// detour around the corpse.
+    fn drop_dead_queue(&mut self, l: u32, now: Time, q: &mut EventQueue<Ev>) {
+        let li = l as usize;
+        if self.links[li].queue.is_empty() {
+            return;
+        }
+        while let Some(uid) = self.links[li].queue.pop_front() {
+            let unit = *self.units.get(uid);
+            // Queued units hold no downstream reservation: `next` is
+            // either unset or the stale pointer at this very link from
+            // the hop that delivered it here (the one serialized unit
+            // that did reserve was cancelled in apply_fault_to_link).
+            debug_assert!(unit.next == u32::MAX || unit.next == l, "queued unit reserved ahead");
+            let wire = self.wire_bytes(self.blueprint.kinds[li], unit.payload);
+            self.links[li].release(wire);
+            self.drop_unit(uid, unit.msg);
+        }
+        self.wake_waiters(l, now, q);
+    }
+
+    /// Retire a dropped unit and fail its message. The message slot is
+    /// reclaimed when its last unit retires (delivered or dropped) —
+    /// with no completion feedback either way.
+    fn drop_unit(&mut self, uid: u32, mid: u32) {
+        self.units.remove(uid);
+        let f = self.faults.as_mut().expect("drops only happen with faults active");
+        f.dropped_units += 1;
+        let m = self.msgs.get_mut(mid);
+        if !m.failed {
+            m.failed = true;
+            f.dropped_msgs += 1;
+        }
+        m.remaining -= 1;
+        if m.remaining == 0 {
+            self.msgs.remove(mid);
+        }
+    }
+
+    /// Units dropped at dead links so far (0 without faults).
+    pub fn dropped_units(&self) -> u64 {
+        self.faults.as_ref().map_or(0, |f| f.dropped_units)
+    }
+
+    /// Messages that lost at least one unit (0 without faults).
+    pub fn dropped_msgs(&self) -> u64 {
+        self.faults.as_ref().map_or(0, |f| f.dropped_msgs)
+    }
+
+    /// True once any fault event has fired this run.
+    pub fn faults_fired(&self) -> bool {
+        self.faults.as_ref().map_or(false, |f| f.next > 0)
+    }
+
+    /// Links currently dead (0 without faults).
+    pub fn dead_links(&self) -> usize {
+        self.faults.as_ref().map_or(0, |f| f.dead_links)
     }
 
     /// Re-pace an in-flight train to fire at its next unit boundary
@@ -1467,6 +1824,15 @@ impl World {
             mm.remaining
         };
         if rem == 0 {
+            if m.failed {
+                // A message that lost a unit at a dead link never
+                // completes: retire the slab slot, but no completion
+                // metrics, collective advance or bench re-injection —
+                // the receiver is still waiting on bytes that were
+                // dropped.
+                self.msgs.remove(mid);
+                return;
+            }
             self.completed_msgs += 1;
             self.metrics.on_msg_complete(Time::from_ps(m.gen_ps), eff, class, m.size_b as u64);
             self.msgs.remove(mid);
@@ -1815,6 +2181,7 @@ impl World {
             events,
             wall_ms,
             table_misses: self.table_misses,
+            dropped_units: self.dropped_units(),
         }
     }
 
@@ -1982,6 +2349,8 @@ pub struct SimReport {
     pub wall_ms: f64,
     /// PCIe serialization-table misses.
     pub table_misses: u64,
+    /// Units dropped at dead links (always 0 without a fault plan).
+    pub dropped_units: u64,
     /// Collective workload results (empty/zero when no collective ran).
     pub coll_op: String,
     /// Per-rank collective buffer size (bytes).
@@ -2059,6 +2428,12 @@ impl ToJson for SimReport {
             .with("coll_iters", self.coll_iters)
             .with("coll_time", self.coll_time.to_json())
             .with("coll_pred_ns", self.coll_pred_ns);
+        // Fault-free runs keep the pre-fault JSON shape byte-for-byte.
+        let v = if self.dropped_units == 0 {
+            v
+        } else {
+            v.with("dropped_units", self.dropped_units)
+        };
         if self.link_stats.is_empty() {
             // Telemetry-off reports keep the pre-telemetry JSON shape
             // byte-for-byte.
@@ -2109,6 +2484,12 @@ impl FromJson for SimReport {
             events: v.u64_of("events")?,
             wall_ms: v.f64_of("wall_ms")?,
             table_misses: v.u64_of("table_misses")?,
+            // Optional so pre-fault result files (and fault-free runs)
+            // parse.
+            dropped_units: match v.get("dropped_units") {
+                Some(n) => n.as_u64()?,
+                None => 0,
+            },
             // Collective fields are optional so pre-workload result files
             // still parse.
             coll_op: match v.get("coll_op") {
@@ -2146,6 +2527,56 @@ impl FromJson for SimReport {
                 None => 0,
             },
         })
+    }
+}
+
+/// Event/wall-clock watchdog for one run (`SimConfig::limits`). Zero
+/// limits mean "unlimited" and keep the single-call engine fast path.
+struct RunBudget {
+    max_events: u64,
+    max_wall: Option<std::time::Duration>,
+    t0: std::time::Instant,
+    spent: u64,
+}
+
+impl RunBudget {
+    /// Events dispatched between wall-clock checks: large enough to
+    /// amortize the `Instant::now` call, small enough that a livelocked
+    /// point is caught within milliseconds of its deadline.
+    const CHUNK: u64 = 4096;
+
+    fn new(limits: &LimitsConfig, t0: std::time::Instant) -> RunBudget {
+        RunBudget {
+            max_events: if limits.max_events == 0 { u64::MAX } else { limits.max_events },
+            max_wall: (limits.max_wall_ms > 0.0)
+                .then(|| std::time::Duration::from_secs_f64(limits.max_wall_ms / 1e3)),
+            t0,
+            spent: 0,
+        }
+    }
+
+    fn unlimited(&self) -> bool {
+        self.max_events == u64::MAX && self.max_wall.is_none()
+    }
+
+    /// Event room for the next chunk; `Err` once the budget is gone.
+    fn chunk(&self) -> Result<u64, SimError> {
+        if self.spent >= self.max_events {
+            return Err(self.exceeded());
+        }
+        if let Some(w) = self.max_wall {
+            if self.t0.elapsed() >= w {
+                return Err(self.exceeded());
+            }
+        }
+        Ok((self.max_events - self.spent).min(Self::CHUNK))
+    }
+
+    fn exceeded(&self) -> SimError {
+        SimError::LimitExceeded {
+            events: self.spent,
+            wall_ms: self.t0.elapsed().as_secs_f64() * 1e3,
+        }
     }
 }
 
@@ -2236,19 +2667,20 @@ impl Sim {
         let t0 = std::time::Instant::now();
         let warmup = self.engine.model.warmup_time();
         let end = self.engine.model.end_time();
-        let s1 = self.engine.run_until(warmup);
+        let mut budget = RunBudget::new(&self.engine.model.cfg.limits, t0);
+        let e1 = self.run_phase(warmup, &mut budget)?;
         // Trains straddling a window boundary hold units whose recorded
         // completion times fall before it: materialize those first so the
         // wire snapshots observe exactly the scalar engine's state.
         self.engine.model.settle_trains(warmup, &mut self.engine.queue);
         self.engine.model.snapshot_wire();
-        let s2 = self.engine.run_until(end);
+        let e2 = self.run_phase(end, &mut budget)?;
         self.engine.model.settle_trains(end, &mut self.engine.queue);
         self.engine.model.snapshot_wire_end();
-        let s3 = if self.engine.model.collective_pending() {
-            self.engine.run_until(Time::MAX)
+        let e3 = if self.engine.model.collective_pending() {
+            self.run_phase(Time::MAX, &mut budget)?
         } else {
-            crate::sim::RunStats { events: 0, end_time: end }
+            0
         };
         // Stall checks. First: a detected wait-for cycle of parked links
         // is a permanent credit deadlock even while unrelated events
@@ -2273,6 +2705,18 @@ impl Sim {
         if self.engine.queue.is_empty()
             && (w.collective_pending() || w.units_in_flight() > 0 || w.msgs_in_flight() > 0)
         {
+            // With faults in play, a drained queue plus outstanding work
+            // is a partition, not a configuration bug: dead links (or
+            // units already dropped at them) severed the only route the
+            // stranded traffic had. Structured so callers can downcast.
+            if w.faults_fired() && (w.dropped_units() > 0 || w.dead_links() > 0) {
+                return Err(anyhow::Error::new(SimError::Partitioned {
+                    dropped_units: w.dropped_units(),
+                    dead_links: w.dead_links(),
+                    parked_units: w.units_in_flight(),
+                    inflight_msgs: w.msgs_in_flight(),
+                }));
+            }
             let iters_left = w.collective_iters_left();
             anyhow::bail!(
                 "simulation made no progress: {} units parked and {} messages \
@@ -2286,7 +2730,44 @@ impl Sim {
             );
         }
         let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
-        Ok(self.engine.model.report(s1.events + s2.events + s3.events, wall_ms))
+        Ok(self.engine.model.report(e1 + e2 + e3, wall_ms))
+    }
+
+    /// Run one window phase up to `until`, pausing at each scheduled
+    /// fault time to apply it ([`World::apply_due_faults`]) and — when
+    /// `SimConfig::limits` is set — between bounded event chunks to
+    /// check the watchdog. A fault-free, limit-free run takes the
+    /// single plain `run_until` call: the exact pre-fault engine path.
+    fn run_phase(&mut self, until: Time, budget: &mut RunBudget) -> anyhow::Result<u64> {
+        let mut events = 0u64;
+        loop {
+            // Segment at the next fault instant so faults land at exact
+            // sim times without ever occupying the event queue. A fault
+            // at the phase boundary itself belongs to the next phase
+            // (it must not land before the boundary snapshots).
+            let stop = match self.engine.model.next_fault_at() {
+                Some(t) if t < until => t,
+                _ => until,
+            };
+            if budget.unlimited() {
+                events += self.engine.run_until(stop).events;
+            } else {
+                loop {
+                    let room = budget.chunk().map_err(anyhow::Error::new)?;
+                    let (s, capped) = self.engine.run_until_capped(stop, room);
+                    budget.spent += s.events;
+                    events += s.events;
+                    if !capped {
+                        break;
+                    }
+                }
+            }
+            if stop == until {
+                return Ok(events);
+            }
+            let engine = &mut self.engine;
+            engine.model.apply_due_faults(stop, &mut engine.queue);
+        }
     }
 
     /// Access the world (tests).
@@ -2306,7 +2787,7 @@ impl Sim {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::{presets, Pattern};
+    use crate::config::{presets, FaultEvent, FaultPlan, LinkSel, Pattern};
 
     fn small_cfg(load: f64, pattern: Pattern) -> SimConfig {
         let mut cfg = presets::scaleout(32, 128.0, pattern, load);
@@ -2790,5 +3271,168 @@ mod tests {
         assert_eq!(back.coll_iters, 2);
         assert_eq!(back.coll_time.count, r.coll_time.count);
         assert!((back.coll_pred_ns - r.coll_pred_ns).abs() < 1e-9);
+    }
+
+    fn one_fault(at_us: f64, action: FaultAction, sel: Option<LinkSel>) -> FaultPlan {
+        FaultPlan { events: vec![FaultEvent { at_us, action, sel }] }
+    }
+
+    #[test]
+    fn link_down_blackholes_traffic_and_counts_drops() {
+        // Single-NIC star: killing node 0's only inter rail mid-measure
+        // blackholes its inter traffic (no surviving alternative), while
+        // everything else keeps flowing. Open-loop runs complete and
+        // report the loss instead of erroring.
+        let mut cfg = small_cfg(0.3, Pattern::C3);
+        cfg.telemetry.enabled = true;
+        cfg.faults =
+            one_fault(12.0, FaultAction::LinkDown, Some(LinkSel::NicUp { node: 0, nic: 0 }));
+        let r = Sim::new(cfg, &NativeProvider, BenchMode::None).unwrap().try_run().unwrap();
+        assert!(r.dropped_units > 0, "dead rail must drop units");
+        assert!(r.delivered_msgs > 0, "unaffected nodes must keep delivering");
+        // The report round-trips the drop count (omitted when zero).
+        let back = SimReport::from_json(&r.to_json()).unwrap();
+        assert_eq!(back.dropped_units, r.dropped_units);
+        // Telemetry attributes dead time to the faulted link.
+        assert!(
+            r.link_stats.iter().any(|s| s.fault_ps > 0),
+            "telemetry must record fault downtime on the dead link"
+        );
+    }
+
+    #[test]
+    fn multi_nic_failover_keeps_inter_traffic_flowing() {
+        use crate::config::FabricConfig;
+        // With two rails per node, killing one mid-run re-steers new
+        // inter traffic onto the survivor: the run completes and inter
+        // throughput stays nonzero after the fault.
+        let mut cfg = small_cfg(0.3, Pattern::Custom { frac_inter: 1.0 });
+        cfg = presets::with_fabric(cfg, FabricConfig::new(FabricKind::SwitchStar, 2));
+        cfg.faults =
+            one_fault(12.0, FaultAction::LinkDown, Some(LinkSel::NicUp { node: 0, nic: 0 }));
+        let r = Sim::new(cfg, &NativeProvider, BenchMode::None).unwrap().try_run().unwrap();
+        assert!(r.delivered_msgs > 0);
+        assert!(r.inter_tput_gbs > 0.0, "failover rail must carry the load");
+    }
+
+    #[test]
+    fn degrade_slows_but_drops_nothing_and_recovers() {
+        // Halving a trunk's rate mid-run then recovering it: no drops,
+        // the run completes, and a fault-free twin of the same point is
+        // at least as fast (degradation can only slow delivery).
+        let base = small_cfg(0.3, Pattern::C3);
+        let mut cfg = base.clone();
+        cfg.faults = FaultPlan {
+            events: vec![
+                FaultEvent {
+                    at_us: 11.0,
+                    action: FaultAction::LinkDegrade { factor: 0.5 },
+                    sel: Some(LinkSel::LeafUp { leaf: 0, spine: 0 }),
+                },
+                FaultEvent {
+                    at_us: 16.0,
+                    action: FaultAction::Recover,
+                    sel: Some(LinkSel::LeafUp { leaf: 0, spine: 0 }),
+                },
+            ],
+        };
+        let degraded = Sim::new(cfg, &NativeProvider, BenchMode::None).unwrap().try_run().unwrap();
+        assert_eq!(degraded.dropped_units, 0, "degrades never drop");
+        assert!(degraded.delivered_msgs > 0);
+        let healthy = Sim::new(base, &NativeProvider, BenchMode::None).unwrap().run();
+        assert!(
+            degraded.fct.mean_ns >= healthy.fct.mean_ns,
+            "degraded trunk cannot speed up inter flows: {} vs {}",
+            degraded.fct.mean_ns,
+            healthy.fct.mean_ns
+        );
+    }
+
+    #[test]
+    fn never_firing_plan_is_bit_identical_to_no_plan() {
+        // A plan whose only event lies far past the run window resolves
+        // fault state but never fires: the event sequence and report are
+        // bit-identical to a plan-free run (the full cross-fabric
+        // property lives in tests/props_faults.rs).
+        let base = small_cfg(0.4, Pattern::C2);
+        let mut cfg = base.clone();
+        cfg.faults =
+            one_fault(1e6, FaultAction::LinkDown, Some(LinkSel::NicUp { node: 3, nic: 0 }));
+        let with_plan = Sim::new(cfg, &NativeProvider, BenchMode::None).unwrap().run();
+        let without = Sim::new(base, &NativeProvider, BenchMode::None).unwrap().run();
+        assert_eq!(with_plan.events, without.events);
+        assert_eq!(with_plan.delivered_msgs, without.delivered_msgs);
+        assert_eq!(with_plan.intra_lat, without.intra_lat);
+        assert_eq!(with_plan.fct, without.fct);
+        assert_eq!(with_plan.dropped_units, 0);
+    }
+
+    #[test]
+    fn watchdog_caps_events_with_structured_error() {
+        let mut cfg = small_cfg(0.3, Pattern::C2);
+        cfg.limits.max_events = 500;
+        let err = Sim::new(cfg, &NativeProvider, BenchMode::None).unwrap().try_run().unwrap_err();
+        match err.downcast_ref::<SimError>() {
+            Some(SimError::LimitExceeded { events, .. }) => {
+                assert!(*events <= 500, "budget overshot: {events}")
+            }
+            other => panic!("expected LimitExceeded, got {other:?} ({err:#})"),
+        }
+    }
+
+    #[test]
+    fn severed_collective_escalates_to_partitioned() {
+        // A global collective needs every node's NIC; killing node 0's
+        // only rail before the run starts strands its sends — receivers
+        // block forever and the drain phase must diagnose a structured
+        // partition, not the generic no-progress message.
+        let mut cfg = coll_cfg(CollOp::RingAllReduce, CollScope::Global, 32 * 1024, 2);
+        cfg.faults =
+            one_fault(0.0, FaultAction::LinkDown, Some(LinkSel::NicUp { node: 0, nic: 0 }));
+        let err = Sim::new(cfg, &NativeProvider, BenchMode::None).unwrap().try_run().unwrap_err();
+        match err.downcast_ref::<SimError>() {
+            Some(SimError::Partitioned { dropped_units, dead_links, .. }) => {
+                assert!(*dropped_units > 0, "severed sends must be counted");
+                assert!(*dead_links > 0);
+            }
+            other => panic!("expected Partitioned, got {other:?} ({err:#})"),
+        }
+    }
+
+    #[test]
+    fn fault_plan_is_a_run_phase_delta() {
+        // Points sharing a blueprint may add or drop a fault plan (and
+        // limits) between resets; a reset world with an empty plan is
+        // bit-identical to a fresh fault-free build.
+        let base = small_cfg(0.3, Pattern::C3);
+        let bp = Arc::new(
+            WorldBlueprint::compile(base.clone(), &NativeProvider, BenchMode::None, &[]).unwrap(),
+        );
+        let mut faulty = base.clone();
+        faulty.faults =
+            one_fault(12.0, FaultAction::LinkDown, Some(LinkSel::NicUp { node: 0, nic: 0 }));
+        faulty.limits.max_wall_ms = 60_000.0;
+        let mut sim = Sim::from_blueprint(&bp, faulty).unwrap();
+        let r1 = sim.try_run_mut().unwrap();
+        assert!(r1.dropped_units > 0);
+        sim.reset(base.clone()).unwrap();
+        let r2 = sim.try_run_mut().unwrap();
+        let fresh = Sim::new(base, &NativeProvider, BenchMode::None).unwrap().run();
+        assert_eq!(r2.events, fresh.events);
+        assert_eq!(r2.delivered_msgs, fresh.delivered_msgs);
+        assert_eq!(r2.fct, fresh.fct);
+        assert_eq!(r2.dropped_units, 0);
+    }
+
+    #[test]
+    fn bad_selector_for_topology_is_rejected_at_build() {
+        // `validate()` cannot see the topology; selector/topology
+        // mismatches surface when the world resolves the plan.
+        let mut cfg = small_cfg(0.1, Pattern::C3);
+        cfg.faults =
+            one_fault(1.0, FaultAction::LinkDown, Some(LinkSel::AggUp { leaf: 0, agg: 0 }));
+        let err = Sim::new(cfg, &NativeProvider, BenchMode::None).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("fat_tree3"), "{msg}");
     }
 }

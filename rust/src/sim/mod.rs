@@ -84,6 +84,35 @@ impl<M: Model> Engine<M> {
     pub fn run(&mut self) -> RunStats {
         self.run_until(Time::MAX)
     }
+
+    /// [`Engine::run_until`] with an event-count cap: stops after
+    /// dispatching at most `max_events` events and reports whether the
+    /// cap was the reason it stopped. On a cap stop the clock is left at
+    /// the last dispatched event (not advanced to `until`), so a caller
+    /// may inspect state and resume. Dispatching events in bounded
+    /// chunks is the watchdog primitive: a livelocked model (events
+    /// forever, time frozen) cannot outrun a caller that re-checks
+    /// wall-clock between chunks.
+    pub fn run_until_capped(&mut self, until: Time, max_events: u64) -> (RunStats, bool) {
+        let mut events = 0u64;
+        while events < max_events {
+            match self.queue.pop_if(|t| t <= until) {
+                Some((t, ev)) => {
+                    debug_assert!(t >= self.now, "time went backwards");
+                    self.now = t;
+                    self.model.handle(t, ev, &mut self.queue);
+                    events += 1;
+                }
+                None => {
+                    if self.now < until && until < Time::MAX {
+                        self.now = until;
+                    }
+                    return (RunStats { events, end_time: self.now }, false);
+                }
+            }
+        }
+        (RunStats { events, end_time: self.now }, true)
+    }
 }
 
 #[cfg(test)]
@@ -134,6 +163,26 @@ mod tests {
         let stats = e.run();
         assert_eq!(stats.events, 6);
         assert_eq!(e.now().as_ps(), 50);
+    }
+
+    #[test]
+    fn run_until_capped_stops_at_cap_and_resumes_cleanly() {
+        let mut e = Engine::new(Counter { seen: vec![], chain: 0 });
+        for i in 0..10 {
+            e.schedule(Time::from_ps(10 * (i as u64 + 1)), i);
+        }
+        let (s1, capped) = e.run_until_capped(Time::from_ps(1000), 4);
+        assert!(capped);
+        assert_eq!(s1.events, 4);
+        assert_eq!(e.now().as_ps(), 40, "cap stop must not advance past the last event");
+        // Resuming with a generous cap finishes the rest and lands on
+        // `until`, exactly like an uncapped run would have.
+        let (s2, capped) = e.run_until_capped(Time::from_ps(1000), u64::MAX);
+        assert!(!capped);
+        assert_eq!(s1.events + s2.events, 10);
+        assert_eq!(e.now().as_ps(), 1000);
+        let evs: Vec<u32> = e.model.seen.iter().map(|&(_, v)| v).collect();
+        assert_eq!(evs, (0..10).collect::<Vec<_>>());
     }
 
     #[test]

@@ -8,7 +8,8 @@
 
 use sauron::analytic::CollParams;
 use sauron::config::{
-    presets, CollOp, CollScope, CollectiveSpec, FabricKind, Pattern, TelemetryConfig, Workload,
+    presets, CollOp, CollScope, CollectiveSpec, FabricKind, FaultAction, FaultEvent, FaultPlan,
+    LinkSel, Pattern, TelemetryConfig, Workload,
 };
 use sauron::net::world::{BenchMode, NativeProvider, Sim};
 use sauron::report::figures;
@@ -217,6 +218,72 @@ fn post_exascale_fat_tree_and_dragonfly_attribute_inter_levels() {
             );
         }
     }
+}
+
+/// The EXPERIMENTS.md graceful-degradation story, asserted: killing the
+/// leaf-0 → spine-0 trunk mid-run must not stop the congested
+/// hierarchical AllReduce — routing re-steers onto the three surviving
+/// up-trunks, which therefore carry strictly more wire bytes (and at
+/// least as much head-of-line blocking) than in the healthy arm, while
+/// the dead trunk stops accumulating and gets its downtime accounted.
+#[test]
+fn dead_trunk_shifts_hol_blocking_onto_surviving_rails() {
+    let spec = CollectiveSpec {
+        op: CollOp::HierarchicalAllReduce,
+        scope: CollScope::Global,
+        size_b: 256 * 1024,
+        iters: 2,
+    };
+    let mut cfg =
+        presets::collective_scaleout(32, 256.0, spec, Pattern::Custom { frac_inter: 1.0 }, 0.35);
+    cfg.warmup_us = 5.0;
+    cfg.measure_us = 25.0;
+    cfg.telemetry = TelemetryConfig { enabled: true, bins: 8 };
+    let mut faulty_cfg = cfg.clone();
+    faulty_cfg.faults = FaultPlan {
+        events: vec![FaultEvent {
+            at_us: 8.0,
+            action: FaultAction::LinkDown,
+            sel: Some(LinkSel::LeafUp { leaf: 0, spine: 0 }),
+        }],
+    };
+    let healthy = Sim::new(cfg, &NativeProvider, BenchMode::None).unwrap().run();
+    let faulty =
+        Sim::new(faulty_cfg, &NativeProvider, BenchMode::None).unwrap().try_run().unwrap();
+    assert_eq!(faulty.coll_iters, 2, "collective must complete around the dead trunk");
+
+    // leaf-0 up-trunk stats by spine index, in both arms.
+    let trunk = |r: &sauron::SimReport, spine: usize| {
+        r.link_stats
+            .iter()
+            .find(|s| s.detail == format!("leaf_up[l0->s{spine}]"))
+            .cloned()
+            .unwrap_or_else(|| panic!("no leaf_up[l0->s{spine}] stat"))
+    };
+    let dead = trunk(&faulty, 0);
+    assert!(dead.fault_ps > 0, "dead trunk must account its downtime");
+    assert!(
+        dead.wire_bytes < trunk(&healthy, 0).wire_bytes,
+        "dead trunk must stop accumulating: {} vs healthy {}",
+        dead.wire_bytes,
+        trunk(&healthy, 0).wire_bytes
+    );
+    let survivors =
+        |r: &sauron::SimReport, f: &dyn Fn(&sauron::metrics::LinkStat) -> u64| -> u64 {
+            (1..4).map(|s| f(&trunk(r, s))).sum()
+        };
+    let bytes_faulty = survivors(&faulty, &|s| s.wire_bytes);
+    let bytes_healthy = survivors(&healthy, &|s| s.wire_bytes);
+    assert!(
+        bytes_faulty > bytes_healthy,
+        "surviving rails must absorb the re-steered share: {bytes_faulty} vs {bytes_healthy}"
+    );
+    let hol_faulty = survivors(&faulty, &|s| s.hol_total_ps());
+    let hol_healthy = survivors(&healthy, &|s| s.hol_total_ps());
+    assert!(
+        hol_faulty >= hol_healthy,
+        "blocking must shift toward the surviving rails: {hol_faulty} vs {hol_healthy}"
+    );
 }
 
 /// Acceptance: one preset per intra fabric runs the hierarchical-

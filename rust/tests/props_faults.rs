@@ -1,0 +1,274 @@
+//! Fault-injection equivalence + graceful-degradation suite.
+//!
+//! The anchor property mirrors `props_reuse`: a [`FaultPlan`] is a
+//! **run-phase** delta, so a point carrying an empty or never-firing
+//! plan must produce a [`SimReport`] bit-identical (every field except
+//! `wall_ms`) to the same point with no plan at all — across every
+//! intra fabric, NIC policy, inter topology and workload kind. The
+//! zero-overhead-when-off contract would silently rot without it.
+//!
+//! On top of that: degraded links never drop traffic, NIC failures
+//! fail over without stopping the run on any fabric × inter-kind
+//! combination, and the `SimConfig::limits` watchdog is observational
+//! until it trips — at which point the error is the structured
+//! [`SimError::LimitExceeded`] the crash-safe sweep isolates.
+
+use sauron::config::{
+    presets, CollOp, CollScope, CollectiveSpec, FabricConfig, FabricKind, FaultAction, FaultEvent,
+    FaultPlan, LinkSel, NicPolicy, Pattern, SimConfig, Workload,
+};
+use sauron::net::world::{BenchMode, NativeProvider, Sim, SimError, SimReport};
+use sauron::testkit::{forall, Choice, FloatRange, Triple};
+
+/// Compare every result-describing field; only `wall_ms` is excluded.
+fn reports_identical(planned: &SimReport, plain: &SimReport) -> Result<(), String> {
+    macro_rules! field_eq {
+        ($field:ident) => {
+            if planned.$field != plain.$field {
+                return Err(format!(
+                    "field {} differs: {:?} (with plan) vs {:?} (without)",
+                    stringify!($field),
+                    planned.$field,
+                    plain.$field
+                ));
+            }
+        };
+    }
+    field_eq!(pattern);
+    field_eq!(load);
+    field_eq!(nodes);
+    field_eq!(accels);
+    field_eq!(fabric);
+    field_eq!(nics);
+    field_eq!(inter);
+    field_eq!(aggregated_intra_gbs);
+    field_eq!(offered_gbs);
+    field_eq!(intra_tput_gbs);
+    field_eq!(intra_drain_gbs);
+    field_eq!(intra_lat);
+    field_eq!(inter_tput_gbs);
+    field_eq!(inter_drain_gbs);
+    field_eq!(fct);
+    field_eq!(intra_wire_gbs);
+    field_eq!(inter_wire_gbs);
+    field_eq!(drop_frac);
+    field_eq!(delivered_msgs);
+    field_eq!(offered_msgs);
+    field_eq!(events);
+    field_eq!(table_misses);
+    field_eq!(dropped_units);
+    field_eq!(coll_op);
+    field_eq!(coll_size_b);
+    field_eq!(coll_iters);
+    field_eq!(coll_time);
+    field_eq!(coll_pred_ns);
+    Ok(())
+}
+
+fn run(cfg: SimConfig) -> Result<SimReport, String> {
+    Sim::new(cfg, &NativeProvider, BenchMode::None)
+        .map_err(|e| format!("build: {e:#}"))?
+        .try_run()
+        .map_err(|e| format!("run: {e:#}"))
+}
+
+fn fabric_cfg(
+    kind: FabricKind,
+    nics: usize,
+    policy: NicPolicy,
+    load: f64,
+    pattern: Pattern,
+    seed: u64,
+) -> SimConfig {
+    let mut fab = FabricConfig::new(kind, nics);
+    fab.nic_policy = policy;
+    let mut cfg = presets::with_fabric(presets::scaleout(32, 256.0, pattern, load), fab);
+    cfg.warmup_us = 5.0;
+    cfg.measure_us = 10.0;
+    cfg.seed = seed;
+    cfg
+}
+
+fn with_plan(mut cfg: SimConfig, events: Vec<FaultEvent>) -> SimConfig {
+    cfg.faults = FaultPlan { events };
+    cfg
+}
+
+/// A full down/degrade/recover cycle scheduled far past the end of the
+/// run: resolved and armed, never applied.
+fn never_firing(sel: LinkSel) -> Vec<FaultEvent> {
+    vec![
+        FaultEvent {
+            at_us: 1e9,
+            action: FaultAction::LinkDegrade { factor: 0.5 },
+            sel: Some(sel.clone()),
+        },
+        FaultEvent { at_us: 2e9, action: FaultAction::LinkDown, sel: Some(sel.clone()) },
+        FaultEvent { at_us: 3e9, action: FaultAction::Recover, sel: Some(sel) },
+    ]
+}
+
+#[test]
+fn prop_never_firing_plan_bit_identical_across_fabrics() {
+    let gen = Triple(
+        Choice(&FabricKind::ALL),
+        Choice(&[
+            (1usize, NicPolicy::LocalRank),
+            (2, NicPolicy::LocalRank),
+            (2, NicPolicy::RoundRobin),
+        ]),
+        FloatRange { lo: 0.05, hi: 0.45 },
+    );
+    forall(0xFA017, 10, &gen, |&(kind, (nics, policy), load)| {
+        let base = fabric_cfg(kind, nics, policy, load, Pattern::C1, 0xBEE);
+        let planned = with_plan(base.clone(), never_firing(LinkSel::NicUp { node: 0, nic: 0 }));
+        let plain = run(base)?;
+        let armed = run(planned)?;
+        reports_identical(&armed, &plain)
+            .map_err(|e| format!("{kind:?}/{nics}nic/{policy:?}/{load:.3}: {e}"))
+    });
+}
+
+#[test]
+fn prop_never_firing_plan_bit_identical_across_inter_kinds_and_workloads() {
+    let gen = Triple(
+        Choice(&["leaf_spine", "fat_tree3", "dragonfly"]),
+        Choice(&[None, Some(CollOp::RingAllReduce), Some(CollOp::HierarchicalAllReduce)]),
+        FloatRange { lo: 0.05, hi: 0.35 },
+    );
+    forall(0xFA018, 9, &gen, |&(inter, op, load)| {
+        let mut cfg = presets::scaleout(32, 256.0, Pattern::C2, load);
+        cfg.inter.kind = presets::default_inter_kind(inter, cfg.inter.leaves, cfg.inter.spines);
+        cfg.warmup_us = 5.0;
+        cfg.measure_us = 10.0;
+        cfg.seed = 0xFA;
+        if let Some(op) = op {
+            let scope = if op == CollOp::HierarchicalAllReduce {
+                CollScope::Global
+            } else {
+                CollScope::PerNode
+            };
+            cfg.workload =
+                Workload::Collective(CollectiveSpec { op, scope, size_b: 32 * 1024, iters: 2 });
+        }
+        let planned = with_plan(cfg.clone(), never_firing(LinkSel::NicUp { node: 3, nic: 0 }));
+        let plain = run(cfg)?;
+        let armed = run(planned)?;
+        reports_identical(&armed, &plain).map_err(|e| format!("{inter}/{op:?}/{load:.3}: {e}"))
+    });
+}
+
+#[test]
+fn prop_generous_limits_are_observational() {
+    // The watchdog runs the engine in bounded chunks instead of one
+    // `run_until` — that mechanical difference must be invisible
+    // whenever the budget doesn't trip.
+    let gen = Triple(
+        Choice(&FabricKind::ALL),
+        Choice(&[Pattern::C1, Pattern::C5]),
+        FloatRange { lo: 0.05, hi: 0.4 },
+    );
+    forall(0xFA019, 8, &gen, |&(kind, pattern, load)| {
+        let base = fabric_cfg(kind, 1, NicPolicy::LocalRank, load, pattern, 3);
+        let mut capped = base.clone();
+        capped.limits.max_events = u64::MAX / 2;
+        capped.limits.max_wall_ms = 3_600_000.0;
+        let plain = run(base)?;
+        let under_budget = run(capped)?;
+        reports_identical(&under_budget, &plain)
+            .map_err(|e| format!("{kind:?}/{pattern:?}/{load:.3}: {e}"))
+    });
+}
+
+#[test]
+fn prop_degrade_never_drops_and_completes() {
+    let gen = Triple(
+        Choice(&FabricKind::ALL),
+        Choice(&[0.25f64, 0.5, 0.75]),
+        FloatRange { lo: 0.05, hi: 0.3 },
+    );
+    forall(0xFA01A, 8, &gen, |&(kind, factor, load)| {
+        let base = fabric_cfg(kind, 1, NicPolicy::LocalRank, load, Pattern::C1, 0xDE6);
+        let sel = LinkSel::NicUp { node: 0, nic: 0 };
+        let planned = with_plan(
+            base,
+            vec![
+                FaultEvent {
+                    at_us: 11.0,
+                    action: FaultAction::LinkDegrade { factor },
+                    sel: Some(sel.clone()),
+                },
+                FaultEvent { at_us: 14.0, action: FaultAction::Recover, sel: Some(sel) },
+            ],
+        );
+        let r = run(planned).map_err(|e| format!("{kind:?}/{factor}/{load:.3}: {e}"))?;
+        if r.dropped_units != 0 {
+            return Err(format!(
+                "{kind:?}/{factor}/{load:.3}: degrade dropped {} units",
+                r.dropped_units
+            ));
+        }
+        if r.delivered_msgs == 0 {
+            return Err(format!("{kind:?}/{factor}/{load:.3}: nothing delivered"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_nic_down_fails_over_on_every_fabric_and_inter_kind() {
+    // Killing one of two NICs mid-measure must leave an open-loop run
+    // degraded but alive: messages keep completing and inter traffic
+    // keeps flowing through the surviving NIC, whatever the fabric the
+    // NICs hang off or the inter topology behind them.
+    let gen = Triple(
+        Choice(&FabricKind::ALL),
+        Choice(&["leaf_spine", "fat_tree3", "dragonfly"]),
+        FloatRange { lo: 0.1, hi: 0.3 },
+    );
+    forall(0xFA01B, 9, &gen, |&(kind, inter, load)| {
+        let mut cfg = fabric_cfg(kind, 2, NicPolicy::RoundRobin, load, Pattern::C1, 0x0FF);
+        cfg.inter.kind = presets::default_inter_kind(inter, cfg.inter.leaves, cfg.inter.spines);
+        let planned = with_plan(
+            cfg,
+            vec![FaultEvent {
+                at_us: 12.0,
+                action: FaultAction::NicDown { node: 0, nic: 0 },
+                sel: None,
+            }],
+        );
+        let r = run(planned).map_err(|e| format!("{kind:?}/{inter}/{load:.3}: {e}"))?;
+        if r.delivered_msgs == 0 {
+            return Err(format!("{kind:?}/{inter}/{load:.3}: run starved after NIC failure"));
+        }
+        if r.inter_tput_gbs <= 0.0 {
+            return Err(format!("{kind:?}/{inter}/{load:.3}: failover carried no inter traffic"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn watchdog_event_limit_trips_with_structured_error() {
+    let mut cfg = fabric_cfg(FabricKind::SwitchStar, 1, NicPolicy::LocalRank, 0.3, Pattern::C3, 1);
+    cfg.limits.max_events = 800;
+    let err = Sim::new(cfg, &NativeProvider, BenchMode::None).unwrap().try_run().unwrap_err();
+    match err.downcast_ref::<SimError>() {
+        Some(SimError::LimitExceeded { events, .. }) => {
+            assert!(*events <= 800, "budget overshot: {events}")
+        }
+        other => panic!("expected LimitExceeded, got {other:?} ({err:#})"),
+    }
+}
+
+#[test]
+fn watchdog_wall_time_limit_trips_with_structured_error() {
+    let mut cfg = fabric_cfg(FabricKind::SwitchStar, 1, NicPolicy::LocalRank, 0.3, Pattern::C3, 1);
+    cfg.limits.max_wall_ms = 1e-6; // ~1 ns: trips at the first budget check
+    let err = Sim::new(cfg, &NativeProvider, BenchMode::None).unwrap().try_run().unwrap_err();
+    assert!(
+        matches!(err.downcast_ref::<SimError>(), Some(SimError::LimitExceeded { .. })),
+        "expected LimitExceeded, got {err:#}"
+    );
+    assert!(format!("{err:#}").contains("watchdog"), "{err:#}");
+}

@@ -1,0 +1,102 @@
+//! Crash-safe sweep execution, end to end: a sweep killed mid-run is
+//! resumed from its partial streamed CSV and must finish with a file
+//! byte-identical to one from an uninterrupted run. This only holds
+//! because every CSV column is a deterministic function of the config
+//! (`wall_ms` is deliberately kept out of the CSV schema) and because
+//! `CsvStream::resume` truncates the torn tail a kill can leave behind.
+
+use std::io::Write as _;
+use std::sync::{Arc, Mutex};
+
+use sauron::config::{FabricConfig, FaultPlan, InterKind, LimitsConfig, Pattern};
+use sauron::coordinator::{self, results::CsvStream, SweepSpec};
+use sauron::net::world::NativeProvider;
+
+fn four_point_spec() -> SweepSpec {
+    SweepSpec {
+        nodes: 32,
+        intra_gbs: vec![128.0],
+        patterns: vec![Pattern::C3, Pattern::C5],
+        loads: vec![0.1, 0.3],
+        fabric: FabricConfig::switch_star(),
+        inter: InterKind::LeafSpine,
+        paper_windows: false,
+        telemetry: false,
+        workers: 2,
+        seed: 7,
+        faults: FaultPlan::default(),
+        limits: LimitsConfig::default(),
+    }
+}
+
+#[test]
+fn killed_sweep_resumes_to_byte_identical_csv() {
+    let spec = four_point_spec();
+    let dir = std::env::temp_dir().join("sauron_sweep_resume_it");
+    std::fs::create_dir_all(&dir).unwrap();
+    let reference = dir.join("reference.csv");
+    let victim = dir.join("victim.csv");
+    let provider = Arc::new(coordinator::snapshot_provider(&spec, &NativeProvider));
+
+    // The reference: one uninterrupted streamed sweep.
+    let stream = Arc::new(Mutex::new(CsvStream::create(&reference).unwrap()));
+    let cb = stream.clone();
+    let outcome = coordinator::run_sweep_resilient(
+        &spec,
+        provider.clone(),
+        1,
+        0,
+        Some(Box::new(move |idx, _, _, r| cb.lock().unwrap().push(idx, r))),
+    )
+    .unwrap();
+    assert!(outcome.errors.is_empty(), "{:?}", outcome.errors);
+    assert_eq!(stream.lock().unwrap().finish().unwrap(), 4);
+
+    // The victim: "killed" after the first two points landed on disk —
+    // the callback stops forwarding rows, finish() never runs, and the
+    // kill tears the third row mid-write (no trailing newline).
+    let stream = Arc::new(Mutex::new(CsvStream::create(&victim).unwrap()));
+    let cb = stream.clone();
+    coordinator::run_sweep_resilient(
+        &spec,
+        provider.clone(),
+        1,
+        0,
+        Some(Box::new(move |idx, _, _, r| {
+            if idx < 2 {
+                cb.lock().unwrap().push(idx, r);
+            }
+        })),
+    )
+    .unwrap();
+    drop(stream);
+    let mut f = std::fs::OpenOptions::new().append(true).open(&victim).unwrap();
+    write!(f, "C3,0.3000,32,256,switch_star").unwrap(); // torn row
+    drop(f);
+
+    // Resume: trust the complete prefix, cut the torn tail, re-run the
+    // rest of the sweep with absolute indices, and append.
+    let (stream, done) = CsvStream::resume(&victim).unwrap();
+    assert_eq!(done, 2, "two complete rows survive the kill; the torn third does not");
+    let stream = Arc::new(Mutex::new(stream));
+    let cb = stream.clone();
+    let outcome = coordinator::run_sweep_resilient(
+        &spec,
+        provider,
+        1,
+        done,
+        Some(Box::new(move |idx, _, _, r| cb.lock().unwrap().push(idx, r))),
+    )
+    .unwrap();
+    assert!(outcome.errors.is_empty(), "{:?}", outcome.errors);
+    assert_eq!(outcome.completed(), 2, "only the missing points re-run");
+    assert_eq!(stream.lock().unwrap().finish().unwrap(), 4);
+
+    let resumed = std::fs::read_to_string(&victim).unwrap();
+    let uninterrupted = std::fs::read_to_string(&reference).unwrap();
+    assert_eq!(
+        resumed, uninterrupted,
+        "killed-and-resumed sweep CSV must be byte-identical to an uninterrupted run's"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -34,14 +34,42 @@ EOF
 fi
 
 echo "tier1: toolchain found: $(cargo --version)"
-cargo build --release
-cargo test -q
+
+# Hard wall-clock guard: the fault/stall suites exercise watchdogs,
+# deliberate livelocks and kill-and-resume paths, so a regression there
+# can *hang* rather than fail. Where coreutils `timeout` exists, every
+# gate step runs under a budget (seconds); where it doesn't, run
+# unguarded rather than skip.
+guard() {
+    budget="$1"
+    shift
+    if command -v timeout >/dev/null 2>&1; then
+        timeout "$budget" "$@"
+    else
+        "$@"
+    fi
+}
+if ! command -v timeout >/dev/null 2>&1; then
+    echo "tier1: no 'timeout' binary on PATH — steps run unguarded"
+fi
+
+guard 1500 cargo build --release
+guard 1500 cargo test -q
+
+# Fault-injection / crash-safety regression suite, re-run explicitly
+# under a tighter wall so a livelock regression fails fast with a named
+# suite: fault-plan equivalence + watchdog props, the kill-and-resume
+# sweep, and the in-crate fault / panic-isolation / resilient-pool /
+# csv-skip-resume unit tests (libtest takes multiple name filters).
+guard 600 cargo test -q --test props_faults
+guard 600 cargo test -q --test sweep_resume
+guard 600 cargo test -q --lib fault watchdog panic resilient partition resume skip
 
 if [ "${1:-}" = "--bench" ]; then
     # Regenerates the committed baselines in place; SAURON_BENCH_MS can
     # shorten the per-benchmark budget (CI uses 400 ms).
-    cargo bench --bench perf_hotpath
-    cargo bench --bench perf_sweep
+    guard 1800 cargo bench --bench perf_hotpath
+    guard 1800 cargo bench --bench perf_sweep
     echo "tier1: BENCH_hotpath.json / BENCH_sweep.json regenerated —"
     echo "tier1: commit them to replace the design-estimate placeholders."
 fi
