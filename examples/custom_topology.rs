@@ -71,6 +71,10 @@ fn main() -> anyhow::Result<()> {
         },
         workload: Workload::None,
         coalescing: true,
+        telemetry: Default::default(),
+        faults: Default::default(),
+        limits: Default::default(),
+        shards: 1,
     };
     cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
 

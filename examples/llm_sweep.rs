@@ -55,10 +55,14 @@ fn main() -> anyhow::Result<()> {
         patterns: vec![summary.pattern(), summary.nearest_paper_pattern()],
         loads: vec![0.2, 0.4, 0.6, 0.8, 1.0],
         fabric: sauron::config::FabricConfig::switch_star(),
+        inter: sauron::config::InterKind::LeafSpine,
         paper_windows: false,
         telemetry: false,
         workers: coordinator::default_workers(),
         seed: 0x11A,
+        faults: Default::default(),
+        limits: Default::default(),
+        shards: 1,
     };
     let provider: &dyn SerProvider = match &rt {
         Some(rt) => rt,

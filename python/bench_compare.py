@@ -64,8 +64,14 @@ def compare_pair(base, fresh, max_regression):
     failed = []
     for name in sorted(set(base) | set(fresh)):
         if name not in base or name not in fresh:
-            side = "baseline" if name in base else "fresh run"
-            print(f"  {name:<44} only in {side} (ignored)")
+            if name in fresh:
+                # A newly added bench arm has no committed baseline until
+                # the next regeneration: report its rate, never fail.
+                rate = fresh[name].get("rate_per_s")
+                shown = f"{rate:.0f} /s" if rate else f"{fresh[name].get('mean_ns', 0):.0f} ns"
+                print(f"  {name:<44} {shown:>14}  NEW (no baseline yet, not compared)")
+            else:
+                print(f"  {name:<44} only in baseline (machine-dependent or removed; ignored)")
             continue
         b, f = base[name], fresh[name]
         if "rate_per_s" in b and "rate_per_s" in f and b["rate_per_s"] > 0:

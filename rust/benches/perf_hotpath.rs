@@ -89,6 +89,27 @@ fn main() {
         Sim::new(cfg2.clone(), &NativeProvider, BenchMode::None).unwrap().run()
     });
 
+    // 4b. Large-world saturated arm (4096 nodes): the multi-thousand-node
+    //     regime the hop-generic trains + event shards target. Windows are
+    //     short so the scalar reference stays affordable; the sharded
+    //     variant runs the identical config with per-node event shards
+    //     (bit-identical report — tests/props_shards.rs) and divides by
+    //     the same scalar-equivalent unit count, so the two rates read
+    //     directly as the sharding speedup.
+    let mut cfg4k = presets::scaleout(4096, 256.0, Pattern::C1, 1.0);
+    cfg4k.warmup_us = 1.0;
+    cfg4k.measure_us = 2.0;
+    let units4k = scalar_events(&cfg4k);
+    b.bench_units("perf/world_4096n_c1_saturated", units4k, "events", || {
+        Sim::new(cfg4k.clone(), &NativeProvider, BenchMode::None).unwrap().run()
+    });
+    let mut cfg4ks = cfg4k.clone();
+    cfg4ks.shards =
+        std::thread::available_parallelism().map(|n| n.get() as u32).unwrap_or(8).min(64);
+    b.bench_units("perf/world_4096n_c1_saturated_sharded", units4k, "events", || {
+        Sim::new(cfg4ks.clone(), &NativeProvider, BenchMode::None).unwrap().run()
+    });
+
     // 5. Collective world: hierarchical AllReduce with inter-node
     //    background traffic (multi-transaction inter sends are where
     //    trains pay off for closed-loop workloads).

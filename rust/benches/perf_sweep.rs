@@ -101,6 +101,22 @@ fn main() {
         run_reused(&reuse_cfgs, &mut sims)
     });
 
+    // Sharded arm: the identical grid with per-node event shards — a
+    // run-phase knob, so the same blueprints and pinned Sims carry over
+    // and every report stays bit-identical (tests/props_shards.rs). The
+    // rate delta against the reuse arm is the sharding win at sweep
+    // scale.
+    let shards =
+        std::thread::available_parallelism().map(|n| n.get() as u32).unwrap_or(8).min(64);
+    let mut shard_cfgs = configs.clone();
+    for c in &mut shard_cfgs {
+        c.shards = shards;
+    }
+    let mut shard_sims: Vec<(String, Sim)> = Vec::new();
+    b.bench_units("perf/sweep_blueprint_reuse_sharded", points, "points", move || {
+        run_reused(&shard_cfgs, &mut shard_sims)
+    });
+
     let fresh_rate = b.results[0].per_second().unwrap_or(0.0);
     let reuse_rate = b.results[1].per_second().unwrap_or(0.0);
     if fresh_rate > 0.0 {

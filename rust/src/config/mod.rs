@@ -616,6 +616,15 @@ pub struct SimConfig {
     /// Event / wall-clock watchdog limits (off by default;
     /// JSON-optional). Run-phase, like `faults`.
     pub limits: LimitsConfig,
+    /// Per-node event shards driving the multi-core run phase: the event
+    /// queue splits into per-shard lanes merged in deterministic
+    /// `(Time, seq, shard)` order, and shard workers pre-compute routing
+    /// and serialization lookups between event chunks
+    /// (`coordinator::pool::run_sharded`). `1` (the default) is today's
+    /// single-queue engine, bit-identical by construction; any value
+    /// produces bit-identical `SimReport`s (`tests/props_shards.rs`).
+    /// Run-phase, like `faults` — not part of the blueprint fingerprint.
+    pub shards: u32,
 }
 
 impl SimConfig {
@@ -806,6 +815,9 @@ impl SimConfig {
                 "limits.max_wall_ms {} must be finite and >= 0",
                 self.limits.max_wall_ms
             ));
+        }
+        if self.shards == 0 || self.shards > 1024 {
+            return Err(format!("shards {} outside 1..=1024", self.shards));
         }
         self.validate_workload(&self.workload)?;
         Ok(())
@@ -1440,10 +1452,12 @@ impl ToJson for SimConfig {
         // byte-for-byte (the same omit-when-default discipline as the
         // report's telemetry fields).
         let v = if self.faults.is_empty() { v } else { v.with("faults", self.faults.to_json()) };
-        if self.limits.is_unlimited() {
+        let v = if self.limits.is_unlimited() { v } else { v.with("limits", self.limits.to_json()) };
+        // Single-shard configs keep the pre-sharding JSON shape.
+        if self.shards == 1 {
             v
         } else {
-            v.with("limits", self.limits.to_json())
+            v.with("shards", self.shards)
         }
     }
 }
@@ -1483,6 +1497,12 @@ impl FromJson for SimConfig {
             limits: match v.get("limits") {
                 Some(l) => LimitsConfig::from_json(l)?,
                 None => LimitsConfig::default(),
+            },
+            // Optional (default 1 = single-queue engine) so pre-sharding
+            // config files parse.
+            shards: match v.get("shards") {
+                Some(s) => s.as_f64()? as u32,
+                None => 1,
             },
         })
     }

@@ -52,6 +52,7 @@ pub fn cellia() -> SimConfig {
         telemetry: TelemetryConfig::default(),
         faults: FaultPlan::default(),
         limits: LimitsConfig::default(),
+        shards: 1,
     }
 }
 
@@ -118,6 +119,7 @@ pub fn scaleout(nodes: usize, aggregated_gbs: f64, pattern: Pattern, load: f64) 
         telemetry: TelemetryConfig::default(),
         faults: FaultPlan::default(),
         limits: LimitsConfig::default(),
+        shards: 1,
     }
 }
 

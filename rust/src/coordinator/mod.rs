@@ -58,6 +58,11 @@ pub struct SweepSpec {
     /// unlimited). A tripped watchdog fails that point with
     /// `SimError::LimitExceeded` instead of hanging the sweep.
     pub limits: LimitsConfig,
+    /// Event shards per point (run-phase; 1 = the bit-identical
+    /// single-queue engine). Passed through to every generated
+    /// `SimConfig` — sharded sweeps stay bit-identical to `shards: 1`
+    /// and do not split blueprints.
+    pub shards: u32,
 }
 
 impl SweepSpec {
@@ -76,6 +81,7 @@ impl SweepSpec {
             seed: 0x5CA1E,
             faults: FaultPlan::default(),
             limits: LimitsConfig::default(),
+            shards: 1,
         }
     }
 
@@ -99,6 +105,7 @@ impl SweepSpec {
             seed: 0x5CA1E,
             faults: FaultPlan::default(),
             limits: LimitsConfig::default(),
+            shards: 1,
         }
     }
 
@@ -118,6 +125,7 @@ impl SweepSpec {
                     cfg.telemetry.enabled = self.telemetry;
                     cfg.faults = self.faults.clone();
                     cfg.limits = self.limits;
+                    cfg.shards = self.shards;
                     out.push(cfg);
                 }
             }
@@ -342,6 +350,7 @@ mod tests {
             seed: 7,
             faults: FaultPlan::default(),
             limits: LimitsConfig::default(),
+            shards: 1,
         }
     }
 

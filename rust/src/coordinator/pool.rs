@@ -72,6 +72,29 @@ where
 /// rows — `results::CsvStream`).
 pub type Callback<T> = Box<dyn Fn(usize, usize, usize, &T) + Send + Sync>;
 
+/// Run `f(shard)` for every shard on its own scoped worker thread and
+/// return the results in shard order. The short-lived fork/join shape
+/// fits the event-shard speculation pass (`World::speculate`): a few
+/// microseconds of pure lookups per shard between event chunks, where a
+/// persistent channel-fed pool's coordination would cost more than the
+/// work. `shards <= 1` runs inline on the caller's thread. A panicking
+/// worker propagates (speculation touches only immutable state — a
+/// panic there is a bug, not an input error).
+pub fn run_sharded<T, F>(shards: u32, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(u32) -> T + Sync,
+{
+    if shards <= 1 {
+        return (0..shards).map(&f).collect();
+    }
+    std::thread::scope(|scope| {
+        let f = &f;
+        let handles: Vec<_> = (0..shards).map(|s| scope.spawn(move || f(s))).collect();
+        handles.into_iter().map(|h| h.join().expect("shard worker panicked")).collect()
+    })
+}
+
 /// Run boxed jobs with a bounded pool; preserve input order in the output.
 pub fn run_ordered<T, F>(
     jobs: Vec<F>,
@@ -300,6 +323,22 @@ where
 mod tests {
     use super::*;
     use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn run_sharded_returns_shard_order() {
+        // Parallel path: results land in shard order regardless of
+        // completion order.
+        let out = run_sharded(8, |s| {
+            if s % 3 == 0 {
+                std::thread::sleep(std::time::Duration::from_micros(200));
+            }
+            s * 10
+        });
+        assert_eq!(out, vec![0, 10, 20, 30, 40, 50, 60, 70]);
+        // Inline paths.
+        assert_eq!(run_sharded(1, |s| s + 1), vec![1]);
+        assert!(run_sharded(0, |s| s).is_empty());
+    }
 
     #[test]
     fn ordering_preserved_under_parallelism() {

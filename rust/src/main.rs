@@ -42,7 +42,7 @@ COMMANDS
              [--pods P] [--cores C] [--groups G] [--paper-windows]
              [--telemetry] [--quick] [--out DIR]
              [--faults plan.json] [--max-events N] [--max-wall-ms MS]
-             [--retries N] [--resume sweep.csv]
+             [--retries N] [--resume sweep.csv] [--shards N]
              Reproduce Figures 5-8 (scale-out load sweeps) on any
              intra-node fabric x NIC count x inter-node topology.
              --telemetry attaches per-link x per-class link_stats to
@@ -57,8 +57,10 @@ COMMANDS
              FaultPlan to every point; --max-events / --max-wall-ms
              bound each point's event count and wall-clock time
              (0 = unlimited).
-  run        <config.json> [--json]
-             One simulation from a JSON config file.
+  run        <config.json> [--json] [--shards N]
+             One simulation from a JSON config file. --shards overrides
+             the config's event-shard count (run-phase; results are
+             bit-identical at any shard count).
   collective [--op ring_allreduce|reduce_scatter|allgather|all_to_all|hier_allreduce]
              [--scope global|per_node] [--nodes N] [--intra 128,256,512]
              [--fabric star|mesh|ring|host_tree] [--nics K]
@@ -306,11 +308,13 @@ fn main() -> anyhow::Result<()> {
                     seed: args.get_or("seed", 0x5CA1Eu64)?,
                     faults: FaultPlan::default(),
                     limits: Default::default(),
+                    shards: 1,
                 }
             };
             spec.faults = parse_faults(&args)?;
             spec.limits.max_events = args.get_or("max-events", 0u64)?;
             spec.limits.max_wall_ms = args.get_or("max-wall-ms", 0.0f64)?;
+            spec.shards = args.get_or("shards", 1u32)?;
             let retries = args.get_or("retries", 1usize)?;
             let resume: Option<PathBuf> = args.opt("resume").map(PathBuf::from);
             let out = PathBuf::from(args.opt("out").unwrap_or("results"));
@@ -441,8 +445,12 @@ fn main() -> anyhow::Result<()> {
                 .or_else(|| args.opt("config").map(String::from))
                 .ok_or_else(|| anyhow::anyhow!("usage: sauron run <config.json>"))?;
             let json = args.flag("json");
+            let shards = args.get_or("shards", 0u32)?;
             args.reject_unknown()?;
-            let cfg = SimConfig::load(std::path::Path::new(&path))?;
+            let mut cfg = SimConfig::load(std::path::Path::new(&path))?;
+            if shards > 0 {
+                cfg.shards = shards;
+            }
             let report = Sim::new(cfg, be.provider(), BenchMode::None)?.try_run()?;
             if json {
                 println!("{}", report.to_json().pretty());

@@ -98,6 +98,18 @@ pub struct Link {
     /// scheduled event; the stale one is recognized and ignored because
     /// its timestamp no longer matches.
     pub next_fire: Time,
+    /// Interior (forwarding-hop) train: the downstream link all trained
+    /// units forward into (`u32::MAX` when this train delivers to a sink
+    /// or no train is active). Set only while `train_active` holds on a
+    /// forwarding hop; each settled boundary re-checks room on this link
+    /// before committing (world::settle).
+    pub train_next: u32,
+    /// Reverse pointer: the upstream link currently running an interior
+    /// train *into* this link (`u32::MAX` = none). Observers of this
+    /// link's queue must settle that feeder's cascade first
+    /// (world::settle_through); at most one feeder trains into a link at
+    /// a time — a second would-be feeder stays scalar.
+    pub train_feeder: u32,
 }
 
 impl Link {
@@ -118,6 +130,8 @@ impl Link {
             train_ends: VecDeque::new(),
             train_active: false,
             next_fire: Time::MAX,
+            train_next: u32::MAX,
+            train_feeder: u32::MAX,
         }
     }
 
@@ -140,6 +154,8 @@ impl Link {
         self.train_ends.clear();
         self.train_active = false;
         self.next_fire = Time::MAX;
+        self.train_next = u32::MAX;
+        self.train_feeder = u32::MAX;
     }
 
     /// Room for `bytes` more?

@@ -1389,6 +1389,87 @@ impl Topology {
     }
 }
 
+/// Static node → shard partition for the sharded run phase
+/// (`SimConfig::shards`). Nodes map to shards in contiguous blocks
+/// (`node * shards / nodes`), so one node's entire intra fabric — and
+/// every event it generates — lives on one shard. Inter-node trunks are
+/// anchored by the switch-level index that owns their upstream port
+/// (leaf for leaf/agg trunks, pod for core trunks, group for dragonfly),
+/// scaled onto the shard range the same way; cross-shard traffic is the
+/// deterministic `(Time, seq, shard)` lane merge in `sim::queue`, not a
+/// property of the map itself.
+#[derive(Clone, Copy, Debug)]
+pub struct ShardMap {
+    /// Shard count (≥ 1).
+    pub shards: u32,
+    nodes: u32,
+    leaves: u32,
+    pods: u32,
+    groups: u32,
+}
+
+impl ShardMap {
+    /// Partition `topo`'s nodes over `shards` shards (clamped to the
+    /// node count: more shards than nodes would leave empty shards).
+    pub fn new(topo: &Topology, shards: u32) -> ShardMap {
+        ShardMap {
+            shards: shards.max(1).min(topo.nodes.max(1)),
+            nodes: topo.nodes.max(1),
+            leaves: topo.leaves.max(1),
+            pods: topo.pods.max(1),
+            groups: topo.groups.max(1),
+        }
+    }
+
+    #[inline]
+    fn scale(&self, idx: u32, of: u32) -> u32 {
+        ((idx as u64 * self.shards as u64) / of as u64) as u32
+    }
+
+    /// Shard owning `node` (contiguous blocks, monotone in `node`).
+    #[inline]
+    pub fn node_shard(&self, node: u32) -> u32 {
+        self.scale(node.min(self.nodes - 1), self.nodes)
+    }
+
+    /// Shard owning a link, from its kind's anchoring index.
+    pub fn link_shard(&self, kind: Kind) -> u32 {
+        match kind {
+            Kind::AccelUp { node, .. }
+            | Kind::AccelDown { node, .. }
+            | Kind::MeshLane { node, .. }
+            | Kind::RingHop { node, .. }
+            | Kind::HostUp { node }
+            | Kind::HostDown { node }
+            | Kind::SwToNic { node, .. }
+            | Kind::NicToSw { node, .. }
+            | Kind::NicUp { node, .. }
+            | Kind::NicDown { node, .. } => self.node_shard(node),
+            Kind::LeafUp { leaf, .. }
+            | Kind::SpineDown { leaf, .. }
+            | Kind::AggUp { leaf, .. }
+            | Kind::AggDown { leaf, .. } => self.scale(leaf.min(self.leaves - 1), self.leaves),
+            Kind::CoreUp { pod, .. } | Kind::CoreDown { pod, .. } => {
+                self.scale(pod.min(self.pods - 1), self.pods)
+            }
+            Kind::DfLocal { group, .. } => self.scale(group.min(self.groups - 1), self.groups),
+            Kind::DfGlobal { from, .. } => self.scale(from.min(self.groups - 1), self.groups),
+        }
+    }
+
+    /// Per-link shard table for a compiled link array.
+    pub fn link_table(&self, kinds: &[Kind]) -> Vec<u32> {
+        kinds.iter().map(|&k| self.link_shard(k)).collect()
+    }
+
+    /// Per-accel shard table (`accel → shard of its node`).
+    pub fn accel_table(&self, topo: &Topology) -> Vec<u32> {
+        (0..topo.nodes * topo.accels_per_node)
+            .map(|a| self.node_shard(topo.accel_node(a)))
+            .collect()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1926,5 +2007,63 @@ mod tests {
         assert_eq!(df.kind_of(df.df_local(0, 0, 1)).label(), "df_local[g0.r0->r1]");
         assert_eq!(df.kind_of(df.df_global(0, 2)).label(), "df_global[g0->g2]");
         assert_eq!(df.kind_of(df.df_global(0, 2)).short_name(), "df_global");
+    }
+
+    #[test]
+    fn shard_map_partitions_nodes_contiguously() {
+        let t = topo32();
+        let m = ShardMap::new(&t, 4);
+        let mut seen = vec![0u32; 4];
+        let mut last = 0;
+        for node in 0..t.nodes {
+            let s = m.node_shard(node);
+            assert!(s >= last, "shards must be contiguous in node order");
+            assert!(s < 4);
+            seen[s as usize] += 1;
+            last = s;
+        }
+        assert_eq!(seen, vec![8, 8, 8, 8], "32 nodes over 4 shards");
+        // Every node-anchored link of a node lands on the node's shard.
+        for node in [0u32, 7, 15, 31] {
+            let s = m.node_shard(node);
+            assert_eq!(m.link_shard(Kind::AccelUp { node, accel: 0 }), s);
+            assert_eq!(m.link_shard(Kind::NicUp { node, nic: 0 }), s);
+            assert_eq!(m.link_shard(Kind::SwToNic { node, nic: 0 }), s);
+        }
+        // Accel table agrees with node_shard ∘ accel_node.
+        let at = m.accel_table(&t);
+        assert_eq!(at.len(), (t.nodes * t.accels_per_node) as usize);
+        for (a, &s) in at.iter().enumerate() {
+            assert_eq!(s, m.node_shard(t.accel_node(a as u32)));
+        }
+    }
+
+    #[test]
+    fn shard_map_clamps_and_anchors_trunks() {
+        let t = topo32();
+        // More shards than nodes clamps (no empty shards).
+        let m = ShardMap::new(&t, 1024);
+        assert_eq!(m.shards, t.nodes);
+        // shards = 1: everything on shard 0.
+        let one = ShardMap::new(&t, 1);
+        for node in 0..t.nodes {
+            assert_eq!(one.node_shard(node), 0);
+        }
+        // Trunks anchor by their upstream switch index, deterministically.
+        let m4 = ShardMap::new(&t, 4);
+        let s_leaf0 = m4.link_shard(Kind::LeafUp { leaf: 0, spine: 0 });
+        assert_eq!(m4.link_shard(Kind::SpineDown { spine: 3, leaf: 0 }), s_leaf0);
+        let ft = topo32_inter(crate::config::InterKind::FatTree3 { pods: 4, cores: 8 });
+        let mf = ShardMap::new(&ft, 4);
+        assert_eq!(
+            mf.link_shard(Kind::CoreUp { pod: 2, core: 1 }),
+            mf.link_shard(Kind::CoreDown { core: 5, pod: 2 })
+        );
+        let df = topo32_inter(crate::config::InterKind::Dragonfly { groups: 4 });
+        let md = ShardMap::new(&df, 4);
+        assert_eq!(
+            md.link_shard(Kind::DfLocal { group: 1, from: 0, to: 1 }),
+            md.link_shard(Kind::DfGlobal { from: 1, to: 3 })
+        );
     }
 }

@@ -68,6 +68,35 @@
 //! generators tie constantly, get a valid simulation either way but not
 //! a bit-identical one.
 //!
+//! ## Interior-hop cascade trains (EXPERIMENTS.md §Perf, iteration 4)
+//!
+//! Forwarding links (switch→NIC, NIC up-links, leaf/agg/core/dragonfly
+//! trunks) train their queued prefix too, whenever every unit routes to
+//! the same downstream link. Each unit's serialization start is the
+//! previous unit's completion, so downstream arrival times are
+//! precomputed exactly; only the train head reserves downstream space
+//! up front, every later unit commits its reservation lazily at its own
+//! settled boundary with a fresh `has_room` check, and a full queue at
+//! a boundary aborts the remainder and replays the scalar parking path
+//! verbatim. Observation settles *through the path*
+//! (`settle_through` walks `train_feeder` edges to a fixpoint),
+//! and construction caps every boundary at the next armed fault
+//! instant, so mid-train degrades/kills split at exact scalar times.
+//!
+//! ## Per-node event shards (EXPERIMENTS.md §Perf, iteration 4)
+//!
+//! [`crate::config::SimConfig::shards`] (run-phase; default 1 = the
+//! plain single-queue engine) splits the event queue into per-shard
+//! lanes routed by a contiguous node partition
+//! ([`crate::net::topo::ShardMap`]). Lanes share one global sequence
+//! counter, so the cross-lane merge pops the single queue's
+//! `(Time, seq)` order by construction and reports are bit-identical
+//! at any shard count (`tests/props_shards.rs`). Between event chunks,
+//! one scoped worker per shard precomputes routing and PCIe-table
+//! lookups for its links' head-of-queue units (`World::speculate`);
+//! hints are re-validated against full unit identity plus a
+//! fault-bumped epoch before use, and table misses are never cached.
+//!
 //! ## Flow-class telemetry (interference attribution)
 //!
 //! With `SimConfig::telemetry.enabled` (CLI `--telemetry`), every
@@ -105,7 +134,7 @@ use crate::metrics::{Collector, HistSummary, Histogram, Telemetry};
 pub use crate::metrics::{Class, LinkStat, TrafficClass};
 use crate::net::link::{Link, LinkModel, Waker};
 use crate::net::slab::Slab;
-use crate::net::topo::{Kind, Topology};
+use crate::net::topo::{Kind, ShardMap, Topology};
 use crate::rng::Rng;
 use crate::sim::{Engine, EventQueue, Model};
 use crate::traffic::collective::{self, Step};
@@ -417,6 +446,43 @@ pub enum Ev {
     TxEnd { link: u32 },
 }
 
+/// One speculative hint for a link ([`World::speculate`]): what
+/// `route_next_hop` and the PCIe-table search would return for the unit
+/// expected to start next on that link. Unit slab ids are reused, so a
+/// hint is validated by the full (uid, src, dst, payload) identity plus
+/// the fault epoch before use — and a stale hint that still matches all
+/// of those is benign by construction, because both cached results are
+/// pure functions of exactly those fields (plus fault state, covered by
+/// the epoch).
+#[derive(Clone, Copy, Debug)]
+struct SpecEntry {
+    /// Unit the hint was computed for (`u32::MAX` = empty slot).
+    uid: u32,
+    src: u32,
+    dst: u32,
+    payload: u32,
+    /// `World::spec_epoch` at computation time.
+    epoch: u32,
+    /// Cached `route_next_hop` result (`u32::MAX` = delivery hop).
+    next_hop: u32,
+    /// Cached PCIe-table base serialization time (`Time::MAX` = not a
+    /// PCIe link or no table hit — a miss is never cached, so the
+    /// `table_misses` counter stays bit-identical).
+    pcie_base: Time,
+}
+
+impl SpecEntry {
+    const INVALID: SpecEntry = SpecEntry {
+        uid: u32::MAX,
+        src: 0,
+        dst: 0,
+        payload: 0,
+        epoch: 0,
+        next_hop: u32::MAX,
+        pcie_base: Time::MAX,
+    };
+}
+
 /// Full world state (implements [`Model`]).
 pub struct World {
     /// The sweep point this world currently simulates.
@@ -479,6 +545,14 @@ pub struct World {
     /// Pool of waiter vectors so nested wake cascades (train settles
     /// inside a wake) stay allocation-free.
     wake_pool: Vec<Vec<Waker>>,
+    /// Per-link speculative hints filled off-thread by the event-shard
+    /// workers ([`World::speculate`]). Entries are validated against the
+    /// unit's identity and `spec_epoch` before use and only ever skip
+    /// recomputation — consuming or ignoring a hint is bit-identical.
+    spec: Vec<SpecEntry>,
+    /// Hint-invalidation epoch: bumped on every fault application (rate
+    /// or routing change), dropping all outstanding hints at once.
+    spec_epoch: u32,
 }
 
 /// Compile-phase product of world construction: everything invariant
@@ -721,6 +795,8 @@ impl WorldBlueprint {
             coalescing: cfg.coalescing,
             deadlocked: false,
             pcie_memo: vec![(u32::MAX, Time::ZERO); total],
+            spec: vec![SpecEntry::INVALID; total],
+            spec_epoch: 0,
             telemetry: if cfg.telemetry.enabled {
                 Some(Box::new(Telemetry::new(total, accels, end, cfg.telemetry.bins)))
             } else {
@@ -903,6 +979,8 @@ impl World {
         for memo in &mut self.pcie_memo {
             *memo = (u32::MAX, Time::ZERO);
         }
+        self.spec.fill(SpecEntry::INVALID);
+        self.spec_epoch = 0;
         if let Some(cs) = self.coll.as_mut() {
             let Workload::Collective(spec) = bench else {
                 unreachable!("blueprint has a schedule but the workload is not collective")
@@ -1101,15 +1179,32 @@ impl World {
                 if self.pcie_memo[li].0 == unit.payload {
                     self.pcie_memo[li].1
                 } else {
-                    match self.blueprint.pcie_table.binary_search_by_key(&unit.payload, |e| e.0) {
-                        Ok(i) => {
-                            let lat = self.blueprint.pcie_table[i].1;
-                            self.pcie_memo[li] = (unit.payload, lat);
-                            lat
-                        }
-                        Err(_) => {
-                            self.table_misses += 1;
-                            p.latency(unit.payload as u64)
+                    let h = self.spec[li];
+                    if h.uid == uid
+                        && h.payload == unit.payload
+                        && h.epoch == self.spec_epoch
+                        && h.pcie_base != Time::MAX
+                    {
+                        // The shard workers already ran the table search
+                        // for this exact unit: commit the identical memo
+                        // update the search would make.
+                        self.pcie_memo[li] = (unit.payload, h.pcie_base);
+                        h.pcie_base
+                    } else {
+                        match self
+                            .blueprint
+                            .pcie_table
+                            .binary_search_by_key(&unit.payload, |e| e.0)
+                        {
+                            Ok(i) => {
+                                let lat = self.blueprint.pcie_table[i].1;
+                                self.pcie_memo[li] = (unit.payload, lat);
+                                lat
+                            }
+                            Err(_) => {
+                                self.table_misses += 1;
+                                p.latency(unit.payload as u64)
+                            }
                         }
                     }
                 }
@@ -1178,6 +1273,82 @@ impl World {
                 self.topo.next_hop_faulted(kind, src, dst, &|l| f.speed[l as usize] > 0.0)
             }
             _ => self.topo.next_hop(kind, src, dst),
+        }
+    }
+
+    /// Shard routing tables for a sharded run ([`crate::net::topo::ShardMap`]):
+    /// per-link and per-accel shard ids from the node-contiguous
+    /// partition (run phase — never part of the blueprint).
+    pub fn shard_tables(&self, shards: u32) -> (Vec<u32>, Vec<u32>) {
+        let map = ShardMap::new(&self.topo, shards);
+        (map.link_table(&self.blueprint.kinds), map.accel_table(&self.topo))
+    }
+
+    /// Off-thread speculation pass between event chunks of a sharded
+    /// run: one worker per shard precomputes, for every link it owns,
+    /// the routing and PCIe-table lookups the hot path will need for
+    /// that link's next-to-start unit. The event loop itself stays
+    /// strictly sequential — workers touch nothing but immutable state
+    /// and return hints, and `try_start` / `ser_time` validate every
+    /// hint against the unit's identity and the fault epoch before
+    /// trusting it. The event sequence and all observable state are
+    /// bit-identical whether a hint hits, misses or was never computed
+    /// (`tests/props_shards.rs`).
+    pub(crate) fn speculate(&mut self, shard_links: &[Vec<u32>]) {
+        let epoch = self.spec_epoch;
+        let topo = &self.topo;
+        let kinds: &[Kind] = &self.blueprint.kinds;
+        let table: &[(u32, Time)] = &self.blueprint.pcie_table;
+        let links: &[Link] = &self.links;
+        let units = &self.units;
+        let fault = self.faults.as_ref().map(|f| (f.routing_dirty, f.speed.as_slice()));
+        let hints = crate::coordinator::pool::run_sharded(shard_links.len() as u32, |s| {
+            let mut out = Vec::new();
+            for &l in &shard_links[s as usize] {
+                let li = l as usize;
+                let link = &links[li];
+                // The head is in flight while busy; the unit the hot
+                // path routes and serializes next is the one behind it.
+                let pos = usize::from(link.busy);
+                let Some(&uid) = link.queue.get(pos) else { continue };
+                let u = *units.get(uid);
+                let kind = kinds[li];
+                let next_hop = match fault {
+                    Some((true, speed)) => {
+                        topo.next_hop_faulted(kind, u.src, u.dst, &|x| speed[x as usize] > 0.0)
+                    }
+                    _ => topo.next_hop(kind, u.src, u.dst),
+                };
+                let pcie_base = match &link.model {
+                    LinkModel::Pcie(_) => {
+                        match table.binary_search_by_key(&u.payload, |e| e.0) {
+                            Ok(i) => table[i].1,
+                            // A miss is never cached: the hot path must
+                            // run (and count) it itself.
+                            Err(_) => Time::MAX,
+                        }
+                    }
+                    LinkModel::Raw(_) => Time::MAX,
+                };
+                out.push((
+                    li,
+                    SpecEntry {
+                        uid,
+                        src: u.src,
+                        dst: u.dst,
+                        payload: u.payload,
+                        epoch,
+                        next_hop: next_hop.unwrap_or(u32::MAX),
+                        pcie_base,
+                    },
+                ));
+            }
+            out
+        });
+        for shard in hints {
+            for (li, e) in shard {
+                self.spec[li] = e;
+            }
         }
     }
 
@@ -1251,8 +1422,8 @@ impl World {
     /// per-unit boundaries when parking on it.
     fn pump(&mut self, accel: u32, now: Time, q: &mut EventQueue<Ev>) {
         // Star / host-tree egress is destination-independent (always the
-        // accel up-link, which never hosts trains): hoist it out of the
-        // per-transaction loop, keeping the original hot path.
+        // accel up-link): hoist the route out of the per-transaction
+        // loop, keeping the original hot path.
         let fixed_up = match self.topo.fabric {
             FabricKind::SwitchStar | FabricKind::HostTree => {
                 let node = self.topo.accel_node(accel);
@@ -1265,16 +1436,21 @@ impl World {
             let mut mid = head;
             let mut up = fixed_up
                 .unwrap_or_else(|| self.route_egress(accel, self.msgs.get(mid).dst));
-            // Materialize due train units on the (fabric-routed) egress
-            // link before the credit check, so it sees exactly the
-            // scalar engine's occupancy. The settle cascade can feed
-            // back into this very feeder (delivery → collective advance
-            // → inject → pump), so head state is re-resolved after it.
-            if fixed_up.is_none() && !self.links[up as usize].train_ends.is_empty() {
-                self.settle(up, now, q);
+            // Materialize due train units on the egress link before the
+            // credit check, so it sees exactly the scalar engine's
+            // occupancy. With hop-generic trains even an accel up-link
+            // can run a forwarding train, so this applies on every
+            // fabric. The settle cascade can feed back into this very
+            // feeder (delivery → collective advance → inject → pump),
+            // so head state is re-resolved after it.
+            if !self.links[up as usize].train_ends.is_empty()
+                || self.links[up as usize].train_feeder != u32::MAX
+            {
+                self.settle_through(up, now, q);
                 let Some(&head) = self.feeders[accel as usize].backlog.front() else { return };
                 mid = head;
-                up = self.route_egress(accel, self.msgs.get(mid).dst);
+                up = fixed_up
+                    .unwrap_or_else(|| self.route_egress(accel, self.msgs.get(mid).dst));
             }
             let f = &self.feeders[accel as usize];
             let left = f.head_txns_left;
@@ -1360,14 +1536,29 @@ impl World {
             (u.src, u.dst)
         };
         let kind = self.blueprint.kinds[li];
-        match self.route_next_hop(kind, src, dst) {
+        // Consume the shard workers' routing hint when it is provably
+        // the same computation: same unit identity, same fault epoch
+        // (routing does not depend on payload).
+        let h = self.spec[li];
+        let routed = if h.uid == uid && h.epoch == self.spec_epoch && h.src == src && h.dst == dst
+        {
+            let r = if h.next_hop == u32::MAX { None } else { Some(h.next_hop) };
+            debug_assert_eq!(r, self.route_next_hop(kind, src, dst), "stale routing hint");
+            r
+        } else {
+            self.route_next_hop(kind, src, dst)
+        };
+        match routed {
             Some(nl) => {
                 let ni = nl as usize;
                 // Materialize any due train units at the next queue before
-                // observing its occupancy, so credit decisions see exactly
-                // the scalar engine's state at this instant.
-                if !self.links[ni].train_ends.is_empty() {
-                    self.settle(nl, now, q);
+                // observing its occupancy — including units still inside
+                // an upstream feeder's cascade — so credit decisions see
+                // exactly the scalar engine's state at this instant.
+                if !self.links[ni].train_ends.is_empty()
+                    || self.links[ni].train_feeder != u32::MAX
+                {
+                    self.settle_through(nl, now, q);
                     if self.links[li].busy {
                         // The settle cascade re-entered and started `l`.
                         return;
@@ -1417,7 +1608,51 @@ impl World {
                     t.on_busy(l, class, ser);
                 }
                 self.links[li].busy = true;
-                self.schedule_fire(l, now + ser, q);
+                let head_end = now + ser;
+                // Hop-generic cascade train: with coalescing on, no parked
+                // waiters needing per-unit wakes and no other feeder
+                // already training into `nl`, extend the serialization
+                // into one event covering the queued prefix that forwards
+                // to the same next hop. Only the head holds a downstream
+                // reservation now; each later unit's credit grab is
+                // deferred to its own boundary (World::settle_interior),
+                // so no observer ever sees occupancy the scalar engine
+                // would not. The train never crosses the next fault
+                // instant: a unit starting after it must re-resolve rate
+                // and routing under post-fault state, so the train ends
+                // at the segment boundary (run_phase splits there too).
+                if self.coalescing
+                    && self.links[li].waiters.is_empty()
+                    && self.links[ni].train_feeder == u32::MAX
+                    && self.links[li].queue.len() > 1
+                {
+                    let fault_cap = self.next_fault_at().unwrap_or(Time::MAX);
+                    let mut t_end = head_end;
+                    let n = self.links[li].queue.len();
+                    let mut k = 1;
+                    while k < n && t_end <= fault_cap {
+                        let uid_k = self.links[li].queue[k];
+                        let u = *self.units.get(uid_k);
+                        if self.route_next_hop(kind, u.src, u.dst) != Some(nl) {
+                            break;
+                        }
+                        if self.links[li].train_ends.is_empty() {
+                            self.links[li].train_ends.push_back(head_end);
+                        }
+                        let ser_k = self.ser_time(l, uid_k);
+                        t_end = t_end + ser_k;
+                        self.links[li].train_ends.push_back(t_end);
+                        k += 1;
+                    }
+                    if !self.links[li].train_ends.is_empty() {
+                        self.links[li].train_active = true;
+                        self.links[li].train_next = nl;
+                        self.links[ni].train_feeder = l;
+                        self.schedule_fire(l, t_end, q);
+                        return;
+                    }
+                }
+                self.schedule_fire(l, head_end, q);
             }
             None => self.start_delivery(l, now, q),
         }
@@ -1458,10 +1693,18 @@ impl World {
         let mixed_fabric = matches!(self.topo.fabric, FabricKind::Mesh | FabricKind::Ring);
         let mut tally = std::mem::take(&mut self.tally_scratch);
         tally.clear();
+        // A unit that would start serializing after the next fault
+        // instant must see post-fault rates, so the train stops at the
+        // segment boundary (the scalar engine re-computes its ser_time
+        // then; recorded pre-fault times would diverge under a degrade).
+        let fault_cap = self.next_fault_at().unwrap_or(Time::MAX);
         let mut t = now;
         let n = self.links[li].queue.len();
         let mut k = 0;
         while k < n {
+            if k > 0 && t > fault_cap {
+                break;
+            }
             let uid = self.links[li].queue[k];
             // On the non-star fabrics a link can queue delivering units
             // behind units that still forward (a mesh lane serves both
@@ -1516,14 +1759,20 @@ impl World {
         self.schedule_fire(l, t, q);
     }
 
-    /// Materialize every due unit (completion time ≤ `t`) of the delivery
-    /// train on link `l`, replaying the exact scalar per-unit sequence —
-    /// release, waiter wake-up, delivery — at each unit's recorded
-    /// completion time. Called from the train's own `TxEnd` event and
-    /// from any code about to observe the link's queue state, so the
-    /// coalesced engine is indistinguishable from the scalar one at every
-    /// simulated instant (equivalence suite: `tests/props_coalesce.rs`).
+    /// Materialize every due unit (completion time ≤ `t`) of the train on
+    /// link `l`, replaying the exact scalar per-unit sequence at each
+    /// unit's recorded completion time. Called from the train's own
+    /// `TxEnd` event and from any code about to observe the link's queue
+    /// state, so the coalesced engine is indistinguishable from the
+    /// scalar one at every simulated instant (equivalence suite:
+    /// `tests/props_coalesce.rs`). Delivery trains (`train_next` unset)
+    /// deliver each unit; forwarding trains hand each unit to the next
+    /// hop via [`World::settle_interior`].
     fn settle(&mut self, l: u32, t: Time, q: &mut EventQueue<Ev>) {
+        if self.links[l as usize].train_next != u32::MAX {
+            self.settle_interior(l, t, q);
+            return;
+        }
         let li = l as usize;
         while let Some(&end) = self.links[li].train_ends.front() {
             if end > t {
@@ -1548,13 +1797,169 @@ impl World {
         }
     }
 
+    /// Forwarding-hop counterpart of [`World::settle`]: each due boundary
+    /// replays, at its recorded timestamp, exactly what the scalar engine
+    /// does at a forwarding `TxEnd` — release this queue, account wire
+    /// bytes, hand the unit to `train_next`, and run the *next* unit's
+    /// credit check (reserve downstream, or abort the train and park,
+    /// precisely as the scalar engine would have parked). The next unit's
+    /// commit happens before any callout that could re-enter this settle,
+    /// and a unit whose `next` pointer is still unset marks a boundary an
+    /// enclosing frame popped but has not committed yet — nested frames
+    /// defer to it.
+    fn settle_interior(&mut self, l: u32, t: Time, q: &mut EventQueue<Ev>) {
+        let li = l as usize;
+        loop {
+            let Some(&end) = self.links[li].train_ends.front() else { return };
+            if end > t {
+                return;
+            }
+            let nl = self.links[li].train_next;
+            if nl == u32::MAX {
+                return; // train aborted by an enclosing frame
+            }
+            let ni = nl as usize;
+            let uid = *self.links[li].queue.front().expect("train unit at queue head");
+            if self.units.get(uid).next != nl {
+                return; // boundary mid-commit in an enclosing frame
+            }
+            self.links[li].train_ends.pop_front();
+            self.links[li].queue.pop_front();
+            let unit = *self.units.get(uid);
+            let wire_here = self.wire_bytes(self.blueprint.kinds[li], unit.payload);
+            self.links[li].release(wire_here);
+            self.links[li].tx_bytes += wire_here;
+            if let Some(tel) = self.telemetry.as_mut() {
+                tel.on_wire(l, self.msgs.get(unit.msg).class, wire_here, end);
+            }
+            if let Some(&next_end) = self.links[li].train_ends.front() {
+                let nuid = *self.links[li].queue.front().expect("train shorter than queue");
+                // The next queue's own due units materialize first, so
+                // the credit check sees the scalar engine's occupancy.
+                // (`nl`'s feeder is this very train, so a plain settle
+                // suffices — no chain to walk.)
+                if !self.links[ni].train_ends.is_empty() {
+                    self.settle(nl, end, q);
+                }
+                let npay = self.units.get(nuid).payload;
+                let wire_next = self.wire_bytes(self.blueprint.kinds[ni], npay);
+                if self.links[ni].has_room(wire_next) {
+                    self.links[ni].reserve(wire_next);
+                    if let Some(tel) = self.telemetry.as_mut() {
+                        tel.on_queue(nl, self.links[ni].used_b);
+                    }
+                    self.units.get_mut(nuid).next = nl;
+                    if let Some(tel) = self.telemetry.as_mut() {
+                        let class = self.msgs.get(self.units.get(nuid).msg).class;
+                        let ser = Time::from_ps(next_end.as_ps() - end.as_ps());
+                        tel.on_busy(l, class, ser);
+                    }
+                } else {
+                    // Downstream space the construction assumed never
+                    // freed up: the scalar engine would park here, so
+                    // abort the rest of the train (queued units keep
+                    // their unset `next` and no reservations) and park.
+                    self.links[li].train_ends.clear();
+                    self.links[li].train_active = false;
+                    self.links[li].busy = false;
+                    self.links[li].next_fire = Time::MAX;
+                    self.links[li].train_next = u32::MAX;
+                    self.links[ni].train_feeder = u32::MAX;
+                    if !self.links[li].parked {
+                        self.links[ni].add_waiter(Waker::Link(l));
+                        self.links[li].parked = true;
+                        self.links[li].waiting_on = nl;
+                        if let Some(tel) = self.telemetry.as_mut() {
+                            let blocked = self.msgs.get(self.units.get(nuid).msg).class;
+                            let occupant = match self.links[ni].queue.front() {
+                                Some(&huid) => self.msgs.get(self.units.get(huid).msg).class,
+                                None => blocked,
+                            };
+                            tel.park_link(l, nl, blocked, occupant, end);
+                        }
+                        self.truncate_train(nl, q);
+                        if self.closes_wait_cycle(l) {
+                            self.deadlocked = true;
+                        }
+                    }
+                }
+            }
+            self.wake_waiters(l, end, q);
+            self.units.get_mut(uid).prop_ps += self.links[li].prop.as_ps() as u32;
+            self.links[ni].push_reserved(uid);
+            self.try_start(nl, end, q);
+        }
+    }
+
+    /// Settle link `l` *and* the feeder cascade training into it before
+    /// observing its state: a forwarding train's boundaries commit
+    /// reservations and arrivals into its target lazily, so the target's
+    /// occupancy is exact only after the feeder's due boundaries
+    /// materialize. Feeder boundary times are fixed at construction
+    /// (independent of the feeder's own upstream), so one level at a
+    /// time suffices; the loop re-reads the pointer because a settle can
+    /// retire one feeder and install another, and it terminates because
+    /// every iteration materializes at least one due boundary (this also
+    /// keeps it safe on the Ring fabric, where feeder chains can close a
+    /// physical cycle).
+    fn settle_through(&mut self, l: u32, t: Time, q: &mut EventQueue<Ev>) {
+        loop {
+            let li = l as usize;
+            let f = self.links[li].train_feeder;
+            let f_due = f != u32::MAX
+                && self.links[f as usize].train_ends.front().map_or(false, |&e| e <= t);
+            let target = if f_due {
+                f
+            } else if self.links[li].train_ends.front().map_or(false, |&e| e <= t) {
+                l
+            } else {
+                return;
+            };
+            let before = (
+                self.links[target as usize].train_ends.len(),
+                self.links[target as usize].train_ends.front().copied(),
+            );
+            self.settle(target, t, q);
+            let after = (
+                self.links[target as usize].train_ends.len(),
+                self.links[target as usize].train_ends.front().copied(),
+            );
+            if after == before {
+                // A boundary is mid-commit in an enclosing settle frame
+                // (settle_interior's re-entrancy guard): that frame will
+                // finish materializing it — don't spin on it here.
+                return;
+            }
+        }
+    }
+
     /// Materialize due train units on every link up to time `t` (used at
-    /// the warm-up / measure-window boundaries so wire-byte snapshots and
-    /// boundary metrics observe exactly the scalar state).
+    /// the warm-up / measure-window boundaries and just before a fault
+    /// applies, so wire-byte snapshots, boundary metrics and fault edges
+    /// observe exactly the scalar state). Runs to a fixpoint: settling
+    /// one train can hand units to links earlier in id order and start
+    /// new trains there whose boundaries are already due.
     pub fn settle_trains(&mut self, t: Time, q: &mut EventQueue<Ev>) {
-        for l in 0..self.links.len() as u32 {
-            if !self.links[l as usize].train_ends.is_empty() {
+        loop {
+            let mut any = false;
+            for l in 0..self.links.len() as u32 {
+                let li = l as usize;
+                if !self.links[li].train_ends.front().map_or(false, |&e| e <= t) {
+                    continue;
+                }
+                let before = (
+                    self.links[li].train_ends.len(),
+                    self.links[li].train_ends.front().copied(),
+                );
                 self.settle(l, t, q);
+                let after = (
+                    self.links[li].train_ends.len(),
+                    self.links[li].train_ends.front().copied(),
+                );
+                any |= after != before;
+            }
+            if !any {
+                return;
             }
         }
     }
@@ -1573,6 +1978,24 @@ impl World {
     /// all. Events scheduled at exactly a fault's time dispatch first
     /// (the fault acts "just after t").
     pub fn apply_due_faults(&mut self, now: Time, q: &mut EventQueue<Ev>) {
+        // Materialize every recorded train boundary before the first
+        // factor change: recorded per-unit times were computed under
+        // pre-fault rates and routing, and train construction caps every
+        // boundary at the fault instant (start_delivery / try_start), so
+        // settling first replays exactly the scalar engine's
+        // events-before-fault order. Only the in-flight unit survives —
+        // the same unit whose serialization the scalar engine also has
+        // in flight when the fault lands.
+        {
+            let due = self
+                .faults
+                .as_ref()
+                .and_then(|f| f.timeline.get(f.next))
+                .map_or(false, |e| e.at <= now);
+            if due {
+                self.settle_trains(now, q);
+            }
+        }
         loop {
             let Some(f) = self.faults.as_ref() else { return };
             let Some(entry) = f.timeline.get(f.next) else { return };
@@ -1591,6 +2014,10 @@ impl World {
     /// Set link `l`'s rate factor, handling the kill and recover edges.
     fn apply_fault_to_link(&mut self, l: u32, factor: f64, now: Time, q: &mut EventQueue<Ev>) {
         let li = l as usize;
+        // Any rate/routing change invalidates every outstanding
+        // speculative hint (they were computed under the old fault
+        // state).
+        self.spec_epoch = self.spec_epoch.wrapping_add(1);
         let f = self.faults.as_mut().expect("faults active");
         let old = f.speed[li];
         f.speed[li] = factor;
@@ -1610,6 +2037,13 @@ impl World {
                 self.links[li].train_active = false;
                 self.links[li].train_ends.clear();
                 self.links[li].next_fire = Time::MAX;
+                let tn = self.links[li].train_next;
+                if tn != u32::MAX {
+                    self.links[li].train_next = u32::MAX;
+                    if self.links[tn as usize].train_feeder == l {
+                        self.links[tn as usize].train_feeder = u32::MAX;
+                    }
+                }
                 if let Some(&uid) = self.links[li].queue.front() {
                     let next = self.units.get(uid).next;
                     if next != u32::MAX && next != l {
@@ -1766,7 +2200,16 @@ impl World {
         if self.links[li].train_active {
             self.settle(l, now, q);
             if self.links[li].train_ends.is_empty() {
-                // Train fully delivered: restart (possibly a new train).
+                // Train fully materialized: retire it (drop the feeder
+                // edge a forwarding train holds on its target) and
+                // restart — possibly as a new train.
+                let tn = self.links[li].train_next;
+                if tn != u32::MAX {
+                    self.links[li].train_next = u32::MAX;
+                    if self.links[tn as usize].train_feeder == l {
+                        self.links[tn as usize].train_feeder = u32::MAX;
+                    }
+                }
                 self.links[li].train_active = false;
                 self.links[li].busy = false;
                 self.try_start(l, now, q);
@@ -2261,6 +2704,25 @@ impl World {
                     l.parked, l.waiting_on
                 ));
             }
+            if l.train_next != u32::MAX {
+                if !l.train_active {
+                    return Err(format!("link {i}: forwarding-train target without a train"));
+                }
+                if self.links[l.train_next as usize].train_feeder != i as u32 {
+                    return Err(format!(
+                        "link {i}: target {} does not point back at its feeder",
+                        l.train_next
+                    ));
+                }
+            }
+            if l.train_feeder != u32::MAX
+                && self.links[l.train_feeder as usize].train_next != i as u32
+            {
+                return Err(format!(
+                    "link {i}: feeder {} does not train into this link",
+                    l.train_feeder
+                ));
+            }
         }
         Ok(())
     }
@@ -2583,6 +3045,10 @@ impl RunBudget {
 /// Convenience wrapper: build, prime, run warm-up + measurement, report.
 pub struct Sim {
     engine: Engine<World>,
+    /// Per-shard link ownership for sharded runs (`SimConfig::shards`):
+    /// `shard_links[s]` lists the links whose speculative hints shard
+    /// `s`'s worker computes. Empty = unsharded (plain engine path).
+    shard_links: Vec<Vec<u32>>,
 }
 
 impl Sim {
@@ -2610,9 +3076,56 @@ impl Sim {
     }
 
     fn primed(world: World) -> Sim {
-        let mut sim = Sim { engine: Engine::new(world) };
+        let mut sim = Sim { engine: Engine::new(world), shard_links: Vec::new() };
+        sim.install_shards();
         sim.prime_queue();
         sim
+    }
+
+    /// Install (or tear down) the laned event queue and shard partition
+    /// for the current `SimConfig::shards`. Must run on an empty queue
+    /// — called from [`Sim::primed`] and [`Sim::reset`] before priming.
+    /// With one shard the plain single-heap engine is kept untouched.
+    ///
+    /// Lanes share one global sequence counter, so the merged pop order
+    /// is exactly the single queue's `(Time, seq)` order — the shard
+    /// index is a structural third tie-break that never actually
+    /// decides (see `sim::queue`). Sharding is therefore bit-identical
+    /// by construction; the shard workers only precompute hints
+    /// ([`World::speculate`]).
+    fn install_shards(&mut self) {
+        let shards = self.engine.model.cfg.shards;
+        self.shard_links.clear();
+        if shards <= 1 {
+            self.engine.queue.set_lanes(1, Box::new(|_| 0));
+            return;
+        }
+        let (link_table, accel_table) = self.engine.model.shard_tables(shards);
+        // ShardMap clamps to the node count: size the partition by the
+        // tables, not the requested count.
+        let n = link_table.iter().chain(&accel_table).copied().max().map_or(1, |m| m + 1);
+        self.shard_links = vec![Vec::new(); n as usize];
+        for (l, &s) in link_table.iter().enumerate() {
+            self.shard_links[s as usize].push(l as u32);
+        }
+        self.engine.queue.set_lanes(
+            n,
+            Box::new(move |ev: &Ev| match *ev {
+                Ev::Gen { accel } => accel_table[accel as usize],
+                Ev::TxEnd { link } => link_table[link as usize],
+            }),
+        );
+    }
+
+    /// Refresh the speculative hint table between event chunks of a
+    /// sharded run (no-op when unsharded).
+    fn speculate(&mut self) {
+        if self.shard_links.is_empty() {
+            return;
+        }
+        let shard_links = std::mem::take(&mut self.shard_links);
+        self.engine.model.speculate(&shard_links);
+        self.shard_links = shard_links;
     }
 
     fn prime_queue(&mut self) {
@@ -2631,6 +3144,9 @@ impl Sim {
         // it succeeds is the event queue wiped and re-primed.
         self.engine.model.reset(cfg)?;
         self.engine.reset();
+        // `shards` is a run-phase knob: points sharing a blueprint may
+        // change it between resets (the queue is empty here).
+        self.install_shards();
         self.prime_queue();
         Ok(())
     }
@@ -2750,7 +3266,22 @@ impl Sim {
                 _ => until,
             };
             if budget.unlimited() {
-                events += self.engine.run_until(stop).events;
+                if self.shard_links.is_empty() {
+                    events += self.engine.run_until(stop).events;
+                } else {
+                    // Sharded run: dispatch in chunks, refreshing the
+                    // speculative hint table from the shard workers
+                    // between chunks. The chunk size amortizes the
+                    // fork/join over thousands of dispatches.
+                    loop {
+                        let (s, capped) = self.engine.run_until_capped(stop, RunBudget::CHUNK);
+                        events += s.events;
+                        if !capped {
+                            break;
+                        }
+                        self.speculate();
+                    }
+                }
             } else {
                 loop {
                     let room = budget.chunk().map_err(anyhow::Error::new)?;
@@ -2760,6 +3291,7 @@ impl Sim {
                     if !capped {
                         break;
                     }
+                    self.speculate();
                 }
             }
             if stop == until {
@@ -2794,6 +3326,46 @@ mod tests {
         cfg.warmup_us = 10.0;
         cfg.measure_us = 10.0;
         cfg
+    }
+
+    #[test]
+    fn sharded_run_is_bit_identical_to_single_queue() {
+        // The determinism suite (`tests/props_shards.rs`) sweeps the
+        // full config domain; this is the smoke form on the canonical
+        // point, saturated enough that shards interleave heavily.
+        let base =
+            Sim::new(small_cfg(0.8, Pattern::C3), &NativeProvider, BenchMode::None).unwrap().run();
+        for shards in [2u32, 4, 32] {
+            let mut cfg = small_cfg(0.8, Pattern::C3);
+            cfg.shards = shards;
+            let r = Sim::new(cfg, &NativeProvider, BenchMode::None).unwrap().run();
+            assert_eq!(r.events, base.events, "shards={shards}");
+            assert_eq!(r.delivered_msgs, base.delivered_msgs, "shards={shards}");
+            assert_eq!(r.offered_msgs, base.offered_msgs, "shards={shards}");
+            assert_eq!(r.intra_tput_gbs, base.intra_tput_gbs, "shards={shards}");
+            assert_eq!(r.inter_tput_gbs, base.inter_tput_gbs, "shards={shards}");
+            assert_eq!(r.intra_lat.mean_ns, base.intra_lat.mean_ns, "shards={shards}");
+            assert_eq!(r.fct.p99_ns, base.fct.p99_ns, "shards={shards}");
+        }
+    }
+
+    #[test]
+    fn shards_is_a_run_phase_knob_across_reset() {
+        // shards 1 → 4 → 1 across resets of one sim: every run matches
+        // the fresh single-queue result bit-for-bit.
+        let base =
+            Sim::new(small_cfg(0.6, Pattern::C2), &NativeProvider, BenchMode::None).unwrap().run();
+        let mut sim =
+            Sim::new(small_cfg(0.6, Pattern::C2), &NativeProvider, BenchMode::None).unwrap();
+        for shards in [4u32, 1, 2] {
+            let mut cfg = small_cfg(0.6, Pattern::C2);
+            cfg.shards = shards;
+            sim.reset(cfg).unwrap();
+            let r = sim.try_run_mut().unwrap();
+            assert_eq!(r.events, base.events, "shards={shards}");
+            assert_eq!(r.delivered_msgs, base.delivered_msgs, "shards={shards}");
+            assert_eq!(r.intra_lat.p99_ns, base.intra_lat.p99_ns, "shards={shards}");
+        }
     }
 
     #[test]

@@ -47,20 +47,94 @@ impl<E> Ord for Entry<E> {
     }
 }
 
+/// One per-shard sub-queue of a laned [`EventQueue`]: its own heap and
+/// front-slot cache, sharing the owning queue's global `seq` counter.
+struct Lane<E> {
+    heap: BinaryHeap<Reverse<Entry<E>>>,
+    front: Option<Entry<E>>,
+}
+
+impl<E> Lane<E> {
+    /// Key of this lane's earliest event, if any.
+    #[inline]
+    fn min_key(&self) -> Option<(Time, u64)> {
+        match (&self.front, self.heap.peek()) {
+            (Some(e), _) => Some(e.key),
+            (None, Some(Reverse(top))) => Some(top.key),
+            (None, None) => None,
+        }
+    }
+}
+
 /// Time-ordered event queue with FIFO tie-breaking and a
 /// front-slot minimum cache (see the module docs).
+///
+/// # Lanes (per-shard sub-queues)
+///
+/// [`EventQueue::set_lanes`] partitions the queue into per-shard lanes,
+/// each with its own heap and front slot, routed by a caller-supplied
+/// event → shard function. The insertion counter `seq` stays **global**
+/// across lanes, and pops always take the smallest `(Time, seq)` over
+/// all lane minima — so the dispatch order is bit-identical to the
+/// single-heap queue by construction. The merge order is documented as
+/// `(Time, seq, shard)`: the shard index is the structural third
+/// tie-break, which never actually fires because `seq` is globally
+/// unique. The laned layout exists so per-shard workers can inspect and
+/// (in later work) drain their own event population without touching
+/// other shards' heaps.
 pub struct EventQueue<E> {
     heap: BinaryHeap<Reverse<Entry<E>>>,
     /// Cached global minimum: always ≤ every entry in `heap`, so pops and
     /// peeks hit this slot without a heap operation when it is occupied.
     front: Option<Entry<E>>,
     seq: u64,
+    /// Per-shard sub-queues (empty = plain single-heap mode; `heap` and
+    /// `front` above are unused while lanes are installed).
+    lanes: Vec<Lane<E>>,
+    /// Event → shard routing for laned mode (index is taken modulo the
+    /// lane count).
+    router: Option<Box<dyn Fn(&E) -> u32 + Send>>,
 }
 
 impl<E> EventQueue<E> {
     /// An empty queue (preallocated for the typical event population).
     pub fn new() -> Self {
-        EventQueue { heap: BinaryHeap::with_capacity(1024), front: None, seq: 0 }
+        EventQueue {
+            heap: BinaryHeap::with_capacity(1024),
+            front: None,
+            seq: 0,
+            lanes: Vec::new(),
+            router: None,
+        }
+    }
+
+    /// Partition into `n` per-shard lanes routed by `router`. Must be
+    /// called on an empty queue (install lanes before priming). With
+    /// `n == 1` the single-heap mode is kept — one lane would only add
+    /// indirection for an identical order.
+    pub fn set_lanes(&mut self, n: u32, router: Box<dyn Fn(&E) -> u32 + Send>) {
+        assert!(self.is_empty(), "lanes must be installed on an empty queue");
+        if n <= 1 {
+            self.lanes.clear();
+            self.router = None;
+            return;
+        }
+        let per = (1024 / n as usize).max(64);
+        self.lanes = (0..n)
+            .map(|_| Lane { heap: BinaryHeap::with_capacity(per), front: None })
+            .collect();
+        self.router = Some(router);
+    }
+
+    /// Number of installed lanes (0 in single-heap mode).
+    pub fn lane_count(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// Pending events in lane `i` (laned mode only).
+    pub fn lane_len(&self, i: usize) -> usize {
+        let lane = &self.lanes[i];
+        lane.heap.len() + usize::from(lane.front.is_some())
     }
 
     #[inline]
@@ -69,6 +143,23 @@ impl<E> EventQueue<E> {
         let seq = self.seq;
         self.seq += 1;
         let entry = Entry { key: (at, seq), event };
+        if let Some(router) = &self.router {
+            let idx = router(&entry.event) as usize % self.lanes.len();
+            let lane = &mut self.lanes[idx];
+            let goes_front = match (&lane.front, lane.heap.peek()) {
+                (Some(f), _) => entry.key < f.key,
+                (None, Some(Reverse(top))) => entry.key < top.key,
+                (None, None) => true,
+            };
+            if goes_front {
+                if let Some(old) = lane.front.replace(entry) {
+                    lane.heap.push(Reverse(old));
+                }
+            } else {
+                lane.heap.push(Reverse(entry));
+            }
+            return;
+        }
         let goes_front = match (&self.front, self.heap.peek()) {
             (Some(f), _) => entry.key < f.key,
             (None, Some(Reverse(top))) => entry.key < top.key,
@@ -84,9 +175,33 @@ impl<E> EventQueue<E> {
         }
     }
 
+    /// Index of the lane holding the globally earliest event: smallest
+    /// `(Time, seq)` over all lane minima, lowest lane index on the
+    /// (impossible, `seq` is unique) tie.
+    #[inline]
+    fn min_lane(&self) -> Option<usize> {
+        let mut best: Option<(usize, (Time, u64))> = None;
+        for (i, lane) in self.lanes.iter().enumerate() {
+            if let Some(k) = lane.min_key() {
+                if best.map_or(true, |(_, bk)| k < bk) {
+                    best = Some((i, k));
+                }
+            }
+        }
+        best.map(|(i, _)| i)
+    }
+
     #[inline]
     /// Remove and return the earliest event.
     pub fn pop(&mut self) -> Option<(Time, E)> {
+        if !self.lanes.is_empty() {
+            let i = self.min_lane()?;
+            let lane = &mut self.lanes[i];
+            if let Some(e) = lane.front.take() {
+                return Some((e.key.0, e.event));
+            }
+            return lane.heap.pop().map(|Reverse(e)| (e.key.0, e.event));
+        }
         if let Some(e) = self.front.take() {
             return Some((e.key.0, e.event));
         }
@@ -106,6 +221,9 @@ impl<E> EventQueue<E> {
     #[inline]
     /// Key `(time, seq)` of the earliest event without removing it.
     pub fn peek_key(&self) -> Option<(Time, u64)> {
+        if !self.lanes.is_empty() {
+            return self.lanes.iter().filter_map(Lane::min_key).min();
+        }
         match &self.front {
             Some(e) => Some(e.key),
             None => self.heap.peek().map(|Reverse(e)| e.key),
@@ -121,24 +239,32 @@ impl<E> EventQueue<E> {
         self.heap.clear();
         self.front = None;
         self.seq = 0;
+        for lane in &mut self.lanes {
+            lane.heap.clear();
+            lane.front = None;
+        }
     }
 
     /// Reserved heap capacity (allocation-reuse assertions: a cleared,
     /// refilled queue must not grow this).
     pub fn capacity(&self) -> usize {
-        self.heap.capacity()
+        self.heap.capacity() + self.lanes.iter().map(|l| l.heap.capacity()).sum::<usize>()
     }
 
     #[inline]
     /// Number of pending events.
     pub fn len(&self) -> usize {
-        self.heap.len() + usize::from(self.front.is_some())
+        self.heap.len()
+            + usize::from(self.front.is_some())
+            + self.lanes.iter().map(|l| l.heap.len() + usize::from(l.front.is_some())).sum::<usize>()
     }
 
     #[inline]
     /// True when no events are pending.
     pub fn is_empty(&self) -> bool {
-        self.front.is_none() && self.heap.is_empty()
+        self.front.is_none()
+            && self.heap.is_empty()
+            && self.lanes.iter().all(|l| l.front.is_none() && l.heap.is_empty())
     }
 }
 
@@ -273,6 +399,82 @@ mod tests {
         }
         for i in 0..1000u32 {
             assert_eq!(q.pop().unwrap().1, i);
+        }
+    }
+
+    /// A laned queue must drain in exactly the order of the single-heap
+    /// queue — same events, same router-independent `(Time, seq)` merge.
+    #[test]
+    fn lanes_preserve_single_queue_order() {
+        for shards in [2u32, 3, 4, 7] {
+            let mut plain = EventQueue::new();
+            let mut laned = EventQueue::new();
+            laned.set_lanes(shards, Box::new(|e: &u32| *e));
+            let mut x = 2024u64;
+            for i in 0..4_000u32 {
+                x = x.wrapping_mul(6364136223846793005).wrapping_add(1);
+                let t = Time::from_ps(x % 733);
+                plain.push(t, i);
+                laned.push(t, i);
+            }
+            assert_eq!(laned.lane_count(), shards as usize);
+            loop {
+                let a = plain.pop();
+                let b = laned.pop();
+                assert_eq!(a, b);
+                if a.is_none() {
+                    break;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lanes_interleaved_push_pop_matches_plain() {
+        let mut plain = EventQueue::new();
+        let mut laned = EventQueue::new();
+        laned.set_lanes(4, Box::new(|e: &u32| *e % 5));
+        let mut x = 7u64;
+        for i in 0..3_000u32 {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1);
+            let t = Time::from_ps(x % 211);
+            plain.push(t, i);
+            laned.push(t, i);
+            if i % 3 == 1 {
+                assert_eq!(plain.pop(), laned.pop());
+                assert_eq!(plain.peek_key(), laned.peek_key());
+            }
+        }
+        while let Some(a) = plain.pop() {
+            assert_eq!(Some(a), laned.pop());
+        }
+        assert!(laned.is_empty());
+    }
+
+    #[test]
+    fn single_lane_request_keeps_plain_mode() {
+        let mut q: EventQueue<u8> = EventQueue::new();
+        q.set_lanes(1, Box::new(|_| 0));
+        assert_eq!(q.lane_count(), 0);
+        q.push(Time::ZERO, 9);
+        assert_eq!(q.pop(), Some((Time::ZERO, 9)));
+    }
+
+    #[test]
+    fn lanes_clear_resets_sequence() {
+        let mut q = EventQueue::new();
+        q.set_lanes(2, Box::new(|e: &u32| *e));
+        for i in 0..100u32 {
+            q.push(Time::from_ps(5), i);
+        }
+        q.clear();
+        assert!(q.is_empty());
+        assert_eq!(q.lane_count(), 2, "clear keeps the lane layout");
+        for i in 0..100u32 {
+            q.push(Time::from_ps(5), i);
+        }
+        for i in 0..100u32 {
+            assert_eq!(q.pop().unwrap().1, i, "seq restarted at 0 across lanes");
         }
     }
 }

@@ -56,6 +56,7 @@ fn reports_identical(a: &SimReport, b: &SimReport) -> Result<(), String> {
     field_eq!(delivered_msgs);
     field_eq!(offered_msgs);
     field_eq!(table_misses);
+    field_eq!(dropped_units);
     field_eq!(coll_op);
     field_eq!(coll_size_b);
     field_eq!(coll_iters);
@@ -249,6 +250,109 @@ fn multinic_hierarchical_reports_identical() {
     reports_identical(&fast, &slow).unwrap();
     assert_eq!(fast.coll_iters, 2);
     assert_eq!(fast.nics, 2);
+}
+
+#[test]
+fn prop_interior_trains_at_high_load_reports_identical() {
+    // Forwarding-hop (interior) trains: at high inter-heavy load the
+    // SwToNic/NicUp segments and the multi-level trunks queue same-next-
+    // hop runs that coalesce into cascades whose boundaries commit the
+    // downstream reservation lazily. Saturation is exactly where the
+    // abort-on-no-room path must replay the scalar park bit-for-bit.
+    let gen = Triple(
+        Choice(&["leaf_spine", "fat_tree3", "dragonfly"]),
+        Choice(&[Pattern::C1, Pattern::Custom { frac_inter: 0.6 }]),
+        FloatRange { lo: 0.5, hi: 1.0 },
+    );
+    forall(0xC0A4, 9, &gen, |&(inter, pattern, load)| {
+        let mut cfg = presets::scaleout(32, 256.0, pattern, load);
+        cfg.inter.kind = presets::default_inter_kind(inter, cfg.inter.leaves, cfg.inter.spines);
+        cfg.warmup_us = 5.0;
+        cfg.measure_us = 10.0;
+        let fast = run_engine(&cfg, true, BenchMode::None, &[]);
+        let slow = run_engine(&cfg, false, BenchMode::None, &[]);
+        reports_identical(&fast, &slow).map_err(|e| format!("{inter}/{pattern:?}/{load:.3}: {e}"))
+    });
+}
+
+#[test]
+fn prop_interior_trains_across_fabrics_reports_identical() {
+    // Fabric × inter cross at loads past the old 0.45 cap (the ring
+    // fabric is excluded: sustained overload can hit its diagnosed
+    // credit-cycle deadlock, a legitimate outcome but not a report).
+    use sauron::config::{FabricConfig, FabricKind};
+    let gen = Triple(
+        Choice(&[FabricKind::SwitchStar, FabricKind::Mesh, FabricKind::HostTree]),
+        Choice(&["leaf_spine", "fat_tree3", "dragonfly"]),
+        FloatRange { lo: 0.5, hi: 0.85 },
+    );
+    forall(0xC0A5, 9, &gen, |&(kind, inter, load)| {
+        let mut cfg = presets::scaleout(32, 256.0, Pattern::C1, load);
+        cfg = presets::with_fabric(cfg, FabricConfig::new(kind, 2));
+        cfg.inter.kind = presets::default_inter_kind(inter, cfg.inter.leaves, cfg.inter.spines);
+        cfg.warmup_us = 5.0;
+        cfg.measure_us = 10.0;
+        let fast = run_engine(&cfg, true, BenchMode::None, &[]);
+        let slow = run_engine(&cfg, false, BenchMode::None, &[]);
+        reports_identical(&fast, &slow).map_err(|e| format!("{kind:?}/{inter}/{load:.3}: {e}"))
+    });
+}
+
+#[test]
+fn prop_fault_segment_boundary_mid_train_reports_identical() {
+    // A firing fault plan lands inside the measure window while interior
+    // trains are running: construction caps every boundary at the fault
+    // instant and `apply_due_faults` settles all cascades first, so the
+    // degrade → kill → recover cycle must leave coalesced and scalar
+    // runs identical in everything but the dispatched-event count.
+    use sauron::config::{FaultAction, FaultEvent, FaultPlan, LinkSel};
+    let gen = Triple(
+        Choice(&["leaf_spine", "fat_tree3", "dragonfly"]),
+        Choice(&[0.5f64, 0.25]),
+        FloatRange { lo: 0.4, hi: 0.8 },
+    );
+    forall(0xC0A6, 9, &gen, |&(inter, factor, load)| {
+        let mut cfg = presets::scaleout(32, 256.0, Pattern::C1, load);
+        cfg.inter.kind = presets::default_inter_kind(inter, cfg.inter.leaves, cfg.inter.spines);
+        cfg.warmup_us = 5.0;
+        cfg.measure_us = 10.0;
+        let sel = LinkSel::NicUp { node: 0, nic: 0 };
+        cfg.faults = FaultPlan {
+            events: vec![
+                FaultEvent {
+                    at_us: 7.0,
+                    action: FaultAction::LinkDegrade { factor },
+                    sel: Some(sel),
+                },
+                FaultEvent { at_us: 9.0, action: FaultAction::LinkDown, sel: Some(sel) },
+                FaultEvent { at_us: 12.0, action: FaultAction::Recover, sel: Some(sel) },
+            ],
+        };
+        let fast = run_engine(&cfg, true, BenchMode::None, &[]);
+        let slow = run_engine(&cfg, false, BenchMode::None, &[]);
+        reports_identical(&fast, &slow).map_err(|e| format!("{inter}/{factor}/{load:.3}: {e}"))
+    });
+}
+
+#[test]
+fn interior_trains_reduce_dispatched_events_on_inter_paths() {
+    // The tentpole's perf claim, observable without a profiler: with
+    // all-inter traffic the hop sequence runs through SwToNic → NicUp →
+    // trunks, and interior cascades must materially cut heap events
+    // versus scalar stepping (delivery-only trains barely touch this
+    // traffic mix).
+    let mut cfg = presets::scaleout(32, 256.0, Pattern::Custom { frac_inter: 1.0 }, 0.7);
+    cfg.warmup_us = 5.0;
+    cfg.measure_us = 20.0;
+    let fast = run_engine(&cfg, true, BenchMode::None, &[]);
+    let slow = run_engine(&cfg, false, BenchMode::None, &[]);
+    reports_identical(&fast, &slow).unwrap();
+    assert!(
+        (fast.events as f64) < 0.95 * slow.events as f64,
+        "expected a real event reduction on inter paths: {} coalesced vs {} scalar",
+        fast.events,
+        slow.events
+    );
 }
 
 #[test]

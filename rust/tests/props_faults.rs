@@ -249,6 +249,86 @@ fn prop_nic_down_fails_over_on_every_fabric_and_inter_kind() {
 }
 
 #[test]
+fn pcie_degrade_slows_memoized_payload_sizes() {
+    // Memo-staleness regression (the `ser_time` audit): open-loop
+    // traffic serializes ONE payload size per link, so after warm-up
+    // every PCIe serialization is answered by the per-link last-hit
+    // memo, never the table search. The memo caches the PRE-degrade
+    // base and the fault factor is applied after the memo read — if a
+    // "faster" memo ever cached the post-factor value (or the factor
+    // were skipped on memo hits), a mid-run degrade of a PCIe accel
+    // lane would be invisible to steady same-payload traffic. Lock the
+    // observable: degrading the lane must strictly worsen intra
+    // latency, without dropping anything.
+    let base = fabric_cfg(FabricKind::SwitchStar, 1, NicPolicy::LocalRank, 0.3, Pattern::C1, 0x5E);
+    let lane = sauron::net::Topology::new(&base).accel_up(0, 0);
+    let planned = with_plan(
+        base.clone(),
+        vec![FaultEvent {
+            at_us: 6.0,
+            action: FaultAction::LinkDegrade { factor: 0.1 },
+            sel: Some(LinkSel::Id { link: lane }),
+        }],
+    );
+    let plain = run(base).unwrap();
+    let degraded = run(planned).unwrap();
+    assert!(
+        degraded.intra_lat.mean_ns > plain.intra_lat.mean_ns,
+        "degrading a PCIe lane mid-run was invisible to memoized traffic: \
+         {} ns (degraded) vs {} ns (plain)",
+        degraded.intra_lat.mean_ns,
+        plain.intra_lat.mean_ns
+    );
+    assert_eq!(degraded.dropped_units, 0, "degrade must never drop");
+    assert!(degraded.delivered_msgs > 0);
+}
+
+#[test]
+fn prop_unit_factor_degrade_changes_nothing_but_event_count() {
+    // A LinkDegrade{factor: 1.0} that actually FIRES exercises the
+    // whole fault edge — train settling at the fault instant, the
+    // train-construction fault cap, hint invalidation, the memo audit —
+    // while leaving link rates untouched. Every delivery time must be
+    // bit-identical to the fault-free run; only `events` may differ
+    // (trains capped at the fault instant split into more TxEnds at the
+    // same timestamps) and `table_misses` must agree exactly.
+    let gen = Triple(
+        Choice(&FabricKind::ALL),
+        Choice(&["leaf_spine", "fat_tree3", "dragonfly"]),
+        FloatRange { lo: 0.1, hi: 0.4 },
+    );
+    forall(0xFA01C, 9, &gen, |&(kind, inter, load)| {
+        let mut cfg = fabric_cfg(kind, 1, NicPolicy::LocalRank, load, Pattern::C2, 0x1F0);
+        cfg.inter.kind = presets::default_inter_kind(inter, cfg.inter.leaves, cfg.inter.spines);
+        let lane = sauron::net::Topology::new(&cfg).accel_up(1, 0);
+        let planned = with_plan(
+            cfg.clone(),
+            vec![FaultEvent {
+                at_us: 8.0,
+                action: FaultAction::LinkDegrade { factor: 1.0 },
+                sel: Some(LinkSel::Id { link: lane }),
+            }],
+        );
+        let plain = run(cfg)?;
+        let armed = run(planned)?;
+        // `reports_identical` short-circuits at `events`, so pin the
+        // lookup-path invariant explicitly first.
+        if armed.table_misses != plain.table_misses {
+            return Err(format!(
+                "{kind:?}/{inter}/{load:.3}: table_misses differs: {} vs {}",
+                armed.table_misses, plain.table_misses
+            ));
+        }
+        match reports_identical(&armed, &plain) {
+            Ok(()) => Ok(()),
+            // Only the event count may legitimately differ (see above).
+            Err(e) if e.starts_with("field events differs") => Ok(()),
+            Err(e) => Err(format!("{kind:?}/{inter}/{load:.3}: {e}")),
+        }
+    });
+}
+
+#[test]
 fn watchdog_event_limit_trips_with_structured_error() {
     let mut cfg = fabric_cfg(FabricKind::SwitchStar, 1, NicPolicy::LocalRank, 0.3, Pattern::C3, 1);
     cfg.limits.max_events = 800;

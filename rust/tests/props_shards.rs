@@ -1,0 +1,203 @@
+//! Event-shard determinism gate.
+//!
+//! `SimConfig::shards` is a **run-phase performance knob**: lanes share
+//! one global sequence counter, so the merged pop order is the single
+//! queue's `(Time, seq)` order by construction, and the shard workers
+//! only precompute hints the hot path re-validates before use. The
+//! contract locked here is total: a sharded run produces a [`SimReport`]
+//! bit-identical (every field except `wall_ms`) to the `shards: 1`
+//! single-queue engine — across intra fabrics, NIC policies, inter
+//! topologies, workloads, coalescing on/off, and **firing** fault plans
+//! (faults invalidate hints via the speculation epoch; a stale hint
+//! consumed after a fault would show up here first).
+
+use sauron::config::{
+    presets, CollOp, CollScope, CollectiveSpec, FabricConfig, FabricKind, FaultAction, FaultEvent,
+    FaultPlan, LinkSel, NicPolicy, Pattern, SimConfig, Workload,
+};
+use sauron::net::world::{BenchMode, NativeProvider, Sim, SimReport};
+use sauron::testkit::{forall, Choice, FloatRange, Triple};
+
+/// Compare every result-describing field; only `wall_ms` is excluded.
+fn reports_identical(sharded: &SimReport, single: &SimReport) -> Result<(), String> {
+    macro_rules! field_eq {
+        ($field:ident) => {
+            if sharded.$field != single.$field {
+                return Err(format!(
+                    "field {} differs: {:?} (sharded) vs {:?} (shards=1)",
+                    stringify!($field),
+                    sharded.$field,
+                    single.$field
+                ));
+            }
+        };
+    }
+    field_eq!(pattern);
+    field_eq!(load);
+    field_eq!(nodes);
+    field_eq!(accels);
+    field_eq!(fabric);
+    field_eq!(nics);
+    field_eq!(inter);
+    field_eq!(aggregated_intra_gbs);
+    field_eq!(offered_gbs);
+    field_eq!(intra_tput_gbs);
+    field_eq!(intra_drain_gbs);
+    field_eq!(intra_lat);
+    field_eq!(inter_tput_gbs);
+    field_eq!(inter_drain_gbs);
+    field_eq!(fct);
+    field_eq!(intra_wire_gbs);
+    field_eq!(inter_wire_gbs);
+    field_eq!(drop_frac);
+    field_eq!(delivered_msgs);
+    field_eq!(offered_msgs);
+    field_eq!(events);
+    field_eq!(table_misses);
+    field_eq!(dropped_units);
+    field_eq!(coll_op);
+    field_eq!(coll_size_b);
+    field_eq!(coll_iters);
+    field_eq!(coll_time);
+    field_eq!(coll_pred_ns);
+    Ok(())
+}
+
+fn run(cfg: SimConfig) -> Result<SimReport, String> {
+    Sim::new(cfg, &NativeProvider, BenchMode::None)
+        .map_err(|e| format!("build: {e:#}"))?
+        .try_run()
+        .map_err(|e| format!("run: {e:#}"))
+}
+
+/// Run `cfg` at shards ∈ {1, 2, 4} and demand bit-identical reports.
+fn identical_across_shards(cfg: SimConfig) -> Result<(), String> {
+    let mut single = cfg.clone();
+    single.shards = 1;
+    let base = run(single)?;
+    for shards in [2u32, 4] {
+        let mut c = cfg.clone();
+        c.shards = shards;
+        let r = run(c)?;
+        reports_identical(&r, &base).map_err(|e| format!("shards={shards}: {e}"))?;
+    }
+    Ok(())
+}
+
+fn fabric_cfg(
+    kind: FabricKind,
+    nics: usize,
+    policy: NicPolicy,
+    load: f64,
+    pattern: Pattern,
+    seed: u64,
+) -> SimConfig {
+    let mut fab = FabricConfig::new(kind, nics);
+    fab.nic_policy = policy;
+    let mut cfg = presets::with_fabric(presets::scaleout(32, 256.0, pattern, load), fab);
+    cfg.warmup_us = 5.0;
+    cfg.measure_us = 10.0;
+    cfg.seed = seed;
+    cfg
+}
+
+#[test]
+fn prop_sharded_bit_identical_across_fabrics() {
+    let gen = Triple(
+        Choice(&FabricKind::ALL),
+        Choice(&[
+            (1usize, NicPolicy::LocalRank),
+            (2, NicPolicy::LocalRank),
+            (2, NicPolicy::RoundRobin),
+        ]),
+        FloatRange { lo: 0.05, hi: 0.85 },
+    );
+    forall(0x5AD1, 10, &gen, |&(kind, (nics, policy), load)| {
+        let cfg = fabric_cfg(kind, nics, policy, load, Pattern::C1, 0x5A);
+        identical_across_shards(cfg).map_err(|e| format!("{kind:?}/{nics}nic/{policy:?}/{load:.3}: {e}"))
+    });
+}
+
+#[test]
+fn prop_sharded_bit_identical_across_inter_kinds_and_workloads() {
+    let gen = Triple(
+        Choice(&["leaf_spine", "fat_tree3", "dragonfly"]),
+        Choice(&[None, Some(CollOp::RingAllReduce), Some(CollOp::HierarchicalAllReduce)]),
+        FloatRange { lo: 0.05, hi: 0.5 },
+    );
+    forall(0x5AD2, 9, &gen, |&(inter, op, load)| {
+        let mut cfg = presets::scaleout(32, 256.0, Pattern::C2, load);
+        cfg.inter.kind = presets::default_inter_kind(inter, cfg.inter.leaves, cfg.inter.spines);
+        cfg.warmup_us = 5.0;
+        cfg.measure_us = 10.0;
+        cfg.seed = 0x5B;
+        if let Some(op) = op {
+            let scope = if op == CollOp::HierarchicalAllReduce {
+                CollScope::Global
+            } else {
+                CollScope::PerNode
+            };
+            cfg.workload =
+                Workload::Collective(CollectiveSpec { op, scope, size_b: 32 * 1024, iters: 2 });
+        }
+        identical_across_shards(cfg).map_err(|e| format!("{inter}/{op:?}/{load:.3}: {e}"))
+    });
+}
+
+#[test]
+fn prop_sharded_bit_identical_with_firing_faults() {
+    // Firing plans are where the speculation epoch earns its keep: a
+    // hint computed pre-fault must never be consumed post-fault. The
+    // plan runs a full degrade → kill → recover cycle through the
+    // measure window.
+    let gen = Triple(
+        Choice(&FabricKind::ALL),
+        Choice(&["leaf_spine", "fat_tree3", "dragonfly"]),
+        FloatRange { lo: 0.1, hi: 0.5 },
+    );
+    forall(0x5AD3, 9, &gen, |&(kind, inter, load)| {
+        let mut cfg = fabric_cfg(kind, 2, NicPolicy::RoundRobin, load, Pattern::C1, 0x5C);
+        cfg.inter.kind = presets::default_inter_kind(inter, cfg.inter.leaves, cfg.inter.spines);
+        let sel = LinkSel::NicUp { node: 0, nic: 0 };
+        cfg.faults = FaultPlan {
+            events: vec![
+                FaultEvent {
+                    at_us: 7.0,
+                    action: FaultAction::LinkDegrade { factor: 0.5 },
+                    sel: Some(sel),
+                },
+                FaultEvent { at_us: 9.0, action: FaultAction::LinkDown, sel: Some(sel) },
+                FaultEvent { at_us: 12.0, action: FaultAction::Recover, sel: Some(sel) },
+            ],
+        };
+        identical_across_shards(cfg).map_err(|e| format!("{kind:?}/{inter}/{load:.3}: {e}"))
+    });
+}
+
+#[test]
+fn prop_sharded_bit_identical_with_coalescing_off() {
+    // Shards × scalar stepping: with trains disabled every unit is its
+    // own event, maximizing cross-shard interleaving at one timestamp.
+    let gen = Triple(
+        Choice(&FabricKind::ALL),
+        Choice(&[Pattern::C1, Pattern::C3, Pattern::C5]),
+        FloatRange { lo: 0.1, hi: 0.6 },
+    );
+    forall(0x5AD4, 8, &gen, |&(kind, pattern, load)| {
+        let mut cfg = fabric_cfg(kind, 1, NicPolicy::LocalRank, load, pattern, 0x5D);
+        cfg.coalescing = false;
+        identical_across_shards(cfg).map_err(|e| format!("{kind:?}/{pattern:?}/{load:.3}: {e}"))
+    });
+}
+
+#[test]
+fn shard_count_beyond_node_count_clamps_and_matches() {
+    // 1024 shards on a 32-node world: the ShardMap clamps to the node
+    // count; the run must still be bit-identical to the plain engine.
+    let cfg = fabric_cfg(FabricKind::SwitchStar, 1, NicPolicy::LocalRank, 0.4, Pattern::C3, 0x5E);
+    let base = run(cfg.clone()).unwrap();
+    let mut big = cfg;
+    big.shards = 1024;
+    let r = run(big).unwrap();
+    reports_identical(&r, &base).unwrap();
+}

@@ -15,10 +15,14 @@ fn tiny() -> SweepSpec {
         patterns: vec![Pattern::C1, Pattern::C5],
         loads: vec![0.2, 0.6],
         fabric: sauron::config::FabricConfig::switch_star(),
+        inter: sauron::config::InterKind::LeafSpine,
         paper_windows: false,
         telemetry: false,
         workers: 2,
         seed: 0xFEED,
+        faults: Default::default(),
+        limits: Default::default(),
+        shards: 1,
     }
 }
 

@@ -26,6 +26,7 @@ fn four_point_spec() -> SweepSpec {
         seed: 7,
         faults: FaultPlan::default(),
         limits: LimitsConfig::default(),
+        shards: 1,
     }
 }
 

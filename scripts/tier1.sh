@@ -65,6 +65,13 @@ guard 600 cargo test -q --test props_faults
 guard 600 cargo test -q --test sweep_resume
 guard 600 cargo test -q --lib fault watchdog panic resilient partition resume skip
 
+# Event-shard determinism gate: sharded runs (shards ∈ {1,2,4}) must
+# produce bit-identical SimReports across fabrics × inter kinds ×
+# workloads, including runs with firing fault plans. A named re-run so
+# a nondeterminism regression fails with the suite that owns it.
+guard 600 cargo test -q --test props_shards
+guard 600 cargo test -q --lib shard
+
 if [ "${1:-}" = "--bench" ]; then
     # Regenerates the committed baselines in place; SAURON_BENCH_MS can
     # shorten the per-benchmark budget (CI uses 400 ms).
