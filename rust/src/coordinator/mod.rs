@@ -16,12 +16,14 @@
 
 pub mod pool;
 pub mod results;
+pub mod service;
 
 use std::sync::Arc;
 
 use crate::config::{presets, FabricConfig, FaultPlan, InterKind, LimitsConfig, Pattern, SimConfig};
 use crate::net::world::{BenchMode, SerProvider, Sim, SimReport, WorldBlueprint};
 use crate::runtime::CachedProvider;
+use crate::serial::json::{FromJson, ToJson, Value};
 
 /// Sweep description (one per figure reproduction).
 #[derive(Debug, Clone)]
@@ -136,6 +138,107 @@ impl SweepSpec {
     /// Number of sweep points.
     pub fn points(&self) -> usize {
         self.intra_gbs.len() * self.patterns.len() * self.loads.len()
+    }
+
+    /// Stable identity of the sweep's *results*: an FNV-1a hash of the
+    /// canonical spec JSON with execution-only knobs (`workers`)
+    /// normalized out, rendered as 16 hex digits. Two specs share a
+    /// fingerprint iff they produce the same rows in the same order, so
+    /// this is the value streamed CSVs are stamped with
+    /// ([`results::CsvStream::create_stamped`]) and `--resume` / the
+    /// job service verify before appending.
+    pub fn fingerprint(&self) -> String {
+        let mut canon = self.clone();
+        canon.workers = 0; // thread count never changes the rows
+        let text = canon.to_json().compact();
+        // FNV-1a, 64-bit: tiny, dependency-free, stable across builds.
+        let mut h: u64 = 0xcbf29ce484222325;
+        for b in text.as_bytes() {
+            h ^= u64::from(*b);
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        format!("{h:016x}")
+    }
+}
+
+impl ToJson for SweepSpec {
+    fn to_json(&self) -> Value {
+        Value::obj()
+            .with("nodes", self.nodes)
+            .with("intra_gbs", Value::Arr(self.intra_gbs.iter().map(|&g| g.into()).collect()))
+            .with("patterns", Value::Arr(self.patterns.iter().map(|p| p.to_json()).collect()))
+            .with("loads", Value::Arr(self.loads.iter().map(|&l| l.into()).collect()))
+            .with("fabric", self.fabric.to_json())
+            .with("inter", self.inter.to_json())
+            .with("paper_windows", self.paper_windows)
+            .with("telemetry", self.telemetry)
+            .with("workers", self.workers)
+            .with("seed", self.seed)
+            .with("faults", self.faults.to_json())
+            .with("limits", self.limits.to_json())
+            .with("shards", self.shards)
+    }
+}
+
+impl FromJson for SweepSpec {
+    fn from_json(v: &Value) -> anyhow::Result<SweepSpec> {
+        let f64_list = |key: &str| -> anyhow::Result<Vec<f64>> {
+            v.req(key)?.as_arr()?.iter().map(|x| x.as_f64()).collect()
+        };
+        let spec = SweepSpec {
+            nodes: v.usize_of("nodes")?,
+            intra_gbs: f64_list("intra_gbs")?,
+            patterns: v
+                .req("patterns")?
+                .as_arr()?
+                .iter()
+                .map(Pattern::from_json)
+                .collect::<anyhow::Result<Vec<_>>>()?,
+            loads: f64_list("loads")?,
+            // Optional fields default to what `SweepSpec::paper` uses,
+            // so a job spec is just the axes plus whatever it overrides.
+            fabric: match v.get("fabric") {
+                Some(f) => FabricConfig::from_json(f)?,
+                None => FabricConfig::switch_star(),
+            },
+            inter: match v.get("inter") {
+                Some(i) => InterKind::from_json(i)?,
+                None => InterKind::LeafSpine,
+            },
+            paper_windows: match v.get("paper_windows") {
+                Some(b) => b.as_bool()?,
+                None => false,
+            },
+            telemetry: match v.get("telemetry") {
+                Some(b) => b.as_bool()?,
+                None => false,
+            },
+            workers: match v.get("workers") {
+                Some(w) => w.as_usize()?,
+                None => default_workers(),
+            },
+            seed: match v.get("seed") {
+                Some(s) => s.as_u64()?,
+                None => 0x5CA1E,
+            },
+            faults: match v.get("faults") {
+                Some(f) => FaultPlan::from_json(f)?,
+                None => FaultPlan::default(),
+            },
+            limits: match v.get("limits") {
+                Some(l) => LimitsConfig::from_json(l)?,
+                None => LimitsConfig::default(),
+            },
+            shards: match v.get("shards") {
+                Some(s) => s.as_u64()? as u32,
+                None => 1,
+            },
+        };
+        anyhow::ensure!(
+            !spec.intra_gbs.is_empty() && !spec.patterns.is_empty() && !spec.loads.is_empty(),
+            "sweep spec has an empty axis (intra_gbs / patterns / loads)"
+        );
+        Ok(spec)
     }
 }
 
@@ -260,13 +363,16 @@ impl SweepOutcome {
 /// a fresh `World::reset` (a panic additionally discards the worker's
 /// pinned `Sim`, so the next attempt rebuilds from the blueprint) — and
 /// the sweep always runs to the end, reporting failures per point in
-/// [`SweepOutcome::errors`]. `start` skips the first `start` points
-/// (the `sweep --resume` path: rows already in the partial CSV);
+/// [`SweepOutcome::errors`]. Retries wait out the deterministic
+/// `backoff` schedule first ([`pool::Backoff`]); the total scheduled
+/// delay is reported per failed point. `start` skips the first `start`
+/// points (the `sweep --resume` path: rows already in the partial CSV);
 /// `progress` receives absolute spec indices.
 pub fn run_sweep_resilient(
     spec: &SweepSpec,
     provider: Arc<CachedProvider>,
     attempts: usize,
+    backoff: pool::Backoff,
     start: usize,
     progress: Option<Progress>,
 ) -> anyhow::Result<SweepOutcome> {
@@ -316,7 +422,7 @@ pub fn run_sweep_resilient(
     let progress = progress.map(|cb| -> Progress {
         Box::new(move |idx, done, _, r| cb(idx + start, done + start, total, r))
     });
-    let out = pool::run_resilient_with(jobs, spec.workers, attempts, || None, progress);
+    let out = pool::run_resilient_with(jobs, spec.workers, attempts, backoff, || None, progress);
     let mut reports: Vec<Option<SimReport>> = (0..total).map(|_| None).collect();
     let mut errors = Vec::new();
     for (i, point) in out.into_iter().enumerate() {
@@ -497,7 +603,7 @@ mod tests {
         let healthy = run_sweep(&spec, provider.clone(), None).unwrap();
         assert!(healthy[0].events < healthy[1].events, "loads must separate event counts");
         spec.limits.max_events = (healthy[0].events + healthy[1].events) / 2;
-        let out = run_sweep_resilient(&spec, provider, 2, 0, None).unwrap();
+        let out = run_sweep_resilient(&spec, provider, 2, pool::Backoff::NONE, 0, None).unwrap();
         assert_eq!(out.completed(), 1);
         let light = out.reports[0].as_ref().expect("light point survives the watchdog");
         assert_eq!(light.events, healthy[0].events, "watchdog must not perturb healthy points");
@@ -519,7 +625,8 @@ mod tests {
             assert_eq!(total, 2, "progress total is the whole spec, not the remainder");
             s.lock().unwrap().push(idx);
         });
-        let out = run_sweep_resilient(&spec, provider, 1, 1, Some(cb)).unwrap();
+        let out =
+            run_sweep_resilient(&spec, provider, 1, pool::Backoff::NONE, 1, Some(cb)).unwrap();
         assert!(out.reports[0].is_none(), "resumed point 0 is not re-run");
         let resumed = out.reports[1].as_ref().unwrap();
         assert_eq!(resumed.events, full[1].events, "resumed point bit-matches the full run");
@@ -529,7 +636,8 @@ mod tests {
         // An offset past the end is a spec/CSV mismatch, not a no-op.
         let spec2 = tiny_spec();
         let provider2 = Arc::new(snapshot_provider(&spec2, &NativeProvider));
-        let err = run_sweep_resilient(&spec2, provider2, 1, 3, None).unwrap_err();
+        let err =
+            run_sweep_resilient(&spec2, provider2, 1, pool::Backoff::NONE, 3, None).unwrap_err();
         assert!(format!("{err:#}").contains("beyond the sweep"), "{err:#}");
     }
 
@@ -579,7 +687,7 @@ mod tests {
                 })
             },
         ];
-        let out = pool::run_resilient_with(jobs, 2, 2, || (), None);
+        let out = pool::run_resilient_with(jobs, 2, 2, pool::Backoff::NONE, || (), None);
         assert!(out[0].as_ref().unwrap().delivered_msgs > 0);
         assert!(out[3].as_ref().unwrap().delivered_msgs > 0, "degraded point still completes");
         let e1 = out[1].as_ref().unwrap_err();
@@ -588,6 +696,65 @@ mod tests {
         let e2 = out[2].as_ref().unwrap_err();
         assert!(e2.error.contains("watchdog"), "{e2}");
         assert_eq!(e2.attempts, 2);
+    }
+
+    #[test]
+    fn sweep_spec_json_round_trips_and_defaults_optionals() {
+        // Full round trip: every field survives.
+        let mut spec = SweepSpec::quick(64);
+        spec.telemetry = true;
+        spec.shards = 4;
+        spec.limits.max_events = 1_000_000;
+        spec.inter = InterKind::Dragonfly { groups: 9 };
+        let back = SweepSpec::from_json(&spec.to_json()).unwrap();
+        assert_eq!(back.nodes, 64);
+        assert_eq!(back.intra_gbs, spec.intra_gbs);
+        assert_eq!(back.patterns, spec.patterns);
+        assert_eq!(back.loads, spec.loads);
+        assert_eq!(back.fabric, spec.fabric);
+        assert_eq!(back.inter, spec.inter);
+        assert!(back.telemetry);
+        assert_eq!(back.shards, 4);
+        assert_eq!(back.limits.max_events, 1_000_000);
+        assert_eq!(back.seed, spec.seed);
+        // A minimal job spec is just the axes; everything else defaults.
+        let min = Value::parse(
+            r#"{"nodes": 32, "intra_gbs": [128], "patterns": ["C3"], "loads": [0.1, 0.2]}"#,
+        )
+        .unwrap();
+        let spec = SweepSpec::from_json(&min).unwrap();
+        assert_eq!(spec.points(), 2);
+        assert_eq!(spec.fabric, FabricConfig::switch_star());
+        assert_eq!(spec.seed, 0x5CA1E);
+        assert_eq!(spec.shards, 1);
+        // Empty axes are a loud error, not a zero-point sweep.
+        let empty =
+            Value::parse(r#"{"nodes": 32, "intra_gbs": [], "patterns": ["C3"], "loads": [0.1]}"#)
+                .unwrap();
+        let err = SweepSpec::from_json(&empty).unwrap_err();
+        assert!(format!("{err:#}").contains("empty axis"), "{err:#}");
+    }
+
+    #[test]
+    fn fingerprint_tracks_rows_not_execution_knobs() {
+        let mut a = tiny_spec();
+        let fp = a.fingerprint();
+        assert_eq!(fp.len(), 16, "16 hex digits: {fp}");
+        // Worker count is execution-only: same rows, same fingerprint.
+        a.workers = 1;
+        let w1 = a.fingerprint();
+        a.workers = 16;
+        assert_eq!(a.fingerprint(), w1);
+        // Any row-affecting change must move the fingerprint.
+        let mut b = tiny_spec();
+        b.loads = vec![0.1, 0.2];
+        assert_ne!(b.fingerprint(), fp, "extra load point changes the rows");
+        let mut c = tiny_spec();
+        c.seed = 8;
+        assert_ne!(c.fingerprint(), fp, "seed changes the rows");
+        // Round-tripping through JSON preserves identity.
+        let back = SweepSpec::from_json(&tiny_spec().to_json()).unwrap();
+        assert_eq!(back.fingerprint(), fp);
     }
 
     #[test]

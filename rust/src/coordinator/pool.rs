@@ -18,15 +18,17 @@
 //! catch already reported).
 //!
 //! [`run_resilient_with`] is the crash-safe variant the sweep resumer
-//! builds on: jobs are re-callable, each failed point is retried up to
-//! a bounded attempt budget, and the batch always runs to the end,
-//! returning per-point `Result`s ([`JobFailure`] carries the index,
-//! attempt count, and rendered error) instead of aborting on the first
-//! bad point.
+//! and the job service build on: jobs are re-callable, each failed
+//! point is retried up to a bounded attempt budget with a deterministic
+//! exponential [`Backoff`] between attempts, and the batch always runs
+//! to the end, returning per-point `Result`s ([`JobFailure`] carries
+//! the index, attempt count, total scheduled backoff, and rendered
+//! error) instead of aborting on the first bad point.
 
 use std::panic::AssertUnwindSafe;
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
 
 type Job<T, S> = Box<dyn FnOnce(&mut S) -> anyhow::Result<T> + Send>;
 
@@ -40,7 +42,7 @@ fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
 
 /// Best-effort text of a panic payload (`panic!("...")` yields `&str`
 /// or `String`; anything else gets a placeholder).
-fn panic_text(payload: &(dyn std::any::Any + Send)) -> &str {
+pub(crate) fn panic_text(payload: &(dyn std::any::Any + Send)) -> &str {
     if let Some(s) = payload.downcast_ref::<&str>() {
         s
     } else if let Some(s) = payload.downcast_ref::<String>() {
@@ -54,7 +56,7 @@ fn panic_text(payload: &(dyn std::any::Any + Send)) -> &str {
 /// the payload; the second element reports whether the worker state
 /// must be treated as corrupt (the unwind may have interrupted a
 /// mutation mid-way) and rebuilt before the next job.
-fn call_isolated<T, S, F>(job: F, state: &mut S) -> (anyhow::Result<T>, bool)
+pub(crate) fn call_isolated<T, S, F>(job: F, state: &mut S) -> (anyhow::Result<T>, bool)
 where
     F: FnOnce(&mut S) -> anyhow::Result<T>,
 {
@@ -201,6 +203,53 @@ where
     Ok(out.into_iter().map(|v| v.expect("all jobs completed")).collect())
 }
 
+/// Deterministic bounded exponential backoff for retried jobs.
+///
+/// Retry `k` (1-based) waits `base_ms << (k-1)`, capped at `cap_ms` —
+/// deterministic by construction (no jitter) so resumed sweeps and the
+/// job-service journal replay the exact same schedule. Without a delay,
+/// a deterministic panic burns its whole attempt budget in microseconds
+/// while transient causes (another worker holding the page cache, a
+/// wall-clock watchdog on a loaded host) never get time to clear.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Backoff {
+    /// Delay before the first retry, in milliseconds.
+    pub base_ms: u64,
+    /// Ceiling on any single retry delay, in milliseconds.
+    pub cap_ms: u64,
+}
+
+impl Backoff {
+    /// No delay between attempts — the pre-backoff behavior, used by
+    /// tests that deliberately fail points and must stay fast.
+    pub const NONE: Backoff = Backoff { base_ms: 0, cap_ms: 0 };
+
+    /// Delay in milliseconds before retry `retry` (1-based; `0` — the
+    /// first attempt — never waits).
+    pub fn delay_ms(&self, retry: usize) -> u64 {
+        if retry == 0 || self.base_ms == 0 {
+            return 0;
+        }
+        let shift = (retry - 1).min(20) as u32; // 2^20 × base already dwarfs any cap
+        self.base_ms.saturating_mul(1u64 << shift).min(self.cap_ms.max(self.base_ms))
+    }
+
+    /// Total scheduled delay across `retries` retries — the figure
+    /// [`JobFailure::backoff_ms`] reports.
+    pub fn total_ms(&self, retries: usize) -> u64 {
+        (1..=retries).map(|k| self.delay_ms(k)).sum()
+    }
+}
+
+impl Default for Backoff {
+    /// 25 ms doubling to a 2 s cap: long enough for transient host
+    /// contention to clear, short enough to be invisible on a sweep
+    /// where each point runs for seconds.
+    fn default() -> Self {
+        Backoff { base_ms: 25, cap_ms: 2000 }
+    }
+}
+
 /// Terminal failure of one job in a resilient batch.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct JobFailure {
@@ -208,6 +257,10 @@ pub struct JobFailure {
     pub index: usize,
     /// Attempts executed before giving up (== the configured budget).
     pub attempts: usize,
+    /// Total scheduled retry backoff in milliseconds — how long the
+    /// point spent parked between attempts (deterministic, from the
+    /// [`Backoff`] schedule, not wall-clock measured).
+    pub backoff_ms: u64,
     /// Final error, `{:#}`-rendered so the anyhow context chain — the
     /// `SimError` variant, the panic payload — survives as text.
     pub error: String,
@@ -215,7 +268,11 @@ pub struct JobFailure {
 
 impl std::fmt::Display for JobFailure {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "job {} failed after {} attempt(s): {}", self.index, self.attempts, self.error)
+        write!(
+            f,
+            "job {} failed after {} attempt(s) ({} ms retry backoff): {}",
+            self.index, self.attempts, self.backoff_ms, self.error
+        )
     }
 }
 
@@ -224,15 +281,18 @@ impl std::fmt::Display for JobFailure {
 ///
 /// Jobs must be re-callable (`Fn`, shared via `Arc`) because a failed
 /// point is requeued and retried — possibly on a different worker — up
-/// to `attempts` total executions. Panics are isolated per attempt and
-/// count as failures; the panicking worker rebuilds its state from
-/// `init` and keeps draining the queue. The returned vector is in
-/// submission order, `Err` slots carrying the index, attempt count and
-/// final rendered error. `progress` fires once per *successful* point.
+/// to `attempts` total executions, each retry parked for its slot of
+/// the deterministic `backoff` schedule first. Panics are isolated per
+/// attempt and count as failures; the panicking worker rebuilds its
+/// state from `init` and keeps draining the queue. The returned vector
+/// is in submission order, `Err` slots carrying the index, attempt
+/// count, total scheduled backoff and final rendered error. `progress`
+/// fires once per *successful* point.
 pub fn run_resilient_with<T, S, F, I>(
     jobs: Vec<F>,
     workers: usize,
     attempts: usize,
+    backoff: Backoff,
     init: I,
     progress: Option<Callback<T>>,
 ) -> Vec<Result<T, JobFailure>>
@@ -247,15 +307,17 @@ where
         return Vec::new();
     }
     let attempts = attempts.max(1);
-    // (submission index, attempts already spent, job). Retries push
-    // back onto the tail, which `pop` takes next: a flaky point retries
-    // immediately while its inputs are hot instead of at batch end.
-    type Slot<T, S> = (usize, usize, Arc<dyn Fn(&mut S) -> anyhow::Result<T> + Send + Sync>);
+    // (submission index, attempts already spent, earliest start, job).
+    // Retries push back onto the tail with a future ready-instant;
+    // workers scan from the tail for the first *ready* slot, so a
+    // parked retry never blocks fresh points behind it.
+    type Slot<T, S> =
+        (usize, usize, Instant, Arc<dyn Fn(&mut S) -> anyhow::Result<T> + Send + Sync>);
     let queue: Arc<Mutex<Vec<Slot<T, S>>>> = Arc::new(Mutex::new(
         jobs.into_iter()
             .enumerate()
-            .rev() // pop() takes from the back; reverse so index 0 runs first
-            .map(|(i, j)| (i, 0, Arc::new(j) as _))
+            .rev() // workers scan from the back; reverse so index 0 runs first
+            .map(|(i, j)| (i, 0, Instant::now(), Arc::new(j) as _))
             .collect(),
     ));
     let (tx, rx) = mpsc::channel::<(usize, Result<T, (usize, String)>)>();
@@ -269,11 +331,31 @@ where
         let init = init.clone();
         handles.push(std::thread::spawn(move || {
             let mut state = init();
-            loop {
-                let job = lock(&queue).pop();
-                let Some((idx, spent, job)) = job else { break };
-                let (result, state_corrupt) =
-                    call_isolated(|s: &mut S| job(s), &mut state);
+            'work: loop {
+                // Take the rearmost ready slot; if every queued slot is
+                // still parked in backoff, sleep until the earliest one
+                // arms (bounded, so a retry pushed meanwhile is seen).
+                let (idx, spent, job) = loop {
+                    let now = Instant::now();
+                    let earliest = {
+                        let mut q = lock(&queue);
+                        if q.is_empty() {
+                            break 'work;
+                        }
+                        match q.iter().rposition(|(_, _, at, _)| *at <= now) {
+                            Some(i) => {
+                                let (idx, spent, _, job) = q.remove(i);
+                                break (idx, spent, job);
+                            }
+                            None => q.iter().map(|(_, _, at, _)| *at).min().unwrap(),
+                        }
+                    };
+                    let wait = earliest
+                        .saturating_duration_since(now)
+                        .clamp(Duration::from_millis(1), Duration::from_millis(25));
+                    std::thread::sleep(wait);
+                };
+                let (result, state_corrupt) = call_isolated(|s: &mut S| job(s), &mut state);
                 if state_corrupt {
                     state = init();
                 }
@@ -281,7 +363,8 @@ where
                 let send = match result {
                     Ok(v) => tx.send((idx, Ok(v))),
                     Err(e) if spent < attempts => {
-                        lock(&queue).push((idx, spent, job));
+                        let ready = Instant::now() + Duration::from_millis(backoff.delay_ms(spent));
+                        lock(&queue).push((idx, spent, ready, job));
                         let _ = e; // retried; only the final error is reported
                         continue;
                     }
@@ -306,7 +389,12 @@ where
                 }
                 Ok(v)
             }
-            Err((attempts, error)) => Err(JobFailure { index: idx, attempts, error }),
+            Err((attempts, error)) => Err(JobFailure {
+                index: idx,
+                attempts,
+                backoff_ms: backoff.total_ms(attempts.saturating_sub(1)),
+                error,
+            }),
         });
     }
     for h in handles {
@@ -548,6 +636,7 @@ mod tests {
             jobs,
             1,
             3,
+            Backoff::NONE,
             move || {
                 ic.fetch_add(1, Ordering::SeqCst);
                 0u64
@@ -583,7 +672,7 @@ mod tests {
             Box::new(|_| anyhow::bail!("permanent defect")),
             Box::new(|_| panic!("unhandled crash")),
         ];
-        let out = run_resilient_with(jobs, 2, 3, || (), None);
+        let out = run_resilient_with(jobs, 2, 3, Backoff::NONE, || (), None);
         assert_eq!(out[0].as_ref().unwrap(), &10);
         assert_eq!(out[1].as_ref().unwrap(), &11, "flaky point must recover within budget");
         let e2 = out[2].as_ref().unwrap_err();
@@ -598,7 +687,7 @@ mod tests {
     #[test]
     fn resilient_empty_batch_and_single_attempt() {
         let none: Vec<fn(&mut ()) -> anyhow::Result<u64>> = vec![];
-        assert!(run_resilient_with(none, 4, 3, || (), None).is_empty());
+        assert!(run_resilient_with(none, 4, 3, Backoff::NONE, || (), None).is_empty());
         // attempts = 0 clamps to one real execution.
         let ran = Arc::new(AtomicUsize::new(0));
         let r = ran.clone();
@@ -606,9 +695,78 @@ mod tests {
             r.fetch_add(1, Ordering::SeqCst);
             anyhow::bail!("nope")
         }];
-        let out = run_resilient_with(jobs, 1, 0, || (), None);
+        let out = run_resilient_with(jobs, 1, 0, Backoff::NONE, || (), None);
         assert_eq!(out[0].as_ref().unwrap_err().attempts, 1);
         assert_eq!(ran.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn backoff_schedule_is_deterministic_and_capped() {
+        let b = Backoff { base_ms: 25, cap_ms: 2000 };
+        assert_eq!(b.delay_ms(0), 0, "the first attempt never waits");
+        assert_eq!(
+            (1..=9).map(|k| b.delay_ms(k)).collect::<Vec<_>>(),
+            vec![25, 50, 100, 200, 400, 800, 1600, 2000, 2000],
+        );
+        assert_eq!(b.total_ms(3), 25 + 50 + 100);
+        assert_eq!(b.total_ms(0), 0);
+        // Huge retry counts must neither overflow nor exceed the cap.
+        assert_eq!(b.delay_ms(500), 2000);
+        assert_eq!(Backoff::NONE.delay_ms(7), 0);
+        assert_eq!(Backoff::NONE.total_ms(7), 0);
+        // A cap below base still honors base as the floor.
+        assert_eq!(Backoff { base_ms: 40, cap_ms: 10 }.delay_ms(3), 40);
+    }
+
+    #[test]
+    fn retries_wait_out_the_backoff_schedule_and_report_it() {
+        // A job that hard-fails 3 attempts with a 30 ms base must spend
+        // at least delay(1) + delay(2) = 90 ms parked between attempts,
+        // and the failure must report the scheduled total.
+        let b = Backoff { base_ms: 30, cap_ms: 2000 };
+        let jobs: Vec<_> =
+            vec![|_: &mut ()| -> anyhow::Result<u64> { anyhow::bail!("always down") }];
+        let t0 = Instant::now();
+        let out = run_resilient_with(jobs, 2, 3, b, || (), None);
+        let elapsed = t0.elapsed();
+        let e = out[0].as_ref().unwrap_err();
+        assert_eq!((e.index, e.attempts, e.backoff_ms), (0, 3, 90));
+        assert!(format!("{e}").contains("90 ms retry backoff"), "{e}");
+        assert!(elapsed >= Duration::from_millis(90), "retried too fast: {elapsed:?}");
+    }
+
+    #[test]
+    fn parked_retry_does_not_block_fresh_points() {
+        // One worker, two jobs: job 0 fails once and parks for 150 ms;
+        // job 1 must run during that window, not after it.
+        let first_done_at = Arc::new(Mutex::new(None::<Instant>));
+        let fda = first_done_at.clone();
+        let t0 = Instant::now();
+        let jobs: Vec<Box<dyn Fn(&mut ()) -> anyhow::Result<u64> + Send + Sync>> = vec![
+            {
+                let calls = AtomicUsize::new(0);
+                Box::new(move |_| {
+                    if calls.fetch_add(1, Ordering::SeqCst) == 0 {
+                        anyhow::bail!("transient")
+                    }
+                    Ok(0)
+                })
+            },
+            Box::new(move |_| {
+                *lock(&fda) = Some(Instant::now());
+                Ok(1)
+            }),
+        ];
+        let b = Backoff { base_ms: 150, cap_ms: 150 };
+        let out = run_resilient_with(jobs, 1, 2, b, || (), None);
+        assert_eq!(out[0].as_ref().unwrap(), &0);
+        assert_eq!(out[1].as_ref().unwrap(), &1);
+        let at = lock(&first_done_at).expect("job 1 ran");
+        assert!(
+            at.duration_since(t0) < Duration::from_millis(150),
+            "job 1 waited behind a parked retry: {:?}",
+            at.duration_since(t0)
+        );
     }
 
     #[test]

@@ -18,6 +18,21 @@ inter_tput_gbs,inter_drain_gbs,fct_mean_ns,fct_p99_ns,fct_max_ns,\
 intra_wire_gbs,inter_wire_gbs,drop_frac,delivered_msgs,events,\
 coll_op,coll_size_b,coll_iters,coll_mean_ns,coll_p99_ns,coll_pred_ns,dropped_units";
 
+/// Comment-line prefix stamping a streamed CSV with the fingerprint of
+/// the spec that produced it (`SweepSpec::fingerprint`). `--resume` and
+/// the job service refuse to append to a file whose stamp differs —
+/// before the stamp, any CSV with a matching header was accepted, so a
+/// resume against the wrong sweep's file silently interleaved rows from
+/// two different specs.
+pub const SPEC_STAMP_PREFIX: &str = "# sauron-sweep-spec ";
+
+/// Comment-line prefix declaring a hole: a submission index that
+/// terminally failed and will never produce a row. Making holes visible
+/// lines (rather than silent omissions) keeps the file self-describing:
+/// resume can recover the true next submission index from a CSV that
+/// already contains holes, which silent omission miscounted.
+pub const HOLE_PREFIX: &str = "# hole ";
+
 /// One CSV row for a report (matches [`CSV_HEADER`]).
 pub fn csv_row(r: &SimReport) -> String {
     format!(
@@ -94,13 +109,28 @@ pub struct CsvStream {
 impl CsvStream {
     /// Create the file (parents included) and write the header row.
     pub fn create(path: &Path) -> anyhow::Result<CsvStream> {
+        Self::create_inner(path, None)
+    }
+
+    /// Like [`CsvStream::create`], but first stamps the file with the
+    /// producing spec's fingerprint ([`SPEC_STAMP_PREFIX`] comment
+    /// line), which [`CsvStream::resume_stamped`] verifies.
+    pub fn create_stamped(path: &Path, spec_fp: &str) -> anyhow::Result<CsvStream> {
+        Self::create_inner(path, Some(spec_fp))
+    }
+
+    fn create_inner(path: &Path, spec_fp: Option<&str>) -> anyhow::Result<CsvStream> {
         if let Some(parent) = path.parent() {
             if !parent.as_os_str().is_empty() {
                 std::fs::create_dir_all(parent)?;
             }
         }
         let mut out = std::io::BufWriter::new(std::fs::File::create(path)?);
+        if let Some(fp) = spec_fp {
+            writeln!(out, "{SPEC_STAMP_PREFIX}{fp}")?;
+        }
         writeln!(out, "{CSV_HEADER}")?;
+        out.flush()?;
         Ok(CsvStream {
             out,
             pending: std::collections::BTreeMap::new(),
@@ -112,40 +142,98 @@ impl CsvStream {
 
     /// Reopen a partial streamed CSV from a killed run for appending.
     ///
-    /// Validates the header, counts the complete rows already on disk,
-    /// truncates away a torn final line (a kill mid-`write` can leave
-    /// one; everything before it was flushed whole), and returns the
-    /// stream positioned at the next submission index along with that
-    /// index — the caller resumes the sweep at point `n` and pushes
-    /// with the original absolute indices, producing a final file
-    /// byte-identical to an uninterrupted run.
+    /// Validates the header, counts the complete rows and declared
+    /// holes already on disk, truncates away a torn final line (a kill
+    /// mid-`write` can leave one; everything before it was flushed
+    /// whole), and returns the stream positioned at the next submission
+    /// index along with that index — the caller resumes the sweep at
+    /// point `n` and pushes with the original absolute indices,
+    /// producing a final file byte-identical to an uninterrupted run.
     pub fn resume(path: &Path) -> anyhow::Result<(CsvStream, usize)> {
+        Self::resume_inner(path, None)
+    }
+
+    /// Like [`CsvStream::resume`], but additionally requires the file
+    /// to carry a spec fingerprint stamp equal to `spec_fp`, failing
+    /// loudly otherwise — resuming against a different spec's CSV would
+    /// interleave rows from two sweeps into one series.
+    pub fn resume_stamped(path: &Path, spec_fp: &str) -> anyhow::Result<(CsvStream, usize)> {
+        Self::resume_inner(path, Some(spec_fp))
+    }
+
+    fn resume_inner(path: &Path, expect_fp: Option<&str>) -> anyhow::Result<(CsvStream, usize)> {
         let text = std::fs::read_to_string(path).map_err(|e| {
             anyhow::anyhow!("cannot read partial sweep CSV {}: {e}", path.display())
         })?;
-        let header_end = text
-            .find('\n')
-            .ok_or_else(|| anyhow::anyhow!("{}: no header line to resume from", path.display()))?;
+        // Optional stamp line, then the header line.
+        let mut offset = 0usize;
+        let mut stamp: Option<&str> = None;
+        if let Some(rest) = text.strip_prefix(SPEC_STAMP_PREFIX) {
+            let end = rest.find('\n').ok_or_else(|| {
+                anyhow::anyhow!("{}: stamped file has no header line", path.display())
+            })?;
+            stamp = Some(&rest[..end]);
+            offset = SPEC_STAMP_PREFIX.len() + end + 1;
+        }
+        match (expect_fp, stamp) {
+            (Some(want), Some(have)) => anyhow::ensure!(
+                want == have,
+                "{}: spec fingerprint mismatch — file was written by spec {have}, \
+                 current spec is {want}; refusing to append (wrong CSV for this sweep?)",
+                path.display()
+            ),
+            (Some(want), None) => anyhow::bail!(
+                "{}: no spec fingerprint stamp (expected {want}) — written by an \
+                 older build or a foreign tool; refusing to append",
+                path.display()
+            ),
+            (None, _) => {}
+        }
+        let header_end = offset
+            + text[offset..].find('\n').ok_or_else(|| {
+                anyhow::anyhow!("{}: no header line to resume from", path.display())
+            })?;
         anyhow::ensure!(
-            &text[..header_end] == CSV_HEADER,
+            &text[offset..header_end] == CSV_HEADER,
             "{}: header does not match this build's sweep CSV schema — refusing to append",
             path.display()
         );
         let body = &text[header_end + 1..];
-        // Only newline-terminated rows are trusted; a torn tail is cut.
+        // Only newline-terminated lines are trusted; a torn tail is cut.
         let complete_len = body.rfind('\n').map(|i| i + 1).unwrap_or(0);
-        let rows = body[..complete_len].lines().count();
+        let mut rows = 0usize;
+        let mut next = 0usize;
+        for line in body[..complete_len].lines() {
+            if let Some(rest) = line.strip_prefix(HOLE_PREFIX) {
+                // A declared hole advances the submission index without
+                // a row; cross-check its recorded index so corruption
+                // surfaces here instead of as a misaligned series.
+                let idx: usize = rest.trim().parse().map_err(|_| {
+                    anyhow::anyhow!("{}: malformed hole line '{line}'", path.display())
+                })?;
+                anyhow::ensure!(
+                    idx == next,
+                    "{}: hole declares index {idx} but {next} rows/holes precede it",
+                    path.display()
+                );
+            } else if line.starts_with('#') {
+                anyhow::bail!("{}: unrecognized comment line '{line}'", path.display());
+            } else {
+                rows += 1;
+            }
+            next += 1;
+        }
         let keep = (header_end + 1 + complete_len) as u64;
         let f = std::fs::OpenOptions::new().append(true).open(path)?;
         f.set_len(keep)?;
         let stream = CsvStream {
             out: std::io::BufWriter::new(f),
             pending: std::collections::BTreeMap::new(),
-            next: rows,
+            next,
             written: rows,
             err: None,
         };
-        Ok((stream, rows))
+        Ok((stream, next))
     }
 
     /// Submit the report completed at submission index `idx` (each index
@@ -156,9 +244,20 @@ impl CsvStream {
         self.submit(idx, Some(csv_row(r)));
     }
 
+    /// Submit a pre-rendered CSV row for submission index `idx`. The
+    /// job-service restart path streams rows recovered from the journal
+    /// (where [`csv_row`] output was recorded at completion time) without
+    /// re-running the points that produced them.
+    pub fn push_row(&mut self, idx: usize, row: &str) {
+        self.submit(idx, Some(row.to_string()));
+    }
+
     /// Declare that submission index `idx` will never produce a row (a
-    /// failed sweep point): the series stays contiguous for `finish`
-    /// and later rows keep streaming past the hole.
+    /// failed sweep point): a [`HOLE_PREFIX`] comment line is emitted
+    /// in its slot, the series stays contiguous for `finish`, and later
+    /// rows keep streaming past the hole. The declared line is what
+    /// lets [`CsvStream::resume`] recover the true submission index
+    /// from a file containing holes.
     pub fn skip(&mut self, idx: usize) {
         self.submit(idx, None);
     }
@@ -170,13 +269,21 @@ impl CsvStream {
         self.pending.insert(idx, row);
         let mut emitted = false;
         while let Some(slot) = self.pending.remove(&self.next) {
-            if let Some(row) = slot {
-                if let Err(e) = writeln!(self.out, "{row}") {
+            let line_written = match slot {
+                Some(row) => writeln!(self.out, "{row}").map(|()| true),
+                None => writeln!(self.out, "{HOLE_PREFIX}{}", self.next).map(|()| false),
+            };
+            match line_written {
+                Ok(is_row) => {
+                    if is_row {
+                        self.written += 1;
+                    }
+                    emitted = true;
+                }
+                Err(e) => {
                     self.err = Some(e);
                     return;
                 }
-                self.written += 1;
-                emitted = true;
             }
             self.next += 1;
         }
@@ -328,7 +435,71 @@ mod tests {
         stream.push(2, &r);
         assert_eq!(stream.finish().unwrap(), 3, "three real rows around the hole");
         let text = std::fs::read_to_string(&path).unwrap();
-        assert_eq!(text.lines().count(), 4, "header + three rows:\n{text}");
+        assert_eq!(text.lines().count(), 5, "header + three rows + declared hole:\n{text}");
+        assert_eq!(text.lines().nth(2).unwrap(), "# hole 1", "hole is declared in its slot");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn csv_stream_resume_recovers_submission_index_past_holes() {
+        // A killed run that had already declared a hole: the on-disk
+        // prefix is row 0, hole 1, row 2. Resume must come back at
+        // submission index 3 (not row-count 2), or the next push would
+        // duplicate row 2's slot and misalign the series.
+        let dir = std::env::temp_dir().join("sauron_csv_resume_hole_test");
+        let path = dir.join("holed.csv");
+        let r = sample_report();
+        let mut stream = CsvStream::create(&path).unwrap();
+        stream.push(0, &r);
+        stream.skip(1);
+        stream.push(2, &r);
+        drop(stream); // killed before points 3..
+        let (mut resumed, next) = CsvStream::resume(&path).unwrap();
+        assert_eq!(next, 3, "holes count toward the resume index");
+        resumed.push(3, &r);
+        assert_eq!(resumed.finish().unwrap(), 3, "2 rows on disk + 1 pushed");
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 5, "header + 3 rows + hole:\n{text}");
+        // A corrupted hole line is rejected, not miscounted.
+        let bad = dir.join("bad.csv");
+        std::fs::write(&bad, format!("{CSV_HEADER}\n# hole x\n")).unwrap();
+        let err = CsvStream::resume(&bad).unwrap_err();
+        assert!(format!("{err:#}").contains("malformed hole line"), "{err:#}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn stamped_csv_round_trips_and_rejects_foreign_specs() {
+        let dir = std::env::temp_dir().join("sauron_csv_stamp_test");
+        let path = dir.join("stamped.csv");
+        let r = sample_report();
+        let fp_a = "00aa11bb22cc33dd";
+        let fp_b = "ffee00112233ffee";
+        let mut stream = CsvStream::create_stamped(&path, fp_a).unwrap();
+        stream.push(0, &r);
+        drop(stream); // killed after one row
+        // Matching fingerprint resumes exactly like the unstamped path.
+        let (mut resumed, next) = CsvStream::resume_stamped(&path, fp_a).unwrap();
+        assert_eq!(next, 1);
+        resumed.push(1, &r);
+        assert_eq!(resumed.finish().unwrap(), 2);
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("# sauron-sweep-spec 00aa11bb22cc33dd\n"), "{text}");
+        assert_eq!(text.lines().count(), 4, "stamp + header + two rows:\n{text}");
+        // A different spec's fingerprint is refused loudly.
+        let err = CsvStream::resume_stamped(&path, fp_b).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("fingerprint mismatch") && msg.contains(fp_a), "{msg}");
+        // An unstamped file cannot satisfy a stamped resume.
+        let plain = dir.join("plain.csv");
+        let mut s = CsvStream::create(&plain).unwrap();
+        s.push(0, &r);
+        drop(s);
+        let err = CsvStream::resume_stamped(&plain, fp_a).unwrap_err();
+        assert!(format!("{err:#}").contains("no spec fingerprint stamp"), "{err:#}");
+        // The plain resume tolerates stamped files (status tooling).
+        let (_, next) = CsvStream::resume(&path).unwrap();
+        assert_eq!(next, 2);
         std::fs::remove_dir_all(&dir).ok();
     }
 

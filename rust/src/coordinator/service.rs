@@ -1,0 +1,1236 @@
+//! Resilient sweep job service: a durable file-backed job queue plus a
+//! supervisor that shards sweep points across worker *processes* and
+//! survives `kill -9` of any of them.
+//!
+//! Layered on the in-process coordinator: the thread pool
+//! ([`super::pool`]) isolates panics within one process, but a stuck
+//! PJRT call, an OOM kill, or an operator's `kill -9` takes the whole
+//! process down — a long figure sweep should survive those too. The
+//! service gets there with three mechanisms:
+//!
+//! * **Durable spool.** Specs enter via `sauron submit` (an atomic
+//!   rename into `<spool>/queue/`); claiming a job atomically moves the
+//!   spec into `<spool>/jobs/<id>/spec.json`. A spec is always wholly in
+//!   exactly one place.
+//! * **Append-only journals.** The supervisor owns
+//!   `jobs/<id>/journal.log`; each worker process owns its private
+//!   `worker_<id>.log` shard ([`crate::report::journal`]). Every claim,
+//!   completion (with its rendered CSV row), failure, requeue and
+//!   quarantine is fsync'd before it takes effect, so a restart replays
+//!   the merged shards and resumes exactly — the final CSV is
+//!   byte-identical to an uninterrupted run's.
+//! * **Leases + retries.** Workers heartbeat a counter file; a worker
+//!   whose heartbeat goes stale past the lease is killed and its points
+//!   requeued. Failed attempts retry under the same deterministic
+//!   backoff schedule as the in-process pool ([`pool::Backoff`]); points
+//!   that exhaust the budget are quarantined in the journal with their
+//!   structured error and declared as CSV holes
+//!   ([`results::CsvStream::skip`]) so they never block the grid.
+//!
+//! Worker assignment is keyed by blueprint fingerprint
+//! ([`WorldBlueprint::key_for`]): each worker receives a
+//! blueprint-contiguous slice of the pending points, so its pinned
+//! compile-once `Sim` ([`Sim::from_blueprint`] + [`Sim::reset`]) rebuilds
+//! only at blueprint boundaries, exactly like the thread pool.
+//!
+//! On SIGINT/SIGTERM the supervisor drains gracefully: a `drain` flag in
+//! the job directory stops workers between points, in-flight points
+//! finish and journal, and the process exits 0 with the job resumable.
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::process::Stdio;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::config::SimConfig;
+use crate::coordinator::{pool, results, snapshot_provider, SweepSpec};
+use crate::net::world::{BenchMode, SerProvider, Sim, SimReport, WorldBlueprint};
+use crate::report::journal::{
+    JobProgress, JobState, JobStatus, Journal, QuarantineInfo, Record, WorkerLiveness,
+};
+use crate::runtime::CachedProvider;
+use crate::serial::json::{FromJson, ToJson, Value};
+
+/// Signal-to-drain plumbing: SIGINT/SIGTERM set a flag the serve loop
+/// polls. Hand-rolled via libc `signal(2)` — the image ships no signal
+/// crate, and a single async-signal-safe atomic store is all we need.
+mod sig {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    static SHUTDOWN: AtomicBool = AtomicBool::new(false);
+
+    #[cfg(unix)]
+    extern "C" fn on_signal(_sig: i32) {
+        SHUTDOWN.store(true, Ordering::SeqCst);
+    }
+
+    #[cfg(unix)]
+    pub(super) fn install() {
+        extern "C" {
+            fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+        }
+        unsafe {
+            let _ = signal(2, on_signal); // SIGINT
+            let _ = signal(15, on_signal); // SIGTERM
+        }
+    }
+
+    #[cfg(not(unix))]
+    pub(super) fn install() {}
+
+    pub(super) fn shutdown_requested() -> bool {
+        SHUTDOWN.load(Ordering::SeqCst)
+    }
+}
+
+/// Knobs of one `sauron serve` invocation.
+#[derive(Clone, Debug)]
+pub struct ServiceConfig {
+    /// Spool directory (`queue/` + `jobs/` live under it).
+    pub spool: PathBuf,
+    /// Worker processes per job.
+    pub workers: usize,
+    /// Lease: a worker whose heartbeat is older than this is presumed
+    /// hung, killed, and its points requeued.
+    pub lease_ms: u64,
+    /// Extra attempts per point after the first (budget = retries + 1).
+    pub retries: usize,
+    /// Deterministic retry backoff schedule.
+    pub backoff: pool::Backoff,
+    /// Supervisor poll interval.
+    pub poll_ms: u64,
+    /// Exit once the queue is empty instead of waiting for new jobs
+    /// (tests and one-shot batch runs).
+    pub once: bool,
+    /// Forward `--native` to workers (skip PJRT, use the native mirror).
+    pub native: bool,
+    /// Forward `--artifacts DIR` to workers.
+    pub artifacts: Option<String>,
+}
+
+impl ServiceConfig {
+    /// Defaults: min(parallelism, 4) workers, 10 s lease, 1 retry,
+    /// default backoff, 50 ms poll.
+    pub fn new(spool: PathBuf) -> ServiceConfig {
+        ServiceConfig {
+            spool,
+            workers: super::default_workers().min(4),
+            lease_ms: 10_000,
+            retries: 1,
+            backoff: pool::Backoff::default(),
+            poll_ms: 50,
+            once: false,
+            native: false,
+            artifacts: None,
+        }
+    }
+}
+
+/// Final accounting of one supervised job.
+#[derive(Debug)]
+pub struct JobOutcome {
+    /// Job id (spool directory name).
+    pub id: String,
+    /// Points in the grid.
+    pub total: usize,
+    /// Points with a CSV row.
+    pub completed: usize,
+    /// Points terminally quarantined (declared CSV holes).
+    pub quarantined: usize,
+    /// True when the job was interrupted by a graceful drain and is
+    /// resumable; false when every point reached a terminal state.
+    pub drained: bool,
+    /// The streamed CSV.
+    pub csv: PathBuf,
+}
+
+fn queue_dir(spool: &Path) -> PathBuf {
+    spool.join("queue")
+}
+
+fn jobs_dir(spool: &Path) -> PathBuf {
+    spool.join("jobs")
+}
+
+fn job_dir(spool: &Path, id: &str) -> PathBuf {
+    jobs_dir(spool).join(id)
+}
+
+fn sanitize_id(stem: &str) -> String {
+    let s: String = stem
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == '-' || c == '_' { c } else { '-' })
+        .collect();
+    if s.is_empty() {
+        "job".to_string()
+    } else {
+        s
+    }
+}
+
+/// Write `bytes` to `path` atomically: temp file in the same directory,
+/// fsync, rename. Readers see either the old file or the whole new one.
+fn write_atomic(path: &Path, bytes: &[u8]) -> anyhow::Result<()> {
+    let parent = match path.parent() {
+        Some(p) if !p.as_os_str().is_empty() => p.to_path_buf(),
+        _ => PathBuf::from("."),
+    };
+    std::fs::create_dir_all(&parent)?;
+    let name = path.file_name().and_then(|n| n.to_str()).unwrap_or("file");
+    let tmp = parent.join(format!(".tmp.{name}"));
+    {
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(bytes)?;
+        f.sync_data()?;
+    }
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+/// The job epoch is bumped by every supervisor (re)start; workers from a
+/// previous supervisor life notice the change (heartbeat thread) and
+/// exit, so orphans never race the restarted supervisor's reassignments.
+fn read_epoch(dir: &Path) -> u64 {
+    std::fs::read_to_string(dir.join("epoch"))
+        .ok()
+        .and_then(|s| s.trim().parse().ok())
+        .unwrap_or(0)
+}
+
+fn bump_epoch(dir: &Path) -> anyhow::Result<u64> {
+    let e = read_epoch(dir) + 1;
+    write_atomic(&dir.join("epoch"), e.to_string().as_bytes())?;
+    Ok(e)
+}
+
+fn read_spec(dir: &Path) -> anyhow::Result<SweepSpec> {
+    let path = dir.join("spec.json");
+    let text = std::fs::read_to_string(&path)
+        .map_err(|e| anyhow::anyhow!("cannot read job spec {}: {e}", path.display()))?;
+    SweepSpec::from_json(&Value::parse(&text)?)
+}
+
+/// Every worker journal shard in a job directory, sorted by name.
+fn worker_logs(dir: &Path) -> Vec<PathBuf> {
+    let mut out = Vec::new();
+    if let Ok(rd) = std::fs::read_dir(dir) {
+        for entry in rd.flatten() {
+            let name = entry.file_name();
+            let name = name.to_string_lossy();
+            if name.starts_with("worker_") && name.ends_with(".log") {
+                out.push(entry.path());
+            }
+        }
+    }
+    out.sort();
+    out
+}
+
+/// Worker ids are unique across supervisor restarts (each gets a fresh
+/// journal shard and heartbeat file): continue after the highest
+/// ordinal any previous life used.
+fn next_worker_ordinal(dir: &Path) -> usize {
+    let mut next = 0;
+    if let Ok(rd) = std::fs::read_dir(dir) {
+        for entry in rd.flatten() {
+            let name = entry.file_name();
+            let name = name.to_string_lossy();
+            if let Some(n) = name
+                .strip_prefix("worker_w")
+                .and_then(|r| r.strip_suffix(".log"))
+                .and_then(|r| r.parse::<usize>().ok())
+            {
+                next = next.max(n + 1);
+            }
+        }
+    }
+    next
+}
+
+/// Read the newline-terminated records appended to a journal shard since
+/// byte offset `off` (advanced past what was consumed). A trailing
+/// fragment without its newline is left for the next poll — a worker's
+/// single `write_all` per record means complete lines always parse.
+fn tail_records(path: &Path, off: &mut u64) -> anyhow::Result<Vec<Record>> {
+    let bytes = match std::fs::read(path) {
+        Ok(b) => b,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(Vec::new()),
+        Err(e) => return Err(anyhow::anyhow!("cannot read {}: {e}", path.display())),
+    };
+    let start = *off as usize;
+    if start >= bytes.len() {
+        return Ok(Vec::new());
+    }
+    let chunk = &bytes[start..];
+    let complete = chunk.iter().rposition(|&b| b == b'\n').map(|i| i + 1).unwrap_or(0);
+    let text = std::str::from_utf8(&chunk[..complete])
+        .map_err(|e| anyhow::anyhow!("{}: non-UTF8 journal data: {e}", path.display()))?;
+    let mut out = Vec::new();
+    for line in text.lines() {
+        let rec = Value::parse(line)
+            .and_then(|v| Record::from_json(&v))
+            .map_err(|e| e.context(format!("corrupt journal {}", path.display())))?;
+        out.push(rec);
+    }
+    *off += complete as u64;
+    Ok(out)
+}
+
+/// Validate a spec file and drop it into the queue under a
+/// content-addressed id (`<spec-file-stem>-<fingerprint[..8]>`).
+/// Resubmitting the identical spec is a loud no-op; changing the spec
+/// changes the id. Returns the job id.
+pub fn submit(spool: &Path, spec_path: &Path) -> anyhow::Result<String> {
+    let text = std::fs::read_to_string(spec_path)
+        .map_err(|e| anyhow::anyhow!("cannot read spec {}: {e}", spec_path.display()))?;
+    let spec = SweepSpec::from_json(&Value::parse(&text)?)
+        .map_err(|e| e.context(format!("invalid sweep spec {}", spec_path.display())))?;
+    // Reject invalid grids at submit time, not inside a worker at 2 a.m.
+    for (i, cfg) in spec.configs().iter().enumerate() {
+        if let Err(e) = cfg.validate() {
+            anyhow::bail!("spec {}: point {i} is invalid: {e}", spec_path.display());
+        }
+    }
+    let stem = spec_path.file_stem().and_then(|s| s.to_str()).unwrap_or("job");
+    let fp = spec.fingerprint();
+    let id = format!("{}-{}", sanitize_id(stem), &fp[..8]);
+    let queued = queue_dir(spool).join(format!("{id}.json"));
+    anyhow::ensure!(!queued.exists(), "job {id} is already queued ({})", queued.display());
+    let claimed = job_dir(spool, &id);
+    anyhow::ensure!(
+        !claimed.exists(),
+        "job {id} already ran or is running ({}); remove that directory to resubmit",
+        claimed.display()
+    );
+    // The spec is re-rendered (not copied) so the spooled file is the
+    // canonical form the fingerprint was computed over.
+    write_atomic(&queued, spec.to_json().pretty().as_bytes())?;
+    Ok(id)
+}
+
+/// Pick the next job to supervise: an unfinished claimed job first
+/// (crash recovery resumes before new work starts), else claim the
+/// alphabetically first queued spec by atomically moving it into its
+/// job directory.
+fn next_job(spool: &Path) -> anyhow::Result<Option<String>> {
+    let mut resumable: Vec<String> = Vec::new();
+    if let Ok(rd) = std::fs::read_dir(jobs_dir(spool)) {
+        for entry in rd.flatten() {
+            // A directory without spec.json is a half-claimed job whose
+            // rename never happened; its spec is still in the queue.
+            if entry.path().join("spec.json").exists() && !entry.path().join("DONE").exists() {
+                resumable.push(entry.file_name().to_string_lossy().into_owned());
+            }
+        }
+    }
+    resumable.sort();
+    if let Some(id) = resumable.into_iter().next() {
+        return Ok(Some(id));
+    }
+    let mut queued: Vec<String> = Vec::new();
+    if let Ok(rd) = std::fs::read_dir(queue_dir(spool)) {
+        for entry in rd.flatten() {
+            let name = entry.file_name().to_string_lossy().into_owned();
+            if let Some(stem) = name.strip_suffix(".json") {
+                if !stem.starts_with('.') {
+                    queued.push(stem.to_string());
+                }
+            }
+        }
+    }
+    queued.sort();
+    match queued.into_iter().next() {
+        None => Ok(None),
+        Some(id) => {
+            let jd = job_dir(spool, &id);
+            std::fs::create_dir_all(&jd)?;
+            std::fs::rename(queue_dir(spool).join(format!("{id}.json")), jd.join("spec.json"))?;
+            Ok(Some(id))
+        }
+    }
+}
+
+/// Slice pending points into at most `workers` near-equal contiguous
+/// chunks of the blueprint-sorted order (groups in first-appearance
+/// order, spec order within a group), so each chunk spans the fewest
+/// possible blueprints and a worker's pinned `Sim` rebuilds at most
+/// ~once per chunk.
+pub fn shard_points(keys: &[String], pending: &[usize], workers: usize) -> Vec<Vec<usize>> {
+    if pending.is_empty() || workers == 0 {
+        return Vec::new();
+    }
+    let mut rank: std::collections::HashMap<&str, usize> = std::collections::HashMap::new();
+    for &i in pending {
+        let next = rank.len();
+        rank.entry(keys[i].as_str()).or_insert(next);
+    }
+    let mut order: Vec<usize> = pending.to_vec();
+    order.sort_by_key(|&i| (rank[keys[i].as_str()], i));
+    let n = workers.min(order.len());
+    let (base, extra) = (order.len() / n, order.len() % n);
+    let mut out = Vec::with_capacity(n);
+    let mut at = 0;
+    for w in 0..n {
+        let len = base + usize::from(w < extra);
+        out.push(order[at..at + len].to_vec());
+        at += len;
+    }
+    out
+}
+
+/// Supervisor-side live state of one job: replayed progress plus the
+/// CSV stream and scheduling bookkeeping — everything a journal record
+/// or a worker event mutates.
+struct JobBook {
+    progress: JobProgress,
+    csv: results::CsvStream,
+    /// Indices already emitted to (or resumed from) the CSV stream.
+    streamed: Vec<bool>,
+    /// Indices currently assigned to a live worker.
+    assigned: Vec<bool>,
+    /// Earliest instant each point may be (re)assigned (retry backoff).
+    eligible: Vec<Instant>,
+    backoff: pool::Backoff,
+}
+
+impl JobBook {
+    /// Apply one worker-journal record to the live state.
+    fn apply(&mut self, rec: Record) -> anyhow::Result<()> {
+        if let Some(idx) = rec.idx() {
+            anyhow::ensure!(
+                idx < self.progress.points,
+                "worker journal names point {idx} but the spec has {} points",
+                self.progress.points
+            );
+        }
+        match rec {
+            Record::Claim { idx, .. } => self.progress.attempts[idx] += 1,
+            Record::Done { idx, row } => {
+                if !self.streamed[idx] {
+                    self.csv.push_row(idx, &row);
+                    self.streamed[idx] = true;
+                }
+                if self.progress.rows[idx].is_none() {
+                    self.progress.rows[idx] = Some(row);
+                }
+                self.assigned[idx] = false;
+            }
+            Record::Fail { idx, error, .. } => {
+                self.progress.last_error[idx] = Some(error);
+                self.assigned[idx] = false;
+                // The next attempt is retry #attempts; park the point
+                // until its slot in the deterministic schedule.
+                let delay = self.backoff.delay_ms(self.progress.attempts[idx]);
+                self.eligible[idx] = Instant::now() + Duration::from_millis(delay);
+            }
+            // Workers only emit claim/done/fail; anything else in their
+            // shard is tolerated noise (forward compatibility).
+            _ => {}
+        }
+        Ok(())
+    }
+
+    /// Whether point `idx` still needs work.
+    fn open(&self, idx: usize) -> bool {
+        self.progress.rows[idx].is_none() && self.progress.quarantined[idx].is_none()
+    }
+}
+
+/// One spawned worker process, as tracked by the supervisor.
+struct WorkerProc {
+    id: String,
+    child: std::process::Child,
+    log_path: PathBuf,
+    log_off: u64,
+    hb_path: PathBuf,
+    hb_last: String,
+    hb_seen: Instant,
+    points: Vec<usize>,
+    /// Journal records ingested from this worker (spawn-failure detector).
+    ingested: usize,
+}
+
+fn spawn_worker(
+    cfg: &ServiceConfig,
+    dir: &Path,
+    job: &str,
+    wid: &str,
+    points: &[usize],
+    attempts: &[usize],
+) -> anyhow::Result<WorkerProc> {
+    let assign = Value::obj()
+        .with("job", job)
+        .with("lease_ms", cfg.lease_ms)
+        .with(
+            "points",
+            Value::Arr(
+                points
+                    .iter()
+                    .map(|&p| Value::obj().with("idx", p).with("attempt", attempts[p] + 1))
+                    .collect(),
+            ),
+        );
+    write_atomic(&dir.join(format!("assign_{wid}.json")), assign.pretty().as_bytes())?;
+    let bin = match std::env::var_os("SAURON_BIN") {
+        Some(p) => PathBuf::from(p),
+        None => std::env::current_exe()?,
+    };
+    let err_file = std::fs::File::create(dir.join(format!("worker_{wid}.err")))?;
+    let mut cmd = std::process::Command::new(&bin);
+    cmd.arg("work")
+        .arg("--spool")
+        .arg(&cfg.spool)
+        .arg("--job")
+        .arg(job)
+        .arg("--worker")
+        .arg(wid);
+    if cfg.native {
+        cmd.arg("--native");
+    }
+    if let Some(a) = &cfg.artifacts {
+        cmd.arg("--artifacts").arg(a);
+    }
+    let child = cmd
+        .stdin(Stdio::null())
+        .stdout(Stdio::null())
+        .stderr(Stdio::from(err_file))
+        .spawn()
+        .map_err(|e| anyhow::anyhow!("cannot spawn worker {wid} ({}): {e}", bin.display()))?;
+    Ok(WorkerProc {
+        id: wid.to_string(),
+        child,
+        log_path: dir.join(format!("worker_{wid}.log")),
+        log_off: 0,
+        hb_path: dir.join(format!("hb_{wid}")),
+        hb_last: String::new(),
+        hb_seen: Instant::now(),
+        points: points.to_vec(),
+        ingested: 0,
+    })
+}
+
+/// Supervise one claimed job to completion or graceful drain.
+///
+/// Restart-safe: replays every journal shard, resumes (or creates) the
+/// stamped CSV, re-streams journaled rows/holes the file is missing,
+/// and only then assigns the still-pending points. A `kill -9` at any
+/// instant loses at most in-flight attempts (their claims are journaled,
+/// so they still count against the retry budget).
+pub fn run_job(cfg: &ServiceConfig, id: &str) -> anyhow::Result<JobOutcome> {
+    let dir = job_dir(&cfg.spool, id);
+    let spec = read_spec(&dir)?;
+    let fp = spec.fingerprint();
+    let total = spec.points();
+    let budget = cfg.retries + 1;
+    // Orphan fence: workers from a previous supervisor life see the
+    // epoch change and exit before they can race our reassignments.
+    bump_epoch(&dir)?;
+    let _ = std::fs::remove_file(dir.join("drain"));
+
+    // Replay: merge the supervisor journal and every worker shard.
+    let mut records = Journal::read_records(&dir.join("journal.log"))?;
+    for shard in worker_logs(&dir) {
+        records.extend(Journal::read_records(&shard)?);
+    }
+    let mut progress = JobProgress::replay(total, &records)?;
+    if let Some(have) = &progress.spec_fp {
+        anyhow::ensure!(
+            *have == fp,
+            "job {id}: journal was written by spec {have} but spec.json now fingerprints \
+             as {fp} — the spec changed after the job started"
+        );
+    }
+    let mut journal = Journal::open_append(&dir.join("journal.log"))?;
+    if progress.spec_fp.is_none() {
+        journal.append(&Record::Job { spec_fp: fp.clone(), points: total })?;
+    }
+    // A claim with no outcome means worker and supervisor died
+    // mid-attempt; the claim burned a retry, and the synthesized error
+    // lets budget exhaustion quarantine instead of stalling forever.
+    for i in 0..total {
+        if progress.rows[i].is_none()
+            && progress.quarantined[i].is_none()
+            && progress.attempts[i] > 0
+            && progress.last_error[i].is_none()
+        {
+            progress.last_error[i] =
+                Some("attempt interrupted (claim journaled, no outcome recorded)".to_string());
+        }
+    }
+
+    // CSV: resume (verifying the spec stamp) or create, then re-stream
+    // journaled outcomes the file does not have yet.
+    let csv_path = dir.join("sweep.csv");
+    let (csv, csv_next) = if csv_path.exists() {
+        results::CsvStream::resume_stamped(&csv_path, &fp)?
+    } else {
+        (results::CsvStream::create_stamped(&csv_path, &fp)?, 0)
+    };
+    let now = Instant::now();
+    let mut book = JobBook {
+        progress,
+        csv,
+        streamed: (0..total).map(|i| i < csv_next).collect(),
+        assigned: vec![false; total],
+        eligible: vec![now; total],
+        backoff: cfg.backoff,
+    };
+    for i in csv_next..total {
+        if let Some(row) = book.progress.rows[i].clone() {
+            book.csv.push_row(i, &row);
+            book.streamed[i] = true;
+        } else if book.progress.quarantined[i].is_some() {
+            book.csv.skip(i);
+            book.streamed[i] = true;
+        }
+    }
+
+    // Blueprint keys drive worker affinity (compile-once reuse).
+    let keys: Vec<String> = spec
+        .configs()
+        .iter()
+        .map(|c| WorldBlueprint::key_for(c, BenchMode::None, &[]))
+        .collect();
+
+    let mut workers: Vec<WorkerProc> = Vec::new();
+    let mut next_ordinal = next_worker_ordinal(&dir);
+    let mut draining = false;
+    let mut barren_exits = 0usize;
+
+    loop {
+        // Graceful drain: flag the job directory so workers stop between
+        // points; in-flight points finish and journal.
+        if sig::shutdown_requested() && !draining {
+            draining = true;
+            std::fs::write(dir.join("drain"), b"1")?;
+        }
+
+        // Ingest whatever the workers journaled since the last poll.
+        for w in &mut workers {
+            for rec in tail_records(&w.log_path, &mut w.log_off)? {
+                w.ingested += 1;
+                book.apply(rec)?;
+            }
+        }
+
+        // Reap exited workers; kill and reclaim hung ones (stale lease).
+        let mut i = 0;
+        while i < workers.len() {
+            let reason: Option<String> = {
+                let w = &mut workers[i];
+                if let Some(status) = w.child.try_wait()? {
+                    Some(if status.success() {
+                        "worker exited".to_string()
+                    } else {
+                        format!("worker exited with {status}")
+                    })
+                } else {
+                    if let Ok(hb) = std::fs::read_to_string(&w.hb_path) {
+                        if hb != w.hb_last {
+                            w.hb_last = hb;
+                            w.hb_seen = Instant::now();
+                        }
+                    }
+                    if w.hb_seen.elapsed() >= Duration::from_millis(cfg.lease_ms) {
+                        let _ = w.child.kill();
+                        let _ = w.child.wait();
+                        Some("lease expired".to_string())
+                    } else {
+                        None
+                    }
+                }
+            };
+            let Some(reason) = reason else {
+                i += 1;
+                continue;
+            };
+            let mut w = workers.remove(i);
+            // Final drain of its shard: completions raced the exit.
+            for rec in tail_records(&w.log_path, &mut w.log_off)? {
+                w.ingested += 1;
+                book.apply(rec)?;
+            }
+            let reason = if draining { "drain".to_string() } else { reason };
+            for &p in &w.points {
+                if book.open(p) && book.assigned[p] {
+                    book.assigned[p] = false;
+                    journal.append(&Record::Requeue {
+                        idx: p,
+                        worker: w.id.clone(),
+                        reason: reason.clone(),
+                    })?;
+                    book.progress.last_error[p] = Some(reason.clone());
+                    let delay = cfg.backoff.delay_ms(book.progress.attempts[p]);
+                    book.eligible[p] = Instant::now() + Duration::from_millis(delay);
+                }
+            }
+            // A worker that exits without journaling a single record
+            // never even claimed a point — a crash-looping binary or an
+            // unreadable spool. Backing off forever would loop silently.
+            if w.ingested == 0 && !draining {
+                barren_exits += 1;
+                if barren_exits > 3 {
+                    anyhow::bail!(
+                        "job {id}: workers keep exiting without journaling any progress — \
+                         see {}",
+                        dir.join(format!("worker_{}.err", w.id)).display()
+                    );
+                }
+            } else {
+                barren_exits = 0;
+            }
+        }
+
+        // Quarantine points that exhausted the attempt budget.
+        for idx in 0..total {
+            if book.open(idx) && !book.assigned[idx] && book.progress.attempts[idx] >= budget {
+                let attempts = book.progress.attempts[idx];
+                let error = book.progress.last_error[idx]
+                    .clone()
+                    .unwrap_or_else(|| "attempt interrupted".to_string());
+                journal.append(&Record::Quarantine {
+                    idx,
+                    attempts,
+                    backoff_ms: cfg.backoff.total_ms(attempts.saturating_sub(1)),
+                    error: error.clone(),
+                })?;
+                book.progress.quarantined[idx] = Some(QuarantineInfo { idx, attempts, error });
+                if !book.streamed[idx] {
+                    book.csv.skip(idx);
+                    book.streamed[idx] = true;
+                }
+                eprintln!(
+                    "job {id}: point {idx} quarantined after {attempts} attempt(s): {}",
+                    book.progress.last_error[idx].as_deref().unwrap_or("?")
+                );
+            }
+        }
+
+        // Every point terminal: wait the workers out (their remaining
+        // assignments are all terminal, so they exit on their own),
+        // close the CSV, and mark the job done.
+        if book.progress.is_complete() {
+            let deadline = Instant::now() + Duration::from_millis(cfg.lease_ms);
+            for w in &mut workers {
+                while w.child.try_wait()?.is_none() {
+                    if Instant::now() >= deadline {
+                        let _ = w.child.kill();
+                        let _ = w.child.wait();
+                        break;
+                    }
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+            }
+            let rows = book.csv.finish()?;
+            let quarantined = book.progress.quarantined_count();
+            anyhow::ensure!(
+                rows + quarantined == total,
+                "job {id}: CSV has {rows} rows + {quarantined} holes for {total} points"
+            );
+            let summary = Value::obj()
+                .with("spec_fp", fp.as_str())
+                .with("points", total)
+                .with("completed", rows)
+                .with(
+                    "quarantined",
+                    Value::Arr(
+                        book.progress
+                            .quarantined
+                            .iter()
+                            .flatten()
+                            .map(|q| {
+                                Value::obj()
+                                    .with("idx", q.idx)
+                                    .with("attempts", q.attempts)
+                                    .with("error", q.error.as_str())
+                            })
+                            .collect(),
+                    ),
+                );
+            write_atomic(&dir.join("DONE"), summary.pretty().as_bytes())?;
+            return Ok(JobOutcome {
+                id: id.to_string(),
+                total,
+                completed: rows,
+                quarantined,
+                drained: false,
+                csv: csv_path,
+            });
+        }
+
+        // Drained and every worker gone: journal the drain and leave the
+        // job resumable. (Out-of-order rows not yet in the CSV are safe
+        // in the journal; the next run re-streams them.)
+        if draining && workers.is_empty() {
+            journal.append(&Record::Drain {})?;
+            return Ok(JobOutcome {
+                id: id.to_string(),
+                total,
+                completed: book.progress.done_count(),
+                quarantined: book.progress.quarantined_count(),
+                drained: true,
+                csv: csv_path,
+            });
+        }
+
+        // Assign ready points to fresh workers, blueprint-contiguous.
+        if !draining && workers.len() < cfg.workers {
+            let now = Instant::now();
+            let ready: Vec<usize> = (0..total)
+                .filter(|&p| {
+                    book.open(p)
+                        && !book.assigned[p]
+                        && book.progress.attempts[p] < budget
+                        && book.eligible[p] <= now
+                })
+                .collect();
+            if !ready.is_empty() {
+                let slots = cfg.workers - workers.len();
+                for shard in shard_points(&keys, &ready, slots) {
+                    let wid = format!("w{next_ordinal}");
+                    next_ordinal += 1;
+                    let w = spawn_worker(cfg, &dir, id, &wid, &shard, &book.progress.attempts)?;
+                    for &p in &shard {
+                        book.assigned[p] = true;
+                    }
+                    workers.push(w);
+                }
+            }
+        }
+
+        std::thread::sleep(Duration::from_millis(cfg.poll_ms.clamp(5, 1000)));
+    }
+}
+
+/// The service loop: resume unfinished jobs, then claim queued specs in
+/// name order; with [`ServiceConfig::once`], exit when the spool is
+/// drained, otherwise poll for new submissions. SIGINT/SIGTERM drains
+/// the running job gracefully and exits 0.
+pub fn serve(cfg: &ServiceConfig) -> anyhow::Result<()> {
+    sig::install();
+    std::fs::create_dir_all(queue_dir(&cfg.spool))?;
+    std::fs::create_dir_all(jobs_dir(&cfg.spool))?;
+    eprintln!(
+        "serving spool {} ({} workers, lease {} ms, {} retries)",
+        cfg.spool.display(),
+        cfg.workers,
+        cfg.lease_ms,
+        cfg.retries
+    );
+    loop {
+        if sig::shutdown_requested() {
+            return Ok(());
+        }
+        match next_job(&cfg.spool)? {
+            Some(id) => {
+                let out = run_job(cfg, &id)?;
+                if out.drained {
+                    println!(
+                        "job {}: drained at {}/{} points; resumable with `sauron serve`",
+                        out.id, out.completed, out.total
+                    );
+                    return Ok(());
+                }
+                println!(
+                    "job {}: {}/{} points, {} quarantined -> {}",
+                    out.id,
+                    out.completed,
+                    out.total,
+                    out.quarantined,
+                    out.csv.display()
+                );
+            }
+            None if cfg.once => return Ok(()),
+            None => std::thread::sleep(Duration::from_millis(cfg.poll_ms.clamp(50, 1000))),
+        }
+    }
+}
+
+/// Worker-process entry point (`sauron work`, spawned by the
+/// supervisor; not part of the human-facing CLI surface).
+///
+/// Runs its assigned points in order, journaling a fsync'd claim before
+/// and a done/fail record after each one, with the same pinned-`Sim`
+/// blueprint reuse and panic isolation as the in-process pool. Stops
+/// cleanly between points on drain or supervisor restart (epoch bump).
+pub fn work_main(
+    spool: &Path,
+    job: &str,
+    worker: &str,
+    inner: &dyn SerProvider,
+) -> anyhow::Result<()> {
+    let dir = job_dir(spool, job);
+    // Test hook: a worker that hangs before claiming or heartbeating —
+    // drives the lease-expiry requeue tests.
+    if std::env::var("SAURON_WORK_TEST_HANG").as_deref() == Ok(worker) {
+        loop {
+            std::thread::sleep(Duration::from_secs(3600));
+        }
+    }
+    let spec = read_spec(&dir)?;
+    let assign_path = dir.join(format!("assign_{worker}.json"));
+    let assign = Value::parse(&std::fs::read_to_string(&assign_path).map_err(|e| {
+        anyhow::anyhow!("cannot read assignment {}: {e}", assign_path.display())
+    })?)?;
+    let lease_ms = assign.u64_of("lease_ms")?;
+    let points: Vec<(usize, usize)> = assign
+        .req("points")?
+        .as_arr()?
+        .iter()
+        .map(|p| Ok((p.usize_of("idx")?, p.usize_of("attempt")?)))
+        .collect::<anyhow::Result<_>>()?;
+    let epoch0 = read_epoch(&dir);
+
+    // Heartbeat thread: bump a counter file every quarter-lease. Doubles
+    // as orphan self-termination — a supervisor restart bumps the job
+    // epoch, and a worker from the previous life must exit (even
+    // mid-point) before its lease-less writes can race the new
+    // supervisor's reassignments.
+    {
+        let hb = dir.join(format!("hb_{worker}"));
+        let dir = dir.clone();
+        std::thread::spawn(move || {
+            let mut n: u64 = 0;
+            loop {
+                n += 1;
+                let _ = std::fs::write(&hb, n.to_string());
+                if read_epoch(&dir) != epoch0 {
+                    std::process::exit(3);
+                }
+                std::thread::sleep(Duration::from_millis((lease_ms / 4).max(10)));
+            }
+        });
+    }
+
+    let mut journal = Journal::open_append(&dir.join(format!("worker_{worker}.log")))?;
+    let provider = Arc::new(snapshot_provider(&spec, inner));
+    let configs = spec.configs();
+    let mut pinned: Option<(String, Sim)> = None;
+    for (idx, attempt) in points {
+        anyhow::ensure!(
+            idx < configs.len(),
+            "assignment names point {idx} but the spec has {} points",
+            configs.len()
+        );
+        // Between points: stop for a drain or a supervisor restart.
+        if dir.join("drain").exists() || read_epoch(&dir) != epoch0 {
+            return Ok(());
+        }
+        journal.append(&Record::Claim { idx, worker: worker.to_string(), attempt })?;
+        let key = WorldBlueprint::key_for(&configs[idx], BenchMode::None, &[]);
+        let cfg = configs[idx].clone();
+        let p = provider.clone();
+        let (result, corrupt) = pool::call_isolated(
+            move |pinned: &mut Option<(String, Sim)>| run_point(&p, key, cfg, pinned),
+            &mut pinned,
+        );
+        if corrupt {
+            pinned = None;
+        }
+        match result {
+            Ok(report) => {
+                journal.append(&Record::Done { idx, row: results::csv_row(&report) })?
+            }
+            Err(e) => {
+                journal.append(&Record::Fail { idx, attempt, error: format!("{e:#}") })?
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Run one sweep point, reusing the worker's pinned `Sim` when the
+/// blueprint key matches (the process-level mirror of the thread pool's
+/// compile-once slot).
+fn run_point(
+    provider: &CachedProvider,
+    key: String,
+    cfg: SimConfig,
+    pinned: &mut Option<(String, Sim)>,
+) -> anyhow::Result<SimReport> {
+    if let Some((k, sim)) = pinned.as_mut() {
+        if *k == key {
+            sim.reset(cfg)?;
+            return sim.try_run_mut();
+        }
+    }
+    let bp = Arc::new(WorldBlueprint::compile(cfg.clone(), provider, BenchMode::None, &[])?);
+    let mut sim = Sim::from_blueprint(&bp, cfg)?;
+    let report = sim.try_run_mut();
+    *pinned = Some((key, sim));
+    report
+}
+
+/// Replayed status of every job in the spool (queued, running, done),
+/// sorted queued-first then by id. Worker liveness is judged by
+/// heartbeat-file age against `lease_ms`.
+pub fn status(spool: &Path, lease_ms: u64) -> anyhow::Result<Vec<JobStatus>> {
+    let mut out = Vec::new();
+    let mut queued: Vec<String> = Vec::new();
+    if let Ok(rd) = std::fs::read_dir(queue_dir(spool)) {
+        for entry in rd.flatten() {
+            let name = entry.file_name().to_string_lossy().into_owned();
+            if let Some(stem) = name.strip_suffix(".json") {
+                if !stem.starts_with('.') {
+                    queued.push(stem.to_string());
+                }
+            }
+        }
+    }
+    queued.sort();
+    for id in queued {
+        let path = queue_dir(spool).join(format!("{id}.json"));
+        let spec = SweepSpec::from_json(&Value::parse(&std::fs::read_to_string(&path)?)?)?;
+        out.push(JobStatus {
+            id,
+            state: JobState::Queued,
+            total: spec.points(),
+            done: 0,
+            quarantined: Vec::new(),
+            workers: Vec::new(),
+        });
+    }
+    let mut claimed: Vec<String> = Vec::new();
+    if let Ok(rd) = std::fs::read_dir(jobs_dir(spool)) {
+        for entry in rd.flatten() {
+            if entry.path().join("spec.json").exists() {
+                claimed.push(entry.file_name().to_string_lossy().into_owned());
+            }
+        }
+    }
+    claimed.sort();
+    for id in claimed {
+        let dir = job_dir(spool, &id);
+        let spec = read_spec(&dir)?;
+        let total = spec.points();
+        let mut records = Journal::read_records(&dir.join("journal.log"))?;
+        for shard in worker_logs(&dir) {
+            records.extend(Journal::read_records(&shard)?);
+        }
+        let progress = JobProgress::replay(total, &records)?;
+        let state =
+            if dir.join("DONE").exists() { JobState::Done } else { JobState::Running };
+        let mut workers = Vec::new();
+        if state == JobState::Running {
+            if let Ok(rd) = std::fs::read_dir(&dir) {
+                for entry in rd.flatten() {
+                    let name = entry.file_name().to_string_lossy().into_owned();
+                    if let Some(wid) = name.strip_prefix("hb_") {
+                        let live = entry
+                            .metadata()
+                            .and_then(|m| m.modified())
+                            .ok()
+                            .and_then(|t| t.elapsed().ok())
+                            .map(|age| age < Duration::from_millis(lease_ms))
+                            .unwrap_or(false);
+                        workers.push(WorkerLiveness { id: wid.to_string(), live });
+                    }
+                }
+            }
+            workers.sort_by(|a, b| a.id.cmp(&b.id));
+        }
+        out.push(JobStatus {
+            id,
+            state,
+            total,
+            done: progress.done_count(),
+            quarantined: progress.quarantined.iter().flatten().cloned().collect(),
+            workers,
+        });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn temp_spool(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("sauron_service_{tag}"));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn spec_json() -> &'static str {
+        r#"{"nodes": 32, "intra_gbs": [128, 512], "patterns": ["C3"], "loads": [0.1, 0.2]}"#
+    }
+
+    #[test]
+    fn shard_points_packs_blueprint_contiguous_chunks() {
+        // Two blueprints interleaved in pending order: sharding must
+        // first regroup by blueprint, then cut contiguous chunks.
+        let keys: Vec<String> =
+            ["a", "a", "b", "b", "a", "b"].iter().map(|s| s.to_string()).collect();
+        let pending = vec![0, 1, 2, 3, 4, 5];
+        let shards = shard_points(&keys, &pending, 2);
+        assert_eq!(shards, vec![vec![0, 1, 4], vec![2, 3, 5]], "one blueprint per worker");
+        // More workers than points degrades to one point each.
+        let shards = shard_points(&keys, &[2, 4], 8);
+        assert_eq!(shards.len(), 2);
+        // Near-equal sizes when the count does not divide evenly.
+        let sizes: Vec<usize> =
+            shard_points(&keys, &[0, 1, 2, 3, 4], 2).iter().map(Vec::len).collect();
+        assert_eq!(sizes, vec![3, 2]);
+        assert!(shard_points(&keys, &[], 4).is_empty());
+        assert!(shard_points(&keys, &pending, 0).is_empty());
+    }
+
+    #[test]
+    fn submit_is_atomic_content_addressed_and_dedups() {
+        let spool = temp_spool("submit");
+        let spec_path = spool.join("quick.json");
+        std::fs::write(&spec_path, spec_json()).unwrap();
+        let id = submit(&spool, &spec_path).unwrap();
+        assert!(id.starts_with("quick-"), "{id}");
+        assert_eq!(id.len(), "quick-".len() + 8, "stem + 8 fingerprint hex digits: {id}");
+        let queued = queue_dir(&spool).join(format!("{id}.json"));
+        assert!(queued.exists());
+        // The spooled spec is the canonical rendering and re-parses to
+        // the same fingerprint the id was derived from.
+        let spec =
+            SweepSpec::from_json(&Value::parse(&std::fs::read_to_string(&queued).unwrap()).unwrap())
+                .unwrap();
+        assert!(id.ends_with(&spec.fingerprint()[..8]));
+        // Resubmitting the identical spec is refused while queued.
+        let err = submit(&spool, &spec_path).unwrap_err();
+        assert!(format!("{err:#}").contains("already queued"), "{err:#}");
+        // A different spec under the same stem gets a different id.
+        std::fs::write(
+            &spec_path,
+            r#"{"nodes": 32, "intra_gbs": [128], "patterns": ["C3"], "loads": [0.1]}"#,
+        )
+        .unwrap();
+        let id2 = submit(&spool, &spec_path).unwrap();
+        assert_ne!(id, id2);
+        // Garbage specs are rejected before they reach the queue.
+        std::fs::write(&spec_path, r#"{"nodes": 32}"#).unwrap();
+        assert!(submit(&spool, &spec_path).is_err());
+        std::fs::remove_dir_all(&spool).ok();
+    }
+
+    #[test]
+    fn next_job_claims_queue_atomically_and_prefers_resumable() {
+        let spool = temp_spool("claim");
+        let spec_path = spool.join("grid.json");
+        std::fs::write(&spec_path, spec_json()).unwrap();
+        let id = submit(&spool, &spec_path).unwrap();
+        // Claiming moves the spec wholly into the job directory.
+        assert_eq!(next_job(&spool).unwrap().as_deref(), Some(id.as_str()));
+        assert!(!queue_dir(&spool).join(format!("{id}.json")).exists());
+        assert!(job_dir(&spool, &id).join("spec.json").exists());
+        // The claimed-but-unfinished job is found again before new work.
+        std::fs::write(&spec_path.with_file_name("other.json"), spec_json()).unwrap();
+        submit(&spool, &spec_path.with_file_name("other.json")).unwrap();
+        assert_eq!(next_job(&spool).unwrap().as_deref(), Some(id.as_str()), "resume first");
+        // A DONE marker releases it; the queued job is claimed next.
+        std::fs::write(job_dir(&spool, &id).join("DONE"), "{}").unwrap();
+        let next = next_job(&spool).unwrap().unwrap();
+        assert!(next.starts_with("other-"), "{next}");
+        // Empty spool: nothing to do.
+        std::fs::write(job_dir(&spool, &next).join("DONE"), "{}").unwrap();
+        assert_eq!(next_job(&spool).unwrap(), None);
+        std::fs::remove_dir_all(&spool).ok();
+    }
+
+    #[test]
+    fn epoch_bumps_survive_rereads() {
+        let spool = temp_spool("epoch");
+        let dir = spool.join("jobs").join("j");
+        std::fs::create_dir_all(&dir).unwrap();
+        assert_eq!(read_epoch(&dir), 0, "missing epoch reads as 0");
+        assert_eq!(bump_epoch(&dir).unwrap(), 1);
+        assert_eq!(bump_epoch(&dir).unwrap(), 2);
+        assert_eq!(read_epoch(&dir), 2);
+        std::fs::remove_dir_all(&spool).ok();
+    }
+
+    #[test]
+    fn tail_records_consumes_only_complete_lines() {
+        let spool = temp_spool("tail");
+        let log = spool.join("w.log");
+        let rec1 = Record::Claim { idx: 0, worker: "w0".into(), attempt: 1 };
+        let rec2 = Record::Done { idx: 0, row: "r".into() };
+        let mut line = rec1.to_json().compact();
+        line.push('\n');
+        // A torn fragment after the complete line stays unconsumed.
+        std::fs::write(&log, format!("{line}{{\"ev\": \"do")).unwrap();
+        let mut off = 0u64;
+        assert_eq!(tail_records(&log, &mut off).unwrap(), vec![rec1]);
+        assert_eq!(off as usize, line.len());
+        // Completing the fragment later yields it on the next poll.
+        let mut rest = rec2.to_json().compact();
+        rest.push('\n');
+        std::fs::write(&log, format!("{line}{rest}")).unwrap();
+        assert_eq!(tail_records(&log, &mut off).unwrap(), vec![rec2]);
+        assert!(tail_records(&log, &mut off).unwrap().is_empty(), "idempotent at EOF");
+        // A missing shard is an empty tail, not an error.
+        let mut off2 = 0;
+        assert!(tail_records(&spool.join("absent.log"), &mut off2).unwrap().is_empty());
+        std::fs::remove_dir_all(&spool).ok();
+    }
+
+    #[test]
+    fn status_reports_queued_running_and_done_jobs() {
+        let spool = temp_spool("status");
+        // One queued job.
+        let spec_path = spool.join("waiting.json");
+        std::fs::write(&spec_path, spec_json()).unwrap();
+        let qid = submit(&spool, &spec_path).unwrap();
+        // One running job, fabricated: spec + journals + heartbeats.
+        let dir = job_dir(&spool, "running-00000000");
+        std::fs::create_dir_all(&dir).unwrap();
+        let spec = SweepSpec::from_json(&Value::parse(spec_json()).unwrap()).unwrap();
+        std::fs::write(dir.join("spec.json"), spec.to_json().pretty()).unwrap();
+        let mut j = Journal::open_append(&dir.join("journal.log")).unwrap();
+        j.append(&Record::Job { spec_fp: spec.fingerprint(), points: 4 }).unwrap();
+        j.append(&Record::Quarantine {
+            idx: 3,
+            attempts: 2,
+            backoff_ms: 25,
+            error: "watchdog".into(),
+        })
+        .unwrap();
+        let mut w = Journal::open_append(&dir.join("worker_w0.log")).unwrap();
+        w.append(&Record::Done { idx: 0, row: "r0".into() }).unwrap();
+        w.append(&Record::Done { idx: 1, row: "r1".into() }).unwrap();
+        std::fs::write(dir.join("hb_w0"), "7").unwrap(); // fresh -> live
+        let all = status(&spool, 60_000).unwrap();
+        assert_eq!(all.len(), 2);
+        let q = all.iter().find(|s| s.id == qid).unwrap();
+        assert_eq!((q.state, q.total, q.done), (JobState::Queued, 4, 0));
+        let r = all.iter().find(|s| s.id == "running-00000000").unwrap();
+        assert_eq!((r.state, r.total, r.done), (JobState::Running, 4, 2));
+        assert_eq!(r.quarantined.len(), 1);
+        assert_eq!(r.workers, vec![WorkerLiveness { id: "w0".into(), live: true }]);
+        // With a zero lease every heartbeat is stale.
+        let all = status(&spool, 0).unwrap();
+        let r = all.iter().find(|s| s.id == "running-00000000").unwrap();
+        assert!(!r.workers[0].live);
+        // A DONE marker flips the state and drops the worker list.
+        std::fs::write(dir.join("DONE"), "{}").unwrap();
+        let all = status(&spool, 60_000).unwrap();
+        let r = all.iter().find(|s| s.id == "running-00000000").unwrap();
+        assert_eq!(r.state, JobState::Done);
+        assert!(r.workers.is_empty());
+        std::fs::remove_dir_all(&spool).ok();
+    }
+
+    #[test]
+    fn service_config_defaults_are_sane() {
+        let cfg = ServiceConfig::new(PathBuf::from("/tmp/spool"));
+        assert!(cfg.workers >= 1 && cfg.workers <= 4);
+        assert_eq!(cfg.lease_ms, 10_000);
+        assert_eq!(cfg.retries, 1);
+        assert_eq!(cfg.backoff, pool::Backoff::default());
+        assert!(!cfg.once);
+    }
+
+    #[test]
+    fn sanitized_ids_stay_filesystem_safe() {
+        assert_eq!(sanitize_id("fig5_quick"), "fig5_quick");
+        assert_eq!(sanitize_id("a b/c"), "a-b-c");
+        assert_eq!(sanitize_id(""), "job");
+    }
+}

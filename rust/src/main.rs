@@ -4,6 +4,9 @@
 //!
 //! * `validate`        — Tables 1/2 + Figure 4 (CELLIA ib_write vs paper)
 //! * `sweep`           — Figures 5–8 scale-out sweeps (32/128-node RLFT)
+//! * `serve`           — resilient sweep job service over a spool directory
+//! * `submit`          — queue a sweep spec for `serve`
+//! * `status`          — replay a spool's journals into per-job progress
 //! * `run`             — a single simulation from a JSON config
 //! * `topo`            — dump the RLFT wiring for a node count
 //! * `traffic-model`   — run the L2 LLM traffic artifact for a model config
@@ -57,6 +60,25 @@ COMMANDS
              FaultPlan to every point; --max-events / --max-wall-ms
              bound each point's event count and wall-clock time
              (0 = unlimited).
+  serve      [--spool DIR] [--workers N] [--lease-ms M] [--retries K]
+             [--backoff-ms B] [--poll-ms P] [--once]
+             Resilient sweep job service: supervises queued sweep specs
+             over worker processes with durable journals, heartbeat
+             leases and retry backoff. kill -9 of the supervisor or any
+             worker is recoverable — rerunning serve on the same spool
+             resumes exactly, and the final CSV is byte-identical to an
+             uninterrupted run. Points that exhaust their retries (or
+             trip the watchdog) are quarantined in the journal with
+             structured errors and declared as CSV holes instead of
+             blocking the grid. SIGINT/SIGTERM drains gracefully:
+             in-flight points finish, the job stays resumable, exit 0.
+             --once exits when the spool is drained (batch mode).
+  submit     <spec.json> [--spool DIR]
+             Validate a sweep spec (JSON SweepSpec: nodes, intra_gbs,
+             patterns, loads + optional overrides) and queue it.
+  status     [--spool DIR] [--lease-ms M]
+             Show every job in the spool with replayed progress,
+             quarantines and worker heartbeat liveness.
   run        <config.json> [--json] [--shards N]
              One simulation from a JSON config file. --shards overrides
              the config's event-shard count (run-phase; results are
@@ -348,9 +370,13 @@ fn main() -> anyhow::Result<()> {
                 Some(p) => p.clone(),
                 None => out.join(format!("sweep_{tag}.csv")),
             };
+            // The CSV is stamped with the spec fingerprint; --resume
+            // verifies it so a partial file from a *different* sweep
+            // can never be silently extended with this spec's rows.
+            let fp = spec.fingerprint();
             let (stream, start) = match &resume {
                 Some(p) => {
-                    let (stream, done) = results::CsvStream::resume(p)?;
+                    let (stream, done) = results::CsvStream::resume_stamped(p, &fp)?;
                     eprintln!(
                         "resuming {}: {done} of {} points already on disk",
                         p.display(),
@@ -358,7 +384,7 @@ fn main() -> anyhow::Result<()> {
                     );
                     (stream, done)
                 }
-                None => (results::CsvStream::create(&csv_path)?, 0),
+                None => (results::CsvStream::create_stamped(&csv_path, &fp)?, 0),
             };
             let csv = Arc::new(std::sync::Mutex::new(stream));
             let csv_cb = csv.clone();
@@ -367,6 +393,7 @@ fn main() -> anyhow::Result<()> {
                 &spec,
                 provider,
                 1 + retries,
+                coordinator::pool::Backoff::default(),
                 start,
                 Some(Box::new(move |idx, done, total, r| {
                     eprintln!(
@@ -435,6 +462,66 @@ fn main() -> anyhow::Result<()> {
                 1 + retries
             );
             println!("results in {}", out.display());
+        }
+
+        "serve" => {
+            let mut svc = coordinator::service::ServiceConfig::new(PathBuf::from(
+                args.opt("spool").unwrap_or("spool"),
+            ));
+            svc.workers = args.get_or("workers", svc.workers)?;
+            anyhow::ensure!(svc.workers >= 1, "--workers must be >= 1");
+            svc.lease_ms = args.get_or("lease-ms", svc.lease_ms)?;
+            anyhow::ensure!(svc.lease_ms >= 100, "--lease-ms must be >= 100");
+            svc.retries = args.get_or("retries", svc.retries)?;
+            svc.poll_ms = args.get_or("poll-ms", svc.poll_ms)?;
+            svc.backoff.base_ms = args.get_or("backoff-ms", svc.backoff.base_ms)?;
+            svc.once = args.flag("once");
+            // Forward the backend selection to worker processes.
+            svc.native = args.flag("native");
+            svc.artifacts = args.opt("artifacts").map(String::from);
+            args.reject_unknown()?;
+            coordinator::service::serve(&svc)?;
+        }
+
+        "submit" => {
+            let spec = args.positional.first().cloned().ok_or_else(|| {
+                anyhow::anyhow!("usage: sauron submit <spec.json> [--spool DIR]")
+            })?;
+            let spool = PathBuf::from(args.opt("spool").unwrap_or("spool"));
+            args.reject_unknown()?;
+            let id = coordinator::service::submit(&spool, std::path::Path::new(&spec))?;
+            println!("queued {id} in {}", spool.display());
+        }
+
+        "status" => {
+            let spool = PathBuf::from(args.opt("spool").unwrap_or("spool"));
+            let lease = args.get_or("lease-ms", 10_000u64)?;
+            args.reject_unknown()?;
+            let jobs = coordinator::service::status(&spool, lease)?;
+            if jobs.is_empty() {
+                println!("spool {} is empty", spool.display());
+            }
+            for j in jobs {
+                println!("{j}");
+            }
+        }
+
+        // Internal: worker-process entry point, spawned by `serve`.
+        // Deliberately absent from HELP.
+        "work" => {
+            let spool = PathBuf::from(
+                args.opt("spool").ok_or_else(|| anyhow::anyhow!("work: --spool required"))?,
+            );
+            let job = args
+                .opt("job")
+                .ok_or_else(|| anyhow::anyhow!("work: --job required"))?
+                .to_string();
+            let worker = args
+                .opt("worker")
+                .ok_or_else(|| anyhow::anyhow!("work: --worker required"))?
+                .to_string();
+            args.reject_unknown()?;
+            coordinator::service::work_main(&spool, &job, &worker, be.provider())?;
         }
 
         "run" => {

@@ -1,0 +1,578 @@
+//! Append-only job journals for the sweep job service.
+//!
+//! Every state transition of a running sweep job — a point claimed by a
+//! worker, a point completed (with its CSV row), a failed attempt, a
+//! quarantine, a requeue, a drain — is one single-line JSON [`Record`]
+//! appended and fsync'd before the transition takes effect anywhere
+//! else. The journal is therefore the job's source of truth: after a
+//! `kill -9` of the supervisor or any worker, replaying every journal
+//! shard ([`JobProgress::replay`]) reconstructs exactly which points are
+//! done (and their rows), which are quarantined, and how many attempts
+//! each pending point has burned. A torn final line (the write the kill
+//! interrupted) is detected and discarded; the point it described simply
+//! re-runs, which is safe because rows are deterministic per point.
+//!
+//! The supervisor owns `journal.log`; each worker process owns its own
+//! `worker_<id>.log` shard so no two processes ever append to the same
+//! file. Replay merges all shards.
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use crate::serial::json::{FromJson, ToJson, Value};
+
+/// One journaled state transition (one line in a journal file).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Record {
+    /// Job header: first record of a supervisor journal. Binds the
+    /// journal to a spec fingerprint and point count so a restart on a
+    /// tampered spool fails loudly instead of misapplying offsets.
+    Job {
+        /// `SweepSpec::fingerprint()` of the job's spec.
+        spec_fp: String,
+        /// Total points in the sweep grid.
+        points: usize,
+    },
+    /// A worker is about to run a point. Written (and fsync'd) before
+    /// the run starts, so an attempt that dies mid-point is still
+    /// counted against the retry budget on replay.
+    Claim {
+        /// Absolute spec index of the point.
+        idx: usize,
+        /// Worker id (`w<N>`).
+        worker: String,
+        /// 1-based attempt number this claim represents.
+        attempt: usize,
+    },
+    /// A point completed; `row` is its rendered CSV row, recorded here
+    /// so a restart can stream it without re-running the point.
+    Done {
+        /// Absolute spec index of the point.
+        idx: usize,
+        /// The point's CSV row (`results::csv_row`).
+        row: String,
+    },
+    /// An attempt failed with a caught error (sim error, panic text,
+    /// watchdog trip). The point stays eligible for retry.
+    Fail {
+        /// Absolute spec index of the point.
+        idx: usize,
+        /// 1-based attempt number that failed.
+        attempt: usize,
+        /// Rendered error.
+        error: String,
+    },
+    /// The supervisor took a point back from a worker that died or
+    /// stopped heartbeating, for reassignment.
+    Requeue {
+        /// Absolute spec index of the point.
+        idx: usize,
+        /// Worker the point was reclaimed from.
+        worker: String,
+        /// Why it was reclaimed (`lease expired`, `worker exited`, ...).
+        reason: String,
+    },
+    /// Terminal failure: the point exhausted its retry budget and is
+    /// excluded from the grid as a declared CSV hole.
+    Quarantine {
+        /// Absolute spec index of the point.
+        idx: usize,
+        /// Attempts burned before giving up.
+        attempts: usize,
+        /// Total scheduled retry backoff in milliseconds.
+        backoff_ms: u64,
+        /// Final rendered error.
+        error: String,
+    },
+    /// The supervisor drained gracefully (SIGINT/SIGTERM): in-flight
+    /// points finished, nothing new assigned, job left resumable.
+    Drain {},
+}
+
+impl Record {
+    /// The spec index this record concerns, if any.
+    pub fn idx(&self) -> Option<usize> {
+        match self {
+            Record::Claim { idx, .. }
+            | Record::Done { idx, .. }
+            | Record::Fail { idx, .. }
+            | Record::Requeue { idx, .. }
+            | Record::Quarantine { idx, .. } => Some(*idx),
+            Record::Job { .. } | Record::Drain {} => None,
+        }
+    }
+}
+
+impl ToJson for Record {
+    fn to_json(&self) -> Value {
+        match self {
+            Record::Job { spec_fp, points } => Value::obj()
+                .with("ev", "job")
+                .with("spec_fp", spec_fp.as_str())
+                .with("points", *points),
+            Record::Claim { idx, worker, attempt } => Value::obj()
+                .with("ev", "claim")
+                .with("idx", *idx)
+                .with("worker", worker.as_str())
+                .with("attempt", *attempt),
+            Record::Done { idx, row } => {
+                Value::obj().with("ev", "done").with("idx", *idx).with("row", row.as_str())
+            }
+            Record::Fail { idx, attempt, error } => Value::obj()
+                .with("ev", "fail")
+                .with("idx", *idx)
+                .with("attempt", *attempt)
+                .with("error", error.as_str()),
+            Record::Requeue { idx, worker, reason } => Value::obj()
+                .with("ev", "requeue")
+                .with("idx", *idx)
+                .with("worker", worker.as_str())
+                .with("reason", reason.as_str()),
+            Record::Quarantine { idx, attempts, backoff_ms, error } => Value::obj()
+                .with("ev", "quarantine")
+                .with("idx", *idx)
+                .with("attempts", *attempts)
+                .with("backoff_ms", *backoff_ms)
+                .with("error", error.as_str()),
+            Record::Drain {} => Value::obj().with("ev", "drain"),
+        }
+    }
+}
+
+impl FromJson for Record {
+    fn from_json(v: &Value) -> anyhow::Result<Record> {
+        Ok(match v.str_of("ev")? {
+            "job" => Record::Job {
+                spec_fp: v.str_of("spec_fp")?.to_string(),
+                points: v.usize_of("points")?,
+            },
+            "claim" => Record::Claim {
+                idx: v.usize_of("idx")?,
+                worker: v.str_of("worker")?.to_string(),
+                attempt: v.usize_of("attempt")?,
+            },
+            "done" => {
+                Record::Done { idx: v.usize_of("idx")?, row: v.str_of("row")?.to_string() }
+            }
+            "fail" => Record::Fail {
+                idx: v.usize_of("idx")?,
+                attempt: v.usize_of("attempt")?,
+                error: v.str_of("error")?.to_string(),
+            },
+            "requeue" => Record::Requeue {
+                idx: v.usize_of("idx")?,
+                worker: v.str_of("worker")?.to_string(),
+                reason: v.str_of("reason")?.to_string(),
+            },
+            "quarantine" => Record::Quarantine {
+                idx: v.usize_of("idx")?,
+                attempts: v.usize_of("attempts")?,
+                backoff_ms: v.u64_of("backoff_ms")?,
+                error: v.str_of("error")?.to_string(),
+            },
+            "drain" => Record::Drain {},
+            other => anyhow::bail!("unknown journal record kind '{other}'"),
+        })
+    }
+}
+
+/// Append-only, fsync-per-record journal writer.
+///
+/// Each [`Journal::append`] writes one compact-JSON line and syncs file
+/// data before returning, so a record that `append` reported as written
+/// survives `kill -9` — at most the single in-flight record is lost,
+/// and only as a detectable torn tail.
+pub struct Journal {
+    file: std::fs::File,
+    path: PathBuf,
+}
+
+impl Journal {
+    /// Open (creating if missing) a journal shard for appending.
+    ///
+    /// Repairs a torn tail first: if a previous writer was killed
+    /// mid-append, the unterminated fragment is truncated away so this
+    /// writer's first record never merges into it (which would turn a
+    /// tolerated torn tail into mid-file corruption on the next replay).
+    pub fn open_append(path: &Path) -> anyhow::Result<Journal> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        if let Ok(bytes) = std::fs::read(path) {
+            let keep = bytes.iter().rposition(|&b| b == b'\n').map(|i| i + 1).unwrap_or(0);
+            if keep < bytes.len() {
+                let f = std::fs::OpenOptions::new().write(true).open(path)?;
+                f.set_len(keep as u64)?;
+                f.sync_data()?;
+            }
+        }
+        let file = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+        Ok(Journal { file, path: path.to_path_buf() })
+    }
+
+    /// Append one record durably (write + `sync_data`).
+    pub fn append(&mut self, rec: &Record) -> anyhow::Result<()> {
+        let mut line = rec.to_json().compact();
+        line.push('\n');
+        self.file.write_all(line.as_bytes())?;
+        self.file.sync_data()?;
+        Ok(())
+    }
+
+    /// Path of this shard (for error messages and status output).
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Read every complete record in a journal shard. A missing file is
+    /// an empty journal; a torn final line (no trailing newline, or a
+    /// trailing line that does not parse) is discarded — it is the
+    /// record a kill interrupted. A malformed line *before* the tail is
+    /// real corruption and fails loudly.
+    pub fn read_records(path: &Path) -> anyhow::Result<Vec<Record>> {
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(Vec::new()),
+            Err(e) => {
+                return Err(anyhow::anyhow!("cannot read journal {}: {e}", path.display()))
+            }
+        };
+        let complete_len = text.rfind('\n').map(|i| i + 1).unwrap_or(0);
+        let lines: Vec<&str> = text[..complete_len].lines().collect();
+        let mut out = Vec::with_capacity(lines.len());
+        for (i, line) in lines.iter().enumerate() {
+            let parsed = Value::parse(line).and_then(|v| Record::from_json(&v));
+            match parsed {
+                Ok(rec) => out.push(rec),
+                // The final newline-terminated line can still be torn if
+                // the kill landed between the payload write and the
+                // newline of the *previous* buffered write on some
+                // filesystems; tolerate a broken last line only.
+                Err(_) if i + 1 == lines.len() => break,
+                Err(e) => {
+                    return Err(e.context(format!(
+                        "corrupt journal {} at line {}",
+                        path.display(),
+                        i + 1
+                    )))
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// Per-point terminal failure details surfaced by status / replay.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QuarantineInfo {
+    /// Absolute spec index of the quarantined point.
+    pub idx: usize,
+    /// Attempts burned before giving up.
+    pub attempts: usize,
+    /// Final rendered error.
+    pub error: String,
+}
+
+/// Replayed state of one job, merged from every journal shard.
+#[derive(Clone, Debug)]
+pub struct JobProgress {
+    /// Spec fingerprint from the job header, if one was journaled.
+    pub spec_fp: Option<String>,
+    /// Total points, from the job header (0 if no header yet).
+    pub points: usize,
+    /// Attempts burned per point (claims observed, merged over shards).
+    pub attempts: Vec<usize>,
+    /// Completed rows per point (first `done` record wins; duplicates
+    /// from an orphaned worker finishing after a requeue are identical
+    /// by determinism and ignored).
+    pub rows: Vec<Option<String>>,
+    /// Quarantine info per point, `None` while the point is live.
+    pub quarantined: Vec<Option<QuarantineInfo>>,
+    /// Last failure text per point (for status and quarantine records).
+    pub last_error: Vec<Option<String>>,
+    /// Whether the last supervisor session ended in a graceful drain.
+    pub drained: bool,
+}
+
+impl JobProgress {
+    /// Replay journal records into per-point state. `points` must come
+    /// from the spec; the job-header record cross-checks it.
+    pub fn replay<'a>(
+        points: usize,
+        records: impl IntoIterator<Item = &'a Record>,
+    ) -> anyhow::Result<JobProgress> {
+        let mut p = JobProgress {
+            spec_fp: None,
+            points,
+            attempts: vec![0; points],
+            rows: vec![None; points],
+            quarantined: vec![None; points],
+            last_error: vec![None; points],
+            drained: false,
+        };
+        for rec in records {
+            if let Some(idx) = rec.idx() {
+                anyhow::ensure!(
+                    idx < points,
+                    "journal names point {idx} but the spec has {points} points — \
+                     journal belongs to a different spec?"
+                );
+            }
+            match rec {
+                Record::Job { spec_fp, points: n } => {
+                    anyhow::ensure!(
+                        *n == points,
+                        "journal header says {n} points, spec says {points}"
+                    );
+                    p.spec_fp = Some(spec_fp.clone());
+                }
+                Record::Claim { idx, .. } => p.attempts[*idx] += 1,
+                Record::Done { idx, row } => {
+                    if p.rows[*idx].is_none() {
+                        p.rows[*idx] = Some(row.clone());
+                    }
+                }
+                Record::Fail { idx, error, .. } => {
+                    p.last_error[*idx] = Some(error.clone());
+                }
+                Record::Requeue { idx, reason, .. } => {
+                    p.last_error[*idx] = Some(reason.clone());
+                }
+                Record::Quarantine { idx, attempts, error, .. } => {
+                    p.quarantined[*idx] = Some(QuarantineInfo {
+                        idx: *idx,
+                        attempts: *attempts,
+                        error: error.clone(),
+                    });
+                }
+                Record::Drain {} => p.drained = true,
+            }
+        }
+        Ok(p)
+    }
+
+    /// Points with a completed row.
+    pub fn done_count(&self) -> usize {
+        self.rows.iter().filter(|r| r.is_some()).count()
+    }
+
+    /// Points terminally quarantined.
+    pub fn quarantined_count(&self) -> usize {
+        self.quarantined.iter().filter(|q| q.is_some()).count()
+    }
+
+    /// Points still owed a row or a quarantine decision.
+    pub fn pending(&self) -> Vec<usize> {
+        (0..self.points)
+            .filter(|&i| self.rows[i].is_none() && self.quarantined[i].is_none())
+            .collect()
+    }
+
+    /// Whether every point reached a terminal state.
+    pub fn is_complete(&self) -> bool {
+        self.pending().is_empty()
+    }
+}
+
+/// Liveness of one worker process, as visible from heartbeat files.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WorkerLiveness {
+    /// Worker id (`w<N>`).
+    pub id: String,
+    /// Whether the heartbeat file was touched within the lease window.
+    pub live: bool,
+}
+
+/// Coarse lifecycle state of a spooled job.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobState {
+    /// Spec still in the queue directory, not yet claimed.
+    Queued,
+    /// Claimed; journals exist but not every point is terminal.
+    Running,
+    /// Every point done or quarantined; completion marker written.
+    Done,
+}
+
+impl JobState {
+    /// Short lowercase name for status output.
+    pub fn name(&self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Done => "done",
+        }
+    }
+}
+
+/// One `sauron status` line: a job plus its replayed progress.
+#[derive(Clone, Debug)]
+pub struct JobStatus {
+    /// Job id (spool directory / queue file stem).
+    pub id: String,
+    /// Lifecycle state.
+    pub state: JobState,
+    /// Total points in the grid.
+    pub total: usize,
+    /// Points with a row.
+    pub done: usize,
+    /// Terminally failed points with their errors.
+    pub quarantined: Vec<QuarantineInfo>,
+    /// Per-worker heartbeat liveness (empty for queued jobs).
+    pub workers: Vec<WorkerLiveness>,
+}
+
+impl std::fmt::Display for JobStatus {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{:8} {}  {}/{} done", self.state.name(), self.id, self.done, self.total)?;
+        if !self.quarantined.is_empty() {
+            write!(f, ", {} quarantined", self.quarantined.len())?;
+        }
+        if !self.workers.is_empty() {
+            let names: Vec<String> = self
+                .workers
+                .iter()
+                .map(|w| format!("{}({})", w.id, if w.live { "live" } else { "stale" }))
+                .collect();
+            write!(f, ", workers: {}", names.join(" "))?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_records() -> Vec<Record> {
+        vec![
+            Record::Job { spec_fp: "aabbccdd00112233".into(), points: 4 },
+            Record::Claim { idx: 0, worker: "w0".into(), attempt: 1 },
+            Record::Claim { idx: 1, worker: "w1".into(), attempt: 1 },
+            Record::Done { idx: 0, row: "C3,0.1000,32,256".into() },
+            Record::Fail { idx: 1, attempt: 1, error: "watchdog: event limit".into() },
+            Record::Requeue { idx: 1, worker: "w1".into(), reason: "lease expired".into() },
+            Record::Claim { idx: 1, worker: "w2".into(), attempt: 2 },
+            Record::Quarantine {
+                idx: 1,
+                attempts: 2,
+                backoff_ms: 25,
+                error: "watchdog: event limit".into(),
+            },
+            Record::Drain {},
+        ]
+    }
+
+    #[test]
+    fn records_round_trip_as_single_line_json() {
+        for rec in sample_records() {
+            let line = rec.to_json().compact();
+            assert!(!line.contains('\n'), "one record must be one line: {line}");
+            let back = Record::from_json(&Value::parse(&line).unwrap()).unwrap();
+            assert_eq!(back, rec, "{line}");
+        }
+        let bad = Value::parse(r#"{"ev": "warp"}"#).unwrap();
+        assert!(Record::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn journal_appends_and_reads_back_with_torn_tail_discarded() {
+        let dir = std::env::temp_dir().join("sauron_journal_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("j.log");
+        std::fs::remove_file(&path).ok();
+        let recs = sample_records();
+        let mut j = Journal::open_append(&path).unwrap();
+        for r in &recs {
+            j.append(r).unwrap();
+        }
+        drop(j);
+        assert_eq!(Journal::read_records(&path).unwrap(), recs);
+        // Simulate a kill mid-append: a torn, newline-less tail.
+        use std::io::Write as _;
+        let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+        write!(f, "{{\"ev\": \"done\", \"idx\": 2, \"ro").unwrap();
+        drop(f);
+        assert_eq!(Journal::read_records(&path).unwrap(), recs, "torn tail is discarded");
+        // Reopening for append repairs (truncates) the torn fragment,
+        // so the restarted writer's records parse cleanly after it.
+        let mut j = Journal::open_append(&path).unwrap();
+        j.append(&Record::Drain {}).unwrap();
+        let mut expect = recs.clone();
+        expect.push(Record::Drain {});
+        assert_eq!(Journal::read_records(&path).unwrap(), expect, "torn tail repaired on open");
+        // Missing file reads as empty.
+        assert!(Journal::read_records(&dir.join("absent.log")).unwrap().is_empty());
+        // Mid-file corruption is loud.
+        let bad = dir.join("corrupt.log");
+        std::fs::write(&bad, "not json\n{\"ev\": \"drain\"}\n").unwrap();
+        let err = Journal::read_records(&bad).unwrap_err();
+        assert!(format!("{err:#}").contains("corrupt journal"), "{err:#}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn replay_reconstructs_per_point_state() {
+        let recs = sample_records();
+        let p = JobProgress::replay(4, &recs).unwrap();
+        assert_eq!(p.spec_fp.as_deref(), Some("aabbccdd00112233"));
+        assert_eq!(p.attempts, vec![1, 2, 0, 0]);
+        assert_eq!(p.rows[0].as_deref(), Some("C3,0.1000,32,256"));
+        assert_eq!(p.done_count(), 1);
+        assert_eq!(p.quarantined_count(), 1);
+        let q = p.quarantined[1].as_ref().unwrap();
+        assert_eq!((q.idx, q.attempts), (1, 2));
+        assert!(q.error.contains("watchdog"));
+        assert_eq!(p.pending(), vec![2, 3], "points 2 and 3 still owed");
+        assert!(!p.is_complete());
+        assert!(p.drained);
+        // A journal for a different grid size fails loudly — at the
+        // header when one exists, at the first out-of-range index
+        // otherwise.
+        let err = JobProgress::replay(2, &recs).unwrap_err();
+        assert!(format!("{err:#}").contains("journal header says 4 points"), "{err:#}");
+        let hdr = [Record::Job { spec_fp: "x".into(), points: 9 }];
+        let err = JobProgress::replay(4, &hdr).unwrap_err();
+        assert!(format!("{err:#}").contains("9 points"), "{err:#}");
+        let stray = [Record::Done { idx: 7, row: "r".into() }];
+        let err = JobProgress::replay(4, &stray).unwrap_err();
+        assert!(format!("{err:#}").contains("different spec"), "{err:#}");
+    }
+
+    #[test]
+    fn duplicate_done_records_keep_first_row() {
+        // An orphaned worker finishing a requeued point writes a second
+        // done record; determinism makes the rows identical, and replay
+        // must not double-count.
+        let recs = vec![
+            Record::Done { idx: 0, row: "row-a".into() },
+            Record::Done { idx: 0, row: "row-a".into() },
+        ];
+        let p = JobProgress::replay(1, &recs).unwrap();
+        assert_eq!(p.done_count(), 1);
+        assert_eq!(p.rows[0].as_deref(), Some("row-a"));
+        assert!(p.is_complete());
+    }
+
+    #[test]
+    fn status_line_renders_compactly() {
+        let s = JobStatus {
+            id: "quick-00aa".into(),
+            state: JobState::Running,
+            total: 8,
+            done: 5,
+            quarantined: vec![QuarantineInfo { idx: 3, attempts: 2, error: "boom".into() }],
+            workers: vec![
+                WorkerLiveness { id: "w0".into(), live: true },
+                WorkerLiveness { id: "w1".into(), live: false },
+            ],
+        };
+        let line = format!("{s}");
+        assert!(line.contains("running"), "{line}");
+        assert!(line.contains("5/8 done"), "{line}");
+        assert!(line.contains("1 quarantined"), "{line}");
+        assert!(line.contains("w0(live)") && line.contains("w1(stale)"), "{line}");
+    }
+}

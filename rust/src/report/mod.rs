@@ -3,7 +3,9 @@
 //! and CSV export.
 
 pub mod figures;
+pub mod journal;
 pub mod tables;
 
 pub use figures::{figure_series, FigureKind};
+pub use journal::{JobProgress, Journal, Record};
 pub use tables::{render_table1, render_table2};

@@ -1,0 +1,257 @@
+//! Process-level crash tests for the sweep job service: the supervisor
+//! is SIGKILLed mid-grid and restarted on the same spool, a hung worker
+//! loses its lease, a SIGTERM drains gracefully, and points that
+//! exhaust the retry budget are quarantined as declared CSV holes. In
+//! every case the surviving CSV must be byte-identical to (or a
+//! declared-hole subset of) an uninterrupted run's — the acceptance
+//! bar of the service's journal-replay design.
+//!
+//! These tests spawn the real `sauron` binary (supervisor and worker
+//! processes alike), so they exercise the spool, the journals, the
+//! heartbeat files and the signal handling exactly as an operator
+//! would hit them.
+
+use std::path::{Path, PathBuf};
+use std::process::{Command, Stdio};
+use std::time::{Duration, Instant};
+
+fn bin() -> &'static str {
+    env!("CARGO_BIN_EXE_sauron")
+}
+
+fn fresh_spool(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("sauron_service_it_{tag}"));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// A 12-point grid (2 intra bandwidths x 6 loads) heavy enough that the
+/// supervisor can realistically be killed mid-grid.
+fn grid_spec() -> &'static str {
+    r#"{"nodes": 32, "intra_gbs": [128, 512], "patterns": ["C3"],
+        "loads": [0.1, 0.2, 0.3, 0.4, 0.5, 0.6], "workers": 2, "seed": 7}"#
+}
+
+/// Submit `spec` (written to `<spool>/<name>.json`) and return the job id.
+fn submit(spool: &Path, name: &str, spec: &str) -> String {
+    let spec_path = spool.join(format!("{name}.json"));
+    std::fs::write(&spec_path, spec).unwrap();
+    let out = Command::new(bin())
+        .arg("submit")
+        .arg(&spec_path)
+        .arg("--spool")
+        .arg(spool)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "submit failed: {}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8(out.stdout).unwrap();
+    stdout
+        .lines()
+        .find_map(|l| l.strip_prefix("queued "))
+        .and_then(|r| r.split_whitespace().next())
+        .unwrap_or_else(|| panic!("no job id in submit output: {stdout}"))
+        .to_string()
+}
+
+fn serve_cmd(spool: &Path, extra: &[&str]) -> Command {
+    let mut cmd = Command::new(bin());
+    cmd.arg("serve").arg("--spool").arg(spool).arg("--native").arg("--poll-ms").arg("10");
+    for a in extra {
+        cmd.arg(a);
+    }
+    cmd.stdin(Stdio::null()).stdout(Stdio::null()).stderr(Stdio::null());
+    cmd
+}
+
+/// Run `sauron serve --once` to completion and assert it exits 0.
+fn serve_once(spool: &Path, extra: &[&str]) {
+    let status = serve_cmd(spool, extra).arg("--once").status().unwrap();
+    assert!(status.success(), "serve --once exited with {status}");
+}
+
+fn csv_path(spool: &Path, id: &str) -> PathBuf {
+    spool.join("jobs").join(id).join("sweep.csv")
+}
+
+fn data_rows(csv: &str) -> usize {
+    // Everything but the stamp/hole comment lines and the header.
+    csv.lines().filter(|l| !l.starts_with('#')).count().saturating_sub(1)
+}
+
+/// A spawned serve process that is SIGKILLed if the test panics —
+/// `serve` without `--once` waits for work forever, and a failed
+/// assertion must not leak a daemon.
+struct Serve(std::process::Child);
+
+impl Drop for Serve {
+    fn drop(&mut self) {
+        let _ = self.0.kill();
+        let _ = self.0.wait();
+    }
+}
+
+fn wait_until(what: &str, timeout: Duration, mut cond: impl FnMut() -> bool) {
+    let t0 = Instant::now();
+    while !cond() {
+        assert!(t0.elapsed() < timeout, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+/// Reference run on its own spool: the uninterrupted CSV every crash
+/// variant must reproduce byte for byte.
+fn reference_csv(tag: &str, spec: &str) -> String {
+    let spool = fresh_spool(&format!("{tag}_ref"));
+    let id = submit(&spool, "grid", spec);
+    serve_once(&spool, &["--workers", "2"]);
+    let text = std::fs::read_to_string(csv_path(&spool, &id)).unwrap();
+    std::fs::remove_dir_all(&spool).ok();
+    text
+}
+
+#[test]
+fn sigkilled_supervisor_restarts_to_byte_identical_csv() {
+    let reference = reference_csv("kill", grid_spec());
+    let spool = fresh_spool("kill");
+    let id = submit(&spool, "grid", grid_spec());
+
+    // Start the service, let it land at least one row, then `kill -9`
+    // the supervisor (Child::kill is SIGKILL on unix) — workers are
+    // orphaned mid-point and self-terminate on the next epoch bump.
+    let mut serve = Serve(serve_cmd(&spool, &["--workers", "2"]).spawn().unwrap());
+    let victim = csv_path(&spool, &id);
+    wait_until("first streamed row", Duration::from_secs(60), || {
+        serve.0.try_wait().unwrap().is_none() // supervisor must still be up
+            && std::fs::read_to_string(&victim).map(|t| data_rows(&t) >= 1).unwrap_or(false)
+    });
+    serve.0.kill().unwrap();
+    serve.0.wait().unwrap();
+
+    // Restart on the same spool: replay must finish the job, and the
+    // final CSV must be byte-identical to the uninterrupted run's.
+    serve_once(&spool, &["--workers", "2"]);
+    assert!(spool.join("jobs").join(&id).join("DONE").exists(), "restart completes the job");
+    let resumed = std::fs::read_to_string(&victim).unwrap();
+    assert_eq!(
+        resumed, reference,
+        "killed-and-restarted job CSV must be byte-identical to an uninterrupted run's"
+    );
+    std::fs::remove_dir_all(&spool).ok();
+}
+
+#[test]
+fn hung_worker_loses_lease_points_requeue_and_job_completes() {
+    let spec = r#"{"nodes": 32, "intra_gbs": [128, 512], "patterns": ["C3"],
+                   "loads": [0.1, 0.2], "workers": 1, "seed": 7}"#;
+    let reference = reference_csv("lease", spec);
+    let spool = fresh_spool("lease");
+    let id = submit(&spool, "grid", spec);
+
+    // One worker slot, and the first worker (w0) hangs before claiming
+    // or heartbeating: the job can only finish if the supervisor expires
+    // w0's lease, requeues its points, and spawns a replacement.
+    let status = serve_cmd(&spool, &["--workers", "1", "--lease-ms", "500", "--once"])
+        .env("SAURON_WORK_TEST_HANG", "w0")
+        .status()
+        .unwrap();
+    assert!(status.success(), "serve exited with {status}");
+
+    let dir = spool.join("jobs").join(&id);
+    assert!(dir.join("DONE").exists(), "job completes despite the hung worker");
+    let journal = std::fs::read_to_string(dir.join("journal.log")).unwrap();
+    let requeues: Vec<&str> =
+        journal.lines().filter(|l| l.contains("\"ev\": \"requeue\"")).collect();
+    assert!(
+        !requeues.is_empty() && requeues.iter().all(|l| l.contains("w0")),
+        "w0's points are requeued by the lease: {journal}"
+    );
+    assert!(requeues.iter().all(|l| l.contains("lease expired")), "{journal}");
+    let text = std::fs::read_to_string(csv_path(&spool, &id)).unwrap();
+    assert_eq!(text, reference, "the replacement worker reproduces the reference CSV");
+    std::fs::remove_dir_all(&spool).ok();
+}
+
+#[test]
+fn sigterm_drains_gracefully_and_resume_completes() {
+    let reference = reference_csv("drain", grid_spec());
+    let spool = fresh_spool("drain");
+    let id = submit(&spool, "grid", grid_spec());
+
+    let mut serve = Serve(serve_cmd(&spool, &["--workers", "2"]).spawn().unwrap());
+    let victim = csv_path(&spool, &id);
+    wait_until("first streamed row", Duration::from_secs(60), || {
+        serve.0.try_wait().unwrap().is_none()
+            && std::fs::read_to_string(&victim).map(|t| data_rows(&t) >= 1).unwrap_or(false)
+    });
+    // Graceful shutdown: SIGTERM via /bin/kill (std exposes only SIGKILL).
+    let term = Command::new("kill").arg("-TERM").arg(serve.0.id().to_string()).status().unwrap();
+    assert!(term.success(), "kill -TERM failed");
+    let status = serve.0.wait().unwrap();
+    assert!(status.success(), "drain must exit 0, got {status}");
+
+    // Unless the job squeaked through before the signal landed, the
+    // drain is journaled and the job is left resumable.
+    let dir = spool.join("jobs").join(&id);
+    if !dir.join("DONE").exists() {
+        let journal = std::fs::read_to_string(dir.join("journal.log")).unwrap();
+        assert!(journal.contains("\"ev\": \"drain\""), "drain journaled: {journal}");
+    }
+    serve_once(&spool, &["--workers", "2"]);
+    assert!(dir.join("DONE").exists());
+    let resumed = std::fs::read_to_string(&victim).unwrap();
+    assert_eq!(resumed, reference, "drained-and-resumed CSV matches the uninterrupted run");
+    std::fs::remove_dir_all(&spool).ok();
+}
+
+#[test]
+fn exhausted_points_quarantine_as_declared_holes_while_rest_complete() {
+    // Phase 1: a healthy two-load run, to read the per-point event
+    // counts from the CSV's `events` column.
+    let healthy_spec = r#"{"nodes": 32, "intra_gbs": [128], "patterns": ["C3"],
+                           "loads": [0.05, 0.45], "workers": 1, "seed": 7}"#;
+    let spool = fresh_spool("quarantine_probe");
+    let id = submit(&spool, "probe", healthy_spec);
+    serve_once(&spool, &["--workers", "1"]);
+    let text = std::fs::read_to_string(csv_path(&spool, &id)).unwrap();
+    let mut lines = text.lines().filter(|l| !l.starts_with('#'));
+    let header = lines.next().unwrap();
+    let events_col = header.split(',').position(|c| c == "events").unwrap();
+    let events: Vec<u64> = lines
+        .map(|l| l.split(',').nth(events_col).unwrap().parse().unwrap())
+        .collect();
+    assert_eq!(events.len(), 2);
+    assert!(events[0] < events[1], "loads must separate event counts: {events:?}");
+    std::fs::remove_dir_all(&spool).ok();
+
+    // Phase 2: same grid with an event watchdog between the two counts —
+    // the heavy point trips it on every attempt, exhausts the budget,
+    // and must be quarantined while the light point completes normally.
+    let cap = (events[0] + events[1]) / 2;
+    let spec = format!(
+        r#"{{"nodes": 32, "intra_gbs": [128], "patterns": ["C3"],
+            "loads": [0.05, 0.45], "workers": 1, "seed": 7,
+            "limits": {{"max_events": {cap}}}}}"#
+    );
+    let spool = fresh_spool("quarantine");
+    let id = submit(&spool, "capped", &spec);
+    serve_once(&spool, &["--workers", "1", "--retries", "1", "--backoff-ms", "1"]);
+
+    let dir = spool.join("jobs").join(&id);
+    assert!(dir.join("DONE").exists(), "quarantine must not block job completion");
+    let done = std::fs::read_to_string(dir.join("DONE")).unwrap();
+    assert!(done.contains("\"quarantined\""), "{done}");
+    let text = std::fs::read_to_string(csv_path(&spool, &id)).unwrap();
+    assert_eq!(data_rows(&text), 1, "the light point lands:\n{text}");
+    assert!(text.contains("# hole 1"), "the heavy point is a declared hole:\n{text}");
+    let journal = std::fs::read_to_string(dir.join("journal.log")).unwrap();
+    let quarantine: Vec<&str> =
+        journal.lines().filter(|l| l.contains("\"ev\": \"quarantine\"")).collect();
+    assert_eq!(quarantine.len(), 1, "{journal}");
+    assert!(
+        quarantine[0].contains("\"idx\": 1") && quarantine[0].contains("\"attempts\": 2"),
+        "budget = retries + 1 attempts before quarantine: {}",
+        quarantine[0]
+    );
+    std::fs::remove_dir_all(&spool).ok();
+}

@@ -4,12 +4,17 @@
 //! because every CSV column is a deterministic function of the config
 //! (`wall_ms` is deliberately kept out of the CSV schema) and because
 //! `CsvStream::resume` truncates the torn tail a kill can leave behind.
+//!
+//! Resume is also spec-checked: streamed CSVs carry the producing
+//! spec's fingerprint as a stamp line, and resuming with a different
+//! spec must fail loudly instead of silently interleaving two sweeps'
+//! rows into one file.
 
 use std::io::Write as _;
 use std::sync::{Arc, Mutex};
 
 use sauron::config::{FabricConfig, FaultPlan, InterKind, LimitsConfig, Pattern};
-use sauron::coordinator::{self, results::CsvStream, SweepSpec};
+use sauron::coordinator::{self, pool::Backoff, results::CsvStream, SweepSpec};
 use sauron::net::world::NativeProvider;
 
 fn four_point_spec() -> SweepSpec {
@@ -33,6 +38,7 @@ fn four_point_spec() -> SweepSpec {
 #[test]
 fn killed_sweep_resumes_to_byte_identical_csv() {
     let spec = four_point_spec();
+    let fp = spec.fingerprint();
     let dir = std::env::temp_dir().join("sauron_sweep_resume_it");
     std::fs::create_dir_all(&dir).unwrap();
     let reference = dir.join("reference.csv");
@@ -40,12 +46,13 @@ fn killed_sweep_resumes_to_byte_identical_csv() {
     let provider = Arc::new(coordinator::snapshot_provider(&spec, &NativeProvider));
 
     // The reference: one uninterrupted streamed sweep.
-    let stream = Arc::new(Mutex::new(CsvStream::create(&reference).unwrap()));
+    let stream = Arc::new(Mutex::new(CsvStream::create_stamped(&reference, &fp).unwrap()));
     let cb = stream.clone();
     let outcome = coordinator::run_sweep_resilient(
         &spec,
         provider.clone(),
         1,
+        Backoff::NONE,
         0,
         Some(Box::new(move |idx, _, _, r| cb.lock().unwrap().push(idx, r))),
     )
@@ -56,12 +63,13 @@ fn killed_sweep_resumes_to_byte_identical_csv() {
     // The victim: "killed" after the first two points landed on disk —
     // the callback stops forwarding rows, finish() never runs, and the
     // kill tears the third row mid-write (no trailing newline).
-    let stream = Arc::new(Mutex::new(CsvStream::create(&victim).unwrap()));
+    let stream = Arc::new(Mutex::new(CsvStream::create_stamped(&victim, &fp).unwrap()));
     let cb = stream.clone();
     coordinator::run_sweep_resilient(
         &spec,
         provider.clone(),
         1,
+        Backoff::NONE,
         0,
         Some(Box::new(move |idx, _, _, r| {
             if idx < 2 {
@@ -75,9 +83,20 @@ fn killed_sweep_resumes_to_byte_identical_csv() {
     write!(f, "C3,0.3000,32,256,switch_star").unwrap(); // torn row
     drop(f);
 
-    // Resume: trust the complete prefix, cut the torn tail, re-run the
-    // rest of the sweep with absolute indices, and append.
-    let (stream, done) = CsvStream::resume(&victim).unwrap();
+    // Resuming with the wrong spec must be refused before any append:
+    // same grid shape, different seed — the rows would differ, and the
+    // pre-stamp resume happily accepted any file with a matching header.
+    let mut foreign = four_point_spec();
+    foreign.seed = 8;
+    assert_ne!(foreign.fingerprint(), fp);
+    let err = CsvStream::resume_stamped(&victim, &foreign.fingerprint()).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("fingerprint mismatch"), "{msg}");
+    assert!(msg.contains(&fp), "names the stamped fingerprint: {msg}");
+
+    // Resume with the right spec: trust the complete prefix, cut the
+    // torn tail, re-run the rest with absolute indices, and append.
+    let (stream, done) = CsvStream::resume_stamped(&victim, &fp).unwrap();
     assert_eq!(done, 2, "two complete rows survive the kill; the torn third does not");
     let stream = Arc::new(Mutex::new(stream));
     let cb = stream.clone();
@@ -85,6 +104,7 @@ fn killed_sweep_resumes_to_byte_identical_csv() {
         &spec,
         provider,
         1,
+        Backoff::NONE,
         done,
         Some(Box::new(move |idx, _, _, r| cb.lock().unwrap().push(idx, r))),
     )

@@ -72,6 +72,67 @@ guard 600 cargo test -q --lib fault watchdog panic resilient partition resume sk
 guard 600 cargo test -q --test props_shards
 guard 600 cargo test -q --lib shard
 
+# Sweep job service gate: the process-level crash suite (SIGKILL the
+# supervisor mid-grid, hung-worker lease expiry, SIGTERM drain,
+# quarantine), then the in-crate service + journal unit tests.
+guard 900 cargo test -q --test service_restart
+guard 600 cargo test -q --lib service journal
+
+# Service smoke, end to end through the real binary: submit a 12-point
+# grid, SIGTERM the server mid-run (clean drain must exit 0), resume
+# with --once, and require the complete stamped CSV with no holes. The
+# spool lives at a fixed path so CI can upload the journals on failure.
+spool="${TMPDIR:-/tmp}/sauron_tier1_spool"
+rm -rf "$spool"
+mkdir -p "$spool"
+serve_pid=""
+smoke_cleanup() {
+    if [ -n "$serve_pid" ]; then
+        kill "$serve_pid" 2>/dev/null || true
+    fi
+}
+trap smoke_cleanup EXIT
+bin=target/release/sauron
+cat > "$spool/grid.json" <<'EOF'
+{"nodes": 32, "intra_gbs": [128, 512], "patterns": ["C3"],
+ "loads": [0.1, 0.2, 0.3, 0.4, 0.5, 0.6], "seed": 7}
+EOF
+guard 60 "$bin" submit "$spool/grid.json" --spool "$spool"
+"$bin" serve --spool "$spool" --native --workers 2 --poll-ms 10 &
+serve_pid=$!
+i=0
+rows=0
+until [ "$rows" -gt 1 ]; do
+    i=$((i+1))
+    if [ "$i" -gt 1200 ]; then
+        echo "tier1: service smoke FAILED — no CSV rows streamed (see $spool)"
+        exit 1
+    fi
+    sleep 0.1
+    # The job directory only exists once the server claims the spec.
+    csv="$(echo "$spool"/jobs/grid-*/sweep.csv)"
+    rows=$(grep -cv '^#' "$csv" 2>/dev/null) || rows=0
+done
+kill -TERM "$serve_pid"
+if ! wait "$serve_pid"; then
+    echo "tier1: service smoke FAILED — SIGTERM drain did not exit 0 (see $spool)"
+    exit 1
+fi
+serve_pid=""
+guard 600 "$bin" serve --spool "$spool" --once --native --workers 2 --poll-ms 10
+guard 60 "$bin" status --spool "$spool"
+[ -f "$spool"/jobs/grid-*/DONE ] || {
+    echo "tier1: service smoke FAILED — no DONE marker (see $spool)"
+    exit 1
+}
+rows=$(grep -cv '^#' "$csv")
+if [ "$rows" -ne 13 ] || grep -q '^# hole' "$csv"; then
+    echo "tier1: service smoke FAILED — want header + 12 rows, no holes; see $csv"
+    exit 1
+fi
+echo "tier1: service smoke OK (drain + resume, 12/12 rows)"
+rm -rf "$spool"
+
 if [ "${1:-}" = "--bench" ]; then
     # Regenerates the committed baselines in place; SAURON_BENCH_MS can
     # shorten the per-benchmark budget (CI uses 400 ms).
