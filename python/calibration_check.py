@@ -1,0 +1,145 @@
+#!/usr/bin/env python3
+"""Validate a ``sauron calibrate`` report CSV.
+
+Recomputes every row's relative error and verdict from its own
+``expected`` / ``simulated`` / ``tolerance`` columns and cross-checks
+them against what the simulator emitted, so a bug in the Rust-side
+tolerance math (or a hand-edited report) cannot slip a failing point
+through CI. The gate (tolerance boundary inclusive, mirroring
+``calibration::within``):
+
+* ``rel_err = |simulated - expected| / expected``
+* ``PASS``        iff ``rel_err <= tolerance``
+* ``FAIL``        iff outside tolerance and not a known divergence
+* ``DIVERGENCE``  -> reported, not gated (``--strict`` gates it too)
+
+Exit status: 0 = every row consistent and no gating failure; 1 = a FAIL
+row, an emitted-vs-recomputed mismatch, or (with ``--strict``) a
+DIVERGENCE row; 2 = unreadable/malformed report.
+
+Usage: ``python3 python/calibration_check.py report.csv [--strict]``
+"""
+
+import csv
+import sys
+
+EXPECTED_HEADER = [
+    "system",
+    "path",
+    "preset",
+    "metric",
+    "size_b",
+    "expected",
+    "simulated",
+    "unit",
+    "tolerance",
+    "rel_err",
+    "status",
+    "note",
+]
+
+# The emitted rel_err column is rounded to 6 decimals; allow exactly
+# that much slack (plus float noise) when cross-checking.
+REL_ERR_QUANTUM = 5e-7 + 1e-12
+
+
+def recompute_status(expected, simulated, tolerance, known_divergence):
+    """Mirror of calibration::verdict (boundary inclusive)."""
+    rel = abs(simulated - expected) / expected
+    if known_divergence:
+        return rel, "DIVERGENCE"
+    return rel, ("PASS" if rel <= tolerance else "FAIL")
+
+
+def check_report(path, strict=False):
+    """Return (errors, counts) for one report file.
+
+    ``errors`` are gating problems (exit 1); malformed input raises
+    ValueError (exit 2). ``counts`` maps status -> row count.
+    """
+    with open(path, "r", encoding="utf-8", newline="") as f:
+        reader = csv.reader(f)
+        try:
+            header = next(reader)
+        except StopIteration:
+            raise ValueError(f"{path}: empty report")
+        if header != EXPECTED_HEADER:
+            raise ValueError(
+                f"{path}: unexpected header {header!r} (want {EXPECTED_HEADER!r})"
+            )
+        errors = []
+        counts = {"PASS": 0, "FAIL": 0, "DIVERGENCE": 0}
+        for i, row in enumerate(reader, 2):
+            if len(row) != len(EXPECTED_HEADER):
+                raise ValueError(f"{path}:{i}: {len(row)} columns, want {len(EXPECTED_HEADER)}")
+            rec = dict(zip(EXPECTED_HEADER, row))
+            where = f"{path}:{i} ({rec['system']}/{rec['path']} {rec['metric']} {rec['size_b']} B)"
+            try:
+                expected = float(rec["expected"])
+                simulated = float(rec["simulated"])
+                tolerance = float(rec["tolerance"])
+                emitted_rel = float(rec["rel_err"])
+            except ValueError:
+                raise ValueError(f"{where}: non-numeric field")
+            if expected <= 0 or tolerance <= 0 or tolerance > 1:
+                raise ValueError(f"{where}: expected/tolerance out of range")
+            status = rec["status"]
+            if status not in counts:
+                raise ValueError(f"{where}: unknown status '{status}'")
+            counts[status] += 1
+            rel, want = recompute_status(
+                expected, simulated, tolerance, status == "DIVERGENCE"
+            )
+            if abs(rel - emitted_rel) > REL_ERR_QUANTUM:
+                errors.append(
+                    f"{where}: emitted rel_err {emitted_rel} but recomputed {rel:.6f}"
+                )
+            if status != "DIVERGENCE" and status != want:
+                errors.append(
+                    f"{where}: emitted status {status} but recomputed {want} "
+                    f"(rel_err {rel:.4f} vs tolerance {tolerance})"
+                )
+            if status == "FAIL":
+                errors.append(
+                    f"{where}: calibration failure — sim {simulated} vs published "
+                    f"{expected} {rec['unit']} (rel_err {rel:.4f} > tol {tolerance})"
+                )
+            if strict and status == "DIVERGENCE":
+                errors.append(
+                    f"{where}: known divergence gated by --strict: {rec['note']}"
+                )
+        return errors, counts
+
+
+def main(argv):
+    strict = "--strict" in argv
+    paths = [a for a in argv if not a.startswith("--")]
+    if not paths:
+        print(__doc__, file=sys.stderr)
+        return 2
+    total = {"PASS": 0, "FAIL": 0, "DIVERGENCE": 0}
+    errors = []
+    for path in paths:
+        try:
+            errs, counts = check_report(path, strict=strict)
+        except (OSError, ValueError) as e:
+            print(f"calibration_check: {e}", file=sys.stderr)
+            return 2
+        errors.extend(errs)
+        for k, v in counts.items():
+            total[k] += v
+    for e in errors:
+        print(e, file=sys.stderr)
+    n = sum(total.values())
+    print(
+        f"calibration_check: {n} points ({total['PASS']} pass, {total['FAIL']} fail, "
+        f"{total['DIVERGENCE']} known-divergence){' [strict]' if strict else ''}"
+    )
+    if errors:
+        print(f"calibration_check: {len(errors)} gating error(s)", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -1,0 +1,96 @@
+#!/usr/bin/env python3
+"""Test-registration gate: every Rust target file must be declared.
+
+The crate sets ``autotests = false`` (and the equivalent for benches
+and examples), so Cargo only builds targets with an explicit
+``[[test]]`` / ``[[bench]]`` / ``[[example]]`` entry in Cargo.toml. A
+test file added without an entry silently never runs — the worst kind
+of green CI. This gate fails when:
+
+* a file in ``rust/tests/*.rs``, ``rust/benches/*.rs`` or
+  ``examples/*.rs`` has no matching ``path =`` entry (unregistered:
+  the target silently does not build or run);
+* an entry's ``path =`` points at a file that does not exist (stale:
+  the manifest rots and the next ``cargo`` invocation breaks).
+
+Stdlib only; no TOML parser needed — Cargo.toml target sections are
+line-oriented ``name = "..."`` / ``path = "..."`` pairs.
+
+Run from the repository root (CI and scripts/tier1.sh do):
+``python3 python/check_tests.py``. Exit 0 = consistent, 1 = drift.
+"""
+
+import glob
+import os
+import re
+import sys
+
+SECTION_RE = re.compile(r"^\[\[(test|bench|example)\]\]\s*$")
+ANY_SECTION_RE = re.compile(r"^\[")
+PATH_RE = re.compile(r'^path\s*=\s*"([^"]+)"\s*$')
+
+# Directories whose .rs files must be registered, per target kind.
+GLOBS = {
+    "test": "rust/tests/*.rs",
+    "bench": "rust/benches/*.rs",
+    "example": "examples/*.rs",
+}
+
+
+def registered_paths(manifest):
+    """Map target kind -> set of declared ``path`` values."""
+    declared = {kind: set() for kind in GLOBS}
+    kind = None
+    with open(manifest, "r", encoding="utf-8") as f:
+        for line in f:
+            line = line.strip()
+            m = SECTION_RE.match(line)
+            if m:
+                kind = m.group(1)
+                continue
+            if ANY_SECTION_RE.match(line):
+                kind = None  # left the [[test]]-style section
+                continue
+            if kind:
+                m = PATH_RE.match(line)
+                if m:
+                    declared[kind].add(os.path.normpath(m.group(1)))
+    return declared
+
+
+def main():
+    manifest = "Cargo.toml"
+    if not os.path.isfile(manifest):
+        print("check_tests: run from the repository root", file=sys.stderr)
+        return 1
+    declared = registered_paths(manifest)
+    errors = []
+    total = 0
+    for kind, pattern in GLOBS.items():
+        on_disk = {os.path.normpath(p) for p in glob.glob(pattern)}
+        total += len(on_disk)
+        for path in sorted(on_disk - declared[kind]):
+            errors.append(
+                f"{path}: not registered in Cargo.toml — add a [[{kind}]] entry "
+                f"(autotests/autobenches are off, so this target never builds)"
+            )
+        for path in sorted(declared[kind] - on_disk):
+            errors.append(
+                f"Cargo.toml: [[{kind}]] path '{path}' does not exist on disk "
+                f"(stale entry — remove it or restore the file)"
+            )
+    if errors:
+        for e in errors:
+            print(e, file=sys.stderr)
+        print(f"check_tests: {len(errors)} registration error(s)", file=sys.stderr)
+        return 1
+    n = {k: len(v) for k, v in declared.items()}
+    print(
+        f"check_tests: {total} target files all registered "
+        f"({n['test']} tests, {n['bench']} benches, {n['example']} examples)"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,136 @@
+"""Unit tests for python/bench_compare.py (regression-threshold edges,
+units drift, missing-arm handling, usage errors).
+
+Stdlib only, and runnable both ways:
+
+* ``python3 python/tests/test_bench_compare.py`` (plain-assert runner)
+* ``pytest python/tests/test_bench_compare.py``
+"""
+
+import importlib.util
+import json
+import os
+import sys
+import tempfile
+
+ROOT = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+spec = importlib.util.spec_from_file_location(
+    "bench_compare", os.path.join(ROOT, "python", "bench_compare.py")
+)
+bench_compare = importlib.util.module_from_spec(spec)
+spec.loader.exec_module(bench_compare)
+
+
+def write_doc(dirname, name, benches, schema="sauron-bench-v1"):
+    path = os.path.join(dirname, name)
+    with open(path, "w", encoding="utf-8") as f:
+        json.dump({"schema": schema, "benches": benches}, f)
+    return path
+
+
+def run_main(argv):
+    """Run bench_compare.main() with argv; return its exit code."""
+    old = sys.argv
+    sys.argv = ["bench_compare.py"] + argv
+    try:
+        return bench_compare.main()
+    finally:
+        sys.argv = old
+
+
+def bench(name, rate=None, mean_ns=None, units=None):
+    b = {"name": name}
+    if rate is not None:
+        b["rate_per_s"] = rate
+    if mean_ns is not None:
+        b["mean_ns"] = mean_ns
+    if units is not None:
+        b["units_per_iter"] = units
+    return b
+
+
+def test_rate_regression_boundary_is_inclusive():
+    # ratio * max_regression >= 1.0 is OK: fresh exactly 1/max of
+    # baseline sits ON the boundary and must pass; epsilon below fails.
+    with tempfile.TemporaryDirectory() as d:
+        base = write_doc(d, "base.json", [bench("world", rate=100.0)])
+        on_boundary = write_doc(d, "on.json", [bench("world", rate=50.0)])
+        below = write_doc(d, "below.json", [bench("world", rate=49.9)])
+        assert run_main([base, on_boundary, "--max-regression", "2.0"]) == 0
+        assert run_main([base, below, "--max-regression", "2.0"]) == 1
+
+
+def test_mean_ns_fallback_when_no_rate():
+    # Without rate_per_s the mean_ns ratio gates, inverted (bigger mean
+    # is worse): 100 -> 200 ns at 2.0x is the boundary, 201 ns regresses.
+    with tempfile.TemporaryDirectory() as d:
+        base = write_doc(d, "base.json", [bench("lat", mean_ns=100.0)])
+        on_boundary = write_doc(d, "on.json", [bench("lat", mean_ns=200.0)])
+        below = write_doc(d, "below.json", [bench("lat", mean_ns=201.0)])
+        assert run_main([base, on_boundary, "--max-regression", "2.0"]) == 0
+        assert run_main([base, below, "--max-regression", "2.0"]) == 1
+
+
+def test_new_and_removed_arms_never_fail():
+    # A fresh-only bench has no baseline yet (NEW); a baseline-only
+    # bench is machine-dependent or removed. Neither may gate, even at
+    # a strict threshold.
+    with tempfile.TemporaryDirectory() as d:
+        base = write_doc(d, "base.json", [bench("gone", rate=1e9)])
+        fresh = write_doc(d, "fresh.json", [bench("added", rate=1.0)])
+        assert run_main([base, fresh, "--max-regression", "1.01"]) == 0
+
+
+def test_units_drift_gates_only_with_flag():
+    # Same speed, different deterministic event count: a simulation
+    # behavior change. Reported always, fails only under
+    # --require-equal-units.
+    with tempfile.TemporaryDirectory() as d:
+        base = write_doc(d, "base.json", [bench("world", rate=100.0, units=5000.0)])
+        fresh = write_doc(d, "fresh.json", [bench("world", rate=100.0, units=5001.0)])
+        assert run_main([base, fresh]) == 0
+        assert run_main([base, fresh, "--require-equal-units"]) == 1
+        # Sub-integer jitter is not a drift (counts are ints in f64).
+        close = write_doc(d, "close.json", [bench("world", rate=100.0, units=5000.4)])
+        assert run_main([base, close, "--require-equal-units"]) == 0
+
+
+def test_units_drift_ignored_when_either_side_lacks_units():
+    with tempfile.TemporaryDirectory() as d:
+        base = write_doc(d, "base.json", [bench("world", rate=100.0, units=5000.0)])
+        fresh = write_doc(d, "fresh.json", [bench("world", rate=100.0)])
+        assert run_main([base, fresh, "--require-equal-units"]) == 0
+
+
+def test_odd_file_count_is_usage_error():
+    with tempfile.TemporaryDirectory() as d:
+        base = write_doc(d, "base.json", [bench("world", rate=100.0)])
+        assert run_main([base]) == 2
+
+
+def test_schema_mismatch_is_parse_error():
+    with tempfile.TemporaryDirectory() as d:
+        base = write_doc(d, "base.json", [bench("world", rate=100.0)])
+        bad = write_doc(d, "bad.json", [bench("world", rate=100.0)], schema="v0")
+        assert run_main([base, bad]) == 2
+
+
+def test_load_indexes_by_name():
+    with tempfile.TemporaryDirectory() as d:
+        path = write_doc(d, "b.json", [bench("a", rate=1.0), bench("b", mean_ns=2.0)])
+        doc = bench_compare.load(path)
+        assert set(doc) == {"a", "b"}
+        assert doc["a"]["rate_per_s"] == 1.0
+
+
+def main():
+    tests = [v for k, v in sorted(globals().items()) if k.startswith("test_")]
+    for t in tests:
+        t()
+        print(f"  {t.__name__} ok")
+    print(f"test_bench_compare: {len(tests)} tests passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,209 @@
+"""Unit tests for the calibration suite's Python side: the golden
+fixture set under fixtures/calibration/ (structure and coverage floor)
+and python/calibration_check.py (tolerance math, report cross-check).
+
+Stdlib only, and runnable both ways:
+
+* ``python3 python/tests/test_calibration.py`` (plain-assert runner)
+* ``pytest python/tests/test_calibration.py``
+"""
+
+import glob
+import importlib.util
+import json
+import os
+import tempfile
+
+ROOT = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+FIXTURE_DIR = os.path.join(ROOT, "fixtures", "calibration")
+
+spec = importlib.util.spec_from_file_location(
+    "calibration_check", os.path.join(ROOT, "python", "calibration_check.py")
+)
+calibration_check = importlib.util.module_from_spec(spec)
+spec.loader.exec_module(calibration_check)
+
+
+def load_fixtures():
+    paths = sorted(glob.glob(os.path.join(FIXTURE_DIR, "*.json")))
+    assert paths, f"no fixtures in {FIXTURE_DIR}"
+    out = []
+    for p in paths:
+        with open(p, "r", encoding="utf-8") as f:
+            out.append((os.path.basename(p), json.load(f)))
+    return out
+
+
+# ------------------------------------------------------- fixture set shape
+
+def test_fixture_coverage_floor():
+    # The acceptance floor: >= 3 measured systems, each covering >= 2
+    # distinct path types, every fixture carrying both curves.
+    by_system = {}
+    for name, fx in load_fixtures():
+        by_system.setdefault(fx["system"], set()).add(fx["path"])
+        assert fx["bandwidth"], f"{name}: no bandwidth curve"
+        assert fx["latency"], f"{name}: no latency curve"
+    assert len(by_system) >= 3, f"need >= 3 systems, have {sorted(by_system)}"
+    for system, paths in by_system.items():
+        assert len(paths) >= 2, f"{system}: needs >= 2 path types, has {sorted(paths)}"
+
+
+def test_fixture_structure():
+    valid_paths = {"intra_nvlink", "intra_pcie", "inter_nic"}
+    for name, fx in load_fixtures():
+        assert fx["schema"] == "sauron-calibration-v1", name
+        assert fx["path"] in valid_paths, f"{name}: path {fx['path']}"
+        assert 0 < fx["tolerance"] <= 1, f"{name}: tolerance {fx['tolerance']}"
+        assert fx["host_overhead_ns"] >= 0, name
+        assert "arXiv" in fx["source"], f"{name}: source must carry provenance"
+        for curve, value_key in (("bandwidth", "gbs"), ("latency", "us")):
+            sizes = [p["size_b"] for p in fx[curve]]
+            assert sizes == sorted(sizes) and len(set(sizes)) == len(sizes), (
+                f"{name}: {curve} sizes not strictly ascending: {sizes}"
+            )
+            for p in fx[curve]:
+                assert p["size_b"] > 0, name
+                assert p[value_key] > 0, f"{name}: {curve} @ {p['size_b']}"
+                tol = p.get("tolerance", fx["tolerance"])
+                assert 0 < tol <= 1, f"{name}: {curve} @ {p['size_b']} tol {tol}"
+                if p.get("known_divergence"):
+                    assert p.get("note"), (
+                        f"{name}: {curve} @ {p['size_b']}: known divergence needs a note"
+                    )
+
+
+def test_fixture_presets_are_calibrated_systems():
+    # Every preset named by a fixture must be one the Rust side
+    # declares in presets::CALIBRATED_SYSTEMS (cross-language pin).
+    presets_rs = open(
+        os.path.join(ROOT, "rust", "src", "config", "presets.rs"), encoding="utf-8"
+    ).read()
+    for name, fx in load_fixtures():
+        assert f'"{fx["preset"]}"' in presets_rs, (
+            f"{name}: preset '{fx['preset']}' not found in presets.rs"
+        )
+
+
+def test_csv_header_matches_rust():
+    # The checker's expected header must stay byte-identical to the
+    # CSV_HEADER the Rust reporter emits.
+    calibration_rs = open(
+        os.path.join(ROOT, "rust", "src", "calibration", "mod.rs"), encoding="utf-8"
+    ).read()
+    header = ",".join(calibration_check.EXPECTED_HEADER)
+    assert f'"{header}"' in calibration_rs, (
+        "python EXPECTED_HEADER drifted from rust CSV_HEADER"
+    )
+
+
+# -------------------------------------------------- tolerance math / checker
+
+def test_recompute_status_boundary_inclusive():
+    # rel_err == tolerance passes (mirror of calibration::within).
+    rel, status = calibration_check.recompute_status(100.0, 125.0, 0.25, False)
+    assert abs(rel - 0.25) < 1e-12 and status == "PASS"
+    rel, status = calibration_check.recompute_status(100.0, 125.1, 0.25, False)
+    assert status == "FAIL"
+    # Symmetric below the expectation.
+    _, status = calibration_check.recompute_status(100.0, 75.0, 0.25, False)
+    assert status == "PASS"
+    _, status = calibration_check.recompute_status(100.0, 74.9, 0.25, False)
+    assert status == "FAIL"
+    # Known divergence never maps to PASS/FAIL.
+    _, status = calibration_check.recompute_status(100.0, 100.0, 0.25, True)
+    assert status == "DIVERGENCE"
+
+
+def row(status, expected=10.0, simulated=10.5, tol=0.25, rel=None, note=""):
+    rel = abs(simulated - expected) / expected if rel is None else rel
+    return (
+        f"leonardo,inter_nic,leonardo,bandwidth,1048576,{expected:.6f},"
+        f"{simulated:.6f},GB/s,{tol:.4f},{rel:.6f},{status},{note}"
+    )
+
+
+def write_report(dirname, rows):
+    path = os.path.join(dirname, "calibration_report.csv")
+    with open(path, "w", encoding="utf-8") as f:
+        f.write(",".join(calibration_check.EXPECTED_HEADER) + "\n")
+        for r in rows:
+            f.write(r + "\n")
+    return path
+
+
+def test_check_report_consistent_pass():
+    with tempfile.TemporaryDirectory() as d:
+        path = write_report(d, [row("PASS")])
+        errors, counts = calibration_check.check_report(path)
+        assert errors == [] and counts["PASS"] == 1
+
+
+def test_check_report_flags_fail_rows():
+    with tempfile.TemporaryDirectory() as d:
+        path = write_report(d, [row("FAIL", simulated=20.0)])
+        errors, counts = calibration_check.check_report(path)
+        assert counts["FAIL"] == 1
+        assert any("calibration failure" in e for e in errors)
+
+
+def test_check_report_recomputes_verdicts():
+    # A row claiming PASS while its own numbers say FAIL is caught.
+    with tempfile.TemporaryDirectory() as d:
+        path = write_report(d, [row("PASS", simulated=20.0)])
+        errors, _ = calibration_check.check_report(path)
+        assert any("recomputed FAIL" in e for e in errors)
+    # So is a tampered rel_err column.
+    with tempfile.TemporaryDirectory() as d:
+        path = write_report(d, [row("PASS", rel=0.0001)])
+        errors, _ = calibration_check.check_report(path)
+        assert any("recomputed" in e for e in errors)
+
+
+def test_check_report_strict_gates_divergence():
+    with tempfile.TemporaryDirectory() as d:
+        path = write_report(
+            d, [row("DIVERGENCE", simulated=20.0, note="intra ramp gap")]
+        )
+        errors, counts = calibration_check.check_report(path)
+        assert errors == [] and counts["DIVERGENCE"] == 1
+        errors, _ = calibration_check.check_report(path, strict=True)
+        assert any("intra ramp gap" in e for e in errors)
+
+
+def test_check_report_rejects_malformed():
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "bad.csv")
+        with open(path, "w", encoding="utf-8") as f:
+            f.write("not,the,header\n")
+        try:
+            calibration_check.check_report(path)
+        except ValueError:
+            pass
+        else:
+            raise AssertionError("malformed header must raise")
+
+
+def test_main_exit_codes():
+    with tempfile.TemporaryDirectory() as d:
+        ok = write_report(d, [row("PASS")])
+        assert calibration_check.main([ok]) == 0
+        bad = write_report(d, [row("FAIL", simulated=20.0)])
+        assert calibration_check.main([bad]) == 1
+        div = write_report(d, [row("DIVERGENCE", simulated=20.0, note="gap")])
+        assert calibration_check.main([div]) == 0
+        assert calibration_check.main([div, "--strict"]) == 1
+        assert calibration_check.main([os.path.join(d, "missing.csv")]) == 2
+        assert calibration_check.main([]) == 2
+
+
+def main():
+    tests = [v for k, v in sorted(globals().items()) if k.startswith("test_")]
+    for t in tests:
+        t()
+        print(f"  {t.__name__} ok")
+    print(f"test_calibration: {len(tests)} tests passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,744 @@
+//! Calibration-against-hardware validation suite.
+//!
+//! De Sensi et al. (*Exploring GPU-to-GPU Communication: Insights into
+//! Supercomputer Interconnects*, arXiv:2408.14090) publish measured
+//! GPU-to-GPU bandwidth-vs-message-size and latency curves for several
+//! public supercomputers (Leonardo, LUMI, Alps). This module encodes
+//! those published curves as versioned golden **fixtures** (committed
+//! JSON under `fixtures/calibration/`, one file per system × path type)
+//! and provides the conformance harness that replays each fixture
+//! through the existing [`Workload::Window`] / [`Workload::PingPong`]
+//! benches on a [`presets::calibrated`] config, asserting the simulated
+//! numbers land within the fixture's stated tolerance.
+//!
+//! Three path types are distinguished, mirroring the paper's taxonomy:
+//!
+//! * `intra_nvlink` — the direct accelerator-to-accelerator lane
+//!   (NVLink / Infinity Fabric class; the Mesh fabric);
+//! * `intra_pcie`   — the staged host path through the root complex
+//!   (the HostTree fabric);
+//! * `inter_nic`    — one NIC boundary crossing (single-NIC,
+//!   single-pair; InfiniBand / Slingshot class).
+//!
+//! Every fixture point carries the published expectation, an optional
+//! per-point tolerance override, and a `known_divergence` flag: points
+//! where the packet model is *known* not to match the hardware (and why,
+//! in the point's `note`) are reported as `DIVERGENCE` and excluded from
+//! the gating pass/fail — they stay visible in the report CSV and are
+//! asserted by `#[ignore]`d strict tests plus an EXPERIMENTS.md entry,
+//! so a model fix that closes the gap is caught the day it lands.
+//!
+//! Entry points: [`Fixture::load_dir`] → [`run_fixture`] →
+//! [`render_csv`] / [`summarize`]; the `sauron calibrate` subcommand
+//! wires them to the CLI and `rust/tests/calibration.rs` to tier-1.
+
+use std::path::Path;
+
+use crate::config::{presets, SimConfig, Workload};
+use crate::net::world::{BenchMode, SerProvider, Sim};
+use crate::serial::json::{FromJson, ToJson, Value};
+
+/// Fixture schema tag (bump on incompatible layout changes).
+pub const SCHEMA: &str = "sauron-calibration-v1";
+
+/// Which measured path a fixture describes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PathKind {
+    /// Direct accelerator lane (NVLink / Infinity Fabric class).
+    IntraNvlink,
+    /// Staged host path through the root complex (PCIe class).
+    IntraPcie,
+    /// One NIC boundary crossing (InfiniBand / Slingshot class).
+    InterNic,
+}
+
+impl PathKind {
+    /// Stable fixture-file name of this path type.
+    pub fn name(&self) -> &'static str {
+        match self {
+            PathKind::IntraNvlink => "intra_nvlink",
+            PathKind::IntraPcie => "intra_pcie",
+            PathKind::InterNic => "inter_nic",
+        }
+    }
+
+    /// Parse a fixture `path` field.
+    pub fn parse(s: &str) -> anyhow::Result<PathKind> {
+        match s {
+            "intra_nvlink" => Ok(PathKind::IntraNvlink),
+            "intra_pcie" => Ok(PathKind::IntraPcie),
+            "inter_nic" => Ok(PathKind::InterNic),
+            other => anyhow::bail!(
+                "unknown calibration path '{other}' (expected intra_nvlink, intra_pcie \
+                 or inter_nic)"
+            ),
+        }
+    }
+
+    /// Does the measured path stay inside one node?
+    pub fn is_intra(&self) -> bool {
+        !matches!(self, PathKind::InterNic)
+    }
+}
+
+/// One published bandwidth point (GB/s, decimal — the same unit as
+/// `SimReport::{intra,inter}_drain_gbs`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct BwExpect {
+    /// Message size under test (bytes).
+    pub size_b: u64,
+    /// Published bandwidth (GB/s).
+    pub gbs: f64,
+    /// Per-point tolerance override (falls back to the fixture's).
+    pub tolerance: Option<f64>,
+    /// Known model divergence: reported, never gated.
+    pub known_divergence: bool,
+    /// Why the point diverges (empty when it does not).
+    pub note: String,
+}
+
+/// One published one-way latency point (µs, host software overhead
+/// included — the fixture's `host_overhead_ns` models that stack).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LatExpect {
+    /// Message size under test (bytes).
+    pub size_b: u64,
+    /// Published one-way latency (µs).
+    pub us: f64,
+    /// Per-point tolerance override (falls back to the fixture's).
+    pub tolerance: Option<f64>,
+    /// Known model divergence: reported, never gated.
+    pub known_divergence: bool,
+    /// Why the point diverges (empty when it does not).
+    pub note: String,
+}
+
+/// A golden calibration fixture: one system × path type with its
+/// published curve and tolerance.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Fixture {
+    /// Measured system (`leonardo`, `lumi`, `alps`, ...).
+    pub system: String,
+    /// Measured path type.
+    pub path: PathKind,
+    /// [`presets::calibrated`] preset name that must reproduce it.
+    pub preset: String,
+    /// Provenance: publication, figure, digitization caveats.
+    pub source: String,
+    /// Default relative tolerance for every point (0 < tol <= 1).
+    pub tolerance: f64,
+    /// Host software overhead (ns) added to simulated latency — the
+    /// driver/completion path the packet model does not carry,
+    /// calibrated once per fixture against its smallest-message row
+    /// (same methodology as `traffic::ib_bench::HOST_BASE_NS`).
+    pub host_overhead_ns: f64,
+    /// Published bandwidth-vs-size points.
+    pub bandwidth: Vec<BwExpect>,
+    /// Published latency-vs-size points.
+    pub latency: Vec<LatExpect>,
+}
+
+fn point_from_json(v: &Value, value_key: &str) -> anyhow::Result<(u64, f64, Option<f64>, bool, String)> {
+    let tolerance = match v.get("tolerance") {
+        Some(t) => Some(t.as_f64()?),
+        None => None,
+    };
+    let known = match v.get("known_divergence") {
+        Some(k) => k.as_bool()?,
+        None => false,
+    };
+    let note = match v.get("note") {
+        Some(n) => n.as_str()?.to_string(),
+        None => String::new(),
+    };
+    Ok((v.u64_of("size_b")?, v.f64_of(value_key)?, tolerance, known, note))
+}
+
+fn point_to_json(size_b: u64, value_key: &str, value: f64, tol: Option<f64>, known: bool, note: &str) -> Value {
+    let mut v = Value::obj().with("size_b", size_b).with(value_key, value);
+    if let Some(t) = tol {
+        v = v.with("tolerance", t);
+    }
+    if known {
+        v = v.with("known_divergence", true);
+    }
+    if !note.is_empty() {
+        v = v.with("note", note);
+    }
+    v
+}
+
+impl FromJson for Fixture {
+    fn from_json(v: &Value) -> anyhow::Result<Fixture> {
+        let schema = v.str_of("schema")?;
+        anyhow::ensure!(schema == SCHEMA, "unexpected fixture schema '{schema}' (want {SCHEMA})");
+        let mut bandwidth = Vec::new();
+        for p in v.req("bandwidth")?.as_arr()? {
+            let (size_b, gbs, tolerance, known_divergence, note) = point_from_json(p, "gbs")?;
+            bandwidth.push(BwExpect { size_b, gbs, tolerance, known_divergence, note });
+        }
+        let mut latency = Vec::new();
+        for p in v.req("latency")?.as_arr()? {
+            let (size_b, us, tolerance, known_divergence, note) = point_from_json(p, "us")?;
+            latency.push(LatExpect { size_b, us, tolerance, known_divergence, note });
+        }
+        Ok(Fixture {
+            system: v.str_of("system")?.to_string(),
+            path: PathKind::parse(v.str_of("path")?)?,
+            preset: v.str_of("preset")?.to_string(),
+            source: v.str_of("source")?.to_string(),
+            tolerance: v.f64_of("tolerance")?,
+            host_overhead_ns: v.f64_of("host_overhead_ns")?,
+            bandwidth,
+            latency,
+        })
+    }
+}
+
+impl ToJson for Fixture {
+    fn to_json(&self) -> Value {
+        let bw: Vec<Value> = self
+            .bandwidth
+            .iter()
+            .map(|p| {
+                point_to_json(p.size_b, "gbs", p.gbs, p.tolerance, p.known_divergence, &p.note)
+            })
+            .collect();
+        let lat: Vec<Value> = self
+            .latency
+            .iter()
+            .map(|p| point_to_json(p.size_b, "us", p.us, p.tolerance, p.known_divergence, &p.note))
+            .collect();
+        Value::obj()
+            .with("schema", SCHEMA)
+            .with("system", self.system.as_str())
+            .with("path", self.path.name())
+            .with("preset", self.preset.as_str())
+            .with("source", self.source.as_str())
+            .with("tolerance", self.tolerance)
+            .with("host_overhead_ns", self.host_overhead_ns)
+            .with("bandwidth", Value::Arr(bw))
+            .with("latency", Value::Arr(lat))
+    }
+}
+
+impl Fixture {
+    /// Structural sanity: tolerances in (0, 1], sizes positive and
+    /// strictly ascending per curve, expectations positive, notes
+    /// required on known-divergence points, and the named preset must
+    /// build + validate with enough accelerators for the path's bench
+    /// endpoints.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.tolerance > 0.0 && self.tolerance <= 1.0,
+            "{}/{}: fixture tolerance {} outside (0, 1]",
+            self.system,
+            self.path.name(),
+            self.tolerance
+        );
+        anyhow::ensure!(
+            self.host_overhead_ns >= 0.0,
+            "{}/{}: host_overhead_ns must be >= 0",
+            self.system,
+            self.path.name()
+        );
+        anyhow::ensure!(
+            !self.bandwidth.is_empty() || !self.latency.is_empty(),
+            "{}/{}: fixture has no points",
+            self.system,
+            self.path.name()
+        );
+        let check = |size_b: u64, expect: f64, tol: Option<f64>, known: bool, note: &str| -> anyhow::Result<()> {
+            anyhow::ensure!(size_b > 0, "size_b must be > 0");
+            anyhow::ensure!(expect > 0.0, "expected value at {size_b} B must be > 0");
+            if let Some(t) = tol {
+                anyhow::ensure!(t > 0.0 && t <= 1.0, "point tolerance {t} outside (0, 1]");
+            }
+            anyhow::ensure!(
+                !known || !note.is_empty(),
+                "known-divergence point at {size_b} B needs a note explaining the gap"
+            );
+            Ok(())
+        };
+        let mut last = 0u64;
+        for p in &self.bandwidth {
+            check(p.size_b, p.gbs, p.tolerance, p.known_divergence, &p.note)?;
+            anyhow::ensure!(p.size_b > last, "bandwidth sizes must be strictly ascending");
+            last = p.size_b;
+        }
+        last = 0;
+        for p in &self.latency {
+            check(p.size_b, p.us, p.tolerance, p.known_divergence, &p.note)?;
+            anyhow::ensure!(p.size_b > last, "latency sizes must be strictly ascending");
+            last = p.size_b;
+        }
+        let cfg = presets::calibrated(&self.preset)?;
+        cfg.validate().map_err(|e| {
+            anyhow::anyhow!("{}/{}: preset '{}' invalid: {e}", self.system, self.path.name(), self.preset)
+        })?;
+        let (a, b) = bench_endpoints(&cfg, self.path);
+        let accels = (cfg.inter.nodes * cfg.node.accels_per_node) as u32;
+        anyhow::ensure!(
+            a < accels && b < accels && a != b,
+            "{}/{}: preset '{}' cannot host the {} bench endpoints",
+            self.system,
+            self.path.name(),
+            self.preset,
+            self.path.name()
+        );
+        Ok(())
+    }
+
+    /// Load and validate one fixture file.
+    pub fn load(path: &Path) -> anyhow::Result<Fixture> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("cannot read fixture {}: {e}", path.display()))?;
+        let fx = Fixture::from_json(&Value::parse(&text)?)
+            .map_err(|e| anyhow::anyhow!("fixture {}: {e}", path.display()))?;
+        fx.validate()?;
+        Ok(fx)
+    }
+
+    /// Load every `*.json` fixture in `dir`, sorted by file name so
+    /// reports are deterministic.
+    pub fn load_dir(dir: &Path) -> anyhow::Result<Vec<Fixture>> {
+        let mut paths: Vec<_> = std::fs::read_dir(dir)
+            .map_err(|e| anyhow::anyhow!("cannot read fixture dir {}: {e}", dir.display()))?
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .filter(|p| p.extension().map_or(false, |x| x == "json"))
+            .collect();
+        paths.sort();
+        anyhow::ensure!(!paths.is_empty(), "no *.json fixtures in {}", dir.display());
+        paths.iter().map(|p| Fixture::load(p)).collect()
+    }
+}
+
+/// Which curve a report point belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Metric {
+    /// Windowed drain bandwidth (GB/s).
+    Bandwidth,
+    /// Ping-pong one-way latency (µs, host overhead included).
+    Latency,
+}
+
+impl Metric {
+    /// CSV column value.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Metric::Bandwidth => "bandwidth",
+            Metric::Latency => "latency",
+        }
+    }
+
+    /// Reported unit.
+    pub fn unit(&self) -> &'static str {
+        match self {
+            Metric::Bandwidth => "GB/s",
+            Metric::Latency => "us",
+        }
+    }
+}
+
+/// Conformance verdict of one point.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PointStatus {
+    /// Within tolerance.
+    Pass,
+    /// Outside tolerance and not a declared divergence — gates.
+    Fail,
+    /// Outside-or-inside tolerance on a `known_divergence` point:
+    /// reported, never gated (strict tests cover it).
+    KnownDivergence,
+}
+
+impl PointStatus {
+    /// CSV column value.
+    pub fn name(&self) -> &'static str {
+        match self {
+            PointStatus::Pass => "PASS",
+            PointStatus::Fail => "FAIL",
+            PointStatus::KnownDivergence => "DIVERGENCE",
+        }
+    }
+}
+
+/// One row of the conformance report: expected vs simulated vs
+/// tolerance, with the verdict.
+#[derive(Debug, Clone)]
+pub struct PointReport {
+    /// Fixture system.
+    pub system: String,
+    /// Fixture path type.
+    pub path: PathKind,
+    /// Preset that produced the simulated value.
+    pub preset: String,
+    /// Bandwidth or latency.
+    pub metric: Metric,
+    /// Message size (bytes).
+    pub size_b: u64,
+    /// Published expectation (GB/s or µs).
+    pub expected: f64,
+    /// Simulated value (same unit).
+    pub simulated: f64,
+    /// Tolerance the point was judged against.
+    pub tolerance: f64,
+    /// `|simulated - expected| / expected`.
+    pub rel_err: f64,
+    /// Verdict.
+    pub status: PointStatus,
+    /// Divergence note (empty otherwise).
+    pub note: String,
+}
+
+impl std::fmt::Display for PointReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{}/{} {} {} B: sim {:.3} vs published {:.3} {} (tol {:.0}%, err {:.1}%) -> {}",
+            self.system,
+            self.path.name(),
+            self.metric.name(),
+            self.size_b,
+            self.simulated,
+            self.expected,
+            self.metric.unit(),
+            self.tolerance * 100.0,
+            self.rel_err * 100.0,
+            self.status.name()
+        )
+    }
+}
+
+/// Relative error of `simulated` against a positive `expected`.
+pub fn rel_err(expected: f64, simulated: f64) -> f64 {
+    (simulated - expected).abs() / expected
+}
+
+/// Tolerance-gate: within iff `rel_err <= tol` (boundary passes — a
+/// point published with 30% tolerance that lands at exactly 30% off is
+/// conformant by the fixture's own statement).
+pub fn within(expected: f64, simulated: f64, tol: f64) -> bool {
+    rel_err(expected, simulated) <= tol
+}
+
+fn verdict(expected: f64, simulated: f64, tol: f64, known: bool) -> PointStatus {
+    if known {
+        PointStatus::KnownDivergence
+    } else if within(expected, simulated, tol) {
+        PointStatus::Pass
+    } else {
+        PointStatus::Fail
+    }
+}
+
+/// Bench endpoints for a path type on a calibrated preset: the intra
+/// paths bounce between the first two accelerators of node 0; the inter
+/// path crosses to node 1's first accelerator.
+fn bench_endpoints(cfg: &SimConfig, path: PathKind) -> (u32, u32) {
+    if path.is_intra() {
+        (0, 1)
+    } else {
+        (0, cfg.node.accels_per_node as u32)
+    }
+}
+
+/// Rough per-message time estimate (ns) used only to size simulation
+/// windows: the accel-link serialization bound for intra paths, the NIC
+/// payload-rate bound for inter, plus a fixed software/hop floor.
+fn est_point_ns(cfg: &SimConfig, path: PathKind, size_b: u64) -> f64 {
+    let ser = if path.is_intra() {
+        // HostTree store-and-forwards whole-message units per hop.
+        let hops = if path == PathKind::IntraPcie { 4.0 } else { 1.0 };
+        hops * cfg.node.accel_link.latency_ns(size_b)
+    } else {
+        let payload = (cfg.node.nic.mtu_b - cfg.node.nic.header_b) as f64;
+        let rate = cfg.node.nic.inter_gbps / 8.0 * payload / cfg.node.nic.mtu_b as f64;
+        size_b as f64 / rate
+    };
+    3_000.0 + ser
+}
+
+/// Scale the preset's warmup/measure windows to one point's timescale.
+fn windows_for(mut cfg: SimConfig, est_ns: f64, samples: f64) -> SimConfig {
+    let est_us = est_ns / 1_000.0;
+    cfg.warmup_us = (est_us * 4.0).max(10.0);
+    cfg.measure_us = (est_us * samples).max(60.0);
+    cfg
+}
+
+fn point_report(fx: &Fixture, metric: Metric, size_b: u64, expected: f64, simulated: f64, tol: Option<f64>, known: bool, note: &str) -> PointReport {
+    let tol = tol.unwrap_or(fx.tolerance);
+    PointReport {
+        system: fx.system.clone(),
+        path: fx.path,
+        preset: fx.preset.clone(),
+        metric,
+        size_b,
+        expected,
+        simulated,
+        tolerance: tol,
+        rel_err: rel_err(expected, simulated),
+        status: verdict(expected, simulated, tol, known),
+        note: note.to_string(),
+    }
+}
+
+/// Run one fixture's full curve through the Window/PingPong benches on
+/// its calibrated preset; returns one [`PointReport`] per fixture point
+/// (bandwidth points first, in fixture order).
+pub fn run_fixture(provider: &dyn SerProvider, fx: &Fixture) -> anyhow::Result<Vec<PointReport>> {
+    let base = presets::calibrated(&fx.preset)?;
+    let (a, b) = bench_endpoints(&base, fx.path);
+    let mut out = Vec::with_capacity(fx.bandwidth.len() + fx.latency.len());
+    for p in &fx.bandwidth {
+        let est = est_point_ns(&base, fx.path, p.size_b);
+        let cfg = windows_for(base.clone(), est, 80.0);
+        let bench =
+            BenchMode::Window { src: a, dst: b, size_b: p.size_b as u32, inflight: 8 };
+        let sim = Sim::with_extra_sizes(cfg, provider, bench, &[p.size_b as u32])?;
+        let r = sim.try_run().map_err(|e| {
+            anyhow::anyhow!("{}/{} bandwidth {} B: {e}", fx.system, fx.path.name(), p.size_b)
+        })?;
+        let simulated = if fx.path.is_intra() { r.intra_drain_gbs } else { r.inter_drain_gbs };
+        anyhow::ensure!(
+            simulated > 0.0,
+            "{}/{} bandwidth {} B: no payload drained in the window",
+            fx.system,
+            fx.path.name(),
+            p.size_b
+        );
+        out.push(point_report(
+            fx,
+            Metric::Bandwidth,
+            p.size_b,
+            p.gbs,
+            simulated,
+            p.tolerance,
+            p.known_divergence,
+            &p.note,
+        ));
+    }
+    for p in &fx.latency {
+        let est = est_point_ns(&base, fx.path, p.size_b);
+        let cfg = windows_for(base.clone(), est, 40.0);
+        let bench = BenchMode::PingPong { a, b, size_b: p.size_b as u32 };
+        let sim = Sim::with_extra_sizes(cfg, provider, bench, &[p.size_b as u32])?;
+        let r = sim.try_run().map_err(|e| {
+            anyhow::anyhow!("{}/{} latency {} B: {e}", fx.system, fx.path.name(), p.size_b)
+        })?;
+        let hist = if fx.path.is_intra() { &r.intra_lat } else { &r.fct };
+        anyhow::ensure!(
+            hist.count > 0,
+            "{}/{} latency {} B: no round trips completed in the window",
+            fx.system,
+            fx.path.name(),
+            p.size_b
+        );
+        let simulated = (hist.mean_ns + fx.host_overhead_ns) / 1_000.0;
+        out.push(point_report(
+            fx,
+            Metric::Latency,
+            p.size_b,
+            p.us,
+            simulated,
+            p.tolerance,
+            p.known_divergence,
+            &p.note,
+        ));
+    }
+    Ok(out)
+}
+
+/// Pass/fail/divergence counts of a report.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct Summary {
+    /// Points within tolerance.
+    pub pass: usize,
+    /// Gating failures.
+    pub fail: usize,
+    /// Declared known divergences (reported, not gated).
+    pub divergence: usize,
+}
+
+/// Tally the verdicts of a point list.
+pub fn summarize(points: &[PointReport]) -> Summary {
+    let mut s = Summary::default();
+    for p in points {
+        match p.status {
+            PointStatus::Pass => s.pass += 1,
+            PointStatus::Fail => s.fail += 1,
+            PointStatus::KnownDivergence => s.divergence += 1,
+        }
+    }
+    s
+}
+
+/// CSV header of [`render_csv`] (stable: `python/calibration_check.py`
+/// re-validates reports against exactly these columns).
+pub const CSV_HEADER: &str =
+    "system,path,preset,metric,size_b,expected,simulated,unit,tolerance,rel_err,status,note";
+
+/// Render the per-point report CSV (the `sauron calibrate` artifact).
+pub fn render_csv(points: &[PointReport]) -> String {
+    let mut out = String::from(CSV_HEADER);
+    out.push('\n');
+    for p in points {
+        // Notes are free text: strip the CSV structure characters
+        // rather than quote (keeps the file trivially parseable).
+        let note: String =
+            p.note.chars().map(|c| if c == ',' || c == '\n' { ';' } else { c }).collect();
+        out.push_str(&format!(
+            "{},{},{},{},{},{:.6},{:.6},{},{:.4},{:.6},{},{}\n",
+            p.system,
+            p.path.name(),
+            p.preset,
+            p.metric.name(),
+            p.size_b,
+            p.expected,
+            p.simulated,
+            p.metric.unit(),
+            p.tolerance,
+            p.rel_err,
+            p.status.name(),
+            note
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fx() -> Fixture {
+        Fixture {
+            system: "testsys".into(),
+            path: PathKind::InterNic,
+            preset: "leonardo".into(),
+            source: "unit test".into(),
+            tolerance: 0.25,
+            host_overhead_ns: 500.0,
+            bandwidth: vec![BwExpect {
+                size_b: 1 << 20,
+                gbs: 12.0,
+                tolerance: None,
+                known_divergence: false,
+                note: String::new(),
+            }],
+            latency: vec![LatExpect {
+                size_b: 128,
+                us: 2.0,
+                tolerance: Some(0.3),
+                known_divergence: true,
+                note: "unit-test divergence".into(),
+            }],
+        }
+    }
+
+    #[test]
+    fn tolerance_gate_is_inclusive_at_the_boundary() {
+        // Exactly tol off passes; one part in 1e12 beyond fails.
+        assert!(within(100.0, 125.0, 0.25));
+        assert!(within(100.0, 75.0, 0.25));
+        assert!(!within(100.0, 125.1, 0.25));
+        assert!(!within(100.0, 74.9, 0.25));
+        assert_eq!(rel_err(100.0, 100.0), 0.0);
+        assert!((rel_err(100.0, 125.0) - 0.25).abs() < 1e-12);
+        // Symmetric in sign, relative to expected.
+        assert_eq!(rel_err(10.0, 5.0), rel_err(10.0, 15.0));
+    }
+
+    #[test]
+    fn verdict_routes_known_divergence_before_tolerance() {
+        assert_eq!(verdict(100.0, 101.0, 0.25, false), PointStatus::Pass);
+        assert_eq!(verdict(100.0, 200.0, 0.25, false), PointStatus::Fail);
+        // Known-divergence points never gate, even when inside tolerance.
+        assert_eq!(verdict(100.0, 101.0, 0.25, true), PointStatus::KnownDivergence);
+        assert_eq!(verdict(100.0, 200.0, 0.25, true), PointStatus::KnownDivergence);
+    }
+
+    #[test]
+    fn path_kind_round_trips() {
+        for p in [PathKind::IntraNvlink, PathKind::IntraPcie, PathKind::InterNic] {
+            assert_eq!(PathKind::parse(p.name()).unwrap(), p);
+        }
+        assert!(PathKind::parse("nvlink").is_err());
+        assert!(PathKind::IntraNvlink.is_intra());
+        assert!(PathKind::IntraPcie.is_intra());
+        assert!(!PathKind::InterNic.is_intra());
+    }
+
+    #[test]
+    fn fixture_json_round_trips() {
+        let f = fx();
+        let back = Fixture::from_json(&f.to_json()).unwrap();
+        assert_eq!(f, back);
+        // And survives a text round trip through the parser.
+        let back2 = Fixture::from_json(&Value::parse(&f.to_json().pretty()).unwrap()).unwrap();
+        assert_eq!(f, back2);
+    }
+
+    #[test]
+    fn fixture_validate_rejects_structural_errors() {
+        let mut f = fx();
+        f.tolerance = 0.0;
+        assert!(f.validate().unwrap_err().to_string().contains("tolerance"));
+        let mut f = fx();
+        f.bandwidth[0].gbs = -1.0;
+        assert!(f.validate().is_err());
+        let mut f = fx();
+        f.latency[0].note.clear(); // known divergence without a note
+        assert!(f.validate().unwrap_err().to_string().contains("note"));
+        let mut f = fx();
+        f.bandwidth.push(BwExpect {
+            size_b: 1 << 19, // descending
+            gbs: 1.0,
+            tolerance: None,
+            known_divergence: false,
+            note: String::new(),
+        });
+        assert!(f.validate().unwrap_err().to_string().contains("ascending"));
+        let mut f = fx();
+        f.preset = "no_such_system".into();
+        assert!(f.validate().is_err());
+    }
+
+    #[test]
+    fn summary_and_csv_shape() {
+        let points = vec![
+            point_report(&fx(), Metric::Bandwidth, 1 << 20, 12.0, 12.3, None, false, ""),
+            point_report(&fx(), Metric::Latency, 128, 2.0, 9.9, Some(0.3), false, ""),
+            point_report(&fx(), Metric::Latency, 256, 2.0, 9.9, None, true, "known, why"),
+        ];
+        let s = summarize(&points);
+        assert_eq!((s.pass, s.fail, s.divergence), (1, 1, 1));
+        let csv = render_csv(&points);
+        let mut lines = csv.lines();
+        assert_eq!(lines.next(), Some(CSV_HEADER));
+        assert_eq!(lines.clone().count(), 3);
+        assert!(csv.contains(",PASS,"));
+        assert!(csv.contains(",FAIL,"));
+        assert!(csv.contains(",DIVERGENCE,known; why\n"), "note commas become semicolons");
+        // Per-point tolerance override is what lands in the CSV.
+        assert!(csv.contains(",0.3000,"));
+        // Display form carries the full diagnostic.
+        let shown = points[1].to_string();
+        assert!(shown.contains("sim 9.900 vs published 2.000"), "{shown}");
+        assert!(shown.contains("FAIL"), "{shown}");
+    }
+
+    #[test]
+    fn window_scaling_tracks_the_estimate() {
+        let cfg = presets::calibrated("leonardo").unwrap();
+        // Inter 4 MiB at ~12.3 GB/s payload rate: ~341 us per message.
+        let est = est_point_ns(&cfg, PathKind::InterNic, 4 << 20);
+        assert!(est > 300_000.0 && est < 400_000.0, "{est}");
+        let sized = windows_for(cfg.clone(), est, 40.0);
+        assert!(sized.measure_us >= 40.0 * est / 1_000.0);
+        // Tiny messages keep the floor windows.
+        let small = windows_for(cfg, est_point_ns(&presets::calibrated("leonardo").unwrap(), PathKind::IntraNvlink, 8), 40.0);
+        assert_eq!(small.warmup_us, 10.0.max(small.warmup_us));
+        assert!(small.measure_us >= 60.0);
+    }
+}

@@ -31,6 +31,7 @@
 
 pub mod analytic;
 pub mod benchkit;
+pub mod calibration;
 pub mod cli;
 pub mod config;
 pub mod coordinator;

@@ -16,6 +16,7 @@ use std::path::PathBuf;
 use std::sync::Arc;
 
 use sauron::analytic::{CollParams, PcieParams};
+use sauron::calibration;
 use sauron::cli::Args;
 use sauron::config::{
     presets, CollOp, CollScope, CollectiveSpec, FabricConfig, FabricKind, FaultPlan, InterKind,
@@ -38,6 +39,18 @@ USAGE: sauron [--artifacts DIR] [--native] <command> [options]
 COMMANDS
   validate   [--table 1|2] [--sizes a,b,...] [--out DIR]
              Reproduce Tables 1/2 + Fig 4 (ib_write vs paper's cluster).
+  calibrate  [--fixtures DIR] [--fixture NAME] [--out DIR] [--strict]
+             Conformance-check the simulator against the golden
+             calibration fixtures (published GPU-to-GPU bandwidth and
+             latency curves from real systems; default DIR
+             fixtures/calibration). Runs every fixture point through
+             the Window/PingPong benches on its calibrated preset,
+             prints per-point verdicts and writes
+             calibration_report.csv to --out (default results/).
+             Exits non-zero if any point outside its tolerance is not
+             a declared known divergence; --strict also fails declared
+             divergences (use to detect when a model fix closes one).
+             --fixture filters by substring of system or system_path.
   sweep      [--nodes N] [--intra 128,256,512] [--patterns C1,...,C5]
              [--loads 20] [--fabric star|mesh|ring|host_tree] [--nics K]
              [--nic-policy local_rank|round_robin]
@@ -284,6 +297,65 @@ fn main() -> anyhow::Result<()> {
                 }
                 std::fs::write(out.join("fig4_validation.csv"), csv)?;
                 println!("wrote {}", out.join("fig4_validation.csv").display());
+            }
+        }
+
+        "calibrate" => {
+            let dir = PathBuf::from(args.opt("fixtures").unwrap_or("fixtures/calibration"));
+            let only = args.opt("fixture").map(str::to_string);
+            let out = PathBuf::from(args.opt("out").unwrap_or("results"));
+            let strict = args.flag("strict");
+            args.reject_unknown()?;
+            let mut fixtures = calibration::Fixture::load_dir(&dir)?;
+            if let Some(name) = &only {
+                fixtures.retain(|f| {
+                    format!("{}_{}", f.system, f.path.name()).contains(name.as_str())
+                });
+                anyhow::ensure!(
+                    !fixtures.is_empty(),
+                    "no fixture matches '{name}' in {}",
+                    dir.display()
+                );
+            }
+            let mut points = Vec::new();
+            for fx in &fixtures {
+                eprintln!(
+                    "calibrate: {}/{} via preset '{}' ({} points)",
+                    fx.system,
+                    fx.path.name(),
+                    fx.preset,
+                    fx.bandwidth.len() + fx.latency.len()
+                );
+                let rep = calibration::run_fixture(be.provider(), fx)?;
+                for p in &rep {
+                    println!("{p}");
+                }
+                points.extend(rep);
+            }
+            let s = calibration::summarize(&points);
+            std::fs::create_dir_all(&out)?;
+            let csv_path = out.join("calibration_report.csv");
+            std::fs::write(&csv_path, calibration::render_csv(&points))?;
+            println!(
+                "wrote {} ({} points: {} pass, {} fail, {} known-divergence)",
+                csv_path.display(),
+                points.len(),
+                s.pass,
+                s.fail,
+                s.divergence
+            );
+            anyhow::ensure!(
+                s.fail == 0,
+                "{} calibration point(s) outside tolerance (see {})",
+                s.fail,
+                csv_path.display()
+            );
+            if strict {
+                anyhow::ensure!(
+                    s.divergence == 0,
+                    "--strict: {} known-divergence point(s) still present",
+                    s.divergence
+                );
             }
         }
 

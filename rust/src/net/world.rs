@@ -386,6 +386,18 @@ pub enum SimError {
         /// Wall-clock spent (ms).
         wall_ms: f64,
     },
+    /// A wait-for cycle of parked links can never free queue space: a
+    /// permanent credit deadlock of the intra fabric. Reachable on the
+    /// Ring fabric (its hops form a physical cycle with no virtual
+    /// channels) under high all-intra load with shallow switch queues.
+    CreditCycleDeadlock {
+        /// Units parked in full queues when the cycle was detected.
+        parked_units: usize,
+        /// Messages injected but never completed.
+        inflight_msgs: usize,
+        /// Collective iterations that can never finish.
+        coll_iters_left: u32,
+    },
 }
 
 impl std::fmt::Display for SimError {
@@ -406,6 +418,16 @@ impl std::fmt::Display for SimError {
                     "simulation watchdog tripped after {events} events / {wall_ms:.0} ms \
                      without completing (SimConfig::limits) — the point is livelocked or \
                      its event/wall-time budget is too small"
+                )
+            }
+            SimError::CreditCycleDeadlock { parked_units, inflight_msgs, coll_iters_left } => {
+                write!(
+                    f,
+                    "credit-cycle deadlock in the intra fabric: a cycle of parked links \
+                     can never free queue space ({parked_units} units parked, \
+                     {inflight_msgs} messages in flight, {coll_iters_left} collective \
+                     iterations unfinished) — lower the offered load or deepen \
+                     switch_queue_b (the ring fabric has no virtual channels)"
                 )
             }
         }
@@ -3204,16 +3226,13 @@ impl Sim {
         // form a physical cycle with no virtual channels).
         let w = &self.engine.model;
         if w.is_deadlocked() {
-            anyhow::bail!(
-                "credit-cycle deadlock in the intra fabric: a cycle of parked \
-                 links can never free queue space ({} units parked, {} messages \
-                 in flight, {} collective iterations unfinished) — lower the \
-                 offered load or deepen switch_queue_b (the ring fabric has no \
-                 virtual channels)",
-                w.units_in_flight(),
-                w.msgs_in_flight(),
-                w.collective_iters_left()
-            );
+            // Structured so callers (sweep quarantine, regression tests)
+            // can downcast instead of string-matching the message.
+            return Err(anyhow::Error::new(SimError::CreditCycleDeadlock {
+                parked_units: w.units_in_flight(),
+                inflight_msgs: w.msgs_in_flight(),
+                coll_iters_left: w.collective_iters_left(),
+            }));
         }
         // Second: an empty event queue with in-flight work means nothing
         // can ever move again (every serializing link keeps an event

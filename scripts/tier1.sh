@@ -22,6 +22,19 @@ set -eu
 
 cd "$(dirname "$0")/.."
 
+# Toolchain-independent gates first: the test-registration check (a
+# target file missing its Cargo.toml entry silently never runs under
+# autotests = false) and the pure-python unit suites. These run even in
+# desk-check environments, so authoring containers still get a real
+# signal on the python/fixture side.
+if command -v python3 >/dev/null 2>&1; then
+    python3 python/check_tests.py
+    python3 python/tests/test_bench_compare.py
+    python3 python/tests/test_calibration.py
+else
+    echo "tier1: no python3 on PATH — registration gate and python suites skipped"
+fi
+
 if ! command -v cargo >/dev/null 2>&1; then
     cat <<'EOF'
 tier1: no Rust toolchain on PATH (cargo not found).
@@ -132,6 +145,20 @@ if [ "$rows" -ne 13 ] || grep -q '^# hole' "$csv"; then
 fi
 echo "tier1: service smoke OK (drain + resume, 12/12 rows)"
 rm -rf "$spool"
+
+# Calibration-against-hardware gate: the conformance test suite, then
+# the CLI end to end over every golden fixture — per-point verdicts,
+# report CSV, and an independent python re-check of the tolerance math.
+# Exit is non-zero if any non-divergent point leaves its tolerance.
+guard 900 cargo test -q --test calibration
+guard 600 cargo test -q --test ring_deadlock
+caldir="${TMPDIR:-/tmp}/sauron_tier1_calibration"
+rm -rf "$caldir"
+guard 900 "$bin" --native calibrate --out "$caldir"
+if command -v python3 >/dev/null 2>&1; then
+    python3 python/calibration_check.py "$caldir/calibration_report.csv"
+fi
+echo "tier1: calibration OK (report at $caldir/calibration_report.csv)"
 
 if [ "${1:-}" = "--bench" ]; then
     # Regenerates the committed baselines in place; SAURON_BENCH_MS can
